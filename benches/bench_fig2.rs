@@ -1,0 +1,47 @@
+//! Bench + reproduction of paper Figure 2 (reduced scale): the payload
+//! sweep for one dataset per run. Prints the metric-vs-reduction series
+//! and times one full (strategy × reduction) training cell.
+//!
+//! Dataset via FEDPAYLOAD_BENCH_DATASET (default movielens); smoke scale
+//! keeps `cargo bench` minutes-fast — `make experiments` / the
+//! `experiments fig2` subcommand produce the full CSVs.
+
+use fedpayload::config::Strategy;
+use fedpayload::experiments::{run_rebuilds, Scale};
+use fedpayload::telemetry::bench;
+
+fn main() {
+    let dataset = std::env::var("FEDPAYLOAD_BENCH_DATASET").unwrap_or_else(|_| "movielens".into());
+    let backend = if std::path::Path::new("artifacts/manifest.txt").exists() {
+        "pjrt"
+    } else {
+        "reference"
+    };
+    let scale = Scale::smoke();
+
+    println!("=== Figure 2 (smoke scale) — {dataset} ===");
+    let full = run_rebuilds(&dataset, &scale, backend, &[Strategy::Full], 1.0).unwrap();
+    println!(
+        "{:<12} {:>8} {}",
+        "fcf", "-", full.by_strategy["full"].mean()
+    );
+    println!("{:<12} {:>8} {}", "toplist", "-", full.toplist.mean());
+    for red in [50u32, 75, 90, 95] {
+        let f = 1.0 - red as f64 / 100.0;
+        let out = run_rebuilds(
+            &dataset,
+            &scale,
+            backend,
+            &[Strategy::Bts, Strategy::Random],
+            f,
+        )
+        .unwrap();
+        println!("{:<12} {:>7}% {}", "fcf-bts", red, out.by_strategy["bts"].mean());
+        println!("{:<12} {:>7}% {}", "fcf-random", red, out.by_strategy["random"].mean());
+    }
+
+    println!("\n=== cell timing ===");
+    bench("fig2_cell_bts_90pct_smoke", || {
+        run_rebuilds(&dataset, &scale, backend, &[Strategy::Bts], 0.10).unwrap()
+    });
+}

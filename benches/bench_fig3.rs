@@ -1,0 +1,60 @@
+//! Bench + reproduction of paper Figure 3 (convergence at 90% payload
+//! reduction) at smoke scale: prints the smoothed-MAP trajectory for
+//! FCF / FCF-BTS / FCF-Random on shared data and times the round loop by
+//! training phase.
+
+use fedpayload::config::Strategy;
+use fedpayload::experiments::{experiment_config, Scale};
+use fedpayload::rng::Rng;
+use fedpayload::server::{load_dataset, Trainer};
+use fedpayload::telemetry::bench;
+
+fn main() {
+    let backend = if std::path::Path::new("artifacts/manifest.txt").exists() {
+        "pjrt"
+    } else {
+        "reference"
+    };
+    let mut scale = Scale::smoke();
+    scale.iterations = 60;
+    scale.eval_every = 2;
+
+    let cfg = experiment_config("movielens", &scale, backend, 2021).unwrap();
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let data = load_dataset(&cfg, &mut rng).unwrap();
+    let split = data.split(cfg.dataset.train_frac, &mut rng);
+
+    println!("=== Figure 3 (smoke scale, movielens) ===");
+    let mut curves: Vec<(&str, Vec<f64>)> = Vec::new();
+    for (name, strategy, fraction) in [
+        ("fcf", Strategy::Full, 1.0),
+        ("fcf-bts", Strategy::Bts, 0.10),
+        ("fcf-random", Strategy::Random, 0.10),
+    ] {
+        let mut c = cfg.clone();
+        c.bandit.strategy = strategy;
+        c.train.payload_fraction = fraction;
+        let report = Trainer::with_split(&c, split.clone()).unwrap().run().unwrap();
+        curves.push((
+            name,
+            report.history.iter().map(|r| r.smoothed.map).collect(),
+        ));
+    }
+    println!("{:>6} {:>12} {:>12} {:>12}", "iter", "fcf", "fcf-bts", "fcf-random");
+    for i in (9..scale.iterations).step_by(10) {
+        println!(
+            "{:>6} {:>12.4} {:>12.4} {:>12.4}",
+            i + 1,
+            curves[0].1[i],
+            curves[1].1[i],
+            curves[2].1[i]
+        );
+    }
+
+    println!("\n=== per-round timing (fcf-bts) ===");
+    let mut c = cfg.clone();
+    c.bandit.strategy = Strategy::Bts;
+    c.train.payload_fraction = 0.10;
+    let mut trainer = Trainer::with_split(&c, split).unwrap();
+    bench("fig3_round_with_eval", || trainer.round().unwrap());
+}

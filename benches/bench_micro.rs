@@ -1,0 +1,102 @@
+//! Micro-benches of the L3 hot paths feeding EXPERIMENTS.md §Perf:
+//! bandit selection, reward engine, Adam, the backend kernels (PJRT when
+//! artifacts are present, reference otherwise) and one full training
+//! round at movielens scale.
+
+use fedpayload::bandit::{BtsSelector, ItemSelector, RandomSelector};
+use fedpayload::config::RunConfig;
+use fedpayload::linalg::Mat;
+use fedpayload::optim::Adam;
+use fedpayload::reward::RewardEngine;
+use fedpayload::rng::Rng;
+use fedpayload::runtime::{pjrt::PjrtBackend, reference::ReferenceBackend, FcfRuntime};
+use fedpayload::server::Trainer;
+use fedpayload::telemetry::bench;
+
+fn main() {
+    let m = 17_632; // Last-FM catalog size
+    let k = 25;
+    let m_s = m / 10;
+    let mut rng = Rng::seed_from_u64(1);
+
+    println!("=== bandit ===");
+    let mut bts = BtsSelector::new(m, 0.0, 10_000.0);
+    let rewards: Vec<(u32, f64)> = (0..m_s as u32).map(|j| (j * 10, (j as f64).sin())).collect();
+    bts.update(&rewards);
+    bench(&format!("bts_select_{m_s}_of_{m}"), || {
+        bts.select(m_s, &mut rng)
+    });
+    bench("bts_update_1763_rewards", || bts.update(&rewards));
+    let mut rnd = RandomSelector::new(m);
+    bench(&format!("random_select_{m_s}_of_{m}"), || {
+        rnd.select(m_s, &mut rng)
+    });
+
+    println!("\n=== reward engine (Eq. 13-14) ===");
+    let mut engine = RewardEngine::new(m, k, 0.999, 0.99);
+    let grad: Vec<f32> = (0..k).map(|i| (i as f32 * 0.7).sin()).collect();
+    bench("reward_observe_1763_items", || {
+        for j in 0..m_s as u32 {
+            engine.observe(j, 10, &grad);
+        }
+    });
+
+    println!("\n=== optimizer ===");
+    let cfg = RunConfig::paper_defaults();
+    let mut adam = Adam::new(m, &cfg.model);
+    let mut q = Mat::randn(m, k, 0.1, &mut rng);
+    let selected: Vec<u32> = (0..m_s as u32).collect();
+    let g = vec![0.01f32; m_s * k];
+    bench("adam_step_1763_items_k25", || {
+        adam.step_selected(&mut q, &selected, &g)
+    });
+
+    println!("\n=== backend kernels (B=64, K=25, T=512) ===");
+    let have_artifacts = std::path::Path::new("artifacts/manifest.txt").exists();
+    let backends: Vec<(&str, Box<dyn FnOnce() -> FcfRuntime>)> = if have_artifacts {
+        vec![
+            ("pjrt", Box::new(|| FcfRuntime::new(Box::new(PjrtBackend::load("artifacts").unwrap())))),
+            ("reference", Box::new(|| {
+                FcfRuntime::new(Box::new(ReferenceBackend::new(64, 25, vec![512, 2048], 4.0, 1.0)))
+            })),
+        ]
+    } else {
+        vec![("reference", Box::new(|| {
+            FcfRuntime::new(Box::new(ReferenceBackend::new(64, 25, vec![512, 2048], 4.0, 1.0)))
+        }))]
+    };
+    for (name, make) in backends {
+        let mut rt = make();
+        let m_sel = 1763usize;
+        let q_sel: Vec<f32> = (0..m_sel * 25).map(|i| ((i % 97) as f32 - 48.0) * 0.01).collect();
+        let rows: Vec<Vec<u32>> = (0..64)
+            .map(|u| (0..m_sel as u32).filter(|j| (j + u) % 37 == 0).collect())
+            .collect();
+        let row_refs: Vec<&Vec<u32>> = rows.iter().collect();
+        let p = rt.solve_users(&q_sel, &row_refs).unwrap();
+        bench(&format!("{name}_solve_64users_1763items"), || {
+            rt.solve_users(&q_sel, &row_refs).unwrap()
+        });
+        bench(&format!("{name}_grad_64users_1763items"), || {
+            rt.grad_batch(&q_sel, &row_refs, &p).unwrap()
+        });
+        let q_full = Mat::randn(m, 25, 0.1, &mut rng);
+        bench(&format!("{name}_scores_64users_17632items"), || {
+            rt.scores_all(q_full.data(), &p).unwrap()
+        });
+    }
+
+    println!("\n=== full round (movielens scale, Θ=100, 90% reduction) ===");
+    let mut cfg = RunConfig::paper_defaults();
+    cfg.apply_dataset_preset("movielens").unwrap();
+    cfg.train.payload_fraction = 0.10;
+    cfg.train.eval_every = 1;
+    cfg.runtime.backend = if have_artifacts { "pjrt".into() } else { "reference".into() };
+    let mut trainer = Trainer::from_config(&cfg).unwrap();
+    bench("train_round_movielens_90pct", || trainer.round().unwrap());
+    cfg.train.eval_every = usize::MAX; // isolate compute from evaluation
+    let mut trainer2 = Trainer::from_config(&cfg).unwrap();
+    bench("train_round_movielens_90pct_noeval", || {
+        trainer2.round().unwrap()
+    });
+}

@@ -1,0 +1,32 @@
+//! Bench + reproduction of paper Table 1: payload arithmetic and the
+//! simulated transfer model. Prints the table rows (the reproduction) and
+//! times the payload accounting hot path (the bench).
+
+use fedpayload::config::RunConfig;
+use fedpayload::simnet::{human_bytes, payload_bytes, table1_rows, transfer_secs, TrafficLedger};
+use fedpayload::telemetry::bench;
+
+fn main() {
+    println!("=== Table 1 reproduction ===");
+    for (items, bytes) in table1_rows() {
+        println!("{items:>10} items -> {:>12} ({})", bytes, human_bytes(bytes));
+    }
+    assert_eq!(table1_rows()[0].1, 625_920, "3912-item row must be ~625KB");
+
+    println!("\n=== payload accounting hot path ===");
+    let cfg = RunConfig::paper_defaults().simnet;
+    bench("payload_bytes(1M items, K=20)", || {
+        payload_bytes(1_000_000, 20, 64)
+    });
+    bench("transfer_secs(16MB over 4G)", || {
+        transfer_secs(&cfg, 16_000_000)
+    });
+    bench("ledger_record_1k_clients", || {
+        let mut ledger = TrafficLedger::new();
+        for _ in 0..1000 {
+            ledger.record_down(&cfg, 612_800);
+            ledger.record_up(&cfg, 612_800);
+        }
+        ledger.total_bytes()
+    });
+}

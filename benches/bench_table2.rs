@@ -1,0 +1,42 @@
+//! Bench + reproduction of paper Table 2: generate each calibrated
+//! synthetic dataset (reduced scale by default; FEDPAYLOAD_BENCH_FULL=1
+//! for paper scale) and report stats vs. the paper's numbers, timing the
+//! generators and the split path.
+
+use fedpayload::data::Interactions;
+use fedpayload::experiments::{experiment_config, paper_table2, Scale, DATASETS};
+use fedpayload::rng::Rng;
+use fedpayload::server::load_dataset;
+use fedpayload::telemetry::bench;
+
+fn main() {
+    let full = std::env::var("FEDPAYLOAD_BENCH_FULL").is_ok();
+    let scale = if full { Scale::paper() } else { Scale::reduced() };
+    println!("=== Table 2 reproduction (dataset scale {}) ===", scale.dataset);
+    let mut generated: Vec<(&str, Interactions)> = Vec::new();
+    for ds in DATASETS {
+        let cfg = experiment_config(ds, &scale, "reference", 2021).unwrap();
+        let mut rng = Rng::seed_from_u64(2021);
+        let data = load_dataset(&cfg, &mut rng).unwrap();
+        let stats = data.stats();
+        let paper = paper_table2(ds).unwrap();
+        println!("{ds:<10} ours : {stats}");
+        println!("{ds:<10} paper: {paper}");
+        generated.push((ds, data));
+    }
+
+    println!("\n=== generator + split timings ===");
+    for ds in DATASETS {
+        let cfg = experiment_config(ds, &Scale::reduced(), "reference", 2021).unwrap();
+        bench(&format!("generate_{ds}_quarter_scale"), || {
+            let mut rng = Rng::seed_from_u64(7);
+            fedpayload::data::synthetic::generate(&cfg.dataset, &mut rng)
+        });
+    }
+    let (_, data) = &generated[0];
+    bench("split_80_20", || {
+        let mut rng = Rng::seed_from_u64(9);
+        data.split(0.8, &mut rng)
+    });
+    bench("popularity_ranking", || data.popularity_ranking());
+}

@@ -1,0 +1,77 @@
+//! Bench + reproduction of paper Table 4 (90% payload reduction) at smoke
+//! scale, including the Diff%/Impr% summary statistics (Eq. 15–16), plus
+//! an ablation over the reward-engine interpretation switches
+//! (DESIGN.md §1 faithfulness notes).
+
+use fedpayload::config::Strategy;
+use fedpayload::experiments::{experiment_config, run_rebuilds, Scale};
+use fedpayload::metrics::{diff_pct, impr_pct};
+use fedpayload::rng::Rng;
+use fedpayload::server::{load_dataset, Trainer};
+use fedpayload::telemetry::bench;
+
+fn main() {
+    let backend = if std::path::Path::new("artifacts/manifest.txt").exists() {
+        "pjrt"
+    } else {
+        "reference"
+    };
+    let scale = Scale::smoke();
+
+    println!("=== Table 4 (smoke scale) ===");
+    for ds in ["movielens", "lastfm"] {
+        let full = run_rebuilds(ds, &scale, backend, &[Strategy::Full], 1.0).unwrap();
+        let opt = run_rebuilds(ds, &scale, backend, &[Strategy::Bts, Strategy::Random], 0.10).unwrap();
+        let (f, b, r, t) = (
+            full.by_strategy["full"].mean(),
+            opt.by_strategy["bts"].mean(),
+            opt.by_strategy["random"].mean(),
+            full.toplist.mean(),
+        );
+        println!("{ds}:");
+        println!("  FCF        {f}");
+        println!("  FCF-BTS    {b}");
+        println!("  FCF-Random {r}");
+        println!("  TopList    {t}");
+        println!(
+            "  Diff% vs FCF: P={:.1} MAP={:.1} | Impr% vs Random: P={:.1} MAP={:.1}",
+            diff_pct(b.precision, f.precision),
+            diff_pct(b.map, f.map),
+            impr_pct(b.precision, r.precision),
+            impr_pct(b.map, r.map),
+        );
+    }
+
+    println!("\n=== reward-interpretation ablation (lastfm smoke, BTS @90%) ===");
+    for (label, overrides) in [
+        ("default (per_item, power, norm)", vec![]),
+        ("time_base=global", vec![("bandit.time_base", "\"global\"")]),
+        ("cosine=literal", vec![("bandit.cosine_weight", "\"literal\"")]),
+        ("no reward normalization", vec![("bandit.normalize_rewards", "false")]),
+    ] {
+        let mut cfg = experiment_config("lastfm", &scale, backend, 2021).unwrap();
+        cfg.train.payload_fraction = 0.10;
+        cfg.bandit.strategy = Strategy::Bts;
+        for (key, val) in overrides {
+            let mut doc = fedpayload::config::Doc::default();
+            doc.apply_override(&format!("{key}={val}")).unwrap();
+            // re-resolve just this key into the config
+            match key {
+                "bandit.time_base" => cfg.bandit.time_base = "global",
+                "bandit.cosine_weight" => cfg.bandit.cosine_weight = "literal",
+                "bandit.normalize_rewards" => cfg.bandit.normalize_rewards = false,
+                _ => unreachable!(),
+            }
+        }
+        let mut rng = Rng::seed_from_u64(cfg.seed);
+        let data = load_dataset(&cfg, &mut rng).unwrap();
+        let split = data.split(cfg.dataset.train_frac, &mut rng);
+        let report = Trainer::with_split(&cfg, split).unwrap().run().unwrap();
+        println!("  {label:<35} {}", report.final_metrics);
+    }
+
+    println!("\n=== cell timing ===");
+    bench("table4_full_cell_smoke", || {
+        run_rebuilds("movielens", &scale, backend, &[Strategy::Full], 1.0).unwrap()
+    });
+}

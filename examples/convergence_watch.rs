@@ -1,0 +1,60 @@
+//! Convergence watch (a miniature of the paper's Figure 3): step three
+//! trainers round-by-round on identical data and print the smoothed MAP
+//! trajectory side by side — FCF (full payload) vs FCF-BTS vs FCF-Random
+//! at 90% payload reduction.
+//!
+//!     cargo run --release --example convergence_watch
+
+use fedpayload::config::{RunConfig, Strategy};
+use fedpayload::rng::Rng;
+use fedpayload::server::{load_dataset, Trainer};
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = RunConfig::paper_defaults();
+    cfg.apply_dataset_preset("synthetic-small")?;
+    cfg.dataset.users = 256;
+    cfg.dataset.items = 640;
+    cfg.dataset.interactions = 10_000;
+    cfg.train.theta = 48;
+    cfg.train.iterations = 240;
+    cfg.train.eval_every = 1;
+    cfg.runtime.backend = if std::path::Path::new("artifacts/manifest.txt").exists() {
+        "pjrt".into()
+    } else {
+        "reference".into()
+    };
+
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let data = load_dataset(&cfg, &mut rng)?;
+    let split = data.split(cfg.dataset.train_frac, &mut rng);
+
+    let mut make = |strategy: Strategy, fraction: f64| -> anyhow::Result<Trainer> {
+        let mut c = cfg.clone();
+        c.bandit.strategy = strategy;
+        c.train.payload_fraction = fraction;
+        let runtime = fedpayload::runtime::shared_runtime(&c)?;
+        Trainer::with_split_and_runtime(&c, split.clone(), runtime)
+    };
+    let mut fcf = make(Strategy::Full, 1.0)?;
+    let mut bts = make(Strategy::Bts, 0.10)?;
+    let mut rnd = make(Strategy::Random, 0.10)?;
+
+    println!("{:>6} {:>12} {:>12} {:>12}", "iter", "FCF MAP", "BTS MAP", "Random MAP");
+    for i in 1..=cfg.train.iterations {
+        let a = fcf.round()?;
+        let b = bts.round()?;
+        let c = rnd.round()?;
+        if i % 20 == 0 {
+            println!(
+                "{:>6} {:>12.4} {:>12.4} {:>12.4}",
+                i, a.smoothed.map, b.smoothed.map, c.smoothed.map
+            );
+        }
+    }
+    println!(
+        "\npayload per round: FCF {} vs BTS/Random {} bytes",
+        fcf.split().train.num_items() * 25 * 8,
+        bts.split().train.num_items() / 10 * 25 * 8,
+    );
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Payload-reduction sweep (a miniature of the paper's Figure 2): train
+//! FCF-BTS and FCF-Random at several payload reductions on one synthetic
+//! dataset and print the accuracy/payload trade-off table.
+//!
+//!     cargo run --release --example payload_sweep [-- --dataset lastfm]
+
+use fedpayload::cli::Args;
+use fedpayload::config::{RunConfig, Strategy};
+use fedpayload::data::Split;
+use fedpayload::rng::Rng;
+use fedpayload::server::{load_dataset, Trainer};
+use fedpayload::simnet::human_bytes;
+
+fn backend() -> &'static str {
+    if std::path::Path::new("artifacts/manifest.txt").exists() {
+        "pjrt"
+    } else {
+        "reference"
+    }
+}
+
+fn train(cfg: &RunConfig, split: &Split, strategy: Strategy, fraction: f64) -> anyhow::Result<fedpayload::server::TrainReport> {
+    let mut c = cfg.clone();
+    c.bandit.strategy = strategy;
+    c.train.payload_fraction = fraction;
+    let runtime = fedpayload::runtime::shared_runtime(&c)?;
+    Trainer::with_split_and_runtime(&c, split.clone(), runtime)?.run()
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let dataset = args.opt("dataset").unwrap_or("movielens");
+
+    let mut cfg = RunConfig::paper_defaults();
+    cfg.apply_dataset_preset(dataset)?;
+    // quarter-scale dataset, 300 iterations — minutes, not hours
+    cfg.dataset.users = (cfg.dataset.users / 4).max(64);
+    cfg.dataset.items = (cfg.dataset.items / 4).max(128);
+    cfg.dataset.interactions = (cfg.dataset.interactions / 4).max(1024);
+    cfg.train.theta = (cfg.train.theta / 4).max(8);
+    cfg.train.iterations = 300;
+    cfg.train.eval_every = 5;
+    cfg.runtime.backend = backend().into();
+
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let data = load_dataset(&cfg, &mut rng)?;
+    let split = data.split(cfg.dataset.train_frac, &mut rng);
+
+    let full = train(&cfg, &split, Strategy::Full, 1.0)?;
+    println!(
+        "FCF (full payload): {}   traffic/round {}",
+        full.final_metrics,
+        human_bytes(full.ledger.down_bytes / full.iterations as u64)
+    );
+    println!();
+    println!("{:<12} {:>10} {:>10} {:>10} {:>12}", "reduction", "BTS MAP", "Rand MAP", "BTS P@10", "round bytes");
+    for red in [50u32, 75, 90, 95] {
+        let f = 1.0 - red as f64 / 100.0;
+        let bts = train(&cfg, &split, Strategy::Bts, f)?;
+        let rnd = train(&cfg, &split, Strategy::Random, f)?;
+        println!(
+            "{:<12} {:>10.4} {:>10.4} {:>10.4} {:>12}",
+            format!("{red}%"),
+            bts.final_metrics.map,
+            rnd.final_metrics.map,
+            bts.final_metrics.precision,
+            human_bytes(bts.ledger.down_bytes / bts.iterations as u64)
+        );
+    }
+    Ok(())
+}

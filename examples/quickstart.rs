@@ -1,0 +1,43 @@
+//! Quickstart: train a payload-optimized federated recommender in ~20
+//! lines of library code.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Uses the small synthetic preset with the pure-Rust reference backend
+//! so it runs even before `make artifacts`; switch `backend` to `"pjrt"`
+//! after building the artifacts to exercise the AOT path.
+
+use fedpayload::config::RunConfig;
+use fedpayload::server::Trainer;
+use fedpayload::simnet::human_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = RunConfig::paper_defaults();
+    cfg.apply_dataset_preset("synthetic-small")?;
+    cfg.train.iterations = 150;
+    cfg.train.payload_fraction = 0.25; // transmit 25% of Q per round
+    cfg.train.eval_every = 5;
+    cfg.runtime.backend = if std::path::Path::new("artifacts/manifest.txt").exists() {
+        "pjrt".into()
+    } else {
+        "reference".into()
+    };
+
+    let mut trainer = Trainer::from_config(&cfg)?;
+    let report = trainer.run()?;
+
+    println!(
+        "trained {} iterations with {} backend ({}% payload reduction)",
+        report.iterations,
+        cfg.runtime.backend,
+        report.payload_reduction_pct() as u32
+    );
+    println!("final normalized metrics: {}", report.final_metrics);
+    println!(
+        "total traffic: {} down / {} up — vs {} had every round moved the full model",
+        human_bytes(report.ledger.down_bytes),
+        human_bytes(report.ledger.up_bytes),
+        human_bytes(report.ledger.down_bytes * (report.m as u64) / (report.m_s as u64)),
+    );
+    Ok(())
+}

@@ -1,0 +1,76 @@
+"""AOT compile path: lower every L2 graph to HLO TEXT for the rust runtime.
+
+HLO *text* (not a serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published `xla` 0.1.6 crate) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. Lowering goes stablehlo -> XlaComputation (return_tuple=True, so
+rust unwraps with to_tupleN) -> as_hlo_text().
+
+Run once via `make artifacts`:
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Also writes artifacts/manifest.txt — a key=value file the rust runtime
+parses to learn the geometry (B, K, tiles) and the baked hyper-parameters,
+and to verify it is running against the artifacts it expects.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(fn, example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    lines = [
+        "version=1",
+        f"B={model.B}",
+        f"K={model.K}",
+        f"tiles={','.join(str(t) for t in model.TILES)}",
+        f"alpha={model.ALPHA}",
+        f"lam={model.LAM}",
+        f"eta={model.ETA}",
+        f"beta1={model.BETA1}",
+        f"beta2={model.BETA2}",
+        f"eps={model.EPS}",
+        f"cg_iters={model.CG_ITERS}",
+    ]
+
+    for name, fn, example_args in model.artifact_specs():
+        text = to_hlo_text(fn, example_args)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        n_in = len(example_args)
+        lines.append(f"artifact={name} inputs={n_in} sha256={digest}")
+        print(f"wrote {path}: {len(text)} chars, {n_in} inputs")
+
+    manifest = os.path.join(args.out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {manifest}")
+
+
+if __name__ == "__main__":
+    main()

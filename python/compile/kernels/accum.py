@@ -1,0 +1,113 @@
+"""L1 Pallas kernel: confidence-weighted Gram accumulation (Eq. 3 lhs/rhs).
+
+Computes, for a batch of B users over an item tile of width T:
+
+    A_i = Q* C^i Q*^T        (B, K, K)   [lambda*I added later, in solve]
+    b_i = Q* C^i x_i         (B, K)
+
+The kernel is tiled over the item axis: the grid streams (K, TK) slices of
+Q and (B, TK) slices of X from HBM into VMEM while the (B, K, K)
+accumulator block stays resident across the whole grid — the TPU analogue
+of a threadblock-resident partial sum. With (B, K, TK) = (64, 25, 128) the
+per-step VMEM working set is ~230 KB, far under the ~16 MB budget, leaving
+headroom for double-buffering on a real TPU.
+
+interpret=True is mandatory here: the artifacts must execute on the CPU
+PJRT client in rust, and a real Mosaic lowering emits a custom-call that
+client cannot run (see DESIGN.md section Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Inner Pallas tile along the item axis. The artifact-level tile T (512 or
+# 2048, see aot.py) must be a multiple of this.
+#
+# Perf note (EXPERIMENTS.md §Perf): TK=128 lowers (via interpret mode) to a
+# 16-step HLO loop per 2048-tile that XLA CPU cannot fuse across — the
+# compiled accum ran at ~6 GFLOP/s. TK=512 (X tile 64·512·4 B = 128 KB,
+# accumulator 160 KB — still far under the ~16 MB VMEM budget with double
+# buffering) quarters the grid steps and nearly doubled end-to-end round
+# throughput on the CPU PJRT backend.
+TK = 512
+
+
+def _accum_kernel(q_ref, x_ref, mask_ref, a_ref, b_ref, *, alpha):
+    """One grid step: fold an item sub-tile into the (A, b) accumulators."""
+    step = pl.program_id(0)
+
+    q = q_ref[...]                      # (K, TK)
+    x = x_ref[...]                      # (B, TK)
+    m = mask_ref[...]                   # (TK,)
+
+    # c_ij = 1 + alpha x_ij (Eq. 2); masked columns contribute nothing.
+    c = (1.0 + alpha * x) * m[None, :]  # (B, TK)
+
+    # A += einsum('kt,bt,jt->bkj', q, c, q), reformulated as ONE large
+    # GEMM instead of B small (K x TK)@(TK x K) products: materialize the
+    # per-column outer products op[(k,j), t] = q[k,t] q[j,t] (K²·TK, ~3 MB
+    # at TK=512 — VMEM-sized) and contract the tile axis against Cᵀ in a
+    # single (K², TK) x (TK, B) product. On the CPU PJRT backend this runs
+    # ~4x faster than the batched-small-GEMM form (EXPERIMENTS.md §Perf);
+    # on a real TPU it is one well-shaped MXU contraction per grid step.
+    k_dim = q.shape[0]
+    op = (q[:, None, :] * q[None, :, :]).reshape(k_dim * k_dim, -1)  # (K², TK)
+    a_cols = jax.lax.dot_general(
+        op,
+        c,
+        dimension_numbers=(((1,), (1,)), ((), ())),          # (K², B)
+        preferred_element_type=jnp.float32,
+    )
+    a_part = jnp.transpose(a_cols, (1, 0)).reshape(c.shape[0], k_dim, k_dim)
+    b_part = (c * x) @ q.T                                   # (B, K)
+
+    @pl.when(step == 0)
+    def _init():
+        a_ref[...] = jnp.zeros_like(a_ref)
+        b_ref[...] = jnp.zeros_like(b_ref)
+
+    a_ref[...] += a_part
+    b_ref[...] += b_part
+
+
+def accum(q, x, mask, *, alpha):
+    """Pallas-tiled (A, b) accumulation over one (K, T) item tile.
+
+    Args:
+      q:    (K, T) float32 item factors, T % TK == 0.
+      x:    (B, T) float32 implicit interactions.
+      mask: (T,)   float32 item-column validity.
+      alpha: python float, baked at lowering time (Table 3: alpha = 4).
+
+    Returns:
+      (A, b): (B, K, K) and (B, K) partial sums (no lambda*I).
+    """
+    k_dim, t_dim = q.shape
+    b_dim = x.shape[0]
+    tk = min(TK, t_dim)  # small tiles (tests) run as a single grid step
+    assert t_dim % tk == 0, f"tile width {t_dim} not a multiple of {tk}"
+    grid = (t_dim // tk,)
+
+    return pl.pallas_call(
+        functools.partial(_accum_kernel, alpha=alpha),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k_dim, tk), lambda i: (0, i)),     # Q tile
+            pl.BlockSpec((b_dim, tk), lambda i: (0, i)),     # X tile
+            pl.BlockSpec((tk,), lambda i: (i,)),             # mask tile
+        ],
+        out_specs=[
+            pl.BlockSpec((b_dim, k_dim, k_dim), lambda i: (0, 0, 0)),
+            pl.BlockSpec((b_dim, k_dim), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b_dim, k_dim, k_dim), jnp.float32),
+            jax.ShapeDtypeStruct((b_dim, k_dim), jnp.float32),
+        ],
+        interpret=True,
+    )(q, x, mask)

@@ -1,0 +1,81 @@
+"""L1 Pallas kernel: fused item-factor gradient tile (Eq. 5-6, batch-summed).
+
+For a batch of B users and an item tile of width T, computes the SUM over
+the batch of the per-user gradients the clients would transmit:
+
+    g_j = sum_i umask_i * ( -2 c_ij (x_ij - p_i^T q_j) p_i + 2 lam q_j )
+
+fused in one pass per tile: the predicted scores s = P Q_t, the weighted
+residual w = c * (x - s), and the two matmuls feeding the MXU. P (B, K)
+and umask (B,) stay VMEM-resident across the grid; (K, TK) q-slices and
+(B, TK) x-slices stream through.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .accum import TK
+
+
+def _grad_kernel(p_ref, umask_ref, q_ref, x_ref, mask_ref, g_ref, *, alpha, lam):
+    p = p_ref[...]                       # (B, K)
+    u = umask_ref[...]                   # (B,)
+    q = q_ref[...]                       # (K, TK)
+    x = x_ref[...]                       # (B, TK)
+    m = mask_ref[...]                    # (TK,)
+
+    s = jax.lax.dot_general(             # (B, TK) predicted scores
+        p, q, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    c = 1.0 + alpha * x                  # Eq. 2 confidence
+    w = u[:, None] * (c * (x - s))       # (B, TK) masked weighted residual
+    n_users = jnp.sum(u)
+
+    # Eq. 6 summed over users: -2 P^T W + 2 lam n_users Q
+    g = -2.0 * jax.lax.dot_general(
+        p, w, dimension_numbers=(((0,), (0,)), ((), ())),    # (K, TK)
+        preferred_element_type=jnp.float32,
+    ) + (2.0 * lam) * n_users * q
+    g_ref[...] = g * m[None, :]
+
+
+def grad(p, umask, q, x, mask, *, alpha, lam):
+    """Pallas-tiled aggregated gradient over one (K, T) item tile.
+
+    Args:
+      p:     (B, K) user factors (output of the solve artifact).
+      umask: (B,)   user-row validity (0 rows contribute nothing).
+      q:     (K, T) item factors, T % TK == 0.
+      x:     (B, T) interactions.
+      mask:  (T,)   item-column validity.
+      alpha, lam: python floats baked at lowering time (Table 3).
+
+    Returns:
+      g: (K, T) batch-summed gradient, zero on masked columns.
+    """
+    b_dim, k_dim = p.shape
+    t_dim = q.shape[1]
+    tk = min(TK, t_dim)  # small tiles (tests) run as a single grid step
+    assert t_dim % tk == 0, f"tile width {t_dim} not a multiple of {tk}"
+    grid = (t_dim // tk,)
+
+    return pl.pallas_call(
+        functools.partial(_grad_kernel, alpha=alpha, lam=lam),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b_dim, k_dim), lambda i: (0, 0)),  # P (resident)
+            pl.BlockSpec((b_dim,), lambda i: (0,)),          # umask (resident)
+            pl.BlockSpec((k_dim, tk), lambda i: (0, i)),     # Q tile
+            pl.BlockSpec((b_dim, tk), lambda i: (0, i)),     # X tile
+            pl.BlockSpec((tk,), lambda i: (i,)),             # mask tile
+        ],
+        out_specs=pl.BlockSpec((k_dim, tk), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((k_dim, t_dim), jnp.float32),
+        interpret=True,
+    )(p, umask, q, x, mask)

@@ -1,0 +1,88 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness spec).
+
+Every Pallas kernel in this package has an oracle here implementing the
+same math directly from the paper's equations. pytest asserts allclose
+between the two; the rust runtime's differential tests re-implement these
+formulas a third time in rust (rust/src/runtime/reference.rs).
+
+Paper: Khan et al., "A Payload Optimization Method for Federated
+Recommender Systems", RecSys 2021. Equation numbers below refer to it.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def ref_accum(q, x, mask, alpha):
+    """Confidence-weighted Gram accumulation for the user solve (Eq. 3).
+
+    Args:
+      q:    (K, T) item-factor tile Q*.
+      x:    (B, T) implicit interactions for a batch of users.
+      mask: (T,)   1.0 for valid item columns, 0.0 for padding.
+      alpha: implicit confidence weight, c_ij = 1 + alpha * x_ij (Eq. 2).
+
+    Returns:
+      A: (B, K, K) partial  Q C^i Q^T   (WITHOUT the lambda*I term)
+      b: (B, K)    partial  Q C^i x_i
+    """
+    c = (1.0 + alpha * x) * mask[None, :]          # (B, T)
+    a = jnp.einsum("kt,bt,jt->bkj", q, c, q)
+    b = jnp.einsum("kt,bt->bk", q, c * x)
+    return a, b
+
+
+def ref_solve(a, b, lam, _cg_iters=None):
+    """Batched exact solve of (A + lam I) p = b  (Eq. 3), via numpy."""
+    k = a.shape[-1]
+    lhs = np.asarray(a) + lam * np.eye(k, dtype=np.asarray(a).dtype)
+    return np.linalg.solve(lhs, np.asarray(b)[..., None])[..., 0]
+
+
+def ref_grad(p, q, x, mask, umask, alpha, lam):
+    """Aggregated item-factor gradient over a user batch (Eq. 5-6).
+
+    Per user i and item j:
+      dJ_i/dq_j = -2 c_ij (x_ij - p_i^T q_j) p_i + 2 lam q_j
+    The server aggregates the SUM over the contributing users (Eq. 4), so
+    the lambda term appears once per (unmasked) user.
+
+    Args:
+      p:     (B, K) user factors for the batch.
+      q:     (K, T) item-factor tile.
+      x:     (B, T) interactions.
+      mask:  (T,)   item-column validity.
+      umask: (B,)   user-row validity (padding users contribute nothing).
+
+    Returns:
+      g: (K, T) sum over the batch of per-user gradients, zero on masked
+         item columns.
+    """
+    s = p @ q                                       # (B, T) predicted
+    c = 1.0 + alpha * x
+    w = umask[:, None] * c * (x - s)                # (B, T)
+    n_users = jnp.sum(umask)
+    g = -2.0 * (p.T @ w) + 2.0 * lam * n_users * q  # (K, T)
+    return g * mask[None, :]
+
+
+def ref_scores(p, q):
+    """Predicted affinities x* = p_i^T Q (Section 2.2). (B,K)x(K,T)->(B,T)."""
+    return p @ q
+
+
+def ref_adam(q, g, m, v, t, eta, beta1, beta2, eps):
+    """Server-side Adam step on the item factors (Eq. 4 + Kingma & Ba).
+
+    All of (q, g, m, v) are (K, T); t is the 1-based step count.
+    Returns (q', m', v'). Oracle for the rust optimizer, used by pytest to
+    pin the exact update the coordinator must apply.
+    """
+    m2 = beta1 * m + (1.0 - beta1) * g
+    v2 = beta2 * v + (1.0 - beta2) * g * g
+    mhat = m2 / (1.0 - beta1**t)
+    vhat = v2 / (1.0 - beta2**t)
+    q2 = q - eta * mhat / (jnp.sqrt(vhat) + eps)
+    return q2, m2, v2

@@ -1,0 +1,44 @@
+"""L1 Pallas kernel: batched recommendation scores x* = p_i^T Q (Sec. 2.2).
+
+Plain (B, K) @ (K, T) tile matmul used on the evaluation path (top-10 of a
+100-item recommendation list). Kept as a Pallas kernel so the whole client
+compute path lowers through the same machinery.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .accum import TK
+
+
+def _scores_kernel(p_ref, q_ref, s_ref):
+    s_ref[...] = jax.lax.dot_general(
+        p_ref[...],
+        q_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def scores(p, q):
+    """(B, K) x (K, T) -> (B, T) predicted affinities, Pallas-tiled."""
+    b_dim, k_dim = p.shape
+    t_dim = q.shape[1]
+    tk = min(TK, t_dim)  # small tiles (tests) run as a single grid step
+    assert t_dim % tk == 0, f"tile width {t_dim} not a multiple of {tk}"
+    grid = (t_dim // tk,)
+
+    return pl.pallas_call(
+        _scores_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b_dim, k_dim), lambda i: (0, 0)),
+            pl.BlockSpec((k_dim, tk), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((b_dim, tk), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b_dim, t_dim), jnp.float32),
+        interpret=True,
+    )(p, q)

@@ -1,0 +1,157 @@
+"""L2: the FCF client compute graph in JAX, calling the L1 Pallas kernels.
+
+These are the functions the rust coordinator executes (after AOT lowering
+to HLO text by aot.py). Python never runs on the request path; this module
+exists only at artifact-build time and in pytest.
+
+Graphs (all static-shaped; rust tiles/pads around them):
+
+  client_accum(Q_t, X_t, mask)            -> (A_partial, b_partial)
+  solve_p(A, b)                           -> P            (Eq. 3, CG)
+  client_grad(P, umask, Q_t, X_t, mask)   -> G_t          (Eq. 5-6)
+  client_scores(P, Q_t)                   -> S_t          (x* = p^T Q)
+  adam_step(Q_t, G_t, m, v, t)            -> (Q', m', v') (Eq. 4 + Adam)
+
+Hyper-parameters (alpha, lam, Adam betas/eta/eps — Table 3) are baked into
+the artifacts at lowering time and recorded in artifacts/manifest.txt; the
+rust config asserts it matches.
+
+The solve uses CONJUGATE GRADIENTS in pure jnp instead of
+jnp.linalg.solve: on CPU, LAPACK solves lower to a custom-call the PJRT
+text-loader cannot execute, while CG lowers to pure HLO (a fori_loop of
+matmuls). A + lam*I is SPD with eigenvalues >= lam = 1, and K = 25, so
+CG_ITERS = 2K converges to f32 round-off (pinned by pytest vs numpy).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import accum as accum_k
+from .kernels import grad as grad_k
+from .kernels import scores as scores_k
+
+# ---------------------------------------------------------------------------
+# Paper hyper-parameters (Table 3) baked into the artifacts.
+ALPHA = 4.0      # implicit-confidence weight, c = 1 + alpha x
+LAM = 1.0        # L2 regularization
+ETA = 0.01       # Adam learning rate
+BETA1 = 0.1      # Adam beta_1 (paper uses 0.1)
+BETA2 = 0.99     # Adam beta_2
+EPS = 1e-8       # Adam epsilon
+
+# Artifact geometry. B = user batch, K = latent factors (Table 3), tiles =
+# item-axis widths emitted (rust picks the best fit per call).
+B = 64
+K = 25
+TILES = (512, 2048)
+CG_ITERS = 2 * K
+
+
+def client_accum(q, x, mask):
+    """(A, b) partial sums for one item tile (Eq. 3 ingredients)."""
+    return accum_k.accum(q, x, mask, alpha=ALPHA)
+
+
+def solve_p(a, b):
+    """Batched CG solve of (A + lam I) p = b over the user batch (Eq. 3)."""
+
+    def matvec(v):
+        return jnp.einsum("bij,bj->bi", a, v) + LAM * v
+
+    x0 = jnp.zeros_like(b)
+    r0 = b                                  # b - matvec(0)
+    rs0 = jnp.sum(r0 * r0, axis=-1)         # (B,)
+    tiny = 1e-20
+
+    def body(_, carry):
+        x, r, p, rs = carry
+        ap = matvec(p)
+        denom = jnp.sum(p * ap, axis=-1)
+        alpha = rs / (denom + tiny)
+        x = x + alpha[:, None] * p
+        r = r - alpha[:, None] * ap
+        rs_new = jnp.sum(r * r, axis=-1)
+        beta = rs_new / (rs + tiny)
+        p = r + beta[:, None] * p
+        return (x, r, p, rs_new)
+
+    x, _, _, _ = jax.lax.fori_loop(0, CG_ITERS, body, (x0, r0, r0, rs0))
+    return x
+
+
+def client_update(q, x, mask):
+    """Single-tile fused client update: accum + solve in one artifact.
+
+    Valid when the whole selected item set fits one tile (the common case
+    at >= 90% payload reduction). For multi-tile item sets rust runs
+    client_accum per tile, sums, then solve_p.
+    """
+    a, b = client_accum(q, x, mask)
+    return solve_p(a, b)
+
+
+def client_grad(p, umask, q, x, mask):
+    """Aggregated Eq. 5-6 gradient for one item tile."""
+    return grad_k.grad(p, umask, q, x, mask, alpha=ALPHA, lam=LAM)
+
+
+def client_scores(p, q):
+    """Predicted affinities for evaluation (top-N recommendation)."""
+    return scores_k.scores(p, q)
+
+
+def adam_step(q, g, m, v, t):
+    """Server-side Adam update on one (K, T) tile of the global model.
+
+    t is a float32 scalar (1-based global update count for this item set).
+    Kept as an artifact so the L3 hot loop can run the whole round on the
+    PJRT device; rust/src/optim mirrors it for differential testing.
+    """
+    m2 = BETA1 * m + (1.0 - BETA1) * g
+    v2 = BETA2 * v + (1.0 - BETA2) * g * g
+    mhat = m2 / (1.0 - BETA1**t)
+    vhat = v2 / (1.0 - BETA2**t)
+    q2 = q - ETA * mhat / (jnp.sqrt(vhat) + EPS)
+    return q2, m2, v2
+
+
+# ---------------------------------------------------------------------------
+# Artifact registry: name -> (fn, example-arg builder). aot.py iterates this.
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def artifact_specs():
+    """Yield (name, fn, example_args) for every artifact to emit."""
+    specs = []
+    for t in TILES:
+        specs.append(
+            (f"accum_t{t}", client_accum, (_f32(K, t), _f32(B, t), _f32(t)))
+        )
+        specs.append(
+            (
+                f"grad_t{t}",
+                client_grad,
+                (_f32(B, K), _f32(B), _f32(K, t), _f32(B, t), _f32(t)),
+            )
+        )
+        specs.append((f"scores_t{t}", client_scores, (_f32(B, K), _f32(K, t))))
+        specs.append(
+            (
+                f"adam_t{t}",
+                adam_step,
+                (_f32(K, t), _f32(K, t), _f32(K, t), _f32(K, t), _f32()),
+            )
+        )
+    specs.append((f"solve", solve_p, (_f32(B, K, K), _f32(B, K))))
+    t0 = TILES[0]
+    specs.append(
+        (f"update_t{t0}", client_update, (_f32(K, t0), _f32(B, t0), _f32(t0)))
+    )
+    return specs

@@ -1,0 +1,65 @@
+"""AOT path smoke tests: artifacts lower, text is parseable HLO, manifest
+agrees with model.py, and there are no CPU custom-calls the rust PJRT
+loader cannot execute (the reason solve uses CG instead of LAPACK)."""
+
+from __future__ import annotations
+
+import os
+import re
+
+import pytest
+
+from compile import aot, model
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_every_artifact_lowers_to_hlo_text():
+    for name, fn, example_args in model.artifact_specs():
+        text = aot.to_hlo_text(fn, example_args)
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+
+
+def test_no_custom_calls_in_any_artifact():
+    for name, fn, example_args in model.artifact_specs():
+        text = aot.to_hlo_text(fn, example_args)
+        assert "custom-call" not in text, (
+            f"{name} lowered to a custom-call; the rust CPU PJRT loader "
+            "cannot execute it"
+        )
+
+
+def test_artifact_names_unique_and_cover_tiles():
+    names = [n for n, _, _ in model.artifact_specs()]
+    assert len(names) == len(set(names))
+    for t in model.TILES:
+        for stem in ("accum", "grad", "scores", "adam"):
+            assert f"{stem}_t{t}" in names
+    assert "solve" in names
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART_DIR, "manifest.txt")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_manifest_matches_model():
+    with open(os.path.join(ART_DIR, "manifest.txt")) as f:
+        kv = dict(
+            line.strip().split("=", 1)
+            for line in f
+            if "=" in line and not line.startswith("artifact=")
+        )
+    assert int(kv["B"]) == model.B
+    assert int(kv["K"]) == model.K
+    assert kv["tiles"] == ",".join(str(t) for t in model.TILES)
+    assert float(kv["alpha"]) == model.ALPHA
+    assert float(kv["lam"]) == model.LAM
+
+    with open(os.path.join(ART_DIR, "manifest.txt")) as f:
+        arts = [l for l in f if l.startswith("artifact=")]
+    listed = {re.match(r"artifact=(\S+)", l).group(1) for l in arts}
+    expected = {n for n, _, _ in model.artifact_specs()}
+    assert listed == expected
+    for n in expected:
+        assert os.path.exists(os.path.join(ART_DIR, f"{n}.hlo.txt"))

@@ -1,0 +1,159 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles in ref.py.
+
+This is the CORE correctness signal for the compute layer: everything the
+rust coordinator executes is lowered from exactly these functions.
+Hypothesis sweeps shapes (B, K, T), sparsity and masks; fixed-seed cases
+pin the production geometry (B=64, K=25, T in {512, 2048}).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.accum import TK, accum
+from compile.kernels.grad import grad
+from compile.kernels.scores import scores
+
+RNG = np.random.default_rng(12345)
+
+
+def make_case(b, k, t, density, rng=RNG):
+    q = rng.normal(scale=0.3, size=(k, t)).astype(np.float32)
+    x = (rng.random((b, t)) < density).astype(np.float32)
+    mask = np.zeros(t, np.float32)
+    valid = rng.integers(1, t + 1)
+    mask[:valid] = 1.0
+    umask = np.zeros(b, np.float32)
+    uvalid = rng.integers(1, b + 1)
+    umask[:uvalid] = 1.0
+    p = rng.normal(scale=0.3, size=(b, k)).astype(np.float32)
+    return q, x, mask, umask, p
+
+
+# ---------------------------------------------------------------------------
+# Fixed production-geometry cases
+
+
+@pytest.mark.parametrize("t", list(model.TILES))
+def test_accum_production_geometry(t):
+    q, x, mask, _, _ = make_case(model.B, model.K, t, 0.05)
+    a, b = accum(q, x, mask, alpha=model.ALPHA)
+    ar, br = ref.ref_accum(q, x, mask, model.ALPHA)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(ar), rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(b), np.asarray(br), rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("t", list(model.TILES))
+def test_grad_production_geometry(t):
+    q, x, mask, umask, p = make_case(model.B, model.K, t, 0.05)
+    g = grad(p, umask, q, x, mask, alpha=model.ALPHA, lam=model.LAM)
+    gr = ref.ref_grad(p, q, x, mask, umask, model.ALPHA, model.LAM)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr), rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("t", list(model.TILES))
+def test_scores_production_geometry(t):
+    q, _, _, _, p = make_case(model.B, model.K, t, 0.05)
+    s = scores(p, q)
+    np.testing.assert_allclose(np.asarray(s), p @ q, rtol=1e-5, atol=1e-5)
+
+
+def test_accum_masked_columns_contribute_nothing():
+    q, x, mask, _, _ = make_case(16, 8, 256, 0.2)
+    mask[:] = 1.0
+    mask[100:] = 0.0
+    a1, b1 = accum(q, x, mask, alpha=model.ALPHA)
+    # zero out the masked columns entirely: result must be identical
+    q2, x2 = q.copy(), x.copy()
+    q2[:, 100:] = 777.0
+    x2[:, 100:] = 1.0
+    a2, b2 = accum(q2, x2, mask, alpha=model.ALPHA)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2), rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(b1), np.asarray(b2), rtol=1e-5, atol=1e-4)
+
+
+def test_grad_masked_users_contribute_nothing():
+    q, x, mask, umask, p = make_case(16, 8, 256, 0.2)
+    umask[:] = 1.0
+    umask[5:] = 0.0
+    g1 = grad(p, umask, q, x, mask, alpha=model.ALPHA, lam=model.LAM)
+    p2, x2 = p.copy(), x.copy()
+    p2[5:] = 123.0  # padding users: factors must not matter
+    g2 = grad(p2, umask, q, x2, mask, alpha=model.ALPHA, lam=model.LAM)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-4, atol=1e-3)
+
+
+def test_grad_matches_finite_difference():
+    """Eq. 6 is the true gradient of Eq. 2 w.r.t. q_j — check numerically."""
+    rng = np.random.default_rng(7)
+    b_dim, k, t = 4, 5, 128
+    q, x, mask, umask, p = make_case(b_dim, k, t, 0.3, rng)
+    mask[:] = 1.0
+    umask[:] = 1.0
+
+    def loss(qm):
+        s = p @ qm
+        c = 1.0 + model.ALPHA * x
+        se = np.sum(c * (x - s) ** 2)
+        # per-user lambda penalty on q (appears once per user, Eq. 2 per i)
+        reg = model.LAM * (b_dim * np.sum(qm**2) + np.sum(p**2))
+        return se + reg
+
+    g = np.asarray(grad(p, umask, q, x, mask, alpha=model.ALPHA, lam=model.LAM))
+    eps = 1e-3
+    for idx in [(0, 0), (2, 64), (4, 127), (1, 33)]:
+        qp, qm_ = q.copy(), q.copy()
+        qp[idx] += eps
+        qm_[idx] -= eps
+        fd = (loss(qp) - loss(qm_)) / (2 * eps)
+        assert abs(fd - g[idx]) < 5e-2 * max(1.0, abs(fd)), (idx, fd, g[idx])
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis shape/density sweeps (interpret-mode recompiles per shape —
+# keep example counts modest).
+
+shape_strategy = st.tuples(
+    st.integers(min_value=1, max_value=32),          # B
+    st.integers(min_value=2, max_value=31),          # K
+    st.sampled_from([TK, 2 * TK, 4 * TK]),           # T
+    st.floats(min_value=0.0, max_value=0.5),         # density
+    st.integers(min_value=0, max_value=2**31 - 1),   # seed
+)
+
+
+@settings(max_examples=12, deadline=None)
+@given(shape_strategy)
+def test_accum_hypothesis(case):
+    b_dim, k, t, density, seed = case
+    rng = np.random.default_rng(seed)
+    q, x, mask, _, _ = make_case(b_dim, k, t, density, rng)
+    a, b = accum(q, x, mask, alpha=model.ALPHA)
+    ar, br = ref.ref_accum(q, x, mask, model.ALPHA)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(ar), rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(b), np.asarray(br), rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=12, deadline=None)
+@given(shape_strategy)
+def test_grad_hypothesis(case):
+    b_dim, k, t, density, seed = case
+    rng = np.random.default_rng(seed)
+    q, x, mask, umask, p = make_case(b_dim, k, t, density, rng)
+    g = grad(p, umask, q, x, mask, alpha=model.ALPHA, lam=model.LAM)
+    gr = ref.ref_grad(p, q, x, mask, umask, model.ALPHA, model.LAM)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr), rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(shape_strategy)
+def test_scores_hypothesis(case):
+    b_dim, k, t, density, seed = case
+    rng = np.random.default_rng(seed)
+    q, _, _, _, p = make_case(b_dim, k, t, density, rng)
+    s = scores(p, q)
+    np.testing.assert_allclose(np.asarray(s), p @ q, rtol=1e-4, atol=1e-4)

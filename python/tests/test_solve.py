@@ -1,0 +1,88 @@
+"""L2 solve correctness: batched CG vs exact numpy solve (Eq. 3).
+
+The CG solve is the one place we deviate from the obvious implementation
+(jnp.linalg.solve) for PJRT-loadability reasons, so it gets its own
+focused suite: random SPD systems, ill-conditioned systems, the
+production path through client_accum, and the fused update artifact.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def random_spd_case(b_dim, k, scale, seed):
+    rng = np.random.default_rng(seed)
+    g = rng.normal(scale=scale, size=(b_dim, k, 2 * k)).astype(np.float32)
+    a = np.einsum("bij,bkj->bik", g, g)      # PSD; + lam I makes it SPD
+    rhs = rng.normal(size=(b_dim, k)).astype(np.float32)
+    return a, rhs
+
+
+def test_solve_identity():
+    b_dim, k = model.B, model.K
+    a = np.zeros((b_dim, k, k), np.float32)  # (0 + lam I) p = b -> p = b/lam
+    rhs = np.arange(b_dim * k, dtype=np.float32).reshape(b_dim, k)
+    p = np.asarray(model.solve_p(a, rhs))
+    np.testing.assert_allclose(p, rhs / model.LAM, rtol=1e-5, atol=1e-5)
+
+
+def test_solve_production_path():
+    """accum -> solve against the numpy exact solve, production geometry."""
+    rng = np.random.default_rng(3)
+    t = model.TILES[0]
+    q = rng.normal(scale=0.3, size=(model.K, t)).astype(np.float32)
+    x = (rng.random((model.B, t)) < 0.05).astype(np.float32)
+    mask = np.ones(t, np.float32)
+    a, b = model.client_accum(q, x, mask)
+    p = np.asarray(model.solve_p(a, b))
+    pr = ref.ref_solve(np.asarray(a), np.asarray(b), model.LAM)
+    np.testing.assert_allclose(p, pr, rtol=1e-3, atol=1e-4)
+
+
+def test_fused_update_equals_pipeline():
+    rng = np.random.default_rng(4)
+    t = model.TILES[0]
+    q = rng.normal(scale=0.3, size=(model.K, t)).astype(np.float32)
+    x = (rng.random((model.B, t)) < 0.1).astype(np.float32)
+    mask = np.ones(t, np.float32)
+    mask[300:] = 0.0
+    fused = np.asarray(model.client_update(q, x, mask))
+    a, b = model.client_accum(q, x, mask)
+    staged = np.asarray(model.solve_p(a, b))
+    np.testing.assert_allclose(fused, staged, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=16),
+    st.integers(min_value=1, max_value=30),
+    st.floats(min_value=0.05, max_value=3.0),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_solve_hypothesis_spd(b_dim, k, scale, seed):
+    a, rhs = random_spd_case(b_dim, k, scale, seed)
+    p = np.asarray(model.solve_p(a, rhs))
+    pr = ref.ref_solve(a, rhs, model.LAM)
+    # relative error in the residual metric — robust to conditioning
+    denom = np.maximum(np.abs(pr).max(), 1e-3)
+    assert np.abs(p - pr).max() / denom < 5e-3
+
+
+def test_solve_ill_conditioned():
+    """Many repeated interactions -> large eigenvalue spread; CG must hold."""
+    rng = np.random.default_rng(9)
+    k = model.K
+    g = rng.normal(scale=5.0, size=(4, k, k)).astype(np.float32)
+    a = np.einsum("bij,bkj->bik", g, g)
+    rhs = rng.normal(size=(4, k)).astype(np.float32)
+    p = np.asarray(model.solve_p(a, rhs))
+    pr = ref.ref_solve(a, rhs, model.LAM)
+    resid = np.einsum("bij,bj->bi", a + model.LAM * np.eye(k, dtype=np.float32), p) - rhs
+    # residual must be tiny relative to the rhs scale
+    assert np.abs(resid).max() < 1e-2 * max(1.0, np.abs(rhs).max()), np.abs(resid).max()
+    assert np.abs(p - pr).max() < 5e-2 * max(1.0, np.abs(pr).max())

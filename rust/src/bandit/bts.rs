@@ -1,0 +1,185 @@
+//! Bayesian Thompson Sampling over items (paper §3.1, Eq. 7–12).
+//!
+//! Per item j the reward model is `R^j ~ N(μ^j, 1)` (fixed precision
+//! τ = 1, Eq. 7) with a conjugate Gaussian prior `μ^j ~ N(μ_θ, 1/τ_θ)`
+//! (Eq. 8). After n^j observations with running mean Z(a^j) (Eq. 12) the
+//! posterior (Eq. 9–11) is
+//!
+//! ```text
+//! μ̂_θ^j = (τ_θ μ_θ + n^j Z) / (τ_θ + n^j)
+//! τ̂_θ^j = τ_θ + n^j τ
+//! ```
+//!
+//! Each round we draw μ^j from every posterior and take the top-M_s
+//! sampled values (the multiple-play / top-M extension the paper cites).
+
+use crate::rng::Rng;
+
+use super::{top_m, ItemSelector};
+
+/// Reward-model precision τ (paper fixes variance = 1).
+const TAU: f64 = 1.0;
+
+/// Per-item Gaussian posterior state.
+#[derive(Debug, Clone)]
+struct Arm {
+    /// Times this item was part of Q* (n^j).
+    n: u64,
+    /// Running mean of observed rewards, Z_t(a^j) (Eq. 12).
+    mean_reward: f64,
+}
+
+/// FCF-BTS item selector.
+#[derive(Debug, Clone)]
+pub struct BtsSelector {
+    mu0: f64,
+    tau0: f64,
+    arms: Vec<Arm>,
+    /// Scratch for posterior draws (avoids re-allocating every round).
+    samples: Vec<f64>,
+}
+
+impl BtsSelector {
+    pub fn new(m: usize, mu0: f64, tau0: f64) -> BtsSelector {
+        assert!(tau0 > 0.0, "prior precision must be positive");
+        BtsSelector {
+            mu0,
+            tau0,
+            arms: vec![
+                Arm {
+                    n: 0,
+                    mean_reward: 0.0,
+                };
+                m
+            ],
+            samples: vec![0.0; m],
+        }
+    }
+
+    /// Posterior parameters (μ̂, τ̂) for an item (Eq. 10–11). Public for
+    /// tests and the convergence diagnostics.
+    pub fn posterior(&self, item: usize) -> (f64, f64) {
+        let arm = &self.arms[item];
+        let n = arm.n as f64;
+        let mu_hat = (self.tau0 * self.mu0 + n * arm.mean_reward) / (self.tau0 + n);
+        let tau_hat = self.tau0 + n * TAU;
+        (mu_hat, tau_hat)
+    }
+
+    /// Selection count n^j.
+    pub fn pulls(&self, item: usize) -> u64 {
+        self.arms[item].n
+    }
+}
+
+impl ItemSelector for BtsSelector {
+    fn select(&mut self, m_s: usize, rng: &mut Rng) -> Vec<u32> {
+        for (j, arm) in self.arms.iter().enumerate() {
+            let n = arm.n as f64;
+            let mu_hat = (self.tau0 * self.mu0 + n * arm.mean_reward) / (self.tau0 + n);
+            let tau_hat = self.tau0 + n * TAU;
+            // μ^j ~ N(μ̂, 1/τ̂) (Eq. 9)
+            self.samples[j] = rng.normal_with(mu_hat, (1.0 / tau_hat).sqrt());
+        }
+        top_m(&self.samples, m_s)
+    }
+
+    fn update(&mut self, rewards: &[(u32, f64)]) {
+        for &(item, r) in rewards {
+            let arm = &mut self.arms[item as usize];
+            arm.n += 1;
+            // incremental running mean (Eq. 12)
+            arm.mean_reward += (r - arm.mean_reward) / arm.n as f64;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "bts"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prior_posterior_before_any_reward() {
+        let bts = BtsSelector::new(4, 0.5, 100.0);
+        let (mu, tau) = bts.posterior(2);
+        assert_eq!(mu, 0.5);
+        assert_eq!(tau, 100.0);
+    }
+
+    #[test]
+    fn posterior_update_matches_eq_10_11() {
+        let mut bts = BtsSelector::new(2, 0.0, 10.0);
+        bts.update(&[(0, 2.0)]);
+        bts.update(&[(0, 4.0)]);
+        // n=2, Z = 3.0
+        let (mu, tau) = bts.posterior(0);
+        assert!((mu - (2.0 * 3.0) / (10.0 + 2.0)).abs() < 1e-12);
+        assert_eq!(tau, 12.0);
+        // item 1 untouched
+        assert_eq!(bts.pulls(1), 0);
+    }
+
+    #[test]
+    fn running_mean_is_exact() {
+        let mut bts = BtsSelector::new(1, 0.0, 1.0);
+        let rs = [1.0, -2.0, 0.5, 3.5, 0.0];
+        for &r in &rs {
+            bts.update(&[(0, r)]);
+        }
+        let expect: f64 = rs.iter().sum::<f64>() / rs.len() as f64;
+        let n = rs.len() as f64;
+        let (mu, _) = bts.posterior(0);
+        assert!((mu - n * expect / (1.0 + n)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rewarded_items_get_selected_more() {
+        let mut bts = BtsSelector::new(100, 0.0, 1.0);
+        let mut rng = Rng::seed_from_u64(99);
+        // heavily reward items 0..10
+        for _ in 0..50 {
+            for j in 0..10u32 {
+                bts.update(&[(j, 5.0)]);
+            }
+        }
+        let mut hits = 0;
+        for _ in 0..20 {
+            let picks = bts.select(10, &mut rng);
+            hits += picks.iter().filter(|&&p| p < 10).count();
+        }
+        // with strong posteriors nearly every pick should be 0..10
+        assert!(hits > 150, "hits {hits}");
+    }
+
+    #[test]
+    fn high_prior_precision_keeps_exploring() {
+        // paper's τ_θ = 10000 makes all posteriors ~identical early on;
+        // selection should then be near-uniform across rounds.
+        let mut bts = BtsSelector::new(200, 0.0, 10_000.0);
+        let mut rng = Rng::seed_from_u64(7);
+        let mut seen = vec![false; 200];
+        for _ in 0..200 {
+            for p in bts.select(10, &mut rng) {
+                seen[p as usize] = true;
+            }
+        }
+        let coverage = seen.iter().filter(|&&b| b).count();
+        assert!(coverage > 150, "coverage {coverage}");
+    }
+
+    #[test]
+    fn select_returns_distinct_sorted_domain() {
+        let mut bts = BtsSelector::new(50, 0.0, 10.0);
+        let mut rng = Rng::seed_from_u64(3);
+        let picks = bts.select(50, &mut rng);
+        assert_eq!(picks.len(), 50);
+        let mut s = picks.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 50);
+    }
+}

@@ -1,0 +1,116 @@
+//! Item-selection strategies for payload optimization (paper §3.1).
+//!
+//! [`ItemSelector`] is the server-side abstraction: each FL round the
+//! coordinator asks for `M_s` item ids to include in Q*, and after the
+//! global update it feeds back per-item rewards (Eq. 13). Implementations:
+//!
+//! * [`BtsSelector`] — Bayesian Thompson Sampling with Gaussian priors
+//!   (Eq. 7–12), the paper's FCF-BTS.
+//! * [`RandomSelector`] — FCF-Random baseline (uniform subsets).
+//! * [`FullSelector`] — FCF (Original): the whole catalog, every round.
+//! * [`EpsGreedySelector`], [`Ucb1Selector`] — ablations over the same
+//!   reward signal (not in the paper; used by the ablation benches).
+
+mod bts;
+mod simple;
+
+pub use bts::BtsSelector;
+pub use simple::{EpsGreedySelector, FullSelector, RandomSelector};
+pub use ucb::Ucb1Selector;
+mod ucb;
+
+use crate::config::{BanditConfig, Strategy};
+use crate::rng::Rng;
+
+/// Server-side item selection strategy (one per training run).
+pub trait ItemSelector: Send {
+    /// Pick `m_s` distinct item ids for this round's Q*.
+    fn select(&mut self, m_s: usize, rng: &mut Rng) -> Vec<u32>;
+
+    /// Feed back the rewards of the *selected* items after the global
+    /// update (Alg. 1 line 17). `rewards[i]` pairs an item id with its
+    /// Eq. 13 reward.
+    fn update(&mut self, rewards: &[(u32, f64)]);
+
+    /// Strategy name for logs/CSV.
+    fn name(&self) -> &'static str;
+}
+
+/// Construct the selector for a strategy over an `m`-item catalog.
+pub fn make_selector(
+    strategy: Strategy,
+    m: usize,
+    cfg: &BanditConfig,
+) -> Box<dyn ItemSelector> {
+    match strategy {
+        Strategy::Bts => Box::new(BtsSelector::new(m, cfg.mu0, cfg.tau0)),
+        Strategy::Random => Box::new(RandomSelector::new(m)),
+        Strategy::Full => Box::new(FullSelector::new(m)),
+        Strategy::EpsGreedy => Box::new(EpsGreedySelector::new(m, cfg.eps_greedy)),
+        Strategy::Ucb1 => Box::new(Ucb1Selector::new(m)),
+    }
+}
+
+/// Top-`m_s` indices of `keys` (descending), via partial selection —
+/// O(m) instead of O(m log m); ties break by index for determinism.
+pub(crate) fn top_m(keys: &[f64], m_s: usize) -> Vec<u32> {
+    let m = keys.len();
+    let m_s = m_s.min(m);
+    if m_s == 0 {
+        return Vec::new();
+    }
+    let mut idx: Vec<u32> = (0..m as u32).collect();
+    if m_s < m {
+        idx.select_nth_unstable_by(m_s - 1, |&a, &b| {
+            keys[b as usize]
+                .partial_cmp(&keys[a as usize])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        idx.truncate(m_s);
+    }
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+
+    #[test]
+    fn factory_builds_every_strategy() {
+        let cfg = RunConfig::paper_defaults().bandit;
+        for s in [
+            Strategy::Bts,
+            Strategy::Random,
+            Strategy::Full,
+            Strategy::EpsGreedy,
+            Strategy::Ucb1,
+        ] {
+            let mut sel = make_selector(s, 50, &cfg);
+            let mut rng = Rng::seed_from_u64(1);
+            let picks = sel.select(10, &mut rng);
+            let expect = if s == Strategy::Full { 50 } else { 10 };
+            assert_eq!(picks.len(), expect, "{}", sel.name());
+            let mut sorted = picks.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), expect, "{} returned duplicates", sel.name());
+            sel.update(&[(0, 1.0), (3, -0.5)]);
+        }
+    }
+
+    #[test]
+    fn top_m_selects_largest() {
+        let keys = vec![0.1, 5.0, 3.0, 4.0, 2.0];
+        let mut got = top_m(&keys, 3);
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn top_m_full_when_ms_ge_m() {
+        let keys = vec![1.0, 2.0];
+        assert_eq!(top_m(&keys, 5).len(), 2);
+    }
+}

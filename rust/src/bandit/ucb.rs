@@ -1,0 +1,94 @@
+//! UCB1 ablation selector (Auer et al. 2002), adapted to top-M_s play.
+//!
+//! Not part of the paper — included so the ablation benches can compare
+//! the BTS posterior against a frequentist index policy under the same
+//! reward signal (DESIGN.md §4, ablations).
+
+use crate::rng::Rng;
+
+use super::{top_m, ItemSelector};
+
+/// UCB1 over items: index = mean + sqrt(2 ln t / n); unplayed items get
+/// +inf (forced exploration).
+#[derive(Debug, Clone)]
+pub struct Ucb1Selector {
+    t: u64,
+    n: Vec<u64>,
+    mean: Vec<f64>,
+    scratch: Vec<f64>,
+}
+
+impl Ucb1Selector {
+    pub fn new(m: usize) -> Self {
+        Ucb1Selector {
+            t: 0,
+            n: vec![0; m],
+            mean: vec![0.0; m],
+            scratch: vec![0.0; m],
+        }
+    }
+}
+
+impl ItemSelector for Ucb1Selector {
+    fn select(&mut self, m_s: usize, _rng: &mut Rng) -> Vec<u32> {
+        self.t += 1;
+        let ln_t = (self.t.max(1) as f64).ln();
+        for j in 0..self.n.len() {
+            self.scratch[j] = if self.n[j] == 0 {
+                f64::INFINITY
+            } else {
+                self.mean[j] + (2.0 * ln_t / self.n[j] as f64).sqrt()
+            };
+        }
+        top_m(&self.scratch, m_s)
+    }
+
+    fn update(&mut self, rewards: &[(u32, f64)]) {
+        for &(item, r) in rewards {
+            let i = item as usize;
+            self.n[i] += 1;
+            self.mean[i] += (r - self.mean[i]) / self.n[i] as f64;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "ucb1"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unplayed_items_explored_first() {
+        let mut sel = Ucb1Selector::new(10);
+        let mut rng = Rng::seed_from_u64(1);
+        // reward items 0..3 heavily, leave 4..10 unplayed
+        for _ in 0..5 {
+            for j in 0..3u32 {
+                sel.update(&[(j, 100.0)]);
+            }
+        }
+        let picks = sel.select(7, &mut rng);
+        // all 7 unplayed items (3..10) have infinite index -> all selected
+        for j in 3..10u32 {
+            assert!(picks.contains(&j), "missing unplayed {j}");
+        }
+    }
+
+    #[test]
+    fn converges_to_best_arm_once_all_played() {
+        let mut sel = Ucb1Selector::new(5);
+        let mut rng = Rng::seed_from_u64(2);
+        for j in 0..5u32 {
+            sel.update(&[(j, if j == 2 { 10.0 } else { 0.0 })]);
+        }
+        for _ in 0..50 {
+            let picks = sel.select(1, &mut rng);
+            sel.update(&[(picks[0], if picks[0] == 2 { 10.0 } else { 0.0 })]);
+        }
+        // arm 2 should dominate the pull counts
+        assert!(sel.n[2] > 30, "{:?}", sel.n);
+    }
+}

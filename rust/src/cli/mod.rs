@@ -1,0 +1,164 @@
+//! Hand-rolled CLI argument parser (clap unavailable offline).
+//!
+//! Grammar: `fedpayload <subcommand> [positional...] [--flag] [--key value]
+//! [--key=value]`. The launcher (`rust/src/main.rs`) declares subcommands;
+//! this module only does the token wrangling and typed lookups.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token (if any).
+    pub subcommand: Option<String>,
+    /// Remaining non-flag tokens after the subcommand.
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options; repeated keys accumulate.
+    options: BTreeMap<String, Vec<String>>,
+    /// Bare `--flag` switches.
+    flags: Vec<String>,
+}
+
+/// Option keys that consume a value even in `--key value` form. Everything
+/// not listed here and not containing `=` is treated as a boolean flag.
+const VALUE_KEYS: &[&str] = &[
+    "config",
+    "out-dir",
+    "dataset",
+    "strategy",
+    "iterations",
+    "theta",
+    "payload-fraction",
+    "rebuilds",
+    "seed",
+    "set",
+    "backend",
+    "log-level",
+    "levels",
+    "scale",
+    "threads",
+    "format",
+    "path",
+    "output",
+];
+
+impl Args {
+    /// Parse from raw argv (excluding the program name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("stray `--`");
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.entry(k.to_string()).or_default().push(v.to_string());
+                } else if VALUE_KEYS.contains(&key) {
+                    let v = iter
+                        .next()
+                        .ok_or_else(|| anyhow!("option --{key} expects a value"))?;
+                    args.options.entry(key.to_string()).or_default().push(v);
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Last occurrence of `--key` (CLI conventions: later wins).
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// All occurrences of `--key` (e.g. repeated `--set`).
+    pub fn opt_all(&self, key: &str) -> &[String] {
+        self.options.get(key).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow!("--{key} `{s}`: {e}")),
+        }
+    }
+
+    /// `opt_parse` with a default.
+    pub fn opt_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.opt_parse(key)?.unwrap_or(default))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse(&["train", "extra1", "extra2"]);
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.positional, vec!["extra1", "extra2"]);
+    }
+
+    #[test]
+    fn options_both_forms() {
+        let a = parse(&["train", "--dataset", "lastfm", "--iterations=55"]);
+        assert_eq!(a.opt("dataset"), Some("lastfm"));
+        assert_eq!(a.opt_or::<usize>("iterations", 0).unwrap(), 55);
+    }
+
+    #[test]
+    fn repeated_set_accumulates() {
+        let a = parse(&["train", "--set", "a=1", "--set", "b=2"]);
+        assert_eq!(a.opt_all("set"), &["a=1".to_string(), "b=2".to_string()]);
+    }
+
+    #[test]
+    fn flags() {
+        let a = parse(&["bench", "--verbose", "--dry-run"]);
+        assert!(a.flag("verbose"));
+        assert!(a.flag("dry-run"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn later_option_wins() {
+        let a = parse(&["x", "--seed", "1", "--seed", "2"]);
+        assert_eq!(a.opt_or::<u64>("seed", 0).unwrap(), 2);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(vec!["x".to_string(), "--seed".to_string()]).is_err());
+    }
+
+    #[test]
+    fn bad_typed_value_errors() {
+        let a = parse(&["x", "--seed", "abc"]);
+        assert!(a.opt_parse::<u64>("seed").is_err());
+    }
+}

@@ -1,0 +1,136 @@
+//! Simulated FL clients (paper §2.2).
+//!
+//! Each client owns its private interaction rows (train + held-out test)
+//! and its user factor `p_i` — which, exactly as in FCF, never leaves the
+//! device: the only things a client transmits are item-factor gradients
+//! ∇Q* and (per §6.2) its locally computed test metrics. The heavy client
+//! math itself (Eq. 3 solve + Eq. 6 gradients) runs through the shared
+//! AOT artifacts — batching many clients per execution is the simulator's
+//! throughput trick and does not change the per-client semantics.
+
+use crate::data::Split;
+use crate::rng::Rng;
+
+/// One simulated user device.
+#[derive(Debug, Clone)]
+pub struct Client {
+    pub id: usize,
+    /// Sorted train interactions (item ids).
+    pub train_items: Vec<u32>,
+    /// Sorted held-out test interactions (item ids).
+    pub test_items: Vec<u32>,
+    /// Local user factor p_i (K), updated each time the client
+    /// participates in a round. Empty until first participation.
+    pub p: Vec<f32>,
+}
+
+impl Client {
+    /// Map this client's train items into selected-item positions.
+    /// `sel_pos[item] >= 0` gives the position of `item` in the round's
+    /// selected list; the result stays sorted because the selected list
+    /// is sorted by item id.
+    pub fn selected_row(&self, sel_pos: &[i32]) -> Vec<u32> {
+        let mut row = Vec::new();
+        for &item in &self.train_items {
+            let p = sel_pos[item as usize];
+            if p >= 0 {
+                row.push(p as u32);
+            }
+        }
+        row
+    }
+}
+
+/// The population of simulated clients for one training run.
+#[derive(Debug, Clone)]
+pub struct Fleet {
+    clients: Vec<Client>,
+}
+
+impl Fleet {
+    /// Build one client per user from a train/test split.
+    pub fn from_split(split: &Split) -> Fleet {
+        let n = split.train.num_users();
+        let clients = (0..n)
+            .map(|u| Client {
+                id: u,
+                train_items: split.train.user_items(u).to_vec(),
+                test_items: split.test.user_items(u).to_vec(),
+                p: Vec::new(),
+            })
+            .collect();
+        Fleet { clients }
+    }
+
+    pub fn len(&self) -> usize {
+        self.clients.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.clients.is_empty()
+    }
+
+    pub fn client(&self, id: usize) -> &Client {
+        &self.clients[id]
+    }
+
+    pub fn client_mut(&mut self, id: usize) -> &mut Client {
+        &mut self.clients[id]
+    }
+
+    /// Draw Θ distinct participants for a round. The paper's server only
+    /// observes that Θ updates arrived; uniform sampling reproduces the
+    /// asynchronous-arrival semantics (DESIGN.md §Substitutions).
+    pub fn sample_participants(&self, theta: usize, rng: &mut Rng) -> Vec<usize> {
+        let theta = theta.min(self.clients.len());
+        rng.sample_indices(self.clients.len(), theta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Interactions;
+
+    fn fleet() -> Fleet {
+        let train =
+            Interactions::from_pairs(3, 6, vec![(0, 1), (0, 4), (1, 2), (2, 0), (2, 5)]).unwrap();
+        let test = Interactions::from_pairs(3, 6, vec![(0, 2), (1, 0)]).unwrap();
+        Fleet::from_split(&Split { train, test })
+    }
+
+    #[test]
+    fn builds_one_client_per_user() {
+        let f = fleet();
+        assert_eq!(f.len(), 3);
+        assert_eq!(f.client(0).train_items, vec![1, 4]);
+        assert_eq!(f.client(0).test_items, vec![2]);
+        assert_eq!(f.client(2).test_items, Vec::<u32>::new());
+        assert!(f.client(1).p.is_empty());
+    }
+
+    #[test]
+    fn selected_row_maps_and_stays_sorted() {
+        let f = fleet();
+        // selected items: [1, 4, 5] -> positions 0, 1, 2
+        let mut sel_pos = vec![-1i32; 6];
+        sel_pos[1] = 0;
+        sel_pos[4] = 1;
+        sel_pos[5] = 2;
+        assert_eq!(f.client(0).selected_row(&sel_pos), vec![0, 1]);
+        assert_eq!(f.client(1).selected_row(&sel_pos), Vec::<u32>::new());
+        assert_eq!(f.client(2).selected_row(&sel_pos), vec![2]);
+    }
+
+    #[test]
+    fn sampling_distinct_and_capped() {
+        let f = fleet();
+        let mut rng = Rng::seed_from_u64(4);
+        let picks = f.sample_participants(10, &mut rng);
+        assert_eq!(picks.len(), 3); // capped at fleet size
+        let mut s = picks.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 3);
+    }
+}

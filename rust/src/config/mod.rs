@@ -1,0 +1,521 @@
+//! Typed run configuration + the TOML-subset parser behind it.
+//!
+//! [`RunConfig::paper_defaults`] pins every hyper-parameter from the
+//! paper's Table 3 and §6.1; config files and `--set path=value` CLI
+//! overrides layer on top. A unit test pins the defaults against the
+//! paper so a drive-by edit cannot silently change the reproduction.
+
+mod parser;
+
+pub use parser::{Doc, Value};
+
+use anyhow::{bail, Context, Result};
+
+/// Which item-selection strategy drives the payload optimization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// FCF-BTS: Bayesian Thompson Sampling over items (the paper's method).
+    Bts,
+    /// FCF-Random: uniform random subset (paper baseline).
+    Random,
+    /// FCF (Original): full payload every round (paper upper bound).
+    Full,
+    /// ε-greedy over the same reward signal (ablation, not in the paper).
+    EpsGreedy,
+    /// UCB1 over the same reward signal (ablation, not in the paper).
+    Ucb1,
+}
+
+impl Strategy {
+    pub fn parse(s: &str) -> Result<Strategy> {
+        Ok(match s {
+            "bts" => Strategy::Bts,
+            "random" => Strategy::Random,
+            "full" => Strategy::Full,
+            "eps_greedy" => Strategy::EpsGreedy,
+            "ucb1" => Strategy::Ucb1,
+            other => bail!("unknown bandit strategy `{other}` (bts|random|full|eps_greedy|ucb1)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Bts => "bts",
+            Strategy::Random => "random",
+            Strategy::Full => "full",
+            Strategy::EpsGreedy => "eps_greedy",
+            Strategy::Ucb1 => "ucb1",
+        }
+    }
+}
+
+/// How the server combines the Θ buffered client gradients (Eq. 4 sums;
+/// `Mean` is an ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Aggregate {
+    Sum,
+    Mean,
+}
+
+/// Dataset selection & synthesis parameters (§5, Table 2).
+#[derive(Debug, Clone)]
+pub struct DatasetConfig {
+    /// One of the calibrated synthetic presets (`movielens`, `lastfm`,
+    /// `mind`, `synthetic-small`) or `file` to load `path`.
+    pub name: String,
+    /// For `name = "file"`: path + format (`movielens|lastfm|mind`).
+    pub path: Option<String>,
+    pub format: Option<String>,
+    /// Synthetic-generation knobs (ignored when loading from file).
+    pub users: usize,
+    pub items: usize,
+    pub interactions: usize,
+    /// Zipf exponent for item popularity.
+    pub zipf_s: f64,
+    /// Planted latent rank of the ground-truth model.
+    pub planted_rank: usize,
+    /// Fraction of each user's interactions placed in the train split.
+    pub train_frac: f64,
+    /// Minimum interactions per user (MIND applies >= 5 clicks).
+    pub min_user_interactions: usize,
+}
+
+/// FCF model hyper-parameters (Table 3).
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub k: usize,
+    pub lam: f32,
+    pub alpha: f32,
+    pub eta: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// Std-dev of the Q/P initialization.
+    pub init_scale: f32,
+}
+
+/// Bandit / payload-selection parameters (§3, §6.1).
+#[derive(Debug, Clone)]
+pub struct BanditConfig {
+    pub strategy: Strategy,
+    /// Prior mean μ_θ (paper: 0).
+    pub mu0: f64,
+    /// Prior precision τ_θ (paper: 10000).
+    pub tau0: f64,
+    /// Reward regularization γ (paper: 0.999).
+    pub gamma: f64,
+    /// ε for the ε-greedy ablation.
+    pub eps_greedy: f64,
+    /// Scale the gradient fed to Eq. 13 by 1/Θ (`true`, default) or use
+    /// the raw Eq. 4 sum (`false`). The paper's reward scale is not
+    /// recoverable from the text; 1/Θ keeps rewards commensurate with the
+    /// N(0, 1/τ_θ) prior so BTS explores as §7 describes (convergence at
+    /// ~400–450 iterations instead of locking onto the round-1 subset).
+    pub mean_scaled_rewards: bool,
+    /// Standardize each round's rewards to zero mean / unit variance
+    /// before the posterior update (default true; ablation switch).
+    pub normalize_rewards: bool,
+    /// Scale applied after standardization: the exploitation strength of
+    /// the posterior relative to the N(0, 1/τ_θ) prior. Calibrated so the
+    /// BTS-vs-Random separation matches the paper's Figure 2 shape (see
+    /// EXPERIMENTS.md §Calibration).
+    pub reward_std_scale: f64,
+    /// Eq. 13 cosine weighting: `"literal"` = the printed `(1 − γt)`,
+    /// `"power"` = `(1 − γ^t)` matching the paper's textual description.
+    /// See the `reward` module docs for the discrepancy.
+    pub cosine_weight: &'static str,
+    /// What `t` means in Eq. 13: `"per_item"` (this item's observation
+    /// count; default) or `"global"` (FL iteration). See `reward` docs.
+    pub time_base: &'static str,
+}
+
+/// Federated training loop parameters (§6.1–6.2).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// FL iterations per model rebuild (paper: 1000).
+    pub iterations: usize,
+    /// Θ — client updates buffered before a global update.
+    pub theta: usize,
+    /// Fraction of items transmitted per round, M_s / M.
+    /// 1.0 == FCF (Original); 0.10 == "90% payload reduction".
+    pub payload_fraction: f64,
+    /// Independent model rebuilds averaged in reports (paper: 3).
+    pub rebuilds: usize,
+    /// Global-metric smoothing window (paper: last 10 values).
+    pub metric_window: usize,
+    pub aggregate: Aggregate,
+    /// Evaluate contributing clients' test metrics every round (paper
+    /// semantics). Setting >1 evaluates every n-th round to save time.
+    pub eval_every: usize,
+}
+
+/// Payload / network model (Table 1).
+#[derive(Debug, Clone)]
+pub struct SimNetConfig {
+    /// Bits per model parameter (paper's Table 1 uses 64).
+    pub bits_per_param: u32,
+    /// Simulated link bandwidth in Mbit/s.
+    pub bandwidth_mbps: f64,
+    /// Simulated per-message latency in ms.
+    pub latency_ms: f64,
+}
+
+/// Execution backend knobs.
+#[derive(Debug, Clone)]
+pub struct RuntimeConfig {
+    pub artifacts_dir: String,
+    /// `pjrt` (AOT artifacts through the XLA CPU client) or `reference`
+    /// (pure-Rust differential backend, used by tests and available as a
+    /// no-artifacts fallback).
+    pub backend: String,
+    /// Worker threads for a parallel client fleet. The PJRT client handle
+    /// is thread-local (`Rc` internally), so values > 1 are reserved for
+    /// the reference backend / future per-thread-backend fleets; the
+    /// batched executor already amortizes B = 64 clients per call.
+    pub threads: usize,
+}
+
+/// Complete run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub seed: u64,
+    pub dataset: DatasetConfig,
+    pub model: ModelConfig,
+    pub bandit: BanditConfig,
+    pub train: TrainConfig,
+    pub simnet: SimNetConfig,
+    pub runtime: RuntimeConfig,
+}
+
+impl RunConfig {
+    /// Defaults exactly as the paper's Table 3 / §6.1 prescribe, with the
+    /// Movielens-scale synthetic dataset.
+    pub fn paper_defaults() -> RunConfig {
+        RunConfig {
+            seed: 2021,
+            dataset: DatasetConfig {
+                name: "movielens".into(),
+                path: None,
+                format: None,
+                users: 6040,
+                items: 3064,
+                interactions: 914_676,
+                zipf_s: 1.05,
+                planted_rank: 16,
+                train_frac: 0.8,
+                min_user_interactions: 5,
+            },
+            model: ModelConfig {
+                k: 25,
+                lam: 1.0,
+                alpha: 4.0,
+                eta: 0.01,
+                beta1: 0.1,
+                beta2: 0.99,
+                eps: 1e-8,
+                init_scale: 0.1,
+            },
+            bandit: BanditConfig {
+                strategy: Strategy::Bts,
+                mu0: 0.0,
+                tau0: 10_000.0,
+                gamma: 0.999,
+                eps_greedy: 0.1,
+                mean_scaled_rewards: true,
+                normalize_rewards: true,
+                reward_std_scale: 5.0,
+                cosine_weight: "power",
+                time_base: "per_item",
+            },
+            train: TrainConfig {
+                iterations: 1000,
+                theta: 100,
+                payload_fraction: 0.10,
+                rebuilds: 3,
+                metric_window: 10,
+                aggregate: Aggregate::Sum,
+                eval_every: 1,
+            },
+            simnet: SimNetConfig {
+                bits_per_param: 64,
+                bandwidth_mbps: 20.0,
+                latency_ms: 50.0,
+            },
+            runtime: RuntimeConfig {
+                artifacts_dir: "artifacts".into(),
+                backend: "pjrt".into(),
+                threads: 4,
+            },
+        }
+    }
+
+    /// Apply one of the three paper dataset presets (Table 2 scales + the
+    /// per-dataset Θ from §6.1).
+    pub fn apply_dataset_preset(&mut self, name: &str) -> Result<()> {
+        match name {
+            "movielens" => {
+                self.dataset.users = 6040;
+                self.dataset.items = 3064;
+                self.dataset.interactions = 914_676;
+                self.dataset.zipf_s = 1.05;
+                self.train.theta = 100;
+            }
+            "lastfm" => {
+                self.dataset.users = 1892;
+                self.dataset.items = 17_632;
+                self.dataset.interactions = 92_834;
+                self.dataset.zipf_s = 1.1;
+                self.train.theta = 100;
+            }
+            "mind" => {
+                self.dataset.users = 16_026;
+                self.dataset.items = 6923;
+                self.dataset.interactions = 163_137;
+                self.dataset.zipf_s = 1.3;
+                self.train.theta = 500;
+            }
+            "synthetic-small" => {
+                self.dataset.users = 256;
+                self.dataset.items = 512;
+                self.dataset.interactions = 8_192;
+                self.dataset.zipf_s = 1.1;
+                self.train.theta = 32;
+            }
+            "file" => {}
+            other => bail!("unknown dataset preset `{other}`"),
+        }
+        self.dataset.name = name.to_string();
+        Ok(())
+    }
+
+    /// Build from a parsed document layered over the paper defaults.
+    pub fn from_doc(doc: &Doc) -> Result<RunConfig> {
+        let mut cfg = RunConfig::paper_defaults();
+        if let Some(v) = doc.get("dataset.name") {
+            cfg.apply_dataset_preset(v.as_str()?)?;
+        }
+        macro_rules! take {
+            ($path:literal, $target:expr, $conv:ident) => {
+                if let Some(v) = doc.get($path) {
+                    $target = v.$conv().context(concat!("config key ", $path))?;
+                }
+            };
+        }
+        take!("seed", cfg.seed, as_u64);
+        if let Some(v) = doc.get("dataset.path") {
+            cfg.dataset.path = Some(v.as_str()?.to_string());
+        }
+        if let Some(v) = doc.get("dataset.format") {
+            cfg.dataset.format = Some(v.as_str()?.to_string());
+        }
+        take!("dataset.users", cfg.dataset.users, as_usize);
+        take!("dataset.items", cfg.dataset.items, as_usize);
+        take!("dataset.interactions", cfg.dataset.interactions, as_usize);
+        take!("dataset.zipf_s", cfg.dataset.zipf_s, as_f64);
+        take!("dataset.planted_rank", cfg.dataset.planted_rank, as_usize);
+        take!("dataset.train_frac", cfg.dataset.train_frac, as_f64);
+        take!(
+            "dataset.min_user_interactions",
+            cfg.dataset.min_user_interactions,
+            as_usize
+        );
+        take!("model.k", cfg.model.k, as_usize);
+        take!("model.lam", cfg.model.lam, as_f32);
+        take!("model.alpha", cfg.model.alpha, as_f32);
+        take!("model.eta", cfg.model.eta, as_f32);
+        take!("model.beta1", cfg.model.beta1, as_f32);
+        take!("model.beta2", cfg.model.beta2, as_f32);
+        take!("model.eps", cfg.model.eps, as_f32);
+        take!("model.init_scale", cfg.model.init_scale, as_f32);
+        if let Some(v) = doc.get("bandit.strategy") {
+            cfg.bandit.strategy = Strategy::parse(v.as_str()?)?;
+        }
+        take!("bandit.mu0", cfg.bandit.mu0, as_f64);
+        take!("bandit.tau0", cfg.bandit.tau0, as_f64);
+        take!("bandit.gamma", cfg.bandit.gamma, as_f64);
+        take!("bandit.eps_greedy", cfg.bandit.eps_greedy, as_f64);
+        take!(
+            "bandit.mean_scaled_rewards",
+            cfg.bandit.mean_scaled_rewards,
+            as_bool
+        );
+        take!("bandit.normalize_rewards", cfg.bandit.normalize_rewards, as_bool);
+        take!("bandit.reward_std_scale", cfg.bandit.reward_std_scale, as_f64);
+        if let Some(v) = doc.get("bandit.cosine_weight") {
+            cfg.bandit.cosine_weight = match v.as_str()? {
+                "power" => "power",
+                "literal" => "literal",
+                other => bail!("unknown cosine_weight `{other}` (power|literal)"),
+            };
+        }
+        if let Some(v) = doc.get("bandit.time_base") {
+            cfg.bandit.time_base = match v.as_str()? {
+                "per_item" => "per_item",
+                "global" => "global",
+                other => bail!("unknown time_base `{other}` (per_item|global)"),
+            };
+        }
+        take!("train.iterations", cfg.train.iterations, as_usize);
+        take!("train.theta", cfg.train.theta, as_usize);
+        take!("train.payload_fraction", cfg.train.payload_fraction, as_f64);
+        take!("train.rebuilds", cfg.train.rebuilds, as_usize);
+        take!("train.metric_window", cfg.train.metric_window, as_usize);
+        take!("train.eval_every", cfg.train.eval_every, as_usize);
+        if let Some(v) = doc.get("train.aggregate") {
+            cfg.train.aggregate = match v.as_str()? {
+                "sum" => Aggregate::Sum,
+                "mean" => Aggregate::Mean,
+                other => bail!("unknown aggregate `{other}` (sum|mean)"),
+            };
+        }
+        take!("simnet.bits_per_param", cfg.simnet.bits_per_param, as_u64_u32);
+        take!("simnet.bandwidth_mbps", cfg.simnet.bandwidth_mbps, as_f64);
+        take!("simnet.latency_ms", cfg.simnet.latency_ms, as_f64);
+        if let Some(v) = doc.get("runtime.artifacts_dir") {
+            cfg.runtime.artifacts_dir = v.as_str()?.to_string();
+        }
+        if let Some(v) = doc.get("runtime.backend") {
+            cfg.runtime.backend = v.as_str()?.to_string();
+        }
+        take!("runtime.threads", cfg.runtime.threads, as_usize);
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Parse a config file's text (layered over paper defaults).
+    pub fn from_toml_str(text: &str) -> Result<RunConfig> {
+        RunConfig::from_doc(&Doc::parse(text)?)
+    }
+
+    /// Sanity-check invariants the trainer depends on.
+    pub fn validate(&self) -> Result<()> {
+        if self.model.k == 0 {
+            bail!("model.k must be > 0");
+        }
+        if !(0.0..=1.0).contains(&self.train.payload_fraction) || self.train.payload_fraction == 0.0
+        {
+            bail!(
+                "train.payload_fraction must be in (0, 1], got {}",
+                self.train.payload_fraction
+            );
+        }
+        if self.train.theta == 0 {
+            bail!("train.theta must be > 0");
+        }
+        if !(0.0 < self.dataset.train_frac && self.dataset.train_frac < 1.0) {
+            bail!("dataset.train_frac must be in (0, 1)");
+        }
+        if self.train.metric_window == 0 {
+            bail!("train.metric_window must be > 0");
+        }
+        match self.runtime.backend.as_str() {
+            "pjrt" | "reference" => {}
+            other => bail!("unknown runtime.backend `{other}` (pjrt|reference)"),
+        }
+        Ok(())
+    }
+
+    /// Number of items transmitted per round for a catalog of `m` items
+    /// (M_s in the paper): at least 1, at most m.
+    pub fn selected_items(&self, m: usize) -> usize {
+        ((m as f64 * self.train.payload_fraction).round() as usize).clamp(1, m)
+    }
+}
+
+/// Extension trait shim so the `take!` macro can read u32 from i64.
+trait ValueExt {
+    fn as_u64_u32(&self) -> Result<u32>;
+}
+
+impl ValueExt for Value {
+    fn as_u64_u32(&self) -> Result<u32> {
+        Ok(u32::try_from(self.as_i64()?)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults_pin_table3() {
+        let c = RunConfig::paper_defaults();
+        assert_eq!(c.model.k, 25);
+        assert_eq!(c.model.lam, 1.0);
+        assert_eq!(c.model.alpha, 4.0);
+        assert_eq!(c.model.beta1, 0.1);
+        assert_eq!(c.model.beta2, 0.99);
+        assert_eq!(c.model.eta, 0.01);
+        assert_eq!(c.model.eps, 1e-8);
+        assert_eq!(c.bandit.mu0, 0.0);
+        assert_eq!(c.bandit.tau0, 10_000.0);
+        assert_eq!(c.bandit.gamma, 0.999);
+        assert_eq!(c.train.iterations, 1000);
+        assert_eq!(c.train.rebuilds, 3);
+        assert_eq!(c.train.metric_window, 10);
+    }
+
+    #[test]
+    fn dataset_presets_pin_table2_and_theta() {
+        let mut c = RunConfig::paper_defaults();
+        c.apply_dataset_preset("lastfm").unwrap();
+        assert_eq!((c.dataset.users, c.dataset.items), (1892, 17_632));
+        assert_eq!(c.dataset.interactions, 92_834);
+        assert_eq!(c.train.theta, 100);
+        c.apply_dataset_preset("mind").unwrap();
+        assert_eq!((c.dataset.users, c.dataset.items), (16_026, 6923));
+        assert_eq!(c.train.theta, 500);
+        assert!(c.apply_dataset_preset("bogus").is_err());
+    }
+
+    #[test]
+    fn from_toml_overrides() {
+        let cfg = RunConfig::from_toml_str(
+            r#"
+            seed = 7
+            [dataset]
+            name = "lastfm"
+            [train]
+            iterations = 50
+            payload_fraction = 0.05
+            [bandit]
+            strategy = "random"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.dataset.items, 17_632);
+        assert_eq!(cfg.train.iterations, 50);
+        assert_eq!(cfg.bandit.strategy, Strategy::Random);
+        assert_eq!(cfg.train.payload_fraction, 0.05);
+    }
+
+    #[test]
+    fn validation_rejects_bad_values() {
+        let mut c = RunConfig::paper_defaults();
+        c.train.payload_fraction = 0.0;
+        assert!(c.validate().is_err());
+        c.train.payload_fraction = 0.5;
+        c.runtime.backend = "cuda".into();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn selected_items_rounds_and_clamps() {
+        let mut c = RunConfig::paper_defaults();
+        c.train.payload_fraction = 0.10;
+        assert_eq!(c.selected_items(17_632), 1763);
+        c.train.payload_fraction = 1.0;
+        assert_eq!(c.selected_items(100), 100);
+        c.train.payload_fraction = 0.0001;
+        assert_eq!(c.selected_items(100), 1); // clamped to >= 1
+    }
+
+    #[test]
+    fn strategy_roundtrip() {
+        for s in ["bts", "random", "full", "eps_greedy", "ucb1"] {
+            assert_eq!(Strategy::parse(s).unwrap().name(), s);
+        }
+        assert!(Strategy::parse("nope").is_err());
+    }
+}

@@ -1,0 +1,305 @@
+//! Hand-rolled TOML-subset parser (serde/toml unavailable offline).
+//!
+//! Supported grammar — everything the launcher's config files need:
+//!
+//! ```toml
+//! # comment
+//! [section]            # one level of nesting
+//! int_key    = 42
+//! float_key  = 0.99
+//! bool_key   = true
+//! string_key = "bts"
+//! list_key   = [25, 50, 75]
+//! ```
+//!
+//! Values are typed [`Value`]s; lookup is by `"section.key"` path.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A parsed scalar or list value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    List(Vec<Value>),
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Int(v) => write!(f, "{v}"),
+            Value::Float(v) => write!(f, "{v}"),
+            Value::Bool(v) => write!(f, "{v}"),
+            Value::Str(v) => write!(f, "\"{v}\""),
+            Value::List(vs) => {
+                write!(f, "[")?;
+                for (i, v) in vs.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+impl Value {
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            Value::Int(v) => Ok(*v),
+            _ => bail!("expected integer, got {self}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let v = self.as_i64()?;
+        usize::try_from(v).map_err(|_| anyhow!("expected non-negative integer, got {v}"))
+    }
+
+    pub fn as_u64(&self) -> Result<u64> {
+        let v = self.as_i64()?;
+        u64::try_from(v).map_err(|_| anyhow!("expected non-negative integer, got {v}"))
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Float(v) => Ok(*v),
+            Value::Int(v) => Ok(*v as f64),
+            _ => bail!("expected float, got {self}"),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<f32> {
+        Ok(self.as_f64()? as f32)
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(v) => Ok(*v),
+            _ => bail!("expected bool, got {self}"),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(v) => Ok(v),
+            _ => bail!("expected string, got {self}"),
+        }
+    }
+
+    pub fn as_list(&self) -> Result<&[Value]> {
+        match self {
+            Value::List(v) => Ok(v),
+            _ => bail!("expected list, got {self}"),
+        }
+    }
+}
+
+/// Parsed document: `"section.key"` (or bare `"key"`) → [`Value`].
+#[derive(Debug, Clone, Default)]
+pub struct Doc {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    /// Parse a TOML-subset document.
+    pub fn parse(text: &str) -> Result<Doc> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated section header", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected `key = value`", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let value = parse_value(val.trim())
+                .with_context(|| format!("line {}: bad value for `{key}`", lineno + 1))?;
+            let path = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            entries.insert(path, value);
+        }
+        Ok(Doc { entries })
+    }
+
+    /// Look up by full path, e.g. `"train.iterations"`.
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.entries.get(path)
+    }
+
+    /// Insert or overwrite (used by CLI `--set section.key=value`).
+    pub fn set(&mut self, path: &str, value: Value) {
+        self.entries.insert(path.to_string(), value);
+    }
+
+    /// Parse and apply a `path=value` override string.
+    pub fn apply_override(&mut self, spec: &str) -> Result<()> {
+        let (path, raw) = spec
+            .split_once('=')
+            .ok_or_else(|| anyhow!("override `{spec}`: expected path=value"))?;
+        let value = parse_value(raw.trim())
+            .or_else(|_| Ok::<Value, anyhow::Error>(Value::Str(raw.trim().to_string())))?;
+        self.set(path.trim(), value);
+        Ok(())
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &Value)> {
+        self.entries.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated list"))?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in split_list(trimmed) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::List(items));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow!("unterminated string"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(v) = s.parse::<i64>() {
+        return Ok(Value::Int(v));
+    }
+    if let Ok(v) = s.parse::<f64>() {
+        return Ok(Value::Float(v));
+    }
+    bail!("cannot parse `{s}`")
+}
+
+/// Split a list body on commas (no nested lists needed by our configs).
+fn split_list(s: &str) -> Vec<&str> {
+    s.split(',').collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = Doc::parse(
+            r#"
+            seed = 42            # top-level
+            [train]
+            iterations = 1000
+            gamma = 0.999
+            resume = false
+            [bandit]
+            strategy = "bts"
+            levels = [25, 50, 75]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("seed").unwrap().as_i64().unwrap(), 42);
+        assert_eq!(doc.get("train.iterations").unwrap().as_usize().unwrap(), 1000);
+        assert!((doc.get("train.gamma").unwrap().as_f64().unwrap() - 0.999).abs() < 1e-12);
+        assert!(!doc.get("train.resume").unwrap().as_bool().unwrap());
+        assert_eq!(doc.get("bandit.strategy").unwrap().as_str().unwrap(), "bts");
+        let levels = doc.get("bandit.levels").unwrap().as_list().unwrap();
+        assert_eq!(levels.len(), 3);
+        assert_eq!(levels[1].as_i64().unwrap(), 50);
+    }
+
+    #[test]
+    fn comment_inside_string_preserved() {
+        let doc = Doc::parse(r##"name = "a#b""##).unwrap();
+        assert_eq!(doc.get("name").unwrap().as_str().unwrap(), "a#b");
+    }
+
+    #[test]
+    fn overrides() {
+        let mut doc = Doc::parse("[train]\niterations = 10\n").unwrap();
+        doc.apply_override("train.iterations=99").unwrap();
+        doc.apply_override("bandit.strategy=bts").unwrap();
+        assert_eq!(doc.get("train.iterations").unwrap().as_i64().unwrap(), 99);
+        assert_eq!(doc.get("bandit.strategy").unwrap().as_str().unwrap(), "bts");
+    }
+
+    #[test]
+    fn errors_are_reported_with_lines() {
+        let err = Doc::parse("[broken\n").unwrap_err();
+        assert!(err.to_string().contains("line 1"));
+        let err = Doc::parse("justakey\n").unwrap_err();
+        assert!(err.to_string().contains("key = value"));
+    }
+
+    #[test]
+    fn type_mismatches_error() {
+        let doc = Doc::parse("x = 5\n").unwrap();
+        assert!(doc.get("x").unwrap().as_str().is_err());
+        assert!(doc.get("x").unwrap().as_bool().is_err());
+        assert_eq!(doc.get("x").unwrap().as_f64().unwrap(), 5.0);
+    }
+
+    #[test]
+    fn empty_list() {
+        let doc = Doc::parse("xs = []\n").unwrap();
+        assert!(doc.get("xs").unwrap().as_list().unwrap().is_empty());
+    }
+}

@@ -1,0 +1,293 @@
+//! Dataset substrate: implicit-feedback interaction matrices, per-user
+//! train/test splits, real-format loaders and calibrated synthetic
+//! generators (paper §5, Table 2).
+//!
+//! The paper's three datasets (Movielens-1M, Last-FM, MIND-small) are
+//! downloads we cannot perform offline; [`synthetic`] generates
+//! statistically calibrated stand-ins (same user/item/interaction counts
+//! and sparsity, Zipf popularity, planted low-rank structure) and
+//! [`loaders`] parses the real file formats so the actual datasets drop in
+//! unchanged. See DESIGN.md §Substitutions.
+
+pub mod loaders;
+pub mod synthetic;
+
+use anyhow::{bail, Result};
+
+use crate::rng::Rng;
+
+/// Binary implicit-feedback interactions in CSR form (rows = users).
+///
+/// `x_ij = 1` iff user `i` interacted with item `j` (paper §2.1: all
+/// ratings/counts collapse to 1; missing entries are 0).
+#[derive(Debug, Clone)]
+pub struct Interactions {
+    num_users: usize,
+    num_items: usize,
+    row_ptr: Vec<usize>,
+    col_idx: Vec<u32>,
+}
+
+impl Interactions {
+    /// Build from (user, item) pairs; duplicates collapse to one.
+    pub fn from_pairs(
+        num_users: usize,
+        num_items: usize,
+        mut pairs: Vec<(u32, u32)>,
+    ) -> Result<Interactions> {
+        for &(u, i) in &pairs {
+            if u as usize >= num_users || i as usize >= num_items {
+                bail!("interaction ({u}, {i}) out of bounds ({num_users} x {num_items})");
+            }
+        }
+        pairs.sort_unstable();
+        pairs.dedup();
+        let mut row_ptr = vec![0usize; num_users + 1];
+        for &(u, _) in &pairs {
+            row_ptr[u as usize + 1] += 1;
+        }
+        for u in 0..num_users {
+            row_ptr[u + 1] += row_ptr[u];
+        }
+        let col_idx = pairs.into_iter().map(|(_, i)| i).collect();
+        Ok(Interactions {
+            num_users,
+            num_items,
+            row_ptr,
+            col_idx,
+        })
+    }
+
+    pub fn num_users(&self) -> usize {
+        self.num_users
+    }
+
+    pub fn num_items(&self) -> usize {
+        self.num_items
+    }
+
+    /// Total observed interactions.
+    pub fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// Sorted item indices for one user.
+    pub fn user_items(&self, u: usize) -> &[u32] {
+        &self.col_idx[self.row_ptr[u]..self.row_ptr[u + 1]]
+    }
+
+    pub fn user_degree(&self, u: usize) -> usize {
+        self.row_ptr[u + 1] - self.row_ptr[u]
+    }
+
+    /// Binary membership test (binary search on the sorted row).
+    pub fn contains(&self, u: usize, item: u32) -> bool {
+        self.user_items(u).binary_search(&item).is_ok()
+    }
+
+    /// Percentage of *unobserved* cells, as the paper's Table 2 reports.
+    pub fn sparsity_pct(&self) -> f64 {
+        let total = self.num_users as f64 * self.num_items as f64;
+        100.0 * (1.0 - self.nnz() as f64 / total)
+    }
+
+    /// Interaction count per item (TopList ranking, Table 2 diagnostics).
+    pub fn item_popularity(&self) -> Vec<u32> {
+        let mut pop = vec![0u32; self.num_items];
+        for &i in &self.col_idx {
+            pop[i as usize] += 1;
+        }
+        pop
+    }
+
+    /// Items ranked by descending popularity (ties by index for
+    /// determinism) — the TopList baseline's recommendation order.
+    pub fn popularity_ranking(&self) -> Vec<u32> {
+        let pop = self.item_popularity();
+        let mut order: Vec<u32> = (0..self.num_items as u32).collect();
+        order.sort_by(|&a, &b| {
+            pop[b as usize]
+                .cmp(&pop[a as usize])
+                .then(a.cmp(&b))
+        });
+        order
+    }
+
+    /// Users with at least `min` interactions (paper: MIND keeps >= 5
+    /// clicks). Returns a dataset re-indexed over the kept users.
+    pub fn filter_min_user_interactions(&self, min: usize) -> Interactions {
+        let kept: Vec<usize> = (0..self.num_users)
+            .filter(|&u| self.user_degree(u) >= min)
+            .collect();
+        let mut pairs = Vec::with_capacity(self.nnz());
+        for (new_u, &old_u) in kept.iter().enumerate() {
+            for &i in self.user_items(old_u) {
+                pairs.push((new_u as u32, i));
+            }
+        }
+        Interactions::from_pairs(kept.len(), self.num_items, pairs)
+            .expect("filtered pairs are in bounds")
+    }
+
+    /// Summary statistics in the shape of the paper's Table 2.
+    pub fn stats(&self) -> DatasetStats {
+        DatasetStats {
+            users: self.num_users,
+            items: self.num_items,
+            interactions: self.nnz(),
+            sparsity_pct: self.sparsity_pct(),
+        }
+    }
+
+    /// Per-user random split into train/test (paper §6.2: 80% train).
+    ///
+    /// Every user keeps at least one train item; users with >= 2 items get
+    /// at least one test item, matching the paper's per-user evaluation.
+    pub fn split(&self, train_frac: f64, rng: &mut Rng) -> Split {
+        assert!((0.0..1.0).contains(&train_frac) && train_frac > 0.0);
+        let mut train_pairs = Vec::new();
+        let mut test_pairs = Vec::new();
+        for u in 0..self.num_users {
+            let mut items: Vec<u32> = self.user_items(u).to_vec();
+            rng.shuffle(&mut items);
+            let n = items.len();
+            if n == 0 {
+                continue;
+            }
+            let mut n_train = ((n as f64) * train_frac).round() as usize;
+            n_train = n_train.clamp(1, n);
+            if n >= 2 && n_train == n {
+                n_train = n - 1; // guarantee a non-empty test set
+            }
+            for (idx, &i) in items.iter().enumerate() {
+                if idx < n_train {
+                    train_pairs.push((u as u32, i));
+                } else {
+                    test_pairs.push((u as u32, i));
+                }
+            }
+        }
+        Split {
+            train: Interactions::from_pairs(self.num_users, self.num_items, train_pairs)
+                .expect("train pairs in bounds"),
+            test: Interactions::from_pairs(self.num_users, self.num_items, test_pairs)
+                .expect("test pairs in bounds"),
+        }
+    }
+}
+
+/// Table 2-shaped dataset summary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetStats {
+    pub users: usize,
+    pub items: usize,
+    pub interactions: usize,
+    pub sparsity_pct: f64,
+}
+
+impl std::fmt::Display for DatasetStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "users={} items={} interactions={} sparsity={:.2}%",
+            self.users, self.items, self.interactions, self.sparsity_pct
+        )
+    }
+}
+
+/// Per-user train/test split.
+#[derive(Debug, Clone)]
+pub struct Split {
+    pub train: Interactions,
+    pub test: Interactions,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Interactions {
+        // 3 users x 5 items
+        Interactions::from_pairs(
+            3,
+            5,
+            vec![(0, 1), (0, 3), (1, 0), (1, 1), (1, 2), (1, 4), (2, 4)],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn csr_layout() {
+        let x = toy();
+        assert_eq!(x.nnz(), 7);
+        assert_eq!(x.user_items(0), &[1, 3]);
+        assert_eq!(x.user_items(1), &[0, 1, 2, 4]);
+        assert_eq!(x.user_items(2), &[4]);
+        assert!(x.contains(0, 3));
+        assert!(!x.contains(0, 2));
+    }
+
+    #[test]
+    fn duplicates_collapse() {
+        let x = Interactions::from_pairs(1, 3, vec![(0, 1), (0, 1), (0, 2)]).unwrap();
+        assert_eq!(x.nnz(), 2);
+    }
+
+    #[test]
+    fn out_of_bounds_rejected() {
+        assert!(Interactions::from_pairs(1, 2, vec![(0, 2)]).is_err());
+        assert!(Interactions::from_pairs(1, 2, vec![(1, 0)]).is_err());
+    }
+
+    #[test]
+    fn sparsity_matches_formula() {
+        let x = toy();
+        let expected = 100.0 * (1.0 - 7.0 / 15.0);
+        assert!((x.sparsity_pct() - expected).abs() < 1e-9);
+    }
+
+    #[test]
+    fn popularity_ranking_descending() {
+        let x = toy();
+        let pop = x.item_popularity();
+        assert_eq!(pop, vec![1, 2, 1, 1, 2]);
+        let rank = x.popularity_ranking();
+        assert_eq!(rank[0], 1); // pop 2, lower index first on ties
+        assert_eq!(rank[1], 4);
+    }
+
+    #[test]
+    fn filter_min_interactions() {
+        let x = toy();
+        let f = x.filter_min_user_interactions(2);
+        assert_eq!(f.num_users(), 2);
+        assert_eq!(f.user_items(0), &[1, 3]);
+        assert_eq!(f.user_items(1), &[0, 1, 2, 4]);
+    }
+
+    #[test]
+    fn split_preserves_interactions_and_disjoint() {
+        let mut rng = Rng::seed_from_u64(1);
+        let x = toy();
+        let s = x.split(0.8, &mut rng);
+        assert_eq!(s.train.nnz() + s.test.nnz(), x.nnz());
+        for u in 0..3 {
+            assert!(s.train.user_degree(u) >= 1);
+            for &i in s.test.user_items(u) {
+                assert!(!s.train.contains(u, i), "leak u={u} i={i}");
+                assert!(x.contains(u, i));
+            }
+        }
+        // user 1 has 4 items -> at least one test item
+        assert!(s.test.user_degree(1) >= 1);
+    }
+
+    #[test]
+    fn split_single_item_user_goes_to_train() {
+        let mut rng = Rng::seed_from_u64(2);
+        let x = Interactions::from_pairs(1, 3, vec![(0, 2)]).unwrap();
+        let s = x.split(0.8, &mut rng);
+        assert_eq!(s.train.nnz(), 1);
+        assert_eq!(s.test.nnz(), 0);
+    }
+}

@@ -1,0 +1,384 @@
+//! Paper-reproduction experiment harness (§6–7).
+//!
+//! One generator per table/figure in the paper's evaluation:
+//!
+//! | id | function | output |
+//! |----|----------|--------|
+//! | Table 1 | [`table1`] | payload vs. #items rows |
+//! | Table 2 | [`table2`] | synthetic-dataset stats vs. paper targets |
+//! | Figure 2 | [`fig2`] | metric vs. payload-reduction CSV per dataset |
+//! | Table 4 | [`table4`] | 90%-reduction detail, markdown |
+//! | Figure 3 | [`fig3`] | convergence curves CSV per dataset |
+//!
+//! Paper-scale runs (1000 iterations × 3 rebuilds × 8 levels × 3 datasets)
+//! are hours of CPU; [`Scale`] shrinks users/items/iterations while
+//! preserving the comparisons' *shape* (see DESIGN.md §4). EXPERIMENTS.md
+//! records which scale produced the logged numbers.
+
+mod runner;
+
+pub use runner::{run_strategies_on_split, run_rebuilds, StrategyOutcome};
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::config::{RunConfig, Strategy};
+use crate::data::DatasetStats;
+use crate::metrics::{diff_pct, impr_pct, MetricSet, RebuildStats};
+use crate::rng::Rng;
+use crate::server::load_dataset;
+use crate::simnet::{human_bytes, table1_rows};
+use crate::telemetry::CsvWriter;
+use crate::info;
+
+/// The paper's payload-reduction grid (§7).
+pub const REDUCTIONS_PCT: &[u32] = &[25, 50, 75, 80, 85, 90, 95, 98];
+
+/// The paper's three dataset presets.
+pub const DATASETS: &[&str] = &["movielens", "lastfm", "mind"];
+
+/// Scaling knobs for reduced-cost reproduction runs.
+#[derive(Debug, Clone, Copy)]
+pub struct Scale {
+    /// Multiplier on users/items/interactions of each preset.
+    pub dataset: f64,
+    /// FL iterations per rebuild (paper: 1000).
+    pub iterations: usize,
+    /// Model rebuilds (paper: 3).
+    pub rebuilds: usize,
+    /// Evaluate every n-th round (paper: every round).
+    pub eval_every: usize,
+}
+
+impl Scale {
+    /// Paper-faithful scale (hours of CPU for the full grid).
+    pub fn paper() -> Scale {
+        Scale {
+            dataset: 1.0,
+            iterations: 1000,
+            rebuilds: 3,
+            eval_every: 1,
+        }
+    }
+
+    /// Default reduced scale for `make experiments` — minutes, same shape.
+    pub fn reduced() -> Scale {
+        Scale {
+            dataset: 0.25,
+            iterations: 250,
+            rebuilds: 2,
+            eval_every: 5,
+        }
+    }
+
+    /// Tiny smoke scale for tests.
+    pub fn smoke() -> Scale {
+        Scale {
+            dataset: 0.05,
+            iterations: 20,
+            rebuilds: 1,
+            eval_every: 4,
+        }
+    }
+
+    /// Apply to a config that already has a dataset preset set.
+    pub fn apply(&self, cfg: &mut RunConfig) {
+        let s = self.dataset;
+        cfg.dataset.users = ((cfg.dataset.users as f64 * s).round() as usize).max(32);
+        cfg.dataset.items = ((cfg.dataset.items as f64 * s).round() as usize).max(64);
+        cfg.dataset.interactions =
+            ((cfg.dataset.interactions as f64 * s).round() as usize).max(512);
+        cfg.train.theta = ((cfg.train.theta as f64 * s).round() as usize).clamp(8, cfg.dataset.users);
+        cfg.train.iterations = self.iterations;
+        cfg.train.rebuilds = self.rebuilds;
+        cfg.train.eval_every = self.eval_every;
+    }
+}
+
+/// Base config for a dataset preset at a given scale.
+pub fn experiment_config(
+    dataset: &str,
+    scale: &Scale,
+    backend: &str,
+    seed: u64,
+) -> Result<RunConfig> {
+    let mut cfg = RunConfig::paper_defaults();
+    cfg.apply_dataset_preset(dataset)?;
+    scale.apply(&mut cfg);
+    cfg.runtime.backend = backend.to_string();
+    cfg.seed = seed;
+    Ok(cfg)
+}
+
+// ---------------------------------------------------------------------------
+// Table 1
+
+/// Print + write the paper's Table 1 (payload vs. catalog size).
+pub fn table1(out_dir: &Path) -> Result<()> {
+    let mut csv = CsvWriter::create(out_dir.join("table1.csv"), &["items", "bytes", "human"])?;
+    println!("Table 1 — FCF payload vs. number of items (K=20, 64-bit):");
+    for (items, bytes) in table1_rows() {
+        println!("  {:>10} items -> {:>12} ({})", items, bytes, human_bytes(bytes));
+        csv.row(&[items.to_string(), bytes.to_string(), human_bytes(bytes)])?;
+    }
+    csv.flush()
+}
+
+// ---------------------------------------------------------------------------
+// Table 2
+
+/// Paper's Table 2 targets for comparison output.
+pub fn paper_table2(dataset: &str) -> Option<DatasetStats> {
+    match dataset {
+        "movielens" => Some(DatasetStats {
+            users: 6040,
+            items: 3064,
+            interactions: 914_676,
+            sparsity_pct: 96.05,
+        }),
+        "lastfm" => Some(DatasetStats {
+            users: 1892,
+            items: 17_632,
+            interactions: 92_834,
+            sparsity_pct: 99.78,
+        }),
+        "mind" => Some(DatasetStats {
+            users: 16_026,
+            items: 6923,
+            interactions: 163_137,
+            sparsity_pct: 99.89,
+        }),
+        _ => None,
+    }
+}
+
+/// Generate each synthetic dataset at the given scale and report its
+/// stats next to the paper's Table 2 numbers.
+pub fn table2(out_dir: &Path, scale: &Scale) -> Result<()> {
+    let mut csv = CsvWriter::create(
+        out_dir.join("table2.csv"),
+        &[
+            "dataset", "users", "items", "interactions", "sparsity_pct",
+            "paper_users", "paper_items", "paper_interactions", "paper_sparsity_pct",
+        ],
+    )?;
+    println!("Table 2 — synthetic datasets vs. paper targets (scale={}):", scale.dataset);
+    for ds in DATASETS {
+        let cfg = experiment_config(ds, scale, "reference", 2021)?;
+        let mut rng = Rng::seed_from_u64(cfg.seed);
+        let data = load_dataset(&cfg, &mut rng)?;
+        let s = data.stats();
+        let p = paper_table2(ds).unwrap();
+        println!("  {ds:<10} ours: {s}");
+        println!("  {ds:<10} paper: {p}");
+        csv.row(&[
+            ds.to_string(),
+            s.users.to_string(),
+            s.items.to_string(),
+            s.interactions.to_string(),
+            format!("{:.2}", s.sparsity_pct),
+            p.users.to_string(),
+            p.items.to_string(),
+            p.interactions.to_string(),
+            format!("{:.2}", p.sparsity_pct),
+        ])?;
+    }
+    csv.flush()
+}
+
+// ---------------------------------------------------------------------------
+// Figure 2
+
+/// Metric-vs-payload-reduction sweep for one dataset (paper Figure 2).
+pub fn fig2(out_dir: &Path, dataset: &str, scale: &Scale, backend: &str) -> Result<()> {
+    let header = [
+        "dataset", "method", "reduction_pct",
+        "precision", "recall", "f1", "map",
+        "precision_std", "recall_std", "f1_std", "map_std",
+    ];
+    let mut csv = CsvWriter::create(out_dir.join(format!("fig2_{dataset}.csv")), &header)?;
+    let mut write = |method: &str, red: u32, st: &RebuildStats| -> Result<()> {
+        let m = st.mean();
+        let s = st.std();
+        csv.row(&[
+            dataset.to_string(),
+            method.to_string(),
+            red.to_string(),
+            format!("{:.4}", m.precision),
+            format!("{:.4}", m.recall),
+            format!("{:.4}", m.f1),
+            format!("{:.4}", m.map),
+            format!("{:.4}", s.precision),
+            format!("{:.4}", s.recall),
+            format!("{:.4}", s.f1),
+            format!("{:.4}", s.map),
+        ])
+    };
+
+    // Upper bound (full payload) + TopList are reduction-independent.
+    let outcome = run_rebuilds(dataset, scale, backend, &[Strategy::Full], 1.0)?;
+    write("fcf", 0, &outcome.by_strategy["full"])?;
+    write("toplist", 0, &outcome.toplist)?;
+    info!("fig2 {dataset}: FCF (full) {}", outcome.by_strategy["full"].mean());
+
+    for &red in REDUCTIONS_PCT {
+        let fraction = 1.0 - red as f64 / 100.0;
+        let outcome = run_rebuilds(
+            dataset,
+            scale,
+            backend,
+            &[Strategy::Bts, Strategy::Random],
+            fraction,
+        )?;
+        write("fcf-bts", red, &outcome.by_strategy["bts"])?;
+        write("fcf-random", red, &outcome.by_strategy["random"])?;
+        info!(
+            "fig2 {dataset} @{red}%: bts={} random={}",
+            outcome.by_strategy["bts"].mean(),
+            outcome.by_strategy["random"].mean()
+        );
+    }
+    csv.flush()
+}
+
+// ---------------------------------------------------------------------------
+// Table 4
+
+/// 90%-payload-reduction detail table (paper Table 4), markdown output.
+pub fn table4(out_dir: &Path, scale: &Scale, backend: &str) -> Result<()> {
+    let mut md = String::from(
+        "# Table 4 reproduction — 90% payload reduction\n\n\
+         Mean ± sd over rebuilds; Diff% vs FCF (Eq. 16), Impr% vs baselines (Eq. 15).\n\n",
+    );
+    for ds in DATASETS {
+        let full = run_rebuilds(ds, scale, backend, &[Strategy::Full], 1.0)?;
+        let opt = run_rebuilds(ds, scale, backend, &[Strategy::Bts, Strategy::Random], 0.10)?;
+        let fcf = &full.by_strategy["full"];
+        let bts = &opt.by_strategy["bts"];
+        let rnd = &opt.by_strategy["random"];
+        let top = &full.toplist;
+
+        md.push_str(&format!("## {ds}\n\n"));
+        md.push_str("| | Precision | Recall | F1 | MAP |\n|---|---|---|---|---|\n");
+        let fmt_row = |name: &str, st: &RebuildStats| {
+            let m = st.mean();
+            let s = st.std();
+            format!(
+                "| {name} | {:.4}±{:.4} | {:.4}±{:.4} | {:.4}±{:.4} | {:.4}±{:.4} |\n",
+                m.precision, s.precision, m.recall, s.recall, m.f1, s.f1, m.map, s.map
+            )
+        };
+        md.push_str(&fmt_row("FCF", fcf));
+        md.push_str(&fmt_row("FCF-BTS", bts));
+        md.push_str(&fmt_row("FCF-Random", rnd));
+        md.push_str(&fmt_row("TopList", top));
+        let pct_row = |name: &str, f: &dyn Fn(f64, f64) -> f64, a: &MetricSet, b: &MetricSet| {
+            format!(
+                "| {name} | {:.2} | {:.2} | {:.2} | {:.2} |\n",
+                f(a.precision, b.precision),
+                f(a.recall, b.recall),
+                f(a.f1, b.f1),
+                f(a.map, b.map)
+            )
+        };
+        let (bm, fm, rm, tm) = (bts.mean(), fcf.mean(), rnd.mean(), top.mean());
+        md.push_str(&pct_row("FCF-BTS vs. FCF (Diff%)", &diff_pct, &bm, &fm));
+        md.push_str(&pct_row("FCF-BTS vs. FCF-Random (Impr%)", &impr_pct, &bm, &rm));
+        md.push_str(&pct_row("FCF-BTS vs. TopList (Impr%)", &impr_pct, &bm, &tm));
+        md.push('\n');
+        println!("table4 {ds}: FCF={fm} BTS={bm} Random={rm} TopList={tm}");
+    }
+    std::fs::create_dir_all(out_dir)?;
+    std::fs::write(out_dir.join("table4.md"), md)?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Figure 3
+
+/// Convergence curves at 90% reduction (paper Figure 3): smoothed metrics
+/// per FL iteration for FCF / FCF-BTS / FCF-Random.
+pub fn fig3(out_dir: &Path, dataset: &str, scale: &Scale, backend: &str) -> Result<()> {
+    let header = ["dataset", "method", "iter", "precision", "recall", "f1", "map"];
+    let mut csv = CsvWriter::create(out_dir.join(format!("fig3_{dataset}.csv")), &header)?;
+    let cfg = experiment_config(dataset, scale, backend, 2021)?;
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let data = load_dataset(&cfg, &mut rng)?;
+    let split = data.split(cfg.dataset.train_frac, &mut rng);
+
+    for (method, strategy, fraction) in [
+        ("fcf", Strategy::Full, 1.0),
+        ("fcf-bts", Strategy::Bts, 0.10),
+        ("fcf-random", Strategy::Random, 0.10),
+    ] {
+        let mut cfg_run = cfg.clone();
+        cfg_run.bandit.strategy = strategy;
+        cfg_run.train.payload_fraction = fraction;
+        let runtime = crate::runtime::shared_runtime(&cfg_run)?;
+        let mut trainer =
+            crate::server::Trainer::with_split_and_runtime(&cfg_run, split.clone(), runtime)?;
+        let report = trainer.run()?;
+        for rec in &report.history {
+            if rec.iter % cfg.train.eval_every.max(1) != 0 {
+                continue;
+            }
+            csv.row(&[
+                dataset.to_string(),
+                method.to_string(),
+                rec.iter.to_string(),
+                format!("{:.4}", rec.smoothed.precision),
+                format!("{:.4}", rec.smoothed.recall),
+                format!("{:.4}", rec.smoothed.f1),
+                format!("{:.4}", rec.smoothed.map),
+            ])?;
+        }
+        info!("fig3 {dataset} {method}: final {}", report.final_metrics);
+    }
+    csv.flush()
+}
+
+/// Run every experiment at the given scale into `out_dir`.
+pub fn run_all(out_dir: &Path, scale: &Scale, backend: &str) -> Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    table1(out_dir)?;
+    table2(out_dir, scale)?;
+    for ds in DATASETS {
+        fig2(out_dir, ds, scale, backend)?;
+        fig3(out_dir, ds, scale, backend)?;
+    }
+    table4(out_dir, scale, backend)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scales_apply_sanely() {
+        let mut cfg = RunConfig::paper_defaults();
+        cfg.apply_dataset_preset("lastfm").unwrap();
+        Scale::reduced().apply(&mut cfg);
+        assert_eq!(cfg.train.iterations, 250);
+        assert!(cfg.dataset.users < 1892 && cfg.dataset.users >= 32);
+        assert!(cfg.dataset.items < 17_632 && cfg.dataset.items >= 64);
+        assert!(cfg.train.theta <= cfg.dataset.users);
+    }
+
+    #[test]
+    fn paper_table2_covers_presets() {
+        for ds in DATASETS {
+            assert!(paper_table2(ds).is_some());
+        }
+        assert!(paper_table2("bogus").is_none());
+    }
+
+    #[test]
+    fn experiment_config_valid_for_all_datasets() {
+        for ds in DATASETS {
+            let cfg = experiment_config(ds, &Scale::smoke(), "reference", 1).unwrap();
+            cfg.validate().unwrap();
+        }
+    }
+}

@@ -1,0 +1,63 @@
+//! # fedpayload — payload-optimized federated recommender systems
+//!
+//! Production-shaped reproduction of *"A Payload Optimization Method for
+//! Federated Recommender Systems"* (Khan, Flanagan, Tan, Alamgir,
+//! Ammad-ud-din — RecSys 2021, DOI 10.1145/3460231.3474257).
+//!
+//! The paper's system, **FCF-BTS**, reduces the per-round communication
+//! payload of Federated Collaborative Filtering by letting a server-side
+//! Bayesian Thompson Sampling bandit choose which *subset* of the global
+//! item-factor matrix `Q` to transmit each round, guided by a composite
+//! reward computed from the gradients the clients return (paper Eq. 13–14).
+//!
+//! ## Architecture (three layers, python never on the hot path)
+//!
+//! * **L3 (this crate)** — the coordinator: FL server loop, bandit item
+//!   selection, reward engine, server-side Adam, Θ-threshold aggregation,
+//!   simulated client fleet, payload accounting, metrics ([`server`],
+//!   [`bandit`], [`reward`], [`optim`], [`client`], [`simnet`]).
+//! * **L2 (python/compile/model.py)** — the FCF client compute graph in
+//!   JAX (user solve Eq. 3, item gradients Eq. 5–6, scores), AOT-lowered
+//!   once to HLO text under `artifacts/`.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the compute
+//!   hot spots, lowered inside the L2 graphs.
+//!
+//! [`runtime`] loads the HLO-text artifacts, compiles them once on the
+//! PJRT CPU client (`xla` crate) and executes them from the round loop.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use fedpayload::config::RunConfig;
+//! use fedpayload::server::Trainer;
+//!
+//! let mut cfg = RunConfig::paper_defaults();
+//! cfg.dataset.name = "synthetic-small".into();
+//! cfg.train.iterations = 50;
+//! let mut trainer = Trainer::from_config(&cfg).unwrap();
+//! let report = trainer.run().unwrap();
+//! println!("final MAP = {:.4}", report.final_metrics.map);
+//! ```
+//!
+//! See `examples/` for runnable scenarios and `DESIGN.md` for the full
+//! system inventory and the paper-reproduction index.
+
+pub mod bandit;
+pub mod cli;
+pub mod client;
+pub mod config;
+pub mod data;
+pub mod experiments;
+pub mod linalg;
+pub mod metrics;
+pub mod optim;
+pub mod reward;
+pub mod rng;
+pub mod runtime;
+pub mod server;
+pub mod simnet;
+pub mod telemetry;
+
+/// Crate-wide result alias (anyhow is the only error substrate available
+/// offline; module-level error enums wrap into it).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,185 @@
+//! Small dense linear algebra substrate.
+//!
+//! The coordinator needs only modest linear algebra on the host: the
+//! K×K Cholesky solve that cross-checks the CG artifact (paper Eq. 3),
+//! cosine similarity for the reward (Eq. 13), and a few vector helpers.
+//! K = 25 in the paper, so everything here is cache-resident and simple;
+//! the *hot* math runs in the AOT-compiled artifacts, not here.
+
+mod dense;
+
+pub use dense::Mat;
+
+/// Dot product.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Euclidean norm.
+pub fn norm(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+/// `y += alpha * x`.
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Cosine similarity with the zero-vector convention used by the reward
+/// engine: if either vector is (numerically) zero the similarity is 0,
+/// matching scipy's behaviour of treating it as undefined → no signal.
+pub fn cosine_sim(a: &[f32], b: &[f32]) -> f32 {
+    let (na, nb) = (norm(a), norm(b));
+    if na <= f32::EPSILON || nb <= f32::EPSILON {
+        return 0.0;
+    }
+    (dot(a, b) / (na * nb)).clamp(-1.0, 1.0)
+}
+
+/// Cosine similarity in f64 between an f64 and an f32 vector — used by
+/// the reward engine, whose squared-gradient trace can span scales f32
+/// cannot represent (see `reward` module docs on the literal Eq. 14).
+pub fn cosine_sim_f64_f32(a: &[f64], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+    for (&x, &y) in a.iter().zip(b) {
+        let y = y as f64;
+        dot += x * y;
+        na += x * x;
+        nb += y * y;
+    }
+    if na <= f64::MIN_POSITIVE || nb <= f64::MIN_POSITIVE {
+        return 0.0;
+    }
+    (dot / (na.sqrt() * nb.sqrt())).clamp(-1.0, 1.0)
+}
+
+/// Sum of absolute differences, Σ_k |a_k − b_k| (Eq. 13 second term).
+pub fn l1_dist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
+}
+
+/// Solve `(A + lam I) x = b` for SPD `A` (k×k, row-major) via Cholesky.
+///
+/// Host-side oracle for the CG `solve` artifact; also used by the pure-Rust
+/// reference backend in [`crate::runtime::reference`].
+pub fn cholesky_solve(a: &Mat, lam: f32, b: &[f32]) -> Vec<f32> {
+    let k = a.rows();
+    assert_eq!(a.cols(), k);
+    assert_eq!(b.len(), k);
+    // Factor A + lam I = L L^T
+    let mut l = vec![0.0f64; k * k];
+    for i in 0..k {
+        for j in 0..=i {
+            let mut sum = a.get(i, j) as f64 + if i == j { lam as f64 } else { 0.0 };
+            for p in 0..j {
+                sum -= l[i * k + p] * l[j * k + p];
+            }
+            if i == j {
+                assert!(sum > 0.0, "cholesky: matrix not SPD (pivot {sum})");
+                l[i * k + i] = sum.sqrt();
+            } else {
+                l[i * k + j] = sum / l[j * k + j];
+            }
+        }
+    }
+    // Forward solve L y = b
+    let mut y = vec![0.0f64; k];
+    for i in 0..k {
+        let mut sum = b[i] as f64;
+        for p in 0..i {
+            sum -= l[i * k + p] * y[p];
+        }
+        y[i] = sum / l[i * k + i];
+    }
+    // Back solve L^T x = y
+    let mut x = vec![0.0f64; k];
+    for i in (0..k).rev() {
+        let mut sum = y[i];
+        for p in (i + 1)..k {
+            sum -= l[p * k + i] * x[p];
+        }
+        x[i] = sum / l[i * k + i];
+    }
+    x.into_iter().map(|v| v as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_norm_axpy() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [4.0, 5.0, 6.0];
+        assert_eq!(dot(&a, &b), 32.0);
+        assert!((norm(&[3.0, 4.0]) - 5.0).abs() < 1e-6);
+        let mut y = [1.0, 1.0, 1.0];
+        axpy(2.0, &a, &mut y);
+        assert_eq!(y, [3.0, 5.0, 7.0]);
+    }
+
+    #[test]
+    fn cosine_basics() {
+        assert!((cosine_sim(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-6);
+        assert!((cosine_sim(&[1.0, 0.0], &[0.0, 1.0])).abs() < 1e-6);
+        assert!((cosine_sim(&[1.0, 0.0], &[-1.0, 0.0]) + 1.0).abs() < 1e-6);
+        assert_eq!(cosine_sim(&[0.0, 0.0], &[1.0, 2.0]), 0.0);
+    }
+
+    #[test]
+    fn l1_dist_basics() {
+        assert_eq!(l1_dist(&[1.0, -2.0], &[3.0, 2.0]), 6.0);
+        assert_eq!(l1_dist(&[0.0; 4], &[0.0; 4]), 0.0);
+    }
+
+    #[test]
+    fn cholesky_solves_identity() {
+        let a = Mat::zeros(4, 4);
+        let b = vec![1.0, 2.0, 3.0, 4.0];
+        let x = cholesky_solve(&a, 2.0, &b); // 2I x = b
+        for (xi, bi) in x.iter().zip(&b) {
+            assert!((xi - bi / 2.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn cholesky_solves_random_spd() {
+        use crate::rng::Rng;
+        let mut rng = Rng::seed_from_u64(21);
+        let k = 8;
+        // A = G G^T (PSD) + lam I handled inside
+        let mut g = Mat::zeros(k, k);
+        for i in 0..k {
+            for j in 0..k {
+                g.set(i, j, rng.normal() as f32);
+            }
+        }
+        let mut a = Mat::zeros(k, k);
+        for i in 0..k {
+            for j in 0..k {
+                let mut s = 0.0;
+                for p in 0..k {
+                    s += g.get(i, p) * g.get(j, p);
+                }
+                a.set(i, j, s);
+            }
+        }
+        let b: Vec<f32> = (0..k).map(|i| (i as f32) - 3.0).collect();
+        let lam = 0.5;
+        let x = cholesky_solve(&a, lam, &b);
+        // residual check
+        for i in 0..k {
+            let mut r = -b[i] + lam * x[i];
+            for j in 0..k {
+                r += a.get(i, j) * x[j];
+            }
+            assert!(r.abs() < 1e-3, "residual {r}");
+        }
+    }
+}

@@ -1,0 +1,219 @@
+//! `fedpayload` launcher — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!
+//! * `train`       — run one FCF training build and print the report.
+//! * `experiments` — regenerate the paper's tables/figures into `--out-dir`
+//!                   (`all` | `table1` | `table2` | `fig2` | `fig3` | `table4`).
+//! * `info`        — print artifact manifest + config resolution.
+//!
+//! Common options: `--config <file.toml>`, repeated `--set path=value`
+//! overrides, `--dataset <preset>`, `--strategy <bts|random|full|...>`,
+//! `--backend <pjrt|reference>`, `--scale <paper|reduced|smoke>`,
+//! `--log-level <debug|info|warn|error>`.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use anyhow::{bail, Context, Result};
+
+use fedpayload::cli::Args;
+use fedpayload::config::{Doc, RunConfig, Strategy};
+use fedpayload::experiments::{self, Scale};
+use fedpayload::server::Trainer;
+use fedpayload::simnet::human_bytes;
+use fedpayload::telemetry;
+
+const USAGE: &str = "\
+fedpayload — payload-optimized federated recommender (FCF-BTS, RecSys'21)
+
+USAGE:
+  fedpayload train [--dataset <preset>] [--strategy <s>] [--iterations N]
+                   [--payload-fraction F] [--theta N] [--seed N]
+                   [--backend pjrt|reference] [--config file.toml]
+                   [--set path=value ...]
+  fedpayload experiments <all|table1|table2|fig2|fig3|table4>
+                   [--out-dir results] [--scale paper|reduced|smoke]
+                   [--backend pjrt|reference]
+  fedpayload info  [--config file.toml]
+  fedpayload help
+";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(argv)?;
+    if let Some(level) = args.opt("log-level") {
+        match telemetry::parse_level(level) {
+            Some(l) => telemetry::set_log_level(l),
+            None => bail!("bad --log-level `{level}`"),
+        }
+    }
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("experiments") => cmd_experiments(&args),
+        Some("info") => cmd_info(&args),
+        Some("help") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand `{other}`\n{USAGE}"),
+    }
+}
+
+/// Resolve the effective config: file -> --set overrides -> typed flags.
+fn resolve_config(args: &Args) -> Result<RunConfig> {
+    let mut doc = match args.opt("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading config {path}"))?;
+            Doc::parse(&text)?
+        }
+        None => Doc::default(),
+    };
+    // `--dataset` is a preset: apply it BEFORE --set overrides so that
+    // e.g. `--dataset movielens --set dataset.items=766` keeps the 766.
+    if let Some(ds) = args.opt("dataset") {
+        doc.set("dataset.name", fedpayload::config::Value::Str(ds.to_string()));
+    }
+    for spec in args.opt_all("set") {
+        doc.apply_override(spec)?;
+    }
+    let mut cfg = RunConfig::from_doc(&doc)?;
+    if let Some(s) = args.opt("strategy") {
+        cfg.bandit.strategy = Strategy::parse(s)?;
+    }
+    if let Some(n) = args.opt_parse::<usize>("iterations")? {
+        cfg.train.iterations = n;
+    }
+    if let Some(f) = args.opt_parse::<f64>("payload-fraction")? {
+        cfg.train.payload_fraction = f;
+    }
+    if let Some(n) = args.opt_parse::<usize>("theta")? {
+        cfg.train.theta = n;
+    }
+    if let Some(n) = args.opt_parse::<u64>("seed")? {
+        cfg.seed = n;
+    }
+    if let Some(b) = args.opt("backend") {
+        cfg.runtime.backend = b.to_string();
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = resolve_config(args)?;
+    let mut trainer = Trainer::from_config(&cfg)?;
+    let report = trainer.run()?;
+    println!(
+        "run complete: strategy={} iterations={} M={} M_s={} ({:.0}% payload reduction)",
+        report.strategy,
+        report.iterations,
+        report.m,
+        report.m_s,
+        report.payload_reduction_pct()
+    );
+    println!("final metrics (window mean): {}", report.final_metrics);
+    println!(
+        "traffic: down={} ({} msgs), up={} ({} msgs), simulated transfer {:.1}s",
+        human_bytes(report.ledger.down_bytes),
+        report.ledger.down_msgs,
+        human_bytes(report.ledger.up_bytes),
+        report.ledger.up_msgs,
+        report.ledger.sim_secs
+    );
+    println!("wall time: {:.2}s; phase breakdown:", report.wall_secs);
+    for (name, secs, count) in &report.phase_times {
+        println!("  {name:<8} {secs:>8.3}s over {count} calls");
+    }
+    Ok(())
+}
+
+fn parse_scale(args: &Args) -> Result<Scale> {
+    Ok(match args.opt("scale").unwrap_or("reduced") {
+        "paper" => Scale::paper(),
+        "reduced" => Scale::reduced(),
+        "smoke" => Scale::smoke(),
+        other => bail!("bad --scale `{other}` (paper|reduced|smoke)"),
+    })
+}
+
+fn cmd_experiments(args: &Args) -> Result<()> {
+    let what = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let out_dir = PathBuf::from(args.opt("out-dir").unwrap_or("results"));
+    let scale = parse_scale(args)?;
+    let backend = args.opt("backend").unwrap_or("pjrt");
+    std::fs::create_dir_all(&out_dir)?;
+    match what {
+        "all" => experiments::run_all(&out_dir, &scale, backend)?,
+        "table1" => experiments::table1(&out_dir)?,
+        "table2" => experiments::table2(&out_dir, &scale)?,
+        "fig2" => {
+            for ds in experiments::DATASETS {
+                experiments::fig2(&out_dir, ds, &scale, backend)?;
+            }
+        }
+        "fig3" => {
+            for ds in experiments::DATASETS {
+                experiments::fig3(&out_dir, ds, &scale, backend)?;
+            }
+        }
+        "table4" => experiments::table4(&out_dir, &scale, backend)?,
+        other => bail!("unknown experiment `{other}`"),
+    }
+    println!("experiment outputs written to {}", out_dir.display());
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let cfg = resolve_config(args)?;
+    println!("resolved config:");
+    println!("  seed               = {}", cfg.seed);
+    println!(
+        "  dataset            = {} ({} users x {} items, {} interactions)",
+        cfg.dataset.name, cfg.dataset.users, cfg.dataset.items, cfg.dataset.interactions
+    );
+    println!(
+        "  model              = K={} lam={} alpha={} eta={}",
+        cfg.model.k, cfg.model.lam, cfg.model.alpha, cfg.model.eta
+    );
+    println!(
+        "  bandit             = {} (mu0={}, tau0={}, gamma={})",
+        cfg.bandit.strategy.name(),
+        cfg.bandit.mu0,
+        cfg.bandit.tau0,
+        cfg.bandit.gamma
+    );
+    println!(
+        "  train              = {} iters, theta={}, payload_fraction={}",
+        cfg.train.iterations, cfg.train.theta, cfg.train.payload_fraction
+    );
+    println!("  backend            = {}", cfg.runtime.backend);
+    match fedpayload::runtime::Manifest::load(std::path::Path::new(&cfg.runtime.artifacts_dir)) {
+        Ok(m) => {
+            println!(
+                "artifacts: B={} K={} tiles={:?} ({} artifacts)",
+                m.b,
+                m.k,
+                m.tiles,
+                m.artifacts.len()
+            );
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    Ok(())
+}

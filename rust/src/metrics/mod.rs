@@ -1,0 +1,368 @@
+//! Recommendation metrics (paper §6.2): Precision, Recall, F1 and MAP for
+//! the top-10 of a 100-item recommendation list, normalized by the
+//! theoretically best achievable value per user, plus the Impr%/Diff%
+//! summary statistics (Eq. 15–16) and the TopList baseline evaluator.
+
+use crate::data::Interactions;
+
+/// Top-k cut the paper reports (top 10 predicted recommendations).
+pub const TOP_K: usize = 10;
+/// Recommendation list length (candidates considered).
+pub const LIST_LEN: usize = 100;
+
+/// One metric quadruple.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct MetricSet {
+    pub precision: f64,
+    pub recall: f64,
+    pub f1: f64,
+    pub map: f64,
+}
+
+impl MetricSet {
+    pub fn zeros() -> MetricSet {
+        MetricSet::default()
+    }
+
+    fn add(&mut self, other: &MetricSet) {
+        self.precision += other.precision;
+        self.recall += other.recall;
+        self.f1 += other.f1;
+        self.map += other.map;
+    }
+
+    fn scale(&mut self, s: f64) {
+        self.precision *= s;
+        self.recall *= s;
+        self.f1 *= s;
+        self.map *= s;
+    }
+
+    /// Element-wise ratio (used for theoretical-best normalization).
+    fn normalized_by(&self, best: &MetricSet) -> MetricSet {
+        let safe = |x: f64, b: f64| if b > 0.0 { (x / b).min(1.0) } else { 0.0 };
+        MetricSet {
+            precision: safe(self.precision, best.precision),
+            recall: safe(self.recall, best.recall),
+            f1: safe(self.f1, best.f1),
+            map: safe(self.map, best.map),
+        }
+    }
+}
+
+impl std::fmt::Display for MetricSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "P={:.4} R={:.4} F1={:.4} MAP={:.4}",
+            self.precision, self.recall, self.f1, self.map
+        )
+    }
+}
+
+/// Raw (un-normalized) metrics @ TOP_K for one ranked recommendation list.
+///
+/// `ranked` must already exclude the user's train items. Relevance =
+/// membership in `test_items` (sorted).
+pub fn raw_metrics(ranked: &[u32], test_items: &[u32]) -> MetricSet {
+    if test_items.is_empty() {
+        return MetricSet::zeros();
+    }
+    let k = TOP_K.min(ranked.len());
+    let mut hits = 0usize;
+    let mut ap = 0.0f64;
+    for (i, &item) in ranked.iter().take(k).enumerate() {
+        if test_items.binary_search(&item).is_ok() {
+            hits += 1;
+            ap += hits as f64 / (i + 1) as f64; // precision@i+1 at each hit
+        }
+    }
+    let denom_ap = TOP_K.min(test_items.len()) as f64;
+    let precision = hits as f64 / TOP_K as f64;
+    let recall = hits as f64 / test_items.len() as f64;
+    let f1 = if precision + recall > 0.0 {
+        2.0 * precision * recall / (precision + recall)
+    } else {
+        0.0
+    };
+    MetricSet {
+        precision,
+        recall,
+        f1,
+        map: ap / denom_ap,
+    }
+}
+
+/// Theoretical best achievable metrics for a user with `n_test` test items
+/// (paper §6.2: recommend the test set itself, padding with random
+/// non-interacted items when the test set is smaller than the list).
+pub fn best_metrics(n_test: usize) -> MetricSet {
+    if n_test == 0 {
+        return MetricSet::zeros();
+    }
+    let hits = TOP_K.min(n_test);
+    let precision = hits as f64 / TOP_K as f64;
+    let recall = hits as f64 / n_test as f64;
+    let f1 = 2.0 * precision * recall / (precision + recall);
+    // perfect ranking: AP = 1 by construction
+    MetricSet {
+        precision,
+        recall,
+        f1,
+        map: 1.0,
+    }
+}
+
+/// Normalized metrics for one user given their ranked list.
+pub fn user_metrics(ranked: &[u32], test_items: &[u32]) -> Option<MetricSet> {
+    if test_items.is_empty() {
+        return None; // paper evaluates only users with test interactions
+    }
+    let raw = raw_metrics(ranked, test_items);
+    Some(raw.normalized_by(&best_metrics(test_items.len())))
+}
+
+/// Build the top-LIST_LEN ranked recommendation list for a user from dense
+/// scores, excluding their train items.
+pub fn rank_candidates(scores: &[f32], train_items: &[u32]) -> Vec<u32> {
+    let mut idx: Vec<u32> = (0..scores.len() as u32)
+        .filter(|i| train_items.binary_search(i).is_err())
+        .collect();
+    let cut = LIST_LEN.min(idx.len());
+    if cut == 0 {
+        return idx;
+    }
+    // partial select of the top LIST_LEN, then sort just that prefix
+    if idx.len() > cut {
+        idx.select_nth_unstable_by(cut - 1, |&a, &b| {
+            scores[b as usize]
+                .partial_cmp(&scores[a as usize])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        idx.truncate(cut);
+    }
+    idx.sort_unstable_by(|&a, &b| {
+        scores[b as usize]
+            .partial_cmp(&scores[a as usize])
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    idx
+}
+
+/// Mean of per-user metric sets (users yielding `None` are skipped).
+#[derive(Debug, Clone, Default)]
+pub struct MetricAccumulator {
+    sum: MetricSet,
+    count: usize,
+}
+
+impl MetricAccumulator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, m: &MetricSet) {
+        self.sum.add(m);
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    pub fn mean(&self) -> MetricSet {
+        let mut m = self.sum;
+        if self.count > 0 {
+            m.scale(1.0 / self.count as f64);
+        }
+        m
+    }
+}
+
+/// Mean ± standard deviation across model rebuilds (Table 4 rows).
+#[derive(Debug, Clone, Default)]
+pub struct RebuildStats {
+    samples: Vec<MetricSet>,
+}
+
+impl RebuildStats {
+    pub fn push(&mut self, m: MetricSet) {
+        self.samples.push(m);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> MetricSet {
+        let mut acc = MetricAccumulator::new();
+        for s in &self.samples {
+            acc.push(s);
+        }
+        acc.mean()
+    }
+
+    pub fn std(&self) -> MetricSet {
+        let n = self.samples.len();
+        if n < 2 {
+            return MetricSet::zeros();
+        }
+        let mean = self.mean();
+        let mut var = MetricSet::zeros();
+        for s in &self.samples {
+            var.precision += (s.precision - mean.precision).powi(2);
+            var.recall += (s.recall - mean.recall).powi(2);
+            var.f1 += (s.f1 - mean.f1).powi(2);
+            var.map += (s.map - mean.map).powi(2);
+        }
+        MetricSet {
+            precision: (var.precision / (n - 1) as f64).sqrt(),
+            recall: (var.recall / (n - 1) as f64).sqrt(),
+            f1: (var.f1 / (n - 1) as f64).sqrt(),
+            map: (var.map / (n - 1) as f64).sqrt(),
+        }
+    }
+}
+
+/// Relative improvement of `ours` over `baseline`, |Δ|/baseline × 100
+/// (paper Eq. 15, "Impr %").
+pub fn impr_pct(ours: f64, baseline: f64) -> f64 {
+    if baseline == 0.0 {
+        return 0.0;
+    }
+    ((ours - baseline) / baseline).abs() * 100.0
+}
+
+/// Relative difference of `ours` from `upper`, |Δ|/upper × 100
+/// (paper Eq. 16, "Diff %").
+pub fn diff_pct(ours: f64, upper: f64) -> f64 {
+    impr_pct(ours, upper)
+}
+
+/// TopList baseline (§6): recommend the globally most popular train items
+/// to every user, evaluated with the same normalized metrics.
+pub fn toplist_eval(train: &Interactions, test: &Interactions) -> MetricSet {
+    let ranking = train.popularity_ranking();
+    let mut acc = MetricAccumulator::new();
+    for u in 0..train.num_users() {
+        let test_items = test.user_items(u);
+        if test_items.is_empty() {
+            continue;
+        }
+        let train_items = train.user_items(u);
+        let list: Vec<u32> = ranking
+            .iter()
+            .copied()
+            .filter(|i| train_items.binary_search(i).is_err())
+            .take(LIST_LEN)
+            .collect();
+        if let Some(m) = user_metrics(&list, test_items) {
+            acc.push(&m);
+        }
+    }
+    acc.mean()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_ranking_is_normalized_to_one() {
+        // 5 test items, perfect list
+        let test = [3u32, 5, 7, 9, 11];
+        let ranked: Vec<u32> = test.iter().copied().chain([100, 101, 102, 103, 104]).collect();
+        let m = user_metrics(&ranked, &test).unwrap();
+        assert!((m.precision - 1.0).abs() < 1e-9);
+        assert!((m.recall - 1.0).abs() < 1e-9);
+        assert!((m.f1 - 1.0).abs() < 1e-9);
+        assert!((m.map - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_test_set_skipped() {
+        assert!(user_metrics(&[1, 2, 3], &[]).is_none());
+    }
+
+    #[test]
+    fn raw_metrics_partial_hits() {
+        // test items {1, 2}; ranked hits at positions 1 and 4 (0-based 0,3)
+        let m = raw_metrics(&[1, 9, 8, 2, 7, 6, 5, 4, 3, 0], &[1, 2]);
+        assert!((m.precision - 0.2).abs() < 1e-9);
+        assert!((m.recall - 1.0).abs() < 1e-9);
+        // AP = (1/1 + 2/4) / min(10, 2) = 0.75
+        assert!((m.map - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn best_metrics_small_test_set() {
+        let b = best_metrics(3);
+        assert!((b.precision - 0.3).abs() < 1e-9);
+        assert!((b.recall - 1.0).abs() < 1e-9);
+        assert!((b.map - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rank_candidates_excludes_train_and_orders() {
+        let scores = [0.1f32, 0.9, 0.5, 0.7, 0.3];
+        let ranked = rank_candidates(&scores, &[1]); // item 1 is train
+        assert_eq!(ranked[0], 3);
+        assert_eq!(ranked[1], 2);
+        assert!(!ranked.contains(&1));
+    }
+
+    #[test]
+    fn rank_candidates_truncates_to_list_len() {
+        let scores: Vec<f32> = (0..500).map(|i| (i % 97) as f32).collect();
+        let ranked = rank_candidates(&scores, &[]);
+        assert_eq!(ranked.len(), LIST_LEN);
+        // descending scores
+        for w in ranked.windows(2) {
+            assert!(scores[w[0] as usize] >= scores[w[1] as usize]);
+        }
+    }
+
+    #[test]
+    fn impr_and_diff_match_paper_formulas() {
+        assert!((impr_pct(0.3041, 0.2370) - 28.3122).abs() < 0.01);
+        assert!((diff_pct(0.3041, 0.3744) - 18.776).abs() < 0.01);
+        assert_eq!(impr_pct(0.5, 0.0), 0.0);
+    }
+
+    #[test]
+    fn rebuild_stats_mean_std() {
+        let mut rs = RebuildStats::default();
+        for p in [0.1, 0.2, 0.3] {
+            rs.push(MetricSet {
+                precision: p,
+                recall: p,
+                f1: p,
+                map: p,
+            });
+        }
+        assert!((rs.mean().precision - 0.2).abs() < 1e-12);
+        assert!((rs.std().precision - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn toplist_recommends_popular() {
+        use crate::data::Interactions;
+        // item 0 is most popular in train; user 2's test set contains it
+        let train = Interactions::from_pairs(
+            3,
+            4,
+            vec![(0, 0), (0, 1), (1, 0), (1, 2), (2, 3)],
+        )
+        .unwrap();
+        let test = Interactions::from_pairs(3, 4, vec![(2, 0)]).unwrap();
+        let m = toplist_eval(&train, &test);
+        assert!(m.precision > 0.0);
+        assert!(m.recall > 0.0);
+    }
+}

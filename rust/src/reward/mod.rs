@@ -1,0 +1,285 @@
+//! The paper's composite reward function (§3.2, Eq. 13–14).
+//!
+//! For each selected item j at FL iteration t, given the aggregated
+//! gradient column g = ∇ʲQ_t* (a K-vector):
+//!
+//! ```text
+//! r_t^j = w_cos(t) · cos(v_t^j, g)  +  (γ/t) · Σ_k |∇ʲQ_{t−1} − g|
+//! ```
+//!
+//! with v updated first (Alg. 1 line 14) by Eq. 14:
+//!
+//! ```text
+//! v_t^j = (β₂ v_{t−1}^j + (1−β₂) g²) / (1−β₂)
+//! ```
+//!
+//! and ∇ʲQ_{t−1} = the gradient stored the *last time j was selected*
+//! (Alg. 1 lines 5/18; zero before the first selection).
+//!
+//! ## Faithfulness notes (see DESIGN.md §1)
+//!
+//! * **Cosine weight.** The paper prints `(1 − γt)`, which is negative
+//!   from t ≥ 2 at γ = 0.999, yet the text says the cosine term
+//!   "increases the reward … with the increasing number of FL
+//!   iterations" — the behaviour of `(1 − γ^t)`. We default to the
+//!   textual behaviour ([`CosineWeight::Power`]) and expose the literal
+//!   formula ([`CosineWeight::Literal`]) for the ablation bench.
+//! * **Eq. 14's 1/(1−β₂).** Taken literally the update is
+//!   `v_t = 99 v_{t−1} + g²` at β₂ = 0.99 — geometric growth that
+//!   overflows f64 after ~150 selections. Cosine similarity is
+//!   scale-invariant, so we store v in f64 and renormalize when its
+//!   magnitude exceeds 1e50; rewards are unchanged. The Adam-style
+//!   bias-corrected variant is exposed as [`VRule::Adam`] for ablation.
+
+use crate::linalg::{cosine_sim_f64_f32, l1_dist};
+
+/// Which cosine-term weighting to use (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CosineWeight {
+    /// `1 − γ^t` — matches the paper's textual description (default).
+    Power,
+    /// `1 − γ·t` — the formula exactly as printed.
+    Literal,
+}
+
+/// Which Eq. 14 variant maintains the squared-gradient trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VRule {
+    /// `(β₂ v + (1−β₂) g²) / (1−β₂)` as printed, with renormalization.
+    Literal,
+    /// Adam's `v/(1−β₂^n)` bias correction (ablation).
+    Adam,
+}
+
+/// What `t` means in Eq. 13's weights (the paper is ambiguous: γ "scaled
+/// by the a factor t" with items entering Q* at different times).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TimeBase {
+    /// `t` = this item's observation count n_j: each item's
+    /// explore→exploit schedule advances with its own selections
+    /// (default — see EXPERIMENTS.md §Calibration).
+    PerItem,
+    /// `t` = the global FL iteration, as a flat reading of Alg. 1.
+    Global,
+}
+
+/// Reward engine: per-item gradient memory + squared-gradient trace.
+#[derive(Debug, Clone)]
+pub struct RewardEngine {
+    k: usize,
+    gamma: f64,
+    beta2: f64,
+    cosine_weight: CosineWeight,
+    v_rule: VRule,
+    time_base: TimeBase,
+    /// v^j traces, item-major (M × K), f64 for headroom (see module docs).
+    v: Vec<f64>,
+    /// ∇ʲQ stored at the item's last selection (Alg. 1 line 18), M × K.
+    last_grad: Vec<f32>,
+    /// Per-item count of Eq. 14 applications (for the Adam variant).
+    n: Vec<u32>,
+}
+
+/// Renormalization threshold for the literal Eq. 14 trace.
+const V_RENORM_LIMIT: f64 = 1e50;
+
+impl RewardEngine {
+    pub fn new(m: usize, k: usize, gamma: f64, beta2: f64) -> RewardEngine {
+        RewardEngine {
+            k,
+            gamma,
+            beta2,
+            cosine_weight: CosineWeight::Power,
+            v_rule: VRule::Literal,
+            time_base: TimeBase::PerItem,
+            v: vec![0.0; m * k],
+            last_grad: vec![0.0; m * k],
+            n: vec![0; m],
+        }
+    }
+
+    pub fn with_cosine_weight(mut self, w: CosineWeight) -> Self {
+        self.cosine_weight = w;
+        self
+    }
+
+    pub fn with_v_rule(mut self, r: VRule) -> Self {
+        self.v_rule = r;
+        self
+    }
+
+    pub fn with_time_base(mut self, tb: TimeBase) -> Self {
+        self.time_base = tb;
+        self
+    }
+
+    fn cos_weight(&self, t: u64) -> f64 {
+        match self.cosine_weight {
+            CosineWeight::Power => 1.0 - self.gamma.powi(t as i32),
+            CosineWeight::Literal => 1.0 - self.gamma * t as f64,
+        }
+    }
+
+    /// Process one item's aggregated gradient at FL iteration `t`
+    /// (1-based): update v (Eq. 14), compute r (Eq. 13), store the
+    /// gradient (Alg. 1 line 18). Returns r_t^j.
+    pub fn observe(&mut self, item: u32, t: u64, grad: &[f32]) -> f64 {
+        assert_eq!(grad.len(), self.k, "gradient must be a K-vector");
+        assert!(t >= 1, "FL iterations are 1-based");
+        let i = item as usize;
+        let vrow = &mut self.v[i * self.k..(i + 1) * self.k];
+
+        // Eq. 14 (Alg. 1 line 14) — update the squared-gradient trace.
+        self.n[i] += 1;
+        match self.v_rule {
+            VRule::Literal => {
+                let inv = 1.0 / (1.0 - self.beta2);
+                let mut maxabs = 0.0f64;
+                for (vk, &g) in vrow.iter_mut().zip(grad) {
+                    *vk = (self.beta2 * *vk + (1.0 - self.beta2) * (g as f64) * (g as f64)) * inv;
+                    maxabs = maxabs.max(vk.abs());
+                }
+                if maxabs > V_RENORM_LIMIT {
+                    // cosine is scale-invariant; keep direction only
+                    for vk in vrow.iter_mut() {
+                        *vk /= maxabs;
+                    }
+                }
+            }
+            VRule::Adam => {
+                let bc = 1.0 - self.beta2.powi(self.n[i] as i32);
+                for (vk, &g) in vrow.iter_mut().zip(grad) {
+                    // store the raw EMA; bias-correct on read
+                    *vk = self.beta2 * *vk + (1.0 - self.beta2) * (g as f64) * (g as f64);
+                    let _ = bc;
+                }
+            }
+        }
+
+        // Eq. 13 — composite reward. Cosine computed in f64: the literal
+        // Eq. 14 trace spans scales that overflow f32 (bias correction is
+        // scale-only, so the Adam variant needs no extra factor here).
+        let t_eff = match self.time_base {
+            TimeBase::PerItem => self.n[i] as u64,
+            TimeBase::Global => t,
+        };
+        let cos = cosine_sim_f64_f32(vrow, grad);
+        let prev = &self.last_grad[i * self.k..(i + 1) * self.k];
+        let l1 = l1_dist(prev, grad) as f64;
+        let r = self.cos_weight(t_eff) * cos + (self.gamma / t_eff as f64) * l1;
+
+        // Alg. 1 line 18 — remember this gradient for the next selection.
+        self.last_grad[i * self.k..(i + 1) * self.k].copy_from_slice(grad);
+        r
+    }
+
+    /// v trace for an item (tests/diagnostics).
+    pub fn v_trace(&self, item: u32) -> &[f64] {
+        let i = item as usize;
+        &self.v[i * self.k..(i + 1) * self.k]
+    }
+
+    /// Last stored gradient for an item (tests/diagnostics).
+    pub fn last_gradient(&self, item: u32) -> &[f32] {
+        let i = item as usize;
+        &self.last_grad[i * self.k..(i + 1) * self.k]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine(m: usize, k: usize) -> RewardEngine {
+        RewardEngine::new(m, k, 0.999, 0.99)
+    }
+
+    #[test]
+    fn first_observation_reward_is_l1_dominated() {
+        let mut e = engine(2, 3);
+        let g = [1.0f32, -2.0, 0.5];
+        let r = e.observe(0, 1, &g);
+        // t=1: cos weight = 1-0.999 = 0.001; v ∝ g² so cos(v, g) is some
+        // value in [-1,1]; l1 term = 0.999 * (1+2+0.5) = 3.4965
+        let l1_term = 0.999 * 3.5;
+        assert!((r - l1_term).abs() < 0.01, "r={r}");
+    }
+
+    #[test]
+    fn stable_gradients_earn_cosine_reward_late() {
+        let mut e = engine(1, 4);
+        let g = [0.5f32, 0.5, 0.5, 0.5];
+        // repeated identical gradients: v ∝ g², cos(v,g)=1 (all positive
+        // equal entries), l1 -> 0 after the first observation
+        let mut last = 0.0;
+        for t in 1..=500u64 {
+            last = e.observe(0, t, &g);
+        }
+        // w_cos(500) = 1-0.999^500 ≈ 0.393; l1 = 0
+        let expect = 1.0 - 0.999f64.powi(500);
+        assert!((last - expect).abs() < 1e-3, "last={last} expect={expect}");
+    }
+
+    #[test]
+    fn changing_gradients_earn_l1_reward_early() {
+        let mut e = engine(1, 2);
+        let r1 = e.observe(0, 1, &[10.0, -10.0]);
+        let r2 = e.observe(0, 2, &[-10.0, 10.0]);
+        // big immediate change: l1 = 40, weight γ/2
+        assert!(r2 > 0.999 / 2.0 * 40.0 - 1.0, "r2={r2}");
+        assert!(r1 > 0.0);
+    }
+
+    #[test]
+    fn last_gradient_updates_only_for_observed_item() {
+        let mut e = engine(3, 2);
+        e.observe(1, 1, &[1.0, 2.0]);
+        assert_eq!(e.last_gradient(1), &[1.0, 2.0]);
+        assert_eq!(e.last_gradient(0), &[0.0, 0.0]);
+        assert_eq!(e.last_gradient(2), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn literal_v_rule_never_overflows() {
+        let mut e = engine(1, 2).with_v_rule(VRule::Literal);
+        for t in 1..=5000u64 {
+            let r = e.observe(0, t, &[1.0, 1.0]);
+            assert!(r.is_finite(), "t={t} r={r}");
+        }
+        assert!(e.v_trace(0).iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn literal_cosine_weight_goes_negative() {
+        let mut e = engine(1, 2).with_cosine_weight(CosineWeight::Literal);
+        assert!(e.cos_weight(1) > 0.0 - 1e-9);
+        assert!(e.cos_weight(10) < 0.0);
+        // reward still finite and dominated by l1 early
+        let r = e.observe(0, 10, &[1.0, 1.0]);
+        assert!(r.is_finite());
+    }
+
+    #[test]
+    fn power_weight_increases_with_t() {
+        let e = engine(1, 2);
+        assert!(e.cos_weight(1) < e.cos_weight(10));
+        assert!(e.cos_weight(10) < e.cos_weight(1000));
+        assert!(e.cos_weight(1000) < 1.0);
+    }
+
+    #[test]
+    fn adam_v_rule_matches_literal_direction() {
+        // both rules produce v ∝ running square average direction; with a
+        // constant gradient their cosine rewards converge to the same value
+        let g = [0.3f32, 0.9];
+        let mut lit = engine(1, 2).with_v_rule(VRule::Literal);
+        let mut adam = engine(1, 2).with_v_rule(VRule::Adam);
+        let mut rl = 0.0;
+        let mut ra = 0.0;
+        for t in 1..=200u64 {
+            rl = lit.observe(0, t, &g);
+            ra = adam.observe(0, t, &g);
+        }
+        assert!((rl - ra).abs() < 1e-6, "rl={rl} ra={ra}");
+    }
+}

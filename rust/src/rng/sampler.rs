@@ -1,0 +1,112 @@
+//! Weighted discrete sampling via an explicit CDF + binary search.
+//!
+//! Used by the synthetic dataset generators ([`crate::data::synthetic`])
+//! for Zipf-like item popularity — the skew that makes TopList strong on
+//! news-style data (paper §7, MIND) — and by the TopList baseline tests.
+
+use super::Rng;
+
+/// Cumulative-distribution sampler over `n` weighted categories.
+#[derive(Debug, Clone)]
+pub struct CdfSampler {
+    cdf: Vec<f64>,
+}
+
+impl CdfSampler {
+    /// Build from non-negative weights. Panics if all weights are zero.
+    pub fn new(weights: &[f64]) -> Self {
+        assert!(!weights.is_empty(), "CdfSampler: empty weights");
+        let mut cdf = Vec::with_capacity(weights.len());
+        let mut acc = 0.0;
+        for &w in weights {
+            assert!(w >= 0.0 && w.is_finite(), "CdfSampler: bad weight {w}");
+            acc += w;
+            cdf.push(acc);
+        }
+        assert!(acc > 0.0, "CdfSampler: zero total weight");
+        // normalize so the last entry is exactly 1.0
+        for c in cdf.iter_mut() {
+            *c /= acc;
+        }
+        *cdf.last_mut().unwrap() = 1.0;
+        CdfSampler { cdf }
+    }
+
+    /// Zipf(s) over ranks 1..=n: weight(rank) = rank^-s.
+    pub fn zipf(n: usize, s: f64) -> Self {
+        let weights: Vec<f64> = (1..=n).map(|r| (r as f64).powf(-s)).collect();
+        CdfSampler::new(&weights)
+    }
+
+    pub fn len(&self) -> usize {
+        self.cdf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cdf.is_empty()
+    }
+
+    /// Draw one category index.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        // first index with cdf[i] > u
+        match self
+            .cdf
+            .binary_search_by(|c| c.partial_cmp(&u).unwrap())
+        {
+            Ok(i) => (i + 1).min(self.cdf.len() - 1),
+            Err(i) => i,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn respects_weights() {
+        let s = CdfSampler::new(&[1.0, 0.0, 3.0]);
+        let mut rng = Rng::seed_from_u64(11);
+        let mut counts = [0usize; 3];
+        let n = 40_000;
+        for _ in 0..n {
+            counts[s.sample(&mut rng)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let ratio = counts[2] as f64 / counts[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.3, "ratio {ratio}");
+    }
+
+    #[test]
+    fn zipf_head_heavier_than_tail() {
+        let s = CdfSampler::zipf(1000, 1.1);
+        let mut rng = Rng::seed_from_u64(12);
+        let mut head = 0usize;
+        let n = 20_000;
+        for _ in 0..n {
+            if s.sample(&mut rng) < 10 {
+                head += 1;
+            }
+        }
+        // top-10 of 1000 zipf(1.1) categories carry >> 1% of the mass
+        assert!(head as f64 / n as f64 > 0.2, "head {head}");
+    }
+
+    #[test]
+    fn covers_all_indices_in_range() {
+        let s = CdfSampler::new(&[1.0; 7]);
+        let mut rng = Rng::seed_from_u64(13);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            seen[s.sample(&mut rng)] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_mass_panics() {
+        CdfSampler::new(&[0.0, 0.0]);
+    }
+}

@@ -1,0 +1,169 @@
+//! Parse `artifacts/manifest.txt` (written by `python -m compile.aot`).
+//!
+//! The manifest pins the geometry (B, K, tile widths) and the
+//! hyper-parameters baked into the artifacts; the trainer asserts its
+//! config matches so a stale `artifacts/` cannot silently change the math.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub b: usize,
+    pub k: usize,
+    pub tiles: Vec<usize>,
+    pub alpha: f32,
+    pub lam: f32,
+    pub eta: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub cg_iters: usize,
+    /// artifact name -> declared input count.
+    pub artifacts: BTreeMap<String, usize>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut kv = BTreeMap::new();
+        let mut artifacts = BTreeMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("manifest line `{line}`: expected key=value"))?;
+            if key == "artifact" {
+                // `artifact=<name> inputs=<n> sha256=<digest>`
+                let mut name = None;
+                let mut inputs = None;
+                for (i, tok) in val.split_whitespace().enumerate() {
+                    if i == 0 {
+                        name = Some(tok.to_string());
+                    } else if let Some(n) = tok.strip_prefix("inputs=") {
+                        inputs = Some(n.parse::<usize>()?);
+                    }
+                }
+                let name = name.ok_or_else(|| anyhow!("artifact line missing name"))?;
+                let inputs =
+                    inputs.ok_or_else(|| anyhow!("artifact `{name}` missing inputs="))?;
+                artifacts.insert(name, inputs);
+            } else {
+                kv.insert(key.to_string(), val.to_string());
+            }
+        }
+        let get = |k: &str| -> Result<&String> {
+            kv.get(k).ok_or_else(|| anyhow!("manifest missing `{k}`"))
+        };
+        let version: usize = get("version")?.parse()?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let tiles: Vec<usize> = get("tiles")?
+            .split(',')
+            .map(|t| t.trim().parse::<usize>().map_err(Into::into))
+            .collect::<Result<_>>()?;
+        if tiles.is_empty() {
+            bail!("manifest has no tiles");
+        }
+        Ok(Manifest {
+            b: get("B")?.parse()?,
+            k: get("K")?.parse()?,
+            tiles,
+            alpha: get("alpha")?.parse()?,
+            lam: get("lam")?.parse()?,
+            eta: get("eta")?.parse()?,
+            beta1: get("beta1")?.parse()?,
+            beta2: get("beta2")?.parse()?,
+            cg_iters: get("cg_iters")?.parse()?,
+            artifacts,
+        })
+    }
+
+    /// Assert the model hyper-parameters a config expects match what was
+    /// baked into the artifacts.
+    pub fn check_model(&self, model: &crate::config::ModelConfig) -> Result<()> {
+        let close = |a: f32, b: f32| (a - b).abs() <= 1e-9 * a.abs().max(1.0);
+        if self.k != model.k {
+            bail!("artifacts baked K={} but config wants K={}; rebuild artifacts", self.k, model.k);
+        }
+        if !close(self.alpha, model.alpha) || !close(self.lam, model.lam) {
+            bail!(
+                "artifacts baked (alpha={}, lam={}) but config wants (alpha={}, lam={}); rebuild artifacts",
+                self.alpha, self.lam, model.alpha, model.lam
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+version=1
+B=64
+K=25
+tiles=512,2048
+alpha=4.0
+lam=1.0
+eta=0.01
+beta1=0.1
+beta2=0.99
+eps=1e-08
+cg_iters=50
+artifact=accum_t512 inputs=3 sha256=abc
+artifact=solve inputs=2 sha256=def
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.b, 64);
+        assert_eq!(m.k, 25);
+        assert_eq!(m.tiles, vec![512, 2048]);
+        assert_eq!(m.alpha, 4.0);
+        assert_eq!(m.cg_iters, 50);
+        assert_eq!(m.artifacts["accum_t512"], 3);
+        assert_eq!(m.artifacts["solve"], 2);
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        assert!(Manifest::parse("version=1\nB=64\n").is_err());
+    }
+
+    #[test]
+    fn wrong_version_errors() {
+        let text = SAMPLE.replace("version=1", "version=9");
+        assert!(Manifest::parse(&text).is_err());
+    }
+
+    #[test]
+    fn check_model_catches_mismatch() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let mut model = crate::config::RunConfig::paper_defaults().model;
+        m.check_model(&model).unwrap();
+        model.alpha = 2.0;
+        assert!(m.check_model(&model).is_err());
+        model.alpha = 4.0;
+        model.k = 10;
+        assert!(m.check_model(&model).is_err());
+    }
+}

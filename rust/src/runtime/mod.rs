@@ -1,0 +1,392 @@
+//! Execution runtime: loads the AOT artifacts and runs the FCF client
+//! compute from the L3 hot path.
+//!
+//! Two backends implement [`ComputeBackend`]:
+//!
+//! * [`pjrt::PjrtBackend`] — the production path: HLO-text artifacts
+//!   (`artifacts/*.hlo.txt`, built once by `make artifacts`) compiled on
+//!   the PJRT CPU client (`xla` crate) and executed with reused staging
+//!   literals.
+//! * [`reference::ReferenceBackend`] — a pure-Rust re-implementation of
+//!   the same math, used for differential testing of the artifacts and as
+//!   a no-artifacts fallback (`runtime.backend = "reference"`).
+//!
+//! [`FcfRuntime`] sits on top and handles what the static artifact shapes
+//! cannot: tiling an arbitrary selected-item set over the compiled tile
+//! widths, padding partial user batches, and packing/unpacking between
+//! the coordinator's item-major layout and the artifacts' (K, T) layout.
+
+pub mod manifest;
+pub mod pjrt;
+pub mod reference;
+
+pub use manifest::Manifest;
+
+use anyhow::{bail, Result};
+
+use crate::config::RunConfig;
+
+/// Dense-buffer compute interface at artifact granularity. All shapes are
+/// the compiled static shapes: `B` users per batch, `K` factors, item
+/// tiles of width `t` (one of the manifest's tile sizes).
+///
+/// Not `Send`: the PJRT client handle is thread-local (`Rc` internally);
+/// parallel fleets create one backend per worker thread instead.
+pub trait ComputeBackend {
+    /// Geometry: (B, K, supported tile widths ascending).
+    fn geometry(&self) -> (usize, usize, Vec<usize>);
+
+    /// Gram accumulation (Eq. 3 ingredients): `q` is (K, t) column-major
+    /// over the tile (i.e. `q[k*t + c]`), `x` is (B, t), `mask` (t).
+    /// Returns (A, b) as (B*K*K, B*K) flattened.
+    fn accum(&mut self, t: usize, q: &[f32], x: &[f32], mask: &[f32])
+        -> Result<(Vec<f32>, Vec<f32>)>;
+
+    /// Batched solve of `(A + λI) p = b` (Eq. 3). `a` is B*K*K, `b` B*K.
+    fn solve(&mut self, a: &[f32], b: &[f32]) -> Result<Vec<f32>>;
+
+    /// Aggregated item gradient (Eq. 5–6) for one tile. `p` is (B, K),
+    /// `umask` (B), rest as in [`ComputeBackend::accum`]. Returns (K, t).
+    fn grad(
+        &mut self,
+        t: usize,
+        p: &[f32],
+        umask: &[f32],
+        q: &[f32],
+        x: &[f32],
+        mask: &[f32],
+    ) -> Result<Vec<f32>>;
+
+    /// Predicted scores `P · Q_tile`: returns (B, t).
+    fn scores(&mut self, t: usize, p: &[f32], q: &[f32]) -> Result<Vec<f32>>;
+
+    fn name(&self) -> &'static str;
+}
+
+thread_local! {
+    static RUNTIME_CACHE: std::cell::RefCell<
+        std::collections::HashMap<String, std::rc::Rc<std::cell::RefCell<FcfRuntime>>>,
+    > = std::cell::RefCell::new(std::collections::HashMap::new());
+}
+
+/// Process-wide (per-thread) shared runtime for the config's backend.
+///
+/// Experiment sweeps construct hundreds of trainers; PJRT compilation is
+/// expensive and xla_extension 0.5.1 retains compiled programs, so
+/// re-loading the backend per run both wastes seconds and leaks ~0.5 GB
+/// per load (EXPERIMENTS.md §Perf). The cache keys on backend + artifact
+/// dir + model geometry.
+pub fn shared_runtime(
+    cfg: &RunConfig,
+) -> Result<std::rc::Rc<std::cell::RefCell<FcfRuntime>>> {
+    let key = format!(
+        "{}:{}:{}",
+        cfg.runtime.backend, cfg.runtime.artifacts_dir, cfg.model.k
+    );
+    RUNTIME_CACHE.with(|cache| {
+        if let Some(rt) = cache.borrow().get(&key) {
+            return Ok(rt.clone());
+        }
+        let rt = std::rc::Rc::new(std::cell::RefCell::new(FcfRuntime::new(make_backend(
+            cfg,
+        )?)));
+        cache.borrow_mut().insert(key, rt.clone());
+        Ok(rt)
+    })
+}
+
+/// Build the backend selected by the config.
+pub fn make_backend(cfg: &RunConfig) -> Result<Box<dyn ComputeBackend>> {
+    match cfg.runtime.backend.as_str() {
+        "pjrt" => Ok(Box::new(pjrt::PjrtBackend::load(&cfg.runtime.artifacts_dir)?)),
+        "reference" => Ok(Box::new(reference::ReferenceBackend::new(
+            64,
+            cfg.model.k,
+            vec![512, 2048],
+            cfg.model.alpha,
+            cfg.model.lam,
+        ))),
+        other => bail!("unknown backend `{other}`"),
+    }
+}
+
+/// One tile-execution chunk of a selected-item set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Chunk {
+    /// Offset into the selected-item list.
+    pub start: usize,
+    /// Valid items in this chunk (<= tile).
+    pub len: usize,
+    /// Compiled tile width used.
+    pub tile: usize,
+}
+
+/// Greedy tile plan: largest tiles first, the remainder uses the smallest
+/// tile that covers it (minimizing padding waste).
+pub fn plan_chunks(m_s: usize, tiles: &[usize]) -> Vec<Chunk> {
+    plan_chunks_capped(m_s, tiles, usize::MAX)
+}
+
+/// [`plan_chunks`] with the usable tile width capped at `max_tile`.
+///
+/// Perf (EXPERIMENTS.md §Perf): the compute-bound kernels (accum, grad)
+/// run FASTER as 4 × t512 executions than 1 × t2048 on the CPU PJRT
+/// backend (skinny-GEMM shapes), while the overhead-bound scores kernel
+/// prefers the largest tile — so the runtime plans them differently.
+pub fn plan_chunks_capped(m_s: usize, tiles: &[usize], max_tile: usize) -> Vec<Chunk> {
+    assert!(!tiles.is_empty());
+    let mut tiles: Vec<usize> = tiles.to_vec();
+    tiles.sort_unstable();
+    // keep at least the smallest tile even if the cap excludes everything
+    let cap_idx = tiles.iter().filter(|&&t| t <= max_tile).count().max(1);
+    tiles.truncate(cap_idx);
+    let largest = *tiles.last().unwrap();
+    let mut chunks = Vec::new();
+    let mut start = 0;
+    while m_s - start >= largest {
+        chunks.push(Chunk {
+            start,
+            len: largest,
+            tile: largest,
+        });
+        start += largest;
+    }
+    let rem = m_s - start;
+    if rem > 0 {
+        let tile = *tiles.iter().find(|&&t| t >= rem).unwrap_or(&largest);
+        chunks.push(Chunk {
+            start,
+            len: rem,
+            tile,
+        });
+    }
+    chunks
+}
+
+/// Tile-width cap for the compute-bound kernels (see
+/// [`plan_chunks_capped`]). Benchmarked on the CPU PJRT backend.
+const COMPUTE_TILE_CAP: usize = 512;
+
+/// A user's training interactions re-indexed into selected-item positions
+/// (sorted ascending). Positions index the round's `selected` list.
+pub type SelRow = Vec<u32>;
+
+/// Tiled/padded execution of the FCF client math over arbitrary selected
+/// sets and user counts.
+pub struct FcfRuntime {
+    backend: Box<dyn ComputeBackend>,
+    pub b: usize,
+    pub k: usize,
+    tiles: Vec<usize>,
+    // reusable staging buffers, keyed by tile width index
+    q_stage: Vec<Vec<f32>>,
+    x_stage: Vec<Vec<f32>>,
+    mask_stage: Vec<Vec<f32>>,
+}
+
+impl FcfRuntime {
+    pub fn new(backend: Box<dyn ComputeBackend>) -> FcfRuntime {
+        let (b, k, tiles) = backend.geometry();
+        let q_stage = tiles.iter().map(|&t| vec![0.0; k * t]).collect();
+        let x_stage = tiles.iter().map(|&t| vec![0.0; b * t]).collect();
+        let mask_stage = tiles.iter().map(|&t| vec![0.0; t]).collect();
+        FcfRuntime {
+            backend,
+            b,
+            k,
+            tiles,
+            q_stage,
+            x_stage,
+            mask_stage,
+        }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    pub fn tiles(&self) -> &[usize] {
+        &self.tiles
+    }
+
+    fn tile_idx(&self, tile: usize) -> usize {
+        self.tiles
+            .iter()
+            .position(|&t| t == tile)
+            .expect("chunk tile not in geometry")
+    }
+
+    /// Stage a (K, tile) slice of `q_sel` (item-major `m_s × k`) for a chunk.
+    fn stage_q(&mut self, chunk: &Chunk, q_sel: &[f32]) {
+        let ti = self.tile_idx(chunk.tile);
+        let t = chunk.tile;
+        let k = self.k;
+        let buf = &mut self.q_stage[ti];
+        buf.iter_mut().for_each(|v| *v = 0.0);
+        for c in 0..chunk.len {
+            let item_row = &q_sel[(chunk.start + c) * k..(chunk.start + c + 1) * k];
+            for f in 0..k {
+                buf[f * t + c] = item_row[f];
+            }
+        }
+        let mbuf = &mut self.mask_stage[ti];
+        mbuf.iter_mut().for_each(|v| *v = 0.0);
+        mbuf[..chunk.len].iter_mut().for_each(|v| *v = 1.0);
+    }
+
+    /// Stage the (B, tile) interaction slice for a user batch: `rows[u]`
+    /// holds user u's interactions as selected-positions.
+    fn stage_x(&mut self, chunk: &Chunk, rows: &[&SelRow]) {
+        assert!(rows.len() <= self.b);
+        let ti = self.tile_idx(chunk.tile);
+        let t = chunk.tile;
+        let buf = &mut self.x_stage[ti];
+        buf.iter_mut().for_each(|v| *v = 0.0);
+        let lo = chunk.start as u32;
+        let hi = (chunk.start + chunk.len) as u32;
+        for (u, row) in rows.iter().enumerate() {
+            // row is sorted; find the sub-slice inside [lo, hi)
+            let a = row.partition_point(|&p| p < lo);
+            let z = row.partition_point(|&p| p < hi);
+            for &pos in &row[a..z] {
+                buf[u * t + (pos - lo) as usize] = 1.0;
+            }
+        }
+    }
+
+    /// Solve user factors for up to B users (Eq. 3).
+    ///
+    /// * `q_sel` — selected item factors, item-major (m_s × k).
+    /// * `rows` — per-user interactions in selected-position space.
+    ///
+    /// Returns `rows.len() × k` user factors (padding rows dropped).
+    pub fn solve_users(&mut self, q_sel: &[f32], rows: &[&SelRow]) -> Result<Vec<f32>> {
+        let m_s = q_sel.len() / self.k;
+        let n = rows.len();
+        assert!(n <= self.b, "solve_users: batch {n} > B {}", self.b);
+        let mut a_total = vec![0.0f32; self.b * self.k * self.k];
+        let mut b_total = vec![0.0f32; self.b * self.k];
+        for chunk in plan_chunks_capped(m_s, &self.tiles, COMPUTE_TILE_CAP) {
+            self.stage_q(&chunk, q_sel);
+            self.stage_x(&chunk, rows);
+            let ti = self.tile_idx(chunk.tile);
+            let (a, b) = self.backend.accum(
+                chunk.tile,
+                &self.q_stage[ti],
+                &self.x_stage[ti],
+                &self.mask_stage[ti],
+            )?;
+            for (acc, v) in a_total.iter_mut().zip(&a) {
+                *acc += v;
+            }
+            for (acc, v) in b_total.iter_mut().zip(&b) {
+                *acc += v;
+            }
+        }
+        let p = self.backend.solve(&a_total, &b_total)?;
+        Ok(p[..n * self.k].to_vec())
+    }
+
+    /// Aggregated gradient over a batch (Eq. 5–6 summed over `rows`).
+    ///
+    /// `p` is `rows.len() × k` (from [`FcfRuntime::solve_users`]). Returns
+    /// the batch-summed gradient in item-major layout (m_s × k).
+    pub fn grad_batch(&mut self, q_sel: &[f32], rows: &[&SelRow], p: &[f32]) -> Result<Vec<f32>> {
+        let m_s = q_sel.len() / self.k;
+        let n = rows.len();
+        assert_eq!(p.len(), n * self.k);
+        let mut p_pad = vec![0.0f32; self.b * self.k];
+        p_pad[..p.len()].copy_from_slice(p);
+        let mut umask = vec![0.0f32; self.b];
+        umask[..n].iter_mut().for_each(|v| *v = 1.0);
+
+        let mut g_out = vec![0.0f32; m_s * self.k];
+        for chunk in plan_chunks_capped(m_s, &self.tiles, COMPUTE_TILE_CAP) {
+            self.stage_q(&chunk, q_sel);
+            self.stage_x(&chunk, rows);
+            let ti = self.tile_idx(chunk.tile);
+            let g = self.backend.grad(
+                chunk.tile,
+                &p_pad,
+                &umask,
+                &self.q_stage[ti],
+                &self.x_stage[ti],
+                &self.mask_stage[ti],
+            )?;
+            // unpack (K, tile) -> item-major rows
+            let t = chunk.tile;
+            for c in 0..chunk.len {
+                let row = &mut g_out[(chunk.start + c) * self.k..(chunk.start + c + 1) * self.k];
+                for f in 0..self.k {
+                    row[f] = g[f * t + c];
+                }
+            }
+        }
+        Ok(g_out)
+    }
+
+    /// Dense scores of up to B users against an arbitrary item set
+    /// (item-major `m × k`), for evaluation. Returns `rows × m`.
+    pub fn scores_all(&mut self, q_items: &[f32], p: &[f32]) -> Result<Vec<f32>> {
+        let m = q_items.len() / self.k;
+        let n = p.len() / self.k;
+        assert!(n <= self.b);
+        let mut p_pad = vec![0.0f32; self.b * self.k];
+        p_pad[..p.len()].copy_from_slice(p);
+        let mut out = vec![0.0f32; n * m];
+        for chunk in plan_chunks(m, &self.tiles) {
+            self.stage_q(&chunk, q_items);
+            let ti = self.tile_idx(chunk.tile);
+            let s = self
+                .backend
+                .scores(chunk.tile, &p_pad, &self.q_stage[ti])?;
+            let t = chunk.tile;
+            for u in 0..n {
+                for c in 0..chunk.len {
+                    out[u * m + chunk.start + c] = s[u * t + c];
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_chunks_greedy() {
+        let tiles = vec![512, 2048];
+        let plan = plan_chunks(5000, &tiles);
+        assert_eq!(
+            plan,
+            vec![
+                Chunk { start: 0, len: 2048, tile: 2048 },
+                Chunk { start: 2048, len: 2048, tile: 2048 },
+                Chunk { start: 4096, len: 904, tile: 2048 },
+            ]
+        );
+        let plan = plan_chunks(300, &tiles);
+        assert_eq!(plan, vec![Chunk { start: 0, len: 300, tile: 512 }]);
+        let plan = plan_chunks(512, &tiles);
+        assert_eq!(plan, vec![Chunk { start: 0, len: 512, tile: 512 }]);
+        let plan = plan_chunks(2600, &tiles);
+        assert_eq!(plan.len(), 2);
+        assert_eq!(plan[1].tile, 2048); // 552 > 512 -> needs the big tile
+    }
+
+    #[test]
+    fn plan_covers_exactly() {
+        for m_s in [1, 100, 511, 513, 2047, 2049, 10_000] {
+            let plan = plan_chunks(m_s, &[512, 2048]);
+            let mut covered = 0;
+            for c in &plan {
+                assert_eq!(c.start, covered);
+                covered += c.len;
+                assert!(c.len <= c.tile);
+            }
+            assert_eq!(covered, m_s, "m_s={m_s}");
+        }
+    }
+}

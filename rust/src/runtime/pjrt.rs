@@ -1,0 +1,185 @@
+//! PJRT backend: compile the HLO-text artifacts once, execute them from
+//! the round loop.
+//!
+//! Interchange is HLO **text** (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md): jax ≥ 0.5 emits 64-bit instruction-id
+//! protos that xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//! Artifacts are lowered with `return_tuple=True`, so every execution
+//! returns a single tuple literal we decompose.
+//!
+//! ## Why `execute_b`, not `execute`
+//!
+//! The published crate's `execute(&[Literal])` leaks every input: the C
+//! wrapper does `BufferFromHostLiteral(..).release()` on each argument and
+//! never frees the device buffer (~180 KB per accum call — a long
+//! experiment sweep leaked tens of GB; EXPERIMENTS.md §Perf #5). We
+//! instead create input `PjRtBuffer`s ourselves via
+//! `buffer_from_host_buffer` — whose Rust wrapper owns and frees them —
+//! and run `execute_b`, which borrows buffers without taking ownership.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use super::{ComputeBackend, Manifest};
+
+pub struct PjrtBackend {
+    b: usize,
+    k: usize,
+    tiles: Vec<usize>,
+    client: PjRtClient,
+    // compiled executables per tile width
+    accum: HashMap<usize, PjRtLoadedExecutable>,
+    grad: HashMap<usize, PjRtLoadedExecutable>,
+    scores: HashMap<usize, PjRtLoadedExecutable>,
+    solve: PjRtLoadedExecutable,
+    manifest: Manifest,
+}
+
+fn compile(client: &PjRtClient, dir: &Path, name: &str) -> Result<PjRtLoadedExecutable> {
+    let path = dir.join(format!("{name}.hlo.txt"));
+    let proto = xla::HloModuleProto::from_text_file(&path)
+        .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow!("compiling {name}: {e}"))
+}
+
+impl PjrtBackend {
+    /// Load + compile every runtime artifact from `dir`.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<PjrtBackend> {
+        let dir = dir.as_ref();
+        let manifest = Manifest::load(dir).context("loading artifact manifest")?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+
+        let mut accum = HashMap::new();
+        let mut grad = HashMap::new();
+        let mut scores = HashMap::new();
+        for &t in &manifest.tiles {
+            accum.insert(t, compile(&client, dir, &format!("accum_t{t}"))?);
+            grad.insert(t, compile(&client, dir, &format!("grad_t{t}"))?);
+            scores.insert(t, compile(&client, dir, &format!("scores_t{t}"))?);
+        }
+        let solve = compile(&client, dir, "solve")?;
+
+        Ok(PjrtBackend {
+            b: manifest.b,
+            k: manifest.k,
+            tiles: manifest.tiles.clone(),
+            client,
+            accum,
+            grad,
+            scores,
+            solve,
+            manifest,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn host_buffer(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("staging {dims:?}: {e}"))
+    }
+
+    fn exe<'a>(
+        map: &'a HashMap<usize, PjRtLoadedExecutable>,
+        t: usize,
+        what: &str,
+    ) -> Result<&'a PjRtLoadedExecutable> {
+        map.get(&t)
+            .ok_or_else(|| anyhow!("no {what} artifact for tile {t}"))
+    }
+}
+
+/// Execute and return the decomposed output tuple as f32 vectors.
+fn run(exe: &PjRtLoadedExecutable, args: &[PjRtBuffer]) -> Result<Vec<Vec<f32>>> {
+    let result = exe.execute_b(args).map_err(|e| anyhow!("execute: {e}"))?;
+    let lit = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("to_literal: {e}"))?;
+    let parts = lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e}"))?;
+    parts
+        .into_iter()
+        .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}")))
+        .collect()
+}
+
+impl ComputeBackend for PjrtBackend {
+    fn geometry(&self) -> (usize, usize, Vec<usize>) {
+        (self.b, self.k, self.tiles.clone())
+    }
+
+    fn accum(
+        &mut self,
+        t: usize,
+        q: &[f32],
+        x: &[f32],
+        mask: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let args = [
+            self.host_buffer(q, &[self.k, t])?,
+            self.host_buffer(x, &[self.b, t])?,
+            self.host_buffer(mask, &[t])?,
+        ];
+        let exe = Self::exe(&self.accum, t, "accum")?;
+        let mut out = run(exe, &args)?;
+        anyhow::ensure!(out.len() == 2, "accum returned {} outputs", out.len());
+        let b_vec = out.pop().unwrap();
+        let a_vec = out.pop().unwrap();
+        Ok((a_vec, b_vec))
+    }
+
+    fn solve(&mut self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        let args = [
+            self.host_buffer(a, &[self.b, self.k, self.k])?,
+            self.host_buffer(b, &[self.b, self.k])?,
+        ];
+        let mut out = run(&self.solve, &args)?;
+        anyhow::ensure!(out.len() == 1, "solve returned {} outputs", out.len());
+        Ok(out.pop().unwrap())
+    }
+
+    fn grad(
+        &mut self,
+        t: usize,
+        p: &[f32],
+        umask: &[f32],
+        q: &[f32],
+        x: &[f32],
+        mask: &[f32],
+    ) -> Result<Vec<f32>> {
+        let args = [
+            self.host_buffer(p, &[self.b, self.k])?,
+            self.host_buffer(umask, &[self.b])?,
+            self.host_buffer(q, &[self.k, t])?,
+            self.host_buffer(x, &[self.b, t])?,
+            self.host_buffer(mask, &[t])?,
+        ];
+        let exe = Self::exe(&self.grad, t, "grad")?;
+        let mut out = run(exe, &args)?;
+        anyhow::ensure!(out.len() == 1, "grad returned {} outputs", out.len());
+        Ok(out.pop().unwrap())
+    }
+
+    fn scores(&mut self, t: usize, p: &[f32], q: &[f32]) -> Result<Vec<f32>> {
+        let args = [
+            self.host_buffer(p, &[self.b, self.k])?,
+            self.host_buffer(q, &[self.k, t])?,
+        ];
+        let exe = Self::exe(&self.scores, t, "scores")?;
+        let mut out = run(exe, &args)?;
+        anyhow::ensure!(out.len() == 1, "scores returned {} outputs", out.len());
+        Ok(out.pop().unwrap())
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

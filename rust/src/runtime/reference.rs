@@ -1,0 +1,305 @@
+//! Pure-Rust reference backend: the same math as the artifacts
+//! (`python/compile/kernels/ref.py`, re-derived from paper Eq. 3, 5–6),
+//! implemented a third time for differential testing — and usable as a
+//! fallback backend when `artifacts/` is absent.
+//!
+//! The accumulation exploits the classic implicit-ALS decomposition
+//! `Q C Qᵀ = Q Qᵀ + α Q_{x=1} Q_{x=1}ᵀ`: the first Gram term is
+//! user-independent and computed once per tile, the sparse correction
+//! costs O(nnz·K²).
+
+use anyhow::Result;
+
+use crate::linalg::{cholesky_solve, Mat};
+
+use super::ComputeBackend;
+
+pub struct ReferenceBackend {
+    b: usize,
+    k: usize,
+    tiles: Vec<usize>,
+    alpha: f32,
+    lam: f32,
+}
+
+impl ReferenceBackend {
+    pub fn new(b: usize, k: usize, mut tiles: Vec<usize>, alpha: f32, lam: f32) -> Self {
+        tiles.sort_unstable();
+        ReferenceBackend {
+            b,
+            k,
+            tiles,
+            alpha,
+            lam,
+        }
+    }
+}
+
+impl ComputeBackend for ReferenceBackend {
+    fn geometry(&self) -> (usize, usize, Vec<usize>) {
+        (self.b, self.k, self.tiles.clone())
+    }
+
+    fn accum(
+        &mut self,
+        t: usize,
+        q: &[f32],
+        x: &[f32],
+        mask: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let (b, k) = (self.b, self.k);
+        debug_assert_eq!(q.len(), k * t);
+        debug_assert_eq!(x.len(), b * t);
+        // Shared Gram over masked columns: G0[kj] = Σ_c mask_c q[k,c] q[j,c]
+        let mut g0 = vec![0.0f32; k * k];
+        for c in 0..t {
+            if mask[c] == 0.0 {
+                continue;
+            }
+            for kk in 0..k {
+                let qk = q[kk * t + c];
+                if qk == 0.0 {
+                    continue;
+                }
+                for jj in 0..k {
+                    g0[kk * k + jj] += qk * q[jj * t + c];
+                }
+            }
+        }
+        let mut a_out = vec![0.0f32; b * k * k];
+        let mut b_out = vec![0.0f32; b * k];
+        for u in 0..b {
+            let a_u = &mut a_out[u * k * k..(u + 1) * k * k];
+            a_u.copy_from_slice(&g0);
+            let xrow = &x[u * t..(u + 1) * t];
+            for c in 0..t {
+                if xrow[c] == 0.0 || mask[c] == 0.0 {
+                    continue;
+                }
+                let xv = xrow[c];
+                let cv = self.alpha * xv; // c - 1 = alpha * x
+                // A += alpha x q qᵀ ; b += (1 + alpha x) x q
+                for kk in 0..k {
+                    let qk = q[kk * t + c];
+                    for jj in 0..k {
+                        a_u[kk * k + jj] += cv * qk * q[jj * t + c];
+                    }
+                    b_out[u * k + kk] += (1.0 + self.alpha * xv) * xv * qk;
+                }
+            }
+        }
+        Ok((a_out, b_out))
+    }
+
+    fn solve(&mut self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        let (bb, k) = (self.b, self.k);
+        let mut out = vec![0.0f32; bb * k];
+        for u in 0..bb {
+            let a_u = Mat::from_vec(k, k, a[u * k * k..(u + 1) * k * k].to_vec());
+            let b_u = &b[u * k..(u + 1) * k];
+            let p = cholesky_solve(&a_u, self.lam, b_u);
+            out[u * k..(u + 1) * k].copy_from_slice(&p);
+        }
+        Ok(out)
+    }
+
+    fn grad(
+        &mut self,
+        t: usize,
+        p: &[f32],
+        umask: &[f32],
+        q: &[f32],
+        x: &[f32],
+        mask: &[f32],
+    ) -> Result<Vec<f32>> {
+        let (b, k) = (self.b, self.k);
+        let n_users: f32 = umask.iter().sum();
+        let mut g = vec![0.0f32; k * t];
+        // -2 Pᵀ W  with W[u,c] = umask_u c_uc (x_uc - s_uc)
+        for u in 0..b {
+            if umask[u] == 0.0 {
+                continue;
+            }
+            let prow = &p[u * k..(u + 1) * k];
+            let xrow = &x[u * t..(u + 1) * t];
+            for c in 0..t {
+                if mask[c] == 0.0 {
+                    continue;
+                }
+                let mut s = 0.0f32;
+                for f in 0..k {
+                    s += prow[f] * q[f * t + c];
+                }
+                let xv = xrow[c];
+                let w = (1.0 + self.alpha * xv) * (xv - s);
+                let wm2 = -2.0 * w;
+                for f in 0..k {
+                    g[f * t + c] += wm2 * prow[f];
+                }
+            }
+        }
+        // + 2 lam n_users Q on unmasked columns
+        let reg = 2.0 * self.lam * n_users;
+        for f in 0..k {
+            for c in 0..t {
+                if mask[c] != 0.0 {
+                    g[f * t + c] += reg * q[f * t + c];
+                }
+            }
+        }
+        Ok(g)
+    }
+
+    fn scores(&mut self, t: usize, p: &[f32], q: &[f32]) -> Result<Vec<f32>> {
+        let (b, k) = (self.b, self.k);
+        let mut s = vec![0.0f32; b * t];
+        for u in 0..b {
+            let prow = &p[u * k..(u + 1) * k];
+            let srow = &mut s[u * t..(u + 1) * t];
+            for f in 0..k {
+                let pf = prow[f];
+                if pf == 0.0 {
+                    continue;
+                }
+                let qrow = &q[f * t..(f + 1) * t];
+                for c in 0..t {
+                    srow[c] += pf * qrow[c];
+                }
+            }
+        }
+        Ok(s)
+    }
+
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn naive_accum(
+        b: usize,
+        k: usize,
+        t: usize,
+        q: &[f32],
+        x: &[f32],
+        mask: &[f32],
+        alpha: f32,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let mut a = vec![0.0f32; b * k * k];
+        let mut bv = vec![0.0f32; b * k];
+        for u in 0..b {
+            for c in 0..t {
+                if mask[c] == 0.0 {
+                    continue;
+                }
+                let xv = x[u * t + c];
+                let cv = 1.0 + alpha * xv;
+                for kk in 0..k {
+                    for jj in 0..k {
+                        a[u * k * k + kk * k + jj] += cv * q[kk * t + c] * q[jj * t + c];
+                    }
+                    bv[u * k + kk] += cv * xv * q[kk * t + c];
+                }
+            }
+        }
+        (a, bv)
+    }
+
+    #[test]
+    fn accum_matches_naive_formula() {
+        let (b, k, t) = (4, 3, 16);
+        let mut backend = ReferenceBackend::new(b, k, vec![t], 4.0, 1.0);
+        let mut rng = Rng::seed_from_u64(1);
+        let q: Vec<f32> = (0..k * t).map(|_| rng.normal() as f32).collect();
+        let x: Vec<f32> = (0..b * t).map(|_| if rng.chance(0.3) { 1.0 } else { 0.0 }).collect();
+        let mut mask = vec![1.0f32; t];
+        mask[12..].iter_mut().for_each(|v| *v = 0.0);
+        let (a, bv) = backend.accum(t, &q, &x, &mask).unwrap();
+        let (an, bn) = naive_accum(b, k, t, &q, &x, &mask, 4.0);
+        for (i, (got, want)) in a.iter().zip(&an).enumerate() {
+            assert!((got - want).abs() < 1e-4, "A[{i}]: {got} vs {want}");
+        }
+        for (got, want) in bv.iter().zip(&bn) {
+            assert!((got - want).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn solve_residual_small() {
+        let (b, k, t) = (64, 5, 32);
+        let mut backend = ReferenceBackend::new(b, k, vec![t], 4.0, 1.0);
+        let mut rng = Rng::seed_from_u64(2);
+        let q: Vec<f32> = (0..k * t).map(|_| rng.normal() as f32 * 0.4).collect();
+        let x: Vec<f32> = (0..b * t).map(|_| if rng.chance(0.2) { 1.0 } else { 0.0 }).collect();
+        let mask = vec![1.0f32; t];
+        let (a, bv) = backend.accum(t, &q, &x, &mask).unwrap();
+        let p = backend.solve(&a, &bv).unwrap();
+        // check (A + lam I) p = b for user 0
+        for u in [0usize, 31, 63] {
+            for i in 0..k {
+                let mut r = -bv[u * k + i] + 1.0 * p[u * k + i];
+                for j in 0..k {
+                    r += a[u * k * k + i * k + j] * p[u * k + j];
+                }
+                assert!(r.abs() < 1e-3, "user {u} residual {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn grad_matches_per_user_sum() {
+        let (b, k, t) = (3, 4, 8);
+        let mut backend = ReferenceBackend::new(b, k, vec![t], 4.0, 1.0);
+        let mut rng = Rng::seed_from_u64(3);
+        let q: Vec<f32> = (0..k * t).map(|_| rng.normal() as f32).collect();
+        let x: Vec<f32> = (0..b * t).map(|_| if rng.chance(0.4) { 1.0 } else { 0.0 }).collect();
+        let p: Vec<f32> = (0..b * k).map(|_| rng.normal() as f32).collect();
+        let mask = vec![1.0f32; t];
+        let umask = vec![1.0, 1.0, 0.0]; // user 2 masked out
+        let g = backend.grad(t, &p, &umask, &q, &x, &mask).unwrap();
+        // naive: per user Eq. 6 then sum over unmasked users
+        let mut gn = vec![0.0f32; k * t];
+        for u in 0..2 {
+            for c in 0..t {
+                let mut s = 0.0f32;
+                for f in 0..k {
+                    s += p[u * k + f] * q[f * t + c];
+                }
+                let xv = x[u * t + c];
+                let cv = 1.0 + 4.0 * xv;
+                for f in 0..k {
+                    gn[f * t + c] += -2.0 * cv * (xv - s) * p[u * k + f] + 2.0 * 1.0 * q[f * t + c] / 2.0 * 0.0;
+                }
+            }
+        }
+        // add the lambda term once per unmasked user
+        for f in 0..k {
+            for c in 0..t {
+                gn[f * t + c] += 2.0 * 1.0 * 2.0 * q[f * t + c];
+            }
+        }
+        for (i, (got, want)) in g.iter().zip(&gn).enumerate() {
+            assert!((got - want).abs() < 1e-3, "g[{i}] {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn scores_is_matmul() {
+        let (b, k, t) = (2, 3, 4);
+        let mut backend = ReferenceBackend::new(b, k, vec![t], 4.0, 1.0);
+        let p = vec![1.0, 0.0, 2.0, /* user1 */ 0.0, 1.0, -1.0];
+        let q: Vec<f32> = (0..k * t).map(|i| i as f32).collect();
+        let s = backend.scores(t, &p, &q).unwrap();
+        // user0: 1*q0 + 2*q2 ; q row f occupies [f*t..]
+        for c in 0..t {
+            let want = q[c] + 2.0 * q[2 * t + c];
+            assert!((s[c] - want).abs() < 1e-6);
+            let want1 = q[t + c] - q[2 * t + c];
+            assert!((s[t + c] - want1).abs() < 1e-6);
+        }
+    }
+}

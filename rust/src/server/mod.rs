@@ -1,0 +1,530 @@
+//! The FL server / coordinator — the paper's Algorithm 1.
+//!
+//! Per FL iteration t the [`Trainer`]:
+//!
+//! 1. asks the bandit for M_s items (Alg. 1 line 8) and assembles Q*,
+//! 2. "transmits" Q* to the Θ participating clients (payload ledger),
+//! 3. runs the client math through the AOT artifacts — Eq. 3 solve and
+//!    Eq. 5–6 gradients, batched B clients per execution,
+//! 4. aggregates the Θ gradients and applies server-side Adam (Eq. 4),
+//! 5. updates the squared-gradient trace (Eq. 14), computes the composite
+//!    reward (Eq. 13) and feeds the bandit posterior (Eq. 10–12),
+//! 6. aggregates the contributing clients' test metrics into the global
+//!    metric window (paper §6.2).
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::bandit::{make_selector, ItemSelector};
+use crate::client::Fleet;
+use crate::config::{Aggregate, RunConfig, Strategy};
+use crate::data::{synthetic, Interactions, Split};
+use crate::linalg::Mat;
+use crate::metrics::{rank_candidates, user_metrics, MetricAccumulator, MetricSet};
+use crate::optim::Adam;
+use crate::reward::RewardEngine;
+use crate::rng::Rng;
+use crate::runtime::{make_backend, FcfRuntime};
+use crate::simnet::{payload_bytes, TrafficLedger};
+use crate::telemetry::Stopwatch;
+use crate::{debug_log, info};
+
+/// Per-round record for convergence analysis (paper Figure 3).
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    /// 1-based FL iteration.
+    pub iter: usize,
+    /// Items transmitted this round (M_s).
+    pub m_s: usize,
+    /// Mean metrics of this round's contributing clients (un-smoothed).
+    pub raw: MetricSet,
+    /// Mean of the last `metric_window` global metric values (§6.2).
+    pub smoothed: MetricSet,
+    /// Bytes moved this round (both directions).
+    pub round_bytes: u64,
+}
+
+/// Everything a finished training run reports.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub strategy: &'static str,
+    /// Smoothed metrics at the final iteration (the paper's headline
+    /// number for a run).
+    pub final_metrics: MetricSet,
+    pub history: Vec<RoundRecord>,
+    pub ledger: TrafficLedger,
+    pub wall_secs: f64,
+    /// (phase name, seconds, invocations) for the perf log.
+    pub phase_times: Vec<(String, f64, u64)>,
+    pub iterations: usize,
+    pub m: usize,
+    pub m_s: usize,
+}
+
+impl TrainReport {
+    /// Payload reduction percentage vs. the full model.
+    pub fn payload_reduction_pct(&self) -> f64 {
+        100.0 * (1.0 - self.m_s as f64 / self.m as f64)
+    }
+}
+
+/// The coordinator for one model build.
+pub struct Trainer {
+    cfg: RunConfig,
+    split: Split,
+    fleet: Fleet,
+    q: Mat,
+    adam: Adam,
+    selector: Box<dyn ItemSelector>,
+    reward: RewardEngine,
+    /// Shared across trainers: PJRT executable compilation is expensive
+    /// and xla_extension 0.5.1 does not fully release compiled programs,
+    /// so experiment sweeps MUST reuse one runtime (EXPERIMENTS.md §Perf).
+    runtime: Rc<RefCell<FcfRuntime>>,
+    rng: Rng,
+    t: u64,
+    metric_history: VecDeque<MetricSet>,
+    ledger: TrafficLedger,
+    history: Vec<RoundRecord>,
+    // reused per-round scratch
+    sel_pos: Vec<i32>,
+    // phase stopwatches
+    sw_select: Stopwatch,
+    sw_stage: Stopwatch,
+    sw_solve: Stopwatch,
+    sw_grad: Stopwatch,
+    sw_eval: Stopwatch,
+    sw_update: Stopwatch,
+    sw_reward: Stopwatch,
+}
+
+impl Trainer {
+    /// Build a trainer from a config: generates/loads the dataset, splits
+    /// it per user, initializes the model and the backend.
+    pub fn from_config(cfg: &RunConfig) -> Result<Trainer> {
+        cfg.validate()?;
+        let mut rng = Rng::seed_from_u64(cfg.seed);
+        let data = load_dataset(cfg, &mut rng)?;
+        let split = data.split(cfg.dataset.train_frac, &mut rng);
+        Trainer::with_split(cfg, split)
+    }
+
+    /// Build a trainer over a pre-made split (used by the experiment
+    /// harness to compare strategies on identical data).
+    pub fn with_split(cfg: &RunConfig, split: Split) -> Result<Trainer> {
+        let backend = make_backend(cfg).context("building compute backend")?;
+        Trainer::with_split_and_runtime(
+            cfg,
+            split,
+            Rc::new(RefCell::new(FcfRuntime::new(backend))),
+        )
+    }
+
+    /// Build a trainer over a pre-made split and a shared runtime. Use
+    /// this for sweeps: one compiled runtime serves every run.
+    pub fn with_split_and_runtime(
+        cfg: &RunConfig,
+        split: Split,
+        runtime: Rc<RefCell<FcfRuntime>>,
+    ) -> Result<Trainer> {
+        cfg.validate()?;
+        let m = split.train.num_items();
+        {
+            let rt = runtime.borrow();
+            anyhow::ensure!(
+                rt.k == cfg.model.k,
+                "artifacts compiled for K={} but config wants K={}",
+                rt.k,
+                cfg.model.k
+            );
+        }
+        let mut rng = Rng::seed_from_u64(cfg.seed ^ 0x5eed_f00d);
+        let q = Mat::randn(m, cfg.model.k, cfg.model.init_scale, &mut rng);
+        let fleet = Fleet::from_split(&split);
+        info!(
+            "trainer: {} users, {} items, strategy={}, backend={}, M_s={}",
+            fleet.len(),
+            m,
+            cfg.bandit.strategy.name(),
+            runtime.borrow().backend_name(),
+            cfg.selected_items(m)
+        );
+        let cw = match cfg.bandit.cosine_weight {
+            "literal" => crate::reward::CosineWeight::Literal,
+            _ => crate::reward::CosineWeight::Power,
+        };
+        let tb = match cfg.bandit.time_base {
+            "global" => crate::reward::TimeBase::Global,
+            _ => crate::reward::TimeBase::PerItem,
+        };
+        Ok(Trainer {
+            selector: make_selector(cfg.bandit.strategy, m, &cfg.bandit),
+            reward: RewardEngine::new(m, cfg.model.k, cfg.bandit.gamma, cfg.model.beta2 as f64)
+                .with_cosine_weight(cw)
+                .with_time_base(tb),
+            adam: Adam::new(m, &cfg.model),
+            sel_pos: vec![-1; m],
+            cfg: cfg.clone(),
+            split,
+            fleet,
+            q,
+            runtime,
+            rng,
+            t: 0,
+            metric_history: VecDeque::new(),
+            ledger: TrafficLedger::new(),
+            history: Vec::new(),
+            sw_select: Stopwatch::new("select"),
+            sw_stage: Stopwatch::new("stage"),
+            sw_solve: Stopwatch::new("solve"),
+            sw_grad: Stopwatch::new("grad"),
+            sw_eval: Stopwatch::new("eval"),
+            sw_update: Stopwatch::new("update"),
+            sw_reward: Stopwatch::new("reward"),
+        })
+    }
+
+    /// Global model access (diagnostics / tests).
+    pub fn q(&self) -> &Mat {
+        &self.q
+    }
+
+    pub fn fleet(&self) -> &Fleet {
+        &self.fleet
+    }
+
+    pub fn split(&self) -> &Split {
+        &self.split
+    }
+
+    /// Run the configured number of FL iterations and report.
+    pub fn run(&mut self) -> Result<TrainReport> {
+        let t0 = std::time::Instant::now();
+        let iterations = self.cfg.train.iterations;
+        for _ in 0..iterations {
+            self.round()?;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let m = self.split.train.num_items();
+        Ok(TrainReport {
+            strategy: self.selector.name(),
+            final_metrics: self.smoothed_metrics(),
+            history: self.history.clone(),
+            ledger: self.ledger.clone(),
+            wall_secs: wall,
+            phase_times: [
+                &self.sw_select,
+                &self.sw_stage,
+                &self.sw_solve,
+                &self.sw_grad,
+                &self.sw_eval,
+                &self.sw_update,
+                &self.sw_reward,
+            ]
+            .iter()
+            .map(|sw| (sw.name.to_string(), sw.total_secs(), sw.count()))
+            .collect(),
+            iterations,
+            m,
+            m_s: self.cfg.selected_items(m),
+        })
+    }
+
+    /// Mean of the last `metric_window` global metric values (§6.2).
+    pub fn smoothed_metrics(&self) -> MetricSet {
+        let mut acc = MetricAccumulator::new();
+        for m in self.metric_history.iter() {
+            acc.push(m);
+        }
+        acc.mean()
+    }
+
+    /// One FL iteration (Alg. 1 body). Public so integration tests can
+    /// step the trainer manually.
+    pub fn round(&mut self) -> Result<RoundRecord> {
+        self.t += 1;
+        let m = self.split.train.num_items();
+        let k = self.cfg.model.k;
+        let m_s = match self.cfg.bandit.strategy {
+            Strategy::Full => m,
+            _ => self.cfg.selected_items(m),
+        };
+
+        // (1) bandit selection (Alg. 1 line 8) — sorted for staging.
+        self.sw_select.start();
+        let mut selected = self.selector.select(m_s, &mut self.rng);
+        selected.sort_unstable();
+        self.sw_select.stop();
+
+        // (2) assemble Q* (item-major m_s × k) + position lookup.
+        self.sw_stage.start();
+        for p in self.sel_pos.iter_mut() {
+            *p = -1;
+        }
+        let mut q_sel = vec![0.0f32; selected.len() * k];
+        for (pos, &item) in selected.iter().enumerate() {
+            self.sel_pos[item as usize] = pos as i32;
+            q_sel[pos * k..(pos + 1) * k].copy_from_slice(self.q.row(item as usize));
+        }
+        self.sw_stage.stop();
+
+        // (3) participants + payload accounting.
+        let participants = self
+            .fleet
+            .sample_participants(self.cfg.train.theta, &mut self.rng);
+        let q_bytes = payload_bytes(selected.len(), k, self.cfg.simnet.bits_per_param);
+        for _ in &participants {
+            self.ledger.record_down(&self.cfg.simnet, q_bytes);
+        }
+
+        // (4) client compute, batched B clients per artifact execution.
+        let evaluate = self.t as usize % self.cfg.train.eval_every.max(1) == 0;
+        let b = self.runtime.borrow().b;
+        let mut g_total = vec![0.0f32; selected.len() * k];
+        let mut round_acc = MetricAccumulator::new();
+        for batch in participants.chunks(b) {
+            let rows: Vec<Vec<u32>> = batch
+                .iter()
+                .map(|&cid| self.fleet.client(cid).selected_row(&self.sel_pos))
+                .collect();
+            let row_refs: Vec<&Vec<u32>> = rows.iter().collect();
+
+            self.sw_solve.start();
+            let p = self.runtime.borrow_mut().solve_users(&q_sel, &row_refs)?;
+            self.sw_solve.stop();
+
+            self.sw_grad.start();
+            let g = self.runtime.borrow_mut().grad_batch(&q_sel, &row_refs, &p)?;
+            self.sw_grad.stop();
+            for (acc, v) in g_total.iter_mut().zip(&g) {
+                *acc += v;
+            }
+
+            // local model state + upload accounting
+            for (u, &cid) in batch.iter().enumerate() {
+                self.fleet.client_mut(cid).p = p[u * k..(u + 1) * k].to_vec();
+                self.ledger.record_up(&self.cfg.simnet, q_bytes);
+            }
+
+            // (6) local test metrics of contributing clients (§6.2): the
+            // recommendation x* = p_i^T Q uses the full current global
+            // model (inference-time download; see DESIGN.md §1).
+            if evaluate {
+                self.sw_eval.start();
+                let scores = self.runtime.borrow_mut().scores_all(self.q.data(), &p)?;
+                for (u, &cid) in batch.iter().enumerate() {
+                    let client = self.fleet.client(cid);
+                    if client.test_items.is_empty() {
+                        continue;
+                    }
+                    let ranked = rank_candidates(&scores[u * m..(u + 1) * m], &client.train_items);
+                    if let Some(ms) = user_metrics(&ranked, &client.test_items) {
+                        round_acc.push(&ms);
+                    }
+                }
+                self.sw_eval.stop();
+            }
+        }
+
+        // (5) aggregate + server-side Adam (Eq. 4).
+        self.sw_update.start();
+        if self.cfg.train.aggregate == Aggregate::Mean && !participants.is_empty() {
+            let inv = 1.0 / participants.len() as f32;
+            for v in g_total.iter_mut() {
+                *v *= inv;
+            }
+        }
+        self.adam.step_selected(&mut self.q, &selected, &g_total);
+        self.sw_update.stop();
+
+        // Eq. 13–14 rewards + bandit posterior update. The gradient fed
+        // to the reward engine is optionally 1/Θ-scaled so reward
+        // magnitudes stay commensurate with the N(0, 1/τ_θ) prior (see
+        // BanditConfig::mean_scaled_rewards).
+        self.sw_reward.start();
+        let reward_scale = if self.cfg.bandit.mean_scaled_rewards
+            && self.cfg.train.aggregate == Aggregate::Sum
+            && !participants.is_empty()
+        {
+            1.0 / participants.len() as f32
+        } else {
+            1.0
+        };
+        let mut rewards = Vec::with_capacity(selected.len());
+        let mut g_row = vec![0.0f32; k];
+        for (pos, &item) in selected.iter().enumerate() {
+            for (dst, src) in g_row.iter_mut().zip(&g_total[pos * k..(pos + 1) * k]) {
+                *dst = src * reward_scale;
+            }
+            let r = self.reward.observe(item, self.t, &g_row);
+            rewards.push((item, r));
+        }
+        if self.cfg.bandit.normalize_rewards {
+            standardize_rewards(&mut rewards, self.cfg.bandit.reward_std_scale);
+        }
+        self.selector.update(&rewards);
+        self.sw_reward.stop();
+
+        // global metric window (§6.2)
+        let raw = round_acc.mean();
+        if evaluate && round_acc.count() > 0 {
+            if self.metric_history.len() == self.cfg.train.metric_window {
+                self.metric_history.pop_front();
+            }
+            self.metric_history.push_back(raw);
+        }
+        let record = RoundRecord {
+            iter: self.t as usize,
+            m_s: selected.len(),
+            raw,
+            smoothed: self.smoothed_metrics(),
+            round_bytes: 2 * q_bytes * participants.len() as u64,
+        };
+        debug_log!(
+            "iter {} m_s={} raw={} smoothed={}",
+            record.iter,
+            record.m_s,
+            record.raw,
+            record.smoothed
+        );
+        self.history.push(record.clone());
+        Ok(record)
+    }
+}
+
+/// Standardize one round's rewards to zero mean / `scale` standard
+/// deviation (keeps the within-round ordering; calibrates the magnitude
+/// to the BTS prior — see `BanditConfig::reward_std_scale`).
+pub fn standardize_rewards(rewards: &mut [(u32, f64)], scale: f64) {
+    let n = rewards.len();
+    if n < 2 {
+        return;
+    }
+    let mean = rewards.iter().map(|(_, r)| r).sum::<f64>() / n as f64;
+    let var = rewards
+        .iter()
+        .map(|(_, r)| (r - mean).powi(2))
+        .sum::<f64>()
+        / n as f64;
+    let sd = var.sqrt().max(1e-12);
+    for (_, r) in rewards.iter_mut() {
+        *r = (*r - mean) / sd * scale;
+    }
+}
+
+/// Load or synthesize the configured dataset.
+pub fn load_dataset(cfg: &RunConfig, rng: &mut Rng) -> Result<Interactions> {
+    let data = match cfg.dataset.name.as_str() {
+        "file" => {
+            let path = cfg
+                .dataset
+                .path
+                .as_ref()
+                .context("dataset.name = \"file\" requires dataset.path")?;
+            let format = cfg
+                .dataset
+                .format
+                .as_ref()
+                .context("dataset.name = \"file\" requires dataset.format")?;
+            crate::data::loaders::load(format, path)?
+        }
+        _ => synthetic::generate(&cfg.dataset, rng),
+    };
+    let data = if cfg.dataset.min_user_interactions > 0 {
+        data.filter_min_user_interactions(cfg.dataset.min_user_interactions)
+    } else {
+        data
+    };
+    info!("dataset `{}`: {}", cfg.dataset.name, data.stats());
+    Ok(data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> RunConfig {
+        let mut cfg = RunConfig::paper_defaults();
+        cfg.apply_dataset_preset("synthetic-small").unwrap();
+        cfg.dataset.users = 48;
+        cfg.dataset.items = 96;
+        cfg.dataset.interactions = 900;
+        cfg.train.theta = 16;
+        cfg.train.iterations = 4;
+        cfg.train.payload_fraction = 0.25;
+        cfg.runtime.backend = "reference".into();
+        cfg
+    }
+
+    #[test]
+    fn trainer_runs_rounds_and_reports() {
+        let cfg = tiny_cfg();
+        let mut tr = Trainer::from_config(&cfg).unwrap();
+        let report = tr.run().unwrap();
+        assert_eq!(report.history.len(), 4);
+        assert_eq!(report.strategy, "bts");
+        assert_eq!(report.m, 96);
+        assert_eq!(report.m_s, 24);
+        assert!((report.payload_reduction_pct() - 75.0).abs() < 1e-9);
+        // payload accounting: 4 rounds × 16 participants × 2 directions
+        assert_eq!(report.ledger.down_msgs, 64);
+        assert_eq!(report.ledger.up_msgs, 64);
+        let expected_bytes = payload_bytes(24, 25, 64);
+        assert_eq!(report.ledger.down_bytes, 64 * expected_bytes);
+    }
+
+    #[test]
+    fn full_strategy_moves_whole_model() {
+        let mut cfg = tiny_cfg();
+        cfg.bandit.strategy = Strategy::Full;
+        let mut tr = Trainer::from_config(&cfg).unwrap();
+        let rec = tr.round().unwrap();
+        assert_eq!(rec.m_s, 96);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = tiny_cfg();
+        let r1 = Trainer::from_config(&cfg).unwrap().run().unwrap();
+        let r2 = Trainer::from_config(&cfg).unwrap().run().unwrap();
+        assert_eq!(r1.final_metrics.map, r2.final_metrics.map);
+        assert_eq!(r1.ledger.down_bytes, r2.ledger.down_bytes);
+    }
+
+    #[test]
+    fn clients_receive_factors() {
+        let cfg = tiny_cfg();
+        let mut tr = Trainer::from_config(&cfg).unwrap();
+        tr.round().unwrap();
+        let with_p = (0..tr.fleet().len())
+            .filter(|&c| !tr.fleet().client(c).p.is_empty())
+            .count();
+        assert_eq!(with_p, 16); // exactly Θ participants got fresh factors
+    }
+
+    #[test]
+    fn training_improves_metrics_on_learnable_data() {
+        let mut cfg = tiny_cfg();
+        cfg.dataset.users = 64;
+        cfg.dataset.items = 128;
+        cfg.dataset.interactions = 2500;
+        cfg.train.iterations = 60;
+        cfg.train.theta = 32;
+        cfg.train.payload_fraction = 1.0;
+        cfg.bandit.strategy = Strategy::Full;
+        let mut tr = Trainer::from_config(&cfg).unwrap();
+        let report = tr.run().unwrap();
+        let early = &report.history[4].raw;
+        let late = &report.final_metrics;
+        assert!(
+            late.map > early.map,
+            "MAP did not improve: early={} late={}",
+            early.map,
+            late.map
+        );
+        assert!(late.map > 0.05, "final MAP too low: {}", late.map);
+    }
+}

@@ -1,0 +1,139 @@
+//! Payload and network model (paper Table 1 + §1).
+//!
+//! Reproduces the paper's payload arithmetic — `(#parameters × bits) / 8`
+//! bytes with #parameters = #items × K — and layers a simple
+//! bandwidth/latency transfer model on top so the trainer can report the
+//! *simulated* communication time saved by payload optimization, which is
+//! the quantity the paper's motivation (Table 1) is about.
+
+use crate::config::SimNetConfig;
+
+/// Payload size in bytes for a factor-matrix slice of `items × k`
+/// parameters at `bits` per parameter (Table 1 formula).
+pub fn payload_bytes(items: usize, k: usize, bits: u32) -> u64 {
+    (items as u64) * (k as u64) * (bits as u64) / 8
+}
+
+/// Human-readable decimal size, matching the paper's Table 1 units
+/// (625KB, 1.6 MB, ..., 1.6 GB).
+pub fn human_bytes(bytes: u64) -> String {
+    let b = bytes as f64;
+    if b >= 1e9 {
+        format!("{:.1} GB", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.1} MB", b / 1e6)
+    } else if b >= 1e3 {
+        format!("{:.0} KB", b / 1e3)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Seconds to move `bytes` over the configured link (one direction).
+pub fn transfer_secs(cfg: &SimNetConfig, bytes: u64) -> f64 {
+    let bits = bytes as f64 * 8.0;
+    cfg.latency_ms / 1e3 + bits / (cfg.bandwidth_mbps * 1e6)
+}
+
+/// Cumulative communication accounting for one training run.
+#[derive(Debug, Clone, Default)]
+pub struct TrafficLedger {
+    /// Bytes server -> clients (Q* downloads).
+    pub down_bytes: u64,
+    /// Bytes clients -> server (∇Q* uploads).
+    pub up_bytes: u64,
+    /// Count of client messages in each direction.
+    pub down_msgs: u64,
+    pub up_msgs: u64,
+    /// Simulated transfer seconds (sum over messages).
+    pub sim_secs: f64,
+}
+
+impl TrafficLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one server->client model transmission.
+    pub fn record_down(&mut self, cfg: &SimNetConfig, bytes: u64) {
+        self.down_bytes += bytes;
+        self.down_msgs += 1;
+        self.sim_secs += transfer_secs(cfg, bytes);
+    }
+
+    /// Record one client->server gradient upload.
+    pub fn record_up(&mut self, cfg: &SimNetConfig, bytes: u64) {
+        self.up_bytes += bytes;
+        self.up_msgs += 1;
+        self.sim_secs += transfer_secs(cfg, bytes);
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.down_bytes + self.up_bytes
+    }
+}
+
+/// The paper's Table 1 row set: payloads for K = 20, f64 parameters.
+pub fn table1_rows() -> Vec<(usize, u64)> {
+    const ITEMS: &[usize] = &[3912, 10_000, 100_000, 500_000, 1_000_000, 10_000_000];
+    ITEMS
+        .iter()
+        .map(|&m| (m, payload_bytes(m, 20, 64)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+
+    #[test]
+    fn payload_formula_matches_table1() {
+        // Paper: 3912 items, K=20, 64-bit -> ~625KB
+        assert_eq!(payload_bytes(3912, 20, 64), 625_920);
+        assert_eq!(payload_bytes(10_000, 20, 64), 1_600_000);
+        assert_eq!(payload_bytes(100_000, 20, 64), 16_000_000);
+        assert_eq!(payload_bytes(1_000_000, 20, 64), 160_000_000);
+        assert_eq!(payload_bytes(10_000_000, 20, 64), 1_600_000_000);
+    }
+
+    #[test]
+    fn human_units_match_paper() {
+        assert_eq!(human_bytes(payload_bytes(3912, 20, 64)), "626 KB");
+        assert_eq!(human_bytes(payload_bytes(10_000, 20, 64)), "1.6 MB");
+        assert_eq!(human_bytes(payload_bytes(10_000_000, 20, 64)), "1.6 GB");
+        assert_eq!(human_bytes(12), "12 B");
+    }
+
+    #[test]
+    fn transfer_time_scales_with_bytes() {
+        let cfg = RunConfig::paper_defaults().simnet;
+        let t1 = transfer_secs(&cfg, 1_000_000);
+        let t2 = transfer_secs(&cfg, 2_000_000);
+        assert!(t2 > t1);
+        // latency floor
+        assert!(transfer_secs(&cfg, 0) >= cfg.latency_ms / 1e3);
+    }
+
+    #[test]
+    fn ledger_accumulates() {
+        let cfg = RunConfig::paper_defaults().simnet;
+        let mut l = TrafficLedger::new();
+        l.record_down(&cfg, 1000);
+        l.record_up(&cfg, 500);
+        l.record_up(&cfg, 500);
+        assert_eq!(l.down_bytes, 1000);
+        assert_eq!(l.up_bytes, 1000);
+        assert_eq!(l.down_msgs, 1);
+        assert_eq!(l.up_msgs, 2);
+        assert_eq!(l.total_bytes(), 2000);
+        assert!(l.sim_secs > 0.0);
+    }
+
+    #[test]
+    fn table1_has_all_rows() {
+        let rows = table1_rows();
+        assert_eq!(rows.len(), 6);
+        assert_eq!(rows[0], (3912, 625_920));
+    }
+}

@@ -1,0 +1,131 @@
+//! Minimal criterion-replacement bench harness (criterion unavailable
+//! offline). Warms up, runs timed batches until a wall-clock budget or
+//! iteration cap, reports mean / p50 / p95 and a throughput line.
+//!
+//! Used by every target under `benches/` (`harness = false`).
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:<40} iters={:<7} mean={:>12} p50={:>12} p95={:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+        );
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Bench runner with a wall-clock budget.
+pub struct Bencher {
+    budget: Duration,
+    max_iters: u64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            budget: Duration::from_secs(3),
+            max_iters: 1_000_000,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new(budget: Duration, max_iters: u64) -> Self {
+        Bencher { budget, max_iters }
+    }
+
+    /// Honour `FEDPAYLOAD_BENCH_BUDGET_SECS` so CI can shrink runtimes.
+    pub fn from_env() -> Self {
+        let secs = std::env::var("FEDPAYLOAD_BENCH_BUDGET_SECS")
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .unwrap_or(3.0);
+        Bencher::new(Duration::from_secs_f64(secs), 1_000_000)
+    }
+
+    /// Time `f` repeatedly; the closure's output is black-boxed.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        // Warmup: a few runs or 10% of budget.
+        let warmup_deadline = Instant::now() + self.budget / 10;
+        let mut warmups = 0;
+        while warmups < 3 || (Instant::now() < warmup_deadline && warmups < 100) {
+            black_box(f());
+            warmups += 1;
+        }
+
+        let mut samples_ns: Vec<u128> = Vec::new();
+        let deadline = Instant::now() + self.budget;
+        let mut iters = 0u64;
+        while Instant::now() < deadline && iters < self.max_iters {
+            let t0 = Instant::now();
+            black_box(f());
+            samples_ns.push(t0.elapsed().as_nanos());
+            iters += 1;
+        }
+        samples_ns.sort_unstable();
+        let mean = samples_ns.iter().sum::<u128>() as f64 / samples_ns.len() as f64;
+        let p = |q: f64| samples_ns[((samples_ns.len() - 1) as f64 * q) as usize] as f64;
+        let result = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ns: mean,
+            p50_ns: p(0.50),
+            p95_ns: p(0.95),
+        };
+        result.report();
+        result
+    }
+}
+
+/// One-shot convenience: bench with the env-configured budget.
+pub fn bench<T>(name: &str, f: impl FnMut() -> T) -> BenchResult {
+    Bencher::from_env().run(name, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let b = Bencher::new(Duration::from_millis(50), 10_000);
+        let r = b.run("noop-ish", || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(r.iters > 10);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p50_ns <= r.p95_ns);
+    }
+}

@@ -1,0 +1,78 @@
+//! Tiny CSV writer for experiment outputs (results/*.csv).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::Result;
+
+/// Buffered CSV writer with a fixed header written up front.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    columns: usize,
+}
+
+impl CsvWriter {
+    /// Create/truncate `path` and write the header row.
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> Result<CsvWriter> {
+        if let Some(parent) = path.as_ref().parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter {
+            out,
+            columns: header.len(),
+        })
+    }
+
+    /// Write one row of stringified fields (must match header arity).
+    pub fn row(&mut self, fields: &[String]) -> Result<()> {
+        anyhow::ensure!(
+            fields.len() == self.columns,
+            "csv row has {} fields, header has {}",
+            fields.len(),
+            self.columns
+        );
+        writeln!(self.out, "{}", fields.join(","))?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Format helper: fixed-precision float field.
+pub fn f(v: f64, prec: usize) -> String {
+    format!("{v:.prec$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("fedpayload_csv_test");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        w.row(&["1".into(), "2".into()]).unwrap();
+        w.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn arity_mismatch_errors() {
+        let dir = std::env::temp_dir().join("fedpayload_csv_test2");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        assert!(w.row(&["1".into()]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

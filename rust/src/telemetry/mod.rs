@@ -1,0 +1,171 @@
+//! Telemetry substrate: leveled logging, counters, wall-clock timers, CSV
+//! writers and the bench harness (criterion is unavailable offline).
+
+mod bench;
+mod csv;
+
+pub use bench::{bench, BenchResult, Bencher};
+pub use csv::CsvWriter;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+/// Log levels, lowest to highest priority.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+static LOG_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Set the global log threshold.
+pub fn set_log_level(level: Level) {
+    LOG_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Parse `debug|info|warn|error`.
+pub fn parse_level(s: &str) -> Option<Level> {
+    match s {
+        "debug" => Some(Level::Debug),
+        "info" => Some(Level::Info),
+        "warn" => Some(Level::Warn),
+        "error" => Some(Level::Error),
+        _ => None,
+    }
+}
+
+#[doc(hidden)]
+pub fn log_enabled(level: Level) -> bool {
+    level as u8 >= LOG_LEVEL.load(Ordering::Relaxed)
+}
+
+#[doc(hidden)]
+pub fn log_emit(level: Level, module: &str, msg: std::fmt::Arguments<'_>) {
+    if log_enabled(level) {
+        let tag = match level {
+            Level::Debug => "DEBUG",
+            Level::Info => "INFO ",
+            Level::Warn => "WARN ",
+            Level::Error => "ERROR",
+        };
+        eprintln!("[{tag}] {module}: {msg}");
+    }
+}
+
+/// `log!(Level::Info, "training {} rounds", n)` — leveled logging macro.
+#[macro_export]
+macro_rules! log {
+    ($level:expr, $($arg:tt)*) => {
+        $crate::telemetry::log_emit($level, module_path!(), format_args!($($arg)*))
+    };
+}
+
+/// Info-level logging.
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::log!($crate::telemetry::Level::Info, $($arg)*) };
+}
+
+/// Debug-level logging.
+#[macro_export]
+macro_rules! debug_log {
+    ($($arg:tt)*) => { $crate::log!($crate::telemetry::Level::Debug, $($arg)*) };
+}
+
+/// Warn-level logging.
+#[macro_export]
+macro_rules! warn_log {
+    ($($arg:tt)*) => { $crate::log!($crate::telemetry::Level::Warn, $($arg)*) };
+}
+
+/// A named wall-clock stopwatch accumulating across start/stop cycles.
+/// The trainer keeps one per phase (select/transmit/compute/aggregate)
+/// so EXPERIMENTS.md §Perf can attribute time per stage.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    pub name: &'static str,
+    total_ns: u128,
+    count: u64,
+    started: Option<Instant>,
+}
+
+impl Stopwatch {
+    pub fn new(name: &'static str) -> Self {
+        Stopwatch {
+            name,
+            total_ns: 0,
+            count: 0,
+            started: None,
+        }
+    }
+
+    pub fn start(&mut self) {
+        debug_assert!(self.started.is_none(), "stopwatch {} already running", self.name);
+        self.started = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.total_ns += t0.elapsed().as_nanos();
+            self.count += 1;
+        }
+    }
+
+    /// Time one closure.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        self.start();
+        let out = f();
+        self.stop();
+        out
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.total_ns as f64 / 1e9
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total_ns as f64 / self.count as f64 / 1e6
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new("t");
+        for _ in 0..3 {
+            sw.time(|| std::thread::sleep(std::time::Duration::from_millis(2)));
+        }
+        assert_eq!(sw.count(), 3);
+        assert!(sw.total_secs() >= 0.006);
+        assert!(sw.mean_ms() >= 2.0);
+    }
+
+    #[test]
+    fn levels_parse() {
+        assert_eq!(parse_level("debug"), Some(Level::Debug));
+        assert_eq!(parse_level("error"), Some(Level::Error));
+        assert_eq!(parse_level("loud"), None);
+    }
+
+    #[test]
+    fn log_threshold_respected() {
+        set_log_level(Level::Warn);
+        assert!(!log_enabled(Level::Info));
+        assert!(log_enabled(Level::Error));
+        set_log_level(Level::Info);
+    }
+}

@@ -1,0 +1,130 @@
+//! Launcher integration: run the compiled `fedpayload` binary end-to-end
+//! (train / info / experiments table1, config files, bad input handling).
+
+use std::process::Command;
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_fedpayload")
+}
+
+fn run(args: &[&str]) -> (bool, String) {
+    let out = Command::new(bin())
+        .args(args)
+        .output()
+        .expect("failed to spawn fedpayload");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn help_prints_usage() {
+    let (ok, text) = run(&["help"]);
+    assert!(ok);
+    assert!(text.contains("USAGE"));
+    let (ok, text) = run(&[]);
+    assert!(ok);
+    assert!(text.contains("USAGE"));
+}
+
+#[test]
+fn unknown_subcommand_fails() {
+    let (ok, text) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(text.contains("unknown subcommand"));
+}
+
+#[test]
+fn info_resolves_paper_defaults() {
+    let (ok, text) = run(&["info"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("K=25"), "{text}");
+    assert!(text.contains("tau0=10000"), "{text}");
+}
+
+#[test]
+fn train_reference_backend_small() {
+    let (ok, text) = run(&[
+        "train",
+        "--dataset",
+        "synthetic-small",
+        "--backend",
+        "reference",
+        "--iterations",
+        "5",
+        "--payload-fraction",
+        "0.25",
+        "--set",
+        "dataset.users=48",
+        "--set",
+        "dataset.items=96",
+        "--set",
+        "dataset.interactions=600",
+        "--set",
+        "train.theta=12",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("run complete"), "{text}");
+    assert!(text.contains("75% payload reduction"), "{text}");
+}
+
+#[test]
+fn train_with_config_file_and_override() {
+    let dir = std::env::temp_dir().join("fedpayload_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg_path = dir.join("run.toml");
+    std::fs::write(
+        &cfg_path,
+        r#"
+        [dataset]
+        name = "synthetic-small"
+        users = 48
+        items = 96
+        interactions = 600
+        [train]
+        iterations = 4
+        theta = 12
+        payload_fraction = 0.5
+        [runtime]
+        backend = "reference"
+        "#,
+    )
+    .unwrap();
+    let (ok, text) = run(&[
+        "train",
+        "--config",
+        cfg_path.to_str().unwrap(),
+        "--set",
+        "train.iterations=6",
+        "--strategy",
+        "random",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("strategy=random"), "{text}");
+    assert!(text.contains("iterations=6"), "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn experiments_table1_writes_csv() {
+    let dir = std::env::temp_dir().join("fedpayload_cli_t1");
+    std::fs::create_dir_all(&dir).unwrap();
+    let (ok, text) = run(&["experiments", "table1", "--out-dir", dir.to_str().unwrap()]);
+    assert!(ok, "{text}");
+    assert!(dir.join("table1.csv").exists());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn bad_flag_values_fail_cleanly() {
+    let (ok, text) = run(&["train", "--iterations", "notanumber"]);
+    assert!(!ok);
+    assert!(text.contains("error"), "{text}");
+    let (ok, _) = run(&["train", "--strategy", "alien"]);
+    assert!(!ok);
+    let (ok, _) = run(&["experiments", "all", "--scale", "enormous"]);
+    assert!(!ok);
+}

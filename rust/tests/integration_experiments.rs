@@ -1,0 +1,95 @@
+//! Experiment-harness integration: each paper table/figure generator runs
+//! at smoke scale and produces well-formed outputs.
+
+use fedpayload::config::Strategy;
+use fedpayload::experiments::{self, Scale};
+
+fn out_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("fedpayload_exp_{name}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn backend() -> &'static str {
+    if std::path::Path::new("artifacts/manifest.txt").exists() {
+        "pjrt"
+    } else {
+        "reference"
+    }
+}
+
+#[test]
+fn table1_csv_matches_paper_rows() {
+    let dir = out_dir("t1");
+    experiments::table1(&dir).unwrap();
+    let text = std::fs::read_to_string(dir.join("table1.csv")).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 7); // header + 6 rows
+    assert!(lines[1].starts_with("3912,625920,"));
+    assert!(lines[6].starts_with("10000000,1600000000,"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn table2_reports_all_datasets() {
+    let dir = out_dir("t2");
+    experiments::table2(&dir, &Scale::smoke()).unwrap();
+    let text = std::fs::read_to_string(dir.join("table2.csv")).unwrap();
+    for ds in experiments::DATASETS {
+        assert!(text.contains(ds), "{ds} missing");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn fig3_produces_all_three_curves() {
+    let dir = out_dir("f3");
+    let mut scale = Scale::smoke();
+    scale.iterations = 12;
+    scale.eval_every = 3;
+    experiments::fig3(&dir, "movielens", &scale, backend()).unwrap();
+    let text = std::fs::read_to_string(dir.join("fig3_movielens.csv")).unwrap();
+    for method in ["fcf", "fcf-bts", "fcf-random"] {
+        let n = text
+            .lines()
+            .filter(|l| l.split(',').nth(1) == Some(method))
+            .count();
+        assert_eq!(n, 4, "{method}: expected 4 eval rows, got {n}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn run_rebuilds_is_deterministic() {
+    let scale = Scale::smoke();
+    let a = experiments::run_rebuilds("movielens", &scale, backend(), &[Strategy::Random], 0.25)
+        .unwrap();
+    let b = experiments::run_rebuilds("movielens", &scale, backend(), &[Strategy::Random], 0.25)
+        .unwrap();
+    assert_eq!(
+        a.by_strategy["random"].mean().map,
+        b.by_strategy["random"].mean().map
+    );
+    assert_eq!(a.toplist.mean().precision, b.toplist.mean().precision);
+}
+
+#[test]
+fn strategies_share_identical_splits_within_rebuild() {
+    // Both strategies in one run_rebuilds call must see the same data:
+    // their reports carry the same item count and the identical ledger
+    // shape at equal payload fractions.
+    let scale = Scale::smoke();
+    let out = experiments::run_rebuilds(
+        "movielens",
+        &scale,
+        backend(),
+        &[Strategy::Bts, Strategy::Random],
+        0.25,
+    )
+    .unwrap();
+    let bts = &out.last_reports["bts"];
+    let rnd = &out.last_reports["random"];
+    assert_eq!(bts.m, rnd.m);
+    assert_eq!(bts.m_s, rnd.m_s);
+    assert_eq!(bts.ledger.down_bytes, rnd.ledger.down_bytes);
+}

@@ -1,0 +1,164 @@
+//! Differential integration tests: the AOT-compiled PJRT artifacts vs the
+//! pure-Rust reference backend, through the full FcfRuntime tiling path.
+//!
+//! Requires `artifacts/` (run `make artifacts`); tests are skipped with a
+//! notice when it is missing so `cargo test` stays runnable pre-build.
+
+use fedpayload::linalg::Mat;
+use fedpayload::rng::Rng;
+use fedpayload::runtime::{
+    manifest::Manifest, pjrt::PjrtBackend, reference::ReferenceBackend, ComputeBackend,
+    FcfRuntime,
+};
+
+const ART_DIR: &str = "artifacts";
+
+fn artifacts_available() -> bool {
+    std::path::Path::new(ART_DIR).join("manifest.txt").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available() {
+            eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+            return;
+        }
+    };
+}
+
+fn load_pair() -> (FcfRuntime, FcfRuntime, Manifest) {
+    let manifest = Manifest::load(std::path::Path::new(ART_DIR)).unwrap();
+    let pjrt = PjrtBackend::load(ART_DIR).unwrap();
+    let rf = ReferenceBackend::new(
+        manifest.b,
+        manifest.k,
+        manifest.tiles.clone(),
+        manifest.alpha,
+        manifest.lam,
+    );
+    (
+        FcfRuntime::new(Box::new(pjrt)),
+        FcfRuntime::new(Box::new(rf)),
+        manifest,
+    )
+}
+
+/// Random selected-item factors + user rows for a scenario.
+fn scenario(
+    m_s: usize,
+    n_users: usize,
+    k: usize,
+    density: f64,
+    seed: u64,
+) -> (Vec<f32>, Vec<Vec<u32>>) {
+    let mut rng = Rng::seed_from_u64(seed);
+    let q_sel: Vec<f32> = (0..m_s * k).map(|_| rng.normal() as f32 * 0.3).collect();
+    let rows: Vec<Vec<u32>> = (0..n_users)
+        .map(|_| {
+            let mut row: Vec<u32> = (0..m_s as u32)
+                .filter(|_| rng.chance(density))
+                .collect();
+            row.sort_unstable();
+            row
+        })
+        .collect();
+    (q_sel, rows)
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    let mut worst = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        worst = worst.max((x - y).abs());
+    }
+    assert!(worst < tol, "{what}: max abs diff {worst} > {tol}");
+}
+
+#[test]
+fn pjrt_loads_and_reports_manifest_geometry() {
+    require_artifacts!();
+    let backend = PjrtBackend::load(ART_DIR).unwrap();
+    let (b, k, tiles) = backend.geometry();
+    assert_eq!(b, 64);
+    assert_eq!(k, 25);
+    assert_eq!(tiles, vec![512, 2048]);
+}
+
+#[test]
+fn solve_users_matches_reference_single_tile() {
+    require_artifacts!();
+    let (mut pj, mut rf, m) = load_pair();
+    let (q_sel, rows) = scenario(300, 40, m.k, 0.05, 11);
+    let refs: Vec<&Vec<u32>> = rows.iter().collect();
+    let p1 = pj.solve_users(&q_sel, &refs).unwrap();
+    let p2 = rf.solve_users(&q_sel, &refs).unwrap();
+    assert_eq!(p1.len(), 40 * m.k);
+    assert_close(&p1, &p2, 2e-3, "solve_users");
+}
+
+#[test]
+fn solve_users_matches_reference_multi_tile() {
+    require_artifacts!();
+    let (mut pj, mut rf, m) = load_pair();
+    // 2600 items -> one 2048 chunk + one 2048 remainder chunk
+    let (q_sel, rows) = scenario(2600, 64, m.k, 0.02, 12);
+    let refs: Vec<&Vec<u32>> = rows.iter().collect();
+    let p1 = pj.solve_users(&q_sel, &refs).unwrap();
+    let p2 = rf.solve_users(&q_sel, &refs).unwrap();
+    assert_close(&p1, &p2, 2e-3, "solve_users multi-tile");
+}
+
+#[test]
+fn grad_batch_matches_reference() {
+    require_artifacts!();
+    let (mut pj, mut rf, m) = load_pair();
+    let (q_sel, rows) = scenario(700, 50, m.k, 0.04, 13);
+    let refs: Vec<&Vec<u32>> = rows.iter().collect();
+    let p = rf.solve_users(&q_sel, &refs).unwrap();
+    let g1 = pj.grad_batch(&q_sel, &refs, &p).unwrap();
+    let g2 = rf.grad_batch(&q_sel, &refs, &p).unwrap();
+    assert_eq!(g1.len(), 700 * m.k);
+    // gradients scale with user count — tolerance relative to magnitude
+    let scale = g2.iter().fold(0.0f32, |a, &x| a.max(x.abs())).max(1.0);
+    let tol = 1e-3 * scale;
+    assert_close(&g1, &g2, tol, "grad_batch");
+}
+
+#[test]
+fn scores_all_matches_reference() {
+    require_artifacts!();
+    let (mut pj, mut rf, m) = load_pair();
+    let mut rng = Rng::seed_from_u64(14);
+    let items = 3000;
+    let q = Mat::randn(items, m.k, 0.3, &mut rng);
+    let p: Vec<f32> = (0..20 * m.k).map(|_| rng.normal() as f32 * 0.3).collect();
+    let s1 = pj.scores_all(q.data(), &p).unwrap();
+    let s2 = rf.scores_all(q.data(), &p).unwrap();
+    assert_eq!(s1.len(), 20 * items);
+    assert_close(&s1, &s2, 1e-3, "scores_all");
+}
+
+#[test]
+fn empty_user_rows_produce_zero_factors() {
+    require_artifacts!();
+    let (mut pj, _, m) = load_pair();
+    let (q_sel, _) = scenario(128, 0, m.k, 0.0, 15);
+    let empty_rows: Vec<Vec<u32>> = vec![vec![], vec![]];
+    let refs: Vec<&Vec<u32>> = empty_rows.iter().collect();
+    let p = pj.solve_users(&q_sel, &refs).unwrap();
+    // no interactions -> b = 0 -> p = 0
+    assert!(p.iter().all(|&x| x.abs() < 1e-5), "expected zeros");
+}
+
+#[test]
+fn manifest_matches_paper_hyperparameters() {
+    require_artifacts!();
+    let m = Manifest::load(std::path::Path::new(ART_DIR)).unwrap();
+    assert_eq!(m.k, 25, "Table 3: K = 25");
+    assert_eq!(m.alpha, 4.0, "Table 3: alpha = 4");
+    assert_eq!(m.lam, 1.0, "Table 3: lambda = 1");
+    assert_eq!(m.beta1, 0.1, "Table 3: beta1 = 0.1");
+    assert_eq!(m.beta2, 0.99, "Table 3: beta2 = 0.99");
+    let model = fedpayload::config::RunConfig::paper_defaults().model;
+    m.check_model(&model).unwrap();
+}

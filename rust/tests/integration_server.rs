@@ -1,0 +1,161 @@
+//! End-to-end coordinator tests over the real PJRT artifacts: full
+//! training runs, payload accounting, convergence on learnable data, and
+//! PJRT-vs-reference agreement of a whole training trajectory.
+
+use fedpayload::config::{RunConfig, Strategy};
+use fedpayload::rng::Rng;
+use fedpayload::server::{load_dataset, standardize_rewards, Trainer};
+use fedpayload::simnet::payload_bytes;
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/manifest.txt").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available() {
+            eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+            return;
+        }
+    };
+}
+
+fn tiny_cfg(backend: &str) -> RunConfig {
+    let mut cfg = RunConfig::paper_defaults();
+    cfg.apply_dataset_preset("synthetic-small").unwrap();
+    cfg.dataset.users = 96;
+    cfg.dataset.items = 256;
+    cfg.dataset.interactions = 2_500;
+    cfg.train.theta = 24;
+    cfg.train.iterations = 30;
+    cfg.train.payload_fraction = 0.25;
+    cfg.train.eval_every = 3;
+    cfg.runtime.backend = backend.into();
+    cfg
+}
+
+#[test]
+fn pjrt_training_run_end_to_end() {
+    require_artifacts!();
+    let cfg = tiny_cfg("pjrt");
+    let report = Trainer::from_config(&cfg).unwrap().run().unwrap();
+    assert_eq!(report.history.len(), 30);
+    assert_eq!(report.m_s, 64);
+    // every round moved Θ * 2 messages of the reduced payload
+    assert_eq!(report.ledger.down_msgs, 30 * 24);
+    assert_eq!(
+        report.ledger.down_bytes,
+        30 * 24 * payload_bytes(64, 25, 64)
+    );
+    // metrics were actually computed
+    assert!(report.final_metrics.precision >= 0.0);
+    assert!(report.history.iter().any(|r| r.raw.precision > 0.0));
+}
+
+#[test]
+fn pjrt_and_reference_trajectories_agree() {
+    require_artifacts!();
+    // identical config + seed => identical sampling decisions; the only
+    // divergence source is kernel arithmetic (CG vs Cholesky, fp order).
+    // Metrics must agree closely for the whole (short) run.
+    let mut cfg = tiny_cfg("pjrt");
+    cfg.train.iterations = 10;
+    let r_pjrt = Trainer::from_config(&cfg).unwrap().run().unwrap();
+    cfg.runtime.backend = "reference".into();
+    let r_ref = Trainer::from_config(&cfg).unwrap().run().unwrap();
+    for (a, b) in r_pjrt.history.iter().zip(&r_ref.history) {
+        assert_eq!(a.m_s, b.m_s);
+        assert!(
+            (a.raw.map - b.raw.map).abs() < 0.05,
+            "iter {}: pjrt {} vs ref {}",
+            a.iter,
+            a.raw.map,
+            b.raw.map
+        );
+    }
+    assert!((r_pjrt.final_metrics.map - r_ref.final_metrics.map).abs() < 0.05);
+}
+
+#[test]
+fn full_payload_converges_on_learnable_data() {
+    require_artifacts!();
+    let mut cfg = tiny_cfg("pjrt");
+    cfg.bandit.strategy = Strategy::Full;
+    cfg.train.payload_fraction = 1.0;
+    cfg.train.iterations = 80;
+    let report = Trainer::from_config(&cfg).unwrap().run().unwrap();
+    let early = report.history[9].smoothed.map;
+    let late = report.final_metrics.map;
+    assert!(late > early, "no learning: early {early} late {late}");
+    assert!(late > 1.3 * early, "weak learning: early {early} late {late}");
+    assert!(late > 0.05, "final MAP too low: {late}");
+}
+
+#[test]
+fn all_strategies_run_on_pjrt() {
+    require_artifacts!();
+    for strategy in [
+        Strategy::Bts,
+        Strategy::Random,
+        Strategy::Full,
+        Strategy::EpsGreedy,
+        Strategy::Ucb1,
+    ] {
+        let mut cfg = tiny_cfg("pjrt");
+        cfg.bandit.strategy = strategy;
+        cfg.train.iterations = 5;
+        let report = Trainer::from_config(&cfg).unwrap().run().unwrap();
+        assert_eq!(report.history.len(), 5, "{:?}", strategy);
+    }
+}
+
+#[test]
+fn payload_fraction_sweep_scales_traffic_linearly() {
+    require_artifacts!();
+    let mut bytes = Vec::new();
+    for f in [0.125, 0.25, 0.5] {
+        let mut cfg = tiny_cfg("pjrt");
+        cfg.train.payload_fraction = f;
+        cfg.train.iterations = 3;
+        let report = Trainer::from_config(&cfg).unwrap().run().unwrap();
+        bytes.push(report.ledger.down_bytes);
+    }
+    assert_eq!(bytes[1], bytes[0] * 2);
+    assert_eq!(bytes[2], bytes[1] * 2);
+}
+
+#[test]
+fn reward_standardization_is_zero_mean_unit_sd() {
+    let mut rewards: Vec<(u32, f64)> = (0..100).map(|i| (i, (i as f64 * 0.7).sin() * 50.0)).collect();
+    standardize_rewards(&mut rewards, 1.0);
+    let mean: f64 = rewards.iter().map(|(_, r)| r).sum::<f64>() / 100.0;
+    let var: f64 = rewards.iter().map(|(_, r)| (r - mean).powi(2)).sum::<f64>() / 100.0;
+    assert!(mean.abs() < 1e-9);
+    assert!((var - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn dataset_loading_via_file_config() {
+    let dir = std::env::temp_dir().join("fedpayload_server_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ratings.dat");
+    let mut text = String::new();
+    for u in 1..=40 {
+        for i in 1..=12 {
+            if (u + i) % 3 != 0 {
+                text.push_str(&format!("{u}::{i}::5::0\n"));
+            }
+        }
+    }
+    std::fs::write(&path, text).unwrap();
+    let mut cfg = RunConfig::paper_defaults();
+    cfg.dataset.name = "file".into();
+    cfg.dataset.path = Some(path.to_string_lossy().into_owned());
+    cfg.dataset.format = Some("movielens".into());
+    cfg.dataset.min_user_interactions = 5;
+    let mut rng = Rng::seed_from_u64(1);
+    let data = load_dataset(&cfg, &mut rng).unwrap();
+    assert_eq!(data.num_users(), 40);
+    assert!(data.nnz() > 300);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,264 @@
+//! Property-based tests (hand-rolled generator loop; proptest is not
+//! available offline): randomized invariants over the bandit, metrics,
+//! data, runtime tiling and reward substrates. Each property runs across
+//! many seeded cases; failures print the seed for reproduction.
+
+use fedpayload::bandit::{make_selector, ItemSelector};
+use fedpayload::config::{RunConfig, Strategy};
+use fedpayload::data::Interactions;
+use fedpayload::linalg::{cholesky_solve, cosine_sim, Mat};
+use fedpayload::metrics::{best_metrics, rank_candidates, raw_metrics, user_metrics};
+use fedpayload::reward::RewardEngine;
+use fedpayload::rng::Rng;
+use fedpayload::runtime::plan_chunks;
+
+const CASES: u64 = 60;
+
+/// Property: every selector returns distinct, in-range items of the
+/// requested count (Full returns the catalog), under random reward
+/// histories.
+#[test]
+fn prop_selectors_return_valid_subsets() {
+    let bandit_cfg = RunConfig::paper_defaults().bandit;
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed);
+        let m = 1 + rng.below(500);
+        let m_s = 1 + rng.below(m);
+        for strategy in [
+            Strategy::Bts,
+            Strategy::Random,
+            Strategy::EpsGreedy,
+            Strategy::Ucb1,
+        ] {
+            let mut sel = make_selector(strategy, m, &bandit_cfg);
+            // random reward history
+            for _ in 0..rng.below(5) {
+                let rewards: Vec<(u32, f64)> = (0..rng.below(m))
+                    .map(|_| (rng.below(m) as u32, rng.normal()))
+                    .collect();
+                sel.update(&rewards);
+            }
+            let picks = sel.select(m_s, &mut rng);
+            assert_eq!(picks.len(), m_s, "seed {seed} {strategy:?}");
+            let mut sorted = picks.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), m_s, "seed {seed} {strategy:?} dup");
+            assert!(sorted.iter().all(|&p| (p as usize) < m), "seed {seed}");
+        }
+    }
+}
+
+/// Property: raw metrics are bounded in [0, 1] and normalized metrics
+/// never exceed 1; a perfect list always normalizes to 1.
+#[test]
+fn prop_metrics_bounded_and_perfect_list_is_one() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(1000 + seed);
+        let catalog = 50 + rng.below(200);
+        let n_test = 1 + rng.below(30.min(catalog));
+        let mut items: Vec<u32> = (0..catalog as u32).collect();
+        rng.shuffle(&mut items);
+        let mut test: Vec<u32> = items[..n_test].to_vec();
+        test.sort_unstable();
+        let ranked: Vec<u32> = items[n_test..].iter().copied().take(100).collect();
+        let raw = raw_metrics(&ranked, &test);
+        for v in [raw.precision, raw.recall, raw.f1, raw.map] {
+            assert!((0.0..=1.0).contains(&v), "seed {seed}: {v}");
+        }
+        // perfect list
+        let mut perfect = test.clone();
+        perfect.extend(items[n_test..].iter().copied().take(100));
+        let norm = user_metrics(&perfect, &test).unwrap();
+        assert!((norm.precision - 1.0).abs() < 1e-9, "seed {seed}");
+        assert!((norm.map - 1.0).abs() < 1e-9, "seed {seed}");
+        // raw <= best
+        let best = best_metrics(n_test);
+        assert!(raw.precision <= best.precision + 1e-9);
+        assert!(raw.recall <= best.recall + 1e-9);
+    }
+}
+
+/// Property: rank_candidates never returns train items, never duplicates,
+/// and returns scores in non-increasing order.
+#[test]
+fn prop_rank_candidates_sound() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(2000 + seed);
+        let m = 20 + rng.below(500);
+        let scores: Vec<f32> = (0..m).map(|_| rng.normal() as f32).collect();
+        let mut train: Vec<u32> = (0..m as u32).filter(|_| rng.chance(0.2)).collect();
+        train.sort_unstable();
+        let ranked = rank_candidates(&scores, &train);
+        assert!(ranked.len() <= 100);
+        let mut seen = std::collections::HashSet::new();
+        let mut prev = f32::INFINITY;
+        for &i in &ranked {
+            assert!(train.binary_search(&i).is_err(), "seed {seed}: train item");
+            assert!(seen.insert(i), "seed {seed}: duplicate");
+            assert!(scores[i as usize] <= prev, "seed {seed}: order");
+            prev = scores[i as usize];
+        }
+    }
+}
+
+/// Property: per-user splits partition each user's items exactly, with
+/// no leakage, for arbitrary interaction patterns.
+#[test]
+fn prop_split_partitions_rows() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(3000 + seed);
+        let users = 1 + rng.below(40);
+        let items = 2 + rng.below(80);
+        let mut pairs = Vec::new();
+        for u in 0..users {
+            for i in 0..items {
+                if rng.chance(0.15) {
+                    pairs.push((u as u32, i as u32));
+                }
+            }
+        }
+        let x = Interactions::from_pairs(users, items, pairs).unwrap();
+        let s = x.split(0.8, &mut rng);
+        assert_eq!(s.train.nnz() + s.test.nnz(), x.nnz(), "seed {seed}");
+        for u in 0..users {
+            let mut merged: Vec<u32> = s
+                .train
+                .user_items(u)
+                .iter()
+                .chain(s.test.user_items(u))
+                .copied()
+                .collect();
+            merged.sort_unstable();
+            assert_eq!(merged, x.user_items(u), "seed {seed} user {u}");
+            if x.user_degree(u) >= 1 {
+                assert!(s.train.user_degree(u) >= 1, "seed {seed} user {u}");
+            }
+        }
+    }
+}
+
+/// Property: the tile planner covers [0, m_s) exactly once with chunks
+/// no larger than their tile, for arbitrary m_s and tile sets.
+#[test]
+fn prop_plan_chunks_partitions() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(4000 + seed);
+        let tiles = match rng.below(3) {
+            0 => vec![512, 2048],
+            1 => vec![128],
+            _ => vec![64, 256, 1024],
+        };
+        let m_s = 1 + rng.below(6000);
+        let plan = plan_chunks(m_s, &tiles);
+        let mut covered = 0;
+        for c in &plan {
+            assert_eq!(c.start, covered, "seed {seed}");
+            assert!(c.len >= 1 && c.len <= c.tile, "seed {seed}");
+            assert!(tiles.contains(&c.tile), "seed {seed}");
+            covered += c.len;
+        }
+        assert_eq!(covered, m_s, "seed {seed}");
+    }
+}
+
+/// Property: Cholesky solve residuals stay small for random SPD systems
+/// of any size up to K=32.
+#[test]
+fn prop_cholesky_residuals() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(5000 + seed);
+        let k = 1 + rng.below(32);
+        let mut g = Mat::zeros(k, k);
+        for i in 0..k {
+            for j in 0..k {
+                g.set(i, j, rng.normal() as f32);
+            }
+        }
+        let mut a = Mat::zeros(k, k);
+        for i in 0..k {
+            for j in 0..k {
+                let mut s = 0.0;
+                for p in 0..k {
+                    s += g.get(i, p) * g.get(j, p);
+                }
+                a.set(i, j, s);
+            }
+        }
+        let b: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+        let x = cholesky_solve(&a, 1.0, &b);
+        for i in 0..k {
+            let mut r = -b[i] + x[i];
+            for j in 0..k {
+                r += a.get(i, j) * x[j];
+            }
+            let scale = b.iter().fold(1.0f32, |acc, v| acc.max(v.abs()));
+            assert!(r.abs() < 1e-2 * scale, "seed {seed} k={k} resid {r}");
+        }
+    }
+}
+
+/// Property: rewards are always finite, for arbitrary gradient sequences
+/// (including zeros, huge values and sign flips), under both weightings.
+#[test]
+fn prop_rewards_always_finite() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(6000 + seed);
+        let k = 1 + rng.below(30);
+        let mut engine = RewardEngine::new(8, k, 0.999, 0.99);
+        for t in 1..=50u64 {
+            let item = rng.below(8) as u32;
+            let scale = match rng.below(3) {
+                0 => 0.0,
+                1 => 1.0,
+                _ => 1e6,
+            };
+            let grad: Vec<f32> = (0..k).map(|_| rng.normal() as f32 * scale).collect();
+            let r = engine.observe(item, t, &grad);
+            assert!(r.is_finite(), "seed {seed} t={t} r={r}");
+        }
+    }
+}
+
+/// Property: cosine similarity is symmetric, bounded and scale-invariant.
+#[test]
+fn prop_cosine_properties() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(7000 + seed);
+        let k = 1 + rng.below(40);
+        let a: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+        let c1 = cosine_sim(&a, &b);
+        let c2 = cosine_sim(&b, &a);
+        assert!((c1 - c2).abs() < 1e-6, "seed {seed}");
+        assert!((-1.0..=1.0).contains(&c1), "seed {seed}");
+        let a2: Vec<f32> = a.iter().map(|x| x * 7.5).collect();
+        let c3 = cosine_sim(&a2, &b);
+        assert!((c1 - c3).abs() < 1e-4, "seed {seed}: not scale-invariant");
+    }
+}
+
+/// Property: BTS posterior mean stays a convex combination of the prior
+/// mean and the running reward mean (Eq. 10), for any reward sequence.
+#[test]
+fn prop_bts_posterior_convexity() {
+    use fedpayload::bandit::BtsSelector;
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(8000 + seed);
+        let mu0 = rng.normal();
+        let mut bts = BtsSelector::new(4, mu0, 100.0);
+        let mut sum = 0.0;
+        let mut n = 0u64;
+        for _ in 0..1 + rng.below(50) {
+            let r = rng.normal() * 10.0;
+            bts.update(&[(2, r)]);
+            sum += r;
+            n += 1;
+        }
+        let z = sum / n as f64;
+        let (mu_hat, tau_hat) = bts.posterior(2);
+        let (lo, hi) = if mu0 < z { (mu0, z) } else { (z, mu0) };
+        assert!(mu_hat >= lo - 1e-9 && mu_hat <= hi + 1e-9, "seed {seed}");
+        assert_eq!(tau_hat, 100.0 + n as f64);
+    }
+}
