@@ -1,0 +1,69 @@
+//! Encode/decode throughput of the wire payload codecs at Last-FM scale
+//! (M_s = 1763 selected items × K = 25 at 90% reduction), plus the sparse
+//! upload path. Prints frame sizes and compression ratios next to the
+//! timings so the bandwidth/CPU trade-off of each precision is one read.
+
+use fedpayload::rng::Rng;
+use fedpayload::telemetry::bench;
+use fedpayload::wire::{make_codec, Precision, SparsePolicy};
+
+fn main() {
+    let (rows, cols) = (1763usize, 25usize);
+    let mut rng = Rng::seed_from_u64(7);
+    let q: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32 * 0.1).collect();
+    // gradient-like upload: ~40% of rows zero
+    let mut g = q.clone();
+    for r in 0..rows {
+        if r % 5 < 2 {
+            g[r * cols..(r + 1) * cols].fill(0.0);
+        }
+    }
+    let raw_mb = (rows * cols * 4) as f64 / 1e6;
+
+    println!("=== dense download frames ({rows} x {cols}) ===");
+    for p in [Precision::F64, Precision::F32, Precision::F16, Precision::Int8] {
+        let codec = make_codec(p);
+        let frame = codec.encode_dense(&q, rows, cols).unwrap();
+        println!(
+            "{:<5} frame = {:>7} bytes ({:.2}x vs f32 raw)",
+            p.name(),
+            frame.len(),
+            (rows * cols * 4) as f64 / frame.len() as f64
+        );
+        let enc = bench(&format!("encode_dense_{}", p.name()), || {
+            codec.encode_dense(&q, rows, cols).unwrap()
+        });
+        let dec = bench(&format!("decode_dense_{}", p.name()), || {
+            codec.decode_dense(&frame).unwrap()
+        });
+        println!(
+            "  throughput: encode {:.0} MB/s, decode {:.0} MB/s (f32-equivalent)",
+            raw_mb / (enc.mean_ns / 1e9),
+            raw_mb / (dec.mean_ns / 1e9)
+        );
+    }
+
+    println!("\n=== sparse upload frames (40% zero rows) ===");
+    for (label, policy) in [
+        ("keep-all", SparsePolicy::default()),
+        (
+            "top176",
+            SparsePolicy {
+                top_k: rows / 10,
+                threshold: 0.0,
+            },
+        ),
+    ] {
+        for p in [Precision::F32, Precision::Int8] {
+            let codec = make_codec(p);
+            let frame = codec.encode_sparse(&g, rows, cols, &policy).unwrap();
+            println!("{:<5} {label}: frame = {} bytes", p.name(), frame.len());
+            bench(&format!("encode_sparse_{}_{label}", p.name()), || {
+                codec.encode_sparse(&g, rows, cols, &policy).unwrap()
+            });
+            bench(&format!("decode_sparse_{}_{label}", p.name()), || {
+                codec.decode_sparse(&frame).unwrap()
+            });
+        }
+    }
+}

@@ -42,6 +42,9 @@ const VALUE_KEYS: &[&str] = &[
     "format",
     "path",
     "output",
+    "codec",
+    "precision",
+    "sparse-topk",
 ];
 
 impl Args {
@@ -129,6 +132,15 @@ mod tests {
         let a = parse(&["train", "--dataset", "lastfm", "--iterations=55"]);
         assert_eq!(a.opt("dataset"), Some("lastfm"));
         assert_eq!(a.opt_or::<usize>("iterations", 0).unwrap(), 55);
+    }
+
+    #[test]
+    fn codec_options_take_values() {
+        let a = parse(&["train", "--codec", "int8", "--sparse-topk", "32"]);
+        assert_eq!(a.opt("codec"), Some("int8"));
+        assert_eq!(a.opt_or::<usize>("sparse-topk", 0).unwrap(), 32);
+        let a = parse(&["train", "--precision=f16"]);
+        assert_eq!(a.opt("precision"), Some("f16"));
     }
 
     #[test]

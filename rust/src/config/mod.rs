@@ -149,6 +149,23 @@ pub struct TrainConfig {
     pub eval_every: usize,
 }
 
+/// Wire codec for the round-trip payloads (the second payload-reduction
+/// axis; see the `wire` module). Defaults preserve exact f32 round-trips.
+#[derive(Debug, Clone)]
+pub struct CodecConfig {
+    /// Element precision on the wire: `f64 | f32 | f16 | int8`. The model
+    /// is f32 in memory, so `f32` is lossless; `f64` reproduces the
+    /// paper's Table 1 64-bit accounting; `f16`/`int8` trade bounded
+    /// quantization error for 2×/~3.7× smaller frames.
+    pub precision: crate::wire::Precision,
+    /// Upload top-k sparsification: keep only the k largest-norm gradient
+    /// rows per upload (0 = keep all nonzero rows).
+    pub sparse_topk: usize,
+    /// Drop upload rows with L2 norm ≤ this threshold (0.0 = drop only
+    /// exactly-zero rows, which is lossless).
+    pub sparse_threshold: f64,
+}
+
 /// Payload / network model (Table 1).
 #[derive(Debug, Clone)]
 pub struct SimNetConfig {
@@ -183,6 +200,7 @@ pub struct RunConfig {
     pub model: ModelConfig,
     pub bandit: BanditConfig,
     pub train: TrainConfig,
+    pub codec: CodecConfig,
     pub simnet: SimNetConfig,
     pub runtime: RuntimeConfig,
 }
@@ -235,6 +253,11 @@ impl RunConfig {
                 metric_window: 10,
                 aggregate: Aggregate::Sum,
                 eval_every: 1,
+            },
+            codec: CodecConfig {
+                precision: crate::wire::Precision::F32,
+                sparse_topk: 0,
+                sparse_threshold: 0.0,
             },
             simnet: SimNetConfig {
                 bits_per_param: 64,
@@ -368,6 +391,15 @@ impl RunConfig {
                 other => bail!("unknown aggregate `{other}` (sum|mean)"),
             };
         }
+        if let Some(v) = doc.get("codec.precision") {
+            cfg.codec.precision = crate::wire::Precision::parse(v.as_str()?)?;
+        }
+        take!("codec.sparse_topk", cfg.codec.sparse_topk, as_usize);
+        take!(
+            "codec.sparse_threshold",
+            cfg.codec.sparse_threshold,
+            as_f64
+        );
         take!("simnet.bits_per_param", cfg.simnet.bits_per_param, as_u64_u32);
         take!("simnet.bandwidth_mbps", cfg.simnet.bandwidth_mbps, as_f64);
         take!("simnet.latency_ms", cfg.simnet.latency_ms, as_f64);
@@ -407,6 +439,12 @@ impl RunConfig {
         }
         if self.train.metric_window == 0 {
             bail!("train.metric_window must be > 0");
+        }
+        if !(self.codec.sparse_threshold.is_finite() && self.codec.sparse_threshold >= 0.0) {
+            bail!(
+                "codec.sparse_threshold must be a finite value >= 0, got {}",
+                self.codec.sparse_threshold
+            );
         }
         match self.runtime.backend.as_str() {
             "pjrt" | "reference" => {}
@@ -498,6 +536,36 @@ mod tests {
         c.train.payload_fraction = 0.5;
         c.runtime.backend = "cuda".into();
         assert!(c.validate().is_err());
+        c.runtime.backend = "reference".into();
+        c.codec.sparse_threshold = -1.0;
+        assert!(c.validate().is_err());
+        c.codec.sparse_threshold = f64::NAN;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn codec_defaults_are_lossless() {
+        let c = RunConfig::paper_defaults();
+        assert_eq!(c.codec.precision, crate::wire::Precision::F32);
+        assert_eq!(c.codec.sparse_topk, 0);
+        assert_eq!(c.codec.sparse_threshold, 0.0);
+    }
+
+    #[test]
+    fn codec_section_parses() {
+        let cfg = RunConfig::from_toml_str(
+            r#"
+            [codec]
+            precision = "int8"
+            sparse_topk = 50
+            sparse_threshold = 0.001
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.codec.precision, crate::wire::Precision::Int8);
+        assert_eq!(cfg.codec.sparse_topk, 50);
+        assert!((cfg.codec.sparse_threshold - 0.001).abs() < 1e-12);
+        assert!(RunConfig::from_toml_str("[codec]\nprecision = \"f8\"\n").is_err());
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! | Figure 2 | [`fig2`] | metric vs. payload-reduction CSV per dataset |
 //! | Table 4 | [`table4`] | 90%-reduction detail, markdown |
 //! | Figure 3 | [`fig3`] | convergence curves CSV per dataset |
+//! | — | [`codec_sweep`] | wire-codec precision sweep (beyond the paper) |
 //!
 //! Paper-scale runs (1000 iterations × 3 rebuilds × 8 levels × 3 datasets)
 //! are hours of CPU; [`Scale`] shrinks users/items/iterations while
@@ -37,6 +38,10 @@ pub const REDUCTIONS_PCT: &[u32] = &[25, 50, 75, 80, 85, 90, 95, 98];
 
 /// The paper's three dataset presets.
 pub const DATASETS: &[&str] = &["movielens", "lastfm", "mind"];
+
+/// Wire-codec precisions swept by [`codec_sweep`] (the second payload
+/// axis, orthogonal to the bandit's M_s selection).
+pub const PRECISIONS: &[&str] = &["f64", "f32", "f16", "int8"];
 
 /// Scaling knobs for reduced-cost reproduction runs.
 #[derive(Debug, Clone, Copy)]
@@ -338,6 +343,60 @@ pub fn fig3(out_dir: &Path, dataset: &str, scale: &Scale, backend: &str) -> Resu
     csv.flush()
 }
 
+// ---------------------------------------------------------------------------
+// Codec sweep (beyond the paper)
+
+/// Wire-codec payload sweep: fix the bandit axis (FCF-BTS at 75%
+/// reduction) and sweep the codec precision, reporting the **measured**
+/// ledger bytes next to the recommendation metrics. Together with
+/// [`fig2`] this spans the full two-axis payload grid:
+/// `bytes/round = Θ × frame_len(M_s, K, precision)`.
+pub fn codec_sweep(out_dir: &Path, dataset: &str, scale: &Scale, backend: &str) -> Result<()> {
+    const REDUCTION_PCT: u32 = 75;
+    let header = [
+        "dataset",
+        "precision",
+        "strategy",
+        "reduction_pct",
+        "map",
+        "f1",
+        "down_bytes",
+        "up_bytes",
+        "bytes_per_round",
+    ];
+    let mut csv = CsvWriter::create(out_dir.join(format!("codec_{dataset}.csv")), &header)?;
+    let mut cfg = experiment_config(dataset, scale, backend, 2021)?;
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let data = load_dataset(&cfg, &mut rng)?;
+    let split = data.split(cfg.dataset.train_frac, &mut rng);
+    let fraction = 1.0 - REDUCTION_PCT as f64 / 100.0;
+    println!("codec sweep — {dataset}, FCF-BTS @{REDUCTION_PCT}% reduction:");
+    for precision in PRECISIONS {
+        cfg.codec.precision = crate::wire::Precision::parse(precision)?;
+        let reports = run_strategies_on_split(&cfg, &split, &[Strategy::Bts], fraction)?;
+        let report = &reports["bts"];
+        let per_round = report.ledger.total_bytes() / report.iterations.max(1) as u64;
+        println!(
+            "  {precision:<5} map={:.4} f1={:.4} traffic/round={}",
+            report.final_metrics.map,
+            report.final_metrics.f1,
+            human_bytes(per_round)
+        );
+        csv.row(&[
+            dataset.to_string(),
+            precision.to_string(),
+            "fcf-bts".to_string(),
+            REDUCTION_PCT.to_string(),
+            format!("{:.4}", report.final_metrics.map),
+            format!("{:.4}", report.final_metrics.f1),
+            report.ledger.down_bytes.to_string(),
+            report.ledger.up_bytes.to_string(),
+            per_round.to_string(),
+        ])?;
+    }
+    csv.flush()
+}
+
 /// Run every experiment at the given scale into `out_dir`.
 pub fn run_all(out_dir: &Path, scale: &Scale, backend: &str) -> Result<()> {
     std::fs::create_dir_all(out_dir)?;
@@ -346,6 +405,7 @@ pub fn run_all(out_dir: &Path, scale: &Scale, backend: &str) -> Result<()> {
     for ds in DATASETS {
         fig2(out_dir, ds, scale, backend)?;
         fig3(out_dir, ds, scale, backend)?;
+        codec_sweep(out_dir, ds, scale, backend)?;
     }
     table4(out_dir, scale, backend)?;
     Ok(())

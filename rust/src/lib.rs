@@ -14,8 +14,9 @@
 //!
 //! * **L3 (this crate)** — the coordinator: FL server loop, bandit item
 //!   selection, reward engine, server-side Adam, Θ-threshold aggregation,
-//!   simulated client fleet, payload accounting, metrics ([`server`],
-//!   [`bandit`], [`reward`], [`optim`], [`client`], [`simnet`]).
+//!   simulated client fleet, wire codecs + payload accounting, metrics
+//!   ([`server`], [`bandit`], [`reward`], [`optim`], [`client`],
+//!   [`wire`], [`simnet`]).
 //! * **L2 (python/compile/model.py)** — the FCF client compute graph in
 //!   JAX (user solve Eq. 3, item gradients Eq. 5–6, scores), AOT-lowered
 //!   once to HLO text under `artifacts/`.
@@ -57,6 +58,7 @@ pub mod runtime;
 pub mod server;
 pub mod simnet;
 pub mod telemetry;
+pub mod wire;
 
 /// Crate-wide result alias (anyhow is the only error substrate available
 /// offline; module-level error enums wrap into it).

@@ -4,7 +4,8 @@
 //!
 //! * `train`       — run one FCF training build and print the report.
 //! * `experiments` — regenerate the paper's tables/figures into `--out-dir`
-//!                   (`all` | `table1` | `table2` | `fig2` | `fig3` | `table4`).
+//!                   (`all` | `table1` | `table2` | `fig2` | `fig3` | `table4`
+//!                   | `codecs` — the wire-codec payload sweep).
 //! * `info`        — print artifact manifest + config resolution.
 //!
 //! Common options: `--config <file.toml>`, repeated `--set path=value`
@@ -30,13 +31,17 @@ fedpayload — payload-optimized federated recommender (FCF-BTS, RecSys'21)
 USAGE:
   fedpayload train [--dataset <preset>] [--strategy <s>] [--iterations N]
                    [--payload-fraction F] [--theta N] [--seed N]
+                   [--codec f64|f32|f16|int8] [--sparse-topk N]
                    [--backend pjrt|reference] [--config file.toml]
                    [--set path=value ...]
-  fedpayload experiments <all|table1|table2|fig2|fig3|table4>
+  fedpayload experiments <all|table1|table2|fig2|fig3|table4|codecs>
                    [--out-dir results] [--scale paper|reduced|smoke]
                    [--backend pjrt|reference]
   fedpayload info  [--config file.toml]
   fedpayload help
+
+  (--precision is an alias for --codec; `--set codec.sparse_threshold=X`
+   tunes the upload sparsifier.)
 ";
 
 fn main() -> ExitCode {
@@ -107,6 +112,12 @@ fn resolve_config(args: &Args) -> Result<RunConfig> {
     if let Some(b) = args.opt("backend") {
         cfg.runtime.backend = b.to_string();
     }
+    if let Some(p) = args.opt("codec").or_else(|| args.opt("precision")) {
+        cfg.codec.precision = fedpayload::wire::Precision::parse(p)?;
+    }
+    if let Some(k) = args.opt_parse::<usize>("sparse-topk")? {
+        cfg.codec.sparse_topk = k;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -116,8 +127,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mut trainer = Trainer::from_config(&cfg)?;
     let report = trainer.run()?;
     println!(
-        "run complete: strategy={} iterations={} M={} M_s={} ({:.0}% payload reduction)",
+        "run complete: strategy={} codec={} iterations={} M={} M_s={} ({:.0}% payload reduction)",
         report.strategy,
+        report.codec,
         report.iterations,
         report.m,
         report.m_s,
@@ -173,6 +185,11 @@ fn cmd_experiments(args: &Args) -> Result<()> {
             }
         }
         "table4" => experiments::table4(&out_dir, &scale, backend)?,
+        "codecs" => {
+            for ds in experiments::DATASETS {
+                experiments::codec_sweep(&out_dir, ds, &scale, backend)?;
+            }
+        }
         other => bail!("unknown experiment `{other}`"),
     }
     println!("experiment outputs written to {}", out_dir.display());
@@ -201,6 +218,12 @@ fn cmd_info(args: &Args) -> Result<()> {
     println!(
         "  train              = {} iters, theta={}, payload_fraction={}",
         cfg.train.iterations, cfg.train.theta, cfg.train.payload_fraction
+    );
+    println!(
+        "  codec              = {} (sparse_topk={}, sparse_threshold={})",
+        cfg.codec.precision.name(),
+        cfg.codec.sparse_topk,
+        cfg.codec.sparse_threshold
     );
     println!("  backend            = {}", cfg.runtime.backend);
     match fedpayload::runtime::Manifest::load(std::path::Path::new(&cfg.runtime.artifacts_dir)) {

@@ -17,6 +17,12 @@
 //! the coordinator's item-major layout and the artifacts' (K, T) layout.
 
 pub mod manifest;
+/// The real PJRT backend (needs the `xla` crate — `--features xla`).
+#[cfg(feature = "xla")]
+pub mod pjrt;
+/// Offline builds get a stub that fails at construction (same paths/types).
+#[cfg(not(feature = "xla"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;
 pub mod reference;
 

@@ -1,0 +1,72 @@
+//! Stub PJRT backend, compiled when the crate is built **without** the
+//! `xla` cargo feature (the offline default — the real backend in
+//! `pjrt.rs` needs the `xla` crate, which cannot be fetched without
+//! registry access).
+//!
+//! The stub keeps the `runtime::pjrt::PjrtBackend` path and type stable
+//! so benches/tests that name it still compile; construction always fails
+//! with a pointer at the reference backend, and the `ComputeBackend`
+//! methods are unreachable because no value can be constructed.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::ComputeBackend;
+
+/// Placeholder for the PJRT backend; cannot be constructed in this build.
+pub struct PjrtBackend {
+    _unconstructible: std::convert::Infallible,
+}
+
+impl PjrtBackend {
+    /// Always fails: this build has no XLA/PJRT support.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<PjrtBackend> {
+        bail!(
+            "pjrt backend unavailable: built without the `xla` cargo feature \
+             (artifacts dir: {}). Rebuild with `--features xla` plus the `xla` \
+             dependency, or set `runtime.backend = \"reference\"`",
+            dir.as_ref().display()
+        )
+    }
+}
+
+impl ComputeBackend for PjrtBackend {
+    fn geometry(&self) -> (usize, usize, Vec<usize>) {
+        match self._unconstructible {}
+    }
+
+    fn accum(
+        &mut self,
+        _t: usize,
+        _q: &[f32],
+        _x: &[f32],
+        _mask: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        match self._unconstructible {}
+    }
+
+    fn solve(&mut self, _a: &[f32], _b: &[f32]) -> Result<Vec<f32>> {
+        match self._unconstructible {}
+    }
+
+    fn grad(
+        &mut self,
+        _t: usize,
+        _p: &[f32],
+        _umask: &[f32],
+        _q: &[f32],
+        _x: &[f32],
+        _mask: &[f32],
+    ) -> Result<Vec<f32>> {
+        match self._unconstructible {}
+    }
+
+    fn scores(&mut self, _t: usize, _p: &[f32], _q: &[f32]) -> Result<Vec<f32>> {
+        match self._unconstructible {}
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-stub"
+    }
+}

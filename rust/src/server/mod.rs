@@ -3,10 +3,16 @@
 //! Per FL iteration t the [`Trainer`]:
 //!
 //! 1. asks the bandit for M_s items (Alg. 1 line 8) and assembles Q*,
-//! 2. "transmits" Q* to the Θ participating clients (payload ledger),
+//! 2. encodes Q* through the configured `wire` codec and "transmits" the
+//!    frame to the Θ participating clients — the clients train against
+//!    the *decoded* factors and the `TrafficLedger` records the encoded
+//!    frame lengths (measured payload, not the analytic formula),
 //! 3. runs the client math through the AOT artifacts — Eq. 3 solve and
-//!    Eq. 5–6 gradients, batched B clients per execution,
-//! 4. aggregates the Θ gradients and applies server-side Adam (Eq. 4),
+//!    Eq. 5–6 gradients, batched B clients per execution; ∇Q* uploads
+//!    round-trip through the sparse wire encoder (frames encoded per
+//!    runtime batch, attributed to each contributing client),
+//! 4. aggregates the Θ decoded gradients and applies server-side Adam
+//!    (Eq. 4),
 //! 5. updates the squared-gradient trace (Eq. 14), computes the composite
 //!    reward (Eq. 13) and feeds the bandit posterior (Eq. 10–12),
 //! 6. aggregates the contributing clients' test metrics into the global
@@ -28,8 +34,9 @@ use crate::optim::Adam;
 use crate::reward::RewardEngine;
 use crate::rng::Rng;
 use crate::runtime::{make_backend, FcfRuntime};
-use crate::simnet::{payload_bytes, TrafficLedger};
+use crate::simnet::TrafficLedger;
 use crate::telemetry::Stopwatch;
+use crate::wire::{make_codec, PayloadCodec, SparsePolicy};
 use crate::{debug_log, info};
 
 /// Per-round record for convergence analysis (paper Figure 3).
@@ -43,7 +50,7 @@ pub struct RoundRecord {
     pub raw: MetricSet,
     /// Mean of the last `metric_window` global metric values (§6.2).
     pub smoothed: MetricSet,
-    /// Bytes moved this round (both directions).
+    /// Bytes moved this round (both directions, encoded frame lengths).
     pub round_bytes: u64,
 }
 
@@ -51,6 +58,8 @@ pub struct RoundRecord {
 #[derive(Debug, Clone)]
 pub struct TrainReport {
     pub strategy: &'static str,
+    /// Wire codec the payloads moved through (`wire::Precision` name).
+    pub codec: &'static str,
     /// Smoothed metrics at the final iteration (the paper's headline
     /// number for a run).
     pub final_metrics: MetricSet,
@@ -80,6 +89,10 @@ pub struct Trainer {
     adam: Adam,
     selector: Box<dyn ItemSelector>,
     reward: RewardEngine,
+    /// Wire codec for Q* downloads and ∇Q* uploads; the ledger records
+    /// the encoded frame lengths this codec produces.
+    codec: Box<dyn PayloadCodec>,
+    sparse: SparsePolicy,
     /// Shared across trainers: PJRT executable compilation is expensive
     /// and xla_extension 0.5.1 does not fully release compiled programs,
     /// so experiment sweeps MUST reuse one runtime (EXPERIMENTS.md §Perf).
@@ -99,6 +112,7 @@ pub struct Trainer {
     sw_eval: Stopwatch,
     sw_update: Stopwatch,
     sw_reward: Stopwatch,
+    sw_codec: Stopwatch,
 }
 
 impl Trainer {
@@ -145,12 +159,13 @@ impl Trainer {
         let q = Mat::randn(m, cfg.model.k, cfg.model.init_scale, &mut rng);
         let fleet = Fleet::from_split(&split);
         info!(
-            "trainer: {} users, {} items, strategy={}, backend={}, M_s={}",
+            "trainer: {} users, {} items, strategy={}, backend={}, M_s={}, codec={}",
             fleet.len(),
             m,
             cfg.bandit.strategy.name(),
             runtime.borrow().backend_name(),
-            cfg.selected_items(m)
+            cfg.selected_items(m),
+            cfg.codec.precision.name()
         );
         let cw = match cfg.bandit.cosine_weight {
             "literal" => crate::reward::CosineWeight::Literal,
@@ -165,6 +180,11 @@ impl Trainer {
             reward: RewardEngine::new(m, cfg.model.k, cfg.bandit.gamma, cfg.model.beta2 as f64)
                 .with_cosine_weight(cw)
                 .with_time_base(tb),
+            codec: make_codec(cfg.codec.precision),
+            sparse: SparsePolicy {
+                top_k: cfg.codec.sparse_topk,
+                threshold: cfg.codec.sparse_threshold as f32,
+            },
             adam: Adam::new(m, &cfg.model),
             sel_pos: vec![-1; m],
             cfg: cfg.clone(),
@@ -184,6 +204,7 @@ impl Trainer {
             sw_eval: Stopwatch::new("eval"),
             sw_update: Stopwatch::new("update"),
             sw_reward: Stopwatch::new("reward"),
+            sw_codec: Stopwatch::new("codec"),
         })
     }
 
@@ -211,6 +232,7 @@ impl Trainer {
         let m = self.split.train.num_items();
         Ok(TrainReport {
             strategy: self.selector.name(),
+            codec: self.codec.name(),
             final_metrics: self.smoothed_metrics(),
             history: self.history.clone(),
             ledger: self.ledger.clone(),
@@ -223,6 +245,7 @@ impl Trainer {
                 &self.sw_eval,
                 &self.sw_update,
                 &self.sw_reward,
+                &self.sw_codec,
             ]
             .iter()
             .map(|sw| (sw.name.to_string(), sw.total_secs(), sw.count()))
@@ -271,13 +294,31 @@ impl Trainer {
         }
         self.sw_stage.stop();
 
-        // (3) participants + payload accounting.
+        // (2b) put Q* on the wire: encode the download frame, then train
+        // the clients against the *decoded* factors, so a lossy codec's
+        // quantization error flows into the round exactly as it would on
+        // real devices. The ledger records the encoded frame length.
+        self.sw_codec.start();
+        let down_frame = self.codec.encode_dense(&q_sel, selected.len(), k)?;
+        let down = self.codec.decode_dense(&down_frame)?;
+        anyhow::ensure!(
+            down.rows == selected.len() && down.cols == k,
+            "download frame decoded to {}x{}, expected {}x{k}",
+            down.rows,
+            down.cols,
+            selected.len()
+        );
+        let q_sel = down.data;
+        let down_bytes = down_frame.len() as u64;
+        self.sw_codec.stop();
+
+        // (3) participants + download accounting.
+        let ledger_bytes_before = self.ledger.total_bytes();
         let participants = self
             .fleet
             .sample_participants(self.cfg.train.theta, &mut self.rng);
-        let q_bytes = payload_bytes(selected.len(), k, self.cfg.simnet.bits_per_param);
         for _ in &participants {
-            self.ledger.record_down(&self.cfg.simnet, q_bytes);
+            self.ledger.record_down(&self.cfg.simnet, down_bytes);
         }
 
         // (4) client compute, batched B clients per artifact execution.
@@ -299,6 +340,29 @@ impl Trainer {
             self.sw_grad.start();
             let g = self.runtime.borrow_mut().grad_batch(&q_sel, &row_refs, &p)?;
             self.sw_grad.stop();
+
+            // The ∇Q* upload goes through the sparse wire encoder (at
+            // batch granularity — the runtime aggregates each batch's
+            // gradients in one execution, so the frame is encoded once
+            // per batch and its length attributed to every contributing
+            // client). The server aggregates the *decoded* gradient, so
+            // top-k/threshold sparsification and value quantization are
+            // part of the training dynamics, not just the accounting.
+            self.sw_codec.start();
+            let up_frame = self
+                .codec
+                .encode_sparse(&g, selected.len(), k, &self.sparse)?;
+            let up = self.codec.decode_sparse(&up_frame)?;
+            anyhow::ensure!(
+                up.rows == selected.len() && up.cols == k,
+                "upload frame decoded to {}x{}, expected {}x{k}",
+                up.rows,
+                up.cols,
+                selected.len()
+            );
+            let g = up.data;
+            let up_bytes = up_frame.len() as u64;
+            self.sw_codec.stop();
             for (acc, v) in g_total.iter_mut().zip(&g) {
                 *acc += v;
             }
@@ -306,7 +370,7 @@ impl Trainer {
             // local model state + upload accounting
             for (u, &cid) in batch.iter().enumerate() {
                 self.fleet.client_mut(cid).p = p[u * k..(u + 1) * k].to_vec();
-                self.ledger.record_up(&self.cfg.simnet, q_bytes);
+                self.ledger.record_up(&self.cfg.simnet, up_bytes);
             }
 
             // (6) local test metrics of contributing clients (§6.2): the
@@ -381,7 +445,7 @@ impl Trainer {
             m_s: selected.len(),
             raw,
             smoothed: self.smoothed_metrics(),
-            round_bytes: 2 * q_bytes * participants.len() as u64,
+            round_bytes: self.ledger.total_bytes() - ledger_bytes_before,
         };
         debug_log!(
             "iter {} m_s={} raw={} smoothed={}",
@@ -466,14 +530,23 @@ mod tests {
         let report = tr.run().unwrap();
         assert_eq!(report.history.len(), 4);
         assert_eq!(report.strategy, "bts");
+        assert_eq!(report.codec, "f32");
         assert_eq!(report.m, 96);
         assert_eq!(report.m_s, 24);
         assert!((report.payload_reduction_pct() - 75.0).abs() < 1e-9);
-        // payload accounting: 4 rounds × 16 participants × 2 directions
+        // payload accounting: 4 rounds × 16 participants × 2 directions,
+        // byte counts are the encoded frame lengths the codec produced
         assert_eq!(report.ledger.down_msgs, 64);
         assert_eq!(report.ledger.up_msgs, 64);
-        let expected_bytes = payload_bytes(24, 25, 64);
-        assert_eq!(report.ledger.down_bytes, 64 * expected_bytes);
+        let down_frame = crate::wire::encoded_dense_len(24, 25, crate::wire::Precision::F32);
+        assert_eq!(report.ledger.down_bytes, 64 * down_frame as u64);
+        // uploads are sparse frames: at most m_s rows survive per frame
+        let up_max = crate::wire::encoded_sparse_len(24, 25, crate::wire::Precision::F32);
+        assert!(report.ledger.up_bytes > 0);
+        assert!(report.ledger.up_bytes <= 64 * up_max as u64);
+        // per-round byte records sum to the ledger totals
+        let recorded: u64 = report.history.iter().map(|r| r.round_bytes).sum();
+        assert_eq!(recorded, report.ledger.total_bytes());
     }
 
     #[test]

@@ -5,6 +5,11 @@
 //! bandwidth/latency transfer model on top so the trainer can report the
 //! *simulated* communication time saved by payload optimization, which is
 //! the quantity the paper's motivation (Table 1) is about.
+//!
+//! Note: since the `wire` subsystem landed, the [`TrafficLedger`] is fed
+//! **measured encoded frame lengths** by the trainer; [`payload_bytes`]
+//! remains the analytic Table 1 formula, used only for the paper
+//! reproduction and back-of-envelope comparisons.
 
 use crate::config::SimNetConfig;
 
@@ -18,9 +23,13 @@ pub fn payload_bytes(items: usize, k: usize, bits: u32) -> u64 {
 /// (625KB, 1.6 MB, ..., 1.6 GB).
 pub fn human_bytes(bytes: u64) -> String {
     let b = bytes as f64;
-    if b >= 1e9 {
+    // Unit thresholds sit at the *rounding* boundary of the smaller
+    // unit's format, so e.g. 999,950 B renders as "1.0 MB" — not as
+    // "1000 KB", which the plain `b >= 1e6` check produced (the `{:.0}`
+    // formatting rounds up past the unit before the check can see it).
+    if b >= 999.95e6 {
         format!("{:.1} GB", b / 1e9)
-    } else if b >= 1e6 {
+    } else if b >= 999.5e3 {
         format!("{:.1} MB", b / 1e6)
     } else if b >= 1e3 {
         format!("{:.0} KB", b / 1e3)
@@ -103,6 +112,18 @@ mod tests {
         assert_eq!(human_bytes(payload_bytes(10_000, 20, 64)), "1.6 MB");
         assert_eq!(human_bytes(payload_bytes(10_000_000, 20, 64)), "1.6 GB");
         assert_eq!(human_bytes(12), "12 B");
+    }
+
+    #[test]
+    fn human_units_never_round_past_their_unit() {
+        // regression: 999,950 used to render as "1000 KB"
+        assert_eq!(human_bytes(999_950), "1.0 MB");
+        assert_eq!(human_bytes(999_499), "999 KB");
+        assert_eq!(human_bytes(999_500), "1.0 MB");
+        assert_eq!(human_bytes(999_949_999), "999.9 MB");
+        assert_eq!(human_bytes(999_950_000), "1.0 GB");
+        assert_eq!(human_bytes(999), "999 B");
+        assert_eq!(human_bytes(1000), "1 KB");
     }
 
     #[test]

@@ -1,0 +1,230 @@
+//! Versioned binary frame enveloping every payload on the simulated wire.
+//!
+//! Layout (little-endian, 24-byte header):
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic "FPAY"
+//! 4       1     format version (1)
+//! 5       1     codec id (wire::Precision)
+//! 6       1     payload kind (0 = dense, 1 = sparse)
+//! 7       1     reserved (0)
+//! 8       4     rows (u32)
+//! 12      4     cols (u32)
+//! 16      4     payload length in bytes (u32)
+//! 20      4     FNV-1a checksum of header bytes 0..20 + payload (u32)
+//! 24      ...   payload
+//! ```
+//!
+//! [`open`] validates magic, version, length and checksum before handing
+//! the payload slice back, so corruption/truncation on the "wire" is a
+//! decode error rather than silent garbage (`frame_corruption_detected`
+//! property test). The checksum covers the header fields as well as the
+//! payload, so a flipped dims/codec byte cannot smuggle a
+//! wrong-dimensioned matrix through. A single flipped byte always
+//! changes the FNV-1a value — every mixing step is a bijection on the
+//! running state — so detection of 1-byte faults is deterministic, not
+//! probabilistic.
+
+use anyhow::{bail, ensure, Result};
+
+/// Frame magic: "FPAY".
+pub const MAGIC: [u8; 4] = *b"FPAY";
+
+/// Current frame format version.
+pub const VERSION: u8 = 1;
+
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 24;
+
+/// What the payload contains.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PayloadKind {
+    /// Row-major dense matrix (Q* downloads).
+    Dense,
+    /// Index+value sparse rows (∇Q* uploads).
+    Sparse,
+}
+
+impl PayloadKind {
+    pub fn id(&self) -> u8 {
+        match self {
+            PayloadKind::Dense => 0,
+            PayloadKind::Sparse => 1,
+        }
+    }
+
+    pub fn from_id(id: u8) -> Result<PayloadKind> {
+        match id {
+            0 => Ok(PayloadKind::Dense),
+            1 => Ok(PayloadKind::Sparse),
+            other => bail!("unknown payload kind id {other}"),
+        }
+    }
+}
+
+/// Decoded frame header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameHeader {
+    pub codec_id: u8,
+    pub kind: PayloadKind,
+    pub rows: u32,
+    pub cols: u32,
+    pub payload_len: u32,
+}
+
+const FNV_OFFSET: u32 = 0x811c_9dc5;
+
+fn fnv1a(mut h: u32, bytes: &[u8]) -> u32 {
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// 32-bit FNV-1a over a byte slice.
+pub fn checksum(bytes: &[u8]) -> u32 {
+    fnv1a(FNV_OFFSET, bytes)
+}
+
+/// The frame checksum: FNV-1a chained over the first 20 header bytes and
+/// then the payload.
+fn frame_checksum(header: &[u8], payload: &[u8]) -> u32 {
+    fnv1a(fnv1a(FNV_OFFSET, header), payload)
+}
+
+/// Build the complete frame (header + payload) for a payload.
+pub fn seal(
+    codec_id: u8,
+    kind: PayloadKind,
+    rows: usize,
+    cols: usize,
+    payload: &[u8],
+) -> Result<Vec<u8>> {
+    ensure!(rows <= u32::MAX as usize, "frame rows {rows} exceed u32");
+    ensure!(cols <= u32::MAX as usize, "frame cols {cols} exceed u32");
+    ensure!(
+        payload.len() <= u32::MAX as usize,
+        "frame payload of {} bytes exceeds u32",
+        payload.len()
+    );
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(codec_id);
+    out.push(kind.id());
+    out.push(0);
+    out.extend_from_slice(&(rows as u32).to_le_bytes());
+    out.extend_from_slice(&(cols as u32).to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    let sum = frame_checksum(&out[0..HEADER_LEN - 4], payload);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out.extend_from_slice(payload);
+    Ok(out)
+}
+
+fn read_u32(frame: &[u8], offset: usize) -> u32 {
+    u32::from_le_bytes(frame[offset..offset + 4].try_into().unwrap())
+}
+
+/// Validate a frame and return its header + payload slice.
+pub fn open(frame: &[u8]) -> Result<(FrameHeader, &[u8])> {
+    ensure!(
+        frame.len() >= HEADER_LEN,
+        "frame truncated: {} bytes < {HEADER_LEN}-byte header",
+        frame.len()
+    );
+    ensure!(frame[0..4] == MAGIC, "bad frame magic {:02x?}", &frame[0..4]);
+    ensure!(
+        frame[4] == VERSION,
+        "unsupported frame version {} (expected {VERSION})",
+        frame[4]
+    );
+    let kind = PayloadKind::from_id(frame[6])?;
+    let header = FrameHeader {
+        codec_id: frame[5],
+        kind,
+        rows: read_u32(frame, 8),
+        cols: read_u32(frame, 12),
+        payload_len: read_u32(frame, 16),
+    };
+    let expected = frame.len() - HEADER_LEN;
+    ensure!(
+        header.payload_len as usize == expected,
+        "frame length mismatch: header says {} payload bytes, frame has {expected}",
+        header.payload_len
+    );
+    let payload = &frame[HEADER_LEN..];
+    let sum = read_u32(frame, 20);
+    let computed = frame_checksum(&frame[0..HEADER_LEN - 4], payload);
+    ensure!(
+        computed == sum,
+        "frame checksum mismatch (stored {sum:#010x}, computed {computed:#010x})"
+    );
+    Ok((header, payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seal_open_roundtrip() {
+        let payload = [1u8, 2, 3, 4, 5];
+        let frame = seal(3, PayloadKind::Dense, 10, 25, &payload).unwrap();
+        assert_eq!(frame.len(), HEADER_LEN + 5);
+        let (h, p) = open(&frame).unwrap();
+        assert_eq!(h.codec_id, 3);
+        assert_eq!(h.kind, PayloadKind::Dense);
+        assert_eq!(h.rows, 10);
+        assert_eq!(h.cols, 25);
+        assert_eq!(h.payload_len, 5);
+        assert_eq!(p, &payload);
+    }
+
+    #[test]
+    fn empty_payload_is_valid() {
+        let frame = seal(1, PayloadKind::Sparse, 0, 0, &[]).unwrap();
+        let (h, p) = open(&frame).unwrap();
+        assert_eq!(h.kind, PayloadKind::Sparse);
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let payload = [9u8; 16];
+        let frame = seal(2, PayloadKind::Dense, 4, 4, &payload).unwrap();
+        // payload byte flip -> checksum
+        let mut bad = frame.clone();
+        bad[HEADER_LEN + 3] ^= 0x40;
+        assert!(open(&bad).unwrap_err().to_string().contains("checksum"));
+        // magic flip
+        let mut bad = frame.clone();
+        bad[0] = b'X';
+        assert!(open(&bad).unwrap_err().to_string().contains("magic"));
+        // version bump
+        let mut bad = frame.clone();
+        bad[4] = 9;
+        assert!(open(&bad).unwrap_err().to_string().contains("version"));
+        // header dims corruption -> checksum (header is covered too)
+        for offset in [5usize, 8, 9, 12, 13] {
+            let mut bad = frame.clone();
+            bad[offset] ^= 0x01;
+            assert!(open(&bad).is_err(), "header flip at {offset} undetected");
+        }
+        // truncation
+        assert!(open(&frame[..frame.len() - 1]).is_err());
+        assert!(open(&frame[..10]).is_err());
+    }
+
+    #[test]
+    fn checksum_single_byte_sensitivity() {
+        let a = checksum(b"hello wire");
+        for i in 0..10 {
+            let mut m = b"hello wire".to_vec();
+            m[i] ^= 1;
+            assert_ne!(checksum(&m), a, "flip at {i} undetected");
+        }
+    }
+}

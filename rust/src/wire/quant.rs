@@ -1,0 +1,396 @@
+//! Element codecs: f64 / f32 / f16 / int8-affine encodings of row-major
+//! f32 matrices.
+//!
+//! * `f64` — widened little-endian doubles: the paper's Table 1 uses
+//!   64-bit parameters, this codec reproduces that accounting on the wire.
+//! * `f32` — raw little-endian floats (bit-exact round-trip).
+//! * `f16` — IEEE 754 binary16, round-to-nearest-even, saturating at
+//!   ±65504 (a bounded error beats an `inf` on the wire); round-trip
+//!   error is ≤ `2^-11` relative for normal values.
+//! * `int8` — **per-row symmetric affine quantization**: each row stores
+//!   its scale `s = max|x|` as an f16 (2 bytes) followed by one signed
+//!   byte per element, `q = round(x/s · 127)`. Round-trip error is
+//!   bounded by `s · (1/254 + 2^-11)` — see [`max_roundtrip_error`],
+//!   which the property tests enforce.
+//!
+//! A K=25 factor row costs 200 / 100 / 50 / 27 bytes respectively, so
+//! int8 is ~3.7× smaller than f32 and ~7.4× smaller than the paper's
+//! f64 accounting at identical M_s.
+
+use anyhow::{ensure, Result};
+
+/// Wire precision of one matrix element.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    F64,
+    F32,
+    F16,
+    Int8,
+}
+
+impl Precision {
+    /// Parse a codec name (`f64|f32|f16|int8`).
+    pub fn parse(s: &str) -> Result<Precision> {
+        Ok(match s {
+            "f64" => Precision::F64,
+            "f32" => Precision::F32,
+            "f16" => Precision::F16,
+            "int8" => Precision::Int8,
+            other => anyhow::bail!("unknown codec precision `{other}` (f64|f32|f16|int8)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+            Precision::F16 => "f16",
+            Precision::Int8 => "int8",
+        }
+    }
+
+    /// Codec id stored in the frame header.
+    pub fn id(&self) -> u8 {
+        match self {
+            Precision::F64 => 1,
+            Precision::F32 => 2,
+            Precision::F16 => 3,
+            Precision::Int8 => 4,
+        }
+    }
+
+    pub fn from_id(id: u8) -> Result<Precision> {
+        Ok(match id {
+            1 => Precision::F64,
+            2 => Precision::F32,
+            3 => Precision::F16,
+            4 => Precision::Int8,
+            other => anyhow::bail!("unknown codec id {other}"),
+        })
+    }
+
+    /// Encoded bytes for one `cols`-wide row.
+    pub fn row_bytes(&self, cols: usize) -> usize {
+        match self {
+            Precision::F64 => 8 * cols,
+            Precision::F32 => 4 * cols,
+            Precision::F16 => 2 * cols,
+            Precision::Int8 => cols + 2, // values + f16 row scale
+        }
+    }
+}
+
+/// Encoded payload size (no frame header) of a `rows × cols` matrix.
+pub fn encoded_len(rows: usize, cols: usize, precision: Precision) -> usize {
+    rows * precision.row_bytes(cols)
+}
+
+/// Largest finite f16 value — the lossy codecs saturate here.
+pub const F16_MAX: f32 = 65504.0;
+
+/// Worst-case absolute round-trip error for one element of a row whose
+/// largest magnitude is `row_max`. Zero for the exact codecs. Beyond
+/// [`F16_MAX`] both lossy codecs saturate (f16 elements directly, int8
+/// through its f16 row scale), so the bound grows by the clipped excess.
+pub fn max_roundtrip_error(precision: Precision, row_max: f32) -> f32 {
+    let in_range = row_max.abs().min(F16_MAX);
+    let clipped = (row_max.abs() - F16_MAX).max(0.0);
+    match precision {
+        Precision::F64 | Precision::F32 => 0.0,
+        // half-ulp relative for normals, absolute 2^-25 in the subnormal
+        // range (and a hair of slack on top).
+        Precision::F16 => (in_range * (1.0 / 2048.0)).max(1e-7) * 1.5 + clipped,
+        // half-step of the 127-level grid + f16 rounding of the scale.
+        Precision::Int8 => in_range * (1.0 / 254.0 + 1.0 / 2048.0) * 1.5 + 1e-7 + clipped,
+    }
+}
+
+/// f32 → IEEE 754 binary16 bits, round-to-nearest-even. Saturates at
+/// ±65504 instead of producing infinities (codec semantics); NaN maps to
+/// the canonical quiet NaN.
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+    if exp == 0xff {
+        if mant != 0 {
+            return sign | 0x7e00; // NaN
+        }
+        return sign | 0x7bff; // ±inf saturates to ±65504
+    }
+    let e = exp - 127 + 15;
+    if e >= 31 {
+        return sign | 0x7bff; // overflow saturates
+    }
+    if e <= 0 {
+        // subnormal f16 range (or underflow to signed zero)
+        if e < -10 {
+            return sign;
+        }
+        let m = mant | 0x0080_0000; // implicit bit
+        let shift = (14 - e) as u32; // 14..=24
+        let v = m >> shift;
+        let rem = m & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let v = if rem > half || (rem == half && v & 1 == 1) {
+            v + 1
+        } else {
+            v
+        };
+        return sign | v as u16;
+    }
+    let mut v = ((e as u32) << 10) | (mant >> 13);
+    let rem = mant & 0x1fff;
+    if rem > 0x1000 || (rem == 0x1000 && v & 1 == 1) {
+        v += 1;
+    }
+    if v >= 0x7c00 {
+        return sign | 0x7bff; // rounding carried past the max normal
+    }
+    sign | v as u16
+}
+
+/// IEEE 754 binary16 bits → f32 (exact).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign // ±0
+        } else {
+            // subnormal: renormalize into an f32 normal
+            let mut e: u32 = 127 - 15 + 1;
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x3ff) << 13)
+        }
+    } else if exp == 31 {
+        sign | 0x7f80_0000 | (mant << 13) // inf / NaN
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Append the encoding of a row-major `rows × cols` matrix to `out`.
+pub fn encode_rows(out: &mut Vec<u8>, data: &[f32], rows: usize, cols: usize, p: Precision) {
+    debug_assert_eq!(data.len(), rows * cols);
+    match p {
+        Precision::F64 => {
+            for &v in data {
+                out.extend_from_slice(&(v as f64).to_le_bytes());
+            }
+        }
+        Precision::F32 => {
+            for &v in data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Precision::F16 => {
+            for &v in data {
+                out.extend_from_slice(&f32_to_f16(v).to_le_bytes());
+            }
+        }
+        Precision::Int8 => {
+            for r in 0..rows {
+                let row = &data[r * cols..(r + 1) * cols];
+                let max = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                let s_bits = f32_to_f16(max);
+                let s = f16_to_f32(s_bits);
+                out.extend_from_slice(&s_bits.to_le_bytes());
+                if s > 0.0 && s.is_finite() {
+                    for &v in row {
+                        let q = (v / s * 127.0).round().clamp(-127.0, 127.0) as i8;
+                        out.push(q as u8);
+                    }
+                } else {
+                    // all-zero (or denormal-tiny) row: zero bytes decode to 0.0
+                    out.resize(out.len() + cols, 0);
+                }
+            }
+        }
+    }
+}
+
+/// Decode a payload produced by [`encode_rows`] back into f32s.
+pub fn decode_rows(payload: &[u8], rows: usize, cols: usize, p: Precision) -> Result<Vec<f32>> {
+    ensure!(
+        payload.len() == encoded_len(rows, cols, p),
+        "{} payload of {} bytes does not match {rows}x{cols} (expected {})",
+        p.name(),
+        payload.len(),
+        encoded_len(rows, cols, p)
+    );
+    let mut out = Vec::with_capacity(rows * cols);
+    match p {
+        Precision::F64 => {
+            for ch in payload.chunks_exact(8) {
+                out.push(f64::from_le_bytes(ch.try_into().unwrap()) as f32);
+            }
+        }
+        Precision::F32 => {
+            for ch in payload.chunks_exact(4) {
+                out.push(f32::from_le_bytes(ch.try_into().unwrap()));
+            }
+        }
+        Precision::F16 => {
+            for ch in payload.chunks_exact(2) {
+                out.push(f16_to_f32(u16::from_le_bytes(ch.try_into().unwrap())));
+            }
+        }
+        Precision::Int8 => {
+            for r in 0..rows {
+                let row = &payload[r * (cols + 2)..(r + 1) * (cols + 2)];
+                let s = f16_to_f32(u16::from_le_bytes([row[0], row[1]]));
+                for &b in &row[2..] {
+                    out.push(b as i8 as f32 / 127.0 * s);
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn f16_bits_roundtrip_exhaustively() {
+        // every finite f16 must survive f16 -> f32 -> f16 bit-exactly
+        for sign in [0u16, 0x8000] {
+            for h in 0..0x7c00u16 {
+                let h = h | sign;
+                let back = f32_to_f16(f16_to_f32(h));
+                assert_eq!(back, h, "bits {h:#06x} -> {back:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn f16_known_values() {
+        assert_eq!(f16_to_f32(0x3c00), 1.0);
+        assert_eq!(f16_to_f32(0xbc00), -1.0);
+        assert_eq!(f16_to_f32(0x4000), 2.0);
+        assert_eq!(f16_to_f32(0x3555), 0.25 * (1.0 + 341.0 / 1024.0));
+        assert_eq!(f16_to_f32(0x0001), 2.0f32.powi(-24)); // smallest subnormal
+        assert_eq!(f16_to_f32(0x7bff), 65504.0); // largest normal
+        assert_eq!(f32_to_f16(1.0), 0x3c00);
+        assert_eq!(f32_to_f16(-2.0), 0xc000);
+        assert_eq!(f32_to_f16(0.0), 0x0000);
+    }
+
+    #[test]
+    fn f16_saturates_instead_of_overflowing() {
+        assert_eq!(f32_to_f16(1e9), 0x7bff);
+        assert_eq!(f32_to_f16(-1e9), 0xfbff);
+        assert_eq!(f32_to_f16(f32::INFINITY), 0x7bff);
+        assert_eq!(f16_to_f32(f32_to_f16(66000.0)), 65504.0);
+    }
+
+    #[test]
+    fn f16_error_is_bounded() {
+        let mut rng = Rng::seed_from_u64(11);
+        for _ in 0..20_000 {
+            let x = (rng.normal() * 10f64.powi(rng.below(7) as i32 - 3)) as f32;
+            let y = f16_to_f32(f32_to_f16(x));
+            let tol = (x.abs() * (1.0 / 2048.0)).max(1e-7);
+            assert!((x - y).abs() <= tol, "x={x} y={y}");
+        }
+    }
+
+    #[test]
+    fn int8_roundtrip_error_bounded_per_row() {
+        let mut rng = Rng::seed_from_u64(12);
+        let (rows, cols) = (40, 25);
+        let data: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32 * 0.3).collect();
+        let mut buf = Vec::new();
+        encode_rows(&mut buf, &data, rows, cols, Precision::Int8);
+        assert_eq!(buf.len(), encoded_len(rows, cols, Precision::Int8));
+        let dec = decode_rows(&buf, rows, cols, Precision::Int8).unwrap();
+        for r in 0..rows {
+            let row = &data[r * cols..(r + 1) * cols];
+            let max = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            let tol = max_roundtrip_error(Precision::Int8, max);
+            for (a, b) in row.iter().zip(&dec[r * cols..(r + 1) * cols]) {
+                assert!((a - b).abs() <= tol, "row {r}: {a} vs {b} (tol {tol})");
+            }
+        }
+    }
+
+    #[test]
+    fn lossy_codecs_stay_within_bound_even_when_saturating() {
+        // rows whose magnitudes exceed F16_MAX: the error bound must
+        // absorb the clipping of the element (f16) / row scale (int8)
+        let row = vec![1.0e5f32, -2.0e5, 3.0, 65504.0, -0.5];
+        let (rows, cols) = (1, row.len());
+        let row_max = 2.0e5f32;
+        for p in [Precision::F16, Precision::Int8] {
+            let mut buf = Vec::new();
+            encode_rows(&mut buf, &row, rows, cols, p);
+            let dec = decode_rows(&buf, rows, cols, p).unwrap();
+            let tol = max_roundtrip_error(p, row_max);
+            for (a, b) in row.iter().zip(&dec) {
+                assert!(
+                    (a - b).abs() <= tol,
+                    "{}: {a} vs {b} (tol {tol})",
+                    p.name()
+                );
+                assert!(b.is_finite(), "{}: non-finite decode {b}", p.name());
+            }
+        }
+    }
+
+    #[test]
+    fn int8_zero_rows_decode_to_exact_zeros() {
+        let data = vec![0.0f32; 3 * 8];
+        let mut buf = Vec::new();
+        encode_rows(&mut buf, &data, 3, 8, Precision::Int8);
+        let dec = decode_rows(&buf, 3, 8, Precision::Int8).unwrap();
+        assert_eq!(dec, data);
+    }
+
+    #[test]
+    fn exact_codecs_are_bit_exact() {
+        let mut rng = Rng::seed_from_u64(13);
+        let data: Vec<f32> = (0..200).map(|_| rng.normal() as f32 * 1e3).collect();
+        for p in [Precision::F32, Precision::F64] {
+            let mut buf = Vec::new();
+            encode_rows(&mut buf, &data, 8, 25, p);
+            let dec = decode_rows(&buf, 8, 25, p).unwrap();
+            assert_eq!(dec, data, "{}", p.name());
+        }
+    }
+
+    #[test]
+    fn decode_rejects_wrong_length() {
+        let mut buf = Vec::new();
+        encode_rows(&mut buf, &[1.0, 2.0], 1, 2, Precision::F32);
+        assert!(decode_rows(&buf, 2, 2, Precision::F32).is_err());
+        assert!(decode_rows(&buf[..buf.len() - 1], 1, 2, Precision::F32).is_err());
+    }
+
+    #[test]
+    fn precision_registry_roundtrips() {
+        for p in [Precision::F64, Precision::F32, Precision::F16, Precision::Int8] {
+            assert_eq!(Precision::parse(p.name()).unwrap(), p);
+            assert_eq!(Precision::from_id(p.id()).unwrap(), p);
+        }
+        assert!(Precision::parse("f8").is_err());
+        assert!(Precision::from_id(99).is_err());
+    }
+
+    #[test]
+    fn row_bytes_match_doc_numbers() {
+        assert_eq!(Precision::F64.row_bytes(25), 200);
+        assert_eq!(Precision::F32.row_bytes(25), 100);
+        assert_eq!(Precision::F16.row_bytes(25), 50);
+        assert_eq!(Precision::Int8.row_bytes(25), 27);
+    }
+}

@@ -1,0 +1,212 @@
+//! Index+value sparse encoding for ∇Q* uploads.
+//!
+//! A gradient upload is a `m_s × k` row-major matrix in which whole item
+//! rows may be zero (no participating client touched the item) or
+//! negligible. The sparse payload stores only the surviving rows:
+//!
+//! ```text
+//! u32 nnz | nnz × u32 row index | nnz rows encoded via wire::quant
+//! ```
+//!
+//! Row selection is governed by [`SparsePolicy`]:
+//!
+//! * `threshold` — rows with L2 norm ≤ threshold are dropped. The default
+//!   `0.0` drops only exactly-zero rows, so with an exact element codec
+//!   (`f32`/`f64`) the decode reconstructs the input **bit-exactly** —
+//!   the "zero-loss setting" the property tests pin.
+//! * `top_k` — optional top-k sparsification: keep at most `k` rows,
+//!   largest L2 norm first (0 disables). This is the codec-level analog
+//!   of the bandit's M_s selection, applied to the upload direction.
+
+use anyhow::{ensure, Result};
+
+use super::frame::{self, PayloadKind};
+use super::quant::{self, Precision};
+use super::Dense;
+
+/// Upload sparsification policy. The default (`top_k = 0`,
+/// `threshold = 0.0`) drops only exactly-zero rows — lossless.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct SparsePolicy {
+    /// Keep at most this many rows (largest L2 norm); 0 = keep all.
+    pub top_k: usize,
+    /// Drop rows with L2 norm ≤ this value; 0.0 = drop only zero rows.
+    pub threshold: f32,
+}
+
+/// Encode the sparse frame for a row-major `rows × cols` matrix.
+pub fn encode(
+    data: &[f32],
+    rows: usize,
+    cols: usize,
+    precision: Precision,
+    policy: &SparsePolicy,
+) -> Result<Vec<u8>> {
+    ensure!(
+        data.len() == rows * cols,
+        "sparse encode: {} values for {rows}x{cols}",
+        data.len()
+    );
+    // squared-norm row survey
+    let thr_sq = (policy.threshold as f64) * (policy.threshold as f64);
+    let mut kept: Vec<(u32, f64)> = Vec::new();
+    for r in 0..rows {
+        let norm_sq: f64 = data[r * cols..(r + 1) * cols]
+            .iter()
+            .map(|&v| (v as f64) * (v as f64))
+            .sum();
+        if norm_sq > thr_sq {
+            kept.push((r as u32, norm_sq));
+        }
+    }
+    if policy.top_k > 0 && kept.len() > policy.top_k {
+        // largest norms win, ties break by row index for determinism
+        kept.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        kept.truncate(policy.top_k);
+        kept.sort_by_key(|&(r, _)| r);
+    }
+
+    let mut payload = Vec::with_capacity(4 + kept.len() * (4 + precision.row_bytes(cols)));
+    payload.extend_from_slice(&(kept.len() as u32).to_le_bytes());
+    for &(r, _) in &kept {
+        payload.extend_from_slice(&r.to_le_bytes());
+    }
+    let mut compact = Vec::with_capacity(kept.len() * cols);
+    for &(r, _) in &kept {
+        compact.extend_from_slice(&data[r as usize * cols..(r as usize + 1) * cols]);
+    }
+    quant::encode_rows(&mut payload, &compact, kept.len(), cols, precision);
+    frame::seal(precision.id(), PayloadKind::Sparse, rows, cols, &payload)
+}
+
+/// Decode a sparse frame back into a dense matrix (dropped rows are 0).
+pub fn decode(buf: &[u8]) -> Result<Dense> {
+    let (header, payload) = frame::open(buf)?;
+    ensure!(
+        header.kind == PayloadKind::Sparse,
+        "expected a sparse frame, got {:?}",
+        header.kind
+    );
+    let precision = Precision::from_id(header.codec_id)?;
+    let (rows, cols) = (header.rows as usize, header.cols as usize);
+    ensure!(payload.len() >= 4, "sparse payload missing row count");
+    let nnz = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
+    ensure!(nnz <= rows, "sparse frame claims {nnz} rows of {rows}");
+    let values_at = 4 + nnz * 4;
+    ensure!(
+        payload.len() == values_at + quant::encoded_len(nnz, cols, precision),
+        "sparse payload length mismatch (nnz={nnz}, cols={cols}, {})",
+        precision.name()
+    );
+    let values = quant::decode_rows(&payload[values_at..], nnz, cols, precision)?;
+    let mut data = vec![0.0f32; rows * cols];
+    for i in 0..nnz {
+        let r = u32::from_le_bytes(payload[4 + i * 4..8 + i * 4].try_into().unwrap()) as usize;
+        ensure!(r < rows, "sparse row index {r} out of range ({rows} rows)");
+        data[r * cols..(r + 1) * cols].copy_from_slice(&values[i * cols..(i + 1) * cols]);
+    }
+    Ok(Dense { data, rows, cols })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn gradient_like(rows: usize, cols: usize, zero_frac: f64, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut data = vec![0.0f32; rows * cols];
+        for r in 0..rows {
+            if rng.chance(zero_frac) {
+                continue;
+            }
+            for c in 0..cols {
+                data[r * cols + c] = rng.normal() as f32 * 0.1;
+            }
+        }
+        data
+    }
+
+    #[test]
+    fn zero_loss_roundtrip_is_exact() {
+        let data = gradient_like(60, 25, 0.4, 1);
+        for p in [Precision::F32, Precision::F64] {
+            let buf = encode(&data, 60, 25, p, &SparsePolicy::default()).unwrap();
+            let dec = decode(&buf).unwrap();
+            assert_eq!(dec.rows, 60);
+            assert_eq!(dec.cols, 25);
+            assert_eq!(dec.data, data, "{}", p.name());
+        }
+    }
+
+    #[test]
+    fn zero_rows_shrink_the_frame() {
+        let dense = gradient_like(60, 25, 0.0, 2);
+        let sparse = gradient_like(60, 25, 0.5, 2);
+        let a = encode(&dense, 60, 25, Precision::F32, &SparsePolicy::default()).unwrap();
+        let b = encode(&sparse, 60, 25, Precision::F32, &SparsePolicy::default()).unwrap();
+        assert!(b.len() < a.len(), "{} !< {}", b.len(), a.len());
+    }
+
+    #[test]
+    fn top_k_keeps_the_largest_rows() {
+        let (rows, cols) = (30, 8);
+        let mut rng = Rng::seed_from_u64(3);
+        let data: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32).collect();
+        let policy = SparsePolicy {
+            top_k: 10,
+            threshold: 0.0,
+        };
+        let dec = decode(&encode(&data, rows, cols, Precision::F32, &policy).unwrap()).unwrap();
+        let norm = |d: &[f32], r: usize| -> f64 {
+            d[r * cols..(r + 1) * cols]
+                .iter()
+                .map(|&v| (v as f64) * (v as f64))
+                .sum()
+        };
+        let mut kept_norms = Vec::new();
+        let mut dropped_norms = Vec::new();
+        for r in 0..rows {
+            let out = &dec.data[r * cols..(r + 1) * cols];
+            if out.iter().all(|&v| v == 0.0) {
+                dropped_norms.push(norm(&data, r));
+            } else {
+                assert_eq!(out, &data[r * cols..(r + 1) * cols], "row {r} altered");
+                kept_norms.push(norm(&data, r));
+            }
+        }
+        assert_eq!(kept_norms.len(), 10);
+        let min_kept = kept_norms.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max_dropped = dropped_norms.iter().cloned().fold(0.0, f64::max);
+        assert!(min_kept >= max_dropped, "{min_kept} < {max_dropped}");
+    }
+
+    #[test]
+    fn threshold_drops_small_rows() {
+        let (rows, cols) = (4, 2);
+        #[rustfmt::skip]
+        let data = vec![
+            0.001, 0.001,   // tiny -> dropped at threshold 0.1
+            1.0, 1.0,       // kept
+            0.0, 0.0,       // zero -> always dropped
+            0.5, -0.5,      // kept
+        ];
+        let policy = SparsePolicy {
+            top_k: 0,
+            threshold: 0.1,
+        };
+        let dec = decode(&encode(&data, rows, cols, Precision::F32, &policy).unwrap()).unwrap();
+        assert_eq!(&dec.data[0..2], &[0.0, 0.0]);
+        assert_eq!(&dec.data[2..4], &[1.0, 1.0]);
+        assert_eq!(&dec.data[4..6], &[0.0, 0.0]);
+        assert_eq!(&dec.data[6..8], &[0.5, -0.5]);
+    }
+
+    #[test]
+    fn empty_matrix_roundtrips() {
+        let buf = encode(&[], 0, 5, Precision::F32, &SparsePolicy::default()).unwrap();
+        let dec = decode(&buf).unwrap();
+        assert_eq!(dec.rows, 0);
+        assert!(dec.data.is_empty());
+    }
+}

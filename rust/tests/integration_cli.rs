@@ -109,6 +109,33 @@ fn train_with_config_file_and_override() {
 }
 
 #[test]
+fn train_with_codec_flag() {
+    let (ok, text) = run(&[
+        "train",
+        "--dataset",
+        "synthetic-small",
+        "--backend",
+        "reference",
+        "--codec",
+        "int8",
+        "--iterations",
+        "3",
+        "--set",
+        "dataset.users=48",
+        "--set",
+        "dataset.items=96",
+        "--set",
+        "dataset.interactions=600",
+        "--set",
+        "train.theta=12",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("codec=int8"), "{text}");
+    let (ok, _) = run(&["train", "--codec", "f8"]);
+    assert!(!ok, "bad codec name must fail");
+}
+
+#[test]
 fn experiments_table1_writes_csv() {
     let dir = std::env::temp_dir().join("fedpayload_cli_t1");
     std::fs::create_dir_all(&dir).unwrap();

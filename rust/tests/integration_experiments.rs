@@ -60,6 +60,26 @@ fn fig3_produces_all_three_curves() {
 }
 
 #[test]
+fn codec_sweep_covers_every_precision() {
+    let dir = out_dir("codec");
+    experiments::codec_sweep(&dir, "movielens", &Scale::smoke(), backend()).unwrap();
+    let text = std::fs::read_to_string(dir.join("codec_movielens.csv")).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 1 + experiments::PRECISIONS.len());
+    let mut down_bytes = Vec::new();
+    for (i, prec) in experiments::PRECISIONS.iter().enumerate() {
+        let fields: Vec<&str> = lines[1 + i].split(',').collect();
+        assert_eq!(fields[1], *prec, "row order");
+        down_bytes.push(fields[6].parse::<u64>().unwrap());
+    }
+    // the ladder must strictly shrink: f64 > f32 > f16 > int8
+    for w in down_bytes.windows(2) {
+        assert!(w[0] > w[1], "codec ladder not shrinking: {down_bytes:?}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn run_rebuilds_is_deterministic() {
     let scale = Scale::smoke();
     let a = experiments::run_rebuilds("movielens", &scale, backend(), &[Strategy::Random], 0.25)

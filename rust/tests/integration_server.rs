@@ -5,7 +5,7 @@
 use fedpayload::config::{RunConfig, Strategy};
 use fedpayload::rng::Rng;
 use fedpayload::server::{load_dataset, standardize_rewards, Trainer};
-use fedpayload::simnet::payload_bytes;
+use fedpayload::wire::{encoded_dense_len, Precision};
 
 fn artifacts_available() -> bool {
     std::path::Path::new("artifacts/manifest.txt").exists()
@@ -41,11 +41,12 @@ fn pjrt_training_run_end_to_end() {
     let report = Trainer::from_config(&cfg).unwrap().run().unwrap();
     assert_eq!(report.history.len(), 30);
     assert_eq!(report.m_s, 64);
-    // every round moved Θ * 2 messages of the reduced payload
+    // every round moved Θ * 2 messages of the reduced payload; download
+    // bytes are the encoded f32 frame length (wire codec), measured
     assert_eq!(report.ledger.down_msgs, 30 * 24);
     assert_eq!(
         report.ledger.down_bytes,
-        30 * 24 * payload_bytes(64, 25, 64)
+        30 * 24 * encoded_dense_len(64, 25, Precision::F32) as u64
     );
     // metrics were actually computed
     assert!(report.final_metrics.precision >= 0.0);
@@ -110,18 +111,23 @@ fn all_strategies_run_on_pjrt() {
 }
 
 #[test]
-fn payload_fraction_sweep_scales_traffic_linearly() {
+fn payload_fraction_sweep_scales_traffic_with_ms() {
     require_artifacts!();
-    let mut bytes = Vec::new();
+    // down-traffic is exactly msgs × frame_len(M_s); the frame header is
+    // a constant 24 bytes so doubling M_s slightly less than doubles the
+    // frame, and the exact lengths are predictable
     for f in [0.125, 0.25, 0.5] {
         let mut cfg = tiny_cfg("pjrt");
         cfg.train.payload_fraction = f;
         cfg.train.iterations = 3;
         let report = Trainer::from_config(&cfg).unwrap().run().unwrap();
-        bytes.push(report.ledger.down_bytes);
+        let m_s = (256.0 * f) as usize;
+        assert_eq!(report.m_s, m_s);
+        assert_eq!(
+            report.ledger.down_bytes,
+            report.ledger.down_msgs * encoded_dense_len(m_s, 25, Precision::F32) as u64
+        );
     }
-    assert_eq!(bytes[1], bytes[0] * 2);
-    assert_eq!(bytes[2], bytes[1] * 2);
 }
 
 #[test]

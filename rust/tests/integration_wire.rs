@@ -1,0 +1,150 @@
+//! End-to-end wire-subsystem tests on the reference backend: the codec
+//! axis of payload reduction (int8 ≈ 3.7× smaller downloads than f32 at
+//! identical M_s), bounded accuracy cost (< 2% relative on final smoothed
+//! metrics), measured-vs-analytic ledger accounting, and upload
+//! sparsification.
+
+use fedpayload::config::{RunConfig, Strategy};
+use fedpayload::server::Trainer;
+use fedpayload::wire::{encoded_dense_len, Precision};
+
+fn base_cfg() -> RunConfig {
+    let mut cfg = RunConfig::paper_defaults();
+    cfg.apply_dataset_preset("synthetic-small").unwrap();
+    cfg.dataset.users = 48;
+    cfg.dataset.items = 96;
+    cfg.dataset.interactions = 900;
+    cfg.train.theta = 16;
+    cfg.train.iterations = 4;
+    cfg.train.payload_fraction = 0.25;
+    cfg.runtime.backend = "reference".into();
+    cfg
+}
+
+/// Learnable-data config used for the accuracy-degradation comparison.
+fn learnable_cfg(precision: Precision) -> RunConfig {
+    let mut cfg = base_cfg();
+    cfg.dataset.users = 64;
+    cfg.dataset.items = 128;
+    cfg.dataset.interactions = 2500;
+    cfg.train.iterations = 60;
+    cfg.train.theta = 32;
+    cfg.train.payload_fraction = 1.0;
+    // Full keeps item selection and participant sampling byte-identical
+    // across codecs, so the ONLY difference between two runs is the
+    // codec's quantization error.
+    cfg.bandit.strategy = Strategy::Full;
+    cfg.codec.precision = precision;
+    cfg
+}
+
+fn run(cfg: &RunConfig) -> fedpayload::server::TrainReport {
+    Trainer::from_config(cfg).unwrap().run().unwrap()
+}
+
+#[test]
+fn int8_downloads_are_about_4x_smaller_than_f32_at_identical_ms() {
+    let mut f32_cfg = base_cfg();
+    f32_cfg.codec.precision = Precision::F32;
+    let mut int8_cfg = base_cfg();
+    int8_cfg.codec.precision = Precision::Int8;
+
+    let a = run(&f32_cfg);
+    let b = run(&int8_cfg);
+    assert_eq!(a.m_s, b.m_s, "identical M_s required");
+    assert_eq!(a.ledger.down_msgs, b.ledger.down_msgs);
+
+    // exact: down bytes = msgs × encoded frame length per codec
+    assert_eq!(
+        a.ledger.down_bytes,
+        a.ledger.down_msgs * encoded_dense_len(a.m_s, 25, Precision::F32) as u64
+    );
+    assert_eq!(
+        b.ledger.down_bytes,
+        b.ledger.down_msgs * encoded_dense_len(b.m_s, 25, Precision::Int8) as u64
+    );
+
+    let ratio = a.ledger.down_bytes as f64 / b.ledger.down_bytes as f64;
+    assert!(
+        (3.0..4.5).contains(&ratio),
+        "int8 should cut downloads ~4x vs f32, got {ratio:.2}x"
+    );
+    // uploads shrink too (sparse frames share the element codec)
+    assert!(b.ledger.up_bytes < a.ledger.up_bytes);
+}
+
+#[test]
+fn precision_ladder_orders_traffic() {
+    // f64 > f32 > f16 > int8 traffic at identical selection
+    let mut down = Vec::new();
+    for p in [Precision::F64, Precision::F32, Precision::F16, Precision::Int8] {
+        let mut cfg = base_cfg();
+        cfg.codec.precision = p;
+        down.push(run(&cfg).ledger.down_bytes);
+    }
+    assert!(down[0] > down[1], "f64 {} !> f32 {}", down[0], down[1]);
+    assert!(down[1] > down[2], "f32 {} !> f16 {}", down[1], down[2]);
+    assert!(down[2] > down[3], "f16 {} !> int8 {}", down[2], down[3]);
+    // f64 is exactly 2x the f32 element payload (modulo the fixed header)
+    assert_eq!(
+        down[0],
+        16 * 4 * encoded_dense_len(24, 25, Precision::F64) as u64
+    );
+}
+
+#[test]
+fn int8_training_degrades_metrics_less_than_2pct_vs_f32() {
+    let f32_report = run(&learnable_cfg(Precision::F32));
+    let int8_report = run(&learnable_cfg(Precision::Int8));
+
+    let f32_map = f32_report.final_metrics.map;
+    let int8_map = int8_report.final_metrics.map;
+    assert!(f32_map > 0.05, "f32 baseline failed to learn: MAP {f32_map}");
+    let rel = (f32_map - int8_map).abs() / f32_map;
+    assert!(
+        rel < 0.02,
+        "int8 degraded final MAP by {:.2}% (f32 {f32_map:.4} vs int8 {int8_map:.4})",
+        rel * 100.0
+    );
+    // ... while moving ~4x less download traffic
+    assert!(int8_report.ledger.down_bytes * 3 < f32_report.ledger.down_bytes);
+}
+
+#[test]
+fn f16_training_degrades_metrics_less_than_2pct_vs_f32() {
+    let f32_report = run(&learnable_cfg(Precision::F32));
+    let f16_report = run(&learnable_cfg(Precision::F16));
+    let rel = (f32_report.final_metrics.map - f16_report.final_metrics.map).abs()
+        / f32_report.final_metrics.map;
+    assert!(rel < 0.02, "f16 degraded final MAP by {:.2}%", rel * 100.0);
+}
+
+#[test]
+fn upload_topk_sparsification_cuts_upload_traffic_only() {
+    let mut dense_cfg = base_cfg();
+    dense_cfg.bandit.strategy = Strategy::Random;
+    let mut topk_cfg = dense_cfg.clone();
+    topk_cfg.codec.sparse_topk = 6; // keep 6 of up to 24 gradient rows
+
+    let dense = run(&dense_cfg);
+    let topk = run(&topk_cfg);
+    // identical download path (selection is codec-independent for Random)
+    assert_eq!(dense.ledger.down_bytes, topk.ledger.down_bytes);
+    assert!(
+        topk.ledger.up_bytes < dense.ledger.up_bytes,
+        "top-k uploads {} !< dense uploads {}",
+        topk.ledger.up_bytes,
+        dense.ledger.up_bytes
+    );
+}
+
+#[test]
+fn codec_runs_are_deterministic() {
+    let mut cfg = base_cfg();
+    cfg.codec.precision = Precision::Int8;
+    let a = run(&cfg);
+    let b = run(&cfg);
+    assert_eq!(a.final_metrics.map, b.final_metrics.map);
+    assert_eq!(a.ledger.down_bytes, b.ledger.down_bytes);
+    assert_eq!(a.ledger.up_bytes, b.ledger.up_bytes);
+}

@@ -11,6 +11,7 @@ use fedpayload::metrics::{best_metrics, rank_candidates, raw_metrics, user_metri
 use fedpayload::reward::RewardEngine;
 use fedpayload::rng::Rng;
 use fedpayload::runtime::plan_chunks;
+use fedpayload::wire::{self, make_codec, Precision, SparsePolicy};
 
 const CASES: u64 = 60;
 
@@ -235,6 +236,167 @@ fn prop_cosine_properties() {
         let a2: Vec<f32> = a.iter().map(|x| x * 7.5).collect();
         let c3 = cosine_sim(&a2, &b);
         assert!((c1 - c3).abs() < 1e-4, "seed {seed}: not scale-invariant");
+    }
+}
+
+/// Random row-major matrix with mixed magnitudes and some all-zero rows.
+fn random_matrix(rng: &mut Rng, rows: usize, cols: usize) -> Vec<f32> {
+    let mut data = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        if rng.chance(0.2) {
+            continue; // zero row
+        }
+        let scale = 10f64.powi(rng.below(7) as i32 - 3); // 1e-3 .. 1e3
+        for c in 0..cols {
+            data[r * cols + c] = (rng.normal() * scale) as f32;
+        }
+    }
+    data
+}
+
+/// Property: for every codec, `decode(encode(Q))` matches within the
+/// codec's stated tolerance — bit-exact for f32/f64, bounded error for
+/// f16/int8 (`wire::quant::max_roundtrip_error`).
+#[test]
+fn prop_dense_codec_roundtrip_within_tolerance() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(9000 + seed);
+        let rows = 1 + rng.below(60);
+        let cols = 1 + rng.below(40);
+        let data = random_matrix(&mut rng, rows, cols);
+        for p in [Precision::F64, Precision::F32, Precision::F16, Precision::Int8] {
+            let codec = make_codec(p);
+            let frame = codec.encode_dense(&data, rows, cols).unwrap();
+            assert_eq!(
+                frame.len(),
+                wire::encoded_dense_len(rows, cols, p),
+                "seed {seed} {}",
+                p.name()
+            );
+            let dec = codec.decode_dense(&frame).unwrap();
+            assert_eq!((dec.rows, dec.cols), (rows, cols), "seed {seed}");
+            match p {
+                Precision::F64 | Precision::F32 => {
+                    assert_eq!(dec.data, data, "seed {seed} {} not exact", p.name());
+                }
+                Precision::F16 | Precision::Int8 => {
+                    for r in 0..rows {
+                        let row = &data[r * cols..(r + 1) * cols];
+                        let max = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                        let tol = wire::quant::max_roundtrip_error(p, max);
+                        for (a, b) in row.iter().zip(&dec.data[r * cols..(r + 1) * cols]) {
+                            assert!(
+                                (a - b).abs() <= tol,
+                                "seed {seed} {}: {a} vs {b} (tol {tol})",
+                                p.name()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Property: sparse-encoded gradients reconstruct exactly at zero-loss
+/// settings (exact element codec, default keep-all policy).
+#[test]
+fn prop_sparse_roundtrip_exact_at_zero_loss() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(10_000 + seed);
+        let rows = 1 + rng.below(80);
+        let cols = 1 + rng.below(32);
+        let data = random_matrix(&mut rng, rows, cols);
+        for p in [Precision::F32, Precision::F64] {
+            let codec = make_codec(p);
+            let frame = codec
+                .encode_sparse(&data, rows, cols, &SparsePolicy::default())
+                .unwrap();
+            let dec = codec.decode_sparse(&frame).unwrap();
+            assert_eq!(dec.data, data, "seed {seed} {}", p.name());
+        }
+    }
+}
+
+/// Property: top-k sparsification keeps at most k rows, never invents
+/// values, and keeps rows with the largest norms.
+#[test]
+fn prop_sparse_topk_keeps_largest_rows() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(11_000 + seed);
+        let rows = 2 + rng.below(60);
+        let cols = 1 + rng.below(16);
+        let data = random_matrix(&mut rng, rows, cols);
+        let top_k = 1 + rng.below(rows);
+        let codec = make_codec(Precision::F32);
+        let policy = SparsePolicy {
+            top_k,
+            threshold: 0.0,
+        };
+        let dec = codec
+            .decode_sparse(&codec.encode_sparse(&data, rows, cols, &policy).unwrap())
+            .unwrap();
+        let norm_sq = |d: &[f32], r: usize| -> f64 {
+            d[r * cols..(r + 1) * cols]
+                .iter()
+                .map(|&v| (v as f64) * (v as f64))
+                .sum()
+        };
+        let mut kept = 0usize;
+        let mut min_kept = f64::INFINITY;
+        let mut max_dropped: f64 = 0.0;
+        for r in 0..rows {
+            let out = &dec.data[r * cols..(r + 1) * cols];
+            if out.iter().any(|&v| v != 0.0) {
+                assert_eq!(out, &data[r * cols..(r + 1) * cols], "seed {seed} row {r}");
+                kept += 1;
+                min_kept = min_kept.min(norm_sq(&data, r));
+            } else {
+                max_dropped = max_dropped.max(norm_sq(&data, r));
+            }
+        }
+        assert!(kept <= top_k, "seed {seed}: kept {kept} > top_k {top_k}");
+        if kept > 0 && max_dropped > 0.0 {
+            assert!(
+                min_kept >= max_dropped,
+                "seed {seed}: kept norm {min_kept} < dropped {max_dropped}"
+            );
+        }
+    }
+}
+
+/// Property: frame corruption (any single flipped payload byte, bad
+/// magic, truncation) is always detected at decode time.
+#[test]
+fn prop_frame_corruption_detected() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(12_000 + seed);
+        let rows = 1 + rng.below(20);
+        let cols = 1 + rng.below(20);
+        let data = random_matrix(&mut rng, rows, cols);
+        let p = [Precision::F64, Precision::F32, Precision::F16, Precision::Int8]
+            [rng.below(4)];
+        let codec = make_codec(p);
+        let frame = codec.encode_dense(&data, rows, cols).unwrap();
+        // flip one payload byte: FNV-1a detects every 1-byte fault
+        let mut bad = frame.clone();
+        let i = wire::HEADER_LEN + rng.below(bad.len() - wire::HEADER_LEN);
+        bad[i] ^= 1 << rng.below(8);
+        assert!(codec.decode_dense(&bad).is_err(), "seed {seed} flip at {i}");
+        // magic corruption
+        let mut bad = frame.clone();
+        bad[rng.below(4)] ^= 0xff;
+        assert!(codec.decode_dense(&bad).is_err(), "seed {seed} magic");
+        // header field corruption (codec id / rows / cols are covered by
+        // the frame checksum, so a flipped dims byte cannot smuggle a
+        // wrong-dimensioned matrix through)
+        let mut bad = frame.clone();
+        let j = 5 + rng.below(11); // bytes 5..16: codec, kind, dims
+        bad[j] ^= 1 << rng.below(8);
+        assert!(codec.decode_dense(&bad).is_err(), "seed {seed} header at {j}");
+        // truncation
+        let cut = rng.below(frame.len());
+        assert!(codec.decode_dense(&frame[..cut]).is_err(), "seed {seed} cut");
     }
 }
 
