@@ -1,0 +1,72 @@
+//! Round-loop scaling of the sharded client-fleet executor on the
+//! reference backend: one synthetic workload with Θ = 512 participants
+//! (8 batches of B = 64 per round), timed at 1/2/4/8 threads. Prints the
+//! speedup ladder and writes `BENCH_parallel.json` (path overridable via
+//! `FEDPAYLOAD_BENCH_JSON`) so CI can archive the perf trajectory.
+//!
+//! Acceptance target (ISSUE 2): ≥ 2× round-loop speedup at 4 threads on
+//! this workload. Eval is effectively disabled so the timing isolates the
+//! parallelized solve/grad/codec hot path.
+
+use fedpayload::experiments::parallel_workload_cfg;
+use fedpayload::rng::Rng;
+use fedpayload::server::{load_dataset, Trainer};
+use fedpayload::telemetry::{bench, BenchResult};
+
+fn main() {
+    // the same Θ = 512 workload `fedpayload experiments threads` sweeps
+    let mut cfg = parallel_workload_cfg("reference");
+    cfg.train.eval_every = 1_000_000; // keep the timing on the compute path
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let data = load_dataset(&cfg, &mut rng).unwrap();
+    let split = data.split(cfg.dataset.train_frac, &mut rng);
+
+    println!(
+        "=== parallel round loop (theta=512, B=64 -> 8 batches, m_s=256, reference backend) ==="
+    );
+    let mut results: Vec<(usize, BenchResult)> = Vec::new();
+    for threads in [1usize, 2, 4, 8] {
+        let mut cfg_run = cfg.clone();
+        cfg_run.runtime.threads = threads;
+        let mut trainer = Trainer::with_split(&cfg_run, split.clone()).unwrap();
+        // warm the worker pool + allocator outside the timed region
+        trainer.round().unwrap();
+        let r = bench(&format!("round_theta512_t{threads}"), || {
+            trainer.round().unwrap()
+        });
+        results.push((threads, r));
+    }
+
+    let base = results[0].1.mean_ns;
+    println!("\nspeedup vs 1 thread:");
+    for (threads, r) in &results {
+        println!(
+            "  threads={threads}: {:.2}x ({:.2} rounds/s)",
+            base / r.mean_ns,
+            1e9 / r.mean_ns
+        );
+    }
+
+    let mut json = String::from("{\n  \"bench\": \"parallel_round\",\n");
+    json.push_str(
+        "  \"workload\": {\"theta\": 512, \"batch\": 64, \"m_s\": 256, \"k\": 25, \
+         \"backend\": \"reference\"},\n  \"results\": [\n",
+    );
+    for (i, (threads, r)) in results.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"threads\": {threads}, \"mean_ns\": {:.0}, \"p50_ns\": {:.0}, \
+             \"p95_ns\": {:.0}, \"iters\": {}, \"speedup_vs_1t\": {:.3}}}{}\n",
+            r.mean_ns,
+            r.p50_ns,
+            r.p95_ns,
+            r.iters,
+            base / r.mean_ns,
+            if i + 1 < results.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let out =
+        std::env::var("FEDPAYLOAD_BENCH_JSON").unwrap_or_else(|_| "BENCH_parallel.json".into());
+    std::fs::write(&out, json).unwrap();
+    println!("\nwrote {out}");
+}

@@ -45,6 +45,7 @@ const VALUE_KEYS: &[&str] = &[
     "codec",
     "precision",
     "sparse-topk",
+    "dump-rounds",
 ];
 
 impl Args {

@@ -1,4 +1,5 @@
-//! Simulated FL clients (paper §2.2).
+//! Simulated FL clients (paper §2.2) and the shard-aware fleet views the
+//! parallel round executor reads from.
 //!
 //! Each client owns its private interaction rows (train + held-out test)
 //! and its user factor `p_i` — which, exactly as in FCF, never leaves the
@@ -7,24 +8,28 @@
 //! math itself (Eq. 3 solve + Eq. 6 gradients) runs through the shared
 //! AOT artifacts — batching many clients per execution is the simulator's
 //! throughput trick and does not change the per-client semantics.
+//!
+//! The immutable interaction data lives behind an `Arc` so the sharded
+//! executor (`runtime::fleet`) can hand every worker thread a cheap
+//! [`FleetView`] without copying the dataset; the mutable per-client
+//! state (the local factors) stays coordinator-owned in [`Fleet`] and is
+//! only written after the round barrier.
+
+use std::sync::Arc;
 
 use crate::data::Split;
 use crate::rng::Rng;
 
-/// One simulated user device.
+/// One simulated user device's immutable private data.
 #[derive(Debug, Clone)]
-pub struct Client {
-    pub id: usize,
+pub struct ClientData {
     /// Sorted train interactions (item ids).
     pub train_items: Vec<u32>,
     /// Sorted held-out test interactions (item ids).
     pub test_items: Vec<u32>,
-    /// Local user factor p_i (K), updated each time the client
-    /// participates in a round. Empty until first participation.
-    pub p: Vec<f32>,
 }
 
-impl Client {
+impl ClientData {
     /// Map this client's train items into selected-item positions.
     /// `sel_pos[item] >= 0` gives the position of `item` in the round's
     /// selected list; the result stays sorted because the selected list
@@ -41,25 +46,19 @@ impl Client {
     }
 }
 
-/// The population of simulated clients for one training run.
+/// Cheaply cloneable, thread-shareable view of the fleet's immutable
+/// interaction data — what a worker shard needs to solve (rows) and
+/// evaluate (train/test items) its clients.
 #[derive(Debug, Clone)]
-pub struct Fleet {
-    clients: Vec<Client>,
+pub struct FleetView {
+    clients: Arc<Vec<ClientData>>,
 }
 
-impl Fleet {
-    /// Build one client per user from a train/test split.
-    pub fn from_split(split: &Split) -> Fleet {
-        let n = split.train.num_users();
-        let clients = (0..n)
-            .map(|u| Client {
-                id: u,
-                train_items: split.train.user_items(u).to_vec(),
-                test_items: split.test.user_items(u).to_vec(),
-                p: Vec::new(),
-            })
-            .collect();
-        Fleet { clients }
+impl FleetView {
+    pub fn from_clients(clients: Vec<ClientData>) -> FleetView {
+        FleetView {
+            clients: Arc::new(clients),
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -70,20 +69,72 @@ impl Fleet {
         self.clients.is_empty()
     }
 
-    pub fn client(&self, id: usize) -> &Client {
+    pub fn client(&self, id: usize) -> &ClientData {
         &self.clients[id]
     }
+}
 
-    pub fn client_mut(&mut self, id: usize) -> &mut Client {
-        &mut self.clients[id]
+/// The population of simulated clients for one training run: the shared
+/// immutable view plus the coordinator-owned mutable per-client state.
+#[derive(Debug, Clone)]
+pub struct Fleet {
+    view: FleetView,
+    /// Local user factors p_i (K each), set each time a client
+    /// participates in a round. Empty until first participation; never
+    /// transmitted (FCF privacy boundary).
+    factors: Vec<Vec<f32>>,
+}
+
+impl Fleet {
+    /// Build one client per user from a train/test split.
+    pub fn from_split(split: &Split) -> Fleet {
+        let n = split.train.num_users();
+        let clients = (0..n)
+            .map(|u| ClientData {
+                train_items: split.train.user_items(u).to_vec(),
+                test_items: split.test.user_items(u).to_vec(),
+            })
+            .collect();
+        Fleet {
+            view: FleetView::from_clients(clients),
+            factors: vec![Vec::new(); n],
+        }
+    }
+
+    /// Shard-shareable snapshot of the immutable client data (an `Arc`
+    /// clone — no copying).
+    pub fn view(&self) -> FleetView {
+        self.view.clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.view.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.view.is_empty()
+    }
+
+    pub fn client(&self, id: usize) -> &ClientData {
+        self.view.client(id)
+    }
+
+    /// A client's local factor p_i (empty before first participation).
+    pub fn factors(&self, id: usize) -> &[f32] {
+        &self.factors[id]
+    }
+
+    /// Install a client's freshly solved local factor (post-barrier).
+    pub fn set_factors(&mut self, id: usize, p: Vec<f32>) {
+        self.factors[id] = p;
     }
 
     /// Draw Θ distinct participants for a round. The paper's server only
     /// observes that Θ updates arrived; uniform sampling reproduces the
     /// asynchronous-arrival semantics (DESIGN.md §Substitutions).
     pub fn sample_participants(&self, theta: usize, rng: &mut Rng) -> Vec<usize> {
-        let theta = theta.min(self.clients.len());
-        rng.sample_indices(self.clients.len(), theta)
+        let theta = theta.min(self.len());
+        rng.sample_indices(self.len(), theta)
     }
 }
 
@@ -106,7 +157,7 @@ mod tests {
         assert_eq!(f.client(0).train_items, vec![1, 4]);
         assert_eq!(f.client(0).test_items, vec![2]);
         assert_eq!(f.client(2).test_items, Vec::<u32>::new());
-        assert!(f.client(1).p.is_empty());
+        assert!(f.factors(1).is_empty());
     }
 
     #[test]
@@ -132,5 +183,18 @@ mod tests {
         s.sort_unstable();
         s.dedup();
         assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn view_shares_data_and_factors_stay_local() {
+        let mut f = fleet();
+        let view = f.view();
+        f.set_factors(1, vec![0.5, 0.5]);
+        // the view sees the same immutable data...
+        assert_eq!(view.len(), 3);
+        assert_eq!(view.client(0).train_items, f.client(0).train_items);
+        // ...while factors live only on the coordinator side
+        assert_eq!(f.factors(1), &[0.5, 0.5]);
+        assert!(f.factors(0).is_empty());
     }
 }

@@ -185,10 +185,13 @@ pub struct RuntimeConfig {
     /// (pure-Rust differential backend, used by tests and available as a
     /// no-artifacts fallback).
     pub backend: String,
-    /// Worker threads for a parallel client fleet. The PJRT client handle
-    /// is thread-local (`Rc` internally), so values > 1 are reserved for
-    /// the reference backend / future per-thread-backend fleets; the
-    /// batched executor already amortizes B = 64 clients per call.
+    /// Compute lanes for the sharded client-fleet executor
+    /// (`runtime::fleet`): the round's B-sized client batches are
+    /// distributed over this many lanes (the coordinator thread plus
+    /// `threads - 1` workers), each owning its own `ComputeBackend` (the
+    /// PJRT client handle is thread-local). Outcomes merge in batch
+    /// order, so every value produces bit-identical training to
+    /// `threads = 1`. Must be >= 1; values beyond ⌈Θ / B⌉ idle.
     pub threads: usize,
 }
 
@@ -450,6 +453,9 @@ impl RunConfig {
             "pjrt" | "reference" => {}
             other => bail!("unknown runtime.backend `{other}` (pjrt|reference)"),
         }
+        if self.runtime.threads == 0 {
+            bail!("runtime.threads must be >= 1 (the number of parallel fleet compute lanes)");
+        }
         Ok(())
     }
 
@@ -541,6 +547,18 @@ mod tests {
         assert!(c.validate().is_err());
         c.codec.sparse_threshold = f64::NAN;
         assert!(c.validate().is_err());
+        c.codec.sparse_threshold = 0.0;
+        c.runtime.threads = 0;
+        assert!(c.validate().is_err());
+        c.runtime.threads = 4;
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn threads_parse_and_validate() {
+        let cfg = RunConfig::from_toml_str("[runtime]\nthreads = 8\n").unwrap();
+        assert_eq!(cfg.runtime.threads, 8);
+        assert!(RunConfig::from_toml_str("[runtime]\nthreads = 0\n").is_err());
     }
 
     #[test]

@@ -28,7 +28,7 @@ use crate::config::{RunConfig, Strategy};
 use crate::data::DatasetStats;
 use crate::metrics::{diff_pct, impr_pct, MetricSet, RebuildStats};
 use crate::rng::Rng;
-use crate::server::load_dataset;
+use crate::server::{load_dataset, Trainer, TrainReport};
 use crate::simnet::{human_bytes, table1_rows};
 use crate::telemetry::CsvWriter;
 use crate::info;
@@ -94,7 +94,8 @@ impl Scale {
         cfg.dataset.items = ((cfg.dataset.items as f64 * s).round() as usize).max(64);
         cfg.dataset.interactions =
             ((cfg.dataset.interactions as f64 * s).round() as usize).max(512);
-        cfg.train.theta = ((cfg.train.theta as f64 * s).round() as usize).clamp(8, cfg.dataset.users);
+        cfg.train.theta =
+            ((cfg.train.theta as f64 * s).round() as usize).clamp(8, cfg.dataset.users);
         cfg.train.iterations = self.iterations;
         cfg.train.rebuilds = self.rebuilds;
         cfg.train.eval_every = self.eval_every;
@@ -397,6 +398,108 @@ pub fn codec_sweep(out_dir: &Path, dataset: &str, scale: &Scale, backend: &str) 
     csv.flush()
 }
 
+// ---------------------------------------------------------------------------
+// Threads sweep (beyond the paper)
+
+/// Thread counts swept by [`threads_sweep`].
+pub const THREAD_COUNTS: &[usize] = &[1, 2, 4];
+
+/// The Θ ≫ B synthetic workload shared by [`threads_sweep`] and
+/// `benches/bench_parallel.rs`: 8 batches of B = 64 per round, so the
+/// parallel lanes actually have work to claim (the paper presets at
+/// reduced scale fit a round into a single batch). Callers layer their
+/// own iteration/eval knobs on top.
+pub fn parallel_workload_cfg(backend: &str) -> RunConfig {
+    let mut cfg = RunConfig::paper_defaults();
+    cfg.apply_dataset_preset("synthetic-small")
+        .expect("synthetic-small is a built-in preset");
+    cfg.runtime.backend = backend.to_string();
+    cfg.dataset.users = 768;
+    cfg.dataset.items = 512;
+    cfg.dataset.interactions = 30_000;
+    cfg.train.theta = 512;
+    cfg.train.payload_fraction = 0.5;
+    cfg
+}
+
+/// Parallel-fleet scaling sweep: run the identical workload/split at each
+/// thread count, report wall-clock throughput, and **verify** the
+/// determinism contract (bit-identical final metrics and traffic at every
+/// thread count).
+///
+/// Parallelism operates at batch granularity (B = 64 clients per backend
+/// execution), so the workload uses Θ ≫ B — unlike the paper presets at
+/// reduced scale, whose Θ fits in a single batch.
+pub fn threads_sweep(out_dir: &Path, scale: &Scale, backend: &str) -> Result<()> {
+    let header = [
+        "threads",
+        "iterations",
+        "wall_secs",
+        "rounds_per_sec",
+        "speedup_vs_1t",
+        "map_bits",
+        "total_bytes",
+    ];
+    let mut csv = CsvWriter::create(out_dir.join("threads.csv"), &header)?;
+    let mut cfg = parallel_workload_cfg(backend);
+    cfg.train.iterations = scale.iterations.clamp(2, 40);
+    cfg.train.eval_every = scale.eval_every.max(5);
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let data = load_dataset(&cfg, &mut rng)?;
+    let split = data.split(cfg.dataset.train_frac, &mut rng);
+    println!(
+        "threads sweep — {} iterations, theta={}, backend={backend}:",
+        cfg.train.iterations, cfg.train.theta
+    );
+    let mut wall_1t = 0.0f64;
+    let mut reference: Option<TrainReport> = None;
+    for &threads in THREAD_COUNTS {
+        let mut cfg_run = cfg.clone();
+        cfg_run.runtime.threads = threads;
+        let mut trainer = Trainer::with_split(&cfg_run, split.clone())?;
+        let report = trainer.run()?;
+        if threads == 1 {
+            wall_1t = report.wall_secs;
+        }
+        let speedup = if report.wall_secs > 0.0 {
+            wall_1t / report.wall_secs
+        } else {
+            0.0
+        };
+        match &reference {
+            None => reference = Some(report.clone()),
+            Some(r0) => {
+                // the determinism contract, enforced, not just reported
+                anyhow::ensure!(
+                    r0.final_metrics.map.to_bits() == report.final_metrics.map.to_bits()
+                        && r0.ledger.total_bytes() == report.ledger.total_bytes(),
+                    "threads={threads} diverged from threads=1 \
+                     (map {} vs {}, bytes {} vs {})",
+                    report.final_metrics.map,
+                    r0.final_metrics.map,
+                    report.ledger.total_bytes(),
+                    r0.ledger.total_bytes()
+                );
+            }
+        }
+        let rps = report.iterations as f64 / report.wall_secs.max(1e-9);
+        println!(
+            "  threads={threads}: {:.2}s wall ({rps:.1} rounds/s, {speedup:.2}x vs 1t), map={:.4}",
+            report.wall_secs, report.final_metrics.map
+        );
+        csv.row(&[
+            threads.to_string(),
+            report.iterations.to_string(),
+            format!("{:.4}", report.wall_secs),
+            format!("{rps:.2}"),
+            format!("{speedup:.3}"),
+            format!("{:016x}", report.final_metrics.map.to_bits()),
+            report.ledger.total_bytes().to_string(),
+        ])?;
+    }
+    csv.flush()
+}
+
 /// Run every experiment at the given scale into `out_dir`.
 pub fn run_all(out_dir: &Path, scale: &Scale, backend: &str) -> Result<()> {
     std::fs::create_dir_all(out_dir)?;
@@ -408,6 +511,7 @@ pub fn run_all(out_dir: &Path, scale: &Scale, backend: &str) -> Result<()> {
         codec_sweep(out_dir, ds, scale, backend)?;
     }
     table4(out_dir, scale, backend)?;
+    threads_sweep(out_dir, scale, backend)?;
     Ok(())
 }
 

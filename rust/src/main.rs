@@ -5,7 +5,8 @@
 //! * `train`       — run one FCF training build and print the report.
 //! * `experiments` — regenerate the paper's tables/figures into `--out-dir`
 //!                   (`all` | `table1` | `table2` | `fig2` | `fig3` | `table4`
-//!                   | `codecs` — the wire-codec payload sweep).
+//!                   | `codecs` — the wire-codec payload sweep | `threads` —
+//!                   the parallel-fleet scaling sweep).
 //! * `info`        — print artifact manifest + config resolution.
 //!
 //! Common options: `--config <file.toml>`, repeated `--set path=value`
@@ -32,16 +33,19 @@ USAGE:
   fedpayload train [--dataset <preset>] [--strategy <s>] [--iterations N]
                    [--payload-fraction F] [--theta N] [--seed N]
                    [--codec f64|f32|f16|int8] [--sparse-topk N]
-                   [--backend pjrt|reference] [--config file.toml]
-                   [--set path=value ...]
-  fedpayload experiments <all|table1|table2|fig2|fig3|table4|codecs>
+                   [--threads N] [--backend pjrt|reference]
+                   [--config file.toml] [--set path=value ...]
+                   [--dump-rounds file.csv]
+  fedpayload experiments <all|table1|table2|fig2|fig3|table4|codecs|threads>
                    [--out-dir results] [--scale paper|reduced|smoke]
                    [--backend pjrt|reference]
   fedpayload info  [--config file.toml]
   fedpayload help
 
   (--precision is an alias for --codec; `--set codec.sparse_threshold=X`
-   tunes the upload sparsifier.)
+   tunes the upload sparsifier. --threads N runs each round's client
+   batches on N parallel lanes — bit-identical results for any N; the
+   determinism CI job diffs --dump-rounds records to enforce it.)
 ";
 
 fn main() -> ExitCode {
@@ -112,6 +116,9 @@ fn resolve_config(args: &Args) -> Result<RunConfig> {
     if let Some(b) = args.opt("backend") {
         cfg.runtime.backend = b.to_string();
     }
+    if let Some(n) = args.opt_parse::<usize>("threads")? {
+        cfg.runtime.threads = n;
+    }
     if let Some(p) = args.opt("codec").or_else(|| args.opt("precision")) {
         cfg.codec.precision = fedpayload::wire::Precision::parse(p)?;
     }
@@ -120,6 +127,42 @@ fn resolve_config(args: &Args) -> Result<RunConfig> {
     }
     cfg.validate()?;
     Ok(cfg)
+}
+
+/// Dump every round record with full bit precision (f64 payloads as hex
+/// bit patterns) so two runs can be compared byte-for-byte — the
+/// determinism CI job diffs these files across `--threads` values.
+fn write_round_dump(path: &str, report: &fedpayload::server::TrainReport) -> Result<()> {
+    let mut text = String::from(
+        "iter,m_s,raw_precision,raw_recall,raw_f1,raw_map,\
+         smoothed_precision,smoothed_recall,smoothed_f1,smoothed_map,round_bytes\n",
+    );
+    for r in &report.history {
+        text.push_str(&format!(
+            "{},{},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x},{}\n",
+            r.iter,
+            r.m_s,
+            r.raw.precision.to_bits(),
+            r.raw.recall.to_bits(),
+            r.raw.f1.to_bits(),
+            r.raw.map.to_bits(),
+            r.smoothed.precision.to_bits(),
+            r.smoothed.recall.to_bits(),
+            r.smoothed.f1.to_bits(),
+            r.smoothed.map.to_bits(),
+            r.round_bytes,
+        ));
+    }
+    text.push_str(&format!(
+        "totals,down_bytes={},up_bytes={},down_msgs={},up_msgs={},sim_secs_bits={:016x}\n",
+        report.ledger.down_bytes,
+        report.ledger.up_bytes,
+        report.ledger.down_msgs,
+        report.ledger.up_msgs,
+        report.ledger.sim_secs.to_bits(),
+    ));
+    std::fs::write(path, text).with_context(|| format!("writing round dump {path}"))?;
+    Ok(())
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -147,6 +190,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     println!("wall time: {:.2}s; phase breakdown:", report.wall_secs);
     for (name, secs, count) in &report.phase_times {
         println!("  {name:<8} {secs:>8.3}s over {count} calls");
+    }
+    if let Some(path) = args.opt("dump-rounds") {
+        write_round_dump(path, &report)?;
+        println!("round records dumped to {path}");
     }
     Ok(())
 }
@@ -185,6 +232,7 @@ fn cmd_experiments(args: &Args) -> Result<()> {
             }
         }
         "table4" => experiments::table4(&out_dir, &scale, backend)?,
+        "threads" => experiments::threads_sweep(&out_dir, &scale, backend)?,
         "codecs" => {
             for ds in experiments::DATASETS {
                 experiments::codec_sweep(&out_dir, ds, &scale, backend)?;

@@ -168,6 +168,15 @@ impl MetricAccumulator {
         self.count += 1;
     }
 
+    /// Fold another accumulator in (per-batch accumulators merged at the
+    /// parallel round barrier). Merging MUST happen in a fixed order —
+    /// float addition is not associative — which the fleet executor
+    /// guarantees by always folding in batch-index order.
+    pub fn merge(&mut self, other: &MetricAccumulator) {
+        self.sum.add(&other.sum);
+        self.count += other.count;
+    }
+
     pub fn count(&self) -> usize {
         self.count
     }
@@ -348,6 +357,35 @@ mod tests {
         }
         assert!((rs.mean().precision - 0.2).abs() < 1e-12);
         assert!((rs.std().precision - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accumulator_merge_matches_sequential_pushes() {
+        let sets: Vec<MetricSet> = (0..7)
+            .map(|i| {
+                let v = 0.1 * (i + 1) as f64;
+                MetricSet {
+                    precision: v,
+                    recall: v / 2.0,
+                    f1: v / 3.0,
+                    map: v / 4.0,
+                }
+            })
+            .collect();
+        // per-batch accumulators merged in batch order == pushing each
+        // batch's members then the next batch's (same fold shape)
+        let mut merged = MetricAccumulator::new();
+        for chunk in sets.chunks(3) {
+            let mut part = MetricAccumulator::new();
+            for s in chunk {
+                part.push(s);
+            }
+            merged.merge(&part);
+        }
+        assert_eq!(merged.count(), 7);
+        let mean = merged.mean();
+        assert!((mean.precision - 0.4).abs() < 1e-12);
+        assert!((mean.map - 0.1).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,754 @@
+//! Sharded, multi-threaded execution of the per-round client-fleet math —
+//! the hot path of every FL iteration.
+//!
+//! The coordinator partitions a round's Θ participants into B-sized
+//! batches (B is the compiled artifact batch width) and hands them to a
+//! [`FleetExecutor`]: a persistent pool of worker threads that pull batch
+//! indices from a shared queue. [`ComputeBackend`](super::ComputeBackend)
+//! is deliberately not `Send` (the PJRT client handle is thread-local),
+//! so each worker builds its **own** backend on its own thread through a
+//! [`BackendFactory`] and keeps it for the life of the pool.
+//!
+//! ## Determinism
+//!
+//! `runtime.threads = N` must produce **bit-identical** training to
+//! `threads = 1` — every table, figure, and regression baseline depends
+//! on it. Two rules make that hold:
+//!
+//! 1. **Batch outcomes are pure.** A [`BatchOutcome`] is a deterministic
+//!    function of the round inputs and the batch index alone — backends
+//!    built from the same config compute identical floats, and no RNG
+//!    runs off the coordinator thread — so it does not matter *which*
+//!    lane computes a batch.
+//! 2. **Reduction is at batch granularity, in batch-index order.**
+//!    [`merge_outcomes`] folds gradients, metric accumulators, and
+//!    traffic ledgers batch-by-batch in index order, never per-shard:
+//!    shard boundaries depend on the thread count, batch boundaries do
+//!    not. Floating-point addition is not associative, so this fixed
+//!    fold shape is what keeps `threads = 4` bit-equal to `threads = 1`
+//!    (the determinism CI job diffs dumped round records to enforce it).
+//!
+//! Work distribution itself is free to race (an atomic claim counter);
+//! only the merge order is pinned.
+//!
+//! ## Per-client upload framing
+//!
+//! The batch's ∇Q* round-trips the sparse codec once per batch (the
+//! backend aggregates a batch's gradients in a single execution, and the
+//! *decoded* sum is what trains the server — dynamics unchanged), and the
+//! ledger records one message per client at exactly that frame's length.
+//! That per-client length is **exact**, not an approximation: the FCF
+//! implicit-feedback gradient is dense over the selected set — every
+//! client contributes `(1 + αx)(x − s)` to every selected item, x = 0
+//! included, plus the regularizer — so a client's own policy-sparsified
+//! upload carries the same surviving-row set as the batch aggregate and
+//! encodes to the same length. (A frame indexed by the client's
+//! *interacted* rows would both undercount the paper's payload and leak
+//! the private interaction set the `client` module promises never leaves
+//! the device.) This discharges the ROADMAP follow-up on per-client
+//! upload attribution: per-batch framing already attributes each client
+//! its true frame length, and the per-batch ledgers make that structure
+//! explicit and mergeable.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+#[cfg(feature = "parallel")]
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::client::FleetView;
+use crate::config::{RunConfig, SimNetConfig};
+use crate::metrics::{rank_candidates, user_metrics, MetricAccumulator};
+use crate::simnet::TrafficLedger;
+#[cfg(feature = "parallel")]
+use crate::wire::make_codec;
+use crate::wire::{PayloadCodec, Precision, SparsePolicy};
+use crate::warn_log;
+
+use super::{make_backend, ComputeBackend, FcfRuntime, SelRow};
+
+/// Builds one [`ComputeBackend`] per worker thread. The trait is not
+/// `Send`, so the factory (plain config data, `Send + Sync`) crosses the
+/// thread boundary and construction happens on the owning thread.
+#[derive(Clone)]
+pub struct BackendFactory {
+    cfg: RunConfig,
+}
+
+impl BackendFactory {
+    pub fn from_config(cfg: &RunConfig) -> BackendFactory {
+        BackendFactory { cfg: cfg.clone() }
+    }
+
+    /// Backend name this factory builds (`pjrt` / `reference`).
+    pub fn backend_name(&self) -> &str {
+        &self.cfg.runtime.backend
+    }
+
+    /// Construct a fresh backend on the calling thread.
+    pub fn build(&self) -> Result<Box<dyn ComputeBackend>> {
+        make_backend(&self.cfg)
+    }
+
+    /// Construct a fresh tiled runtime on the calling thread.
+    pub fn build_runtime(&self) -> Result<FcfRuntime> {
+        Ok(FcfRuntime::new(self.build()?))
+    }
+}
+
+/// Everything a worker needs to execute one round's batches. Immutable
+/// once dispatched; shared across lanes behind an `Arc`.
+#[derive(Clone)]
+pub struct RoundTask {
+    /// Decoded selected item factors, item-major (m_s × k).
+    pub q_sel: Vec<f32>,
+    pub k: usize,
+    /// Full catalog size (eval score width).
+    pub m: usize,
+    /// Full model snapshot for evaluation scoring (empty when
+    /// `!evaluate`). Owned copy by necessity: persistent workers need
+    /// `'static` data and the coordinator mutates Q right after the
+    /// barrier. The m × k copy is 1/B of a single batch's O(B·m·k)
+    /// scoring work, so it is noise next to what it feeds.
+    pub q_full: Vec<f32>,
+    pub evaluate: bool,
+    /// Per-participant interactions in selected-position space, aligned
+    /// with `client_ids`.
+    pub rows: Vec<SelRow>,
+    /// Participating client ids, round order (batch i covers
+    /// `client_ids[i*batch .. (i+1)*batch]`).
+    pub client_ids: Vec<usize>,
+    /// Batch width B of the compiled artifacts.
+    pub batch: usize,
+    /// Element precision of the upload codec (workers build their own
+    /// codec instance from this — codecs are stateless).
+    pub precision: Precision,
+    pub sparse: SparsePolicy,
+    pub simnet: SimNetConfig,
+    /// Shared immutable per-client data (eval needs train/test items).
+    pub fleet: FleetView,
+}
+
+impl RoundTask {
+    /// Selected item count this round.
+    pub fn m_s(&self) -> usize {
+        if self.k == 0 {
+            0
+        } else {
+            self.q_sel.len() / self.k
+        }
+    }
+
+    /// Number of B-sized batches the participants split into.
+    pub fn num_batches(&self) -> usize {
+        self.client_ids.len().div_ceil(self.batch)
+    }
+
+    fn batch_range(&self, index: usize) -> (usize, usize) {
+        let lo = index * self.batch;
+        let hi = (lo + self.batch).min(self.client_ids.len());
+        (lo, hi)
+    }
+}
+
+/// What one batch execution produces. Deterministic given the task and
+/// batch index — independent of the lane that computed it.
+#[derive(Debug, Clone, Default)]
+pub struct BatchOutcome {
+    /// Decoded batch-aggregated gradient (m_s × k).
+    pub grad: Vec<f32>,
+    /// Solved user factors, n × k in batch order.
+    pub p: Vec<f32>,
+    /// Upload traffic of this batch: one per-client sparse frame each.
+    pub ledger: TrafficLedger,
+    /// Eval metrics of this batch's clients (empty when `!evaluate`).
+    pub metrics: MetricAccumulator,
+    /// Busy nanoseconds per phase: solve, grad, codec, eval.
+    pub phase_ns: [u128; 4],
+}
+
+/// The deterministic reduction of a round: per-batch outcomes folded in
+/// batch-index order.
+#[derive(Debug, Clone, Default)]
+pub struct RoundAggregate {
+    /// Σ batch gradients (m_s × k), summed in batch order.
+    pub grad: Vec<f32>,
+    pub metrics: MetricAccumulator,
+    pub ledger: TrafficLedger,
+    /// (client id, solved p_i) in participant order.
+    pub factors: Vec<(usize, Vec<f32>)>,
+    /// Busy nanoseconds per phase summed over batches (across lanes, so
+    /// this can exceed wall-clock): solve, grad, codec, eval.
+    pub phase_ns: [u128; 4],
+}
+
+/// Fold per-batch outcomes into the round aggregate **in batch-index
+/// order**. This is the only reduction shape that is invariant to how
+/// batches were assigned to shards (see module docs); the proptests pin
+/// that invariance.
+pub fn merge_outcomes(
+    m_s: usize,
+    k: usize,
+    client_ids: &[usize],
+    batch: usize,
+    outcomes: &[BatchOutcome],
+) -> Result<RoundAggregate> {
+    ensure!(batch > 0, "batch width must be > 0");
+    let expected = client_ids.len().div_ceil(batch);
+    ensure!(
+        outcomes.len() == expected,
+        "merge: {} outcomes for {expected} batches",
+        outcomes.len()
+    );
+    let mut agg = RoundAggregate {
+        grad: vec![0.0f32; m_s * k],
+        factors: Vec::with_capacity(client_ids.len()),
+        ..RoundAggregate::default()
+    };
+    for (i, o) in outcomes.iter().enumerate() {
+        ensure!(
+            o.grad.len() == m_s * k,
+            "merge: batch {i} gradient has {} values, expected {}",
+            o.grad.len(),
+            m_s * k
+        );
+        for (acc, v) in agg.grad.iter_mut().zip(&o.grad) {
+            *acc += v;
+        }
+        agg.metrics.merge(&o.metrics);
+        agg.ledger.merge(&o.ledger);
+        let lo = i * batch;
+        let hi = (lo + batch).min(client_ids.len());
+        ensure!(
+            o.p.len() == (hi - lo) * k,
+            "merge: batch {i} has factors for {} values, expected {}",
+            o.p.len(),
+            (hi - lo) * k
+        );
+        for (u, &cid) in client_ids[lo..hi].iter().enumerate() {
+            agg.factors.push((cid, o.p[u * k..(u + 1) * k].to_vec()));
+        }
+        for (total, ns) in agg.phase_ns.iter_mut().zip(&o.phase_ns) {
+            *total += ns;
+        }
+    }
+    Ok(agg)
+}
+
+/// Execute one batch: solve → grad → sparse wire round-trip (+ per-client
+/// upload accounting) → optional eval. Pure w.r.t. the task inputs.
+fn run_batch(
+    rt: &mut FcfRuntime,
+    codec: &dyn PayloadCodec,
+    task: &RoundTask,
+    index: usize,
+) -> Result<BatchOutcome> {
+    let (lo, hi) = task.batch_range(index);
+    let k = task.k;
+    let m_s = task.m_s();
+    let rows: Vec<&SelRow> = task.rows[lo..hi].iter().collect();
+
+    let t0 = Instant::now();
+    let p = rt.solve_users(&task.q_sel, &rows)?;
+    let solve_ns = t0.elapsed().as_nanos();
+
+    let t0 = Instant::now();
+    let g_raw = rt.grad_batch(&task.q_sel, &rows, &p)?;
+    let grad_ns = t0.elapsed().as_nanos();
+
+    // The ∇Q* upload round-trips the sparse wire encoder at batch
+    // granularity (the backend aggregates a batch in one execution); the
+    // server trains on the *decoded* gradient, so sparsification and
+    // value quantization stay part of the training dynamics.
+    let t0 = Instant::now();
+    let up_frame = codec.encode_sparse(&g_raw, m_s, k, &task.sparse)?;
+    let up = codec.decode_sparse(&up_frame)?;
+    ensure!(
+        up.rows == m_s && up.cols == k,
+        "upload frame decoded to {}x{}, expected {m_s}x{k}",
+        up.rows,
+        up.cols
+    );
+    // Per-client upload accounting: one message per participant at the
+    // batch frame's exact length — which IS each client's own frame
+    // length, because the implicit-feedback ∇Q* is dense over the
+    // selected set (see module docs; an interaction-indexed frame would
+    // undercount and leak the client's private interaction rows).
+    let up_bytes = up_frame.len() as u64;
+    let mut ledger = TrafficLedger::new();
+    for _ in lo..hi {
+        ledger.record_up(&task.simnet, up_bytes);
+    }
+    let codec_ns = t0.elapsed().as_nanos();
+
+    let mut metrics = MetricAccumulator::new();
+    let mut eval_ns = 0u128;
+    if task.evaluate {
+        let t0 = Instant::now();
+        let scores = rt.scores_all(&task.q_full, &p)?;
+        let m = task.m;
+        for (u, &cid) in task.client_ids[lo..hi].iter().enumerate() {
+            let client = task.fleet.client(cid);
+            if client.test_items.is_empty() {
+                continue;
+            }
+            let ranked = rank_candidates(&scores[u * m..(u + 1) * m], &client.train_items);
+            if let Some(ms) = user_metrics(&ranked, &client.test_items) {
+                metrics.push(&ms);
+            }
+        }
+        eval_ns = t0.elapsed().as_nanos();
+    }
+
+    Ok(BatchOutcome {
+        grad: up.data,
+        p,
+        ledger,
+        metrics,
+        phase_ns: [solve_ns, grad_ns, codec_ns, eval_ns],
+    })
+}
+
+type BatchSlots = Mutex<Vec<Option<Result<BatchOutcome>>>>;
+
+/// Shared state of one in-flight round: the task, the work queue (an
+/// atomic claim counter over batch indices) and the outcome slots.
+struct RoundState {
+    task: RoundTask,
+    n_batches: usize,
+    next: AtomicUsize,
+    slots: BatchSlots,
+}
+
+fn lock_slots(state: &RoundState) -> std::sync::MutexGuard<'_, Vec<Option<Result<BatchOutcome>>>> {
+    // A poisoned mutex only means another lane panicked *outside* the
+    // (assignment-only) critical section; the data is still valid.
+    state.slots.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Claim-and-execute batches until the round's queue is empty.
+fn drain_queue(state: &RoundState, rt: &mut FcfRuntime, codec: &dyn PayloadCodec) {
+    loop {
+        // Relaxed is enough: the counter only distributes work; outcome
+        // visibility is ordered by the slots mutex + the done channel.
+        let i = state.next.fetch_add(1, Ordering::Relaxed);
+        if i >= state.n_batches {
+            break;
+        }
+        let out = run_batch(rt, codec, &state.task, i);
+        lock_slots(state)[i] = Some(out);
+    }
+}
+
+#[cfg(feature = "parallel")]
+enum WorkerMsg {
+    Round(Arc<RoundState>),
+    Shutdown,
+}
+
+#[cfg(feature = "parallel")]
+struct Worker {
+    tx: Sender<WorkerMsg>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    alive: bool,
+}
+
+/// Sends exactly one round-completion signal, even if the worker panics
+/// mid-batch (the unfinished batch is recomputed by the caller).
+#[cfg(feature = "parallel")]
+struct DoneGuard<'a>(&'a Sender<()>);
+
+#[cfg(feature = "parallel")]
+impl Drop for DoneGuard<'_> {
+    fn drop(&mut self) {
+        let _ = self.0.send(());
+    }
+}
+
+#[cfg(feature = "parallel")]
+fn worker_loop(id: usize, factory: BackendFactory, rx: Receiver<WorkerMsg>, done: Sender<()>) {
+    let mut runtime: Option<FcfRuntime> = None;
+    let mut build_failed = false;
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            WorkerMsg::Shutdown => break,
+            WorkerMsg::Round(state) => {
+                let _guard = DoneGuard(&done);
+                // Cheap racy peek: if the queue already drained (few
+                // batches, fast caller lane), skip the — for pjrt,
+                // expensive — lazy backend build entirely.
+                if runtime.is_none() && state.next.load(Ordering::Relaxed) >= state.n_batches {
+                    continue;
+                }
+                if runtime.is_none() && !build_failed {
+                    match factory.build_runtime() {
+                        Ok(rt) => runtime = Some(rt),
+                        Err(e) => {
+                            build_failed = true;
+                            warn_log!(
+                                "fleet worker {id}: `{}` backend unavailable on this thread \
+                                 ({e:#}); its batches fall back to the caller",
+                                factory.backend_name()
+                            );
+                        }
+                    }
+                }
+                if let Some(rt) = runtime.as_mut() {
+                    let codec = make_codec(state.task.precision);
+                    drain_queue(&state, rt, codec.as_ref());
+                }
+            }
+        }
+    }
+}
+
+/// The persistent sharded round executor. `threads` is the total number
+/// of compute lanes: the caller's thread plus `threads - 1` spawned
+/// workers (lazily started at the first multi-threaded round). With
+/// `threads = 1` — or without the `parallel` feature — every batch runs
+/// inline on the caller's runtime, through the identical per-batch
+/// merge, so results match the parallel path bit for bit.
+pub struct FleetExecutor {
+    factory: BackendFactory,
+    threads: usize,
+    #[cfg(feature = "parallel")]
+    workers: Vec<Worker>,
+    #[cfg(feature = "parallel")]
+    spawned: bool,
+    #[cfg(feature = "parallel")]
+    done_tx: Sender<()>,
+    #[cfg(feature = "parallel")]
+    done_rx: Receiver<()>,
+    #[cfg(not(feature = "parallel"))]
+    warned_serial: bool,
+}
+
+impl FleetExecutor {
+    pub fn new(factory: BackendFactory, threads: usize) -> FleetExecutor {
+        #[cfg(feature = "parallel")]
+        let (done_tx, done_rx) = channel();
+        FleetExecutor {
+            factory,
+            threads: threads.max(1),
+            #[cfg(feature = "parallel")]
+            workers: Vec::new(),
+            #[cfg(feature = "parallel")]
+            spawned: false,
+            #[cfg(feature = "parallel")]
+            done_tx,
+            #[cfg(feature = "parallel")]
+            done_rx,
+            #[cfg(not(feature = "parallel"))]
+            warned_serial: false,
+        }
+    }
+
+    /// Total compute lanes (caller + workers).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn backend_factory(&self) -> &BackendFactory {
+        &self.factory
+    }
+
+    #[cfg(feature = "parallel")]
+    fn spawn_workers(&mut self) {
+        if self.spawned {
+            return;
+        }
+        self.spawned = true;
+        for w in 0..self.threads - 1 {
+            let (tx, rx) = channel();
+            let factory = self.factory.clone();
+            let done = self.done_tx.clone();
+            match std::thread::Builder::new()
+                .name(format!("fleet-{w}"))
+                .spawn(move || worker_loop(w, factory, rx, done))
+            {
+                Ok(handle) => self.workers.push(Worker {
+                    tx,
+                    handle: Some(handle),
+                    alive: true,
+                }),
+                Err(e) => warn_log!("could not spawn fleet worker {w}: {e}"),
+            }
+        }
+    }
+
+    /// Hand the round to the worker pool; returns how many workers will
+    /// signal completion.
+    #[cfg(feature = "parallel")]
+    fn dispatch(&mut self, state: &Arc<RoundState>) -> usize {
+        // a single-batch round has nothing for a second lane to claim —
+        // don't wake workers (and with pjrt, don't trigger their
+        // expensive lazy backend builds) for it
+        if self.threads <= 1 || state.n_batches <= 1 {
+            return 0;
+        }
+        self.spawn_workers();
+        let mut sent = 0;
+        for w in &mut self.workers {
+            if w.alive && w.tx.send(WorkerMsg::Round(state.clone())).is_ok() {
+                sent += 1;
+            } else {
+                w.alive = false;
+            }
+        }
+        sent
+    }
+
+    #[cfg(not(feature = "parallel"))]
+    fn dispatch(&mut self, _state: &Arc<RoundState>) -> usize {
+        if self.threads > 1 && !self.warned_serial {
+            self.warned_serial = true;
+            warn_log!(
+                "runtime.threads = {} but the `parallel` feature is disabled; \
+                 executing the fleet on one thread",
+                self.threads
+            );
+        }
+        0
+    }
+
+    #[cfg(feature = "parallel")]
+    fn wait(&self, expected: usize) {
+        for _ in 0..expected {
+            // Cannot disconnect (we hold a sender); every dispatched
+            // worker signals via its DoneGuard even on panic.
+            let _ = self.done_rx.recv();
+        }
+    }
+
+    #[cfg(not(feature = "parallel"))]
+    fn wait(&self, _expected: usize) {}
+
+    /// Execute one round's batches across all lanes and reduce
+    /// deterministically. `local` is the caller-lane runtime (the
+    /// trainer's — shared/compiled once per sweep); `codec` the caller's
+    /// codec instance.
+    pub fn run_round(
+        &mut self,
+        task: RoundTask,
+        local: &mut FcfRuntime,
+        codec: &dyn PayloadCodec,
+    ) -> Result<RoundAggregate> {
+        let n_batches = task.num_batches();
+        let state = Arc::new(RoundState {
+            task,
+            n_batches,
+            next: AtomicUsize::new(0),
+            slots: Mutex::new((0..n_batches).map(|_| None).collect()),
+        });
+        let expected = self.dispatch(&state);
+        // The caller lane drains the queue alongside the workers.
+        drain_queue(&state, local, codec);
+        self.wait(expected);
+        let mut slots = std::mem::take(&mut *lock_slots(&state));
+        // A lane that died mid-batch leaves its claimed slot empty;
+        // recompute inline (identical by construction).
+        for (i, slot) in slots.iter_mut().enumerate() {
+            if slot.is_none() {
+                *slot = Some(run_batch(local, codec, &state.task, i));
+            }
+        }
+        let mut outcomes = Vec::with_capacity(n_batches);
+        for (i, slot) in slots.into_iter().enumerate() {
+            match slot {
+                Some(Ok(out)) => outcomes.push(out),
+                Some(Err(e)) => return Err(anyhow!("client batch {i}: {e:#}")),
+                None => unreachable!("batch {i} left unexecuted"),
+            }
+        }
+        merge_outcomes(
+            state.task.m_s(),
+            state.task.k,
+            &state.task.client_ids,
+            state.task.batch,
+            &outcomes,
+        )
+    }
+}
+
+#[cfg(feature = "parallel")]
+impl Drop for FleetExecutor {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.tx.send(WorkerMsg::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(handle) = w.handle.take() {
+                let _ = handle.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::ClientData;
+    use crate::wire::make_codec;
+
+    fn small_cfg() -> RunConfig {
+        let mut cfg = RunConfig::paper_defaults();
+        cfg.runtime.backend = "reference".into();
+        cfg.model.k = 8;
+        cfg
+    }
+
+    /// A synthetic round over `n` clients and `m_s` selected items; every
+    /// item is "selected" so rows are positions directly.
+    fn tiny_task(cfg: &RunConfig, n: usize, m_s: usize, evaluate: bool) -> RoundTask {
+        let k = cfg.model.k;
+        let mut rng = crate::rng::Rng::seed_from_u64(42);
+        let q_sel: Vec<f32> = (0..m_s * k).map(|_| rng.normal() as f32 * 0.1).collect();
+        let mut clients = Vec::new();
+        let mut rows = Vec::new();
+        for _ in 0..n {
+            let mut train: Vec<u32> = (0..m_s as u32).filter(|_| rng.chance(0.3)).collect();
+            if train.is_empty() {
+                train.push(rng.below(m_s) as u32);
+            }
+            train.sort_unstable();
+            let test: Vec<u32> = (0..m_s as u32)
+                .filter(|i| train.binary_search(i).is_err())
+                .take(3)
+                .collect();
+            rows.push(train.clone());
+            clients.push(ClientData {
+                train_items: train,
+                test_items: test,
+            });
+        }
+        RoundTask {
+            q_full: q_sel.clone(),
+            q_sel,
+            k,
+            m: m_s,
+            evaluate,
+            rows,
+            client_ids: (0..n).collect(),
+            batch: 64,
+            precision: Precision::F32,
+            sparse: SparsePolicy::default(),
+            simnet: cfg.simnet.clone(),
+            fleet: FleetView::from_clients(clients),
+        }
+    }
+
+    #[test]
+    fn factory_builds_reference_runtime() {
+        let cfg = small_cfg();
+        let rt = BackendFactory::from_config(&cfg).build_runtime().unwrap();
+        assert_eq!(rt.k, 8);
+        assert_eq!(rt.b, 64);
+    }
+
+    #[test]
+    fn executor_is_thread_count_invariant() {
+        let cfg = small_cfg();
+        let factory = BackendFactory::from_config(&cfg);
+        let task = tiny_task(&cfg, 150, 40, true);
+        let mut base: Option<RoundAggregate> = None;
+        for threads in [1usize, 2, 4] {
+            let mut local = factory.build_runtime().unwrap();
+            let codec = make_codec(Precision::F32);
+            let mut ex = FleetExecutor::new(factory.clone(), threads);
+            let agg = ex.run_round(task.clone(), &mut local, codec.as_ref()).unwrap();
+            match &base {
+                None => base = Some(agg),
+                Some(b) => {
+                    assert_eq!(b.grad.len(), agg.grad.len());
+                    for (x, y) in b.grad.iter().zip(&agg.grad) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "threads={threads}");
+                    }
+                    assert_eq!(b.ledger.up_bytes, agg.ledger.up_bytes);
+                    assert_eq!(b.ledger.up_msgs, agg.ledger.up_msgs);
+                    assert_eq!(
+                        b.ledger.sim_secs.to_bits(),
+                        agg.ledger.sim_secs.to_bits(),
+                        "threads={threads}"
+                    );
+                    assert_eq!(b.metrics.count(), agg.metrics.count());
+                    assert_eq!(b.metrics.mean().map.to_bits(), agg.metrics.mean().map.to_bits());
+                    assert_eq!(b.factors.len(), agg.factors.len());
+                    for ((ca, pa), (cb, pb)) in b.factors.iter().zip(&agg.factors) {
+                        assert_eq!(ca, cb);
+                        assert_eq!(pa, pb);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn uploads_are_attributed_per_client() {
+        let cfg = small_cfg();
+        let factory = BackendFactory::from_config(&cfg);
+        let task = tiny_task(&cfg, 70, 32, false);
+        let mut local = factory.build_runtime().unwrap();
+        let codec = make_codec(Precision::F32);
+        let mut ex = FleetExecutor::new(factory, 1);
+        let n = task.client_ids.len() as u64;
+        let (m_s, k) = (task.m_s(), task.k);
+        let agg = ex.run_round(task, &mut local, codec.as_ref()).unwrap();
+        // one message per participant, each at its exact frame length:
+        // bounded by the full-m_s frame (dense implicit-feedback ∇Q*)
+        // and strictly larger than an empty frame
+        assert_eq!(agg.ledger.up_msgs, n);
+        let max_frame = crate::wire::encoded_sparse_len(m_s, k, Precision::F32) as u64;
+        let empty_frame = crate::wire::encoded_sparse_len(0, k, Precision::F32) as u64;
+        assert!(agg.ledger.up_bytes <= n * max_frame);
+        assert!(agg.ledger.up_bytes > n * empty_frame);
+    }
+
+    #[test]
+    fn merge_outcomes_orders_factors_and_sums() {
+        let client_ids = vec![7usize, 3, 9, 1, 5];
+        let (m_s, k, batch) = (2usize, 2usize, 2usize);
+        let outcomes = vec![
+            BatchOutcome {
+                grad: vec![1.0, 2.0, 3.0, 4.0],
+                p: vec![0.1, 0.2, 0.3, 0.4],
+                ..BatchOutcome::default()
+            },
+            BatchOutcome {
+                grad: vec![10.0, 20.0, 30.0, 40.0],
+                p: vec![0.5, 0.6, 0.7, 0.8],
+                ..BatchOutcome::default()
+            },
+            BatchOutcome {
+                grad: vec![100.0, 200.0, 300.0, 400.0],
+                p: vec![0.9, 1.0],
+                ..BatchOutcome::default()
+            },
+        ];
+        let agg = merge_outcomes(m_s, k, &client_ids, batch, &outcomes).unwrap();
+        assert_eq!(agg.grad, vec![111.0, 222.0, 333.0, 444.0]);
+        let ids: Vec<usize> = agg.factors.iter().map(|(c, _)| *c).collect();
+        assert_eq!(ids, client_ids);
+        assert_eq!(agg.factors[4].1, vec![0.9, 1.0]);
+        // wrong outcome count is rejected
+        assert!(merge_outcomes(m_s, k, &client_ids, batch, &outcomes[..2]).is_err());
+    }
+
+    #[test]
+    fn empty_round_produces_empty_aggregate() {
+        let cfg = small_cfg();
+        let factory = BackendFactory::from_config(&cfg);
+        let mut task = tiny_task(&cfg, 10, 16, false);
+        task.rows.clear();
+        task.client_ids.clear();
+        let mut local = factory.build_runtime().unwrap();
+        let codec = make_codec(Precision::F32);
+        let mut ex = FleetExecutor::new(factory, 4);
+        let agg = ex.run_round(task, &mut local, codec.as_ref()).unwrap();
+        assert_eq!(agg.grad, vec![0.0f32; 16 * 8]);
+        assert!(agg.factors.is_empty());
+        assert_eq!(agg.ledger.up_msgs, 0);
+        assert_eq!(agg.metrics.count(), 0);
+    }
+}

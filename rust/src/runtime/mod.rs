@@ -15,7 +15,13 @@
 //! cannot: tiling an arbitrary selected-item set over the compiled tile
 //! widths, padding partial user batches, and packing/unpacking between
 //! the coordinator's item-major layout and the artifacts' (K, T) layout.
+//!
+//! [`fleet`] runs the round's client batches across multiple such
+//! runtimes in parallel — one backend per worker thread, built through a
+//! [`BackendFactory`], merged through a deterministic per-batch
+//! reduction so any `runtime.threads` value trains bit-identically.
 
+pub mod fleet;
 pub mod manifest;
 /// The real PJRT backend (needs the `xla` crate — `--features xla`).
 #[cfg(feature = "xla")]
@@ -26,6 +32,9 @@ pub mod pjrt;
 pub mod pjrt;
 pub mod reference;
 
+pub use fleet::{
+    merge_outcomes, BackendFactory, BatchOutcome, FleetExecutor, RoundAggregate, RoundTask,
+};
 pub use manifest::Manifest;
 
 use anyhow::{bail, Result};
@@ -81,13 +90,16 @@ thread_local! {
 /// expensive and xla_extension 0.5.1 retains compiled programs, so
 /// re-loading the backend per run both wastes seconds and leaks ~0.5 GB
 /// per load (EXPERIMENTS.md §Perf). The cache keys on backend + artifact
-/// dir + model geometry.
+/// dir + model geometry + the reference backend's math constants (α, λ —
+/// two configs differing only there must not share a runtime, or the
+/// parallel fleet's per-thread backends would diverge from the cached
+/// caller-lane runtime).
 pub fn shared_runtime(
     cfg: &RunConfig,
 ) -> Result<std::rc::Rc<std::cell::RefCell<FcfRuntime>>> {
     let key = format!(
-        "{}:{}:{}",
-        cfg.runtime.backend, cfg.runtime.artifacts_dir, cfg.model.k
+        "{}:{}:{}:{}:{}",
+        cfg.runtime.backend, cfg.runtime.artifacts_dir, cfg.model.k, cfg.model.alpha, cfg.model.lam
     );
     RUNTIME_CACHE.with(|cache| {
         if let Some(rt) = cache.borrow().get(&key) {

@@ -8,9 +8,13 @@
 //!    the *decoded* factors and the `TrafficLedger` records the encoded
 //!    frame lengths (measured payload, not the analytic formula),
 //! 3. runs the client math through the AOT artifacts — Eq. 3 solve and
-//!    Eq. 5–6 gradients, batched B clients per execution; ∇Q* uploads
-//!    round-trip through the sparse wire encoder (frames encoded per
-//!    runtime batch, attributed to each contributing client),
+//!    Eq. 5–6 gradients, batched B clients per execution and dispatched
+//!    across `runtime.threads` parallel lanes by the sharded fleet
+//!    executor (`runtime::fleet`, one backend per worker thread); ∇Q*
+//!    uploads round-trip through the sparse wire encoder per batch while
+//!    the ledger records **per-client** frame lengths, and the per-batch
+//!    outcomes merge in batch order so any thread count trains
+//!    bit-identically,
 //! 4. aggregates the Θ decoded gradients and applies server-side Adam
 //!    (Eq. 4),
 //! 5. updates the squared-gradient trace (Eq. 14), computes the composite
@@ -29,15 +33,16 @@ use crate::client::Fleet;
 use crate::config::{Aggregate, RunConfig, Strategy};
 use crate::data::{synthetic, Interactions, Split};
 use crate::linalg::Mat;
-use crate::metrics::{rank_candidates, user_metrics, MetricAccumulator, MetricSet};
+use crate::metrics::{MetricAccumulator, MetricSet};
 use crate::optim::Adam;
 use crate::reward::RewardEngine;
 use crate::rng::Rng;
-use crate::runtime::{make_backend, FcfRuntime};
+use crate::runtime::fleet::{BackendFactory, FleetExecutor, RoundTask};
+use crate::runtime::{make_backend, FcfRuntime, SelRow};
 use crate::simnet::TrafficLedger;
 use crate::telemetry::Stopwatch;
 use crate::wire::{make_codec, PayloadCodec, SparsePolicy};
-use crate::{debug_log, info};
+use crate::{debug_log, info, warn_log};
 
 /// Per-round record for convergence analysis (paper Figure 3).
 #[derive(Debug, Clone)]
@@ -96,7 +101,12 @@ pub struct Trainer {
     /// Shared across trainers: PJRT executable compilation is expensive
     /// and xla_extension 0.5.1 does not fully release compiled programs,
     /// so experiment sweeps MUST reuse one runtime (EXPERIMENTS.md §Perf).
+    /// This is the caller-lane runtime; worker lanes build their own
+    /// backends through the executor's `BackendFactory`.
     runtime: Rc<RefCell<FcfRuntime>>,
+    /// Sharded round executor: `runtime.threads` compute lanes with a
+    /// deterministic batch-order merge.
+    executor: FleetExecutor,
     rng: Rng,
     t: u64,
     metric_history: VecDeque<MetricSet>,
@@ -104,7 +114,9 @@ pub struct Trainer {
     history: Vec<RoundRecord>,
     // reused per-round scratch
     sel_pos: Vec<i32>,
-    // phase stopwatches
+    // phase stopwatches; solve/grad/eval/codec absorb the worker lanes'
+    // per-shard busy time (can exceed wall), `fleet` is the wall-clock of
+    // the parallel section itself
     sw_select: Stopwatch,
     sw_stage: Stopwatch,
     sw_solve: Stopwatch,
@@ -113,6 +125,7 @@ pub struct Trainer {
     sw_update: Stopwatch,
     sw_reward: Stopwatch,
     sw_codec: Stopwatch,
+    sw_fleet: Stopwatch,
 }
 
 impl Trainer {
@@ -159,14 +172,27 @@ impl Trainer {
         let q = Mat::randn(m, cfg.model.k, cfg.model.init_scale, &mut rng);
         let fleet = Fleet::from_split(&split);
         info!(
-            "trainer: {} users, {} items, strategy={}, backend={}, M_s={}, codec={}",
+            "trainer: {} users, {} items, strategy={}, backend={}, M_s={}, codec={}, threads={}",
             fleet.len(),
             m,
             cfg.bandit.strategy.name(),
             runtime.borrow().backend_name(),
             cfg.selected_items(m),
-            cfg.codec.precision.name()
+            cfg.codec.precision.name(),
+            cfg.runtime.threads
         );
+        // lanes beyond the number of B-sized batches per round can never
+        // claim work (threads > theta is the degenerate case of this)
+        let round_batches = cfg.train.theta.div_ceil(runtime.borrow().b).max(1);
+        if cfg.runtime.threads > round_batches {
+            warn_log!(
+                "runtime.threads = {} exceeds the {round_batches} client batches per round \
+                 (theta = {}, B = {}); extra lanes will idle",
+                cfg.runtime.threads,
+                cfg.train.theta,
+                runtime.borrow().b
+            );
+        }
         let cw = match cfg.bandit.cosine_weight {
             "literal" => crate::reward::CosineWeight::Literal,
             _ => crate::reward::CosineWeight::Power,
@@ -187,6 +213,7 @@ impl Trainer {
             },
             adam: Adam::new(m, &cfg.model),
             sel_pos: vec![-1; m],
+            executor: FleetExecutor::new(BackendFactory::from_config(cfg), cfg.runtime.threads),
             cfg: cfg.clone(),
             split,
             fleet,
@@ -205,6 +232,7 @@ impl Trainer {
             sw_update: Stopwatch::new("update"),
             sw_reward: Stopwatch::new("reward"),
             sw_codec: Stopwatch::new("codec"),
+            sw_fleet: Stopwatch::new("fleet"),
         })
     }
 
@@ -246,6 +274,7 @@ impl Trainer {
                 &self.sw_update,
                 &self.sw_reward,
                 &self.sw_codec,
+                &self.sw_fleet,
             ]
             .iter()
             .map(|sw| (sw.name.to_string(), sw.total_secs(), sw.count()))
@@ -321,77 +350,62 @@ impl Trainer {
             self.ledger.record_down(&self.cfg.simnet, down_bytes);
         }
 
-        // (4) client compute, batched B clients per artifact execution.
+        // (4) client compute: B-sized batches dispatched across the
+        // sharded fleet executor's lanes. Each worker owns its own
+        // backend; per-batch outcomes (decoded batch ∇Q* after the
+        // sparse wire round-trip, solved factors, per-client upload
+        // frames, eval metrics) merge in batch-index order, so any
+        // `runtime.threads` value produces bit-identical rounds. Also
+        // (6): contributing clients' local test metrics (§6.2) are
+        // computed in the lanes — the recommendation x* = p_i^T Q uses
+        // the full current global model (inference-time download; see
+        // DESIGN.md §1).
         let evaluate = self.t as usize % self.cfg.train.eval_every.max(1) == 0;
         let b = self.runtime.borrow().b;
-        let mut g_total = vec![0.0f32; selected.len() * k];
-        let mut round_acc = MetricAccumulator::new();
-        for batch in participants.chunks(b) {
-            let rows: Vec<Vec<u32>> = batch
-                .iter()
-                .map(|&cid| self.fleet.client(cid).selected_row(&self.sel_pos))
-                .collect();
-            let row_refs: Vec<&Vec<u32>> = rows.iter().collect();
-
-            self.sw_solve.start();
-            let p = self.runtime.borrow_mut().solve_users(&q_sel, &row_refs)?;
-            self.sw_solve.stop();
-
-            self.sw_grad.start();
-            let g = self.runtime.borrow_mut().grad_batch(&q_sel, &row_refs, &p)?;
-            self.sw_grad.stop();
-
-            // The ∇Q* upload goes through the sparse wire encoder (at
-            // batch granularity — the runtime aggregates each batch's
-            // gradients in one execution, so the frame is encoded once
-            // per batch and its length attributed to every contributing
-            // client). The server aggregates the *decoded* gradient, so
-            // top-k/threshold sparsification and value quantization are
-            // part of the training dynamics, not just the accounting.
-            self.sw_codec.start();
-            let up_frame = self
-                .codec
-                .encode_sparse(&g, selected.len(), k, &self.sparse)?;
-            let up = self.codec.decode_sparse(&up_frame)?;
-            anyhow::ensure!(
-                up.rows == selected.len() && up.cols == k,
-                "upload frame decoded to {}x{}, expected {}x{k}",
-                up.rows,
-                up.cols,
-                selected.len()
-            );
-            let g = up.data;
-            let up_bytes = up_frame.len() as u64;
-            self.sw_codec.stop();
-            for (acc, v) in g_total.iter_mut().zip(&g) {
-                *acc += v;
-            }
-
-            // local model state + upload accounting
-            for (u, &cid) in batch.iter().enumerate() {
-                self.fleet.client_mut(cid).p = p[u * k..(u + 1) * k].to_vec();
-                self.ledger.record_up(&self.cfg.simnet, up_bytes);
-            }
-
-            // (6) local test metrics of contributing clients (§6.2): the
-            // recommendation x* = p_i^T Q uses the full current global
-            // model (inference-time download; see DESIGN.md §1).
-            if evaluate {
-                self.sw_eval.start();
-                let scores = self.runtime.borrow_mut().scores_all(self.q.data(), &p)?;
-                for (u, &cid) in batch.iter().enumerate() {
-                    let client = self.fleet.client(cid);
-                    if client.test_items.is_empty() {
-                        continue;
-                    }
-                    let ranked = rank_candidates(&scores[u * m..(u + 1) * m], &client.train_items);
-                    if let Some(ms) = user_metrics(&ranked, &client.test_items) {
-                        round_acc.push(&ms);
-                    }
-                }
-                self.sw_eval.stop();
-            }
+        let n_batches = participants.len().div_ceil(b) as u64;
+        self.sw_stage.start();
+        let rows: Vec<SelRow> = participants
+            .iter()
+            .map(|&cid| self.fleet.client(cid).selected_row(&self.sel_pos))
+            .collect();
+        self.sw_stage.stop();
+        let task = RoundTask {
+            q_sel,
+            k,
+            m,
+            q_full: if evaluate {
+                self.q.data().to_vec()
+            } else {
+                Vec::new()
+            },
+            evaluate,
+            rows,
+            client_ids: participants.clone(),
+            batch: b,
+            precision: self.codec.precision(),
+            sparse: self.sparse,
+            simnet: self.cfg.simnet.clone(),
+            fleet: self.fleet.view(),
+        };
+        self.sw_fleet.start();
+        let agg = self.executor.run_round(
+            task,
+            &mut self.runtime.borrow_mut(),
+            self.codec.as_ref(),
+        )?;
+        self.sw_fleet.stop();
+        // absorb the lanes' per-shard busy time into the phase stopwatches
+        self.sw_solve.absorb_ns(agg.phase_ns[0], n_batches);
+        self.sw_grad.absorb_ns(agg.phase_ns[1], n_batches);
+        self.sw_codec.absorb_ns(agg.phase_ns[2], n_batches);
+        self.sw_eval.absorb_ns(agg.phase_ns[3], if evaluate { n_batches } else { 0 });
+        // barrier merge: upload ledger (per-client frames), local factors
+        self.ledger.merge(&agg.ledger);
+        for (cid, p) in agg.factors {
+            self.fleet.set_factors(cid, p);
         }
+        let round_acc = agg.metrics;
+        let mut g_total = agg.grad;
 
         // (5) aggregate + server-side Adam (Eq. 4).
         self.sw_update.start();
@@ -540,7 +554,10 @@ mod tests {
         assert_eq!(report.ledger.up_msgs, 64);
         let down_frame = crate::wire::encoded_dense_len(24, 25, crate::wire::Precision::F32);
         assert_eq!(report.ledger.down_bytes, 64 * down_frame as u64);
-        // uploads are sparse frames: at most m_s rows survive per frame
+        // uploads: one message per client at the batch frame's length
+        // (exact per-client attribution — the dense implicit-feedback
+        // ∇Q* makes every client's frame the batch frame; see
+        // runtime::fleet docs); at most m_s rows survive per frame
         let up_max = crate::wire::encoded_sparse_len(24, 25, crate::wire::Precision::F32);
         assert!(report.ledger.up_bytes > 0);
         assert!(report.ledger.up_bytes <= 64 * up_max as u64);
@@ -568,12 +585,25 @@ mod tests {
     }
 
     #[test]
+    fn thread_count_does_not_change_results() {
+        let mut c1 = tiny_cfg();
+        c1.runtime.threads = 1;
+        let mut c4 = tiny_cfg();
+        c4.runtime.threads = 4;
+        let r1 = Trainer::from_config(&c1).unwrap().run().unwrap();
+        let r4 = Trainer::from_config(&c4).unwrap().run().unwrap();
+        assert_eq!(r1.final_metrics.map.to_bits(), r4.final_metrics.map.to_bits());
+        assert_eq!(r1.ledger.up_bytes, r4.ledger.up_bytes);
+        assert_eq!(r1.ledger.sim_secs.to_bits(), r4.ledger.sim_secs.to_bits());
+    }
+
+    #[test]
     fn clients_receive_factors() {
         let cfg = tiny_cfg();
         let mut tr = Trainer::from_config(&cfg).unwrap();
         tr.round().unwrap();
         let with_p = (0..tr.fleet().len())
-            .filter(|&c| !tr.fleet().client(c).p.is_empty())
+            .filter(|&c| !tr.fleet().factors(c).is_empty())
             .count();
         assert_eq!(with_p, 16); // exactly Θ participants got fresh factors
     }

@@ -77,6 +77,18 @@ impl TrafficLedger {
         self.sim_secs += transfer_secs(cfg, bytes);
     }
 
+    /// Fold a sub-ledger in (per-batch ledgers merged at the parallel
+    /// round barrier). Counts and bytes are exact; `sim_secs` is a float
+    /// sum, so merges MUST happen in a fixed order — the fleet executor
+    /// always folds in batch-index order to keep runs bit-reproducible.
+    pub fn merge(&mut self, other: &TrafficLedger) {
+        self.down_bytes += other.down_bytes;
+        self.up_bytes += other.up_bytes;
+        self.down_msgs += other.down_msgs;
+        self.up_msgs += other.up_msgs;
+        self.sim_secs += other.sim_secs;
+    }
+
     pub fn total_bytes(&self) -> u64 {
         self.down_bytes + self.up_bytes
     }
@@ -149,6 +161,27 @@ mod tests {
         assert_eq!(l.up_msgs, 2);
         assert_eq!(l.total_bytes(), 2000);
         assert!(l.sim_secs > 0.0);
+    }
+
+    #[test]
+    fn ledger_merge_sums_all_fields() {
+        let cfg = RunConfig::paper_defaults().simnet;
+        let mut a = TrafficLedger::new();
+        a.record_down(&cfg, 1000);
+        let mut b = TrafficLedger::new();
+        b.record_up(&cfg, 300);
+        b.record_up(&cfg, 200);
+        a.merge(&b);
+        // integer fields are exact sums under any grouping
+        assert_eq!(a.down_bytes, 1000);
+        assert_eq!(a.up_bytes, 500);
+        assert_eq!(a.down_msgs, 1);
+        assert_eq!(a.up_msgs, 2);
+        // sim_secs reproduces the merge's exact fold shape,
+        // t(1000) + (t(300) + t(200)), bit for bit
+        let expected =
+            transfer_secs(&cfg, 1000) + (transfer_secs(&cfg, 300) + transfer_secs(&cfg, 200));
+        assert_eq!(a.sim_secs.to_bits(), expected.to_bits());
     }
 
     #[test]

@@ -114,6 +114,15 @@ impl Stopwatch {
         }
     }
 
+    /// Fold externally measured time in: per-shard stopwatches from the
+    /// parallel fleet workers are absorbed into the coordinator's phase
+    /// stopwatches at the round barrier. Busy time summed across lanes
+    /// can exceed wall-clock.
+    pub fn absorb_ns(&mut self, ns: u128, count: u64) {
+        self.total_ns += ns;
+        self.count += count;
+    }
+
     /// Time one closure.
     pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
         self.start();
@@ -152,6 +161,16 @@ mod tests {
         assert_eq!(sw.count(), 3);
         assert!(sw.total_secs() >= 0.006);
         assert!(sw.mean_ms() >= 2.0);
+    }
+
+    #[test]
+    fn stopwatch_absorbs_external_time() {
+        let mut sw = Stopwatch::new("t");
+        sw.absorb_ns(2_000_000, 4); // 2ms over 4 worker batches
+        sw.absorb_ns(1_000_000, 2);
+        assert_eq!(sw.count(), 6);
+        assert!((sw.total_secs() - 0.003).abs() < 1e-12);
+        assert!((sw.mean_ms() - 0.5).abs() < 1e-12);
     }
 
     #[test]

@@ -34,17 +34,15 @@ pub struct SparsePolicy {
     pub threshold: f32,
 }
 
-/// Encode the sparse frame for a row-major `rows × cols` matrix.
-pub fn encode(
-    data: &[f32],
-    rows: usize,
-    cols: usize,
-    precision: Precision,
-    policy: &SparsePolicy,
-) -> Result<Vec<u8>> {
-    ensure!(
-        data.len() == rows * cols,
-        "sparse encode: {} values for {rows}x{cols}",
+/// Row indices (ascending) that survive `policy` for a row-major
+/// `rows × cols` matrix — the encoder's row survey, factored out so the
+/// selection rule (threshold + top-k, deterministic tie-breaks) is
+/// testable and reusable on its own.
+pub fn kept_rows(data: &[f32], rows: usize, cols: usize, policy: &SparsePolicy) -> Vec<u32> {
+    assert_eq!(
+        data.len(),
+        rows * cols,
+        "kept_rows: {} values for {rows}x{cols}",
         data.len()
     );
     // squared-norm row survey
@@ -65,14 +63,31 @@ pub fn encode(
         kept.truncate(policy.top_k);
         kept.sort_by_key(|&(r, _)| r);
     }
+    kept.into_iter().map(|(r, _)| r).collect()
+}
+
+/// Encode the sparse frame for a row-major `rows × cols` matrix.
+pub fn encode(
+    data: &[f32],
+    rows: usize,
+    cols: usize,
+    precision: Precision,
+    policy: &SparsePolicy,
+) -> Result<Vec<u8>> {
+    ensure!(
+        data.len() == rows * cols,
+        "sparse encode: {} values for {rows}x{cols}",
+        data.len()
+    );
+    let kept = kept_rows(data, rows, cols, policy);
 
     let mut payload = Vec::with_capacity(4 + kept.len() * (4 + precision.row_bytes(cols)));
     payload.extend_from_slice(&(kept.len() as u32).to_le_bytes());
-    for &(r, _) in &kept {
+    for &r in &kept {
         payload.extend_from_slice(&r.to_le_bytes());
     }
     let mut compact = Vec::with_capacity(kept.len() * cols);
-    for &(r, _) in &kept {
+    for &r in &kept {
         compact.extend_from_slice(&data[r as usize * cols..(r as usize + 1) * cols]);
     }
     quant::encode_rows(&mut payload, &compact, kept.len(), cols, precision);
@@ -200,6 +215,30 @@ mod tests {
         assert_eq!(&dec.data[2..4], &[1.0, 1.0]);
         assert_eq!(&dec.data[4..6], &[0.0, 0.0]);
         assert_eq!(&dec.data[6..8], &[0.5, -0.5]);
+    }
+
+    #[test]
+    fn kept_rows_matches_encoded_frame() {
+        let data = gradient_like(40, 5, 0.4, 7);
+        for policy in [
+            SparsePolicy::default(),
+            SparsePolicy {
+                top_k: 8,
+                threshold: 0.0,
+            },
+            SparsePolicy {
+                top_k: 0,
+                threshold: 0.05,
+            },
+        ] {
+            let kept = kept_rows(&data, 40, 5, &policy);
+            assert!(kept.windows(2).all(|w| w[0] < w[1]), "not ascending");
+            let frame = encode(&data, 40, 5, Precision::F32, &policy).unwrap();
+            assert_eq!(
+                frame.len(),
+                crate::wire::encoded_sparse_len(kept.len(), 5, Precision::F32)
+            );
+        }
     }
 
     #[test]

@@ -80,6 +80,26 @@ fn codec_sweep_covers_every_precision() {
 }
 
 #[test]
+fn threads_sweep_writes_csv_and_is_invariant() {
+    let dir = out_dir("threads");
+    let mut scale = Scale::smoke();
+    scale.iterations = 2;
+    experiments::threads_sweep(&dir, &scale, "reference").unwrap();
+    let text = std::fs::read_to_string(dir.join("threads.csv")).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 1 + experiments::THREAD_COUNTS.len());
+    // determinism contract: identical map bits + total bytes in every row
+    let field = |l: &str, i: usize| l.split(',').nth(i).unwrap().to_string();
+    let map0 = field(lines[1], 5);
+    let bytes0 = field(lines[1], 6);
+    for l in &lines[2..] {
+        assert_eq!(field(l, 5), map0, "map diverged across thread counts");
+        assert_eq!(field(l, 6), bytes0, "traffic diverged across thread counts");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn run_rebuilds_is_deterministic() {
     let scale = Scale::smoke();
     let a = experiments::run_rebuilds("movielens", &scale, backend(), &[Strategy::Random], 0.25)

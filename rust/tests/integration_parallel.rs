@@ -1,0 +1,112 @@
+//! End-to-end determinism of the sharded client-fleet executor: for any
+//! `runtime.threads`, a training run must be **bit-identical** — every
+//! round record, the metric window, and the traffic ledger (including the
+//! float `sim_secs` accumulation) — to the single-threaded run. Multi-
+//! batch rounds (Θ > B = 64, with an uneven tail batch) exercise the
+//! work-stealing queue and the batch-order merge.
+
+use fedpayload::config::RunConfig;
+use fedpayload::server::{TrainReport, Trainer};
+use fedpayload::wire::Precision;
+
+fn cfg(threads: usize) -> RunConfig {
+    let mut cfg = RunConfig::paper_defaults();
+    cfg.apply_dataset_preset("synthetic-small").unwrap();
+    cfg.dataset.users = 256;
+    cfg.dataset.items = 192;
+    cfg.dataset.interactions = 5_000;
+    cfg.train.theta = 160; // 3 batches: 64 + 64 + 32 (uneven tail)
+    cfg.train.iterations = 6;
+    cfg.train.payload_fraction = 0.25;
+    cfg.train.eval_every = 2;
+    cfg.runtime.backend = "reference".into();
+    cfg.runtime.threads = threads;
+    cfg
+}
+
+fn run(c: &RunConfig) -> TrainReport {
+    Trainer::from_config(c).unwrap().run().unwrap()
+}
+
+fn assert_bitwise_equal(a: &TrainReport, b: &TrainReport, label: &str) {
+    assert_eq!(a.history.len(), b.history.len(), "{label}: round count");
+    for (x, y) in a.history.iter().zip(&b.history) {
+        assert_eq!(x.iter, y.iter, "{label}");
+        assert_eq!(x.m_s, y.m_s, "{label} iter {}", x.iter);
+        for (ma, mb) in [
+            (x.raw.precision, y.raw.precision),
+            (x.raw.recall, y.raw.recall),
+            (x.raw.f1, y.raw.f1),
+            (x.raw.map, y.raw.map),
+            (x.smoothed.precision, y.smoothed.precision),
+            (x.smoothed.recall, y.smoothed.recall),
+            (x.smoothed.f1, y.smoothed.f1),
+            (x.smoothed.map, y.smoothed.map),
+        ] {
+            assert_eq!(ma.to_bits(), mb.to_bits(), "{label} iter {}", x.iter);
+        }
+        assert_eq!(x.round_bytes, y.round_bytes, "{label} iter {}", x.iter);
+    }
+    assert_eq!(a.final_metrics.map.to_bits(), b.final_metrics.map.to_bits(), "{label}: final MAP");
+    assert_eq!(a.ledger.down_bytes, b.ledger.down_bytes, "{label}");
+    assert_eq!(a.ledger.up_bytes, b.ledger.up_bytes, "{label}");
+    assert_eq!(a.ledger.down_msgs, b.ledger.down_msgs, "{label}");
+    assert_eq!(a.ledger.up_msgs, b.ledger.up_msgs, "{label}");
+    assert_eq!(
+        a.ledger.sim_secs.to_bits(),
+        b.ledger.sim_secs.to_bits(),
+        "{label}: sim_secs float fold"
+    );
+}
+
+#[test]
+fn any_thread_count_is_bitwise_identical_to_one() {
+    let r1 = run(&cfg(1));
+    for threads in [2usize, 3, 4, 8] {
+        let rn = run(&cfg(threads));
+        assert_bitwise_equal(&r1, &rn, &format!("threads={threads}"));
+    }
+}
+
+#[test]
+fn repeated_parallel_runs_are_stable() {
+    // work stealing may assign batches differently run to run; the merge
+    // must hide that entirely
+    let a = run(&cfg(4));
+    let b = run(&cfg(4));
+    assert_bitwise_equal(&a, &b, "threads=4 repeat");
+}
+
+#[test]
+fn parallel_determinism_holds_for_lossy_codecs() {
+    let mut c1 = cfg(1);
+    c1.codec.precision = Precision::Int8;
+    c1.codec.sparse_topk = 12;
+    let mut c4 = cfg(4);
+    c4.codec.precision = Precision::Int8;
+    c4.codec.sparse_topk = 12;
+    assert_bitwise_equal(&run(&c1), &run(&c4), "int8+topk");
+}
+
+#[test]
+fn threads_beyond_participants_still_work() {
+    // 16 participants = a single batch; 8 lanes mostly idle but harmless
+    let mut c = cfg(8);
+    c.train.theta = 16;
+    let mut c1 = cfg(1);
+    c1.train.theta = 16;
+    assert_bitwise_equal(&run(&c1), &run(&c), "threads>batches");
+}
+
+#[test]
+fn per_client_upload_attribution_bounds() {
+    // every participant gets exactly one upload message per round, and
+    // each frame is no larger than the full-m_s sparse frame
+    let report = run(&cfg(4));
+    let iterations = report.iterations as u64;
+    assert_eq!(report.ledger.up_msgs, iterations * 160);
+    let m_s = report.m_s;
+    let max_frame = fedpayload::wire::encoded_sparse_len(m_s, 25, Precision::F32) as u64;
+    assert!(report.ledger.up_bytes <= report.ledger.up_msgs * max_frame);
+    assert!(report.ledger.up_bytes > 0);
+}

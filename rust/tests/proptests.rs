@@ -7,10 +7,13 @@ use fedpayload::bandit::{make_selector, ItemSelector};
 use fedpayload::config::{RunConfig, Strategy};
 use fedpayload::data::Interactions;
 use fedpayload::linalg::{cholesky_solve, cosine_sim, Mat};
-use fedpayload::metrics::{best_metrics, rank_candidates, raw_metrics, user_metrics};
+use fedpayload::metrics::{
+    best_metrics, rank_candidates, raw_metrics, user_metrics, MetricAccumulator, MetricSet,
+};
 use fedpayload::reward::RewardEngine;
 use fedpayload::rng::Rng;
-use fedpayload::runtime::plan_chunks;
+use fedpayload::runtime::{merge_outcomes, plan_chunks, BatchOutcome, RoundAggregate};
+use fedpayload::simnet::TrafficLedger;
 use fedpayload::wire::{self, make_codec, Precision, SparsePolicy};
 
 const CASES: u64 = 60;
@@ -422,5 +425,172 @@ fn prop_bts_posterior_convexity() {
         let (lo, hi) = if mu0 < z { (mu0, z) } else { (z, mu0) };
         assert!(mu_hat >= lo - 1e-9 && mu_hat <= hi + 1e-9, "seed {seed}");
         assert_eq!(tau_hat, 100.0 + n as f64);
+    }
+}
+
+/// Build deterministic synthetic per-batch outcomes for the shard-merge
+/// invariance properties.
+fn random_outcomes(
+    rng: &mut Rng,
+    n_batches: usize,
+    n_clients: usize,
+    batch: usize,
+    m_s: usize,
+    k: usize,
+) -> Vec<BatchOutcome> {
+    let simnet = RunConfig::paper_defaults().simnet;
+    (0..n_batches)
+        .map(|i| {
+            let lo = i * batch;
+            let hi = (lo + batch).min(n_clients);
+            let mut ledger = TrafficLedger::new();
+            for _ in lo..hi {
+                ledger.record_up(&simnet, 1 + rng.below(2000) as u64);
+            }
+            let mut metrics = MetricAccumulator::new();
+            for _ in 0..rng.below(5) {
+                let v = rng.f64();
+                metrics.push(&MetricSet {
+                    precision: v,
+                    recall: v / 2.0,
+                    f1: v / 3.0,
+                    map: rng.f64(),
+                });
+            }
+            BatchOutcome {
+                grad: (0..m_s * k).map(|_| rng.normal() as f32).collect(),
+                p: (0..(hi - lo) * k).map(|_| rng.normal() as f32).collect(),
+                ledger,
+                metrics,
+                phase_ns: [rng.below(1000) as u128, 0, 0, 0],
+            }
+        })
+        .collect()
+}
+
+fn assert_aggregates_bitwise_equal(a: &RoundAggregate, b: &RoundAggregate, label: &str) {
+    assert_eq!(a.grad.len(), b.grad.len(), "{label}");
+    for (x, y) in a.grad.iter().zip(&b.grad) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: gradient fold");
+    }
+    assert_eq!(a.metrics.count(), b.metrics.count(), "{label}");
+    for (x, y) in [
+        (a.metrics.mean().precision, b.metrics.mean().precision),
+        (a.metrics.mean().recall, b.metrics.mean().recall),
+        (a.metrics.mean().f1, b.metrics.mean().f1),
+        (a.metrics.mean().map, b.metrics.mean().map),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: metric fold");
+    }
+    assert_eq!(a.ledger.up_bytes, b.ledger.up_bytes, "{label}");
+    assert_eq!(a.ledger.up_msgs, b.ledger.up_msgs, "{label}");
+    assert_eq!(
+        a.ledger.sim_secs.to_bits(),
+        b.ledger.sim_secs.to_bits(),
+        "{label}: sim_secs fold"
+    );
+    assert_eq!(a.factors, b.factors, "{label}: factor order");
+}
+
+/// Property: the round reduction (shard-merged gradient aggregation,
+/// `MetricAccumulator::merge`, `TrafficLedger::merge`) is **bitwise
+/// invariant** under shard count and shard permutation. Batch outcomes
+/// are computed once (any lane computes identical outcomes — backends
+/// are deterministic); what varies across shard configurations is only
+/// *which shard stores which slot and in what order*. Because the merge
+/// folds slots in batch-index order, every configuration must reduce to
+/// the identical aggregate.
+#[test]
+fn prop_shard_merge_invariant_under_shard_count_and_permutation() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(20_000 + seed);
+        let k = 1 + rng.below(8);
+        let m_s = 1 + rng.below(40);
+        let batch = 1 + rng.below(16);
+        let n_clients = 1 + rng.below(120);
+        let client_ids: Vec<usize> = (0..n_clients).map(|c| c * 3 + 1).collect();
+        let n_batches = n_clients.div_ceil(batch);
+        let outcomes = random_outcomes(&mut rng, n_batches, n_clients, batch, m_s, k);
+
+        // serial baseline: 1 shard, batches stored in index order
+        let base = merge_outcomes(m_s, k, &client_ids, batch, &outcomes).unwrap();
+
+        for shards in [2usize, 3, 5, 8, 1 + rng.below(6)] {
+            // round-robin shard assignment: shard s executes batches
+            // s, s+shards, ... in order; shards complete in shard order
+            let mut slots: Vec<Option<BatchOutcome>> = vec![None; n_batches];
+            for s in 0..shards {
+                for i in (s..n_batches).step_by(shards) {
+                    slots[i] = Some(outcomes[i].clone());
+                }
+            }
+            let sharded: Vec<BatchOutcome> = slots.into_iter().map(|o| o.unwrap()).collect();
+            let agg = merge_outcomes(m_s, k, &client_ids, batch, &sharded).unwrap();
+            assert_aggregates_bitwise_equal(&base, &agg, &format!("seed {seed} shards={shards}"));
+
+            // arbitrary interleaving (work stealing): store slots in a
+            // random completion order
+            let mut order: Vec<usize> = (0..n_batches).collect();
+            rng.shuffle(&mut order);
+            let mut slots: Vec<Option<BatchOutcome>> = vec![None; n_batches];
+            for &i in &order {
+                slots[i] = Some(outcomes[i].clone());
+            }
+            let stolen: Vec<BatchOutcome> = slots.into_iter().map(|o| o.unwrap()).collect();
+            let agg = merge_outcomes(m_s, k, &client_ids, batch, &stolen).unwrap();
+            assert_aggregates_bitwise_equal(&base, &agg, &format!("seed {seed} permuted"));
+        }
+    }
+}
+
+/// Property: `MetricAccumulator::merge` and `TrafficLedger::merge` sum
+/// their integer fields exactly under ANY partition of the inputs into
+/// sub-accumulators. (Float fields are only reproducible for a *fixed*
+/// partition and fold order — which is exactly why the executor always
+/// reduces at batch granularity in batch-index order; the property above
+/// pins that case bitwise.)
+#[test]
+fn prop_merge_helpers_match_sequential_folds() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(21_000 + seed);
+        let simnet = RunConfig::paper_defaults().simnet;
+        let n = 1 + rng.below(50);
+        let lens: Vec<u64> = (0..n).map(|_| rng.below(10_000) as u64).collect();
+        let sets: Vec<MetricSet> = (0..n)
+            .map(|_| MetricSet {
+                precision: rng.f64(),
+                recall: rng.f64(),
+                f1: rng.f64(),
+                map: rng.f64(),
+            })
+            .collect();
+
+        // sequential baseline
+        let mut led_seq = TrafficLedger::new();
+        let mut acc_seq = MetricAccumulator::new();
+        for (len, set) in lens.iter().zip(&sets) {
+            led_seq.record_up(&simnet, *len);
+            acc_seq.push(set);
+        }
+
+        // partition into contiguous chunks, fold the partials in order
+        let chunk = 1 + rng.below(n);
+        let mut led = TrafficLedger::new();
+        let mut acc = MetricAccumulator::new();
+        for (lc, sc) in lens.chunks(chunk).zip(sets.chunks(chunk)) {
+            let mut led_part = TrafficLedger::new();
+            let mut acc_part = MetricAccumulator::new();
+            for (len, set) in lc.iter().zip(sc) {
+                led_part.record_up(&simnet, *len);
+                acc_part.push(set);
+            }
+            led.merge(&led_part);
+            acc.merge(&acc_part);
+        }
+        assert_eq!(led.up_bytes, led_seq.up_bytes, "seed {seed}");
+        assert_eq!(led.up_msgs, led_seq.up_msgs, "seed {seed}");
+        assert_eq!(acc.count(), acc_seq.count(), "seed {seed}");
+        let total: u64 = lens.iter().sum();
+        assert_eq!(led.up_bytes, total, "seed {seed}");
     }
 }
