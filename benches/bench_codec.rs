@@ -1,11 +1,22 @@
 //! Encode/decode throughput of the wire payload codecs at Last-FM scale
 //! (M_s = 1763 selected items × K = 25 at 90% reduction), plus the sparse
-//! upload path. Prints frame sizes and compression ratios next to the
-//! timings so the bandwidth/CPU trade-off of each precision is one read.
+//! upload path and the entropy-coding legs (`wire::entropy`). Prints
+//! frame sizes and compression ratios next to the timings so the
+//! bandwidth/CPU trade-off of each precision × entropy mode is one read,
+//! and writes `BENCH_codec.json` (path overridable via
+//! `FEDPAYLOAD_BENCH_CODEC_JSON`) so CI can archive the perf trajectory.
 
 use fedpayload::rng::Rng;
 use fedpayload::telemetry::bench;
-use fedpayload::wire::{make_codec, Precision, SparsePolicy};
+use fedpayload::wire::{make_codec_with, EntropyMode, Precision, SparsePolicy};
+
+struct Row {
+    name: String,
+    frame_bytes: usize,
+    ratio_vs_plain: f64,
+    encode_mbps: f64,
+    decode_mbps: f64,
+}
 
 fn main() {
     let (rows, cols) = (1763usize, 25usize);
@@ -19,28 +30,46 @@ fn main() {
         }
     }
     let raw_mb = (rows * cols * 4) as f64 / 1e6;
+    let mut results: Vec<Row> = Vec::new();
 
     println!("=== dense download frames ({rows} x {cols}) ===");
     for p in [Precision::F64, Precision::F32, Precision::F16, Precision::Int8] {
-        let codec = make_codec(p);
-        let frame = codec.encode_dense(&q, rows, cols).unwrap();
-        println!(
-            "{:<5} frame = {:>7} bytes ({:.2}x vs f32 raw)",
-            p.name(),
-            frame.len(),
-            (rows * cols * 4) as f64 / frame.len() as f64
-        );
-        let enc = bench(&format!("encode_dense_{}", p.name()), || {
-            codec.encode_dense(&q, rows, cols).unwrap()
-        });
-        let dec = bench(&format!("decode_dense_{}", p.name()), || {
-            codec.decode_dense(&frame).unwrap()
-        });
-        println!(
-            "  throughput: encode {:.0} MB/s, decode {:.0} MB/s (f32-equivalent)",
-            raw_mb / (enc.mean_ns / 1e9),
-            raw_mb / (dec.mean_ns / 1e9)
-        );
+        let mut plain_len = 0usize;
+        for e in [EntropyMode::None, EntropyMode::Range] {
+            let codec = make_codec_with(p, e);
+            let frame = codec.encode_dense(&q, rows, cols).unwrap();
+            if e == EntropyMode::None {
+                plain_len = frame.len();
+            }
+            let ratio = plain_len as f64 / frame.len() as f64;
+            println!(
+                "{:<5} entropy={:<6} frame = {:>7} bytes ({:.2}x vs f32 raw, {:.3}x vs plain)",
+                p.name(),
+                e.name(),
+                frame.len(),
+                (rows * cols * 4) as f64 / frame.len() as f64,
+                ratio
+            );
+            let enc = bench(&format!("encode_dense_{}_{}", p.name(), e.name()), || {
+                codec.encode_dense(&q, rows, cols).unwrap()
+            });
+            let dec = bench(&format!("decode_dense_{}_{}", p.name(), e.name()), || {
+                codec.decode_dense(&frame).unwrap()
+            });
+            let (encode_mbps, decode_mbps) =
+                (raw_mb / (enc.mean_ns / 1e9), raw_mb / (dec.mean_ns / 1e9));
+            println!(
+                "  throughput: encode {encode_mbps:.0} MB/s, decode {decode_mbps:.0} MB/s \
+                 (f32-equivalent)"
+            );
+            results.push(Row {
+                name: format!("dense_{}_{}", p.name(), e.name()),
+                frame_bytes: frame.len(),
+                ratio_vs_plain: ratio,
+                encode_mbps,
+                decode_mbps,
+            });
+        }
     }
 
     println!("\n=== sparse upload frames (40% zero rows) ===");
@@ -55,15 +84,59 @@ fn main() {
         ),
     ] {
         for p in [Precision::F32, Precision::Int8] {
-            let codec = make_codec(p);
-            let frame = codec.encode_sparse(&g, rows, cols, &policy).unwrap();
-            println!("{:<5} {label}: frame = {} bytes", p.name(), frame.len());
-            bench(&format!("encode_sparse_{}_{label}", p.name()), || {
-                codec.encode_sparse(&g, rows, cols, &policy).unwrap()
-            });
-            bench(&format!("decode_sparse_{}_{label}", p.name()), || {
-                codec.decode_sparse(&frame).unwrap()
-            });
+            let mut plain_len = 0usize;
+            for e in [EntropyMode::None, EntropyMode::Varint, EntropyMode::Full] {
+                let codec = make_codec_with(p, e);
+                let frame = codec.encode_sparse(&g, rows, cols, &policy).unwrap();
+                if e == EntropyMode::None {
+                    plain_len = frame.len();
+                }
+                let ratio = plain_len as f64 / frame.len() as f64;
+                println!(
+                    "{:<5} {label} entropy={:<6}: frame = {} bytes ({ratio:.3}x vs plain)",
+                    p.name(),
+                    e.name(),
+                    frame.len()
+                );
+                let enc = bench(
+                    &format!("encode_sparse_{}_{label}_{}", p.name(), e.name()),
+                    || codec.encode_sparse(&g, rows, cols, &policy).unwrap(),
+                );
+                let dec = bench(
+                    &format!("decode_sparse_{}_{label}_{}", p.name(), e.name()),
+                    || codec.decode_sparse(&frame).unwrap(),
+                );
+                results.push(Row {
+                    name: format!("sparse_{}_{label}_{}", p.name(), e.name()),
+                    frame_bytes: frame.len(),
+                    ratio_vs_plain: ratio,
+                    encode_mbps: raw_mb / (enc.mean_ns / 1e9),
+                    decode_mbps: raw_mb / (dec.mean_ns / 1e9),
+                });
+            }
         }
     }
+
+    let mut json = String::from("{\n  \"bench\": \"codec\",\n");
+    json.push_str(&format!(
+        "  \"workload\": {{\"rows\": {rows}, \"cols\": {cols}, \"zero_row_pct\": 40}},\n  \
+         \"results\": [\n"
+    ));
+    for (i, r) in results.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"name\": \"{}\", \"frame_bytes\": {}, \"ratio_vs_plain\": {:.4}, \
+             \"encode_mbps\": {:.1}, \"decode_mbps\": {:.1}}}{}\n",
+            r.name,
+            r.frame_bytes,
+            r.ratio_vs_plain,
+            r.encode_mbps,
+            r.decode_mbps,
+            if i + 1 < results.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let out = std::env::var("FEDPAYLOAD_BENCH_CODEC_JSON")
+        .unwrap_or_else(|_| "BENCH_codec.json".into());
+    std::fs::write(&out, json).unwrap();
+    println!("\nwrote {out}");
 }

@@ -40,6 +40,7 @@ pub struct BtsSelector {
 }
 
 impl BtsSelector {
+    /// Selector over an `m`-item catalog with prior `N(mu0, 1/tau0)`.
     pub fn new(m: usize, mu0: f64, tau0: f64) -> BtsSelector {
         assert!(tau0 > 0.0, "prior precision must be positive");
         BtsSelector {

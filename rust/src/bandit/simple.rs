@@ -12,6 +12,7 @@ pub struct RandomSelector {
 }
 
 impl RandomSelector {
+    /// Selector over an `m`-item catalog.
     pub fn new(m: usize) -> Self {
         RandomSelector { m }
     }
@@ -40,6 +41,7 @@ pub struct FullSelector {
 }
 
 impl FullSelector {
+    /// Selector over an `m`-item catalog.
     pub fn new(m: usize) -> Self {
         FullSelector { m }
     }
@@ -67,6 +69,7 @@ pub struct EpsGreedySelector {
 }
 
 impl EpsGreedySelector {
+    /// Selector over an `m`-item catalog exploring with probability `eps`.
     pub fn new(m: usize, eps: f64) -> Self {
         assert!((0.0..=1.0).contains(&eps));
         EpsGreedySelector {

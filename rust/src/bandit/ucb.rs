@@ -19,6 +19,7 @@ pub struct Ucb1Selector {
 }
 
 impl Ucb1Selector {
+    /// Selector over an `m`-item catalog.
     pub fn new(m: usize) -> Self {
         Ucb1Selector {
             t: 0,

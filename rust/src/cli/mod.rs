@@ -44,6 +44,7 @@ const VALUE_KEYS: &[&str] = &[
     "output",
     "codec",
     "precision",
+    "entropy",
     "sparse-topk",
     "dump-rounds",
 ];
@@ -87,10 +88,12 @@ impl Args {
         self.options.get(key).map(|v| v.as_slice()).unwrap_or(&[])
     }
 
+    /// Was the bare `--name` switch given?
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Parse the last `--key` occurrence into `T` (None when absent).
     pub fn opt_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
     where
         T::Err: std::fmt::Display,
@@ -142,6 +145,8 @@ mod tests {
         assert_eq!(a.opt_or::<usize>("sparse-topk", 0).unwrap(), 32);
         let a = parse(&["train", "--precision=f16"]);
         assert_eq!(a.opt("precision"), Some("f16"));
+        let a = parse(&["train", "--entropy", "full"]);
+        assert_eq!(a.opt("entropy"), Some("full"));
     }
 
     #[test]

@@ -55,20 +55,24 @@ pub struct FleetView {
 }
 
 impl FleetView {
+    /// Wrap a client list into a shareable view.
     pub fn from_clients(clients: Vec<ClientData>) -> FleetView {
         FleetView {
             clients: Arc::new(clients),
         }
     }
 
+    /// Number of clients in the fleet.
     pub fn len(&self) -> usize {
         self.clients.len()
     }
 
+    /// Is the fleet empty?
     pub fn is_empty(&self) -> bool {
         self.clients.is_empty()
     }
 
+    /// One client's immutable data.
     pub fn client(&self, id: usize) -> &ClientData {
         &self.clients[id]
     }
@@ -107,14 +111,17 @@ impl Fleet {
         self.view.clone()
     }
 
+    /// Number of clients in the fleet.
     pub fn len(&self) -> usize {
         self.view.len()
     }
 
+    /// Is the fleet empty?
     pub fn is_empty(&self) -> bool {
         self.view.is_empty()
     }
 
+    /// One client's immutable data.
     pub fn client(&self, id: usize) -> &ClientData {
         self.view.client(id)
     }

@@ -27,6 +27,7 @@ pub enum Strategy {
 }
 
 impl Strategy {
+    /// Parse a strategy name (`bts|random|full|eps_greedy|ucb1`).
     pub fn parse(s: &str) -> Result<Strategy> {
         Ok(match s {
             "bts" => Strategy::Bts,
@@ -38,6 +39,7 @@ impl Strategy {
         })
     }
 
+    /// Strategy name for logs/CSV.
     pub fn name(&self) -> &'static str {
         match self {
             Strategy::Bts => "bts",
@@ -53,7 +55,9 @@ impl Strategy {
 /// `Mean` is an ablation).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Aggregate {
+    /// Sum the Θ buffered gradients (the paper's Eq. 4).
     Sum,
+    /// Average them instead (ablation).
     Mean,
 }
 
@@ -63,12 +67,15 @@ pub struct DatasetConfig {
     /// One of the calibrated synthetic presets (`movielens`, `lastfm`,
     /// `mind`, `synthetic-small`) or `file` to load `path`.
     pub name: String,
-    /// For `name = "file"`: path + format (`movielens|lastfm|mind`).
+    /// For `name = "file"`: path to the interaction file.
     pub path: Option<String>,
+    /// For `name = "file"`: file format (`movielens|lastfm|mind`).
     pub format: Option<String>,
-    /// Synthetic-generation knobs (ignored when loading from file).
+    /// Synthetic generation: number of users (ignored when loading).
     pub users: usize,
+    /// Synthetic generation: number of items.
     pub items: usize,
+    /// Synthetic generation: number of interactions.
     pub interactions: usize,
     /// Zipf exponent for item popularity.
     pub zipf_s: f64,
@@ -83,12 +90,19 @@ pub struct DatasetConfig {
 /// FCF model hyper-parameters (Table 3).
 #[derive(Debug, Clone)]
 pub struct ModelConfig {
+    /// Number of latent factors K (paper: 25).
     pub k: usize,
+    /// Ridge regularization λ (paper: 1.0).
     pub lam: f32,
+    /// Implicit-feedback confidence weight α (paper: 4).
     pub alpha: f32,
+    /// Adam learning rate η (paper: 0.01).
     pub eta: f32,
+    /// Adam first-moment decay β₁ (paper: 0.1).
     pub beta1: f32,
+    /// Adam second-moment decay β₂ (paper: 0.99).
     pub beta2: f32,
+    /// Adam denominator ε (paper: 1e-8).
     pub eps: f32,
     /// Std-dev of the Q/P initialization.
     pub init_scale: f32,
@@ -97,6 +111,7 @@ pub struct ModelConfig {
 /// Bandit / payload-selection parameters (§3, §6.1).
 #[derive(Debug, Clone)]
 pub struct BanditConfig {
+    /// Which item-selection strategy drives the payload optimization.
     pub strategy: Strategy,
     /// Prior mean μ_θ (paper: 0).
     pub mu0: f64,
@@ -143,6 +158,7 @@ pub struct TrainConfig {
     pub rebuilds: usize,
     /// Global-metric smoothing window (paper: last 10 values).
     pub metric_window: usize,
+    /// How the Θ buffered gradients combine (paper: sum).
     pub aggregate: Aggregate,
     /// Evaluate contributing clients' test metrics every round (paper
     /// semantics). Setting >1 evaluates every n-th round to save time.
@@ -158,6 +174,12 @@ pub struct CodecConfig {
     /// paper's Table 1 64-bit accounting; `f16`/`int8` trade bounded
     /// quantization error for 2×/~3.7× smaller frames.
     pub precision: crate::wire::Precision,
+    /// Lossless entropy coding on top of the quantizer:
+    /// `none | varint | range | full` (varint = delta+LEB128 sparse
+    /// indices, range = adaptive range-coded payload bytes, full = both).
+    /// Decoded payloads are bit-identical across modes — only the
+    /// measured frame lengths change.
+    pub entropy: crate::wire::EntropyMode,
     /// Upload top-k sparsification: keep only the k largest-norm gradient
     /// rows per upload (0 = keep all nonzero rows).
     pub sparse_topk: usize,
@@ -180,6 +202,7 @@ pub struct SimNetConfig {
 /// Execution backend knobs.
 #[derive(Debug, Clone)]
 pub struct RuntimeConfig {
+    /// Directory holding the AOT-compiled HLO artifacts.
     pub artifacts_dir: String,
     /// `pjrt` (AOT artifacts through the XLA CPU client) or `reference`
     /// (pure-Rust differential backend, used by tests and available as a
@@ -198,13 +221,21 @@ pub struct RuntimeConfig {
 /// Complete run configuration.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
+    /// Master seed for data synthesis, splits, and all stochastic parts.
     pub seed: u64,
+    /// Dataset selection & synthesis parameters.
     pub dataset: DatasetConfig,
+    /// FCF model hyper-parameters.
     pub model: ModelConfig,
+    /// Bandit / payload-selection parameters.
     pub bandit: BanditConfig,
+    /// Federated training loop parameters.
     pub train: TrainConfig,
+    /// Wire codec for the round-trip payloads.
     pub codec: CodecConfig,
+    /// Payload / network model parameters.
     pub simnet: SimNetConfig,
+    /// Execution backend knobs.
     pub runtime: RuntimeConfig,
 }
 
@@ -259,6 +290,7 @@ impl RunConfig {
             },
             codec: CodecConfig {
                 precision: crate::wire::Precision::F32,
+                entropy: crate::wire::EntropyMode::None,
                 sparse_topk: 0,
                 sparse_threshold: 0.0,
             },
@@ -396,6 +428,9 @@ impl RunConfig {
         }
         if let Some(v) = doc.get("codec.precision") {
             cfg.codec.precision = crate::wire::Precision::parse(v.as_str()?)?;
+        }
+        if let Some(v) = doc.get("codec.entropy") {
+            cfg.codec.entropy = crate::wire::EntropyMode::parse(v.as_str()?)?;
         }
         take!("codec.sparse_topk", cfg.codec.sparse_topk, as_usize);
         take!(
@@ -565,6 +600,7 @@ mod tests {
     fn codec_defaults_are_lossless() {
         let c = RunConfig::paper_defaults();
         assert_eq!(c.codec.precision, crate::wire::Precision::F32);
+        assert_eq!(c.codec.entropy, crate::wire::EntropyMode::None);
         assert_eq!(c.codec.sparse_topk, 0);
         assert_eq!(c.codec.sparse_threshold, 0.0);
     }
@@ -575,15 +611,27 @@ mod tests {
             r#"
             [codec]
             precision = "int8"
+            entropy = "full"
             sparse_topk = 50
             sparse_threshold = 0.001
             "#,
         )
         .unwrap();
         assert_eq!(cfg.codec.precision, crate::wire::Precision::Int8);
+        assert_eq!(cfg.codec.entropy, crate::wire::EntropyMode::Full);
         assert_eq!(cfg.codec.sparse_topk, 50);
         assert!((cfg.codec.sparse_threshold - 0.001).abs() < 1e-12);
         assert!(RunConfig::from_toml_str("[codec]\nprecision = \"f8\"\n").is_err());
+        assert!(RunConfig::from_toml_str("[codec]\nentropy = \"huffman\"\n").is_err());
+    }
+
+    #[test]
+    fn entropy_modes_all_parse_via_config() {
+        for mode in ["none", "varint", "range", "full"] {
+            let cfg =
+                RunConfig::from_toml_str(&format!("[codec]\nentropy = \"{mode}\"\n")).unwrap();
+            assert_eq!(cfg.codec.entropy.name(), mode);
+        }
     }
 
     #[test]

@@ -22,10 +22,15 @@ use anyhow::{anyhow, bail, Context, Result};
 /// A parsed scalar or list value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// Integer literal.
     Int(i64),
+    /// Float literal.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// Double-quoted string.
     Str(String),
+    /// Bracketed list of values.
     List(Vec<Value>),
 }
 
@@ -51,6 +56,7 @@ impl fmt::Display for Value {
 }
 
 impl Value {
+    /// The value as an integer (errors on any other type).
     pub fn as_i64(&self) -> Result<i64> {
         match self {
             Value::Int(v) => Ok(*v),
@@ -58,16 +64,19 @@ impl Value {
         }
     }
 
+    /// The value as a non-negative integer.
     pub fn as_usize(&self) -> Result<usize> {
         let v = self.as_i64()?;
         usize::try_from(v).map_err(|_| anyhow!("expected non-negative integer, got {v}"))
     }
 
+    /// The value as a non-negative 64-bit integer.
     pub fn as_u64(&self) -> Result<u64> {
         let v = self.as_i64()?;
         u64::try_from(v).map_err(|_| anyhow!("expected non-negative integer, got {v}"))
     }
 
+    /// The value as a float (integers widen).
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Value::Float(v) => Ok(*v),
@@ -76,10 +85,12 @@ impl Value {
         }
     }
 
+    /// The value as a single-precision float (integers widen).
     pub fn as_f32(&self) -> Result<f32> {
         Ok(self.as_f64()? as f32)
     }
 
+    /// The value as a bool.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Value::Bool(v) => Ok(*v),
@@ -87,6 +98,7 @@ impl Value {
         }
     }
 
+    /// The value as a string slice.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Value::Str(v) => Ok(v),
@@ -94,6 +106,7 @@ impl Value {
         }
     }
 
+    /// The value as a list slice.
     pub fn as_list(&self) -> Result<&[Value]> {
         match self {
             Value::List(v) => Ok(v),
@@ -169,14 +182,17 @@ impl Doc {
         Ok(())
     }
 
+    /// Iterate over all `path → value` entries in sorted path order.
     pub fn iter(&self) -> impl Iterator<Item = (&String, &Value)> {
         self.entries.iter()
     }
 
+    /// Number of entries.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// Is the document empty?
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }

@@ -58,10 +58,12 @@ impl Interactions {
         })
     }
 
+    /// Number of users (matrix rows).
     pub fn num_users(&self) -> usize {
         self.num_users
     }
 
+    /// Number of items (matrix columns).
     pub fn num_items(&self) -> usize {
         self.num_items
     }
@@ -76,6 +78,7 @@ impl Interactions {
         &self.col_idx[self.row_ptr[u]..self.row_ptr[u + 1]]
     }
 
+    /// Number of interactions user `u` has.
     pub fn user_degree(&self, u: usize) -> usize {
         self.row_ptr[u + 1] - self.row_ptr[u]
     }
@@ -179,9 +182,13 @@ impl Interactions {
 /// Table 2-shaped dataset summary.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DatasetStats {
+    /// Number of users.
     pub users: usize,
+    /// Number of items.
     pub items: usize,
+    /// Observed interactions.
     pub interactions: usize,
+    /// Percentage of unobserved cells.
     pub sparsity_pct: f64,
 }
 
@@ -198,7 +205,9 @@ impl std::fmt::Display for DatasetStats {
 /// Per-user train/test split.
 #[derive(Debug, Clone)]
 pub struct Split {
+    /// The training interactions.
     pub train: Interactions,
+    /// The held-out test interactions.
     pub test: Interactions,
 }
 

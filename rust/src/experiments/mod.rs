@@ -9,7 +9,12 @@
 //! | Figure 2 | [`fig2`] | metric vs. payload-reduction CSV per dataset |
 //! | Table 4 | [`table4`] | 90%-reduction detail, markdown |
 //! | Figure 3 | [`fig3`] | convergence curves CSV per dataset |
-//! | — | [`codec_sweep`] | wire-codec precision sweep (beyond the paper) |
+//! | — | [`codec_sweep`] | wire precision × entropy sweep (beyond the paper) |
+//! | — | [`threads_sweep`] | parallel-fleet scaling sweep (beyond the paper) |
+//!
+//! Every output that reports payload numbers also names the wire codec
+//! that produced them (the `codec` column / label), so the two payload
+//! axes — bandit selection × wire codec — are readable side by side.
 //!
 //! Paper-scale runs (1000 iterations × 3 rebuilds × 8 levels × 3 datasets)
 //! are hours of CPU; [`Scale`] shrinks users/items/iterations while
@@ -42,6 +47,22 @@ pub const DATASETS: &[&str] = &["movielens", "lastfm", "mind"];
 /// Wire-codec precisions swept by [`codec_sweep`] (the second payload
 /// axis, orthogonal to the bandit's M_s selection).
 pub const PRECISIONS: &[&str] = &["f64", "f32", "f16", "int8"];
+
+/// Entropy modes swept by [`codec_sweep`] per precision. `full` (varint
+/// indices + range-coded bytes) subsumes the single-transform modes;
+/// sweeping both endpoints keeps the grid affordable while still
+/// measuring the entropy layer's effect on every precision.
+pub const ENTROPY_MODES: &[&str] = &["none", "full"];
+
+/// Human label of a config's wire codec, e.g. `f32` or `int8+full`
+/// (precision plus the entropy mode when one is active) — the `codec`
+/// column of the experiment outputs.
+pub fn codec_label(cfg: &RunConfig) -> String {
+    match cfg.codec.entropy {
+        crate::wire::EntropyMode::None => cfg.codec.precision.name().to_string(),
+        e => format!("{}+{}", cfg.codec.precision.name(), e.name()),
+    }
+}
 
 /// Scaling knobs for reduced-cost reproduction runs.
 #[derive(Debug, Clone, Copy)]
@@ -197,19 +218,23 @@ pub fn table2(out_dir: &Path, scale: &Scale) -> Result<()> {
 // Figure 2
 
 /// Metric-vs-payload-reduction sweep for one dataset (paper Figure 2).
+/// The `codec` column names the wire codec every run moved through, so
+/// the table reports both payload axes.
 pub fn fig2(out_dir: &Path, dataset: &str, scale: &Scale, backend: &str) -> Result<()> {
     let header = [
-        "dataset", "method", "reduction_pct",
+        "dataset", "method", "codec", "reduction_pct",
         "precision", "recall", "f1", "map",
         "precision_std", "recall_std", "f1_std", "map_std",
     ];
     let mut csv = CsvWriter::create(out_dir.join(format!("fig2_{dataset}.csv")), &header)?;
+    let codec = codec_label(&experiment_config(dataset, scale, backend, 2021)?);
     let mut write = |method: &str, red: u32, st: &RebuildStats| -> Result<()> {
         let m = st.mean();
         let s = st.std();
         csv.row(&[
             dataset.to_string(),
             method.to_string(),
+            codec.clone(),
             red.to_string(),
             format!("{:.4}", m.precision),
             format!("{:.4}", m.recall),
@@ -258,6 +283,7 @@ pub fn table4(out_dir: &Path, scale: &Scale, backend: &str) -> Result<()> {
          Mean ± sd over rebuilds; Diff% vs FCF (Eq. 16), Impr% vs baselines (Eq. 15).\n\n",
     );
     for ds in DATASETS {
+        let codec = codec_label(&experiment_config(ds, scale, backend, 2021)?);
         let full = run_rebuilds(ds, scale, backend, &[Strategy::Full], 1.0)?;
         let opt = run_rebuilds(ds, scale, backend, &[Strategy::Bts, Strategy::Random], 0.10)?;
         let fcf = &full.by_strategy["full"];
@@ -266,12 +292,13 @@ pub fn table4(out_dir: &Path, scale: &Scale, backend: &str) -> Result<()> {
         let top = &full.toplist;
 
         md.push_str(&format!("## {ds}\n\n"));
-        md.push_str("| | Precision | Recall | F1 | MAP |\n|---|---|---|---|---|\n");
+        md.push_str(&format!("Wire codec: `{codec}`.\n\n"));
+        md.push_str("| | Codec | Precision | Recall | F1 | MAP |\n|---|---|---|---|---|---|\n");
         let fmt_row = |name: &str, st: &RebuildStats| {
             let m = st.mean();
             let s = st.std();
             format!(
-                "| {name} | {:.4}±{:.4} | {:.4}±{:.4} | {:.4}±{:.4} | {:.4}±{:.4} |\n",
+                "| {name} | {codec} | {:.4}±{:.4} | {:.4}±{:.4} | {:.4}±{:.4} | {:.4}±{:.4} |\n",
                 m.precision, s.precision, m.recall, s.recall, m.f1, s.f1, m.map, s.map
             )
         };
@@ -281,7 +308,7 @@ pub fn table4(out_dir: &Path, scale: &Scale, backend: &str) -> Result<()> {
         md.push_str(&fmt_row("TopList", top));
         let pct_row = |name: &str, f: &dyn Fn(f64, f64) -> f64, a: &MetricSet, b: &MetricSet| {
             format!(
-                "| {name} | {:.2} | {:.2} | {:.2} | {:.2} |\n",
+                "| {name} | — | {:.2} | {:.2} | {:.2} | {:.2} |\n",
                 f(a.precision, b.precision),
                 f(a.recall, b.recall),
                 f(a.f1, b.f1),
@@ -348,15 +375,19 @@ pub fn fig3(out_dir: &Path, dataset: &str, scale: &Scale, backend: &str) -> Resu
 // Codec sweep (beyond the paper)
 
 /// Wire-codec payload sweep: fix the bandit axis (FCF-BTS at 75%
-/// reduction) and sweep the codec precision, reporting the **measured**
-/// ledger bytes next to the recommendation metrics. Together with
-/// [`fig2`] this spans the full two-axis payload grid:
-/// `bytes/round = Θ × frame_len(M_s, K, precision)`.
+/// reduction) and sweep codec precision × entropy mode, reporting the
+/// **measured** ledger bytes next to the recommendation metrics.
+/// Together with [`fig2`] this spans the full payload grid:
+/// `bytes/round = Θ × frame_len(M_s, K, precision, entropy)`. Because the
+/// entropy layer is lossless, each precision's metric columns are
+/// identical across its entropy rows — only the byte columns move; the
+/// README's codec table is regenerated from this output.
 pub fn codec_sweep(out_dir: &Path, dataset: &str, scale: &Scale, backend: &str) -> Result<()> {
     const REDUCTION_PCT: u32 = 75;
     let header = [
         "dataset",
         "precision",
+        "entropy",
         "strategy",
         "reduction_pct",
         "map",
@@ -374,26 +405,41 @@ pub fn codec_sweep(out_dir: &Path, dataset: &str, scale: &Scale, backend: &str) 
     println!("codec sweep — {dataset}, FCF-BTS @{REDUCTION_PCT}% reduction:");
     for precision in PRECISIONS {
         cfg.codec.precision = crate::wire::Precision::parse(precision)?;
-        let reports = run_strategies_on_split(&cfg, &split, &[Strategy::Bts], fraction)?;
-        let report = &reports["bts"];
-        let per_round = report.ledger.total_bytes() / report.iterations.max(1) as u64;
-        println!(
-            "  {precision:<5} map={:.4} f1={:.4} traffic/round={}",
-            report.final_metrics.map,
-            report.final_metrics.f1,
-            human_bytes(per_round)
-        );
-        csv.row(&[
-            dataset.to_string(),
-            precision.to_string(),
-            "fcf-bts".to_string(),
-            REDUCTION_PCT.to_string(),
-            format!("{:.4}", report.final_metrics.map),
-            format!("{:.4}", report.final_metrics.f1),
-            report.ledger.down_bytes.to_string(),
-            report.ledger.up_bytes.to_string(),
-            per_round.to_string(),
-        ])?;
+        let mut plain_bytes = None;
+        for entropy in ENTROPY_MODES {
+            cfg.codec.entropy = crate::wire::EntropyMode::parse(entropy)?;
+            let reports = run_strategies_on_split(&cfg, &split, &[Strategy::Bts], fraction)?;
+            let report = &reports["bts"];
+            let total = report.ledger.total_bytes();
+            let per_round = total / report.iterations.max(1) as u64;
+            let vs_plain = match plain_bytes {
+                None => {
+                    plain_bytes = Some(total);
+                    String::new()
+                }
+                Some(p) if p > 0 => format!(" ({:.1}% vs none)", 100.0 * total as f64 / p as f64),
+                Some(_) => String::new(),
+            };
+            println!(
+                "  {precision:<5} entropy={entropy:<6} map={:.4} f1={:.4} \
+                 traffic/round={}{vs_plain}",
+                report.final_metrics.map,
+                report.final_metrics.f1,
+                human_bytes(per_round)
+            );
+            csv.row(&[
+                dataset.to_string(),
+                precision.to_string(),
+                entropy.to_string(),
+                "fcf-bts".to_string(),
+                REDUCTION_PCT.to_string(),
+                format!("{:.4}", report.final_metrics.map),
+                format!("{:.4}", report.final_metrics.f1),
+                report.ledger.down_bytes.to_string(),
+                report.ledger.up_bytes.to_string(),
+                per_round.to_string(),
+            ])?;
+        }
     }
     csv.flush()
 }

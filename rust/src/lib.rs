@@ -26,6 +26,20 @@
 //! [`runtime`] loads the HLO-text artifacts, compiles them once on the
 //! PJRT CPU client (`xla` crate) and executes them from the round loop.
 //!
+//! ## The three payload axes
+//!
+//! Per-round traffic is `Θ × frame_len(M_s, K, precision, entropy)` per
+//! direction, reduced along three orthogonal, multiplying axes:
+//!
+//! 1. **Item selection** (the paper): the bandit picks M_s ≪ M rows.
+//! 2. **Element codec** ([`wire::quant`]): f64/f32/f16/int8 per element.
+//! 3. **Entropy coding** ([`wire::entropy`]): lossless varint + range
+//!    coding under the frame checksum.
+//!
+//! Every transmission is a real framed byte buffer; clients train on the
+//! decoded factors and the [`simnet::TrafficLedger`] records measured
+//! frame lengths.
+//!
 //! ## Quick start
 //!
 //! ```no_run
@@ -40,8 +54,11 @@
 //! println!("final MAP = {:.4}", report.final_metrics.map);
 //! ```
 //!
-//! See `examples/` for runnable scenarios and `DESIGN.md` for the full
-//! system inventory and the paper-reproduction index.
+//! See `examples/` for runnable scenarios and `docs/ARCHITECTURE.md` for
+//! the module map, the paper-equation → code index, and the byte-level
+//! wire format specification.
+
+#![deny(missing_docs)]
 
 pub mod bandit;
 pub mod cli;

@@ -9,6 +9,7 @@ pub struct Mat {
 }
 
 impl Mat {
+    /// All-zero `rows × cols` matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Mat {
             rows,
@@ -17,6 +18,7 @@ impl Mat {
         }
     }
 
+    /// Wrap an existing row-major buffer (must be `rows * cols` long).
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
         assert_eq!(data.len(), rows * cols);
         Mat { rows, cols, data }
@@ -30,40 +32,48 @@ impl Mat {
         Mat { rows, cols, data }
     }
 
+    /// Number of rows.
     #[inline]
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Number of columns.
     #[inline]
     pub fn cols(&self) -> usize {
         self.cols
     }
 
+    /// Element at `(r, c)`.
     #[inline]
     pub fn get(&self, r: usize, c: usize) -> f32 {
         self.data[r * self.cols + c]
     }
 
+    /// Set element `(r, c)` to `v`.
     #[inline]
     pub fn set(&mut self, r: usize, c: usize, v: f32) {
         self.data[r * self.cols + c] = v;
     }
 
+    /// Row `r` as a slice.
     #[inline]
     pub fn row(&self, r: usize) -> &[f32] {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// Row `r` as a mutable slice.
     #[inline]
     pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
         &mut self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// The whole row-major buffer.
     pub fn data(&self) -> &[f32] {
         &self.data
     }
 
+    /// The whole row-major buffer, mutably.
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
     }

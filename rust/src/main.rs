@@ -33,6 +33,7 @@ USAGE:
   fedpayload train [--dataset <preset>] [--strategy <s>] [--iterations N]
                    [--payload-fraction F] [--theta N] [--seed N]
                    [--codec f64|f32|f16|int8] [--sparse-topk N]
+                   [--entropy none|varint|range|full]
                    [--threads N] [--backend pjrt|reference]
                    [--config file.toml] [--set path=value ...]
                    [--dump-rounds file.csv]
@@ -43,9 +44,13 @@ USAGE:
   fedpayload help
 
   (--precision is an alias for --codec; `--set codec.sparse_threshold=X`
-   tunes the upload sparsifier. --threads N runs each round's client
-   batches on N parallel lanes — bit-identical results for any N; the
-   determinism CI job diffs --dump-rounds records to enforce it.)
+   tunes the upload sparsifier. --entropy layers lossless entropy coding
+   under the frame checksum: varint-coded sparse indices and/or
+   range-coded payload bytes — decoded payloads are bit-identical to
+   --entropy none, only the measured frame bytes shrink. --threads N runs
+   each round's client batches on N parallel lanes — bit-identical
+   results for any N; the determinism CI job diffs --dump-rounds records
+   to enforce it, including an int8+full entropy leg.)
 ";
 
 fn main() -> ExitCode {
@@ -122,6 +127,9 @@ fn resolve_config(args: &Args) -> Result<RunConfig> {
     if let Some(p) = args.opt("codec").or_else(|| args.opt("precision")) {
         cfg.codec.precision = fedpayload::wire::Precision::parse(p)?;
     }
+    if let Some(e) = args.opt("entropy") {
+        cfg.codec.entropy = fedpayload::wire::EntropyMode::parse(e)?;
+    }
     if let Some(k) = args.opt_parse::<usize>("sparse-topk")? {
         cfg.codec.sparse_topk = k;
     }
@@ -170,9 +178,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mut trainer = Trainer::from_config(&cfg)?;
     let report = trainer.run()?;
     println!(
-        "run complete: strategy={} codec={} iterations={} M={} M_s={} ({:.0}% payload reduction)",
+        "run complete: strategy={} codec={} entropy={} iterations={} M={} M_s={} \
+         ({:.0}% payload reduction)",
         report.strategy,
         report.codec,
+        report.entropy,
         report.iterations,
         report.m,
         report.m_s,
@@ -268,8 +278,9 @@ fn cmd_info(args: &Args) -> Result<()> {
         cfg.train.iterations, cfg.train.theta, cfg.train.payload_fraction
     );
     println!(
-        "  codec              = {} (sparse_topk={}, sparse_threshold={})",
+        "  codec              = {} (entropy={}, sparse_topk={}, sparse_threshold={})",
         cfg.codec.precision.name(),
+        cfg.codec.entropy.name(),
         cfg.codec.sparse_topk,
         cfg.codec.sparse_threshold
     );

@@ -13,13 +13,18 @@ pub const LIST_LEN: usize = 100;
 /// One metric quadruple.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct MetricSet {
+    /// Precision@10, normalized by the per-user theoretical best.
     pub precision: f64,
+    /// Recall@10, normalized.
     pub recall: f64,
+    /// F1@10, normalized.
     pub f1: f64,
+    /// Mean average precision@10, normalized.
     pub map: f64,
 }
 
 impl MetricSet {
+    /// The all-zero metric set.
     pub fn zeros() -> MetricSet {
         MetricSet::default()
     }
@@ -159,10 +164,12 @@ pub struct MetricAccumulator {
 }
 
 impl MetricAccumulator {
+    /// A fresh, empty accumulator.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Add one user's metric set.
     pub fn push(&mut self, m: &MetricSet) {
         self.sum.add(m);
         self.count += 1;
@@ -177,10 +184,12 @@ impl MetricAccumulator {
         self.count += other.count;
     }
 
+    /// Number of metric sets pushed.
     pub fn count(&self) -> usize {
         self.count
     }
 
+    /// Mean of everything pushed (zeros when empty).
     pub fn mean(&self) -> MetricSet {
         let mut m = self.sum;
         if self.count > 0 {
@@ -197,18 +206,22 @@ pub struct RebuildStats {
 }
 
 impl RebuildStats {
+    /// Record one rebuild's final metric set.
     pub fn push(&mut self, m: MetricSet) {
         self.samples.push(m);
     }
 
+    /// Number of rebuilds recorded.
     pub fn len(&self) -> usize {
         self.samples.len()
     }
 
+    /// Is the sample set empty?
     pub fn is_empty(&self) -> bool {
         self.samples.is_empty()
     }
 
+    /// Mean across rebuilds.
     pub fn mean(&self) -> MetricSet {
         let mut acc = MetricAccumulator::new();
         for s in &self.samples {
@@ -217,6 +230,7 @@ impl RebuildStats {
         acc.mean()
     }
 
+    /// Population standard deviation across rebuilds (zeros when n < 2).
     pub fn std(&self) -> MetricSet {
         let n = self.samples.len();
         if n < 2 {

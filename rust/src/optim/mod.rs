@@ -32,6 +32,7 @@ pub struct Adam {
 }
 
 impl Adam {
+    /// Zero-state optimizer for a `num_items × k` model.
     pub fn new(num_items: usize, cfg: &ModelConfig) -> Adam {
         Adam {
             k: cfg.k,
@@ -45,6 +46,7 @@ impl Adam {
         }
     }
 
+    /// Catalog size this optimizer tracks state for.
     pub fn num_items(&self) -> usize {
         self.t.len()
     }

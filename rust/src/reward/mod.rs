@@ -84,6 +84,9 @@ pub struct RewardEngine {
 const V_RENORM_LIMIT: f64 = 1e50;
 
 impl RewardEngine {
+    /// Engine over an `m`-item catalog with `k` factors and the paper's
+    /// γ / β₂ constants (defaults: power weighting, literal Eq. 14,
+    /// per-item time base).
     pub fn new(m: usize, k: usize, gamma: f64, beta2: f64) -> RewardEngine {
         RewardEngine {
             k,
@@ -98,16 +101,19 @@ impl RewardEngine {
         }
     }
 
+    /// Select the cosine-term weighting (builder style).
     pub fn with_cosine_weight(mut self, w: CosineWeight) -> Self {
         self.cosine_weight = w;
         self
     }
 
+    /// Select the Eq. 14 trace variant (builder style).
     pub fn with_v_rule(mut self, r: VRule) -> Self {
         self.v_rule = r;
         self
     }
 
+    /// Select what `t` means in Eq. 13 (builder style).
     pub fn with_time_base(mut self, tb: TimeBase) -> Self {
         self.time_base = tb;
         self

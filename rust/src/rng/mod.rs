@@ -38,6 +38,7 @@ impl Rng {
         Rng::seed_from_u64(self.next_u64())
     }
 
+    /// Next raw 64-bit draw from the underlying PCG stream.
     pub fn next_u64(&mut self) -> u64 {
         self.pcg.next_u64()
     }

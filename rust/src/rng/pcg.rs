@@ -14,10 +14,12 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Mixer starting from `seed`.
     pub fn new(seed: u64) -> Self {
         SplitMix64 { state: seed }
     }
 
+    /// Next 64-bit draw.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9e37_79b9_7f4a_7c15);
         let mut z = self.state;
@@ -35,6 +37,7 @@ pub struct Pcg64 {
 }
 
 impl Pcg64 {
+    /// Generator from explicit 128-bit state and stream values.
     pub fn new(state: u128, stream: u128) -> Self {
         let mut pcg = Pcg64 {
             state: 0,
@@ -45,6 +48,7 @@ impl Pcg64 {
         pcg
     }
 
+    /// Generator from a 64-bit seed expanded through SplitMix64.
     pub fn seed_from_u64(seed: u64) -> Self {
         let mut sm = SplitMix64::new(seed);
         let s = ((sm.next_u64() as u128) << 64) | sm.next_u64() as u128;
@@ -60,6 +64,7 @@ impl Pcg64 {
             .wrapping_add(self.incr);
     }
 
+    /// Next 64-bit draw.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.step();

@@ -38,10 +38,12 @@ impl CdfSampler {
         CdfSampler::new(&weights)
     }
 
+    /// Number of categories.
     pub fn len(&self) -> usize {
         self.cdf.len()
     }
 
+    /// Is the category set empty? (Construction forbids it.)
     pub fn is_empty(&self) -> bool {
         self.cdf.is_empty()
     }

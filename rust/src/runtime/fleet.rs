@@ -37,18 +37,23 @@
 //! backend aggregates a batch's gradients in a single execution, and the
 //! *decoded* sum is what trains the server — dynamics unchanged), and the
 //! ledger records one message per client at exactly that frame's length.
-//! That per-client length is **exact**, not an approximation: the FCF
-//! implicit-feedback gradient is dense over the selected set — every
-//! client contributes `(1 + αx)(x − s)` to every selected item, x = 0
-//! included, plus the regularizer — so a client's own policy-sparsified
-//! upload carries the same surviving-row set as the batch aggregate and
-//! encodes to the same length. (A frame indexed by the client's
-//! *interacted* rows would both undercount the paper's payload and leak
-//! the private interaction set the `client` module promises never leaves
-//! the device.) This discharges the ROADMAP follow-up on per-client
-//! upload attribution: per-batch framing already attributes each client
-//! its true frame length, and the per-batch ledgers make that structure
-//! explicit and mergeable.
+//! With entropy coding off that per-client length is **exact**, not an
+//! approximation: the FCF implicit-feedback gradient is dense over the
+//! selected set — every client contributes `(1 + αx)(x − s)` to every
+//! selected item, x = 0 included, plus the regularizer — so a client's
+//! own policy-sparsified upload carries the same surviving-row set as
+//! the batch aggregate and encodes to the same length. (A frame indexed
+//! by the client's *interacted* rows would both undercount the paper's
+//! payload and leak the private interaction set the `client` module
+//! promises never leaves the device.) With a range-coding entropy mode
+//! the frame *structure* (rows, indices, per-row layout) is still
+//! identical, but the coded length is data-dependent, so the batch
+//! frame's length stands in for each client's own — the aggregate's
+//! symbol statistics approximate a participant's (encoding Θ per-client
+//! frames per round just to measure them would multiply the codec cost
+//! by B). This discharges the ROADMAP follow-up on per-client upload
+//! attribution for the lossless-length modes and documents the
+//! approximation the entropy modes introduce.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 #[cfg(feature = "parallel")]
@@ -63,8 +68,8 @@ use crate::config::{RunConfig, SimNetConfig};
 use crate::metrics::{rank_candidates, user_metrics, MetricAccumulator};
 use crate::simnet::TrafficLedger;
 #[cfg(feature = "parallel")]
-use crate::wire::make_codec;
-use crate::wire::{PayloadCodec, Precision, SparsePolicy};
+use crate::wire::make_codec_with;
+use crate::wire::{EntropyMode, PayloadCodec, Precision, SparsePolicy};
 use crate::warn_log;
 
 use super::{make_backend, ComputeBackend, FcfRuntime, SelRow};
@@ -78,6 +83,7 @@ pub struct BackendFactory {
 }
 
 impl BackendFactory {
+    /// Factory capturing the config a worker needs to build its backend.
     pub fn from_config(cfg: &RunConfig) -> BackendFactory {
         BackendFactory { cfg: cfg.clone() }
     }
@@ -104,6 +110,7 @@ impl BackendFactory {
 pub struct RoundTask {
     /// Decoded selected item factors, item-major (m_s × k).
     pub q_sel: Vec<f32>,
+    /// Latent factor count K.
     pub k: usize,
     /// Full catalog size (eval score width).
     pub m: usize,
@@ -113,6 +120,7 @@ pub struct RoundTask {
     /// barrier. The m × k copy is 1/B of a single batch's O(B·m·k)
     /// scoring work, so it is noise next to what it feeds.
     pub q_full: Vec<f32>,
+    /// Compute contributing clients' test metrics this round (§6.2)?
     pub evaluate: bool,
     /// Per-participant interactions in selected-position space, aligned
     /// with `client_ids`.
@@ -125,7 +133,12 @@ pub struct RoundTask {
     /// Element precision of the upload codec (workers build their own
     /// codec instance from this — codecs are stateless).
     pub precision: Precision,
+    /// Entropy coding mode of the upload codec (lossless; changes frame
+    /// lengths, never decoded values).
+    pub entropy: EntropyMode,
+    /// Upload sparsification policy.
     pub sparse: SparsePolicy,
+    /// Network model for the per-message simulated transfer time.
     pub simnet: SimNetConfig,
     /// Shared immutable per-client data (eval needs train/test items).
     pub fleet: FleetView,
@@ -175,7 +188,9 @@ pub struct BatchOutcome {
 pub struct RoundAggregate {
     /// Σ batch gradients (m_s × k), summed in batch order.
     pub grad: Vec<f32>,
+    /// Eval metrics merged across batches in batch order.
     pub metrics: MetricAccumulator,
+    /// Upload traffic merged across batches in batch order.
     pub ledger: TrafficLedger,
     /// (client id, solved p_i) in participant order.
     pub factors: Vec<(usize, Vec<f32>)>,
@@ -272,10 +287,11 @@ fn run_batch(
         up.cols
     );
     // Per-client upload accounting: one message per participant at the
-    // batch frame's exact length — which IS each client's own frame
-    // length, because the implicit-feedback ∇Q* is dense over the
-    // selected set (see module docs; an interaction-indexed frame would
-    // undercount and leak the client's private interaction rows).
+    // batch frame's length — each client's own frame length when entropy
+    // is off (the implicit-feedback ∇Q* is dense over the selected set),
+    // and the structural approximation of it under range coding (see
+    // module docs; an interaction-indexed frame would undercount and
+    // leak the client's private interaction rows).
     let up_bytes = up_frame.len() as u64;
     let mut ledger = TrafficLedger::new();
     for _ in lo..hi {
@@ -396,7 +412,7 @@ fn worker_loop(id: usize, factory: BackendFactory, rx: Receiver<WorkerMsg>, done
                     }
                 }
                 if let Some(rt) = runtime.as_mut() {
-                    let codec = make_codec(state.task.precision);
+                    let codec = make_codec_with(state.task.precision, state.task.entropy);
                     drain_queue(&state, rt, codec.as_ref());
                 }
             }
@@ -426,6 +442,8 @@ pub struct FleetExecutor {
 }
 
 impl FleetExecutor {
+    /// Executor over `threads` total lanes building backends via `factory`
+    /// (workers spawn lazily at the first multi-batch round).
     pub fn new(factory: BackendFactory, threads: usize) -> FleetExecutor {
         #[cfg(feature = "parallel")]
         let (done_tx, done_rx) = channel();
@@ -450,6 +468,7 @@ impl FleetExecutor {
         self.threads
     }
 
+    /// The factory worker lanes build their backends through.
     pub fn backend_factory(&self) -> &BackendFactory {
         &self.factory
     }
@@ -633,6 +652,7 @@ mod tests {
             client_ids: (0..n).collect(),
             batch: 64,
             precision: Precision::F32,
+            entropy: EntropyMode::None,
             sparse: SparsePolicy::default(),
             simnet: cfg.simnet.clone(),
             fleet: FleetView::from_clients(clients),

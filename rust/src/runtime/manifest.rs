@@ -12,20 +12,30 @@ use anyhow::{anyhow, bail, Context, Result};
 /// Parsed artifact manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Compiled user-batch width B.
     pub b: usize,
+    /// Compiled latent factor count K.
     pub k: usize,
+    /// Compiled item tile widths, ascending.
     pub tiles: Vec<usize>,
+    /// Confidence weight α baked into the artifacts.
     pub alpha: f32,
+    /// Ridge λ baked into the artifacts.
     pub lam: f32,
+    /// Adam learning rate η baked into the artifacts.
     pub eta: f32,
+    /// Adam β₁ baked into the artifacts.
     pub beta1: f32,
+    /// Adam β₂ baked into the artifacts.
     pub beta2: f32,
+    /// CG iteration count of the compiled solver.
     pub cg_iters: usize,
     /// artifact name -> declared input count.
     pub artifacts: BTreeMap<String, usize>,
 }
 
 impl Manifest {
+    /// Read and parse `<dir>/manifest.txt`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.txt");
         let text = std::fs::read_to_string(&path).with_context(|| {
@@ -37,6 +47,7 @@ impl Manifest {
         Manifest::parse(&text)
     }
 
+    /// Parse manifest text (`key=value` lines plus `artifact.<name>`).
     pub fn parse(text: &str) -> Result<Manifest> {
         let mut kv = BTreeMap::new();
         let mut artifacts = BTreeMap::new();

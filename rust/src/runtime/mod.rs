@@ -75,6 +75,7 @@ pub trait ComputeBackend {
     /// Predicted scores `P · Q_tile`: returns (B, t).
     fn scores(&mut self, t: usize, p: &[f32], q: &[f32]) -> Result<Vec<f32>>;
 
+    /// Backend name for logs (`pjrt` / `reference`).
     fn name(&self) -> &'static str;
 }
 
@@ -193,7 +194,9 @@ pub type SelRow = Vec<u32>;
 /// sets and user counts.
 pub struct FcfRuntime {
     backend: Box<dyn ComputeBackend>,
+    /// Compiled user-batch width B.
     pub b: usize,
+    /// Compiled latent factor count K.
     pub k: usize,
     tiles: Vec<usize>,
     // reusable staging buffers, keyed by tile width index
@@ -203,6 +206,7 @@ pub struct FcfRuntime {
 }
 
 impl FcfRuntime {
+    /// Wrap a backend, allocating the per-tile staging buffers once.
     pub fn new(backend: Box<dyn ComputeBackend>) -> FcfRuntime {
         let (b, k, tiles) = backend.geometry();
         let q_stage = tiles.iter().map(|&t| vec![0.0; k * t]).collect();
@@ -219,10 +223,12 @@ impl FcfRuntime {
         }
     }
 
+    /// Name of the wrapped backend.
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
     }
 
+    /// Compiled tile widths, ascending.
     pub fn tiles(&self) -> &[usize] {
         &self.tiles
     }

@@ -25,6 +25,7 @@ use xla::{PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 
 use super::{ComputeBackend, Manifest};
 
+/// The production [`ComputeBackend`]: AOT artifacts on the PJRT CPU client.
 pub struct PjrtBackend {
     b: usize,
     k: usize,
@@ -78,6 +79,7 @@ impl PjrtBackend {
         })
     }
 
+    /// The manifest the artifacts were compiled against.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }

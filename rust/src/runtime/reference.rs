@@ -14,6 +14,7 @@ use crate::linalg::{cholesky_solve, Mat};
 
 use super::ComputeBackend;
 
+/// The pure-Rust fallback [`ComputeBackend`].
 pub struct ReferenceBackend {
     b: usize,
     k: usize,
@@ -23,6 +24,7 @@ pub struct ReferenceBackend {
 }
 
 impl ReferenceBackend {
+    /// Backend with explicit geometry and math constants.
     pub fn new(b: usize, k: usize, mut tiles: Vec<usize>, alpha: f32, lam: f32) -> Self {
         tiles.sort_unstable();
         ReferenceBackend {

@@ -3,10 +3,12 @@
 //! Per FL iteration t the [`Trainer`]:
 //!
 //! 1. asks the bandit for M_s items (Alg. 1 line 8) and assembles Q*,
-//! 2. encodes Q* through the configured `wire` codec and "transmits" the
-//!    frame to the Θ participating clients — the clients train against
-//!    the *decoded* factors and the `TrafficLedger` records the encoded
-//!    frame lengths (measured payload, not the analytic formula),
+//! 2. encodes Q* through the configured `wire` codec — element
+//!    quantization plus the optional lossless entropy layer — and
+//!    "transmits" the frame to the Θ participating clients; the clients
+//!    train against the *decoded* factors and the `TrafficLedger` records
+//!    the encoded frame lengths (measured payload, not the analytic
+//!    formula),
 //! 3. runs the client math through the AOT artifacts — Eq. 3 solve and
 //!    Eq. 5–6 gradients, batched B clients per execution and dispatched
 //!    across `runtime.threads` parallel lanes by the sharded fleet
@@ -41,7 +43,7 @@ use crate::runtime::fleet::{BackendFactory, FleetExecutor, RoundTask};
 use crate::runtime::{make_backend, FcfRuntime, SelRow};
 use crate::simnet::TrafficLedger;
 use crate::telemetry::Stopwatch;
-use crate::wire::{make_codec, PayloadCodec, SparsePolicy};
+use crate::wire::{make_codec_with, PayloadCodec, SparsePolicy};
 use crate::{debug_log, info, warn_log};
 
 /// Per-round record for convergence analysis (paper Figure 3).
@@ -62,19 +64,29 @@ pub struct RoundRecord {
 /// Everything a finished training run reports.
 #[derive(Debug, Clone)]
 pub struct TrainReport {
+    /// Item-selection strategy name (`bandit` registry name).
     pub strategy: &'static str,
     /// Wire codec the payloads moved through (`wire::Precision` name).
     pub codec: &'static str,
+    /// Entropy coding mode layered on the codec (`wire::EntropyMode`
+    /// name) — lossless, so it changes ledger bytes but never metrics.
+    pub entropy: &'static str,
     /// Smoothed metrics at the final iteration (the paper's headline
     /// number for a run).
     pub final_metrics: MetricSet,
+    /// Per-round records in iteration order.
     pub history: Vec<RoundRecord>,
+    /// Cumulative measured traffic of the run.
     pub ledger: TrafficLedger,
+    /// Wall-clock seconds of the whole run.
     pub wall_secs: f64,
     /// (phase name, seconds, invocations) for the perf log.
     pub phase_times: Vec<(String, f64, u64)>,
+    /// FL iterations executed.
     pub iterations: usize,
+    /// Catalog size M.
     pub m: usize,
+    /// Items transmitted per round M_s.
     pub m_s: usize,
 }
 
@@ -172,13 +184,15 @@ impl Trainer {
         let q = Mat::randn(m, cfg.model.k, cfg.model.init_scale, &mut rng);
         let fleet = Fleet::from_split(&split);
         info!(
-            "trainer: {} users, {} items, strategy={}, backend={}, M_s={}, codec={}, threads={}",
+            "trainer: {} users, {} items, strategy={}, backend={}, M_s={}, codec={}, \
+             entropy={}, threads={}",
             fleet.len(),
             m,
             cfg.bandit.strategy.name(),
             runtime.borrow().backend_name(),
             cfg.selected_items(m),
             cfg.codec.precision.name(),
+            cfg.codec.entropy.name(),
             cfg.runtime.threads
         );
         // lanes beyond the number of B-sized batches per round can never
@@ -206,7 +220,7 @@ impl Trainer {
             reward: RewardEngine::new(m, cfg.model.k, cfg.bandit.gamma, cfg.model.beta2 as f64)
                 .with_cosine_weight(cw)
                 .with_time_base(tb),
-            codec: make_codec(cfg.codec.precision),
+            codec: make_codec_with(cfg.codec.precision, cfg.codec.entropy),
             sparse: SparsePolicy {
                 top_k: cfg.codec.sparse_topk,
                 threshold: cfg.codec.sparse_threshold as f32,
@@ -241,10 +255,12 @@ impl Trainer {
         &self.q
     }
 
+    /// The simulated client fleet (diagnostics / tests).
     pub fn fleet(&self) -> &Fleet {
         &self.fleet
     }
 
+    /// The train/test split this trainer runs on.
     pub fn split(&self) -> &Split {
         &self.split
     }
@@ -261,6 +277,7 @@ impl Trainer {
         Ok(TrainReport {
             strategy: self.selector.name(),
             codec: self.codec.name(),
+            entropy: self.codec.entropy().name(),
             final_metrics: self.smoothed_metrics(),
             history: self.history.clone(),
             ledger: self.ledger.clone(),
@@ -383,6 +400,7 @@ impl Trainer {
             client_ids: participants.clone(),
             batch: b,
             precision: self.codec.precision(),
+            entropy: self.codec.entropy(),
             sparse: self.sparse,
             simnet: self.cfg.simnet.clone(),
             fleet: self.fleet.view(),
@@ -545,6 +563,7 @@ mod tests {
         assert_eq!(report.history.len(), 4);
         assert_eq!(report.strategy, "bts");
         assert_eq!(report.codec, "f32");
+        assert_eq!(report.entropy, "none");
         assert_eq!(report.m, 96);
         assert_eq!(report.m_s, 24);
         assert!((report.payload_reduction_pct() - 75.0).abs() < 1e-9);

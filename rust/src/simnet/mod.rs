@@ -1,15 +1,16 @@
-//! Payload and network model (paper Table 1 + §1).
+//! Traffic accounting and network model (paper Table 1 + §1).
 //!
-//! Reproduces the paper's payload arithmetic — `(#parameters × bits) / 8`
-//! bytes with #parameters = #items × K — and layers a simple
-//! bandwidth/latency transfer model on top so the trainer can report the
-//! *simulated* communication time saved by payload optimization, which is
-//! the quantity the paper's motivation (Table 1) is about.
+//! The [`TrafficLedger`] is the system of record for communication: the
+//! trainer and the fleet executor feed it the **measured encoded frame
+//! lengths** that the `wire` codecs (quantization, sparsification,
+//! entropy coding) actually produce, one message per client per
+//! direction, and a simple bandwidth/latency model turns those bytes
+//! into the *simulated* transfer time the paper's motivation is about.
 //!
-//! Note: since the `wire` subsystem landed, the [`TrafficLedger`] is fed
-//! **measured encoded frame lengths** by the trainer; [`payload_bytes`]
-//! remains the analytic Table 1 formula, used only for the paper
-//! reproduction and back-of-envelope comparisons.
+//! [`payload_bytes`] is the one deliberate exception: it reproduces the
+//! paper's analytic Table 1 arithmetic — `(#parameters × bits) / 8` with
+//! #parameters = #items × K — and is used only for that reproduction and
+//! back-of-envelope comparisons, never for the ledger.
 
 use crate::config::SimNetConfig;
 
@@ -51,14 +52,16 @@ pub struct TrafficLedger {
     pub down_bytes: u64,
     /// Bytes clients -> server (∇Q* uploads).
     pub up_bytes: u64,
-    /// Count of client messages in each direction.
+    /// Count of server -> client messages.
     pub down_msgs: u64,
+    /// Count of client -> server messages.
     pub up_msgs: u64,
     /// Simulated transfer seconds (sum over messages).
     pub sim_secs: f64,
 }
 
 impl TrafficLedger {
+    /// A fresh, empty ledger.
     pub fn new() -> Self {
         Self::default()
     }
@@ -89,6 +92,7 @@ impl TrafficLedger {
         self.sim_secs += other.sim_secs;
     }
 
+    /// Total bytes moved in both directions.
     pub fn total_bytes(&self) -> u64 {
         self.down_bytes + self.up_bytes
     }

@@ -10,14 +10,20 @@ use std::time::{Duration, Instant};
 /// Result of one benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark name.
     pub name: String,
+    /// Timed iterations executed.
     pub iters: u64,
+    /// Mean time per iteration in nanoseconds.
     pub mean_ns: f64,
+    /// Median time per iteration in nanoseconds.
     pub p50_ns: f64,
+    /// 95th-percentile time per iteration in nanoseconds.
     pub p95_ns: f64,
 }
 
 impl BenchResult {
+    /// Print the one-line human summary.
     pub fn report(&self) {
         println!(
             "bench {:<40} iters={:<7} mean={:>12} p50={:>12} p95={:>12}",
@@ -58,6 +64,7 @@ impl Default for Bencher {
 }
 
 impl Bencher {
+    /// Runner with an explicit wall-clock budget and iteration cap.
     pub fn new(budget: Duration, max_iters: u64) -> Self {
         Bencher { budget, max_iters }
     }

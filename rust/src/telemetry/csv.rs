@@ -40,6 +40,7 @@ impl CsvWriter {
         Ok(())
     }
 
+    /// Flush buffered rows to disk.
     pub fn flush(&mut self) -> Result<()> {
         self.out.flush()?;
         Ok(())

@@ -13,9 +13,13 @@ use std::time::Instant;
 /// Log levels, lowest to highest priority.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
+    /// Verbose per-round diagnostics.
     Debug = 0,
+    /// Run-level progress (the default threshold).
     Info = 1,
+    /// Recoverable misconfigurations.
     Warn = 2,
+    /// Failures.
     Error = 3,
 }
 
@@ -86,6 +90,7 @@ macro_rules! warn_log {
 /// so EXPERIMENTS.md §Perf can attribute time per stage.
 #[derive(Debug, Clone)]
 pub struct Stopwatch {
+    /// Phase name this stopwatch reports under.
     pub name: &'static str,
     total_ns: u128,
     count: u64,
@@ -93,6 +98,7 @@ pub struct Stopwatch {
 }
 
 impl Stopwatch {
+    /// A stopped stopwatch with zero accumulated time.
     pub fn new(name: &'static str) -> Self {
         Stopwatch {
             name,
@@ -102,11 +108,13 @@ impl Stopwatch {
         }
     }
 
+    /// Start one timing cycle (must not already be running).
     pub fn start(&mut self) {
         debug_assert!(self.started.is_none(), "stopwatch {} already running", self.name);
         self.started = Some(Instant::now());
     }
 
+    /// Stop the running cycle and accumulate it (no-op when stopped).
     pub fn stop(&mut self) {
         if let Some(t0) = self.started.take() {
             self.total_ns += t0.elapsed().as_nanos();
@@ -131,14 +139,17 @@ impl Stopwatch {
         out
     }
 
+    /// Accumulated seconds across all cycles.
     pub fn total_secs(&self) -> f64 {
         self.total_ns as f64 / 1e9
     }
 
+    /// Completed timing cycles.
     pub fn count(&self) -> u64 {
         self.count
     }
 
+    /// Mean milliseconds per cycle (0 when never run).
     pub fn mean_ms(&self) -> f64 {
         if self.count == 0 {
             0.0

@@ -1,0 +1,587 @@
+//! Entropy coding on top of the quantized payloads: the third payload
+//! axis, squeezing redundancy out of the bytes the other two codec layers
+//! produce — losslessly, so training dynamics are bit-identical to the
+//! non-entropy path.
+//!
+//! Two primitives, selected per frame by [`EntropyMode`]:
+//!
+//! * **Varint index coding** ([`encode_indices`]) — the sparse ∇Q* frame
+//!   stores its surviving row indices sorted ascending, so consecutive
+//!   deltas are small. Delta + zigzag + LEB128 turns the fixed 4-byte
+//!   `u32` per index into ~1 byte for typical catalogs (indices < 2^14
+//!   apart), cutting the index block ~4×.
+//! * **Adaptive binary range coding** ([`range_encode`]) — an order-0
+//!   byte model, factorized as a 256-leaf bit tree of adaptive 11-bit
+//!   probabilities (the LZMA construction), driven through a carry-less
+//!   32-bit range coder. One probability tree per *byte role* — an int8
+//!   row is `[scale-lo, scale-hi, value × cols]`, a float row cycles
+//!   through its element bytes — so the highly predictable f16 row-scale
+//!   exponents never pollute the value-byte statistics. The bit-tree
+//!   model adapts per bit instead of per 256-symbol table, which is what
+//!   keeps near-incompressible frames from *expanding* (worst case is
+//!   the ~6-byte coder preamble, not a misfit frequency table).
+//!
+//! Both transforms are bijective on the quantized bytes: `decode ∘
+//! encode` is the identity (pinned by the `prop_entropy_*` property
+//! tests), so any loss is still exactly the loss the element codec
+//! chose — the entropy layer only changes how many bytes the
+//! [`TrafficLedger`](crate::simnet::TrafficLedger) sees on the wire.
+//!
+//! Measured on the synthetic workloads (see `benches/bench_codec.rs`,
+//! `BENCH_codec.json`): int8 downloads shrink ~2–12% (more once training
+//! concentrates the factor distribution), f16/f32 downloads ~10–15%, and
+//! sparse int8 uploads ~10–20% (varint indices + range-coded values).
+
+use anyhow::{bail, ensure, Result};
+
+use super::quant::Precision;
+
+/// Which entropy transforms a codec applies on top of the element
+/// quantization. Decode is self-describing: the frame header carries the
+/// mode id, so any codec can decode any frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EntropyMode {
+    /// No entropy coding (the PR 1 wire format, byte for byte).
+    #[default]
+    None,
+    /// Delta + zigzag + LEB128 varint coding of sparse row indices only.
+    Varint,
+    /// Adaptive range coding of the quantized payload bytes only.
+    Range,
+    /// Both: varint indices and range-coded payload bytes.
+    Full,
+}
+
+impl EntropyMode {
+    /// Parse a mode name (`none|varint|range|full`).
+    pub fn parse(s: &str) -> Result<EntropyMode> {
+        Ok(match s {
+            "none" => EntropyMode::None,
+            "varint" => EntropyMode::Varint,
+            "range" => EntropyMode::Range,
+            "full" => EntropyMode::Full,
+            other => bail!("unknown entropy mode `{other}` (none|varint|range|full)"),
+        })
+    }
+
+    /// Mode name for logs/CSV.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EntropyMode::None => "none",
+            EntropyMode::Varint => "varint",
+            EntropyMode::Range => "range",
+            EntropyMode::Full => "full",
+        }
+    }
+
+    /// Mode id stored in the frame header (byte 7).
+    pub fn id(&self) -> u8 {
+        match self {
+            EntropyMode::None => 0,
+            EntropyMode::Varint => 1,
+            EntropyMode::Range => 2,
+            EntropyMode::Full => 3,
+        }
+    }
+
+    /// Inverse of [`EntropyMode::id`].
+    pub fn from_id(id: u8) -> Result<EntropyMode> {
+        Ok(match id {
+            0 => EntropyMode::None,
+            1 => EntropyMode::Varint,
+            2 => EntropyMode::Range,
+            3 => EntropyMode::Full,
+            other => bail!("unknown entropy mode id {other}"),
+        })
+    }
+
+    /// Does this mode varint-code the sparse row-index block?
+    pub fn varint_indices(&self) -> bool {
+        matches!(self, EntropyMode::Varint | EntropyMode::Full)
+    }
+
+    /// Does this mode range-code the quantized payload bytes?
+    pub fn range_values(&self) -> bool {
+        matches!(self, EntropyMode::Range | EntropyMode::Full)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Varint index coding: delta + zigzag + LEB128
+
+fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+fn unzigzag(u: u64) -> i64 {
+    ((u >> 1) as i64) ^ -((u & 1) as i64)
+}
+
+/// Encode a row-index list as delta + zigzag + LEB128 varints. The sparse
+/// encoder always passes ascending indices (small positive deltas → one
+/// byte each), but the coding round-trips any `u32` sequence.
+pub fn encode_indices(indices: &[u32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(indices.len() + 4);
+    let mut prev = 0i64;
+    for &i in indices {
+        let mut u = zigzag(i as i64 - prev);
+        prev = i as i64;
+        loop {
+            let b = (u & 0x7f) as u8;
+            u >>= 7;
+            if u != 0 {
+                out.push(b | 0x80);
+            } else {
+                out.push(b);
+                break;
+            }
+        }
+    }
+    out
+}
+
+/// Decode exactly `count` indices from a varint block produced by
+/// [`encode_indices`]. The block must be consumed exactly — truncation,
+/// trailing garbage, and out-of-`u32`-range deltas are decode errors.
+pub fn decode_indices(buf: &[u8], count: usize) -> Result<Vec<u32>> {
+    let mut out = Vec::with_capacity(count);
+    let mut prev = 0i64;
+    let mut pos = 0usize;
+    for n in 0..count {
+        let mut u = 0u64;
+        let mut shift = 0u32;
+        loop {
+            ensure!(pos < buf.len(), "varint index block truncated at index {n}");
+            let b = buf[pos];
+            pos += 1;
+            // the 10th byte lands at shift 63: only its low bit fits the
+            // accumulator — higher bits would be silently discarded
+            ensure!(
+                shift < 63 || (b & 0x7f) <= 1,
+                "varint index {n} overflows 64 bits"
+            );
+            u |= ((b & 0x7f) as u64) << shift;
+            shift += 7;
+            if b & 0x80 == 0 {
+                break;
+            }
+            ensure!(shift <= 63, "varint index {n} overflows 64 bits");
+        }
+        prev = prev
+            .checked_add(unzigzag(u))
+            .filter(|p| (0..=u32::MAX as i64).contains(p))
+            .ok_or_else(|| anyhow::anyhow!("varint index {n} decodes out of u32 range"))?;
+        out.push(prev as u32);
+    }
+    ensure!(
+        pos == buf.len(),
+        "varint index block has {} trailing bytes",
+        buf.len() - pos
+    );
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Adaptive binary range coder (LZMA-style bit tree, one tree per byte role)
+
+const KTOP: u32 = 1 << 24;
+/// Probabilities live on an 11-bit scale; 1024 is p = 0.5.
+const PROB_INIT: u16 = 1024;
+/// Adaptation rate: each observed bit moves its probability by
+/// `(2048 - p) >> 5` resp. `p >> 5` — the standard LZMA step.
+const MOVE_BITS: u8 = 5;
+
+/// One probability tree decodes/encodes one byte: 255 internal nodes of a
+/// binary tree over the 256-symbol alphabet (index 0 unused).
+type BitTree = Vec<u16>;
+
+fn new_tree() -> BitTree {
+    vec![PROB_INIT; 256]
+}
+
+/// Byte-role pattern of one encoded row: which probability tree each byte
+/// position trains. Int8 rows are `[scale-lo, scale-hi, cols × value]`;
+/// float rows cycle through their element's byte positions.
+fn role_pattern(precision: Precision, cols: usize) -> (Vec<u8>, usize) {
+    match precision {
+        Precision::Int8 => {
+            let mut pat = Vec::with_capacity(cols + 2);
+            pat.push(0);
+            pat.push(1);
+            pat.resize(cols + 2, 2);
+            (pat, 3)
+        }
+        Precision::F16 => (vec![0, 1], 2),
+        Precision::F32 => (vec![0, 1, 2, 3], 4),
+        Precision::F64 => ((0..8).collect(), 8),
+    }
+}
+
+struct RangeEncoder {
+    low: u64,
+    range: u32,
+    cache: u8,
+    cache_size: u64,
+    out: Vec<u8>,
+}
+
+impl RangeEncoder {
+    fn new(capacity: usize) -> RangeEncoder {
+        RangeEncoder {
+            low: 0,
+            range: u32::MAX,
+            cache: 0,
+            cache_size: 1,
+            out: Vec::with_capacity(capacity),
+        }
+    }
+
+    fn shift_low(&mut self) {
+        if self.low < 0xff00_0000 || self.low > 0xffff_ffff {
+            let carry = (self.low >> 32) as u8;
+            self.out.push(self.cache.wrapping_add(carry));
+            for _ in 1..self.cache_size {
+                self.out.push(0xffu8.wrapping_add(carry));
+            }
+            self.cache_size = 0;
+            self.cache = (self.low >> 24) as u8;
+        }
+        self.cache_size += 1;
+        self.low = (self.low << 8) & 0xffff_ffff;
+    }
+
+    fn encode_bit(&mut self, probs: &mut BitTree, node: usize, bit: u32) {
+        let p = probs[node] as u32;
+        let bound = (self.range >> 11) * p;
+        if bit == 0 {
+            self.range = bound;
+            probs[node] = (p + ((2048 - p) >> MOVE_BITS)) as u16;
+        } else {
+            self.low += bound as u64;
+            self.range -= bound;
+            probs[node] = (p - (p >> MOVE_BITS)) as u16;
+        }
+        if self.range < KTOP {
+            self.range <<= 8;
+            self.shift_low();
+        }
+    }
+
+    fn encode_byte(&mut self, probs: &mut BitTree, byte: u8) {
+        let mut node = 1usize;
+        for k in (0..8).rev() {
+            let bit = ((byte >> k) & 1) as u32;
+            self.encode_bit(probs, node, bit);
+            node = (node << 1) | bit as usize;
+        }
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        for _ in 0..5 {
+            self.shift_low();
+        }
+        self.out
+    }
+}
+
+struct RangeDecoder<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    range: u32,
+    code: u32,
+}
+
+impl<'a> RangeDecoder<'a> {
+    fn new(buf: &'a [u8]) -> RangeDecoder<'a> {
+        let mut d = RangeDecoder {
+            buf,
+            pos: 0,
+            range: u32::MAX,
+            code: 0,
+        };
+        d.next_byte(); // the encoder's leading cache byte (always 0)
+        for _ in 0..4 {
+            d.code = (d.code << 8) | d.next_byte() as u32;
+        }
+        d
+    }
+
+    /// Reads past-the-end as zero bytes: a truncated stream decodes to
+    /// *wrong* bytes, never out-of-bounds — and truncation cannot reach
+    /// this layer anyway, because the frame checksum covers the block.
+    fn next_byte(&mut self) -> u8 {
+        let b = self.buf.get(self.pos).copied().unwrap_or(0);
+        self.pos += 1;
+        b
+    }
+
+    fn decode_bit(&mut self, probs: &mut BitTree, node: usize) -> u32 {
+        let p = probs[node] as u32;
+        let bound = (self.range >> 11) * p;
+        let bit = if self.code < bound {
+            self.range = bound;
+            probs[node] = (p + ((2048 - p) >> MOVE_BITS)) as u16;
+            0
+        } else {
+            self.code -= bound;
+            self.range -= bound;
+            probs[node] = (p - (p >> MOVE_BITS)) as u16;
+            1
+        };
+        if self.range < KTOP {
+            self.range <<= 8;
+            self.code = (self.code << 8) | self.next_byte() as u32;
+        }
+        bit
+    }
+
+    fn decode_byte(&mut self, probs: &mut BitTree) -> u8 {
+        let mut node = 1usize;
+        for _ in 0..8 {
+            node = (node << 1) | self.decode_bit(probs, node) as usize;
+        }
+        node as u8
+    }
+}
+
+/// Range-code a quantized payload. `precision` and `cols` only select the
+/// byte-role pattern (which adaptive tree each byte trains); the bytes
+/// themselves are copied verbatim into the model, so the transform is
+/// lossless for any input.
+pub fn range_encode(payload: &[u8], precision: Precision, cols: usize) -> Vec<u8> {
+    let (pattern, n_roles) = role_pattern(precision, cols);
+    let mut trees: Vec<BitTree> = (0..n_roles).map(|_| new_tree()).collect();
+    let mut enc = RangeEncoder::new(payload.len() / 2 + 16);
+    for (i, &b) in payload.iter().enumerate() {
+        let role = pattern[i % pattern.len()] as usize;
+        enc.encode_byte(&mut trees[role], b);
+    }
+    enc.finish()
+}
+
+/// Decode exactly `raw_len` bytes from a [`range_encode`] stream.
+/// `precision`/`cols` must match the encode call (they are recovered from
+/// the frame header). The stream must be consumed exactly: bytes left
+/// unread after the last symbol are trailing garbage and a decode error,
+/// preserving the plain path's exact payload-length validation.
+pub fn range_decode(
+    buf: &[u8],
+    raw_len: usize,
+    precision: Precision,
+    cols: usize,
+) -> Result<Vec<u8>> {
+    let (pattern, n_roles) = role_pattern(precision, cols);
+    let mut trees: Vec<BitTree> = (0..n_roles).map(|_| new_tree()).collect();
+    let mut dec = RangeDecoder::new(buf);
+    let mut out = Vec::with_capacity(raw_len);
+    for i in 0..raw_len {
+        let role = pattern[i % pattern.len()] as usize;
+        out.push(dec.decode_byte(&mut trees[role]));
+    }
+    ensure!(
+        dec.pos >= buf.len(),
+        "range-coded block has {} unread trailing bytes",
+        buf.len() - dec.pos
+    );
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Length-prefixed entropy blocks (the frame-payload building block)
+
+/// Wrap a raw quantized payload into a length-prefixed entropy block:
+/// `u32 raw_len (LE) | range-coded bytes` (an empty payload is just its
+/// zero length prefix).
+pub fn seal_block(raw: &[u8], precision: Precision, cols: usize) -> Result<Vec<u8>> {
+    ensure!(
+        raw.len() <= u32::MAX as usize,
+        "entropy block of {} raw bytes exceeds u32",
+        raw.len()
+    );
+    let mut out = Vec::with_capacity(8 + raw.len() / 2);
+    out.extend_from_slice(&(raw.len() as u32).to_le_bytes());
+    if !raw.is_empty() {
+        out.extend_from_slice(&range_encode(raw, precision, cols));
+    }
+    Ok(out)
+}
+
+/// Open a [`seal_block`] block, validating its declared raw length against
+/// the length the frame geometry implies.
+pub fn open_block(
+    block: &[u8],
+    expected_len: usize,
+    precision: Precision,
+    cols: usize,
+) -> Result<Vec<u8>> {
+    ensure!(block.len() >= 4, "entropy block missing its length prefix");
+    let raw_len = u32::from_le_bytes(block[0..4].try_into().unwrap()) as usize;
+    ensure!(
+        raw_len == expected_len,
+        "entropy block declares {raw_len} raw bytes, geometry implies {expected_len}"
+    );
+    if raw_len == 0 {
+        ensure!(
+            block.len() == 4,
+            "empty entropy block carries {} trailing bytes",
+            block.len() - 4
+        );
+        return Ok(Vec::new());
+    }
+    range_decode(&block[4..], raw_len, precision, cols)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn mode_registry_roundtrips() {
+        for m in [
+            EntropyMode::None,
+            EntropyMode::Varint,
+            EntropyMode::Range,
+            EntropyMode::Full,
+        ] {
+            assert_eq!(EntropyMode::parse(m.name()).unwrap(), m);
+            assert_eq!(EntropyMode::from_id(m.id()).unwrap(), m);
+        }
+        assert!(EntropyMode::parse("huffman").is_err());
+        assert!(EntropyMode::from_id(9).is_err());
+        assert_eq!(EntropyMode::default(), EntropyMode::None);
+        assert!(EntropyMode::Full.varint_indices() && EntropyMode::Full.range_values());
+        assert!(EntropyMode::Varint.varint_indices() && !EntropyMode::Varint.range_values());
+        assert!(!EntropyMode::Range.varint_indices() && EntropyMode::Range.range_values());
+    }
+
+    #[test]
+    fn varint_roundtrips_edge_cases() {
+        for idx in [
+            vec![],
+            vec![0],
+            vec![u32::MAX],
+            (0..100).collect::<Vec<u32>>(),
+            vec![0, 1, 2, 1_000_000, u32::MAX],
+            vec![5, 5, 5], // duplicates (zero deltas) are representable
+            vec![9, 3, 7], // non-monotonic (negative deltas zigzag fine)
+        ] {
+            let buf = encode_indices(&idx);
+            assert_eq!(decode_indices(&buf, idx.len()).unwrap(), idx, "{idx:?}");
+        }
+    }
+
+    #[test]
+    fn varint_sorted_indices_cost_about_one_byte_each() {
+        let idx: Vec<u32> = (0..1763).collect();
+        let buf = encode_indices(&idx);
+        // dense ascending deltas are all 1 -> exactly one byte per index,
+        // vs 4 bytes each in the raw u32 block
+        assert_eq!(buf.len(), idx.len());
+    }
+
+    #[test]
+    fn varint_rejects_malformed_blocks() {
+        let buf = encode_indices(&[1, 2, 3]);
+        assert!(decode_indices(&buf[..buf.len() - 1], 3).is_err(), "truncation");
+        assert!(decode_indices(&buf, 2).is_err(), "trailing bytes");
+        // an unterminated continuation chain
+        assert!(decode_indices(&[0x80, 0x80, 0x80], 1).is_err());
+        // a 10-byte chain overflows the 64-bit accumulator budget
+        assert!(decode_indices(&[0xff; 12], 1).is_err());
+        // a 10th byte whose payload exceeds the one remaining bit would
+        // silently drop bits — must error, not decode wrong
+        let tenth_byte_overflow = [0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x02];
+        assert!(decode_indices(&tenth_byte_overflow, 1).is_err());
+    }
+
+    #[test]
+    fn range_roundtrips_structured_and_random_bytes() {
+        let mut rng = Rng::seed_from_u64(42);
+        for case in 0..40u64 {
+            let n = rng.below(3000);
+            let data: Vec<u8> = match case % 4 {
+                0 => (0..n).map(|_| rng.below(256) as u8).collect(),
+                1 => vec![0u8; n],
+                2 => (0..n)
+                    .map(|_| if rng.chance(0.9) { 0 } else { rng.below(256) as u8 })
+                    .collect(),
+                _ => (0..n).map(|i| (i % 7) as u8).collect(),
+            };
+            for p in [Precision::Int8, Precision::F16, Precision::F32, Precision::F64] {
+                let cols = 1 + rng.below(40);
+                let enc = range_encode(&data, p, cols);
+                let dec = range_decode(&enc, data.len(), p, cols).unwrap();
+                assert_eq!(dec, data, "case {case} {} cols={cols}", p.name());
+            }
+        }
+    }
+
+    #[test]
+    fn range_compresses_skewed_bytes_and_barely_expands_uniform() {
+        let mut rng = Rng::seed_from_u64(7);
+        let skewed: Vec<u8> = (0..4000)
+            .map(|_| if rng.chance(0.85) { 0 } else { rng.below(16) as u8 })
+            .collect();
+        let enc = range_encode(&skewed, Precision::Int8, 25);
+        assert!(
+            enc.len() * 3 < skewed.len(),
+            "skewed bytes should compress >3x, got {} -> {}",
+            skewed.len(),
+            enc.len()
+        );
+        let uniform: Vec<u8> = (0..4000).map(|_| rng.below(256) as u8).collect();
+        let enc = range_encode(&uniform, Precision::Int8, 25);
+        // incompressible input costs at most ~2% + the coder preamble
+        assert!(
+            enc.len() <= uniform.len() + uniform.len() / 50 + 8,
+            "uniform bytes expanded too much: {} -> {}",
+            uniform.len(),
+            enc.len()
+        );
+    }
+
+    #[test]
+    fn trailing_garbage_after_coded_stream_is_rejected() {
+        let data: Vec<u8> = (0..500).map(|i| (i % 11) as u8).collect();
+        let enc = range_encode(&data, Precision::Int8, 25);
+        // the decoder consumes the stream exactly...
+        assert_eq!(range_decode(&enc, 500, Precision::Int8, 25).unwrap(), data);
+        // ...so appended bytes inside a (checksummed) payload are caught
+        let mut padded = enc.clone();
+        padded.extend_from_slice(&[0xab, 0xcd]);
+        assert!(range_decode(&padded, 500, Precision::Int8, 25).is_err());
+    }
+
+    #[test]
+    fn blocks_validate_lengths() {
+        let raw = vec![1u8, 2, 3, 4, 5, 6];
+        let blk = seal_block(&raw, Precision::F16, 3).unwrap();
+        assert_eq!(open_block(&blk, 6, Precision::F16, 3).unwrap(), raw);
+        // geometry mismatch is an error, not garbage
+        assert!(open_block(&blk, 7, Precision::F16, 3).is_err());
+        assert!(open_block(&blk[..3], 6, Precision::F16, 3).is_err());
+        // empty payload: just the zero-length prefix
+        let blk = seal_block(&[], Precision::Int8, 25).unwrap();
+        assert_eq!(blk, vec![0u8, 0, 0, 0]);
+        assert!(open_block(&blk, 0, Precision::Int8, 25).unwrap().is_empty());
+        assert!(open_block(&[0, 0, 0, 0, 9], 0, Precision::Int8, 25).is_err());
+    }
+
+    #[test]
+    fn role_patterns_cover_row_strides() {
+        let (pat, roles) = role_pattern(Precision::Int8, 25);
+        assert_eq!(pat.len(), 27);
+        assert_eq!(roles, 3);
+        assert_eq!(&pat[..3], &[0, 1, 2]);
+        for (p, stride, roles) in [
+            (Precision::F16, 2usize, 2usize),
+            (Precision::F32, 4, 4),
+            (Precision::F64, 8, 8),
+        ] {
+            let (pat, n) = role_pattern(p, 25);
+            assert_eq!(pat.len(), stride, "{}", p.name());
+            assert_eq!(n, roles);
+        }
+    }
+}

@@ -8,13 +8,21 @@
 //! 4       1     format version (1)
 //! 5       1     codec id (wire::Precision)
 //! 6       1     payload kind (0 = dense, 1 = sparse)
-//! 7       1     reserved (0)
+//! 7       1     entropy codec id (wire::EntropyMode; 0 = none)
 //! 8       4     rows (u32)
 //! 12      4     cols (u32)
 //! 16      4     payload length in bytes (u32)
 //! 20      4     FNV-1a checksum of header bytes 0..20 + payload (u32)
 //! 24      ...   payload
 //! ```
+//!
+//! Byte 7 was reserved-zero until the entropy layer landed, so every
+//! pre-entropy frame is still a valid mode-0 (`none`) frame. When the
+//! entropy id selects range coding, the payload is one or more
+//! **length-prefixed entropy blocks** (`u32 raw_len | coded bytes`, see
+//! `wire::entropy`) instead of raw quantized bytes; the checksum covers
+//! the coded bytes, so corruption is detected *before* entropy decode
+//! runs.
 //!
 //! [`open`] validates magic, version, length and checksum before handing
 //! the payload slice back, so corruption/truncation on the "wire" is a
@@ -47,6 +55,7 @@ pub enum PayloadKind {
 }
 
 impl PayloadKind {
+    /// Kind id stored in the frame header.
     pub fn id(&self) -> u8 {
         match self {
             PayloadKind::Dense => 0,
@@ -54,6 +63,7 @@ impl PayloadKind {
         }
     }
 
+    /// Inverse of [`PayloadKind::id`].
     pub fn from_id(id: u8) -> Result<PayloadKind> {
         match id {
             0 => Ok(PayloadKind::Dense),
@@ -66,10 +76,17 @@ impl PayloadKind {
 /// Decoded frame header.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct FrameHeader {
+    /// Element codec id (`wire::Precision`).
     pub codec_id: u8,
+    /// Entropy codec id (`wire::EntropyMode`; 0 = none).
+    pub entropy_id: u8,
+    /// What the payload contains.
     pub kind: PayloadKind,
+    /// Matrix rows this frame describes.
     pub rows: u32,
+    /// Matrix columns this frame describes.
     pub cols: u32,
+    /// Payload length in bytes (excluding this header).
     pub payload_len: u32,
 }
 
@@ -95,8 +112,11 @@ fn frame_checksum(header: &[u8], payload: &[u8]) -> u32 {
 }
 
 /// Build the complete frame (header + payload) for a payload.
+/// `entropy_id` records which `wire::EntropyMode` shaped the payload so
+/// decode is self-describing (0 = raw quantized bytes).
 pub fn seal(
     codec_id: u8,
+    entropy_id: u8,
     kind: PayloadKind,
     rows: usize,
     cols: usize,
@@ -114,7 +134,7 @@ pub fn seal(
     out.push(VERSION);
     out.push(codec_id);
     out.push(kind.id());
-    out.push(0);
+    out.push(entropy_id);
     out.extend_from_slice(&(rows as u32).to_le_bytes());
     out.extend_from_slice(&(cols as u32).to_le_bytes());
     out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
@@ -144,6 +164,7 @@ pub fn open(frame: &[u8]) -> Result<(FrameHeader, &[u8])> {
     let kind = PayloadKind::from_id(frame[6])?;
     let header = FrameHeader {
         codec_id: frame[5],
+        entropy_id: frame[7],
         kind,
         rows: read_u32(frame, 8),
         cols: read_u32(frame, 12),
@@ -172,10 +193,11 @@ mod tests {
     #[test]
     fn seal_open_roundtrip() {
         let payload = [1u8, 2, 3, 4, 5];
-        let frame = seal(3, PayloadKind::Dense, 10, 25, &payload).unwrap();
+        let frame = seal(3, 2, PayloadKind::Dense, 10, 25, &payload).unwrap();
         assert_eq!(frame.len(), HEADER_LEN + 5);
         let (h, p) = open(&frame).unwrap();
         assert_eq!(h.codec_id, 3);
+        assert_eq!(h.entropy_id, 2);
         assert_eq!(h.kind, PayloadKind::Dense);
         assert_eq!(h.rows, 10);
         assert_eq!(h.cols, 25);
@@ -185,16 +207,17 @@ mod tests {
 
     #[test]
     fn empty_payload_is_valid() {
-        let frame = seal(1, PayloadKind::Sparse, 0, 0, &[]).unwrap();
+        let frame = seal(1, 0, PayloadKind::Sparse, 0, 0, &[]).unwrap();
         let (h, p) = open(&frame).unwrap();
         assert_eq!(h.kind, PayloadKind::Sparse);
+        assert_eq!(h.entropy_id, 0);
         assert!(p.is_empty());
     }
 
     #[test]
     fn corruption_is_detected() {
         let payload = [9u8; 16];
-        let frame = seal(2, PayloadKind::Dense, 4, 4, &payload).unwrap();
+        let frame = seal(2, 0, PayloadKind::Dense, 4, 4, &payload).unwrap();
         // payload byte flip -> checksum
         let mut bad = frame.clone();
         bad[HEADER_LEN + 3] ^= 0x40;
@@ -207,8 +230,8 @@ mod tests {
         let mut bad = frame.clone();
         bad[4] = 9;
         assert!(open(&bad).unwrap_err().to_string().contains("version"));
-        // header dims corruption -> checksum (header is covered too)
-        for offset in [5usize, 8, 9, 12, 13] {
+        // header corruption -> checksum (codec, entropy, dims all covered)
+        for offset in [5usize, 7, 8, 9, 12, 13] {
             let mut bad = frame.clone();
             bad[offset] ^= 0x01;
             assert!(open(&bad).is_err(), "header flip at {offset} undetected");

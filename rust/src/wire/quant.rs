@@ -22,9 +22,13 @@ use anyhow::{ensure, Result};
 /// Wire precision of one matrix element.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Precision {
+    /// Widened 64-bit floats (the paper's Table 1 accounting).
     F64,
+    /// Raw little-endian f32 — bit-exact round-trip.
     F32,
+    /// IEEE 754 binary16 with saturation at ±65504.
     F16,
+    /// Per-row symmetric int8 affine quantization (f16 row scale).
     Int8,
 }
 
@@ -40,6 +44,7 @@ impl Precision {
         })
     }
 
+    /// Codec name for logs/CSV.
     pub fn name(&self) -> &'static str {
         match self {
             Precision::F64 => "f64",
@@ -59,6 +64,7 @@ impl Precision {
         }
     }
 
+    /// Inverse of [`Precision::id`].
     pub fn from_id(id: u8) -> Result<Precision> {
         Ok(match id {
             1 => Precision::F64,

@@ -2,11 +2,19 @@
 //!
 //! A gradient upload is a `m_s × k` row-major matrix in which whole item
 //! rows may be zero (no participating client touched the item) or
-//! negligible. The sparse payload stores only the surviving rows:
+//! negligible. The sparse payload stores only the surviving rows. With
+//! entropy coding off the layout is
 //!
 //! ```text
 //! u32 nnz | nnz × u32 row index | nnz rows encoded via wire::quant
 //! ```
+//!
+//! and the `wire::entropy` modes swap in smaller blocks per stream: a
+//! varint-coded index block (`u32 idx_len | delta+zigzag+LEB128 bytes`)
+//! replaces the raw `u32` indices, and a length-prefixed range-coded
+//! block (`u32 raw_len | coded bytes`) replaces the raw quantized rows.
+//! Both substitutions are lossless, so every mode decodes to identical
+//! matrices; the frame header records which mode shaped the payload.
 //!
 //! Row selection is governed by [`SparsePolicy`]:
 //!
@@ -20,6 +28,7 @@
 
 use anyhow::{ensure, Result};
 
+use super::entropy::{self, EntropyMode};
 use super::frame::{self, PayloadKind};
 use super::quant::{self, Precision};
 use super::Dense;
@@ -66,12 +75,27 @@ pub fn kept_rows(data: &[f32], rows: usize, cols: usize, policy: &SparsePolicy) 
     kept.into_iter().map(|(r, _)| r).collect()
 }
 
-/// Encode the sparse frame for a row-major `rows × cols` matrix.
+/// Encode the sparse frame for a row-major `rows × cols` matrix without
+/// entropy coding (the PR 1 wire format).
 pub fn encode(
     data: &[f32],
     rows: usize,
     cols: usize,
     precision: Precision,
+    policy: &SparsePolicy,
+) -> Result<Vec<u8>> {
+    encode_with(data, rows, cols, precision, EntropyMode::None, policy)
+}
+
+/// Encode the sparse frame for a row-major `rows × cols` matrix, with the
+/// index and value streams shaped by `entropy` (see the module docs for
+/// the per-mode layouts).
+pub fn encode_with(
+    data: &[f32],
+    rows: usize,
+    cols: usize,
+    precision: Precision,
+    entropy: EntropyMode,
     policy: &SparsePolicy,
 ) -> Result<Vec<u8>> {
     ensure!(
@@ -83,18 +107,44 @@ pub fn encode(
 
     let mut payload = Vec::with_capacity(4 + kept.len() * (4 + precision.row_bytes(cols)));
     payload.extend_from_slice(&(kept.len() as u32).to_le_bytes());
-    for &r in &kept {
-        payload.extend_from_slice(&r.to_le_bytes());
+    if entropy.varint_indices() {
+        let idx = entropy::encode_indices(&kept);
+        ensure!(
+            idx.len() <= u32::MAX as usize,
+            "varint index block of {} bytes exceeds u32",
+            idx.len()
+        );
+        payload.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+        payload.extend_from_slice(&idx);
+    } else {
+        for &r in &kept {
+            payload.extend_from_slice(&r.to_le_bytes());
+        }
     }
     let mut compact = Vec::with_capacity(kept.len() * cols);
     for &r in &kept {
         compact.extend_from_slice(&data[r as usize * cols..(r as usize + 1) * cols]);
     }
-    quant::encode_rows(&mut payload, &compact, kept.len(), cols, precision);
-    frame::seal(precision.id(), PayloadKind::Sparse, rows, cols, &payload)
+    let mut values = Vec::with_capacity(quant::encoded_len(kept.len(), cols, precision));
+    quant::encode_rows(&mut values, &compact, kept.len(), cols, precision);
+    if entropy.range_values() {
+        payload.extend_from_slice(&entropy::seal_block(&values, precision, cols)?);
+    } else {
+        payload.extend_from_slice(&values);
+    }
+    frame::seal(
+        precision.id(),
+        entropy.id(),
+        PayloadKind::Sparse,
+        rows,
+        cols,
+        &payload,
+    )
 }
 
 /// Decode a sparse frame back into a dense matrix (dropped rows are 0).
+/// The frame header names its precision and entropy mode, so this decodes
+/// every layout [`encode_with`] produces.
 pub fn decode(buf: &[u8]) -> Result<Dense> {
     let (header, payload) = frame::open(buf)?;
     ensure!(
@@ -103,20 +153,56 @@ pub fn decode(buf: &[u8]) -> Result<Dense> {
         header.kind
     );
     let precision = Precision::from_id(header.codec_id)?;
+    let entropy = EntropyMode::from_id(header.entropy_id)?;
     let (rows, cols) = (header.rows as usize, header.cols as usize);
     ensure!(payload.len() >= 4, "sparse payload missing row count");
     let nnz = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
     ensure!(nnz <= rows, "sparse frame claims {nnz} rows of {rows}");
-    let values_at = 4 + nnz * 4;
-    ensure!(
-        payload.len() == values_at + quant::encoded_len(nnz, cols, precision),
-        "sparse payload length mismatch (nnz={nnz}, cols={cols}, {})",
-        precision.name()
-    );
-    let values = quant::decode_rows(&payload[values_at..], nnz, cols, precision)?;
+    let mut pos = 4usize;
+    let indices: Vec<u32> = if entropy.varint_indices() {
+        ensure!(
+            payload.len() >= pos + 4,
+            "sparse payload missing varint index block length"
+        );
+        let idx_len = u32::from_le_bytes(payload[pos..pos + 4].try_into().unwrap()) as usize;
+        pos += 4;
+        ensure!(
+            payload.len() >= pos + idx_len,
+            "sparse varint index block truncated"
+        );
+        let idx = entropy::decode_indices(&payload[pos..pos + idx_len], nnz)?;
+        pos += idx_len;
+        idx
+    } else {
+        ensure!(
+            payload.len() >= pos + nnz * 4,
+            "sparse index block truncated (nnz={nnz})"
+        );
+        let idx = (0..nnz)
+            .map(|i| {
+                u32::from_le_bytes(payload[pos + i * 4..pos + (i + 1) * 4].try_into().unwrap())
+            })
+            .collect();
+        pos += nnz * 4;
+        idx
+    };
+    let raw_len = quant::encoded_len(nnz, cols, precision);
+    let raw;
+    let value_bytes: &[u8] = if entropy.range_values() {
+        raw = entropy::open_block(&payload[pos..], raw_len, precision, cols)?;
+        &raw
+    } else {
+        ensure!(
+            payload.len() == pos + raw_len,
+            "sparse payload length mismatch (nnz={nnz}, cols={cols}, {})",
+            precision.name()
+        );
+        &payload[pos..]
+    };
+    let values = quant::decode_rows(value_bytes, nnz, cols, precision)?;
     let mut data = vec![0.0f32; rows * cols];
-    for i in 0..nnz {
-        let r = u32::from_le_bytes(payload[4 + i * 4..8 + i * 4].try_into().unwrap()) as usize;
+    for (i, &r) in indices.iter().enumerate() {
+        let r = r as usize;
         ensure!(r < rows, "sparse row index {r} out of range ({rows} rows)");
         data[r * cols..(r + 1) * cols].copy_from_slice(&values[i * cols..(i + 1) * cols]);
     }
@@ -247,5 +333,77 @@ mod tests {
         let dec = decode(&buf).unwrap();
         assert_eq!(dec.rows, 0);
         assert!(dec.data.is_empty());
+    }
+
+    #[test]
+    fn every_entropy_mode_decodes_to_identical_matrices() {
+        let data = gradient_like(60, 25, 0.4, 11);
+        for p in [Precision::F64, Precision::F32, Precision::F16, Precision::Int8] {
+            let base = decode(
+                &encode_with(&data, 60, 25, p, EntropyMode::None, &SparsePolicy::default())
+                    .unwrap(),
+            )
+            .unwrap();
+            for e in [EntropyMode::Varint, EntropyMode::Range, EntropyMode::Full] {
+                let frame =
+                    encode_with(&data, 60, 25, p, e, &SparsePolicy::default()).unwrap();
+                let dec = decode(&frame).unwrap();
+                // the entropy layer is transparent: identical decode bits
+                for (a, b) in base.data.iter().zip(&dec.data) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{} {}", p.name(), e.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn varint_indices_shrink_the_frame() {
+        let data = gradient_like(200, 25, 0.3, 12);
+        let plain = encode_with(
+            &data,
+            200,
+            25,
+            Precision::Int8,
+            EntropyMode::None,
+            &SparsePolicy::default(),
+        )
+        .unwrap();
+        let varint = encode_with(
+            &data,
+            200,
+            25,
+            Precision::Int8,
+            EntropyMode::Varint,
+            &SparsePolicy::default(),
+        )
+        .unwrap();
+        // ascending small deltas cost ~1 byte instead of 4 per index
+        assert!(
+            varint.len() < plain.len(),
+            "varint {} !< plain {}",
+            varint.len(),
+            plain.len()
+        );
+    }
+
+    #[test]
+    fn entropy_modes_handle_empty_single_and_all_rows() {
+        for e in [EntropyMode::Varint, EntropyMode::Range, EntropyMode::Full] {
+            // empty matrix
+            let buf = encode_with(&[], 0, 5, Precision::Int8, e, &SparsePolicy::default())
+                .unwrap();
+            assert!(decode(&buf).unwrap().data.is_empty(), "{}", e.name());
+            // single surviving row
+            let one = vec![0.0f32, 0.0, 1.5, -0.5, 0.0, 0.0];
+            let buf =
+                encode_with(&one, 3, 2, Precision::F32, e, &SparsePolicy::default()).unwrap();
+            let dec = decode(&buf).unwrap();
+            assert_eq!(dec.data, one, "{}", e.name());
+            // all rows survive (no zero rows anywhere)
+            let full = gradient_like(30, 8, 0.0, 13);
+            let buf =
+                encode_with(&full, 30, 8, Precision::F32, e, &SparsePolicy::default()).unwrap();
+            assert_eq!(decode(&buf).unwrap().data, full, "{}", e.name());
+        }
     }
 }

@@ -136,6 +136,35 @@ fn train_with_codec_flag() {
 }
 
 #[test]
+fn train_with_entropy_flag() {
+    let (ok, text) = run(&[
+        "train",
+        "--dataset",
+        "synthetic-small",
+        "--backend",
+        "reference",
+        "--codec",
+        "int8",
+        "--entropy",
+        "full",
+        "--iterations",
+        "3",
+        "--set",
+        "dataset.users=48",
+        "--set",
+        "dataset.items=96",
+        "--set",
+        "dataset.interactions=600",
+        "--set",
+        "train.theta=12",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("entropy=full"), "{text}");
+    let (ok, _) = run(&["train", "--entropy", "huffman"]);
+    assert!(!ok, "bad entropy mode must fail");
+}
+
+#[test]
 fn experiments_table1_writes_csv() {
     let dir = std::env::temp_dir().join("fedpayload_cli_t1");
     std::fs::create_dir_all(&dir).unwrap();

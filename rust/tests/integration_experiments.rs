@@ -60,21 +60,40 @@ fn fig3_produces_all_three_curves() {
 }
 
 #[test]
-fn codec_sweep_covers_every_precision() {
+fn codec_sweep_covers_every_precision_and_entropy_mode() {
     let dir = out_dir("codec");
     experiments::codec_sweep(&dir, "movielens", &Scale::smoke(), backend()).unwrap();
     let text = std::fs::read_to_string(dir.join("codec_movielens.csv")).unwrap();
     let lines: Vec<&str> = text.lines().collect();
-    assert_eq!(lines.len(), 1 + experiments::PRECISIONS.len());
-    let mut down_bytes = Vec::new();
+    assert_eq!(
+        lines.len(),
+        1 + experiments::PRECISIONS.len() * experiments::ENTROPY_MODES.len()
+    );
+    let mut plain_down = Vec::new();
     for (i, prec) in experiments::PRECISIONS.iter().enumerate() {
-        let fields: Vec<&str> = lines[1 + i].split(',').collect();
-        assert_eq!(fields[1], *prec, "row order");
-        down_bytes.push(fields[6].parse::<u64>().unwrap());
+        let mut per_mode = Vec::new();
+        for (j, mode) in experiments::ENTROPY_MODES.iter().enumerate() {
+            let fields: Vec<&str> =
+                lines[1 + i * experiments::ENTROPY_MODES.len() + j].split(',').collect();
+            assert_eq!(fields[1], *prec, "row order");
+            assert_eq!(fields[2], *mode, "entropy column");
+            per_mode.push((
+                fields[5].to_string(),              // map
+                fields[7].parse::<u64>().unwrap(),  // down_bytes
+                fields[8].parse::<u64>().unwrap(),  // up_bytes
+            ));
+        }
+        // the entropy layer is lossless: metrics identical across modes
+        assert_eq!(per_mode[0].0, per_mode[1].0, "{prec}: entropy changed metrics");
+        // ... while the measured bytes never grow (uploads strictly
+        // shrink: varint indices alone guarantee it)
+        assert!(per_mode[1].1 <= per_mode[0].1, "{prec}: full grew downloads");
+        assert!(per_mode[1].2 < per_mode[0].2, "{prec}: full did not shrink uploads");
+        plain_down.push(per_mode[0].1);
     }
-    // the ladder must strictly shrink: f64 > f32 > f16 > int8
-    for w in down_bytes.windows(2) {
-        assert!(w[0] > w[1], "codec ladder not shrinking: {down_bytes:?}");
+    // the precision ladder must strictly shrink: f64 > f32 > f16 > int8
+    for w in plain_down.windows(2) {
+        assert!(w[0] > w[1], "codec ladder not shrinking: {plain_down:?}");
     }
     std::fs::remove_dir_all(&dir).ok();
 }

@@ -6,7 +6,7 @@
 
 use fedpayload::config::{RunConfig, Strategy};
 use fedpayload::server::Trainer;
-use fedpayload::wire::{encoded_dense_len, Precision};
+use fedpayload::wire::{encoded_dense_len, EntropyMode, Precision};
 
 fn base_cfg() -> RunConfig {
     let mut cfg = RunConfig::paper_defaults();
@@ -136,6 +136,114 @@ fn upload_topk_sparsification_cuts_upload_traffic_only() {
         topk.ledger.up_bytes,
         dense.ledger.up_bytes
     );
+}
+
+/// The synthetic e2e workload for the entropy-layer tests: int8 frames
+/// large enough (M_s = 128 rows × K = 25) that per-frame entropy savings
+/// are measurable, with `Full` selection so item choice and participant
+/// sampling are byte-identical across entropy modes.
+fn entropy_cfg(entropy: EntropyMode) -> RunConfig {
+    let mut cfg = base_cfg();
+    cfg.dataset.users = 64;
+    cfg.dataset.items = 128;
+    cfg.dataset.interactions = 2500;
+    cfg.train.iterations = 12;
+    cfg.train.theta = 32;
+    cfg.train.payload_fraction = 1.0;
+    cfg.bandit.strategy = Strategy::Full;
+    cfg.codec.precision = Precision::Int8;
+    cfg.codec.entropy = entropy;
+    cfg
+}
+
+#[test]
+fn entropy_layer_is_bitwise_transparent_to_training() {
+    let plain = run(&entropy_cfg(EntropyMode::None));
+    let full = run(&entropy_cfg(EntropyMode::Full));
+    // lossless layer -> the decoded factors every round are identical,
+    // so the entire training trajectory matches bit for bit
+    assert_eq!(plain.entropy, "none");
+    assert_eq!(full.entropy, "full");
+    assert_eq!(
+        plain.final_metrics.map.to_bits(),
+        full.final_metrics.map.to_bits(),
+        "entropy coding changed training"
+    );
+    assert_eq!(plain.history.len(), full.history.len());
+    for (a, b) in plain.history.iter().zip(&full.history) {
+        assert_eq!(a.m_s, b.m_s);
+        assert_eq!(a.raw.map.to_bits(), b.raw.map.to_bits(), "iter {}", a.iter);
+        assert_eq!(a.smoothed.f1.to_bits(), b.smoothed.f1.to_bits());
+    }
+    // ... while moving strictly fewer measured bytes in BOTH directions
+    assert_eq!(plain.ledger.down_msgs, full.ledger.down_msgs);
+    assert_eq!(plain.ledger.up_msgs, full.ledger.up_msgs);
+    assert!(
+        full.ledger.down_bytes < plain.ledger.down_bytes,
+        "full {} !< plain {} download bytes",
+        full.ledger.down_bytes,
+        plain.ledger.down_bytes
+    );
+    assert!(
+        full.ledger.up_bytes < plain.ledger.up_bytes,
+        "full {} !< plain {} upload bytes",
+        full.ledger.up_bytes,
+        plain.ledger.up_bytes
+    );
+}
+
+#[test]
+fn range_coded_int8_downloads_are_strictly_smaller_than_plain_int8() {
+    let plain = run(&entropy_cfg(EntropyMode::None));
+    let range = run(&entropy_cfg(EntropyMode::Range));
+    assert_eq!(plain.ledger.down_msgs, range.ledger.down_msgs);
+    assert!(
+        range.ledger.down_bytes < plain.ledger.down_bytes,
+        "range-coded int8 downloads {} !< plain {}",
+        range.ledger.down_bytes,
+        plain.ledger.down_bytes
+    );
+}
+
+#[test]
+fn full_entropy_cuts_int8_upload_bytes_by_at_least_8pct() {
+    // varint indices alone replace 4 bytes/row with ~1 byte/row (~9.5% of
+    // the m_s=128 frame); range coding the f16 row scales adds more
+    let plain = run(&entropy_cfg(EntropyMode::None));
+    let full = run(&entropy_cfg(EntropyMode::Full));
+    let cut = 1.0 - full.ledger.up_bytes as f64 / plain.ledger.up_bytes as f64;
+    assert!(
+        cut >= 0.08,
+        "entropy=full cut int8 uploads by only {:.1}% ({} vs {})",
+        cut * 100.0,
+        full.ledger.up_bytes,
+        plain.ledger.up_bytes
+    );
+}
+
+#[test]
+fn entropy_runs_are_thread_count_invariant() {
+    // 2 batches per round (theta = 128 > B = 64) so the parallel lanes
+    // actually race while the entropy codec rides the upload path
+    let workload = |threads: usize| {
+        let mut cfg = entropy_cfg(EntropyMode::Full);
+        cfg.dataset.users = 160;
+        cfg.dataset.interactions = 5000;
+        cfg.train.theta = 128;
+        cfg.train.iterations = 6;
+        cfg.runtime.threads = threads;
+        run(&cfg)
+    };
+    let t1 = workload(1);
+    let t4 = workload(4);
+    assert_eq!(
+        t1.final_metrics.map.to_bits(),
+        t4.final_metrics.map.to_bits(),
+        "threads=4 diverged from threads=1 under entropy coding"
+    );
+    assert_eq!(t1.ledger.down_bytes, t4.ledger.down_bytes);
+    assert_eq!(t1.ledger.up_bytes, t4.ledger.up_bytes);
+    assert_eq!(t1.ledger.sim_secs.to_bits(), t4.ledger.sim_secs.to_bits());
 }
 
 #[test]

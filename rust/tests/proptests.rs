@@ -14,7 +14,9 @@ use fedpayload::reward::RewardEngine;
 use fedpayload::rng::Rng;
 use fedpayload::runtime::{merge_outcomes, plan_chunks, BatchOutcome, RoundAggregate};
 use fedpayload::simnet::TrafficLedger;
-use fedpayload::wire::{self, make_codec, Precision, SparsePolicy};
+use fedpayload::wire::{
+    self, entropy, make_codec, make_codec_with, EntropyMode, Precision, SparsePolicy,
+};
 
 const CASES: u64 = 60;
 
@@ -365,6 +367,120 @@ fn prop_sparse_topk_keeps_largest_rows() {
                 "seed {seed}: kept norm {min_kept} < dropped {max_dropped}"
             );
         }
+    }
+}
+
+/// Property: varint index coding is the identity for random sparse index
+/// sets — empty, single, dense-ascending (all rows) and arbitrary sorted
+/// subsets alike — and the block is consumed exactly.
+#[test]
+fn prop_entropy_varint_index_roundtrip() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(30_000 + seed);
+        let rows = 1 + rng.below(3000);
+        let idx: Vec<u32> = match seed % 4 {
+            0 => Vec::new(),                          // empty set
+            1 => vec![rng.below(rows) as u32],        // single row
+            2 => (0..rows as u32).collect(),          // all rows survive
+            _ => {
+                let mut v: Vec<u32> = (0..rows as u32)
+                    .filter(|_| rng.chance(0.3))
+                    .collect();
+                v.dedup();
+                v
+            }
+        };
+        let buf = entropy::encode_indices(&idx);
+        let dec = entropy::decode_indices(&buf, idx.len()).unwrap();
+        assert_eq!(dec, idx, "seed {seed}");
+        // ascending deltas below 2^14 cost at most 2 bytes per index
+        assert!(buf.len() <= idx.len() * 2 + 2, "seed {seed}: {} bytes", buf.len());
+    }
+}
+
+/// Property: the adaptive range coder is the identity on random int8
+/// frame payloads (uniform, skewed, constant), for every byte-role
+/// pattern, including the empty payload.
+#[test]
+fn prop_entropy_range_roundtrip_identity() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(31_000 + seed);
+        let n = rng.below(2500); // 0 included
+        let data: Vec<u8> = match seed % 3 {
+            0 => (0..n).map(|_| rng.below(256) as u8).collect(),
+            1 => (0..n)
+                .map(|_| if rng.chance(0.8) { 0 } else { rng.below(256) as u8 })
+                .collect(),
+            _ => vec![rng.below(256) as u8; n],
+        };
+        let p = [Precision::F64, Precision::F32, Precision::F16, Precision::Int8]
+            [rng.below(4)];
+        let cols = 1 + rng.below(40);
+        let enc = entropy::range_encode(&data, p, cols);
+        let dec = entropy::range_decode(&enc, data.len(), p, cols).unwrap();
+        assert_eq!(dec, data, "seed {seed} {} cols={cols}", p.name());
+    }
+}
+
+/// Property: the entropy layer is **transparent** — for every precision,
+/// entropy mode, and sparsification policy, an entropy-coded frame
+/// decodes to exactly the bytes (f32 bit patterns) the plain frame
+/// decodes to, dense and sparse alike.
+#[test]
+fn prop_entropy_modes_are_lossless_relative_to_plain() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(32_000 + seed);
+        let rows = 1 + rng.below(50);
+        let cols = 1 + rng.below(30);
+        let data = random_matrix(&mut rng, rows, cols);
+        let policy = SparsePolicy {
+            top_k: if rng.chance(0.5) { rng.below(rows + 1) } else { 0 },
+            threshold: if rng.chance(0.3) { 0.01 } else { 0.0 },
+        };
+        let p = [Precision::F64, Precision::F32, Precision::F16, Precision::Int8]
+            [rng.below(4)];
+        let plain = make_codec(p);
+        let base_dense = plain
+            .decode_dense(&plain.encode_dense(&data, rows, cols).unwrap())
+            .unwrap();
+        let base_sparse = plain
+            .decode_sparse(&plain.encode_sparse(&data, rows, cols, &policy).unwrap())
+            .unwrap();
+        for e in [EntropyMode::Varint, EntropyMode::Range, EntropyMode::Full] {
+            let codec = make_codec_with(p, e);
+            let dense = codec
+                .decode_dense(&codec.encode_dense(&data, rows, cols).unwrap())
+                .unwrap();
+            let sparse = codec
+                .decode_sparse(&codec.encode_sparse(&data, rows, cols, &policy).unwrap())
+                .unwrap();
+            for (a, b) in base_dense.data.iter().zip(&dense.data) {
+                let (x, y) = (a.to_bits(), b.to_bits());
+                assert_eq!(x, y, "seed {seed} dense {} {}", p.name(), e.name());
+            }
+            for (a, b) in base_sparse.data.iter().zip(&sparse.data) {
+                let (x, y) = (a.to_bits(), b.to_bits());
+                assert_eq!(x, y, "seed {seed} sparse {} {}", p.name(), e.name());
+            }
+        }
+    }
+}
+
+/// Property: entropy-coded frame corruption (single flipped byte) is
+/// detected by the frame checksum before entropy decode runs.
+#[test]
+fn prop_entropy_frame_corruption_detected() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(33_000 + seed);
+        let rows = 1 + rng.below(20);
+        let cols = 1 + rng.below(20);
+        let data = random_matrix(&mut rng, rows, cols);
+        let codec = make_codec_with(Precision::Int8, EntropyMode::Full);
+        let frame = codec.encode_dense(&data, rows, cols).unwrap();
+        let mut bad = frame.clone();
+        let i = rng.below(bad.len());
+        bad[i] ^= 1 << rng.below(8);
+        assert!(codec.decode_dense(&bad).is_err(), "seed {seed} flip at {i}");
     }
 }
 
