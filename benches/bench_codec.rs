@@ -1,10 +1,14 @@
 //! Encode/decode throughput of the wire payload codecs at Last-FM scale
 //! (M_s = 1763 selected items × K = 25 at 90% reduction), plus the sparse
-//! upload path and the entropy-coding legs (`wire::entropy`). Prints
-//! frame sizes and compression ratios next to the timings so the
-//! bandwidth/CPU trade-off of each precision × entropy mode is one read,
-//! and writes `BENCH_codec.json` (path overridable via
-//! `FEDPAYLOAD_BENCH_CODEC_JSON`) so CI can archive the perf trajectory.
+//! upload path, the entropy-coding legs (`wire::entropy`) and the
+//! product-quantized download codecs (`wire::vq` — their encode numbers
+//! include the per-frame seeded k-means). Prints frame sizes and
+//! compression ratios next to the timings so the bandwidth/CPU trade-off
+//! of each precision × entropy mode is one read, and writes
+//! `BENCH_codec.json` (path overridable via `FEDPAYLOAD_BENCH_CODEC_JSON`)
+//! so CI can archive the perf trajectory — and gate on it: the
+//! `bench-gate` CI job diffs the frame-byte columns against
+//! `ci/BENCH_codec_baseline.json` and fails on a >3% regression.
 
 use fedpayload::rng::Rng;
 use fedpayload::telemetry::bench;
@@ -33,7 +37,15 @@ fn main() {
     let mut results: Vec<Row> = Vec::new();
 
     println!("=== dense download frames ({rows} x {cols}) ===");
-    for p in [Precision::F64, Precision::F32, Precision::F16, Precision::Int8] {
+    for p in [
+        Precision::F64,
+        Precision::F32,
+        Precision::F16,
+        Precision::Int8,
+        Precision::Vq8,
+        Precision::Vq4,
+        Precision::Vq8r,
+    ] {
         let mut plain_len = 0usize;
         for e in [EntropyMode::None, EntropyMode::Range] {
             let codec = make_codec_with(p, e);
@@ -80,6 +92,7 @@ fn main() {
             SparsePolicy {
                 top_k: rows / 10,
                 threshold: 0.0,
+                auto_topk: false,
             },
         ),
     ] {

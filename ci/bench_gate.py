@@ -1,0 +1,77 @@
+#!/usr/bin/env python3
+"""Payload-regression gate over bench_codec's measured frame lengths.
+
+Compares the frame-byte column of a freshly generated BENCH_codec.json
+against the committed baseline (ci/BENCH_codec_baseline.json) and fails
+when any encoded frame grew by more than the tolerance (default 3%).
+
+Frame lengths are deterministic — the bench workload is PCG-seeded and
+the codecs are pure functions of the data — so this is a real gate, not
+a flaky perf assertion: the tolerance only absorbs deliberate small
+format evolutions, and throughput numbers are ignored entirely (they
+belong to the bench-smoke artifacts, not a gate).
+
+Usage: ci/bench_gate.py <current.json> <baseline.json> [tolerance]
+
+Exit status: 0 = no regression, 1 = regression or missing rows.
+"""
+
+import json
+import sys
+
+
+def main() -> int:
+    if len(sys.argv) < 3:
+        print(__doc__)
+        return 1
+    current_path, baseline_path = sys.argv[1], sys.argv[2]
+    tolerance = float(sys.argv[3]) if len(sys.argv) > 3 else 0.03
+
+    with open(current_path) as f:
+        current = {r["name"]: r for r in json.load(f)["results"]}
+    with open(baseline_path) as f:
+        baseline_doc = json.load(f)
+    baseline = {r["name"]: r for r in baseline_doc["results"]}
+
+    failures = []
+    improvements = []
+    for name, base in sorted(baseline.items()):
+        cur = current.get(name)
+        if cur is None:
+            failures.append(f"{name}: missing from current bench output")
+            continue
+        b, c = base["frame_bytes"], cur["frame_bytes"]
+        limit = b * (1.0 + tolerance)
+        status = "ok"
+        if c > limit:
+            status = "REGRESSION"
+            failures.append(
+                f"{name}: {c} bytes > baseline {b} (+{100.0 * (c - b) / b:.2f}%, "
+                f"tolerance {100.0 * tolerance:.0f}%)"
+            )
+        elif c < b * (1.0 - tolerance):
+            status = "improved"
+            improvements.append(f"{name}: {b} -> {c} bytes")
+        print(f"  {name:<32} baseline={b:>8} current={c:>8}  {status}")
+
+    extra = sorted(set(current) - set(baseline))
+    if extra:
+        print(f"note: {len(extra)} bench rows not in the baseline (new legs?): "
+              + ", ".join(extra))
+    if improvements:
+        print(f"note: {len(improvements)} rows improved beyond tolerance — "
+              "consider refreshing ci/BENCH_codec_baseline.json to lock in the win:")
+        for line in improvements:
+            print(f"  {line}")
+    if failures:
+        print("\nPAYLOAD REGRESSION:")
+        for line in failures:
+            print(f"  {line}")
+        return 1
+    print("\nbench-gate: no payload regression "
+          f"({len(baseline)} rows within {100.0 * tolerance:.0f}%)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

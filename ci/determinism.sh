@@ -1,0 +1,81 @@
+#!/usr/bin/env bash
+# Determinism contract checks, runnable locally and in CI.
+#
+# Proves, on the synthetic-small e2e workload:
+#   1. threads = 1 trains bit-identically across repeat runs (no
+#      nondeterminism unrelated to threading),
+#   2. threads = 4 trains bit-identically to threads = 1 (the fleet
+#      executor's batch-order merge contract), for the f32, int8+full
+#      and vq8+full codecs,
+#   3. the entropy layer changes only measured bytes, never training:
+#      the metric columns of an int8+full (resp. vq8+full) round dump
+#      equal its own plain int8 (resp. plain vq8) dump,
+#   4. the byte ladder: entropy coding strictly shrinks int8 downloads,
+#      and the vq8 quantizer lands strictly under int8 — plain vs plain
+#      and full vs full (the PR acceptance comparison).
+#
+# Usage:  ci/determinism.sh [workdir]
+#   BIN=path/to/fedpayload overrides the binary (default:
+#   target/release/fedpayload relative to the repo root).
+
+set -euo pipefail
+
+REPO_ROOT="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
+BIN="${BIN:-$REPO_ROOT/target/release/fedpayload}"
+BIN="$(cd "$(dirname "$BIN")" && pwd)/$(basename "$BIN")"
+WORKDIR="${1:-$(mktemp -d)}"
+mkdir -p "$WORKDIR"
+cd "$WORKDIR"
+echo "determinism workdir: $WORKDIR (binary: $BIN)"
+
+ARGS=(train --dataset synthetic-small --backend reference
+      --iterations 8 --payload-fraction 0.25 --seed 2027
+      --set dataset.users=192 --set dataset.items=256
+      --set dataset.interactions=6000 --set train.theta=160
+      --set train.eval_every=2)
+
+run() { # run <dump-file> [extra args...]
+  local dump="$1"; shift
+  "$BIN" "${ARGS[@]}" "$@" --dump-rounds "$dump" >/dev/null
+  echo "  ran: $dump ($*)"
+}
+
+metrics_cols() { grep -v '^totals' "$1" | cut -d, -f1-10; }
+down_bytes()   { grep '^totals' "$1" | sed 's/.*down_bytes=\([0-9]*\).*/\1/'; }
+
+echo "== running the e2e legs =="
+run rounds_t1_a.csv         --threads 1
+run rounds_t1_b.csv         --threads 1
+run rounds_t4.csv           --threads 4
+run rounds_int8_full_t1.csv --codec int8 --entropy full --threads 1
+run rounds_int8_full_t4.csv --codec int8 --entropy full --threads 4
+run rounds_int8_plain.csv   --codec int8 --threads 1
+run rounds_vq8_full_t1.csv  --codec vq8 --entropy full --threads 1
+run rounds_vq8_full_t4.csv  --codec vq8 --entropy full --threads 4
+run rounds_vq8_plain.csv    --codec vq8 --threads 1
+
+echo "== 1+2: round records must be bit-identical across runs and thread counts =="
+diff rounds_t1_a.csv rounds_t1_b.csv
+diff rounds_t1_a.csv rounds_t4.csv
+diff rounds_int8_full_t1.csv rounds_int8_full_t4.csv
+diff rounds_vq8_full_t1.csv rounds_vq8_full_t4.csv
+echo "   ok"
+
+echo "== 3: entropy coding must not change training, only bytes =="
+diff <(metrics_cols rounds_int8_plain.csv) <(metrics_cols rounds_int8_full_t1.csv)
+diff <(metrics_cols rounds_vq8_plain.csv) <(metrics_cols rounds_vq8_full_t1.csv)
+echo "   ok"
+
+echo "== 4: the download byte ladder =="
+INT8_PLAIN=$(down_bytes rounds_int8_plain.csv)
+INT8_FULL=$(down_bytes rounds_int8_full_t1.csv)
+VQ8_PLAIN=$(down_bytes rounds_vq8_plain.csv)
+VQ8_FULL=$(down_bytes rounds_vq8_full_t1.csv)
+echo "   down_bytes: int8=$INT8_PLAIN int8+full=$INT8_FULL vq8=$VQ8_PLAIN vq8+full=$VQ8_FULL"
+test "$INT8_FULL" -lt "$INT8_PLAIN"   # entropy shrinks int8 downloads
+test "$VQ8_PLAIN" -lt "$INT8_PLAIN"   # the vq quantizer lands under int8
+test "$VQ8_FULL"  -lt "$INT8_FULL"    # ... and stays under with entropy on (acceptance)
+test "$VQ8_FULL"  -lt "$VQ8_PLAIN"    # low-entropy indices: range coding bites on vq
+echo "   ok"
+
+echo "determinism: all checks passed"

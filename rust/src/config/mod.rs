@@ -169,10 +169,13 @@ pub struct TrainConfig {
 /// axis; see the `wire` module). Defaults preserve exact f32 round-trips.
 #[derive(Debug, Clone)]
 pub struct CodecConfig {
-    /// Element precision on the wire: `f64 | f32 | f16 | int8`. The model
-    /// is f32 in memory, so `f32` is lossless; `f64` reproduces the
-    /// paper's Table 1 64-bit accounting; `f16`/`int8` trade bounded
-    /// quantization error for 2×/~3.7× smaller frames.
+    /// Precision on the wire: `f64 | f32 | f16 | int8 | vq8 | vq4 |
+    /// vq8r`. The model is f32 in memory, so `f32` is lossless; `f64`
+    /// reproduces the paper's Table 1 64-bit accounting; `f16`/`int8`
+    /// trade bounded quantization error for 2×/~3.7× smaller frames;
+    /// the `vq*` modes product-quantize dense downloads against a
+    /// per-round codebook (`wire::vq`) for a further ~3.4× under int8,
+    /// with uploads falling back to int8 value planes.
     pub precision: crate::wire::Precision,
     /// Lossless entropy coding on top of the quantizer:
     /// `none | varint | range | full` (varint = delta+LEB128 sparse
@@ -183,6 +186,11 @@ pub struct CodecConfig {
     /// Upload top-k sparsification: keep only the k largest-norm gradient
     /// rows per upload (0 = keep all nonzero rows).
     pub sparse_topk: usize,
+    /// `--sparse-topk auto`: tune the upload top-k per frame from the
+    /// measured encoded-bytes and retained-energy curves instead of a
+    /// fixed count (`wire::sparse::auto_top_k`). Mutually exclusive
+    /// with a nonzero `sparse_topk`.
+    pub sparse_topk_auto: bool,
     /// Drop upload rows with L2 norm ≤ this threshold (0.0 = drop only
     /// exactly-zero rows, which is lossless).
     pub sparse_threshold: f64,
@@ -292,6 +300,7 @@ impl RunConfig {
                 precision: crate::wire::Precision::F32,
                 entropy: crate::wire::EntropyMode::None,
                 sparse_topk: 0,
+                sparse_topk_auto: false,
                 sparse_threshold: 0.0,
             },
             simnet: SimNetConfig {
@@ -434,6 +443,11 @@ impl RunConfig {
         }
         take!("codec.sparse_topk", cfg.codec.sparse_topk, as_usize);
         take!(
+            "codec.sparse_topk_auto",
+            cfg.codec.sparse_topk_auto,
+            as_bool
+        );
+        take!(
             "codec.sparse_threshold",
             cfg.codec.sparse_threshold,
             as_f64
@@ -482,6 +496,13 @@ impl RunConfig {
             bail!(
                 "codec.sparse_threshold must be a finite value >= 0, got {}",
                 self.codec.sparse_threshold
+            );
+        }
+        if self.codec.sparse_topk_auto && self.codec.sparse_topk > 0 {
+            bail!(
+                "codec.sparse_topk_auto and a fixed codec.sparse_topk ({}) are mutually \
+                 exclusive — pick one",
+                self.codec.sparse_topk
             );
         }
         match self.runtime.backend.as_str() {
@@ -602,7 +623,30 @@ mod tests {
         assert_eq!(c.codec.precision, crate::wire::Precision::F32);
         assert_eq!(c.codec.entropy, crate::wire::EntropyMode::None);
         assert_eq!(c.codec.sparse_topk, 0);
+        assert!(!c.codec.sparse_topk_auto);
         assert_eq!(c.codec.sparse_threshold, 0.0);
+    }
+
+    #[test]
+    fn vq_precisions_parse_via_config() {
+        for (name, p) in [
+            ("vq8", crate::wire::Precision::Vq8),
+            ("vq4", crate::wire::Precision::Vq4),
+            ("vq8r", crate::wire::Precision::Vq8r),
+        ] {
+            let cfg =
+                RunConfig::from_toml_str(&format!("[codec]\nprecision = \"{name}\"\n")).unwrap();
+            assert_eq!(cfg.codec.precision, p);
+        }
+        assert!(RunConfig::from_toml_str("[codec]\nprecision = \"vq9\"\n").is_err());
+    }
+
+    #[test]
+    fn sparse_topk_auto_parses_and_excludes_fixed_topk() {
+        let cfg = RunConfig::from_toml_str("[codec]\nsparse_topk_auto = true\n").unwrap();
+        assert!(cfg.codec.sparse_topk_auto);
+        let both = "[codec]\nsparse_topk_auto = true\nsparse_topk = 8\n";
+        assert!(RunConfig::from_toml_str(both).is_err());
     }
 
     #[test]

@@ -45,8 +45,13 @@ pub const REDUCTIONS_PCT: &[u32] = &[25, 50, 75, 80, 85, 90, 95, 98];
 pub const DATASETS: &[&str] = &["movielens", "lastfm", "mind"];
 
 /// Wire-codec precisions swept by [`codec_sweep`] (the second payload
-/// axis, orthogonal to the bandit's M_s selection).
-pub const PRECISIONS: &[&str] = &["f64", "f32", "f16", "int8"];
+/// axis, orthogonal to the bandit's M_s selection). Ordered by dense
+/// download frame size, largest first — the `codec_sweep` integration
+/// test asserts the ladder strictly shrinks in this order, and
+/// `ci/determinism.sh` pins the vq8-vs-int8 rungs end-to-end. `vq8r`
+/// (the vq quality knob, int8-class size) stays out of the default
+/// grid to keep the sweep affordable.
+pub const PRECISIONS: &[&str] = &["f64", "f32", "f16", "int8", "vq8", "vq4"];
 
 /// Entropy modes swept by [`codec_sweep`] per precision. `full` (varint
 /// indices + range-coded bytes) subsumes the single-transform modes;

@@ -32,7 +32,9 @@
 //! direction, reduced along three orthogonal, multiplying axes:
 //!
 //! 1. **Item selection** (the paper): the bandit picks M_s ≪ M rows.
-//! 2. **Element codec** ([`wire::quant`]): f64/f32/f16/int8 per element.
+//! 2. **Quantizer** ([`wire::quant`] + [`wire::vq`]): scalar
+//!    f64/f32/f16/int8 per element, or product quantization against a
+//!    per-round in-frame codebook (`vq8`/`vq4`/`vq8r`) for downloads.
 //! 3. **Entropy coding** ([`wire::entropy`]): lossless varint + range
 //!    coding under the frame checksum.
 //!

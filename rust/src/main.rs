@@ -32,7 +32,8 @@ fedpayload — payload-optimized federated recommender (FCF-BTS, RecSys'21)
 USAGE:
   fedpayload train [--dataset <preset>] [--strategy <s>] [--iterations N]
                    [--payload-fraction F] [--theta N] [--seed N]
-                   [--codec f64|f32|f16|int8] [--sparse-topk N]
+                   [--codec f64|f32|f16|int8|vq8|vq4|vq8r]
+                   [--sparse-topk N|auto]
                    [--entropy none|varint|range|full]
                    [--threads N] [--backend pjrt|reference]
                    [--config file.toml] [--set path=value ...]
@@ -44,13 +45,19 @@ USAGE:
   fedpayload help
 
   (--precision is an alias for --codec; `--set codec.sparse_threshold=X`
-   tunes the upload sparsifier. --entropy layers lossless entropy coding
-   under the frame checksum: varint-coded sparse indices and/or
-   range-coded payload bytes — decoded payloads are bit-identical to
-   --entropy none, only the measured frame bytes shrink. --threads N runs
-   each round's client batches on N parallel lanes — bit-identical
-   results for any N; the determinism CI job diffs --dump-rounds records
-   to enforce it, including an int8+full entropy leg.)
+   tunes the upload sparsifier. The vq8|vq4|vq8r codecs product-quantize
+   dense Q* downloads against a per-round codebook learned on the
+   coordinator — uploads fall back to int8 rows. --sparse-topk auto
+   picks the upload top-k per frame from the measured encoded-bytes +
+   retained-energy curves instead of a fixed count. --entropy layers
+   lossless entropy coding under the frame checksum: varint-coded sparse
+   indices and/or range-coded payload bytes — decoded payloads are
+   bit-identical to --entropy none, only the measured frame bytes shrink
+   (codebook indices are low-entropy, so vq is where range coding bites
+   on downloads). --threads N runs each round's client batches on N
+   parallel lanes — bit-identical results for any N; ci/determinism.sh
+   diffs --dump-rounds records to enforce it, including int8+full and
+   vq8+full legs.)
 ";
 
 fn main() -> ExitCode {
@@ -130,8 +137,18 @@ fn resolve_config(args: &Args) -> Result<RunConfig> {
     if let Some(e) = args.opt("entropy") {
         cfg.codec.entropy = fedpayload::wire::EntropyMode::parse(e)?;
     }
-    if let Some(k) = args.opt_parse::<usize>("sparse-topk")? {
-        cfg.codec.sparse_topk = k;
+    match args.opt("sparse-topk") {
+        Some("auto") => {
+            cfg.codec.sparse_topk_auto = true;
+            cfg.codec.sparse_topk = 0;
+        }
+        Some(k) => {
+            cfg.codec.sparse_topk = k
+                .parse::<usize>()
+                .map_err(|e| anyhow::anyhow!("--sparse-topk `{k}`: {e} (or `auto`)"))?;
+            cfg.codec.sparse_topk_auto = false;
+        }
+        None => {}
     }
     cfg.validate()?;
     Ok(cfg)
@@ -277,11 +294,15 @@ fn cmd_info(args: &Args) -> Result<()> {
         "  train              = {} iters, theta={}, payload_fraction={}",
         cfg.train.iterations, cfg.train.theta, cfg.train.payload_fraction
     );
+    let topk = if cfg.codec.sparse_topk_auto {
+        "auto".to_string()
+    } else {
+        cfg.codec.sparse_topk.to_string()
+    };
     println!(
-        "  codec              = {} (entropy={}, sparse_topk={}, sparse_threshold={})",
+        "  codec              = {} (entropy={}, sparse_topk={topk}, sparse_threshold={})",
         cfg.codec.precision.name(),
         cfg.codec.entropy.name(),
-        cfg.codec.sparse_topk,
         cfg.codec.sparse_threshold
     );
     println!("  backend            = {}", cfg.runtime.backend);

@@ -54,6 +54,13 @@
 //! by B). This discharges the ROADMAP follow-up on per-client upload
 //! attribution for the lossless-length modes and documents the
 //! approximation the entropy modes introduce.
+//!
+//! Under the `vq*` download codecs the upload value plane is int8
+//! (`Precision::for_uploads` — a per-frame codebook has nothing to
+//! amortize over on a one-shot uplink), so everything above applies
+//! unchanged; the `--sparse-topk auto` tuner is likewise a pure
+//! function of the batch gradient, so workers resolve it independently
+//! without touching the determinism contract.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 #[cfg(feature = "parallel")]

@@ -224,6 +224,7 @@ impl Trainer {
             sparse: SparsePolicy {
                 top_k: cfg.codec.sparse_topk,
                 threshold: cfg.codec.sparse_threshold as f32,
+                auto_topk: cfg.codec.sparse_topk_auto,
             },
             adam: Adam::new(m, &cfg.model),
             sel_pos: vec![-1; m],

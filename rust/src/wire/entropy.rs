@@ -199,21 +199,91 @@ fn new_tree() -> BitTree {
     vec![PROB_INIT; 256]
 }
 
-/// Byte-role pattern of one encoded row: which probability tree each byte
-/// position trains. Int8 rows are `[scale-lo, scale-hi, cols × value]`;
-/// float rows cycle through their element's byte positions.
-fn role_pattern(precision: Precision, cols: usize) -> (Vec<u8>, usize) {
-    match precision {
-        Precision::Int8 => {
-            let mut pat = Vec::with_capacity(cols + 2);
-            pat.push(0);
-            pat.push(1);
-            pat.resize(cols + 2, 2);
-            (pat, 3)
+/// Byte-role assignment of one encoded payload: which probability tree
+/// each byte position trains. Scalar payloads are purely cyclic — int8
+/// rows are `[scale-lo, scale-hi, cols × value]`, float rows cycle
+/// through their element's byte positions. The vq payloads add a
+/// **prefix segment** for the per-frame codebook block (scales +
+/// entries share one tree), then cycle per row record: f16 row-scale
+/// roles, one role per index byte position, and — for `vq8r` — residual
+/// scale/value roles. Keeping the planes in separate trees is what lets
+/// the near-uniform codebook bytes coexist with the low-entropy index
+/// plane without diluting either model.
+struct RoleMap {
+    /// The first `prefix_len` bytes all train tree 0 (the vq codebook
+    /// block; zero for scalar precisions).
+    prefix_len: usize,
+    /// Role of each byte position inside a row record, cycled.
+    cycle: Vec<u8>,
+    /// Total number of probability trees.
+    n_roles: usize,
+}
+
+impl RoleMap {
+    /// Role map of a payload of `precision` with `cols`-wide rows.
+    /// `rows` sizes the vq codebook prefix (ignored for scalar
+    /// precisions, where the payload is purely cyclic).
+    fn new(precision: Precision, cols: usize, rows: usize) -> RoleMap {
+        match precision {
+            Precision::Int8 => {
+                let mut cycle = Vec::with_capacity(cols + 2);
+                cycle.push(0);
+                cycle.push(1);
+                cycle.resize(cols + 2, 2);
+                RoleMap {
+                    prefix_len: 0,
+                    cycle,
+                    n_roles: 3,
+                }
+            }
+            Precision::F16 => RoleMap {
+                prefix_len: 0,
+                cycle: vec![0, 1],
+                n_roles: 2,
+            },
+            Precision::F32 => RoleMap {
+                prefix_len: 0,
+                cycle: vec![0, 1, 2, 3],
+                n_roles: 4,
+            },
+            Precision::F64 => RoleMap {
+                prefix_len: 0,
+                cycle: (0..8).collect(),
+                n_roles: 8,
+            },
+            Precision::Vq8 | Precision::Vq4 | Precision::Vq8r => {
+                let ib = super::vq::index_bytes(precision, cols);
+                // roles: 0 codebook block, 1/2 row-scale bytes, then one
+                // per index byte position (capped to keep roles compact)
+                let mut cycle = vec![1u8, 2];
+                let idx_roles = ib.min(200);
+                for j in 0..ib {
+                    cycle.push(3 + (j % idx_roles.max(1)) as u8);
+                }
+                let mut n = 3 + idx_roles.max(1);
+                if precision == Precision::Vq8r {
+                    let (rs_lo, rs_hi, rv) = (n as u8, n as u8 + 1, n as u8 + 2);
+                    cycle.push(rs_lo);
+                    cycle.push(rs_hi);
+                    cycle.resize(cycle.len() + cols, rv);
+                    n += 3;
+                }
+                RoleMap {
+                    prefix_len: super::vq::prefix_len(precision, rows, cols),
+                    cycle,
+                    n_roles: n,
+                }
+            }
         }
-        Precision::F16 => (vec![0, 1], 2),
-        Precision::F32 => (vec![0, 1, 2, 3], 4),
-        Precision::F64 => ((0..8).collect(), 8),
+    }
+
+    /// Tree index of byte position `i`.
+    fn role(&self, i: usize) -> usize {
+        if i < self.prefix_len {
+            0
+        } else {
+            self.cycle[(i - self.prefix_len) % self.cycle.len()] as usize
+        }
     }
 }
 
@@ -344,39 +414,40 @@ impl<'a> RangeDecoder<'a> {
     }
 }
 
-/// Range-code a quantized payload. `precision` and `cols` only select the
-/// byte-role pattern (which adaptive tree each byte trains); the bytes
-/// themselves are copied verbatim into the model, so the transform is
-/// lossless for any input.
-pub fn range_encode(payload: &[u8], precision: Precision, cols: usize) -> Vec<u8> {
-    let (pattern, n_roles) = role_pattern(precision, cols);
-    let mut trees: Vec<BitTree> = (0..n_roles).map(|_| new_tree()).collect();
+/// Range-code a quantized payload. `precision`, `cols` and `rows` only
+/// select the byte-role map (which adaptive tree each byte trains —
+/// `rows` sizes the vq codebook prefix and is ignored for the scalar
+/// precisions); the bytes themselves are copied verbatim into the
+/// model, so the transform is lossless for any input.
+pub fn range_encode(payload: &[u8], precision: Precision, cols: usize, rows: usize) -> Vec<u8> {
+    let roles = RoleMap::new(precision, cols, rows);
+    let mut trees: Vec<BitTree> = (0..roles.n_roles).map(|_| new_tree()).collect();
     let mut enc = RangeEncoder::new(payload.len() / 2 + 16);
     for (i, &b) in payload.iter().enumerate() {
-        let role = pattern[i % pattern.len()] as usize;
-        enc.encode_byte(&mut trees[role], b);
+        enc.encode_byte(&mut trees[roles.role(i)], b);
     }
     enc.finish()
 }
 
 /// Decode exactly `raw_len` bytes from a [`range_encode`] stream.
-/// `precision`/`cols` must match the encode call (they are recovered from
-/// the frame header). The stream must be consumed exactly: bytes left
-/// unread after the last symbol are trailing garbage and a decode error,
-/// preserving the plain path's exact payload-length validation.
+/// `precision`/`cols`/`rows` must match the encode call (they are
+/// recovered from the frame header). The stream must be consumed
+/// exactly: bytes left unread after the last symbol are trailing
+/// garbage and a decode error, preserving the plain path's exact
+/// payload-length validation.
 pub fn range_decode(
     buf: &[u8],
     raw_len: usize,
     precision: Precision,
     cols: usize,
+    rows: usize,
 ) -> Result<Vec<u8>> {
-    let (pattern, n_roles) = role_pattern(precision, cols);
-    let mut trees: Vec<BitTree> = (0..n_roles).map(|_| new_tree()).collect();
+    let roles = RoleMap::new(precision, cols, rows);
+    let mut trees: Vec<BitTree> = (0..roles.n_roles).map(|_| new_tree()).collect();
     let mut dec = RangeDecoder::new(buf);
     let mut out = Vec::with_capacity(raw_len);
     for i in 0..raw_len {
-        let role = pattern[i % pattern.len()] as usize;
-        out.push(dec.decode_byte(&mut trees[role]));
+        out.push(dec.decode_byte(&mut trees[roles.role(i)]));
     }
     ensure!(
         dec.pos >= buf.len(),
@@ -391,8 +462,9 @@ pub fn range_decode(
 
 /// Wrap a raw quantized payload into a length-prefixed entropy block:
 /// `u32 raw_len (LE) | range-coded bytes` (an empty payload is just its
-/// zero length prefix).
-pub fn seal_block(raw: &[u8], precision: Precision, cols: usize) -> Result<Vec<u8>> {
+/// zero length prefix). `rows` sizes the vq role-map prefix, matching
+/// the frame header's row count.
+pub fn seal_block(raw: &[u8], precision: Precision, cols: usize, rows: usize) -> Result<Vec<u8>> {
     ensure!(
         raw.len() <= u32::MAX as usize,
         "entropy block of {} raw bytes exceeds u32",
@@ -401,7 +473,7 @@ pub fn seal_block(raw: &[u8], precision: Precision, cols: usize) -> Result<Vec<u
     let mut out = Vec::with_capacity(8 + raw.len() / 2);
     out.extend_from_slice(&(raw.len() as u32).to_le_bytes());
     if !raw.is_empty() {
-        out.extend_from_slice(&range_encode(raw, precision, cols));
+        out.extend_from_slice(&range_encode(raw, precision, cols, rows));
     }
     Ok(out)
 }
@@ -413,6 +485,7 @@ pub fn open_block(
     expected_len: usize,
     precision: Precision,
     cols: usize,
+    rows: usize,
 ) -> Result<Vec<u8>> {
     ensure!(block.len() >= 4, "entropy block missing its length prefix");
     let raw_len = u32::from_le_bytes(block[0..4].try_into().unwrap()) as usize;
@@ -428,7 +501,7 @@ pub fn open_block(
         );
         return Ok(Vec::new());
     }
-    range_decode(&block[4..], raw_len, precision, cols)
+    range_decode(&block[4..], raw_len, precision, cols, rows)
 }
 
 #[cfg(test)]
@@ -510,8 +583,8 @@ mod tests {
             };
             for p in [Precision::Int8, Precision::F16, Precision::F32, Precision::F64] {
                 let cols = 1 + rng.below(40);
-                let enc = range_encode(&data, p, cols);
-                let dec = range_decode(&enc, data.len(), p, cols).unwrap();
+                let enc = range_encode(&data, p, cols, 0);
+                let dec = range_decode(&enc, data.len(), p, cols, 0).unwrap();
                 assert_eq!(dec, data, "case {case} {} cols={cols}", p.name());
             }
         }
@@ -523,7 +596,7 @@ mod tests {
         let skewed: Vec<u8> = (0..4000)
             .map(|_| if rng.chance(0.85) { 0 } else { rng.below(16) as u8 })
             .collect();
-        let enc = range_encode(&skewed, Precision::Int8, 25);
+        let enc = range_encode(&skewed, Precision::Int8, 25, 0);
         assert!(
             enc.len() * 3 < skewed.len(),
             "skewed bytes should compress >3x, got {} -> {}",
@@ -531,7 +604,7 @@ mod tests {
             enc.len()
         );
         let uniform: Vec<u8> = (0..4000).map(|_| rng.below(256) as u8).collect();
-        let enc = range_encode(&uniform, Precision::Int8, 25);
+        let enc = range_encode(&uniform, Precision::Int8, 25, 0);
         // incompressible input costs at most ~2% + the coder preamble
         assert!(
             enc.len() <= uniform.len() + uniform.len() / 50 + 8,
@@ -544,44 +617,79 @@ mod tests {
     #[test]
     fn trailing_garbage_after_coded_stream_is_rejected() {
         let data: Vec<u8> = (0..500).map(|i| (i % 11) as u8).collect();
-        let enc = range_encode(&data, Precision::Int8, 25);
+        let enc = range_encode(&data, Precision::Int8, 25, 0);
         // the decoder consumes the stream exactly...
-        assert_eq!(range_decode(&enc, 500, Precision::Int8, 25).unwrap(), data);
+        assert_eq!(range_decode(&enc, 500, Precision::Int8, 25, 0).unwrap(), data);
         // ...so appended bytes inside a (checksummed) payload are caught
         let mut padded = enc.clone();
         padded.extend_from_slice(&[0xab, 0xcd]);
-        assert!(range_decode(&padded, 500, Precision::Int8, 25).is_err());
+        assert!(range_decode(&padded, 500, Precision::Int8, 25, 0).is_err());
     }
 
     #[test]
     fn blocks_validate_lengths() {
         let raw = vec![1u8, 2, 3, 4, 5, 6];
-        let blk = seal_block(&raw, Precision::F16, 3).unwrap();
-        assert_eq!(open_block(&blk, 6, Precision::F16, 3).unwrap(), raw);
+        let blk = seal_block(&raw, Precision::F16, 3, 1).unwrap();
+        assert_eq!(open_block(&blk, 6, Precision::F16, 3, 1).unwrap(), raw);
         // geometry mismatch is an error, not garbage
-        assert!(open_block(&blk, 7, Precision::F16, 3).is_err());
-        assert!(open_block(&blk[..3], 6, Precision::F16, 3).is_err());
+        assert!(open_block(&blk, 7, Precision::F16, 3, 1).is_err());
+        assert!(open_block(&blk[..3], 6, Precision::F16, 3, 1).is_err());
         // empty payload: just the zero-length prefix
-        let blk = seal_block(&[], Precision::Int8, 25).unwrap();
+        let blk = seal_block(&[], Precision::Int8, 25, 0).unwrap();
         assert_eq!(blk, vec![0u8, 0, 0, 0]);
-        assert!(open_block(&blk, 0, Precision::Int8, 25).unwrap().is_empty());
-        assert!(open_block(&[0, 0, 0, 0, 9], 0, Precision::Int8, 25).is_err());
+        assert!(open_block(&blk, 0, Precision::Int8, 25, 0).unwrap().is_empty());
+        assert!(open_block(&[0, 0, 0, 0, 9], 0, Precision::Int8, 25, 0).is_err());
     }
 
     #[test]
-    fn role_patterns_cover_row_strides() {
-        let (pat, roles) = role_pattern(Precision::Int8, 25);
-        assert_eq!(pat.len(), 27);
-        assert_eq!(roles, 3);
-        assert_eq!(&pat[..3], &[0, 1, 2]);
+    fn role_maps_cover_row_strides() {
+        let m = RoleMap::new(Precision::Int8, 25, 0);
+        assert_eq!(m.prefix_len, 0);
+        assert_eq!(m.cycle.len(), 27);
+        assert_eq!(m.n_roles, 3);
+        assert_eq!(&m.cycle[..3], &[0, 1, 2]);
         for (p, stride, roles) in [
             (Precision::F16, 2usize, 2usize),
             (Precision::F32, 4, 4),
             (Precision::F64, 8, 8),
         ] {
-            let (pat, n) = role_pattern(p, 25);
-            assert_eq!(pat.len(), stride, "{}", p.name());
-            assert_eq!(n, roles);
+            let m = RoleMap::new(p, 25, 0);
+            assert_eq!(m.cycle.len(), stride, "{}", p.name());
+            assert_eq!(m.n_roles, roles);
         }
+    }
+
+    #[test]
+    fn vq_role_maps_have_codebook_prefix_and_row_cycle() {
+        // 64 rows, K = 25: 10 scale bytes + 32×25 codebook entries
+        let m = RoleMap::new(Precision::Vq8, 25, 64);
+        assert_eq!(m.prefix_len, super::super::vq::prefix_len(Precision::Vq8, 64, 25));
+        assert_eq!(m.cycle.len(), 7); // f16 scale + 5 index bytes
+        assert_eq!(m.n_roles, 8);
+        assert_eq!(m.role(0), 0); // codebook byte
+        assert_eq!(m.role(m.prefix_len), 1); // first row-scale byte
+        assert_eq!(m.role(m.prefix_len + 2), 3); // first index byte
+        // vq8r appends residual scale + value roles
+        let m = RoleMap::new(Precision::Vq8r, 25, 64);
+        assert_eq!(m.cycle.len(), 7 + 27);
+        assert_eq!(m.n_roles, 11);
+        // vq4 packs two indices per byte
+        let m = RoleMap::new(Precision::Vq4, 25, 64);
+        assert_eq!(m.cycle.len(), 2 + 3);
+        // vq round-trip through the coder with the prefix in play
+        let mut rng = Rng::seed_from_u64(99);
+        let data: Vec<f32> = (0..64 * 25).map(|_| rng.normal() as f32 * 0.1).collect();
+        let mut payload = Vec::new();
+        super::super::vq::encode_plane(&mut payload, &data, 64, 25, Precision::Vq8);
+        let enc = range_encode(&payload, Precision::Vq8, 25, 64);
+        let dec = range_decode(&enc, payload.len(), Precision::Vq8, 25, 64).unwrap();
+        assert_eq!(dec, payload);
+        // the index plane is low-entropy: coded vq frames shrink
+        assert!(
+            enc.len() < payload.len(),
+            "vq payload did not compress: {} -> {}",
+            payload.len(),
+            enc.len()
+        );
     }
 }

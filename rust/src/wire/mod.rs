@@ -8,12 +8,19 @@
 //!   entropy id, checksum) around every transmission,
 //! * [`quant`] — element codecs: `f64`, `f32` (exact), `f16`, and per-row
 //!   symmetric `int8` quantization with a bounded round-trip error,
+//! * [`vq`] — product (codebook) quantization for dense downloads:
+//!   `vq8` / `vq4` / `vq8r` replace each row's subvectors with indices
+//!   into a per-frame, coordinator-learned codebook — the quantizer
+//!   change that cuts *below* the int8 floor (uploads fall back to
+//!   int8 rows; see [`Precision::for_uploads`]),
 //! * [`sparse`] — index+value encoding for ∇Q* uploads with optional
-//!   top-k row sparsification,
+//!   top-k row sparsification, including the entropy-aware
+//!   `--sparse-topk auto` tuner ([`sparse::auto_top_k`]),
 //! * [`entropy`] — lossless entropy coding layered under the checksum:
 //!   delta+zigzag+LEB128 varints for the sparse row indices and an
 //!   adaptive binary range coder (order-0 bit-tree byte model, one tree
-//!   per byte role) over the quantized payload bytes.
+//!   per byte role, with a dedicated codebook-prefix segment for the vq
+//!   payloads) over the quantized payload bytes.
 //!
 //! The trainer encodes Q* before "transmitting", the simulated clients
 //! train against the **decoded** (possibly lossy) factors, gradient
@@ -25,9 +32,12 @@
 //!
 //! Total payload per round and direction is therefore
 //! `Θ × frame_len(M_s, K, precision, entropy)`; with K = 25 the int8
-//! codec is ~3.7× smaller than f32 at identical M_s, entropy coding
-//! shaves a further measured slice off (see `wire::entropy`), and both
-//! multiply with whatever reduction the bandit achieves.
+//! codec is ~3.7× smaller than f32 at identical M_s, `vq8` cuts the
+//! download a further ~3.4× below int8 (codebook indices instead of
+//! value bytes), entropy coding shaves a measured slice off each (the
+//! low-entropy vq index plane is where `range` finally bites on
+//! downloads), and everything multiplies with whatever reduction the
+//! bandit achieves.
 //!
 //! [`PayloadCodec`] is the strategy trait and [`make_codec`] /
 //! [`make_codec_with`] the registry, mirroring
@@ -54,6 +64,7 @@ pub mod entropy;
 pub mod frame;
 pub mod quant;
 pub mod sparse;
+pub mod vq;
 
 pub use entropy::EntropyMode;
 pub use frame::{FrameHeader, PayloadKind, HEADER_LEN};
@@ -135,7 +146,7 @@ impl PayloadCodec for QuantCodec {
         // a dense frame has no index stream, so only the range-coding
         // half of the mode applies; the header records the mode as-is
         let payload = if self.entropy.range_values() {
-            entropy::seal_block(&payload, self.precision, cols)?
+            entropy::seal_block(&payload, self.precision, cols, rows)?
         } else {
             payload
         };
@@ -166,6 +177,7 @@ impl PayloadCodec for QuantCodec {
                 quant::encoded_len(rows, cols, precision),
                 precision,
                 cols,
+                rows,
             )?;
             &raw
         } else {
@@ -211,8 +223,12 @@ pub fn encoded_dense_len(rows: usize, cols: usize, precision: Precision) -> usiz
 
 /// Exact frame length of a sparse payload keeping `nnz` rows of `cols`,
 /// with entropy coding off (entropy-coded frame lengths are
-/// data-dependent — read them off the encoded frame).
+/// data-dependent — read them off the encoded frame). Applies
+/// [`Precision::for_uploads`] internally — sparse frames under the vq
+/// modes carry int8 value planes, so passing a vq precision here
+/// accounts for the int8 plane the encoder actually emits.
 pub fn encoded_sparse_len(nnz: usize, cols: usize, precision: Precision) -> usize {
+    let precision = precision.for_uploads();
     HEADER_LEN + 4 + nnz * 4 + quant::encoded_len(nnz, cols, precision)
 }
 
@@ -226,9 +242,19 @@ mod tests {
         (0..rows * cols).map(|_| rng.normal() as f32 * 0.1).collect()
     }
 
+    const ALL_PRECISIONS: [Precision; 7] = [
+        Precision::F64,
+        Precision::F32,
+        Precision::F16,
+        Precision::Int8,
+        Precision::Vq8,
+        Precision::Vq4,
+        Precision::Vq8r,
+    ];
+
     #[test]
     fn registry_builds_every_precision() {
-        for p in [Precision::F64, Precision::F32, Precision::F16, Precision::Int8] {
+        for p in ALL_PRECISIONS {
             let codec = make_codec(p);
             assert_eq!(codec.precision(), p);
             assert_eq!(codec.name(), p.name());
@@ -245,7 +271,7 @@ mod tests {
     fn dense_entropy_modes_decode_bit_identically_to_plain() {
         let (rows, cols) = (48, 25);
         let q = factors(rows, cols, 21);
-        for p in [Precision::F64, Precision::F32, Precision::F16, Precision::Int8] {
+        for p in ALL_PRECISIONS {
             let base = make_codec(p)
                 .decode_dense(&make_codec(p).encode_dense(&q, rows, cols).unwrap())
                 .unwrap();
@@ -307,10 +333,36 @@ mod tests {
     fn dense_frame_lengths_match_helper() {
         let (rows, cols) = (24, 25);
         let q = factors(rows, cols, 1);
-        for p in [Precision::F64, Precision::F32, Precision::F16, Precision::Int8] {
+        for p in ALL_PRECISIONS {
             let frame = make_codec(p).encode_dense(&q, rows, cols).unwrap();
             assert_eq!(frame.len(), encoded_dense_len(rows, cols, p), "{}", p.name());
         }
+    }
+
+    #[test]
+    fn vq8_dense_is_smaller_than_int8_and_compresses_under_range() {
+        let (rows, cols) = (64, 25);
+        let q = factors(rows, cols, 24);
+        let int8 = make_codec(Precision::Int8).encode_dense(&q, rows, cols).unwrap();
+        let vq8 = make_codec(Precision::Vq8).encode_dense(&q, rows, cols).unwrap();
+        assert!(vq8.len() < int8.len(), "vq8 {} !< int8 {}", vq8.len(), int8.len());
+        // ... and the coded vq frame (low-entropy indices) is smaller
+        // than the coded int8 frame (near-incompressible values)
+        let int8_full = make_codec_with(Precision::Int8, EntropyMode::Full)
+            .encode_dense(&q, rows, cols)
+            .unwrap();
+        let vq8_full = make_codec_with(Precision::Vq8, EntropyMode::Full)
+            .encode_dense(&q, rows, cols)
+            .unwrap();
+        assert!(
+            vq8_full.len() < int8_full.len(),
+            "vq8+full {} !< int8+full {}",
+            vq8_full.len(),
+            int8_full.len()
+        );
+        // any codec decodes a vq frame (self-describing header)
+        let dec = make_codec(Precision::F32).decode_dense(&vq8).unwrap();
+        assert_eq!((dec.rows, dec.cols), (rows, cols));
     }
 
     #[test]

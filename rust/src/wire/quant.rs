@@ -16,10 +16,16 @@
 //! A K=25 factor row costs 200 / 100 / 50 / 27 bytes respectively, so
 //! int8 is ~3.7× smaller than f32 and ~7.4× smaller than the paper's
 //! f64 accounting at identical M_s.
+//!
+//! The `vq8` / `vq4` / `vq8r` variants dispatch to `wire::vq`: per-row
+//! f16 scale + per-subspace codebook indices (7 / 5 / 34 bytes per K=25
+//! row) plus a per-frame codebook block — the payload layout that
+//! finally pushes *below* the int8 floor on downloads.
 
 use anyhow::{ensure, Result};
 
-/// Wire precision of one matrix element.
+/// Wire precision of one matrix element (for the scalar codecs) or of
+/// one subvector (for the `wire::vq` product-quantized codecs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Precision {
     /// Widened 64-bit floats (the paper's Table 1 accounting).
@@ -30,17 +36,31 @@ pub enum Precision {
     F16,
     /// Per-row symmetric int8 affine quantization (f16 row scale).
     Int8,
+    /// Product quantization, ≤ 64 centroids/subspace, byte indices
+    /// (`wire::vq`; dense downloads only — uploads fall back to int8).
+    Vq8,
+    /// Product quantization, ≤ 16 centroids/subspace, packed nibble
+    /// indices (the aggressive end of the vq knob).
+    Vq4,
+    /// [`Precision::Vq8`] plus a per-row int8 residual plane (the vq
+    /// quality knob: int8-class error at index-plane + int8 size).
+    Vq8r,
 }
 
 impl Precision {
-    /// Parse a codec name (`f64|f32|f16|int8`).
+    /// Parse a codec name (`f64|f32|f16|int8|vq8|vq4|vq8r`).
     pub fn parse(s: &str) -> Result<Precision> {
         Ok(match s {
             "f64" => Precision::F64,
             "f32" => Precision::F32,
             "f16" => Precision::F16,
             "int8" => Precision::Int8,
-            other => anyhow::bail!("unknown codec precision `{other}` (f64|f32|f16|int8)"),
+            "vq8" => Precision::Vq8,
+            "vq4" => Precision::Vq4,
+            "vq8r" => Precision::Vq8r,
+            other => {
+                anyhow::bail!("unknown codec precision `{other}` (f64|f32|f16|int8|vq8|vq4|vq8r)")
+            }
         })
     }
 
@@ -51,6 +71,9 @@ impl Precision {
             Precision::F32 => "f32",
             Precision::F16 => "f16",
             Precision::Int8 => "int8",
+            Precision::Vq8 => "vq8",
+            Precision::Vq4 => "vq4",
+            Precision::Vq8r => "vq8r",
         }
     }
 
@@ -61,6 +84,9 @@ impl Precision {
             Precision::F32 => 2,
             Precision::F16 => 3,
             Precision::Int8 => 4,
+            Precision::Vq8 => 5,
+            Precision::Vq4 => 6,
+            Precision::Vq8r => 7,
         }
     }
 
@@ -71,24 +97,55 @@ impl Precision {
             2 => Precision::F32,
             3 => Precision::F16,
             4 => Precision::Int8,
+            5 => Precision::Vq8,
+            6 => Precision::Vq4,
+            7 => Precision::Vq8r,
             other => anyhow::bail!("unknown codec id {other}"),
         })
     }
 
-    /// Encoded bytes for one `cols`-wide row.
+    /// Is this one of the `wire::vq` product-quantized codecs?
+    pub fn is_vq(&self) -> bool {
+        matches!(self, Precision::Vq8 | Precision::Vq4 | Precision::Vq8r)
+    }
+
+    /// The precision that actually shapes **upload** (sparse ∇Q*) value
+    /// planes: the vq codecs amortize a per-frame codebook over a
+    /// broadcast download, which a one-shot per-client upload cannot,
+    /// so they fall back to int8 rows on the uplink. Scalar codecs map
+    /// to themselves.
+    pub fn for_uploads(&self) -> Precision {
+        if self.is_vq() {
+            Precision::Int8
+        } else {
+            *self
+        }
+    }
+
+    /// Encoded bytes for one `cols`-wide row. For the vq codecs this is
+    /// the per-row marginal (f16 scale + index plane + residual) and
+    /// excludes the per-frame codebook block — [`encoded_len`] has the
+    /// full payload size.
     pub fn row_bytes(&self, cols: usize) -> usize {
         match self {
             Precision::F64 => 8 * cols,
             Precision::F32 => 4 * cols,
             Precision::F16 => 2 * cols,
             Precision::Int8 => cols + 2, // values + f16 row scale
+            Precision::Vq8 | Precision::Vq4 | Precision::Vq8r => super::vq::row_bytes(*self, cols),
         }
     }
 }
 
 /// Encoded payload size (no frame header) of a `rows × cols` matrix.
+/// Exact for every precision: the vq codecs add their per-frame
+/// codebook block (`wire::vq::prefix_len`) on top of the row records.
 pub fn encoded_len(rows: usize, cols: usize, precision: Precision) -> usize {
-    rows * precision.row_bytes(cols)
+    if precision.is_vq() {
+        super::vq::encoded_len(precision, rows, cols)
+    } else {
+        rows * precision.row_bytes(cols)
+    }
 }
 
 /// Largest finite f16 value — the lossy codecs saturate here.
@@ -96,8 +153,12 @@ pub const F16_MAX: f32 = 65504.0;
 
 /// Worst-case absolute round-trip error for one element of a row whose
 /// largest magnitude is `row_max`. Zero for the exact codecs. Beyond
-/// [`F16_MAX`] both lossy codecs saturate (f16 elements directly, int8
-/// through its f16 row scale), so the bound grows by the clipped excess.
+/// [`F16_MAX`] both lossy scalar codecs saturate (f16 elements
+/// directly, int8 through its f16 row scale), so the bound grows by the
+/// clipped excess. The vq codecs have **no** per-element bound — their
+/// error depends on the whole frame's geometry (codebook fit), so this
+/// returns infinity for them; the `wire::vq` property tests pin the
+/// empirical error ordering instead.
 pub fn max_roundtrip_error(precision: Precision, row_max: f32) -> f32 {
     let in_range = row_max.abs().min(F16_MAX);
     let clipped = (row_max.abs() - F16_MAX).max(0.0);
@@ -108,6 +169,7 @@ pub fn max_roundtrip_error(precision: Precision, row_max: f32) -> f32 {
         Precision::F16 => (in_range * (1.0 / 2048.0)).max(1e-7) * 1.5 + clipped,
         // half-step of the 127-level grid + f16 rounding of the scale.
         Precision::Int8 => in_range * (1.0 / 254.0 + 1.0 / 2048.0) * 1.5 + 1e-7 + clipped,
+        Precision::Vq8 | Precision::Vq4 | Precision::Vq8r => f32::INFINITY,
     }
 }
 
@@ -220,6 +282,9 @@ pub fn encode_rows(out: &mut Vec<u8>, data: &[f32], rows: usize, cols: usize, p:
                 }
             }
         }
+        Precision::Vq8 | Precision::Vq4 | Precision::Vq8r => {
+            super::vq::encode_plane(out, data, rows, cols, p);
+        }
     }
 }
 
@@ -257,6 +322,9 @@ pub fn decode_rows(payload: &[u8], rows: usize, cols: usize, p: Precision) -> Re
                     out.push(b as i8 as f32 / 127.0 * s);
                 }
             }
+        }
+        Precision::Vq8 | Precision::Vq4 | Precision::Vq8r => {
+            return super::vq::decode_plane(payload, rows, cols, p);
         }
     }
     Ok(out)
@@ -384,11 +452,20 @@ mod tests {
 
     #[test]
     fn precision_registry_roundtrips() {
-        for p in [Precision::F64, Precision::F32, Precision::F16, Precision::Int8] {
+        for p in [
+            Precision::F64,
+            Precision::F32,
+            Precision::F16,
+            Precision::Int8,
+            Precision::Vq8,
+            Precision::Vq4,
+            Precision::Vq8r,
+        ] {
             assert_eq!(Precision::parse(p.name()).unwrap(), p);
             assert_eq!(Precision::from_id(p.id()).unwrap(), p);
         }
         assert!(Precision::parse("f8").is_err());
+        assert!(Precision::parse("vq9").is_err());
         assert!(Precision::from_id(99).is_err());
     }
 
@@ -398,5 +475,37 @@ mod tests {
         assert_eq!(Precision::F32.row_bytes(25), 100);
         assert_eq!(Precision::F16.row_bytes(25), 50);
         assert_eq!(Precision::Int8.row_bytes(25), 27);
+        assert_eq!(Precision::Vq8.row_bytes(25), 7);
+        assert_eq!(Precision::Vq4.row_bytes(25), 5);
+        assert_eq!(Precision::Vq8r.row_bytes(25), 34);
+    }
+
+    #[test]
+    fn upload_precision_maps_vq_to_int8() {
+        for p in [Precision::Vq8, Precision::Vq4, Precision::Vq8r] {
+            assert!(p.is_vq());
+            assert_eq!(p.for_uploads(), Precision::Int8);
+        }
+        for p in [Precision::F64, Precision::F32, Precision::F16, Precision::Int8] {
+            assert!(!p.is_vq());
+            assert_eq!(p.for_uploads(), p);
+        }
+    }
+
+    #[test]
+    fn vq_roundtrip_through_quant_dispatch() {
+        let mut rng = Rng::seed_from_u64(14);
+        let (rows, cols) = (32, 25);
+        let data: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32 * 0.2).collect();
+        for p in [Precision::Vq8, Precision::Vq4, Precision::Vq8r] {
+            let mut buf = Vec::new();
+            encode_rows(&mut buf, &data, rows, cols, p);
+            assert_eq!(buf.len(), encoded_len(rows, cols, p), "{}", p.name());
+            let dec = decode_rows(&buf, rows, cols, p).unwrap();
+            assert_eq!(dec.len(), data.len());
+            // lossy but sane: reconstruction correlates with the input
+            let dot: f64 = data.iter().zip(&dec).map(|(a, b)| (a * b) as f64).sum();
+            assert!(dot > 0.0, "{}: reconstruction uncorrelated", p.name());
+        }
     }
 }

@@ -25,6 +25,19 @@
 //! * `top_k` — optional top-k sparsification: keep at most `k` rows,
 //!   largest L2 norm first (0 disables). This is the codec-level analog
 //!   of the bandit's M_s selection, applied to the upload direction.
+//! * `auto_topk` — entropy-aware tuning (`--sparse-topk auto`): instead
+//!   of a fixed count, [`auto_top_k`] picks k per upload from the
+//!   retained-energy curve and the **measured** encoded-bytes curve —
+//!   when the entropy layer has already eaten the near-zero tail rows
+//!   (trimming them saves almost no bytes), it keeps everything; when
+//!   the tail still costs real bytes, it trims to the smallest k that
+//!   preserves ≥ 99.5% of the gradient energy.
+//!
+//! The vq precisions never appear in sparse frames: a per-frame codebook
+//! amortizes over a broadcast download, not a one-shot upload, so
+//! [`encode_with`] maps them to int8 value planes up front
+//! ([`Precision::for_uploads`]) and the frame header records the mapped
+//! precision — decode stays self-describing.
 
 use anyhow::{ensure, Result};
 
@@ -34,13 +47,17 @@ use super::quant::{self, Precision};
 use super::Dense;
 
 /// Upload sparsification policy. The default (`top_k = 0`,
-/// `threshold = 0.0`) drops only exactly-zero rows — lossless.
+/// `threshold = 0.0`, `auto_topk = false`) drops only exactly-zero
+/// rows — lossless.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct SparsePolicy {
     /// Keep at most this many rows (largest L2 norm); 0 = keep all.
     pub top_k: usize,
     /// Drop rows with L2 norm ≤ this value; 0.0 = drop only zero rows.
     pub threshold: f32,
+    /// Tune `top_k` per upload from the measured encoded-bytes and
+    /// retained-energy curves (overrides `top_k`; see [`auto_top_k`]).
+    pub auto_topk: bool,
 }
 
 /// Row indices (ascending) that survive `policy` for a row-major
@@ -75,6 +92,129 @@ pub fn kept_rows(data: &[f32], rows: usize, cols: usize, policy: &SparsePolicy) 
     kept.into_iter().map(|(r, _)| r).collect()
 }
 
+/// Fraction of the total gradient energy (Σ row-norm²) an auto-tuned
+/// upload must retain.
+pub const AUTO_TOPK_ENERGY: f64 = 0.995;
+
+/// Minimum fraction of the full frame's measured bytes a trim must save
+/// before the tuner bothers dropping information.
+pub const AUTO_TOPK_MIN_SAVINGS: f64 = 0.05;
+
+/// Entropy-aware `--sparse-topk auto`: resolve a concrete top-k for one
+/// upload from the **measured** encoded-bytes-per-kept-row curve rather
+/// than a fixed count.
+///
+/// 1. Survey the surviving rows (after `threshold`) and find `k_e`, the
+///    smallest k whose largest-norm rows retain ≥ [`AUTO_TOPK_ENERGY`]
+///    of the total gradient energy.
+/// 2. Encode the frame at `k_e` and at keep-all and compare real frame
+///    lengths — this is where the entropy layer enters: near-zero tail
+///    rows range-code to almost nothing, so under `range|full` the
+///    measured saving of a trim can collapse even when the row count
+///    drops a lot.
+/// 3. If trimming to `k_e` saves less than [`AUTO_TOPK_MIN_SAVINGS`] of
+///    the full frame's bytes, keep everything (returns 0 = keep-all):
+///    dropping gradient energy that the wire had already compressed
+///    away is pure loss. Otherwise return `k_e`.
+///
+/// Deterministic: a pure function of the gradient data, so fleet
+/// workers can tune independently without breaking the threads = 1/N
+/// bit-identity contract.
+pub fn auto_top_k(
+    data: &[f32],
+    rows: usize,
+    cols: usize,
+    precision: Precision,
+    entropy: EntropyMode,
+    policy: &SparsePolicy,
+) -> Result<usize> {
+    Ok(auto_decision(data, rows, cols, precision, entropy, policy)?.0)
+}
+
+/// The shared implementation behind [`auto_top_k`] and the `auto_topk`
+/// encode path: returns the chosen top-k (0 = keep all) **and** the
+/// winning encoded frame, so the encoder never pays a third encode to
+/// re-produce the frame it already measured.
+fn auto_decision(
+    data: &[f32],
+    rows: usize,
+    cols: usize,
+    precision: Precision,
+    entropy: EntropyMode,
+    policy: &SparsePolicy,
+) -> Result<(usize, Vec<u8>)> {
+    let base = SparsePolicy {
+        top_k: 0,
+        threshold: policy.threshold,
+        auto_topk: false,
+    };
+    let (k_e, n) = energy_top_k(data, rows, cols, &base);
+    if k_e == 0 {
+        return Ok((0, encode_with(data, rows, cols, precision, entropy, &base)?));
+    }
+    let trimmed_policy = SparsePolicy {
+        top_k: k_e,
+        threshold: policy.threshold,
+        auto_topk: false,
+    };
+    if !entropy.range_values() && !entropy.varint_indices() {
+        // plain frame lengths are structural — decide arithmetically and
+        // pay exactly one encode, for the winner
+        let full_len = super::encoded_sparse_len(n, cols, precision);
+        let trim_len = super::encoded_sparse_len(k_e, cols, precision);
+        let saved = full_len.saturating_sub(trim_len) as f64;
+        return if saved < AUTO_TOPK_MIN_SAVINGS * full_len as f64 {
+            Ok((0, encode_with(data, rows, cols, precision, entropy, &base)?))
+        } else {
+            let frame = encode_with(data, rows, cols, precision, entropy, &trimmed_policy)?;
+            Ok((k_e, frame))
+        };
+    }
+    // entropy-coded lengths are data-dependent: measure the real frames
+    let full = encode_with(data, rows, cols, precision, entropy, &base)?;
+    let trimmed = encode_with(data, rows, cols, precision, entropy, &trimmed_policy)?;
+    let saved = full.len().saturating_sub(trimmed.len()) as f64;
+    if saved < AUTO_TOPK_MIN_SAVINGS * full.len() as f64 {
+        Ok((0, full))
+    } else {
+        Ok((k_e, trimmed))
+    }
+}
+
+/// The retained-energy survey of the auto tuner: `(k_e, n)` where `n`
+/// is the surviving-row count and `k_e` is the smallest k whose
+/// largest-norm surviving rows hold ≥ [`AUTO_TOPK_ENERGY`] of the total
+/// gradient energy — 0 when no proper prefix does (keep all).
+fn energy_top_k(data: &[f32], rows: usize, cols: usize, base: &SparsePolicy) -> (usize, usize) {
+    let kept = kept_rows(data, rows, cols, base);
+    let n = kept.len();
+    if n <= 1 {
+        return (0, n);
+    }
+    let mut norms: Vec<f64> = kept
+        .iter()
+        .map(|&r| {
+            data[r as usize * cols..(r as usize + 1) * cols]
+                .iter()
+                .map(|&v| (v as f64) * (v as f64))
+                .sum()
+        })
+        .collect();
+    norms.sort_by(|a, b| b.total_cmp(a));
+    let total: f64 = norms.iter().sum();
+    if !(total.is_finite() && total > 0.0) {
+        return (0, n);
+    }
+    let mut cum = 0.0f64;
+    for (i, &nrm) in norms.iter().enumerate() {
+        cum += nrm;
+        if cum >= AUTO_TOPK_ENERGY * total {
+            return (if i + 1 >= n { 0 } else { i + 1 }, n);
+        }
+    }
+    (0, n)
+}
+
 /// Encode the sparse frame for a row-major `rows × cols` matrix without
 /// entropy coding (the PR 1 wire format).
 pub fn encode(
@@ -89,7 +229,9 @@ pub fn encode(
 
 /// Encode the sparse frame for a row-major `rows × cols` matrix, with the
 /// index and value streams shaped by `entropy` (see the module docs for
-/// the per-mode layouts).
+/// the per-mode layouts). The vq precisions are mapped to their int8
+/// upload plane here; `auto_topk` policies are resolved to a concrete
+/// top-k through [`auto_top_k`] first.
 pub fn encode_with(
     data: &[f32],
     rows: usize,
@@ -103,6 +245,10 @@ pub fn encode_with(
         "sparse encode: {} values for {rows}x{cols}",
         data.len()
     );
+    let precision = precision.for_uploads();
+    if policy.auto_topk {
+        return Ok(auto_decision(data, rows, cols, precision, entropy, policy)?.1);
+    }
     let kept = kept_rows(data, rows, cols, policy);
 
     let mut payload = Vec::with_capacity(4 + kept.len() * (4 + precision.row_bytes(cols)));
@@ -128,7 +274,7 @@ pub fn encode_with(
     let mut values = Vec::with_capacity(quant::encoded_len(kept.len(), cols, precision));
     quant::encode_rows(&mut values, &compact, kept.len(), cols, precision);
     if entropy.range_values() {
-        payload.extend_from_slice(&entropy::seal_block(&values, precision, cols)?);
+        payload.extend_from_slice(&entropy::seal_block(&values, precision, cols, kept.len())?);
     } else {
         payload.extend_from_slice(&values);
     }
@@ -189,7 +335,7 @@ pub fn decode(buf: &[u8]) -> Result<Dense> {
     let raw_len = quant::encoded_len(nnz, cols, precision);
     let raw;
     let value_bytes: &[u8] = if entropy.range_values() {
-        raw = entropy::open_block(&payload[pos..], raw_len, precision, cols)?;
+        raw = entropy::open_block(&payload[pos..], raw_len, precision, cols, nnz)?;
         &raw
     } else {
         ensure!(
@@ -257,6 +403,7 @@ mod tests {
         let policy = SparsePolicy {
             top_k: 10,
             threshold: 0.0,
+            auto_topk: false,
         };
         let dec = decode(&encode(&data, rows, cols, Precision::F32, &policy).unwrap()).unwrap();
         let norm = |d: &[f32], r: usize| -> f64 {
@@ -295,6 +442,7 @@ mod tests {
         let policy = SparsePolicy {
             top_k: 0,
             threshold: 0.1,
+            auto_topk: false,
         };
         let dec = decode(&encode(&data, rows, cols, Precision::F32, &policy).unwrap()).unwrap();
         assert_eq!(&dec.data[0..2], &[0.0, 0.0]);
@@ -311,10 +459,12 @@ mod tests {
             SparsePolicy {
                 top_k: 8,
                 threshold: 0.0,
+                auto_topk: false,
             },
             SparsePolicy {
                 top_k: 0,
                 threshold: 0.05,
+                auto_topk: false,
             },
         ] {
             let kept = kept_rows(&data, 40, 5, &policy);
@@ -384,6 +534,107 @@ mod tests {
             varint.len(),
             plain.len()
         );
+    }
+
+    #[test]
+    fn vq_uploads_carry_int8_value_planes() {
+        let data = gradient_like(40, 25, 0.4, 21);
+        for p in [Precision::Vq8, Precision::Vq4, Precision::Vq8r] {
+            let frame = encode(&data, 40, 25, p, &SparsePolicy::default()).unwrap();
+            let (header, _) = frame::open(&frame).unwrap();
+            assert_eq!(
+                header.codec_id,
+                Precision::Int8.id(),
+                "{}: sparse frame should carry the int8 upload plane",
+                p.name()
+            );
+            // ... and therefore decodes exactly like an int8 frame
+            let a = decode(&frame).unwrap();
+            let int8 = encode(&data, 40, 25, Precision::Int8, &SparsePolicy::default()).unwrap();
+            let b = decode(&int8).unwrap();
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{}", p.name());
+            }
+        }
+    }
+
+    #[test]
+    fn auto_topk_keeps_all_when_energy_is_spread() {
+        // near-equal row norms: no small-k prefix holds 99.5% of the
+        // energy, so auto keeps everything
+        let (rows, cols) = (40, 8);
+        let mut rng = Rng::seed_from_u64(31);
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            let mag = 1.0 + 0.01 * rng.normal() as f32;
+            let sign = if rng.chance(0.5) { 1.0 } else { -1.0 };
+            data.push(mag * sign);
+        }
+        let k = auto_top_k(
+            &data,
+            rows,
+            cols,
+            Precision::Int8,
+            EntropyMode::None,
+            &SparsePolicy::default(),
+        )
+        .unwrap();
+        assert_eq!(k, 0, "spread energy must keep all rows");
+    }
+
+    #[test]
+    fn auto_topk_trims_concentrated_energy() {
+        // 4 huge rows + a long near-zero (but nonzero) tail: the energy
+        // curve saturates at k = 4 and trimming saves real plain bytes
+        let (rows, cols) = (64, 8);
+        let mut rng = Rng::seed_from_u64(32);
+        let mut data = vec![0.0f32; rows * cols];
+        for r in 0..rows {
+            let scale = if r < 4 { 10.0 } else { 1e-4 };
+            for c in 0..cols {
+                data[r * cols + c] = rng.normal() as f32 * scale;
+            }
+        }
+        let k = auto_top_k(
+            &data,
+            rows,
+            cols,
+            Precision::Int8,
+            EntropyMode::None,
+            &SparsePolicy::default(),
+        )
+        .unwrap();
+        assert_eq!(k, 4, "energy concentrates in the 4 large rows");
+        // the policy round-trips end to end and actually shrinks frames
+        let auto = SparsePolicy {
+            auto_topk: true,
+            ..SparsePolicy::default()
+        };
+        let keep_all = SparsePolicy::default();
+        let none = EntropyMode::None;
+        let frame_auto = encode_with(&data, rows, cols, Precision::Int8, none, &auto).unwrap();
+        let frame_all = encode(&data, rows, cols, Precision::Int8, &keep_all).unwrap();
+        assert!(frame_auto.len() < frame_all.len());
+        let dec = decode(&frame_auto).unwrap();
+        // the 4 large rows survive, the tail decodes to zeros
+        for r in 0..4 {
+            assert!(dec.data[r * cols..(r + 1) * cols].iter().any(|&v| v != 0.0));
+        }
+        assert!(dec.data[4 * cols..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn auto_topk_is_deterministic() {
+        let data = gradient_like(80, 16, 0.3, 33);
+        let auto = SparsePolicy {
+            auto_topk: true,
+            ..SparsePolicy::default()
+        };
+        for e in [EntropyMode::None, EntropyMode::Full] {
+            let a = encode_with(&data, 80, 16, Precision::Int8, e, &auto).unwrap();
+            let b = encode_with(&data, 80, 16, Precision::Int8, e, &auto).unwrap();
+            assert_eq!(a, b, "{}", e.name());
+        }
     }
 
     #[test]

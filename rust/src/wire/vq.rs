@@ -1,0 +1,585 @@
+//! Product (codebook) quantization for the downlink Q* payload — the
+//! fourth payload axis, and the one the entropy layer was waiting for.
+//!
+//! PR 3 measured that int8-quantized factor rows are information-
+//! theoretically close to incompressible: the symbols are near-uniform,
+//! so the range coder recovers only ~2–12% on downloads. Cutting deeper
+//! means changing the *quantizer*, not the entropy layer. `wire::vq`
+//! does that: each selected row is normalized by its f16 row scale,
+//! split into `S = ⌈K / 5⌉` subvectors, and every subvector is replaced
+//! by an index into a small per-subspace codebook learned **per frame**
+//! with seeded k-means on the coordinator. A K = 25 row costs
+//! `2 + S` bytes (`vq8`) instead of int8's `K + 2` — 7 vs 27 — plus a
+//! per-frame codebook block that amortizes across the selected rows.
+//! The codebook is trained on exactly the rows it encodes, so small
+//! frames get a near-overfit (high-quality) codebook for free.
+//!
+//! Three modes, selected by [`Precision`](super::Precision):
+//!
+//! * `vq8`  — up to 64 centroids per subspace, one index byte per
+//!   subvector.
+//! * `vq4`  — up to 16 centroids, two indices packed per byte (the
+//!   aggressive end of the knob).
+//! * `vq8r` — `vq8` plus a per-row **int8 residual plane**: the decoder
+//!   adds back the int8-quantized `x − recon`, recovering int8-class
+//!   accuracy at int8-class size plus the index plane (the quality
+//!   knob; its residuals are small and skewed, so the range coder bites
+//!   much harder than on raw int8 rows).
+//!
+//! Codebook indices are low-entropy (≤ 6 bits of information per index
+//! byte even on unstructured factors, less once training concentrates
+//! Q), which finally gives `entropy = range|full` real purchase on the
+//! download direction: the bench workload measures ~24% off vq8 frames
+//! vs ~5% off int8 frames.
+//!
+//! ## Determinism
+//!
+//! Encoding is a pure function of the payload: k-means uses a fixed
+//! PCG seed per subspace (`0x7651_0000 + s`), a fixed iteration count
+//! ([`KMEANS_ITERS`]), and batch-order-stable updates (points are
+//! scanned in row order, accumulators are f64, ties break toward the
+//! lower centroid index), so the threads = 1/N bit-identity contract
+//! survives untouched — the determinism CI job runs vq legs at both
+//! thread counts to prove it. The decoder reconstructs from the shipped
+//! (int8-requantized) codebook, and the encoder assigns indices against
+//! that same requantized codebook, so `decode(encode(x))` equals the
+//! encoder's own reconstruction bit for bit.
+//!
+//! ## Uploads
+//!
+//! VQ applies to the **downlink dense** payload only: a codebook
+//! amortizes over a broadcast frame that Θ clients receive, while the
+//! uplink ∇Q* is a one-shot sample per client. Sparse frames under the
+//! vq modes therefore carry plain int8 value planes (see
+//! [`Precision::for_uploads`](super::Precision::for_uploads)); the
+//! frame header records the precision that actually shaped the bytes,
+//! so decode stays self-describing.
+//!
+//! Reconstruction error is data-dependent (there is no per-element
+//! bound like int8's half-step grid — `max_roundtrip_error` reports
+//! infinity for the vq modes); the vq property tests pin the empirical
+//! error ordering instead: error shrinks as the codebook grows, and
+//! `vq8r` sits within int8-residual distance of the input.
+
+use anyhow::{ensure, Result};
+
+use super::quant::{f16_to_f32, f32_to_f16, Precision};
+use crate::rng::Rng;
+
+/// Factor dimensions per subvector: K = 25 splits into five 5-wide
+/// subspaces (the last subspace of a non-multiple K is narrower).
+pub const SUB_WIDTH: usize = 5;
+
+/// Fixed Lloyd iteration count of the per-frame k-means (determinism:
+/// no convergence-dependent early exit).
+pub const KMEANS_ITERS: usize = 6;
+
+/// PCG seed base of the per-subspace k-means streams (subspace `s`
+/// seeds with `SEED_BASE + s`).
+const SEED_BASE: u64 = 0x7651_0000;
+
+/// Number of subvectors a `cols`-wide row splits into.
+pub fn subspaces(cols: usize) -> usize {
+    cols.div_ceil(SUB_WIDTH)
+}
+
+/// Width of subspace `s` (the last subspace absorbs the remainder).
+fn sub_width(cols: usize, s: usize) -> usize {
+    SUB_WIDTH.min(cols - s * SUB_WIDTH)
+}
+
+/// Largest codebook a mode may ship (vq4 indices must fit a nibble).
+pub fn centroid_cap(precision: Precision) -> usize {
+    match precision {
+        Precision::Vq4 => 16,
+        _ => 64,
+    }
+}
+
+/// Centroids per subspace for a frame of `rows` rows: half the row
+/// count (so the codebook never dominates the frame), clamped to
+/// `[2, cap]`; zero for an empty frame.
+pub fn centroids(precision: Precision, rows: usize) -> usize {
+    if rows == 0 {
+        return 0;
+    }
+    centroid_cap(precision).min((rows / 2).max(2))
+}
+
+/// Index-plane bytes per row: one byte per subspace (`vq8`/`vq8r`), or
+/// two nibble-packed indices per byte (`vq4`).
+pub fn index_bytes(precision: Precision, cols: usize) -> usize {
+    let s = subspaces(cols);
+    match precision {
+        Precision::Vq4 => s.div_ceil(2),
+        _ => s,
+    }
+}
+
+/// Per-row payload bytes (f16 row scale + indices, plus the int8
+/// residual row for `vq8r`); excludes the per-frame codebook block —
+/// see [`encoded_len`] for the full payload size.
+pub fn row_bytes(precision: Precision, cols: usize) -> usize {
+    let base = 2 + index_bytes(precision, cols);
+    match precision {
+        Precision::Vq8r => base + cols + 2,
+        _ => base,
+    }
+}
+
+/// Codebook block size: one f16 scale per subspace plus
+/// `centroids × cols` int8 entries. Zero for an empty frame.
+pub fn prefix_len(precision: Precision, rows: usize, cols: usize) -> usize {
+    if rows == 0 {
+        return 0;
+    }
+    2 * subspaces(cols) + centroids(precision, rows) * cols
+}
+
+/// Exact payload length of a vq-encoded `rows × cols` plane.
+pub fn encoded_len(precision: Precision, rows: usize, cols: usize) -> usize {
+    if rows == 0 {
+        return 0;
+    }
+    prefix_len(precision, rows, cols) + rows * row_bytes(precision, cols)
+}
+
+/// One subspace's trained, int8-requantized codebook.
+struct SubCodebook {
+    /// f16 bits of the per-subspace quantization scale.
+    scale_bits: u16,
+    /// Quantized entries, centroid-major (`centroids × width`).
+    entries: Vec<i8>,
+    /// Dequantized entries — what the decoder will reconstruct from,
+    /// and what the final assignment pass matches against.
+    deq: Vec<f32>,
+    width: usize,
+}
+
+/// Nearest centroid by f64 squared distance; ties break toward the
+/// lower index (strict `<` scan in centroid order). This single helper
+/// carries the assignment rule for both the Lloyd loop (f64 working
+/// centroids) and the final pass (the int8-requantized codebook,
+/// widened to f64 — exact, since f32 → f64 is lossless), so the
+/// determinism-critical tie-break lives in exactly one place.
+fn nearest(point: &[f32], centroids: &[f64], width: usize, count: usize) -> usize {
+    let mut best = 0usize;
+    let mut best_d = f64::INFINITY;
+    for c in 0..count {
+        let mut d = 0.0f64;
+        for (a, b) in point.iter().zip(&centroids[c * width..(c + 1) * width]) {
+            let t = *a as f64 - b;
+            d += t * t;
+        }
+        if d < best_d {
+            best_d = d;
+            best = c;
+        }
+    }
+    best
+}
+
+/// Train one subspace's codebook on the normalized live rows with
+/// seeded k-means, then requantize it to int8 + f16 scale.
+fn train_subspace(
+    points: &[f32],
+    n: usize,
+    width: usize,
+    c_count: usize,
+    seed: u64,
+) -> SubCodebook {
+    // f64 working centroids (batch-order-stable Lloyd updates)
+    let mut cent = vec![0.0f64; c_count * width];
+    if n > 0 {
+        let mut rng = Rng::seed_from_u64(seed);
+        let init: Vec<usize> = if n >= c_count {
+            rng.sample_indices(n, c_count)
+        } else {
+            (0..c_count).map(|c| c % n).collect()
+        };
+        for (c, &p) in init.iter().enumerate() {
+            for j in 0..width {
+                cent[c * width + j] = points[p * width + j] as f64;
+            }
+        }
+        for _ in 0..KMEANS_ITERS {
+            let mut sums = vec![0.0f64; c_count * width];
+            let mut counts = vec![0u32; c_count];
+            for p in 0..n {
+                let point = &points[p * width..(p + 1) * width];
+                let best = nearest(point, &cent, width, c_count);
+                counts[best] += 1;
+                for (acc, v) in sums[best * width..(best + 1) * width].iter_mut().zip(point) {
+                    *acc += *v as f64;
+                }
+            }
+            for c in 0..c_count {
+                if counts[c] > 0 {
+                    for j in 0..width {
+                        cent[c * width + j] = sums[c * width + j] / counts[c] as f64;
+                    }
+                }
+                // empty clusters keep their previous centroid
+            }
+        }
+    }
+    // requantize: one f16 scale over the subspace, int8 entries
+    let max = cent.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+    let scale_bits = f32_to_f16(max as f32);
+    let scale = f16_to_f32(scale_bits);
+    let mut entries = Vec::with_capacity(c_count * width);
+    let mut deq = Vec::with_capacity(c_count * width);
+    for &v in &cent {
+        let q: i8 = if scale > 0.0 && scale.is_finite() {
+            ((v as f32) / scale * 127.0).round().clamp(-127.0, 127.0) as i8
+        } else {
+            0
+        };
+        entries.push(q);
+        deq.push(q as f32 / 127.0 * scale);
+    }
+    SubCodebook {
+        scale_bits,
+        entries,
+        deq,
+        width,
+    }
+}
+
+/// Encode a row-major `rows × cols` plane into `out` (payload layout:
+/// codebook block, then per-row records). Pure and deterministic: the
+/// same data always yields the same bytes on any thread.
+pub fn encode_plane(out: &mut Vec<u8>, data: &[f32], rows: usize, cols: usize, p: Precision) {
+    debug_assert!(p.is_vq(), "encode_plane on {}", p.name());
+    debug_assert_eq!(data.len(), rows * cols);
+    let start = out.len();
+    if rows == 0 {
+        return;
+    }
+    let s_count = subspaces(cols);
+    let c_count = centroids(p, rows);
+
+    // per-row f16 scales; zero/non-finite-scale rows sit out of training
+    // and decode to exact zeros (times the residual, for vq8r)
+    let mut scale_bits = Vec::with_capacity(rows);
+    let mut scales = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let row = &data[r * cols..(r + 1) * cols];
+        let max = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let bits = f32_to_f16(max);
+        scale_bits.push(bits);
+        scales.push(f16_to_f32(bits));
+    }
+    let live: Vec<usize> = (0..rows)
+        .filter(|&r| scales[r] > 0.0 && scales[r].is_finite())
+        .collect();
+    let mut norm = vec![0.0f32; rows * cols];
+    for &r in &live {
+        let s = scales[r];
+        for c in 0..cols {
+            norm[r * cols + c] = data[r * cols + c] / s;
+        }
+    }
+
+    // train + requantize one codebook per subspace, assign every row
+    let mut books = Vec::with_capacity(s_count);
+    let mut assign = vec![0u8; rows * s_count];
+    for s_i in 0..s_count {
+        let off = s_i * SUB_WIDTH;
+        let w = sub_width(cols, s_i);
+        let mut points = Vec::with_capacity(live.len() * w);
+        for &r in &live {
+            points.extend_from_slice(&norm[r * cols + off..r * cols + off + w]);
+        }
+        let book = train_subspace(&points, live.len(), w, c_count, SEED_BASE + s_i as u64);
+        let deq64: Vec<f64> = book.deq.iter().map(|&v| v as f64).collect();
+        for &r in &live {
+            let point = &norm[r * cols + off..r * cols + off + w];
+            assign[r * s_count + s_i] = nearest(point, &deq64, w, c_count) as u8;
+        }
+        books.push(book);
+    }
+
+    // emit: codebook scales, codebook entries, per-row records
+    for book in &books {
+        out.extend_from_slice(&book.scale_bits.to_le_bytes());
+    }
+    for book in &books {
+        for &q in &book.entries {
+            out.push(q as u8);
+        }
+    }
+    let mut residual = vec![0.0f32; cols];
+    for r in 0..rows {
+        out.extend_from_slice(&scale_bits[r].to_le_bytes());
+        let idx = &assign[r * s_count..(r + 1) * s_count];
+        match p {
+            Precision::Vq4 => {
+                let mut byte = 0u8;
+                for (s_i, &i) in idx.iter().enumerate() {
+                    if s_i % 2 == 0 {
+                        byte = i & 0x0f;
+                        if s_i == s_count - 1 {
+                            out.push(byte);
+                        }
+                    } else {
+                        byte |= (i & 0x0f) << 4;
+                        out.push(byte);
+                    }
+                }
+            }
+            _ => out.extend_from_slice(idx),
+        }
+        if p == Precision::Vq8r {
+            // int8 residual row against the decoder's reconstruction
+            let s = scales[r];
+            for c in 0..cols {
+                let recon = if s > 0.0 && s.is_finite() {
+                    let s_i = c / SUB_WIDTH;
+                    let book = &books[s_i];
+                    let j = c - s_i * SUB_WIDTH;
+                    book.deq[idx[s_i] as usize * book.width + j] * s
+                } else {
+                    0.0
+                };
+                residual[c] = data[r * cols + c] - recon;
+            }
+            super::quant::encode_rows(out, &residual, 1, cols, Precision::Int8);
+        }
+    }
+    debug_assert_eq!(out.len() - start, encoded_len(p, rows, cols));
+}
+
+/// Decode a [`encode_plane`] payload back to f32s. The caller (the
+/// quant dispatcher) has already validated the payload length against
+/// [`encoded_len`]; indices are still range-checked so a crafted frame
+/// cannot read outside the shipped codebook.
+pub fn decode_plane(payload: &[u8], rows: usize, cols: usize, p: Precision) -> Result<Vec<f32>> {
+    debug_assert!(p.is_vq(), "decode_plane on {}", p.name());
+    if rows == 0 {
+        return Ok(Vec::new());
+    }
+    let s_count = subspaces(cols);
+    let c_count = centroids(p, rows);
+    let ib = index_bytes(p, cols);
+    let mut pos = 0usize;
+
+    let mut cb_scales = Vec::with_capacity(s_count);
+    for _ in 0..s_count {
+        cb_scales.push(f16_to_f32(u16::from_le_bytes([payload[pos], payload[pos + 1]])));
+        pos += 2;
+    }
+    // dequantized codebooks, subspace-major
+    let mut deq = Vec::with_capacity(s_count);
+    for (s_i, &scale) in cb_scales.iter().enumerate() {
+        let w = sub_width(cols, s_i);
+        let mut book = Vec::with_capacity(c_count * w);
+        for _ in 0..c_count * w {
+            let q = payload[pos] as i8;
+            pos += 1;
+            book.push(q as f32 / 127.0 * scale);
+        }
+        deq.push(book);
+    }
+
+    let mut data = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        let s = f16_to_f32(u16::from_le_bytes([payload[pos], payload[pos + 1]]));
+        pos += 2;
+        let raw = &payload[pos..pos + ib];
+        pos += ib;
+        for s_i in 0..s_count {
+            let idx = match p {
+                Precision::Vq4 => ((raw[s_i / 2] >> (4 * (s_i % 2))) & 0x0f) as usize,
+                _ => raw[s_i] as usize,
+            };
+            ensure!(
+                idx < c_count,
+                "vq index {idx} out of range (codebook holds {c_count})"
+            );
+            let off = s_i * SUB_WIDTH;
+            let w = sub_width(cols, s_i);
+            for j in 0..w {
+                data[r * cols + off + j] = deq[s_i][idx * w + j] * s;
+            }
+        }
+        if p == Precision::Vq8r {
+            let block = &payload[pos..pos + cols + 2];
+            let res = super::quant::decode_rows(block, 1, cols, Precision::Int8)?;
+            pos += cols + 2;
+            for (dst, r_v) in data[r * cols..(r + 1) * cols].iter_mut().zip(&res) {
+                *dst += r_v;
+            }
+        }
+    }
+    ensure!(
+        pos == payload.len(),
+        "vq payload has {} trailing bytes",
+        payload.len() - pos
+    );
+    Ok(data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn gaussian(rows: usize, cols: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::seed_from_u64(seed);
+        (0..rows * cols).map(|_| rng.normal() as f32 * 0.1).collect()
+    }
+
+    fn roundtrip(data: &[f32], rows: usize, cols: usize, p: Precision) -> Vec<f32> {
+        let mut buf = Vec::new();
+        encode_plane(&mut buf, data, rows, cols, p);
+        assert_eq!(buf.len(), encoded_len(p, rows, cols), "{}", p.name());
+        decode_plane(&buf, rows, cols, p).unwrap()
+    }
+
+    fn mse(a: &[f32], b: &[f32]) -> f64 {
+        if a.is_empty() {
+            return 0.0;
+        }
+        let sse: f64 = a.iter().zip(b).map(|(x, y)| ((x - y) as f64).powi(2)).sum();
+        sse / a.len() as f64
+    }
+
+    #[test]
+    fn geometry_matches_doc_numbers() {
+        // K = 25: five 5-wide subspaces
+        assert_eq!(subspaces(25), 5);
+        assert_eq!(subspaces(8), 2);
+        assert_eq!(subspaces(0), 0);
+        assert_eq!(row_bytes(Precision::Vq8, 25), 7);
+        assert_eq!(row_bytes(Precision::Vq4, 25), 5);
+        assert_eq!(row_bytes(Precision::Vq8r, 25), 34);
+        // the prototype-pinned structural lengths
+        assert_eq!(encoded_len(Precision::Vq8, 64, 25), 1258);
+        assert_eq!(encoded_len(Precision::Vq4, 64, 25), 730);
+        assert_eq!(encoded_len(Precision::Vq8, 1763, 25), 13951);
+        assert_eq!(encoded_len(Precision::Vq4, 1763, 25), 9225);
+        assert_eq!(encoded_len(Precision::Vq8, 0, 25), 0);
+        // codebook scales with the frame until the cap
+        assert_eq!(centroids(Precision::Vq8, 8), 4);
+        assert_eq!(centroids(Precision::Vq8, 38), 19);
+        assert_eq!(centroids(Precision::Vq8, 1763), 64);
+        assert_eq!(centroids(Precision::Vq4, 1763), 16);
+        assert_eq!(centroids(Precision::Vq8, 1), 2);
+    }
+
+    #[test]
+    fn vq_beats_int8_structurally_above_tiny_frames() {
+        for rows in [4usize, 8, 38, 64, 128, 512, 1763] {
+            let int8 = super::super::quant::encoded_len(rows, 25, Precision::Int8);
+            let vq8 = encoded_len(Precision::Vq8, rows, 25);
+            let vq4 = encoded_len(Precision::Vq4, rows, 25);
+            assert!(int8 > vq8, "rows={rows}: int8 {int8} !> vq8 {vq8}");
+            assert!(vq8 > vq4, "rows={rows}: vq8 {vq8} !> vq4 {vq4}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_deterministic_and_self_consistent() {
+        let (rows, cols) = (64, 25);
+        let data = gaussian(rows, cols, 2021);
+        for p in [Precision::Vq8, Precision::Vq4, Precision::Vq8r] {
+            let mut a = Vec::new();
+            encode_plane(&mut a, &data, rows, cols, p);
+            let mut b = Vec::new();
+            encode_plane(&mut b, &data, rows, cols, p);
+            assert_eq!(a, b, "{} encode not deterministic", p.name());
+            let dec1 = decode_plane(&a, rows, cols, p).unwrap();
+            let dec2 = decode_plane(&a, rows, cols, p).unwrap();
+            for (x, y) in dec1.iter().zip(&dec2) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn error_shrinks_with_codebook_size_and_residual() {
+        // iid Gaussian is vq's worst case (no structure to exploit);
+        // the ordering vq4 ≥ vq8 ≥ vq8r must hold even there
+        let (rows, cols) = (64, 25);
+        let data = gaussian(rows, cols, 2021);
+        let e4 = mse(&data, &roundtrip(&data, rows, cols, Precision::Vq4));
+        let e8 = mse(&data, &roundtrip(&data, rows, cols, Precision::Vq8));
+        let e8r = mse(&data, &roundtrip(&data, rows, cols, Precision::Vq8r));
+        let var = mse(&data, &vec![0.0; data.len()]);
+        assert!(e4 > e8 * 0.8, "vq4 {e4} should not beat vq8 {e8}");
+        assert!(e8r < e8, "residual must improve: {e8r} !< {e8}");
+        // sanity envelopes around the prototype measurements
+        assert!(e8 < var * 0.35, "vq8 mse {e8} vs var {var}");
+        assert!(e8r < var * 1e-3, "vq8r mse {e8r} vs var {var}");
+    }
+
+    #[test]
+    fn zero_and_tiny_inputs_roundtrip() {
+        for p in [Precision::Vq8, Precision::Vq4, Precision::Vq8r] {
+            // all-zero matrix decodes to exact zeros
+            let zeros = vec![0.0f32; 6 * 25];
+            let dec = roundtrip(&zeros, 6, 25, p);
+            assert_eq!(dec, zeros, "{}", p.name());
+            // empty frame
+            let dec = roundtrip(&[], 0, 25, p);
+            assert!(dec.is_empty());
+            // single row
+            let one = gaussian(1, 25, 9);
+            let dec = roundtrip(&one, 1, 25, p);
+            assert_eq!(dec.len(), 25);
+            // narrow matrices (cols not a multiple of SUB_WIDTH)
+            for cols in [1usize, 3, 7, 12] {
+                let data = gaussian(10, cols, 30 + cols as u64);
+                let dec = roundtrip(&data, 10, cols, p);
+                assert_eq!(dec.len(), 10 * cols, "{} cols={cols}", p.name());
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_zero_rows_keep_exact_zeros() {
+        let (rows, cols) = (20, 25);
+        let mut data = gaussian(rows, cols, 11);
+        for r in [0usize, 7, 19] {
+            data[r * cols..(r + 1) * cols].fill(0.0);
+        }
+        for p in [Precision::Vq8, Precision::Vq4] {
+            let dec = roundtrip(&data, rows, cols, p);
+            for r in [0usize, 7, 19] {
+                assert!(
+                    dec[r * cols..(r + 1) * cols].iter().all(|&v| v == 0.0),
+                    "{} row {r} not exactly zero",
+                    p.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_range_index_is_rejected() {
+        let (rows, cols) = (8, 25);
+        let data = gaussian(rows, cols, 5);
+        let mut buf = Vec::new();
+        encode_plane(&mut buf, &data, rows, cols, Precision::Vq8);
+        // first row's first index byte sits right after the codebook
+        // block and the row's f16 scale
+        let idx_pos = prefix_len(Precision::Vq8, rows, cols) + 2;
+        buf[idx_pos] = 0xff; // far beyond the 4-centroid codebook
+        let err = decode_plane(&buf, rows, cols, Precision::Vq8).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn vq8r_error_is_residual_int8_small() {
+        let (rows, cols) = (48, 25);
+        let data = gaussian(rows, cols, 77);
+        let dec = roundtrip(&data, rows, cols, Precision::Vq8r);
+        // per element: |x - dec| is the int8 quantization error of the
+        // residual, which is ~1% of the residual magnitude — far below
+        // the raw vq error
+        let e8 = mse(&data, &roundtrip(&data, rows, cols, Precision::Vq8));
+        let e8r = mse(&data, &dec);
+        assert!(e8r * 100.0 < e8, "vq8r {e8r} not ≪ vq8 {e8}");
+    }
+}

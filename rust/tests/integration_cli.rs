@@ -165,6 +165,56 @@ fn train_with_entropy_flag() {
 }
 
 #[test]
+fn train_with_vq_codec_and_auto_topk() {
+    let (ok, text) = run(&[
+        "train",
+        "--dataset",
+        "synthetic-small",
+        "--backend",
+        "reference",
+        "--codec",
+        "vq8",
+        "--entropy",
+        "full",
+        "--sparse-topk",
+        "auto",
+        "--iterations",
+        "3",
+        "--set",
+        "dataset.users=48",
+        "--set",
+        "dataset.items=96",
+        "--set",
+        "dataset.interactions=600",
+        "--set",
+        "train.theta=12",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("codec=vq8"), "{text}");
+    let (ok, _) = run(&["train", "--codec", "vq9"]);
+    assert!(!ok, "bad vq codec name must fail");
+    let (ok, _) = run(&["train", "--sparse-topk", "many"]);
+    assert!(!ok, "non-numeric non-auto sparse-topk must fail");
+    // mutually exclusive settings are rejected by config validation
+    let (ok, _) = run(&[
+        "info",
+        "--set",
+        "codec.sparse_topk_auto=true",
+        "--set",
+        "codec.sparse_topk=8",
+    ]);
+    assert!(!ok, "auto + fixed top-k must be rejected");
+}
+
+#[test]
+fn info_reports_auto_topk() {
+    let (ok, text) = run(&["info", "--sparse-topk", "auto", "--codec", "vq4"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("sparse_topk=auto"), "{text}");
+    assert!(text.contains("vq4"), "{text}");
+}
+
+#[test]
 fn experiments_table1_writes_csv() {
     let dir = std::env::temp_dir().join("fedpayload_cli_t1");
     std::fs::create_dir_all(&dir).unwrap();

@@ -246,6 +246,150 @@ fn entropy_runs_are_thread_count_invariant() {
     assert_eq!(t1.ledger.sim_secs.to_bits(), t4.ledger.sim_secs.to_bits());
 }
 
+/// The PR's acceptance comparison: at matched settings (identical
+/// selection, participants, and entropy mode), vq8+full moves strictly
+/// fewer measured download bytes than int8+full.
+#[test]
+fn vq8_full_downloads_are_strictly_smaller_than_int8_full() {
+    let mut int8_cfg = entropy_cfg(EntropyMode::Full);
+    int8_cfg.codec.precision = Precision::Int8;
+    let mut vq8_cfg = entropy_cfg(EntropyMode::Full);
+    vq8_cfg.codec.precision = Precision::Vq8;
+    let a = run(&int8_cfg);
+    let b = run(&vq8_cfg);
+    assert_eq!(b.codec, "vq8");
+    assert_eq!(a.ledger.down_msgs, b.ledger.down_msgs);
+    assert!(
+        b.ledger.down_bytes < a.ledger.down_bytes,
+        "vq8+full downloads {} !< int8+full downloads {}",
+        b.ledger.down_bytes,
+        a.ledger.down_bytes
+    );
+    // ... and already wins without the entropy layer (structural)
+    let mut int8_plain = entropy_cfg(EntropyMode::None);
+    int8_plain.codec.precision = Precision::Int8;
+    let mut vq8_plain = entropy_cfg(EntropyMode::None);
+    vq8_plain.codec.precision = Precision::Vq8;
+    let ap = run(&int8_plain);
+    let bp = run(&vq8_plain);
+    assert!(
+        bp.ledger.down_bytes < ap.ledger.down_bytes,
+        "plain vq8 downloads {} !< plain int8 {}",
+        bp.ledger.down_bytes,
+        ap.ledger.down_bytes
+    );
+    // uploads ride the int8 plane under vq: same message count, and the
+    // frame structure is int8's (vq codebooks never ship uplink)
+    assert_eq!(ap.ledger.up_msgs, bp.ledger.up_msgs);
+}
+
+/// vq8 training on learnable data: lossier than int8 by construction,
+/// but it must still learn while moving ~4–5× fewer download bytes than
+/// f32. The exact metric delta is workload-dependent (reported by the
+/// determinism CI legs and ROADMAP); here the bound is deliberately
+/// loose so the test pins "learns", not a point estimate.
+#[test]
+fn vq8_training_learns_with_bounded_metric_cost() {
+    let f32_report = run(&learnable_cfg(Precision::F32));
+    let vq8_report = run(&learnable_cfg(Precision::Vq8));
+    let f32_map = f32_report.final_metrics.map;
+    let vq8_map = vq8_report.final_metrics.map;
+    assert!(f32_map > 0.05, "f32 baseline failed to learn: MAP {f32_map}");
+    assert!(
+        vq8_map > 0.5 * f32_map,
+        "vq8 lost more than half the f32 MAP ({vq8_map:.4} vs {f32_map:.4})"
+    );
+    println!(
+        "vq8 MAP delta vs f32: {:+.2}% (f32 {f32_map:.4}, vq8 {vq8_map:.4})",
+        100.0 * (vq8_map - f32_map) / f32_map
+    );
+    assert!(
+        vq8_report.ledger.down_bytes * 4 < f32_report.ledger.down_bytes,
+        "vq8 downloads {} not >4x under f32 {}",
+        vq8_report.ledger.down_bytes,
+        f32_report.ledger.down_bytes
+    );
+}
+
+/// The entropy layer stays bit-transparent under the vq quantizer: a
+/// vq8+full run trains identically to its own vq8 plain run — only the
+/// measured bytes differ (the determinism CI job re-proves this via
+/// `--dump-rounds` diffs at threads 1 and 4).
+#[test]
+fn vq8_entropy_layer_is_bitwise_transparent_to_training() {
+    let mut plain_cfg = entropy_cfg(EntropyMode::None);
+    plain_cfg.codec.precision = Precision::Vq8;
+    let mut full_cfg = entropy_cfg(EntropyMode::Full);
+    full_cfg.codec.precision = Precision::Vq8;
+    let plain = run(&plain_cfg);
+    let full = run(&full_cfg);
+    assert_eq!(full.entropy, "full");
+    assert_eq!(
+        plain.final_metrics.map.to_bits(),
+        full.final_metrics.map.to_bits(),
+        "entropy coding changed vq8 training"
+    );
+    for (a, b) in plain.history.iter().zip(&full.history) {
+        assert_eq!(a.raw.map.to_bits(), b.raw.map.to_bits(), "iter {}", a.iter);
+    }
+    assert!(
+        full.ledger.down_bytes < plain.ledger.down_bytes,
+        "vq8+full {} !< vq8 plain {} download bytes (low-entropy indices)",
+        full.ledger.down_bytes,
+        plain.ledger.down_bytes
+    );
+    assert!(full.ledger.up_bytes < plain.ledger.up_bytes);
+}
+
+/// `--sparse-topk auto` can only shrink (or keep) upload traffic
+/// relative to keep-all, never grow it, and leaves downloads untouched.
+#[test]
+fn sparse_topk_auto_never_grows_uploads() {
+    let mut dense_cfg = base_cfg();
+    dense_cfg.bandit.strategy = Strategy::Random;
+    let mut auto_cfg = dense_cfg.clone();
+    auto_cfg.codec.sparse_topk_auto = true;
+    let dense = run(&dense_cfg);
+    let auto_r = run(&auto_cfg);
+    assert_eq!(dense.ledger.down_bytes, auto_r.ledger.down_bytes);
+    assert_eq!(dense.ledger.up_msgs, auto_r.ledger.up_msgs);
+    assert!(
+        auto_r.ledger.up_bytes <= dense.ledger.up_bytes,
+        "auto top-k grew uploads: {} > {}",
+        auto_r.ledger.up_bytes,
+        dense.ledger.up_bytes
+    );
+}
+
+/// Everything new at once, across thread counts: vq8 downloads +
+/// full entropy + auto top-k must train bit-identically at threads 1
+/// and 4 (codebook training and the auto tuner are pure functions of
+/// the round data, so the batch-order merge contract is untouched).
+#[test]
+fn vq_auto_runs_are_thread_count_invariant() {
+    let workload = |threads: usize| {
+        let mut cfg = entropy_cfg(EntropyMode::Full);
+        cfg.codec.precision = Precision::Vq8;
+        cfg.codec.sparse_topk_auto = true;
+        cfg.dataset.users = 160;
+        cfg.dataset.interactions = 5000;
+        cfg.train.theta = 128;
+        cfg.train.iterations = 6;
+        cfg.runtime.threads = threads;
+        run(&cfg)
+    };
+    let t1 = workload(1);
+    let t4 = workload(4);
+    assert_eq!(
+        t1.final_metrics.map.to_bits(),
+        t4.final_metrics.map.to_bits(),
+        "threads=4 diverged from threads=1 under vq8+full+auto"
+    );
+    assert_eq!(t1.ledger.down_bytes, t4.ledger.down_bytes);
+    assert_eq!(t1.ledger.up_bytes, t4.ledger.up_bytes);
+    assert_eq!(t1.ledger.sim_secs.to_bits(), t4.ledger.sim_secs.to_bits());
+}
+
 #[test]
 fn codec_runs_are_deterministic() {
     let mut cfg = base_cfg();
