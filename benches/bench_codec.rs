@@ -12,7 +12,10 @@
 
 use fedpayload::rng::Rng;
 use fedpayload::telemetry::bench;
-use fedpayload::wire::{make_codec_with, EntropyMode, Precision, SparsePolicy};
+use fedpayload::wire::{
+    make_codec_with, EntropyMode, Precision, ReuseMode, SessionMode, SparsePolicy, VqClientState,
+    VqSession,
+};
 
 struct Row {
     name: String,
@@ -80,6 +83,87 @@ fn main() {
                 ratio_vs_plain: ratio,
                 encode_mbps,
                 decode_mbps,
+            });
+        }
+    }
+
+    // --- vq8 codebook-session legs: the stable-Q two-round workload.
+    // Round 1 opens the session (full codebook, generation 1); round 2
+    // encodes Q after a small drift (0.002 ≈ a fraction of an Adam
+    // step on these 0.1-scale factors), the steady state the session
+    // machinery exists for. `auto` must reuse (frame = rows only);
+    // the forced-`delta` leg measures the centroid-delta plane. These
+    // frame lengths are deterministic and gated by ci/bench_gate.py —
+    // the steady row landing under dense_vq8_* is the PR acceptance.
+    println!("\n=== vq8 codebook-session frames (round-2 drift 0.002) ===");
+    let mut rng2 = Rng::seed_from_u64(8);
+    let q2: Vec<f32> = q.iter().map(|&v| v + rng2.normal() as f32 * 0.002).collect();
+    let mut session_plain = [0usize; 3]; // open, steady, delta at entropy=none
+    for e in [EntropyMode::None, EntropyMode::Range] {
+        let mut auto = VqSession::new(Precision::Vq8, e, ReuseMode::Auto).unwrap();
+        let open = auto.encode_dense(&q, rows, cols).unwrap();
+        let steady_base = auto.clone();
+        let steady = auto.encode_dense(&q2, rows, cols).unwrap();
+        let mut delta_sess = VqSession::new(Precision::Vq8, e, ReuseMode::Delta).unwrap();
+        delta_sess.encode_dense(&q, rows, cols).unwrap();
+        let delta_base = delta_sess.clone();
+        let delta = delta_sess.encode_dense(&q2, rows, cols).unwrap();
+        // expected modes: full / reuse / delta. A bench must report, not
+        // panic — if the mode-choice lands elsewhere the row lengths
+        // shift and the bench-gate flags it against the baseline, which
+        // is the honest failure signal.
+        for (what, got, want) in [
+            ("open", open.mode, SessionMode::Full),
+            ("steady", steady.mode, SessionMode::Reuse),
+            ("delta", delta.mode, SessionMode::Delta),
+        ] {
+            if got != want {
+                eprintln!(
+                    "WARNING: session {what} frame chose mode {} (expected {}) — \
+                     the session_vq8_{what}_* rows measure that mode instead",
+                    got.name(),
+                    want.name()
+                );
+            }
+        }
+        // a client that decoded the open frame, for steady/delta decode
+        let mut synced = VqClientState::new();
+        synced.decode_dense(&open.frame).unwrap().into_data().unwrap();
+        let legs: [(&str, &[u8]); 3] = [
+            ("open", &open.frame),
+            ("steady", &steady.frame),
+            ("delta", &delta.frame),
+        ];
+        for (i, (leg, frame)) in legs.iter().enumerate() {
+            if e == EntropyMode::None {
+                session_plain[i] = frame.len();
+            }
+            let ratio = session_plain[i] as f64 / frame.len() as f64;
+            println!(
+                "session {leg:<6} entropy={:<6} frame = {:>7} bytes ({:.3}x vs plain)",
+                e.name(),
+                frame.len(),
+                ratio
+            );
+            let enc = bench(&format!("encode_session_{leg}_{}", e.name()), || match i {
+                0 => {
+                    let mut s = VqSession::new(Precision::Vq8, e, ReuseMode::Auto).unwrap();
+                    s.encode_dense(&q, rows, cols).unwrap().frame
+                }
+                1 => steady_base.clone().encode_dense(&q2, rows, cols).unwrap().frame,
+                _ => delta_base.clone().encode_dense(&q2, rows, cols).unwrap().frame,
+            });
+            let dec = bench(&format!("decode_session_{leg}_{}", e.name()), || match i {
+                0 => VqClientState::new().decode_dense(&open.frame).unwrap(),
+                1 => synced.clone().decode_dense(&steady.frame).unwrap(),
+                _ => synced.clone().decode_dense(&delta.frame).unwrap(),
+            });
+            results.push(Row {
+                name: format!("session_vq8_{leg}_{}", e.name()),
+                frame_bytes: frame.len(),
+                ratio_vs_plain: ratio,
+                encode_mbps: raw_mb / (enc.mean_ns / 1e9),
+                decode_mbps: raw_mb / (dec.mean_ns / 1e9),
             });
         }
     }

@@ -12,7 +12,13 @@
 #      equal its own plain int8 (resp. plain vq8) dump,
 #   4. the byte ladder: entropy coding strictly shrinks int8 downloads,
 #      and the vq8 quantizer lands strictly under int8 — plain vs plain
-#      and full vs full (the PR acceptance comparison).
+#      and full vs full (the PR acceptance comparison),
+#   5. codebook sessions (wire::vq::session): `codebook_reuse=delta`
+#      trains bit-identically to the stateless vq8 path (a delta frame
+#      reconstructs the fresh codebook exactly), `codebook_reuse=auto`
+#      is threads-1/4 bit-identical like everything else, and on the
+#      stable-Q strategy-full workload auto moves strictly fewer
+#      download bytes than the per-frame-codebook baseline.
 #
 # Usage:  ci/determinism.sh [workdir]
 #   BIN=path/to/fedpayload overrides the binary (default:
@@ -53,6 +59,12 @@ run rounds_int8_plain.csv   --codec int8 --threads 1
 run rounds_vq8_full_t1.csv  --codec vq8 --entropy full --threads 1
 run rounds_vq8_full_t4.csv  --codec vq8 --entropy full --threads 4
 run rounds_vq8_plain.csv    --codec vq8 --threads 1
+run rounds_vq8_delta_t1.csv --codec vq8 --entropy full --codebook-reuse delta --threads 1
+run rounds_vq8_auto_t1.csv  --codec vq8 --entropy full --codebook-reuse auto \
+                            --strategy full --threads 1
+run rounds_vq8_auto_t4.csv  --codec vq8 --entropy full --codebook-reuse auto \
+                            --strategy full --threads 4
+run rounds_vq8_sf_off.csv   --codec vq8 --entropy full --strategy full --threads 1
 
 echo "== 1+2: round records must be bit-identical across runs and thread counts =="
 diff rounds_t1_a.csv rounds_t1_b.csv
@@ -76,6 +88,22 @@ test "$INT8_FULL" -lt "$INT8_PLAIN"   # entropy shrinks int8 downloads
 test "$VQ8_PLAIN" -lt "$INT8_PLAIN"   # the vq quantizer lands under int8
 test "$VQ8_FULL"  -lt "$INT8_FULL"    # ... and stays under with entropy on (acceptance)
 test "$VQ8_FULL"  -lt "$VQ8_PLAIN"    # low-entropy indices: range coding bites on vq
+echo "   ok"
+
+echo "== 5: codebook sessions =="
+# auto is threads-invariant like every other codec config
+diff rounds_vq8_auto_t1.csv rounds_vq8_auto_t4.csv
+# delta frames reconstruct the fresh codebook exactly (post-requant):
+# training is bit-identical to the stateless vq8+full run — only the
+# byte columns may differ
+diff <(metrics_cols rounds_vq8_full_t1.csv) <(metrics_cols rounds_vq8_delta_t1.csv)
+# stable-Q workload (strategy full: same rows every round, Adam-step
+# drift): auto reuses/deltas its way strictly under the stateless
+# per-frame-codebook bytes at matched settings
+AUTO_DOWN=$(down_bytes rounds_vq8_auto_t1.csv)
+SF_OFF_DOWN=$(down_bytes rounds_vq8_sf_off.csv)
+echo "   down_bytes: vq8+full strategy-full off=$SF_OFF_DOWN auto=$AUTO_DOWN"
+test "$AUTO_DOWN" -lt "$SF_OFF_DOWN"
 echo "   ok"
 
 echo "determinism: all checks passed"

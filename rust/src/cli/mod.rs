@@ -45,6 +45,7 @@ const VALUE_KEYS: &[&str] = &[
     "codec",
     "precision",
     "entropy",
+    "codebook-reuse",
     "sparse-topk",
     "dump-rounds",
 ];
@@ -147,6 +148,8 @@ mod tests {
         assert_eq!(a.opt("precision"), Some("f16"));
         let a = parse(&["train", "--entropy", "full"]);
         assert_eq!(a.opt("entropy"), Some("full"));
+        let a = parse(&["train", "--codebook-reuse", "auto"]);
+        assert_eq!(a.opt("codebook-reuse"), Some("auto"));
     }
 
     #[test]

@@ -87,6 +87,15 @@ pub struct Fleet {
     /// participates in a round. Empty until first participation; never
     /// transmitted (FCF privacy boundary).
     factors: Vec<Vec<f32>>,
+    /// Download-codebook generation each client holds
+    /// (`wire::vq::session`): `None` until the client first receives a
+    /// session frame, and again after [`Fleet::invalidate_download_cache`]
+    /// (the churn hook). The codebook *contents* live device-side; the
+    /// coordinator tracks only the generation tag — what a real
+    /// deployment learns from the client's resync request — to decide
+    /// which clients need a full-codebook frame and to attribute its
+    /// bytes in the ledger.
+    download_gen: Vec<Option<u32>>,
 }
 
 impl Fleet {
@@ -102,6 +111,7 @@ impl Fleet {
         Fleet {
             view: FleetView::from_clients(clients),
             factors: vec![Vec::new(); n],
+            download_gen: vec![None; n],
         }
     }
 
@@ -134,6 +144,28 @@ impl Fleet {
     /// Install a client's freshly solved local factor (post-barrier).
     pub fn set_factors(&mut self, id: usize, p: Vec<f32>) {
         self.factors[id] = p;
+    }
+
+    /// The download-codebook generation a client holds (`None` = no
+    /// cached codebook; the next session frame it receives must be a
+    /// full-codebook resync).
+    pub fn download_gen(&self, id: usize) -> Option<u32> {
+        self.download_gen[id]
+    }
+
+    /// Record that a client received (and can decode) generation `gen`
+    /// — called by the coordinator after every session download it
+    /// serves, shared frame and resync alike.
+    pub fn set_download_gen(&mut self, id: usize, gen: u32) {
+        self.download_gen[id] = Some(gen);
+    }
+
+    /// Drop a client's cached download codebook — the churn hook: the
+    /// device evicted its cache (reinstall, storage pressure) or missed
+    /// the rounds that shipped the generation it would need. Its next
+    /// session download resyncs via a full-codebook frame.
+    pub fn invalidate_download_cache(&mut self, id: usize) {
+        self.download_gen[id] = None;
     }
 
     /// Draw Θ distinct participants for a round. The paper's server only
@@ -190,6 +222,18 @@ mod tests {
         s.sort_unstable();
         s.dedup();
         assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn download_gen_tracks_and_invalidates() {
+        let mut f = fleet();
+        assert_eq!(f.download_gen(0), None);
+        f.set_download_gen(0, 3);
+        f.set_download_gen(1, 3);
+        assert_eq!(f.download_gen(0), Some(3));
+        f.invalidate_download_cache(0);
+        assert_eq!(f.download_gen(0), None, "invalidate must clear the tag");
+        assert_eq!(f.download_gen(1), Some(3), "other clients untouched");
     }
 
     #[test]

@@ -183,6 +183,15 @@ pub struct CodecConfig {
     /// Decoded payloads are bit-identical across modes — only the
     /// measured frame lengths change.
     pub entropy: crate::wire::EntropyMode,
+    /// Cross-round codebook sessions for the vq download codecs:
+    /// `off | delta | auto` (`wire::vq::session`). `off` ships a fresh
+    /// in-frame codebook every round (stateless v1 frames); `delta`
+    /// ships int8 centroid deltas against the previous generation
+    /// (bit-transparent to training); `auto` additionally reuses the
+    /// cached codebook verbatim while its measured reconstruction
+    /// error stays within budget, choosing per frame by measured
+    /// encoded bytes. Ignored (with a warning) for scalar precisions.
+    pub codebook_reuse: crate::wire::ReuseMode,
     /// Upload top-k sparsification: keep only the k largest-norm gradient
     /// rows per upload (0 = keep all nonzero rows).
     pub sparse_topk: usize,
@@ -299,6 +308,7 @@ impl RunConfig {
             codec: CodecConfig {
                 precision: crate::wire::Precision::F32,
                 entropy: crate::wire::EntropyMode::None,
+                codebook_reuse: crate::wire::ReuseMode::Off,
                 sparse_topk: 0,
                 sparse_topk_auto: false,
                 sparse_threshold: 0.0,
@@ -440,6 +450,9 @@ impl RunConfig {
         }
         if let Some(v) = doc.get("codec.entropy") {
             cfg.codec.entropy = crate::wire::EntropyMode::parse(v.as_str()?)?;
+        }
+        if let Some(v) = doc.get("codec.codebook_reuse") {
+            cfg.codec.codebook_reuse = crate::wire::ReuseMode::parse(v.as_str()?)?;
         }
         take!("codec.sparse_topk", cfg.codec.sparse_topk, as_usize);
         take!(
@@ -622,9 +635,26 @@ mod tests {
         let c = RunConfig::paper_defaults();
         assert_eq!(c.codec.precision, crate::wire::Precision::F32);
         assert_eq!(c.codec.entropy, crate::wire::EntropyMode::None);
+        assert_eq!(c.codec.codebook_reuse, crate::wire::ReuseMode::Off);
         assert_eq!(c.codec.sparse_topk, 0);
         assert!(!c.codec.sparse_topk_auto);
         assert_eq!(c.codec.sparse_threshold, 0.0);
+    }
+
+    #[test]
+    fn codebook_reuse_parses_via_config() {
+        for (name, m) in [
+            ("off", crate::wire::ReuseMode::Off),
+            ("delta", crate::wire::ReuseMode::Delta),
+            ("auto", crate::wire::ReuseMode::Auto),
+        ] {
+            let cfg = RunConfig::from_toml_str(&format!(
+                "[codec]\nprecision = \"vq8\"\ncodebook_reuse = \"{name}\"\n"
+            ))
+            .unwrap();
+            assert_eq!(cfg.codec.codebook_reuse, m);
+        }
+        assert!(RunConfig::from_toml_str("[codec]\ncodebook_reuse = \"always\"\n").is_err());
     }
 
     #[test]

@@ -59,6 +59,22 @@ pub const PRECISIONS: &[&str] = &["f64", "f32", "f16", "int8", "vq8", "vq4"];
 /// measuring the entropy layer's effect on every precision.
 pub const ENTROPY_MODES: &[&str] = &["none", "full"];
 
+/// Codebook-reuse modes swept by [`codec_sweep`] for the vq precisions
+/// (scalar precisions have no codebook to reuse and sweep only `off`).
+/// `delta` stays out of the default grid: it trains bit-identically to
+/// `off` by construction (the determinism CI proves it), so its only
+/// sweep-visible effect is the byte column the bench gate already pins.
+pub const VQ_REUSE_MODES: &[&str] = &["off", "auto"];
+
+/// Reuse modes applicable to a precision in the sweep grid.
+pub fn reuse_modes_for(precision: &str) -> &'static [&'static str] {
+    if precision.starts_with("vq") {
+        VQ_REUSE_MODES
+    } else {
+        &["off"]
+    }
+}
+
 /// Human label of a config's wire codec, e.g. `f32` or `int8+full`
 /// (precision plus the entropy mode when one is active) — the `codec`
 /// column of the experiment outputs.
@@ -380,19 +396,26 @@ pub fn fig3(out_dir: &Path, dataset: &str, scale: &Scale, backend: &str) -> Resu
 // Codec sweep (beyond the paper)
 
 /// Wire-codec payload sweep: fix the bandit axis (FCF-BTS at 75%
-/// reduction) and sweep codec precision × entropy mode, reporting the
-/// **measured** ledger bytes next to the recommendation metrics.
-/// Together with [`fig2`] this spans the full payload grid:
-/// `bytes/round = Θ × frame_len(M_s, K, precision, entropy)`. Because the
-/// entropy layer is lossless, each precision's metric columns are
-/// identical across its entropy rows — only the byte columns move; the
-/// README's codec table is regenerated from this output.
+/// reduction) and sweep codec precision × entropy mode × (for the vq
+/// precisions) codebook-reuse mode, reporting the **measured** ledger
+/// bytes next to the recommendation metrics. Together with [`fig2`]
+/// this spans the full payload grid:
+/// `bytes/round = Θ × frame_len(M_s, K, precision, entropy, session)`.
+/// Because the entropy layer is lossless, each precision's metric
+/// columns are identical across its entropy rows at `reuse = off` —
+/// only the byte columns move; the README's codec table is regenerated
+/// from this output. The `auto` rows are the adaptive-session
+/// measurement: under bandit selection the per-round row subsets churn,
+/// so auto mostly re-ships (its win lives on stable-Q workloads — see
+/// the bench session legs); the sweep records what it does on a *hard*
+/// workload rather than a flattering one.
 pub fn codec_sweep(out_dir: &Path, dataset: &str, scale: &Scale, backend: &str) -> Result<()> {
     const REDUCTION_PCT: u32 = 75;
     let header = [
         "dataset",
         "precision",
         "entropy",
+        "reuse",
         "strategy",
         "reduction_pct",
         "map",
@@ -413,37 +436,43 @@ pub fn codec_sweep(out_dir: &Path, dataset: &str, scale: &Scale, backend: &str) 
         let mut plain_bytes = None;
         for entropy in ENTROPY_MODES {
             cfg.codec.entropy = crate::wire::EntropyMode::parse(entropy)?;
-            let reports = run_strategies_on_split(&cfg, &split, &[Strategy::Bts], fraction)?;
-            let report = &reports["bts"];
-            let total = report.ledger.total_bytes();
-            let per_round = total / report.iterations.max(1) as u64;
-            let vs_plain = match plain_bytes {
-                None => {
-                    plain_bytes = Some(total);
-                    String::new()
-                }
-                Some(p) if p > 0 => format!(" ({:.1}% vs none)", 100.0 * total as f64 / p as f64),
-                Some(_) => String::new(),
-            };
-            println!(
-                "  {precision:<5} entropy={entropy:<6} map={:.4} f1={:.4} \
-                 traffic/round={}{vs_plain}",
-                report.final_metrics.map,
-                report.final_metrics.f1,
-                human_bytes(per_round)
-            );
-            csv.row(&[
-                dataset.to_string(),
-                precision.to_string(),
-                entropy.to_string(),
-                "fcf-bts".to_string(),
-                REDUCTION_PCT.to_string(),
-                format!("{:.4}", report.final_metrics.map),
-                format!("{:.4}", report.final_metrics.f1),
-                report.ledger.down_bytes.to_string(),
-                report.ledger.up_bytes.to_string(),
-                per_round.to_string(),
-            ])?;
+            for reuse in reuse_modes_for(precision) {
+                cfg.codec.codebook_reuse = crate::wire::ReuseMode::parse(reuse)?;
+                let reports = run_strategies_on_split(&cfg, &split, &[Strategy::Bts], fraction)?;
+                let report = &reports["bts"];
+                let total = report.ledger.total_bytes();
+                let per_round = total / report.iterations.max(1) as u64;
+                let vs_plain = match plain_bytes {
+                    None => {
+                        plain_bytes = Some(total);
+                        String::new()
+                    }
+                    Some(p) if p > 0 => {
+                        format!(" ({:.1}% vs none)", 100.0 * total as f64 / p as f64)
+                    }
+                    Some(_) => String::new(),
+                };
+                println!(
+                    "  {precision:<5} entropy={entropy:<6} reuse={reuse:<4} map={:.4} \
+                     f1={:.4} traffic/round={}{vs_plain}",
+                    report.final_metrics.map,
+                    report.final_metrics.f1,
+                    human_bytes(per_round)
+                );
+                csv.row(&[
+                    dataset.to_string(),
+                    precision.to_string(),
+                    entropy.to_string(),
+                    reuse.to_string(),
+                    "fcf-bts".to_string(),
+                    REDUCTION_PCT.to_string(),
+                    format!("{:.4}", report.final_metrics.map),
+                    format!("{:.4}", report.final_metrics.f1),
+                    report.ledger.down_bytes.to_string(),
+                    report.ledger.up_bytes.to_string(),
+                    per_round.to_string(),
+                ])?;
+            }
         }
     }
     csv.flush()

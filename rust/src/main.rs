@@ -35,6 +35,7 @@ USAGE:
                    [--codec f64|f32|f16|int8|vq8|vq4|vq8r]
                    [--sparse-topk N|auto]
                    [--entropy none|varint|range|full]
+                   [--codebook-reuse off|delta|auto]
                    [--threads N] [--backend pjrt|reference]
                    [--config file.toml] [--set path=value ...]
                    [--dump-rounds file.csv]
@@ -54,10 +55,17 @@ USAGE:
    indices and/or range-coded payload bytes — decoded payloads are
    bit-identical to --entropy none, only the measured frame bytes shrink
    (codebook indices are low-entropy, so vq is where range coding bites
-   on downloads). --threads N runs each round's client batches on N
-   parallel lanes — bit-identical results for any N; ci/determinism.sh
-   diffs --dump-rounds records to enforce it, including int8+full and
-   vq8+full legs.)
+   on downloads). --codebook-reuse turns the vq codebook into a
+   cross-round session resource: `delta` ships int8 centroid deltas
+   against the previous generation (bit-transparent to training),
+   `auto` additionally reuses the cached codebook verbatim while its
+   measured reconstruction error stays in budget — clients that missed
+   rounds hit a typed stale-generation signal and receive a
+   full-codebook resync frame, charged to them in the ledger.
+   --threads N runs each round's client batches on N parallel lanes —
+   bit-identical results for any N; ci/determinism.sh diffs
+   --dump-rounds records to enforce it, including int8+full, vq8+full,
+   and codebook-session legs.)
 ";
 
 fn main() -> ExitCode {
@@ -137,6 +145,9 @@ fn resolve_config(args: &Args) -> Result<RunConfig> {
     if let Some(e) = args.opt("entropy") {
         cfg.codec.entropy = fedpayload::wire::EntropyMode::parse(e)?;
     }
+    if let Some(r) = args.opt("codebook-reuse") {
+        cfg.codec.codebook_reuse = fedpayload::wire::ReuseMode::parse(r)?;
+    }
     match args.opt("sparse-topk") {
         Some("auto") => {
             cfg.codec.sparse_topk_auto = true;
@@ -156,36 +167,12 @@ fn resolve_config(args: &Args) -> Result<RunConfig> {
 
 /// Dump every round record with full bit precision (f64 payloads as hex
 /// bit patterns) so two runs can be compared byte-for-byte — the
-/// determinism CI job diffs these files across `--threads` values.
+/// determinism CI job diffs these files across `--threads` values, and
+/// the golden-trajectory fixtures pin the same digest in-repo (the
+/// digest itself is `server::round_dump_string`, shared with the tests
+/// so the two can never drift apart).
 fn write_round_dump(path: &str, report: &fedpayload::server::TrainReport) -> Result<()> {
-    let mut text = String::from(
-        "iter,m_s,raw_precision,raw_recall,raw_f1,raw_map,\
-         smoothed_precision,smoothed_recall,smoothed_f1,smoothed_map,round_bytes\n",
-    );
-    for r in &report.history {
-        text.push_str(&format!(
-            "{},{},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x},{}\n",
-            r.iter,
-            r.m_s,
-            r.raw.precision.to_bits(),
-            r.raw.recall.to_bits(),
-            r.raw.f1.to_bits(),
-            r.raw.map.to_bits(),
-            r.smoothed.precision.to_bits(),
-            r.smoothed.recall.to_bits(),
-            r.smoothed.f1.to_bits(),
-            r.smoothed.map.to_bits(),
-            r.round_bytes,
-        ));
-    }
-    text.push_str(&format!(
-        "totals,down_bytes={},up_bytes={},down_msgs={},up_msgs={},sim_secs_bits={:016x}\n",
-        report.ledger.down_bytes,
-        report.ledger.up_bytes,
-        report.ledger.down_msgs,
-        report.ledger.up_msgs,
-        report.ledger.sim_secs.to_bits(),
-    ));
+    let text = fedpayload::server::round_dump_string(report);
     std::fs::write(path, text).with_context(|| format!("writing round dump {path}"))?;
     Ok(())
 }
@@ -195,16 +182,24 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mut trainer = Trainer::from_config(&cfg)?;
     let report = trainer.run()?;
     println!(
-        "run complete: strategy={} codec={} entropy={} iterations={} M={} M_s={} \
-         ({:.0}% payload reduction)",
+        "run complete: strategy={} codec={} entropy={} codebook_reuse={} iterations={} \
+         M={} M_s={} ({:.0}% payload reduction)",
         report.strategy,
         report.codec,
         report.entropy,
+        report.codebook_reuse,
         report.iterations,
         report.m,
         report.m_s,
         report.payload_reduction_pct()
     );
+    if let Some(s) = &report.session {
+        println!(
+            "codebook session: {} reuse / {} delta / {} full frames, {} resyncs \
+             ({:+} extra bytes)",
+            s.reuse_frames, s.delta_frames, s.full_frames, s.resync_msgs, s.resync_extra_bytes
+        );
+    }
     println!("final metrics (window mean): {}", report.final_metrics);
     println!(
         "traffic: down={} ({} msgs), up={} ({} msgs), simulated transfer {:.1}s",
@@ -300,9 +295,11 @@ fn cmd_info(args: &Args) -> Result<()> {
         cfg.codec.sparse_topk.to_string()
     };
     println!(
-        "  codec              = {} (entropy={}, sparse_topk={topk}, sparse_threshold={})",
+        "  codec              = {} (entropy={}, codebook_reuse={}, sparse_topk={topk}, \
+         sparse_threshold={})",
         cfg.codec.precision.name(),
         cfg.codec.entropy.name(),
+        cfg.codec.codebook_reuse.name(),
         cfg.codec.sparse_threshold
     );
     println!("  backend            = {}", cfg.runtime.backend);

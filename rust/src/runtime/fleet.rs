@@ -61,6 +61,20 @@
 //! unchanged; the `--sparse-topk auto` tuner is likewise a pure
 //! function of the batch gradient, so workers resolve it independently
 //! without touching the determinism contract.
+//!
+//! ## Cross-round codebook sessions
+//!
+//! The first stateful wire feature (`wire::vq::session`, `[codec]
+//! codebook_reuse = delta|auto`) deliberately lives **outside** this
+//! executor: the dense download is encoded exactly once per round on
+//! the coordinator lane, the session's codebook state is owned by the
+//! `Trainer`, and what reaches [`RoundTask::q_sel`] is the already
+//! *decoded* broadcast — so worker lanes never see session state, and
+//! the batch-order merge contract (and with it threads = 1/N
+//! bit-identity) is untouched by codebook reuse, deltas, or per-client
+//! resyncs. Resync accounting (which stale client was served the
+//! full-codebook frame) happens in the coordinator's download loop for
+//! the same reason: it must not depend on which lane ran which batch.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 #[cfg(feature = "parallel")]

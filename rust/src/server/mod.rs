@@ -43,7 +43,9 @@ use crate::runtime::fleet::{BackendFactory, FleetExecutor, RoundTask};
 use crate::runtime::{make_backend, FcfRuntime, SelRow};
 use crate::simnet::TrafficLedger;
 use crate::telemetry::Stopwatch;
-use crate::wire::{make_codec_with, PayloadCodec, SparsePolicy};
+use crate::wire::{
+    make_codec_with, PayloadCodec, SessionMode, SparsePolicy, VqClientState, VqSession,
+};
 use crate::{debug_log, info, warn_log};
 
 /// Per-round record for convergence analysis (paper Figure 3).
@@ -61,6 +63,25 @@ pub struct RoundRecord {
     pub round_bytes: u64,
 }
 
+/// Per-run counters of the cross-round codebook session
+/// (`wire::vq::session`): which frame modes the coordinator shipped and
+/// what client churn cost on top.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SessionStats {
+    /// Rounds whose broadcast frame reused the cached codebook verbatim.
+    pub reuse_frames: u64,
+    /// Rounds whose broadcast frame shipped centroid deltas.
+    pub delta_frames: u64,
+    /// Rounds whose broadcast frame shipped a full codebook.
+    pub full_frames: u64,
+    /// Full-codebook resync messages served to stale clients.
+    pub resync_msgs: u64,
+    /// Σ (resync frame length − broadcast frame length) over those
+    /// messages — exactly the download bytes the ledger shows above an
+    /// all-clients-in-sync run (the churn e2e pins this equality).
+    pub resync_extra_bytes: i64,
+}
+
 /// Everything a finished training run reports.
 #[derive(Debug, Clone)]
 pub struct TrainReport {
@@ -71,6 +92,12 @@ pub struct TrainReport {
     /// Entropy coding mode layered on the codec (`wire::EntropyMode`
     /// name) — lossless, so it changes ledger bytes but never metrics.
     pub entropy: &'static str,
+    /// Cross-round codebook session policy actually in effect
+    /// (`wire::vq::session::ReuseMode` name; `off` for scalar codecs
+    /// even when configured, since sessions apply to vq downloads).
+    pub codebook_reuse: &'static str,
+    /// Session frame/resync counters (`None` when sessions are off).
+    pub session: Option<SessionStats>,
     /// Smoothed metrics at the final iteration (the paper's headline
     /// number for a run).
     pub final_metrics: MetricSet,
@@ -109,6 +136,18 @@ pub struct Trainer {
     /// Wire codec for Q* downloads and ∇Q* uploads; the ledger records
     /// the encoded frame lengths this codec produces.
     codec: Box<dyn PayloadCodec>,
+    /// Cross-round codebook session for vq downloads (`Some` when
+    /// `codec.codebook_reuse` is active on a vq precision): owns the
+    /// generation-tagged coordinator codebook state. Dense downloads
+    /// then ship version-2 session frames; uploads are untouched.
+    vq_session: Option<VqSession>,
+    /// The coordinator's own mirror of an always-in-sync client
+    /// decoder: every broadcast frame round-trips through it, so the
+    /// clients train on exactly what a synced device would decode and
+    /// encoder/decoder agreement is re-proven every round.
+    vq_mirror: VqClientState,
+    /// Session frame/resync counters for the report.
+    session_stats: SessionStats,
     sparse: SparsePolicy,
     /// Shared across trainers: PJRT executable compilation is expensive
     /// and xla_extension 0.5.1 does not fully release compiled programs,
@@ -185,7 +224,7 @@ impl Trainer {
         let fleet = Fleet::from_split(&split);
         info!(
             "trainer: {} users, {} items, strategy={}, backend={}, M_s={}, codec={}, \
-             entropy={}, threads={}",
+             entropy={}, codebook_reuse={}, threads={}",
             fleet.len(),
             m,
             cfg.bandit.strategy.name(),
@@ -193,6 +232,7 @@ impl Trainer {
             cfg.selected_items(m),
             cfg.codec.precision.name(),
             cfg.codec.entropy.name(),
+            cfg.codec.codebook_reuse.name(),
             cfg.runtime.threads
         );
         // lanes beyond the number of B-sized batches per round can never
@@ -207,6 +247,25 @@ impl Trainer {
                 runtime.borrow().b
             );
         }
+        let vq_session = if cfg.codec.codebook_reuse.is_active() {
+            if cfg.codec.precision.is_vq() {
+                Some(VqSession::new(
+                    cfg.codec.precision,
+                    cfg.codec.entropy,
+                    cfg.codec.codebook_reuse,
+                )?)
+            } else {
+                warn_log!(
+                    "codec.codebook_reuse = {} has no effect on the scalar {} codec \
+                     (codebook sessions apply to vq downloads); running stateless",
+                    cfg.codec.codebook_reuse.name(),
+                    cfg.codec.precision.name()
+                );
+                None
+            }
+        } else {
+            None
+        };
         let cw = match cfg.bandit.cosine_weight {
             "literal" => crate::reward::CosineWeight::Literal,
             _ => crate::reward::CosineWeight::Power,
@@ -221,6 +280,9 @@ impl Trainer {
                 .with_cosine_weight(cw)
                 .with_time_base(tb),
             codec: make_codec_with(cfg.codec.precision, cfg.codec.entropy),
+            vq_session,
+            vq_mirror: VqClientState::new(),
+            session_stats: SessionStats::default(),
             sparse: SparsePolicy {
                 top_k: cfg.codec.sparse_topk,
                 threshold: cfg.codec.sparse_threshold as f32,
@@ -266,6 +328,34 @@ impl Trainer {
         &self.split
     }
 
+    /// Cumulative measured traffic so far (tests that step rounds
+    /// manually read it between rounds; [`Trainer::run`] snapshots it
+    /// into the report).
+    pub fn ledger(&self) -> &TrafficLedger {
+        &self.ledger
+    }
+
+    /// Codebook-session frame/resync counters so far (all zero while
+    /// sessions are off).
+    pub fn session_stats(&self) -> SessionStats {
+        self.session_stats
+    }
+
+    /// The coordinator's current codebook generation (`None` when
+    /// sessions are off, 0 before the first download frame).
+    pub fn session_generation(&self) -> Option<u32> {
+        self.vq_session.as_ref().map(|s| s.generation())
+    }
+
+    /// Churn hook: drop one client's cached download codebook, as if
+    /// the device evicted it or missed the rounds that shipped it. Its
+    /// next session download arrives as a full-codebook resync frame —
+    /// bit-identical decoded factors, extra ledger bytes (the churn e2e
+    /// test drives this).
+    pub fn invalidate_client_codebook(&mut self, client: usize) {
+        self.fleet.invalidate_download_cache(client);
+    }
+
     /// Run the configured number of FL iterations and report.
     pub fn run(&mut self) -> Result<TrainReport> {
         let t0 = std::time::Instant::now();
@@ -279,6 +369,8 @@ impl Trainer {
             strategy: self.selector.name(),
             codec: self.codec.name(),
             entropy: self.codec.entropy().name(),
+            codebook_reuse: self.vq_session.as_ref().map_or("off", |s| s.mode().name()),
+            session: self.vq_session.as_ref().map(|_| self.session_stats),
             final_metrics: self.smoothed_metrics(),
             history: self.history.clone(),
             ledger: self.ledger.clone(),
@@ -345,27 +437,112 @@ impl Trainer {
         // the clients against the *decoded* factors, so a lossy codec's
         // quantization error flows into the round exactly as it would on
         // real devices. The ledger records the encoded frame length.
+        // With a codebook session active, the dense download goes
+        // through the stateful session encoder (version-2 frames) and
+        // the coordinator's mirror decoder — an always-in-sync client —
+        // supplies the decoded factors.
         self.sw_codec.start();
-        let down_frame = self.codec.encode_dense(&q_sel, selected.len(), k)?;
-        let down = self.codec.decode_dense(&down_frame)?;
-        anyhow::ensure!(
-            down.rows == selected.len() && down.cols == k,
-            "download frame decoded to {}x{}, expected {}x{k}",
-            down.rows,
-            down.cols,
-            selected.len()
-        );
-        let q_sel = down.data;
-        let down_bytes = down_frame.len() as u64;
+        let (q_sel, down_bytes, session_frame) = match self.vq_session.as_mut() {
+            Some(sess) => {
+                let enc = sess.encode_dense(&q_sel, selected.len(), k)?;
+                let down = self
+                    .vq_mirror
+                    .decode_dense(&enc.frame)?
+                    .into_data()
+                    .context("coordinator mirror decoder fell out of sync (bug)")?;
+                anyhow::ensure!(
+                    down.rows == selected.len() && down.cols == k,
+                    "session frame decoded to {}x{}, expected {}x{k}",
+                    down.rows,
+                    down.cols,
+                    selected.len()
+                );
+                let len = enc.frame.len() as u64;
+                (down.data, len, Some(enc))
+            }
+            None => {
+                let down_frame = self.codec.encode_dense(&q_sel, selected.len(), k)?;
+                let down = self.codec.decode_dense(&down_frame)?;
+                anyhow::ensure!(
+                    down.rows == selected.len() && down.cols == k,
+                    "download frame decoded to {}x{}, expected {}x{k}",
+                    down.rows,
+                    down.cols,
+                    selected.len()
+                );
+                (down.data, down_frame.len() as u64, None)
+            }
+        };
         self.sw_codec.stop();
 
-        // (3) participants + download accounting.
+        // (3) participants + download accounting. Under a codebook
+        // session, a participant whose cached generation cannot decode
+        // the broadcast frame is served a full-codebook **resync**
+        // frame instead — decoding to bit-identical factors (verified
+        // below), so churn shows up only in the ledger, never in the
+        // training trajectory.
         let ledger_bytes_before = self.ledger.total_bytes();
         let participants = self
             .fleet
             .sample_participants(self.cfg.train.theta, &mut self.rng);
-        for _ in &participants {
-            self.ledger.record_down(&self.cfg.simnet, down_bytes);
+        match &session_frame {
+            Some(enc) => {
+                match enc.mode {
+                    SessionMode::Reuse => self.session_stats.reuse_frames += 1,
+                    SessionMode::Delta => self.session_stats.delta_frames += 1,
+                    SessionMode::Full => self.session_stats.full_frames += 1,
+                }
+                let mut resync_len: Option<u64> = None;
+                for &cid in &participants {
+                    let bytes = if enc.in_sync(self.fleet.download_gen(cid)) {
+                        down_bytes
+                    } else {
+                        let len = match resync_len {
+                            Some(len) => len,
+                            None => {
+                                // built + verified at most once per round
+                                let sess = self
+                                    .vq_session
+                                    .as_ref()
+                                    .expect("session frame implies session");
+                                let rf = sess.resync_frame()?;
+                                let dec = VqClientState::new()
+                                    .decode_dense(&rf)?
+                                    .into_data()
+                                    .context("resync frame must decode statelessly")?;
+                                anyhow::ensure!(
+                                    dec.data.len() == q_sel.len()
+                                        && dec
+                                            .data
+                                            .iter()
+                                            .zip(&q_sel)
+                                            .all(|(a, b)| a.to_bits() == b.to_bits()),
+                                    "resync frame decoded differently from the broadcast \
+                                     frame (generation {})",
+                                    enc.generation
+                                );
+                                let len = rf.len() as u64;
+                                resync_len = Some(len);
+                                len
+                            }
+                        };
+                        self.session_stats.resync_msgs += 1;
+                        self.session_stats.resync_extra_bytes += len as i64 - down_bytes as i64;
+                        len
+                    };
+                    self.ledger.record_down(&self.cfg.simnet, bytes);
+                    // empty frames install no codebook on the device, so
+                    // they must not be recorded as a held generation
+                    if enc.installs_generation {
+                        self.fleet.set_download_gen(cid, enc.generation);
+                    }
+                }
+            }
+            None => {
+                for _ in &participants {
+                    self.ledger.record_down(&self.cfg.simnet, down_bytes);
+                }
+            }
         }
 
         // (4) client compute: B-sized batches dispatched across the
@@ -490,6 +667,45 @@ impl Trainer {
         self.history.push(record.clone());
         Ok(record)
     }
+}
+
+/// Render a report's per-round records and ledger totals with full bit
+/// precision (f64 metric values as hex bit patterns), one CSV row per
+/// round plus a totals line. This string is the unit of bit-exact
+/// trajectory comparison: `--dump-rounds` writes it, the CI determinism
+/// job diffs it across `--threads` values, and the golden-trajectory
+/// fixtures under `rust/tests/golden/` pin it across commits — sharing
+/// one renderer is what keeps those three nets equivalent.
+pub fn round_dump_string(report: &TrainReport) -> String {
+    let mut text = String::from(
+        "iter,m_s,raw_precision,raw_recall,raw_f1,raw_map,\
+         smoothed_precision,smoothed_recall,smoothed_f1,smoothed_map,round_bytes\n",
+    );
+    for r in &report.history {
+        text.push_str(&format!(
+            "{},{},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x},{}\n",
+            r.iter,
+            r.m_s,
+            r.raw.precision.to_bits(),
+            r.raw.recall.to_bits(),
+            r.raw.f1.to_bits(),
+            r.raw.map.to_bits(),
+            r.smoothed.precision.to_bits(),
+            r.smoothed.recall.to_bits(),
+            r.smoothed.f1.to_bits(),
+            r.smoothed.map.to_bits(),
+            r.round_bytes,
+        ));
+    }
+    text.push_str(&format!(
+        "totals,down_bytes={},up_bytes={},down_msgs={},up_msgs={},sim_secs_bits={:016x}\n",
+        report.ledger.down_bytes,
+        report.ledger.up_bytes,
+        report.ledger.down_msgs,
+        report.ledger.up_msgs,
+        report.ledger.sim_secs.to_bits(),
+    ));
+    text
 }
 
 /// Standardize one round's rewards to zero mean / `scale` standard
@@ -626,6 +842,101 @@ mod tests {
             .filter(|&c| !tr.fleet().factors(c).is_empty())
             .count();
         assert_eq!(with_p, 16); // exactly Θ participants got fresh factors
+    }
+
+    #[test]
+    fn scalar_precision_ignores_codebook_reuse() {
+        let mut cfg = tiny_cfg();
+        cfg.codec.codebook_reuse = crate::wire::ReuseMode::Auto; // f32 precision
+        let report = Trainer::from_config(&cfg).unwrap().run().unwrap();
+        assert_eq!(report.codebook_reuse, "off");
+        assert!(report.session.is_none());
+    }
+
+    #[test]
+    fn session_reuse_cuts_download_bytes_on_stable_q() {
+        // Strategy::Full selects the same rows every round and Q drifts
+        // only by Adam steps, so `auto` must reuse the codebook at
+        // least once and move strictly fewer download bytes than the
+        // stateless vq path at otherwise identical settings.
+        let mut base = tiny_cfg();
+        base.dataset.users = 64;
+        base.dataset.items = 128;
+        base.dataset.interactions = 2500;
+        base.train.iterations = 6;
+        base.train.theta = 64; // everyone participates: nobody goes stale
+        base.train.payload_fraction = 1.0;
+        base.bandit.strategy = Strategy::Full;
+        base.codec.precision = crate::wire::Precision::Vq8;
+        base.codec.entropy = crate::wire::EntropyMode::Full;
+        let mut auto_cfg = base.clone();
+        auto_cfg.codec.codebook_reuse = crate::wire::ReuseMode::Auto;
+        let off = Trainer::from_config(&base).unwrap().run().unwrap();
+        let auto_r = Trainer::from_config(&auto_cfg).unwrap().run().unwrap();
+        assert_eq!(off.codebook_reuse, "off");
+        assert!(off.session.is_none());
+        assert_eq!(auto_r.codebook_reuse, "auto");
+        let stats = auto_r.session.unwrap();
+        assert_eq!(
+            stats.reuse_frames + stats.delta_frames + stats.full_frames,
+            6,
+            "one session frame per round: {stats:?}"
+        );
+        assert!(stats.reuse_frames >= 1, "stable Q never reused: {stats:?}");
+        assert_eq!(stats.resync_msgs, 0, "theta == users: {stats:?}");
+        assert_eq!(stats.resync_extra_bytes, 0);
+        assert_eq!(off.ledger.down_msgs, auto_r.ledger.down_msgs);
+        assert!(
+            auto_r.ledger.down_bytes < off.ledger.down_bytes,
+            "auto {} !< off {} download bytes",
+            auto_r.ledger.down_bytes,
+            off.ledger.down_bytes
+        );
+        // uploads ride the same int8 path; message counts match
+        assert_eq!(off.ledger.up_msgs, auto_r.ledger.up_msgs);
+    }
+
+    #[test]
+    fn session_delta_mode_trains_bit_identically_to_stateless() {
+        // delta frames reconstruct the freshly trained codebook exactly
+        // (post-requant), so `delta` must train bit-identically to
+        // `off` — only the ledger bytes may differ.
+        let mut base = tiny_cfg();
+        base.codec.precision = crate::wire::Precision::Vq8;
+        base.codec.entropy = crate::wire::EntropyMode::Full;
+        let mut delta_cfg = base.clone();
+        delta_cfg.codec.codebook_reuse = crate::wire::ReuseMode::Delta;
+        let off = Trainer::from_config(&base).unwrap().run().unwrap();
+        let delta = Trainer::from_config(&delta_cfg).unwrap().run().unwrap();
+        assert_eq!(delta.codebook_reuse, "delta");
+        let stats = delta.session.unwrap();
+        assert_eq!(stats.reuse_frames, 0, "delta mode never reuses verbatim");
+        assert!(stats.delta_frames >= 1, "no delta frames shipped: {stats:?}");
+        assert_eq!(
+            off.final_metrics.map.to_bits(),
+            delta.final_metrics.map.to_bits(),
+            "delta frames changed training"
+        );
+        for (a, b) in off.history.iter().zip(&delta.history) {
+            assert_eq!(a.raw.map.to_bits(), b.raw.map.to_bits(), "iter {}", a.iter);
+            assert_eq!(a.m_s, b.m_s);
+        }
+        assert_eq!(off.ledger.up_bytes, delta.ledger.up_bytes);
+    }
+
+    #[test]
+    fn round_dump_string_is_stable_and_bit_exact() {
+        let cfg = tiny_cfg();
+        let r1 = Trainer::from_config(&cfg).unwrap().run().unwrap();
+        let r2 = Trainer::from_config(&cfg).unwrap().run().unwrap();
+        let (d1, d2) = (round_dump_string(&r1), round_dump_string(&r2));
+        assert_eq!(d1, d2, "repeat runs must dump identical trajectories");
+        assert_eq!(d1.lines().count(), 4 + 2); // header + 4 rounds + totals
+        assert!(d1.starts_with("iter,m_s,raw_precision"));
+        assert!(d1.trim_end().ends_with(&format!(
+            "sim_secs_bits={:016x}",
+            r1.ledger.sim_secs.to_bits()
+        )));
     }
 
     #[test]

@@ -224,6 +224,22 @@ impl RoleMap {
     /// `rows` sizes the vq codebook prefix (ignored for scalar
     /// precisions, where the payload is purely cyclic).
     fn new(precision: Precision, cols: usize, rows: usize) -> RoleMap {
+        let prefix = if precision.is_vq() {
+            super::vq::prefix_len(precision, rows, cols)
+        } else {
+            0
+        };
+        RoleMap::with_prefix(precision, cols, prefix)
+    }
+
+    /// Role map with an explicit prefix length. The session payloads
+    /// reuse the vq row cycle but vary the prefix: a `reuse` frame has
+    /// none, while `full` and `delta` frames train tree 0 on the
+    /// codebook (resp. centroid-delta) block — the delta plane gets the
+    /// same dedicated segment the codebook block always had, which is
+    /// exactly what lets near-zero stable-Q deltas compress hard
+    /// without diluting the index-plane statistics.
+    fn with_prefix(precision: Precision, cols: usize, prefix_len: usize) -> RoleMap {
         match precision {
             Precision::Int8 => {
                 let mut cycle = Vec::with_capacity(cols + 2);
@@ -231,23 +247,23 @@ impl RoleMap {
                 cycle.push(1);
                 cycle.resize(cols + 2, 2);
                 RoleMap {
-                    prefix_len: 0,
+                    prefix_len,
                     cycle,
                     n_roles: 3,
                 }
             }
             Precision::F16 => RoleMap {
-                prefix_len: 0,
+                prefix_len,
                 cycle: vec![0, 1],
                 n_roles: 2,
             },
             Precision::F32 => RoleMap {
-                prefix_len: 0,
+                prefix_len,
                 cycle: vec![0, 1, 2, 3],
                 n_roles: 4,
             },
             Precision::F64 => RoleMap {
-                prefix_len: 0,
+                prefix_len,
                 cycle: (0..8).collect(),
                 n_roles: 8,
             },
@@ -269,7 +285,7 @@ impl RoleMap {
                     n += 3;
                 }
                 RoleMap {
-                    prefix_len: super::vq::prefix_len(precision, rows, cols),
+                    prefix_len,
                     cycle,
                     n_roles: n,
                 }
@@ -420,7 +436,23 @@ impl<'a> RangeDecoder<'a> {
 /// precisions); the bytes themselves are copied verbatim into the
 /// model, so the transform is lossless for any input.
 pub fn range_encode(payload: &[u8], precision: Precision, cols: usize, rows: usize) -> Vec<u8> {
-    let roles = RoleMap::new(precision, cols, rows);
+    range_encode_map(payload, RoleMap::new(precision, cols, rows))
+}
+
+/// [`range_encode`] with an explicit prefix length instead of the
+/// rows-derived vq codebook prefix — the session payloads' entry point
+/// (`full`/`delta` frames prefix the codebook or centroid-delta block,
+/// `reuse` frames have no prefix at all).
+pub fn range_encode_prefixed(
+    payload: &[u8],
+    precision: Precision,
+    cols: usize,
+    prefix_len: usize,
+) -> Vec<u8> {
+    range_encode_map(payload, RoleMap::with_prefix(precision, cols, prefix_len))
+}
+
+fn range_encode_map(payload: &[u8], roles: RoleMap) -> Vec<u8> {
     let mut trees: Vec<BitTree> = (0..roles.n_roles).map(|_| new_tree()).collect();
     let mut enc = RangeEncoder::new(payload.len() / 2 + 16);
     for (i, &b) in payload.iter().enumerate() {
@@ -442,7 +474,22 @@ pub fn range_decode(
     cols: usize,
     rows: usize,
 ) -> Result<Vec<u8>> {
-    let roles = RoleMap::new(precision, cols, rows);
+    range_decode_map(buf, raw_len, RoleMap::new(precision, cols, rows))
+}
+
+/// [`range_decode`] with an explicit prefix length — the inverse of
+/// [`range_encode_prefixed`], with the same exact-consumption contract.
+pub fn range_decode_prefixed(
+    buf: &[u8],
+    raw_len: usize,
+    precision: Precision,
+    cols: usize,
+    prefix_len: usize,
+) -> Result<Vec<u8>> {
+    range_decode_map(buf, raw_len, RoleMap::with_prefix(precision, cols, prefix_len))
+}
+
+fn range_decode_map(buf: &[u8], raw_len: usize, roles: RoleMap) -> Result<Vec<u8>> {
     let mut trees: Vec<BitTree> = (0..roles.n_roles).map(|_| new_tree()).collect();
     let mut dec = RangeDecoder::new(buf);
     let mut out = Vec::with_capacity(raw_len);
@@ -465,6 +512,23 @@ pub fn range_decode(
 /// zero length prefix). `rows` sizes the vq role-map prefix, matching
 /// the frame header's row count.
 pub fn seal_block(raw: &[u8], precision: Precision, cols: usize, rows: usize) -> Result<Vec<u8>> {
+    let prefix = if precision.is_vq() {
+        super::vq::prefix_len(precision, rows, cols)
+    } else {
+        0
+    };
+    seal_block_prefixed(raw, precision, cols, prefix)
+}
+
+/// [`seal_block`] with an explicit role-map prefix length — used by the
+/// session frames, whose prefix depends on the session mode rather
+/// than the row count.
+pub fn seal_block_prefixed(
+    raw: &[u8],
+    precision: Precision,
+    cols: usize,
+    prefix_len: usize,
+) -> Result<Vec<u8>> {
     ensure!(
         raw.len() <= u32::MAX as usize,
         "entropy block of {} raw bytes exceeds u32",
@@ -473,7 +537,7 @@ pub fn seal_block(raw: &[u8], precision: Precision, cols: usize, rows: usize) ->
     let mut out = Vec::with_capacity(8 + raw.len() / 2);
     out.extend_from_slice(&(raw.len() as u32).to_le_bytes());
     if !raw.is_empty() {
-        out.extend_from_slice(&range_encode(raw, precision, cols, rows));
+        out.extend_from_slice(&range_encode_prefixed(raw, precision, cols, prefix_len));
     }
     Ok(out)
 }
@@ -486,6 +550,23 @@ pub fn open_block(
     precision: Precision,
     cols: usize,
     rows: usize,
+) -> Result<Vec<u8>> {
+    let prefix = if precision.is_vq() {
+        super::vq::prefix_len(precision, rows, cols)
+    } else {
+        0
+    };
+    open_block_prefixed(block, expected_len, precision, cols, prefix)
+}
+
+/// [`open_block`] with an explicit role-map prefix length — the inverse
+/// of [`seal_block_prefixed`].
+pub fn open_block_prefixed(
+    block: &[u8],
+    expected_len: usize,
+    precision: Precision,
+    cols: usize,
+    prefix_len: usize,
 ) -> Result<Vec<u8>> {
     ensure!(block.len() >= 4, "entropy block missing its length prefix");
     let raw_len = u32::from_le_bytes(block[0..4].try_into().unwrap()) as usize;
@@ -501,7 +582,7 @@ pub fn open_block(
         );
         return Ok(Vec::new());
     }
-    range_decode(&block[4..], raw_len, precision, cols, rows)
+    range_decode_prefixed(&block[4..], raw_len, precision, cols, prefix_len)
 }
 
 #[cfg(test)]
@@ -691,5 +772,48 @@ mod tests {
             payload.len(),
             enc.len()
         );
+    }
+
+    #[test]
+    fn prefixed_role_maps_roundtrip_session_payload_shapes() {
+        let mut rng = Rng::seed_from_u64(101);
+        let data: Vec<f32> = (0..64 * 25).map(|_| rng.normal() as f32 * 0.1).collect();
+        let mut full = Vec::new();
+        super::super::vq::encode_plane(&mut full, &data, 64, 25, Precision::Vq8);
+        let prefix = super::super::vq::prefix_len(Precision::Vq8, 64, 25);
+        // "reuse" shape: row records only, prefix 0
+        let records = &full[prefix..];
+        let enc = range_encode_prefixed(records, Precision::Vq8, 25, 0);
+        let dec = range_decode_prefixed(&enc, records.len(), Precision::Vq8, 25, 0).unwrap();
+        assert_eq!(dec, records);
+        // explicit-prefix coding of the full payload matches the
+        // rows-derived role map byte for byte
+        let a = range_encode(&full, Precision::Vq8, 25, 64);
+        let b = range_encode_prefixed(&full, Precision::Vq8, 25, prefix);
+        assert_eq!(a, b);
+        // "delta" shape: near-zero prefix plane compresses much harder
+        // than the codebook it replaces
+        let mut delta = full.clone();
+        for byte in delta[2 * 5..prefix].iter_mut() {
+            *byte = if *byte % 7 == 0 { 1 } else { 0 };
+        }
+        let coded_delta = range_encode_prefixed(&delta, Precision::Vq8, 25, prefix);
+        let coded_full = range_encode_prefixed(&full, Precision::Vq8, 25, prefix);
+        assert!(
+            coded_delta.len() < coded_full.len(),
+            "near-zero delta plane should compress below the codebook: {} vs {}",
+            coded_delta.len(),
+            coded_full.len()
+        );
+        let dec = range_decode_prefixed(&coded_delta, delta.len(), Precision::Vq8, 25, prefix)
+            .unwrap();
+        assert_eq!(dec, delta);
+        // prefixed blocks validate lengths like the plain ones
+        let blk = seal_block_prefixed(records, Precision::Vq8, 25, 0).unwrap();
+        assert_eq!(
+            open_block_prefixed(&blk, records.len(), Precision::Vq8, 25, 0).unwrap(),
+            records
+        );
+        assert!(open_block_prefixed(&blk, records.len() + 1, Precision::Vq8, 25, 0).is_err());
     }
 }

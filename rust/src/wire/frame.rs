@@ -33,17 +33,45 @@
 //! changes the FNV-1a value — every mixing step is a bijection on the
 //! running state — so detection of 1-byte faults is deterministic, not
 //! probabilistic.
+//!
+//! ## Version 2: session frames
+//!
+//! Cross-round codebook sessions (`wire::vq::session`) need two fields
+//! a stateless frame has no room for: the codebook **generation** the
+//! frame builds on and the **session mode** (full / delta / reuse).
+//! Version 2 widens the header to 32 bytes — bytes 0..20 keep the v1
+//! layout, then:
+//!
+//! ```text
+//! offset  size  field
+//! 20      4     codebook generation (u32)
+//! 24      1     session mode (0 = full, 1 = delta, 2 = reuse)
+//! 25      3     reserved (zero)
+//! 28      4     FNV-1a checksum of header bytes 0..28 + payload
+//! 32      ...   payload
+//! ```
+//!
+//! [`seal_session`] / [`open_session`] handle v2; the v1 [`open`]
+//! rejects v2 frames with a pointer at the session decoder instead of
+//! misparsing them (the version byte is at the same offset in both
+//! layouts, and both checksums cover every header field).
 
 use anyhow::{bail, ensure, Result};
 
 /// Frame magic: "FPAY".
 pub const MAGIC: [u8; 4] = *b"FPAY";
 
-/// Current frame format version.
+/// Current stateless frame format version.
 pub const VERSION: u8 = 1;
 
-/// Fixed header size in bytes.
+/// Session (cross-round codebook) frame format version.
+pub const SESSION_VERSION: u8 = 2;
+
+/// Fixed header size of a version-1 frame in bytes.
 pub const HEADER_LEN: usize = 24;
+
+/// Fixed header size of a version-2 session frame in bytes.
+pub const SESSION_HEADER_LEN: usize = 32;
 
 /// What the payload contains.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -69,6 +97,47 @@ impl PayloadKind {
             0 => Ok(PayloadKind::Dense),
             1 => Ok(PayloadKind::Sparse),
             other => bail!("unknown payload kind id {other}"),
+        }
+    }
+}
+
+/// How a session frame relates to the client's cached codebook.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SessionMode {
+    /// Self-contained codebook + rows; installs/overwrites the cache.
+    Full,
+    /// Centroid deltas against the previous generation + rows.
+    Delta,
+    /// Rows only, decoded against the cached generation verbatim.
+    Reuse,
+}
+
+impl SessionMode {
+    /// Mode id stored in session header byte 24.
+    pub fn id(&self) -> u8 {
+        match self {
+            SessionMode::Full => 0,
+            SessionMode::Delta => 1,
+            SessionMode::Reuse => 2,
+        }
+    }
+
+    /// Inverse of [`SessionMode::id`].
+    pub fn from_id(id: u8) -> Result<SessionMode> {
+        match id {
+            0 => Ok(SessionMode::Full),
+            1 => Ok(SessionMode::Delta),
+            2 => Ok(SessionMode::Reuse),
+            other => bail!("unknown session mode id {other}"),
+        }
+    }
+
+    /// Mode name for logs/errors.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SessionMode::Full => "full",
+            SessionMode::Delta => "delta",
+            SessionMode::Reuse => "reuse",
         }
     }
 }
@@ -148,6 +217,108 @@ fn read_u32(frame: &[u8], offset: usize) -> u32 {
     u32::from_le_bytes(frame[offset..offset + 4].try_into().unwrap())
 }
 
+/// Decoded version-2 session frame header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SessionHeader {
+    /// Element codec id (`wire::Precision`; always a vq id in practice).
+    pub codec_id: u8,
+    /// Entropy codec id (`wire::EntropyMode`; 0 = none).
+    pub entropy_id: u8,
+    /// What the payload contains.
+    pub kind: PayloadKind,
+    /// Matrix rows this frame describes.
+    pub rows: u32,
+    /// Matrix columns this frame describes.
+    pub cols: u32,
+    /// Payload length in bytes (excluding the header).
+    pub payload_len: u32,
+    /// Codebook generation: what a client holds after decoding this
+    /// frame (`delta` builds on `generation - 1`, `reuse` requires
+    /// exactly `generation`).
+    pub generation: u32,
+    /// How the payload relates to the cached codebook.
+    pub mode: SessionMode,
+}
+
+/// Build a complete version-2 session frame (header + payload).
+#[allow(clippy::too_many_arguments)] // mirrors the header fields 1:1
+pub fn seal_session(
+    codec_id: u8,
+    entropy_id: u8,
+    kind: PayloadKind,
+    rows: usize,
+    cols: usize,
+    generation: u32,
+    mode: SessionMode,
+    payload: &[u8],
+) -> Result<Vec<u8>> {
+    ensure!(rows <= u32::MAX as usize, "frame rows {rows} exceed u32");
+    ensure!(cols <= u32::MAX as usize, "frame cols {cols} exceed u32");
+    ensure!(
+        payload.len() <= u32::MAX as usize,
+        "frame payload of {} bytes exceeds u32",
+        payload.len()
+    );
+    let mut out = Vec::with_capacity(SESSION_HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(SESSION_VERSION);
+    out.push(codec_id);
+    out.push(kind.id());
+    out.push(entropy_id);
+    out.extend_from_slice(&(rows as u32).to_le_bytes());
+    out.extend_from_slice(&(cols as u32).to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&generation.to_le_bytes());
+    out.push(mode.id());
+    out.extend_from_slice(&[0u8; 3]);
+    let sum = frame_checksum(&out[0..SESSION_HEADER_LEN - 4], payload);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out.extend_from_slice(payload);
+    Ok(out)
+}
+
+/// Validate a version-2 session frame and return its header + payload.
+pub fn open_session(frame: &[u8]) -> Result<(SessionHeader, &[u8])> {
+    ensure!(
+        frame.len() >= SESSION_HEADER_LEN,
+        "session frame truncated: {} bytes < {SESSION_HEADER_LEN}-byte header",
+        frame.len()
+    );
+    ensure!(frame[0..4] == MAGIC, "bad frame magic {:02x?}", &frame[0..4]);
+    ensure!(
+        frame[4] == SESSION_VERSION,
+        "unsupported session frame version {} (expected {SESSION_VERSION}; version-1 \
+         frames use the stateless wire::frame::open path)",
+        frame[4]
+    );
+    let kind = PayloadKind::from_id(frame[6])?;
+    let mode = SessionMode::from_id(frame[24])?;
+    let header = SessionHeader {
+        codec_id: frame[5],
+        entropy_id: frame[7],
+        kind,
+        rows: read_u32(frame, 8),
+        cols: read_u32(frame, 12),
+        payload_len: read_u32(frame, 16),
+        generation: read_u32(frame, 20),
+        mode,
+    };
+    let expected = frame.len() - SESSION_HEADER_LEN;
+    ensure!(
+        header.payload_len as usize == expected,
+        "session frame length mismatch: header says {} payload bytes, frame has {expected}",
+        header.payload_len
+    );
+    let payload = &frame[SESSION_HEADER_LEN..];
+    let sum = read_u32(frame, SESSION_HEADER_LEN - 4);
+    let computed = frame_checksum(&frame[0..SESSION_HEADER_LEN - 4], payload);
+    ensure!(
+        computed == sum,
+        "session frame checksum mismatch (stored {sum:#010x}, computed {computed:#010x})"
+    );
+    Ok((header, payload))
+}
+
 /// Validate a frame and return its header + payload slice.
 pub fn open(frame: &[u8]) -> Result<(FrameHeader, &[u8])> {
     ensure!(
@@ -158,7 +329,8 @@ pub fn open(frame: &[u8]) -> Result<(FrameHeader, &[u8])> {
     ensure!(frame[0..4] == MAGIC, "bad frame magic {:02x?}", &frame[0..4]);
     ensure!(
         frame[4] == VERSION,
-        "unsupported frame version {} (expected {VERSION})",
+        "unsupported frame version {} (expected {VERSION}; version-{SESSION_VERSION} \
+         codebook-session frames need the wire::vq::session decoder)",
         frame[4]
     );
     let kind = PayloadKind::from_id(frame[6])?;
@@ -239,6 +411,62 @@ mod tests {
         // truncation
         assert!(open(&frame[..frame.len() - 1]).is_err());
         assert!(open(&frame[..10]).is_err());
+    }
+
+    #[test]
+    fn session_seal_open_roundtrip() {
+        let payload = [7u8, 6, 5, 4];
+        let frame = seal_session(5, 3, PayloadKind::Dense, 12, 25, 9, SessionMode::Delta, &payload)
+            .unwrap();
+        assert_eq!(frame.len(), SESSION_HEADER_LEN + 4);
+        let (h, p) = open_session(&frame).unwrap();
+        assert_eq!(h.codec_id, 5);
+        assert_eq!(h.entropy_id, 3);
+        assert_eq!(h.kind, PayloadKind::Dense);
+        assert_eq!((h.rows, h.cols), (12, 25));
+        assert_eq!(h.generation, 9);
+        assert_eq!(h.mode, SessionMode::Delta);
+        assert_eq!(p, &payload);
+        // reserved bytes are zero, version byte is 2
+        assert_eq!(frame[4], SESSION_VERSION);
+        assert_eq!(&frame[25..28], &[0, 0, 0]);
+    }
+
+    #[test]
+    fn session_mode_registry_roundtrips() {
+        for m in [SessionMode::Full, SessionMode::Delta, SessionMode::Reuse] {
+            assert_eq!(SessionMode::from_id(m.id()).unwrap(), m);
+        }
+        assert!(SessionMode::from_id(3).is_err());
+    }
+
+    #[test]
+    fn version_mismatch_points_at_the_other_decoder() {
+        let v1 = seal(2, 0, PayloadKind::Dense, 1, 1, &[1, 2, 3, 4]).unwrap();
+        let e = open_session(&[v1.as_slice(), &[0u8; 8]].concat()).unwrap_err();
+        assert!(e.to_string().contains("version"), "{e}");
+        let v2 = seal_session(5, 0, PayloadKind::Dense, 1, 1, 1, SessionMode::Full, &[9]).unwrap();
+        let e = open(&v2).unwrap_err();
+        assert!(e.to_string().contains("session"), "{e}");
+    }
+
+    #[test]
+    fn session_corruption_is_detected() {
+        let payload = [3u8; 40];
+        let frame = seal_session(5, 0, PayloadKind::Dense, 8, 5, 2, SessionMode::Reuse, &payload)
+            .unwrap();
+        // every header field is under the checksum — generation and
+        // mode included
+        for offset in [5usize, 7, 8, 12, 16, 20, 21, 24, 25] {
+            let mut bad = frame.clone();
+            bad[offset] ^= 0x01;
+            assert!(open_session(&bad).is_err(), "header flip at {offset} undetected");
+        }
+        let mut bad = frame.clone();
+        bad[SESSION_HEADER_LEN + 11] ^= 0x80;
+        assert!(open_session(&bad).unwrap_err().to_string().contains("checksum"));
+        assert!(open_session(&frame[..frame.len() - 1]).is_err());
+        assert!(open_session(&frame[..SESSION_HEADER_LEN - 2]).is_err());
     }
 
     #[test]

@@ -13,6 +13,12 @@
 //!   into a per-frame, coordinator-learned codebook — the quantizer
 //!   change that cuts *below* the int8 floor (uploads fall back to
 //!   int8 rows; see [`Precision::for_uploads`]),
+//! * [`vq::session`] — cross-round codebook **sessions** (`[codec]
+//!   codebook_reuse = delta|auto`): generation-tagged version-2 frames
+//!   that reuse the previous round's codebook verbatim or ship int8
+//!   centroid deltas once Q stabilizes, with a typed stale-generation
+//!   signal and a full-frame resync path for clients that missed
+//!   rounds,
 //! * [`sparse`] — index+value encoding for ∇Q* uploads with optional
 //!   top-k row sparsification, including the entropy-aware
 //!   `--sparse-topk auto` tuner ([`sparse::auto_top_k`]),
@@ -67,9 +73,10 @@ pub mod sparse;
 pub mod vq;
 
 pub use entropy::EntropyMode;
-pub use frame::{FrameHeader, PayloadKind, HEADER_LEN};
+pub use frame::{FrameHeader, PayloadKind, SessionMode, HEADER_LEN, SESSION_HEADER_LEN};
 pub use quant::{f16_to_f32, f32_to_f16, Precision};
 pub use sparse::SparsePolicy;
+pub use vq::session::{EncodedDownload, ReuseMode, SessionDecode, VqClientState, VqSession};
 
 use anyhow::{ensure, Result};
 

@@ -60,6 +60,19 @@
 //! infinity for the vq modes); the vq property tests pin the empirical
 //! error ordering instead: error shrinks as the codebook grows, and
 //! `vq8r` sits within int8-residual distance of the input.
+//!
+//! ## Cross-round sessions
+//!
+//! [`encode_plane`] / [`decode_plane`] are the **stateless** per-frame
+//! codec: every frame carries its own codebook. The [`session`]
+//! submodule layers generation-tagged cross-round codebook state on
+//! top — reusing the previous round's codebook verbatim or shipping
+//! int8 centroid deltas once Q stabilizes — built from the same
+//! internals (`prepare_rows` / `train_plane` / `assign_plane` / the
+//! emit and parse halves below), so the stateless path's bytes are
+//! untouched.
+
+pub mod session;
 
 use anyhow::{ensure, Result};
 
@@ -144,16 +157,33 @@ pub fn encoded_len(precision: Precision, rows: usize, cols: usize) -> usize {
     prefix_len(precision, rows, cols) + rows * row_bytes(precision, cols)
 }
 
-/// One subspace's trained, int8-requantized codebook.
-struct SubCodebook {
+/// One subspace's trained, int8-requantized codebook. `pub(crate)` so
+/// the [`session`] encoder/decoder can cache and delta-patch codebooks
+/// across rounds; the byte layout on the wire is owned by
+/// [`emit_books`] / [`parse_books`].
+#[derive(Debug, Clone)]
+pub(crate) struct SubCodebook {
     /// f16 bits of the per-subspace quantization scale.
-    scale_bits: u16,
+    pub(crate) scale_bits: u16,
     /// Quantized entries, centroid-major (`centroids × width`).
-    entries: Vec<i8>,
+    pub(crate) entries: Vec<i8>,
     /// Dequantized entries — what the decoder will reconstruct from,
     /// and what the final assignment pass matches against.
-    deq: Vec<f32>,
-    width: usize,
+    pub(crate) deq: Vec<f32>,
+    pub(crate) width: usize,
+}
+
+impl SubCodebook {
+    /// Recompute the dequantized entries from `entries` + `scale_bits`
+    /// (after a session delta patch), with the exact expression the
+    /// trainer and the stateless decoder use, so all three paths
+    /// reconstruct bit-identical floats.
+    pub(crate) fn redequantize(&mut self) {
+        let scale = f16_to_f32(self.scale_bits);
+        for (d, &q) in self.deq.iter_mut().zip(&self.entries) {
+            *d = q as f32 / 127.0 * scale;
+        }
+    }
 }
 
 /// Nearest centroid by f64 squared distance; ties break toward the
@@ -161,8 +191,10 @@ struct SubCodebook {
 /// carries the assignment rule for both the Lloyd loop (f64 working
 /// centroids) and the final pass (the int8-requantized codebook,
 /// widened to f64 — exact, since f32 → f64 is lossless), so the
-/// determinism-critical tie-break lives in exactly one place.
-fn nearest(point: &[f32], centroids: &[f64], width: usize, count: usize) -> usize {
+/// determinism-critical tie-break lives in exactly one place. Returns
+/// the winning index and its squared distance (the session encoder
+/// aggregates the distances into the reuse-vs-retrain error budget).
+fn nearest(point: &[f32], centroids: &[f64], width: usize, count: usize) -> (usize, f64) {
     let mut best = 0usize;
     let mut best_d = f64::INFINITY;
     for c in 0..count {
@@ -176,7 +208,7 @@ fn nearest(point: &[f32], centroids: &[f64], width: usize, count: usize) -> usiz
             best = c;
         }
     }
-    best
+    (best, best_d)
 }
 
 /// Train one subspace's codebook on the normalized live rows with
@@ -207,7 +239,7 @@ fn train_subspace(
             let mut counts = vec![0u32; c_count];
             for p in 0..n {
                 let point = &points[p * width..(p + 1) * width];
-                let best = nearest(point, &cent, width, c_count);
+                let (best, _) = nearest(point, &cent, width, c_count);
                 counts[best] += 1;
                 for (acc, v) in sums[best * width..(best + 1) * width].iter_mut().zip(point) {
                     *acc += *v as f64;
@@ -246,21 +278,26 @@ fn train_subspace(
     }
 }
 
-/// Encode a row-major `rows × cols` plane into `out` (payload layout:
-/// codebook block, then per-row records). Pure and deterministic: the
-/// same data always yields the same bytes on any thread.
-pub fn encode_plane(out: &mut Vec<u8>, data: &[f32], rows: usize, cols: usize, p: Precision) {
-    debug_assert!(p.is_vq(), "encode_plane on {}", p.name());
-    debug_assert_eq!(data.len(), rows * cols);
-    let start = out.len();
-    if rows == 0 {
-        return;
-    }
-    let s_count = subspaces(cols);
-    let c_count = centroids(p, rows);
+/// Per-frame row normalization state shared by the stateless and the
+/// session encoders: f16 row scales, the live (nonzero, finite) row
+/// set, and the scale-normalized matrix the codebooks train on.
+pub(crate) struct PlanePrep {
+    /// f16 bits of each row's scale.
+    pub(crate) scale_bits: Vec<u16>,
+    /// Dequantized row scales (what the decoder will multiply by).
+    pub(crate) scales: Vec<f32>,
+    /// Rows with a positive finite scale; all others decode to zeros.
+    pub(crate) live: Vec<usize>,
+    /// Row-major normalized matrix (dead rows stay zero).
+    pub(crate) norm: Vec<f32>,
+    pub(crate) rows: usize,
+    pub(crate) cols: usize,
+}
 
-    // per-row f16 scales; zero/non-finite-scale rows sit out of training
-    // and decode to exact zeros (times the residual, for vq8r)
+/// Compute the per-row f16 scales and the normalized matrix;
+/// zero/non-finite-scale rows sit out of training and decode to exact
+/// zeros (times the residual, for vq8r).
+pub(crate) fn prepare_rows(data: &[f32], rows: usize, cols: usize) -> PlanePrep {
     let mut scale_bits = Vec::with_capacity(rows);
     let mut scales = Vec::with_capacity(rows);
     for r in 0..rows {
@@ -280,38 +317,99 @@ pub fn encode_plane(out: &mut Vec<u8>, data: &[f32], rows: usize, cols: usize, p
             norm[r * cols + c] = data[r * cols + c] / s;
         }
     }
+    PlanePrep {
+        scale_bits,
+        scales,
+        live,
+        norm,
+        rows,
+        cols,
+    }
+}
 
-    // train + requantize one codebook per subspace, assign every row
+/// Train + int8-requantize one codebook per subspace on the live rows
+/// (`centroids(p, rows)` centroids each; the same PCG seed schedule as
+/// ever, so this is a pure function of the prepared plane).
+pub(crate) fn train_plane(prep: &PlanePrep, p: Precision) -> Vec<SubCodebook> {
+    let s_count = subspaces(prep.cols);
+    let c_count = centroids(p, prep.rows);
     let mut books = Vec::with_capacity(s_count);
-    let mut assign = vec![0u8; rows * s_count];
     for s_i in 0..s_count {
         let off = s_i * SUB_WIDTH;
-        let w = sub_width(cols, s_i);
-        let mut points = Vec::with_capacity(live.len() * w);
-        for &r in &live {
-            points.extend_from_slice(&norm[r * cols + off..r * cols + off + w]);
+        let w = sub_width(prep.cols, s_i);
+        let mut points = Vec::with_capacity(prep.live.len() * w);
+        for &r in &prep.live {
+            points.extend_from_slice(&prep.norm[r * prep.cols + off..r * prep.cols + off + w]);
         }
-        let book = train_subspace(&points, live.len(), w, c_count, SEED_BASE + s_i as u64);
-        let deq64: Vec<f64> = book.deq.iter().map(|&v| v as f64).collect();
-        for &r in &live {
-            let point = &norm[r * cols + off..r * cols + off + w];
-            assign[r * s_count + s_i] = nearest(point, &deq64, w, c_count) as u8;
-        }
-        books.push(book);
+        books.push(train_subspace(
+            &points,
+            prep.live.len(),
+            w,
+            c_count,
+            SEED_BASE + s_i as u64,
+        ));
     }
+    books
+}
 
-    // emit: codebook scales, codebook entries, per-row records
-    for book in &books {
+/// Assign every live row's subvectors to the nearest requantized
+/// centroid of `books`. Returns the `rows × subspaces` index table
+/// (dead rows keep index 0) and the summed squared assignment distance
+/// over the normalized live rows — the session encoder's
+/// reconstruction-error measure for the reuse-vs-retrain decision.
+pub(crate) fn assign_plane(prep: &PlanePrep, books: &[SubCodebook]) -> (Vec<u8>, f64) {
+    let s_count = subspaces(prep.cols);
+    let c_count = if s_count > 0 && books[0].width > 0 {
+        books[0].entries.len() / books[0].width
+    } else {
+        0
+    };
+    let mut assign = vec![0u8; prep.rows * s_count];
+    let mut sse = 0.0f64;
+    for (s_i, book) in books.iter().enumerate() {
+        let off = s_i * SUB_WIDTH;
+        let w = sub_width(prep.cols, s_i);
+        let deq64: Vec<f64> = book.deq.iter().map(|&v| v as f64).collect();
+        for &r in &prep.live {
+            let point = &prep.norm[r * prep.cols + off..r * prep.cols + off + w];
+            let (best, d) = nearest(point, &deq64, w, c_count);
+            assign[r * s_count + s_i] = best as u8;
+            sse += d;
+        }
+    }
+    (assign, sse)
+}
+
+/// Emit the in-frame codebook block: per-subspace f16 scales, then the
+/// int8 entries, subspace-major.
+pub(crate) fn emit_books(out: &mut Vec<u8>, books: &[SubCodebook]) {
+    for book in books {
         out.extend_from_slice(&book.scale_bits.to_le_bytes());
     }
-    for book in &books {
+    for book in books {
         for &q in &book.entries {
             out.push(q as u8);
         }
     }
+}
+
+/// Emit the per-row records (f16 scale + index plane, plus the int8
+/// residual row for vq8r) against the codebooks that will decode them
+/// — the reconstruction the vq8r residual is computed against is
+/// exactly the decoder's.
+pub(crate) fn emit_rows(
+    out: &mut Vec<u8>,
+    data: &[f32],
+    prep: &PlanePrep,
+    books: &[SubCodebook],
+    assign: &[u8],
+    p: Precision,
+) {
+    let (rows, cols) = (prep.rows, prep.cols);
+    let s_count = subspaces(cols);
     let mut residual = vec![0.0f32; cols];
     for r in 0..rows {
-        out.extend_from_slice(&scale_bits[r].to_le_bytes());
+        out.extend_from_slice(&prep.scale_bits[r].to_le_bytes());
         let idx = &assign[r * s_count..(r + 1) * s_count];
         match p {
             Precision::Vq4 => {
@@ -332,7 +430,7 @@ pub fn encode_plane(out: &mut Vec<u8>, data: &[f32], rows: usize, cols: usize, p
         }
         if p == Precision::Vq8r {
             // int8 residual row against the decoder's reconstruction
-            let s = scales[r];
+            let s = prep.scales[r];
             for c in 0..cols {
                 let recon = if s > 0.0 && s.is_finite() {
                     let s_i = c / SUB_WIDTH;
@@ -347,47 +445,83 @@ pub fn encode_plane(out: &mut Vec<u8>, data: &[f32], rows: usize, cols: usize, p
             super::quant::encode_rows(out, &residual, 1, cols, Precision::Int8);
         }
     }
+}
+
+/// Encode a row-major `rows × cols` plane into `out` (payload layout:
+/// codebook block, then per-row records). Pure and deterministic: the
+/// same data always yields the same bytes on any thread.
+pub fn encode_plane(out: &mut Vec<u8>, data: &[f32], rows: usize, cols: usize, p: Precision) {
+    debug_assert!(p.is_vq(), "encode_plane on {}", p.name());
+    debug_assert_eq!(data.len(), rows * cols);
+    let start = out.len();
+    if rows == 0 {
+        return;
+    }
+    let prep = prepare_rows(data, rows, cols);
+    let books = train_plane(&prep, p);
+    let (assign, _sse) = assign_plane(&prep, &books);
+    emit_books(out, &books);
+    emit_rows(out, data, &prep, &books, &assign, p);
     debug_assert_eq!(out.len() - start, encoded_len(p, rows, cols));
 }
 
-/// Decode a [`encode_plane`] payload back to f32s. The caller (the
-/// quant dispatcher) has already validated the payload length against
-/// [`encoded_len`]; indices are still range-checked so a crafted frame
-/// cannot read outside the shipped codebook.
-pub fn decode_plane(payload: &[u8], rows: usize, cols: usize, p: Precision) -> Result<Vec<f32>> {
-    debug_assert!(p.is_vq(), "decode_plane on {}", p.name());
-    if rows == 0 {
-        return Ok(Vec::new());
-    }
+/// Parse an in-frame codebook block ([`emit_books`] layout) into
+/// per-subspace codebooks, advancing `pos`. The caller has validated
+/// the payload length, so indexing is in bounds by construction.
+pub(crate) fn parse_books(
+    payload: &[u8],
+    pos: &mut usize,
+    c_count: usize,
+    cols: usize,
+) -> Vec<SubCodebook> {
     let s_count = subspaces(cols);
-    let c_count = centroids(p, rows);
-    let ib = index_bytes(p, cols);
-    let mut pos = 0usize;
-
-    let mut cb_scales = Vec::with_capacity(s_count);
+    let mut scale_bits = Vec::with_capacity(s_count);
     for _ in 0..s_count {
-        cb_scales.push(f16_to_f32(u16::from_le_bytes([payload[pos], payload[pos + 1]])));
-        pos += 2;
+        scale_bits.push(u16::from_le_bytes([payload[*pos], payload[*pos + 1]]));
+        *pos += 2;
     }
-    // dequantized codebooks, subspace-major
-    let mut deq = Vec::with_capacity(s_count);
-    for (s_i, &scale) in cb_scales.iter().enumerate() {
+    let mut books = Vec::with_capacity(s_count);
+    for (s_i, &bits) in scale_bits.iter().enumerate() {
+        let scale = f16_to_f32(bits);
         let w = sub_width(cols, s_i);
-        let mut book = Vec::with_capacity(c_count * w);
+        let mut entries = Vec::with_capacity(c_count * w);
+        let mut deq = Vec::with_capacity(c_count * w);
         for _ in 0..c_count * w {
-            let q = payload[pos] as i8;
-            pos += 1;
-            book.push(q as f32 / 127.0 * scale);
+            let q = payload[*pos] as i8;
+            *pos += 1;
+            entries.push(q);
+            deq.push(q as f32 / 127.0 * scale);
         }
-        deq.push(book);
+        books.push(SubCodebook {
+            scale_bits: bits,
+            entries,
+            deq,
+            width: w,
+        });
     }
+    books
+}
 
+/// Decode `rows` per-row records ([`emit_rows`] layout) against
+/// already-parsed codebooks, advancing `pos`. Indices are range-checked
+/// so a crafted frame cannot read outside the shipped codebook.
+pub(crate) fn decode_rows_from(
+    payload: &[u8],
+    pos: &mut usize,
+    rows: usize,
+    cols: usize,
+    p: Precision,
+    books: &[SubCodebook],
+    c_count: usize,
+) -> Result<Vec<f32>> {
+    let s_count = subspaces(cols);
+    let ib = index_bytes(p, cols);
     let mut data = vec![0.0f32; rows * cols];
     for r in 0..rows {
-        let s = f16_to_f32(u16::from_le_bytes([payload[pos], payload[pos + 1]]));
-        pos += 2;
-        let raw = &payload[pos..pos + ib];
-        pos += ib;
+        let s = f16_to_f32(u16::from_le_bytes([payload[*pos], payload[*pos + 1]]));
+        *pos += 2;
+        let raw = &payload[*pos..*pos + ib];
+        *pos += ib;
         for s_i in 0..s_count {
             let idx = match p {
                 Precision::Vq4 => ((raw[s_i / 2] >> (4 * (s_i % 2))) & 0x0f) as usize,
@@ -400,18 +534,34 @@ pub fn decode_plane(payload: &[u8], rows: usize, cols: usize, p: Precision) -> R
             let off = s_i * SUB_WIDTH;
             let w = sub_width(cols, s_i);
             for j in 0..w {
-                data[r * cols + off + j] = deq[s_i][idx * w + j] * s;
+                data[r * cols + off + j] = books[s_i].deq[idx * w + j] * s;
             }
         }
         if p == Precision::Vq8r {
-            let block = &payload[pos..pos + cols + 2];
+            let block = &payload[*pos..*pos + cols + 2];
             let res = super::quant::decode_rows(block, 1, cols, Precision::Int8)?;
-            pos += cols + 2;
+            *pos += cols + 2;
             for (dst, r_v) in data[r * cols..(r + 1) * cols].iter_mut().zip(&res) {
                 *dst += r_v;
             }
         }
     }
+    Ok(data)
+}
+
+/// Decode a [`encode_plane`] payload back to f32s. The caller (the
+/// quant dispatcher) has already validated the payload length against
+/// [`encoded_len`]; indices are still range-checked so a crafted frame
+/// cannot read outside the shipped codebook.
+pub fn decode_plane(payload: &[u8], rows: usize, cols: usize, p: Precision) -> Result<Vec<f32>> {
+    debug_assert!(p.is_vq(), "decode_plane on {}", p.name());
+    if rows == 0 {
+        return Ok(Vec::new());
+    }
+    let c_count = centroids(p, rows);
+    let mut pos = 0usize;
+    let books = parse_books(payload, &mut pos, c_count, cols);
+    let data = decode_rows_from(payload, &mut pos, rows, cols, p, &books, c_count)?;
     ensure!(
         pos == payload.len(),
         "vq payload has {} trailing bytes",

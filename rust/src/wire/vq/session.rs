@@ -1,0 +1,927 @@
+//! Cross-round codebook sessions: the first **stateful** wire feature.
+//!
+//! PR 4's `wire::vq` ships a freshly learned codebook in every dense
+//! frame — correct, stateless, and wasteful once training settles: at
+//! M_s = 1763, K = 25 the in-frame codebook block is 1,610 of the
+//! 13,951 payload bytes, re-sent every round even when k-means lands on
+//! (nearly) the same centroids. This module makes the codebook a
+//! **session resource** shared between the coordinator and its clients:
+//!
+//! * [`VqSession`] (coordinator) keeps the last-shipped per-subspace
+//!   codebooks under a monotonically increasing `generation` tag. Each
+//!   round it emits one of three version-2 frame modes:
+//!   - **reuse** — the frame carries only the generation id and the
+//!     per-row records; clients decode against their cached codebook.
+//!   - **delta** — the frame carries the new per-subspace f16 scales
+//!     plus one wrapping-u8 **centroid delta** per int8 entry
+//!     (`new.wrapping_sub(old)`); applying the delta reconstructs the
+//!     freshly trained codebook *exactly* (post-int8-requantization),
+//!     so a delta frame trains bit-identically to a full frame. The
+//!     byte win is entropy-side: once Q stabilizes the deltas
+//!     concentrate near zero and the range coder's codebook-prefix
+//!     tree eats them.
+//!   - **full** — the PR 4 payload under a v2 header: self-contained
+//!     codebook + rows; installs/overwrites the client cache.
+//! * [`VqClientState`] (per client) holds the cached codebook and
+//!   applies reuse/delta frames against it. A frame whose base
+//!   generation does not match the cache is **never** decoded into
+//!   garbage: it surfaces as [`SessionDecode::Stale`], the typed
+//!   "request a resync" signal (the vendored anyhow shim cannot
+//!   downcast, so staleness is a first-class result variant rather
+//!   than a string to sniff). Corrupt frames — truncation, flips,
+//!   crafted indices, geometry mismatches at a matching generation —
+//!   remain hard `Err`s, and a failed decode leaves the cache
+//!   untouched.
+//!
+//! ## Mode selection
+//!
+//! Selection is a pure function of the payload and the session state —
+//! the determinism contract survives: repeat encodes are byte-identical
+//! and the coordinator-side choice never depends on thread count.
+//! [`ReuseMode::Delta`] always ships a delta when the cached geometry
+//! matches (bit-transparent to training, so `ci/determinism.sh` can
+//! diff its metrics against the stateless path). [`ReuseMode::Auto`]
+//! re-runs assignment against the cached codebook and compares the
+//! summed squared assignment error against the freshly trained
+//! codebook's: reuse is eligible only within [`REUSE_ERR_BUDGET`]
+//! (the prototype measured the ratio at ~1.00–1.11 for one Adam step
+//! of drift, ≥ ~1.19 once two steps accumulate, and ~2.5 across
+//! disjoint bandit subsets — so auto reuses under stable Q and
+//! retrains across selection churn). Among eligible candidates auto
+//! picks the smallest
+//! **measured encoded frame** (entropy coding included); ties fall to
+//! the simpler mode (full over delta over reuse). Because the measured
+//! bytes depend on the entropy mode, `auto` may pick different modes —
+//! and therefore different (equally valid) codebooks — under different
+//! entropy settings; within a fixed config it is fully deterministic.
+//!
+//! ## Resync
+//!
+//! A client that missed rounds (its cached generation lags) answers a
+//! reuse/delta frame with `Stale`; the coordinator then serves
+//! [`VqSession::resync_frame`] — a **full** frame for the *current*
+//! generation and the *current* round's row records, reconstructing
+//! values bit-identical to what in-sync clients decoded, so the
+//! training trajectory is independent of who resynced (the churn e2e
+//! test pins this). Only the ledger sees the difference: the resync
+//! frame's length is attributed to the lagging client.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::wire::entropy::{self, EntropyMode};
+use crate::wire::frame::{self, PayloadKind, SessionMode};
+use crate::wire::quant::Precision;
+use crate::wire::Dense;
+
+use super::{
+    assign_plane, centroids, decode_rows_from, emit_books, emit_rows, encoded_len, parse_books,
+    prefix_len, prepare_rows, row_bytes, train_plane, SubCodebook,
+};
+
+/// Relative reconstruction-error budget of codebook reuse: `auto`
+/// reuses the cached codebook only while its summed squared assignment
+/// error stays within this fraction above the freshly trained
+/// codebook's. Calibrated against the prototype's drift sweep: one
+/// Adam step of drift (|Δ| ≈ η = 0.01 on 0.1-scale factors) measures
+/// ≤ ~1.11× even on small overfit frames, two accumulated steps
+/// ≥ ~1.19×, and disjoint bandit row subsets ~2.5× — so 0.15 reuses
+/// across single-round drift, re-ships after drift accumulates, and
+/// never reuses across selection churn. 15% of an already-lossy vq
+/// assignment error is below the quantizer's own noise floor.
+pub const REUSE_ERR_BUDGET: f64 = 0.15;
+
+/// Cross-round codebook policy (`[codec] codebook_reuse`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ReuseMode {
+    /// Stateless PR 4 behaviour: version-1 frames, a fresh in-frame
+    /// codebook every round. The default.
+    #[default]
+    Off,
+    /// Version-2 session frames; ship a centroid **delta** whenever the
+    /// cached geometry matches, a full codebook otherwise. Decoded
+    /// factors are bit-identical to `off` (the delta reconstructs the
+    /// fresh codebook exactly) — only the bytes change.
+    Delta,
+    /// Version-2 session frames; choose reuse / delta / full per frame
+    /// by measured encoded bytes under the [`REUSE_ERR_BUDGET`].
+    Auto,
+}
+
+impl ReuseMode {
+    /// Parse a mode name (`off|delta|auto`).
+    pub fn parse(s: &str) -> Result<ReuseMode> {
+        Ok(match s {
+            "off" => ReuseMode::Off,
+            "delta" => ReuseMode::Delta,
+            "auto" => ReuseMode::Auto,
+            other => anyhow::bail!("unknown codebook_reuse mode `{other}` (off|delta|auto)"),
+        })
+    }
+
+    /// Mode name for logs/CSV.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReuseMode::Off => "off",
+            ReuseMode::Delta => "delta",
+            ReuseMode::Auto => "auto",
+        }
+    }
+
+    /// Does this mode keep cross-round codebook state (emit v2 frames)?
+    pub fn is_active(&self) -> bool {
+        !matches!(self, ReuseMode::Off)
+    }
+}
+
+/// One generation's codebooks plus the geometry they were trained for.
+/// Shared representation between the encoder and the client decoder.
+#[derive(Debug, Clone)]
+struct GenBooks {
+    generation: u32,
+    c_count: usize,
+    cols: usize,
+    precision: Precision,
+    books: Vec<SubCodebook>,
+}
+
+/// Artifacts of the last [`VqSession::encode_dense`] call, kept so a
+/// resync frame can be served without re-running k-means: the
+/// full-codebook payload that reconstructs exactly the values the
+/// chosen broadcast frame decodes to.
+#[derive(Debug, Clone)]
+struct LastEncode {
+    rows: usize,
+    cols: usize,
+    generation: u32,
+    full_payload: Vec<u8>,
+}
+
+/// The structural (entropy-off) payload length of a session frame mode.
+pub fn session_payload_len(mode: SessionMode, p: Precision, rows: usize, cols: usize) -> usize {
+    if rows == 0 {
+        return 0;
+    }
+    match mode {
+        // full codebook and delta blocks are the same size: the delta
+        // plane replaces each int8 entry with its wrapping difference
+        SessionMode::Full | SessionMode::Delta => encoded_len(p, rows, cols),
+        SessionMode::Reuse => rows * row_bytes(p, cols),
+    }
+}
+
+/// The codebook/delta prefix length of a session payload (the segment
+/// that trains the entropy coder's dedicated prefix tree).
+pub fn session_prefix_len(mode: SessionMode, p: Precision, rows: usize, cols: usize) -> usize {
+    match mode {
+        SessionMode::Full | SessionMode::Delta => prefix_len(p, rows, cols),
+        SessionMode::Reuse => 0,
+    }
+}
+
+/// Exact frame length of a session-mode dense payload with entropy
+/// coding off (entropy-coded lengths are data-dependent — read them
+/// off the encoded frame).
+pub fn session_frame_len(mode: SessionMode, p: Precision, rows: usize, cols: usize) -> usize {
+    frame::SESSION_HEADER_LEN + session_payload_len(mode, p, rows, cols)
+}
+
+/// One encoded session download: the broadcast frame plus the metadata
+/// the coordinator needs for per-client sync accounting.
+#[derive(Debug, Clone)]
+pub struct EncodedDownload {
+    /// The sealed version-2 frame to broadcast.
+    pub frame: Vec<u8>,
+    /// Which session mode the frame carries.
+    pub mode: SessionMode,
+    /// The frame's generation tag (the generation a client holds
+    /// *after* successfully decoding it — unless `installs_generation`
+    /// is false).
+    pub generation: u32,
+    /// Does decoding this frame leave the client holding `generation`?
+    /// False only for empty (rows = 0) frames, which carry no codebook:
+    /// any client can decode them, but the decoder installs nothing, so
+    /// the coordinator must not record a generation for the recipients
+    /// (mirroring `VqClientState::decode_dense`'s early return).
+    pub installs_generation: bool,
+}
+
+impl EncodedDownload {
+    /// Can a client whose cached codebook generation is `cached` decode
+    /// this frame directly (no resync needed)?
+    pub fn in_sync(&self, cached: Option<u32>) -> bool {
+        match self.mode {
+            SessionMode::Full => true,
+            SessionMode::Delta => cached == Some(self.generation.wrapping_sub(1)),
+            SessionMode::Reuse => cached == Some(self.generation),
+        }
+    }
+}
+
+/// Coordinator-side session state: the last-shipped codebooks and the
+/// reuse policy. One per trainer; never shared across threads (dense
+/// downloads are encoded once per round on the coordinator lane, so
+/// the fleet executor's determinism contract is untouched).
+#[derive(Debug, Clone)]
+pub struct VqSession {
+    precision: Precision,
+    entropy: EntropyMode,
+    mode: ReuseMode,
+    state: Option<GenBooks>,
+    last: Option<LastEncode>,
+}
+
+impl VqSession {
+    /// New session for a vq precision. `mode` must be an active session
+    /// mode (`delta`/`auto`) — `off` means "don't build a session".
+    pub fn new(precision: Precision, entropy: EntropyMode, mode: ReuseMode) -> Result<VqSession> {
+        ensure!(
+            precision.is_vq(),
+            "codebook sessions apply to the vq precisions, not {}",
+            precision.name()
+        );
+        ensure!(
+            mode.is_active(),
+            "codebook_reuse = off does not use a session"
+        );
+        Ok(VqSession {
+            precision,
+            entropy,
+            mode,
+            state: None,
+            last: None,
+        })
+    }
+
+    /// The current codebook generation (0 before the first frame).
+    pub fn generation(&self) -> u32 {
+        self.state.as_ref().map_or(0, |s| s.generation)
+    }
+
+    /// The session's reuse policy.
+    pub fn mode(&self) -> ReuseMode {
+        self.mode
+    }
+
+    /// Seal one session payload into a v2 frame (entropy-coding it
+    /// first when the session's entropy mode range-codes values).
+    fn seal(
+        &self,
+        mode: SessionMode,
+        generation: u32,
+        rows: usize,
+        cols: usize,
+        payload: &[u8],
+    ) -> Result<Vec<u8>> {
+        let coded;
+        let body: &[u8] = if self.entropy.range_values() {
+            coded = entropy::seal_block_prefixed(
+                payload,
+                self.precision,
+                cols,
+                session_prefix_len(mode, self.precision, rows, cols),
+            )?;
+            &coded
+        } else {
+            payload
+        };
+        frame::seal_session(
+            self.precision.id(),
+            self.entropy.id(),
+            PayloadKind::Dense,
+            rows,
+            cols,
+            generation,
+            mode,
+            body,
+        )
+    }
+
+    /// Encode one dense Q* download through the session. Pure function
+    /// of `(data, session state)`: repeat calls on a cloned session are
+    /// byte-identical. Advances the generation when a delta or full
+    /// frame ships; reuse keeps it.
+    pub fn encode_dense(
+        &mut self,
+        data: &[f32],
+        rows: usize,
+        cols: usize,
+    ) -> Result<EncodedDownload> {
+        ensure!(
+            data.len() == rows * cols,
+            "session dense encode: {} values for {rows}x{cols}",
+            data.len()
+        );
+        let p = self.precision;
+        if rows == 0 {
+            let generation = self.generation();
+            let frame = self.seal(SessionMode::Full, generation, rows, cols, &[])?;
+            self.last = Some(LastEncode {
+                rows,
+                cols,
+                generation,
+                full_payload: Vec::new(),
+            });
+            return Ok(EncodedDownload {
+                frame,
+                mode: SessionMode::Full,
+                generation,
+                // no codebook travels, so no client gains a generation
+                installs_generation: false,
+            });
+        }
+
+        let c_count = centroids(p, rows);
+        let prep = prepare_rows(data, rows, cols);
+        let fresh = train_plane(&prep, p);
+        let (assign_fresh, sse_fresh) = assign_plane(&prep, &fresh);
+
+        let mut full_payload = Vec::with_capacity(encoded_len(p, rows, cols));
+        emit_books(&mut full_payload, &fresh);
+        emit_rows(&mut full_payload, data, &prep, &fresh, &assign_fresh, p);
+
+        let compatible = self
+            .state
+            .as_ref()
+            .is_some_and(|s| s.c_count == c_count && s.cols == cols && s.precision == p);
+        let next_gen = self.generation() + 1;
+        // the sealed full candidate is only needed when it can actually
+        // be chosen: always under Auto (byte comparison), and as the
+        // Delta-mode fallback when no compatible state exists — sealing
+        // it unconditionally would waste a full entropy-coding pass per
+        // round in steady-state Delta mode
+        let full_frame = if self.mode == ReuseMode::Auto || !compatible {
+            Some(self.seal(SessionMode::Full, next_gen, rows, cols, &full_payload)?)
+        } else {
+            None
+        };
+
+        // delta candidate: new scales + wrapping entry deltas + the
+        // full candidate's row records (same fresh codebook, so the
+        // records are shared byte-for-byte)
+        let mut delta_frame = None;
+        if compatible {
+            let s = self.state.as_ref().expect("compatible implies state");
+            let mut dp = Vec::with_capacity(full_payload.len());
+            for book in &fresh {
+                dp.extend_from_slice(&book.scale_bits.to_le_bytes());
+            }
+            for (old, new) in s.books.iter().zip(&fresh) {
+                for (&o, &n) in old.entries.iter().zip(&new.entries) {
+                    dp.push((n as u8).wrapping_sub(o as u8));
+                }
+            }
+            dp.extend_from_slice(&full_payload[prefix_len(p, rows, cols)..]);
+            delta_frame = Some(self.seal(SessionMode::Delta, next_gen, rows, cols, &dp)?);
+        }
+
+        // reuse candidate (auto only): assignment against the cached
+        // codebook, eligible within the error budget
+        let mut reuse_cand = None; // (sealed frame, row records)
+        if self.mode == ReuseMode::Auto && compatible {
+            let s = self.state.as_ref().expect("compatible implies state");
+            let (assign_reuse, sse_reuse) = assign_plane(&prep, &s.books);
+            if sse_reuse <= sse_fresh * (1.0 + REUSE_ERR_BUDGET) {
+                let mut records = Vec::with_capacity(rows * row_bytes(p, cols));
+                emit_rows(&mut records, data, &prep, &s.books, &assign_reuse, p);
+                let frame = self.seal(SessionMode::Reuse, s.generation, rows, cols, &records)?;
+                reuse_cand = Some((frame, records));
+            }
+        }
+
+        // choose: delta-mode always deltas when it can; auto takes the
+        // smallest measured frame, ties falling to the simpler mode
+        let chosen = match self.mode {
+            ReuseMode::Delta => {
+                if delta_frame.is_some() {
+                    SessionMode::Delta
+                } else {
+                    SessionMode::Full
+                }
+            }
+            ReuseMode::Auto => {
+                let mut best = SessionMode::Full;
+                let mut best_len = full_frame.as_ref().expect("auto seals full").len();
+                if let Some(df) = &delta_frame {
+                    if df.len() < best_len {
+                        best = SessionMode::Delta;
+                        best_len = df.len();
+                    }
+                }
+                if let Some((rf, _)) = &reuse_cand {
+                    if rf.len() < best_len {
+                        best = SessionMode::Reuse;
+                    }
+                }
+                best
+            }
+            ReuseMode::Off => unreachable!("VqSession::new rejects off"),
+        };
+
+        match chosen {
+            SessionMode::Reuse => {
+                let (frame, records) = reuse_cand.expect("reuse chosen implies candidate");
+                let s = self.state.as_ref().expect("reuse chosen implies state");
+                let generation = s.generation;
+                // resync payload: the cached codebook made explicit,
+                // followed by the very records the reuse frame carries
+                let mut resync = Vec::with_capacity(encoded_len(p, rows, cols));
+                emit_books(&mut resync, &s.books);
+                resync.extend_from_slice(&records);
+                self.last = Some(LastEncode {
+                    rows,
+                    cols,
+                    generation,
+                    full_payload: resync,
+                });
+                Ok(EncodedDownload {
+                    frame,
+                    mode: SessionMode::Reuse,
+                    generation,
+                    installs_generation: true,
+                })
+            }
+            mode => {
+                let frame = if mode == SessionMode::Delta {
+                    delta_frame.expect("delta chosen implies candidate")
+                } else {
+                    full_frame.expect("full chosen implies candidate")
+                };
+                self.state = Some(GenBooks {
+                    generation: next_gen,
+                    c_count,
+                    cols,
+                    precision: p,
+                    books: fresh,
+                });
+                self.last = Some(LastEncode {
+                    rows,
+                    cols,
+                    generation: next_gen,
+                    full_payload,
+                });
+                Ok(EncodedDownload {
+                    frame,
+                    mode,
+                    generation: next_gen,
+                    installs_generation: true,
+                })
+            }
+        }
+    }
+
+    /// The resync frame for the last encoded download: a **full** v2
+    /// frame carrying the current codebook and the current round's row
+    /// records. Decodes to values bit-identical to the broadcast frame
+    /// (the churn e2e pins this), installs the current generation in
+    /// the client's cache, and needs no prior state to decode.
+    pub fn resync_frame(&self) -> Result<Vec<u8>> {
+        let last = self
+            .last
+            .as_ref()
+            .context("resync_frame before any encode_dense")?;
+        self.seal(
+            SessionMode::Full,
+            last.generation,
+            last.rows,
+            last.cols,
+            &last.full_payload,
+        )
+    }
+}
+
+/// Outcome of a session decode: data, or the typed stale-state signal.
+#[derive(Debug, Clone)]
+pub enum SessionDecode {
+    /// The frame decoded against (and possibly updated) the cache.
+    Data(Dense),
+    /// The frame references a codebook generation this client does not
+    /// hold — it missed rounds (or lost its cache) and must request a
+    /// full-codebook resync. Nothing was decoded; the cache is
+    /// unchanged.
+    Stale {
+        /// The generation this client holds (`None` = no cache at all).
+        cached: Option<u32>,
+        /// The base generation the frame requires.
+        required: u32,
+    },
+}
+
+impl SessionDecode {
+    /// Unwrap the decoded data, turning staleness into a hard error
+    /// (for callers that know they are in sync, e.g. the coordinator's
+    /// own mirror decoder).
+    pub fn into_data(self) -> Result<Dense> {
+        match self {
+            SessionDecode::Data(d) => Ok(d),
+            SessionDecode::Stale { cached, required } => anyhow::bail!(
+                "stale codebook generation: cached {cached:?}, frame requires {required}"
+            ),
+        }
+    }
+}
+
+/// Per-client decode state: the cached codebook generation a device
+/// holds between rounds. Applies reuse/delta frames against the cache;
+/// corrupt frames never touch it.
+#[derive(Debug, Clone, Default)]
+pub struct VqClientState {
+    state: Option<GenBooks>,
+}
+
+impl VqClientState {
+    /// Fresh state: no cached codebook (a brand-new or evicted client).
+    pub fn new() -> VqClientState {
+        VqClientState::default()
+    }
+
+    /// The cached codebook generation, if any.
+    pub fn generation(&self) -> Option<u32> {
+        self.state.as_ref().map(|s| s.generation)
+    }
+
+    /// Drop the cached codebook — the churn hook simulating a device
+    /// that evicted its cache (app reinstall, storage pressure) or
+    /// missed the rounds that shipped it.
+    pub fn invalidate(&mut self) {
+        self.state = None;
+    }
+
+    /// Decode one session (version-2) dense frame against the cache.
+    /// Returns [`SessionDecode::Stale`] when the frame's base
+    /// generation is not the cached one (decided from the
+    /// checksum-validated header before any payload *decode* work — a
+    /// churned client still pays the frame checksum scan but skips the
+    /// expensive range-decode); hard-errors on corruption — in both
+    /// cases the cache is left exactly as it was.
+    pub fn decode_dense(&mut self, buf: &[u8]) -> Result<SessionDecode> {
+        let (h, payload) = frame::open_session(buf)?;
+        ensure!(
+            h.kind == PayloadKind::Dense,
+            "expected a dense session frame, got {:?}",
+            h.kind
+        );
+        let p = Precision::from_id(h.codec_id)?;
+        ensure!(p.is_vq(), "session frame carries non-vq codec {}", p.name());
+        let e = EntropyMode::from_id(h.entropy_id)?;
+        let (rows, cols) = (h.rows as usize, h.cols as usize);
+        let expected = session_payload_len(h.mode, p, rows, cols);
+        // staleness is knowable from the (checksum-validated) header
+        // alone — answer churned clients before the range-decode of a
+        // payload we would then discard (the checksum scan above is
+        // unavoidable: corruption must never masquerade as staleness)
+        if rows > 0 {
+            match h.mode {
+                SessionMode::Delta => {
+                    ensure!(h.generation > 0, "delta frame with generation 0");
+                    let required = h.generation - 1;
+                    let cached = self.generation();
+                    if cached != Some(required) {
+                        return Ok(SessionDecode::Stale { cached, required });
+                    }
+                }
+                SessionMode::Reuse => {
+                    let cached = self.generation();
+                    if cached != Some(h.generation) {
+                        return Ok(SessionDecode::Stale {
+                            cached,
+                            required: h.generation,
+                        });
+                    }
+                }
+                SessionMode::Full => {}
+            }
+        }
+        let raw_store;
+        let raw: &[u8] = if e.range_values() {
+            raw_store = entropy::open_block_prefixed(
+                payload,
+                expected,
+                p,
+                cols,
+                session_prefix_len(h.mode, p, rows, cols),
+            )?;
+            &raw_store
+        } else {
+            ensure!(
+                payload.len() == expected,
+                "session payload of {} bytes does not match {rows}x{cols} {} (expected {expected})",
+                payload.len(),
+                h.mode.name()
+            );
+            payload
+        };
+        if rows == 0 {
+            return Ok(SessionDecode::Data(Dense {
+                data: Vec::new(),
+                rows,
+                cols,
+            }));
+        }
+        let c_count = centroids(p, rows);
+        match h.mode {
+            SessionMode::Full => {
+                let mut pos = 0usize;
+                let books = parse_books(raw, &mut pos, c_count, cols);
+                let data = decode_rows_from(raw, &mut pos, rows, cols, p, &books, c_count)?;
+                ensure!(
+                    pos == raw.len(),
+                    "session full payload has {} trailing bytes",
+                    raw.len() - pos
+                );
+                self.state = Some(GenBooks {
+                    generation: h.generation,
+                    c_count,
+                    cols,
+                    precision: p,
+                    books,
+                });
+                Ok(SessionDecode::Data(Dense { data, rows, cols }))
+            }
+            SessionMode::Delta => {
+                let required = h.generation - 1; // staleness checked above
+                let s = self.state.as_ref().expect("staleness checked above");
+                ensure!(
+                    s.c_count == c_count && s.cols == cols && s.precision == p,
+                    "delta frame geometry ({c_count} centroids × {cols} cols, {}) does not \
+                     match the cached generation {required} codebook",
+                    p.name()
+                );
+                // patch a copy; commit only after the rows decode, so a
+                // crafted frame cannot leave a half-updated cache
+                let mut books = s.books.clone();
+                let mut pos = 0usize;
+                for book in books.iter_mut() {
+                    book.scale_bits = u16::from_le_bytes([raw[pos], raw[pos + 1]]);
+                    pos += 2;
+                }
+                for book in books.iter_mut() {
+                    for q in book.entries.iter_mut() {
+                        *q = (*q as u8).wrapping_add(raw[pos]) as i8;
+                        pos += 1;
+                    }
+                    book.redequantize();
+                }
+                let data = decode_rows_from(raw, &mut pos, rows, cols, p, &books, c_count)?;
+                ensure!(
+                    pos == raw.len(),
+                    "session delta payload has {} trailing bytes",
+                    raw.len() - pos
+                );
+                self.state = Some(GenBooks {
+                    generation: h.generation,
+                    c_count,
+                    cols,
+                    precision: p,
+                    books,
+                });
+                Ok(SessionDecode::Data(Dense { data, rows, cols }))
+            }
+            SessionMode::Reuse => {
+                let s = self.state.as_ref().expect("staleness checked above");
+                ensure!(
+                    s.c_count == c_count && s.cols == cols && s.precision == p,
+                    "reuse frame geometry ({c_count} centroids × {cols} cols, {}) does not \
+                     match the cached generation {} codebook",
+                    p.name(),
+                    h.generation
+                );
+                let mut pos = 0usize;
+                let data = decode_rows_from(raw, &mut pos, rows, cols, p, &s.books, c_count)?;
+                ensure!(
+                    pos == raw.len(),
+                    "session reuse payload has {} trailing bytes",
+                    raw.len() - pos
+                );
+                Ok(SessionDecode::Data(Dense { data, rows, cols }))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::wire::make_codec;
+
+    fn gaussian(rows: usize, cols: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::seed_from_u64(seed);
+        (0..rows * cols).map(|_| rng.normal() as f32 * 0.1).collect()
+    }
+
+    fn drifted(base: &[f32], step: f32, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::seed_from_u64(seed);
+        base.iter().map(|&v| v + rng.normal() as f32 * step).collect()
+    }
+
+    fn decode(state: &mut VqClientState, frame: &[u8]) -> Dense {
+        state.decode_dense(frame).unwrap().into_data().unwrap()
+    }
+
+    #[test]
+    fn reuse_mode_registry() {
+        for m in [ReuseMode::Off, ReuseMode::Delta, ReuseMode::Auto] {
+            assert_eq!(ReuseMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(ReuseMode::parse("always").is_err());
+        assert_eq!(ReuseMode::default(), ReuseMode::Off);
+        assert!(!ReuseMode::Off.is_active());
+        assert!(ReuseMode::Delta.is_active() && ReuseMode::Auto.is_active());
+    }
+
+    #[test]
+    fn session_rejects_scalar_precisions_and_off() {
+        assert!(VqSession::new(Precision::Int8, EntropyMode::None, ReuseMode::Auto).is_err());
+        assert!(VqSession::new(Precision::Vq8, EntropyMode::None, ReuseMode::Off).is_err());
+        assert!(VqSession::new(Precision::Vq8, EntropyMode::None, ReuseMode::Auto).is_ok());
+    }
+
+    #[test]
+    fn first_frame_is_full_and_stable_rounds_reuse() {
+        let (rows, cols) = (64usize, 25usize);
+        let q1 = gaussian(rows, cols, 2021);
+        let q2 = drifted(&q1, 0.002, 7);
+        let mut sess = VqSession::new(Precision::Vq8, EntropyMode::None, ReuseMode::Auto).unwrap();
+        let f1 = sess.encode_dense(&q1, rows, cols).unwrap();
+        assert_eq!(f1.mode, SessionMode::Full);
+        assert_eq!(f1.generation, 1);
+        assert_eq!(
+            f1.frame.len(),
+            session_frame_len(SessionMode::Full, Precision::Vq8, rows, cols)
+        );
+        let f2 = sess.encode_dense(&q2, rows, cols).unwrap();
+        assert_eq!(f2.mode, SessionMode::Reuse, "stable Q must reuse");
+        assert_eq!(f2.generation, 1);
+        assert!(f2.frame.len() < f1.frame.len());
+        assert_eq!(
+            f2.frame.len(),
+            session_frame_len(SessionMode::Reuse, Precision::Vq8, rows, cols)
+        );
+        // a client that saw both frames decodes both
+        let mut client = VqClientState::new();
+        let d1 = decode(&mut client, &f1.frame);
+        assert_eq!((d1.rows, d1.cols), (rows, cols));
+        assert_eq!(client.generation(), Some(1));
+        let d2 = decode(&mut client, &f2.frame);
+        assert_eq!(d2.data.len(), rows * cols);
+        assert_eq!(client.generation(), Some(1));
+    }
+
+    #[test]
+    fn delta_frames_decode_bit_identically_to_full_reencode() {
+        let (rows, cols) = (48usize, 25usize);
+        let q1 = gaussian(rows, cols, 5);
+        let q2 = gaussian(rows, cols, 6); // unrelated: worst case for deltas
+        for p in [Precision::Vq8, Precision::Vq4, Precision::Vq8r] {
+            let mut sess = VqSession::new(p, EntropyMode::None, ReuseMode::Delta).unwrap();
+            let f1 = sess.encode_dense(&q1, rows, cols).unwrap();
+            let f2 = sess.encode_dense(&q2, rows, cols).unwrap();
+            assert_eq!(f1.mode, SessionMode::Full);
+            assert_eq!(f2.mode, SessionMode::Delta, "{}", p.name());
+            assert_eq!(f2.generation, 2);
+            let mut client = VqClientState::new();
+            decode(&mut client, &f1.frame);
+            let via_delta = decode(&mut client, &f2.frame);
+            assert_eq!(client.generation(), Some(2));
+            // the stateless codec on the same data: identical codebook
+            // (post-requant) -> identical reconstruction
+            let stateless = make_codec(p);
+            let plain = stateless
+                .decode_dense(&stateless.encode_dense(&q2, rows, cols).unwrap())
+                .unwrap();
+            for (a, b) in via_delta.data.iter().zip(&plain.data) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{}", p.name());
+            }
+        }
+    }
+
+    #[test]
+    fn stale_client_resyncs_and_rejoins_bit_identically() {
+        let (rows, cols) = (64usize, 25usize);
+        let q1 = gaussian(rows, cols, 11);
+        // round 2 moves to unrelated factors, so the generation
+        // advances while the lapsed client is away...
+        let q2 = gaussian(rows, cols, 12);
+        // ... and rounds 3/4 are stable again, so they reuse it
+        let q3 = drifted(&q2, 0.002, 13);
+        let q4 = drifted(&q3, 0.002, 14);
+        let mut sess = VqSession::new(Precision::Vq8, EntropyMode::Full, ReuseMode::Auto).unwrap();
+        let mut on = VqClientState::new();
+        let mut lapsed = VqClientState::new();
+
+        let f1 = sess.encode_dense(&q1, rows, cols).unwrap();
+        decode(&mut on, &f1.frame);
+        decode(&mut lapsed, &f1.frame);
+
+        // lapsed misses round 2 entirely
+        let f2 = sess.encode_dense(&q2, rows, cols).unwrap();
+        let d2 = decode(&mut on, &f2.frame);
+
+        let f3 = sess.encode_dense(&q3, rows, cols).unwrap();
+        let d3 = decode(&mut on, &f3.frame);
+        assert_ne!(f3.mode, SessionMode::Full, "stable Q should not re-ship");
+        // ... so the lapsed client must hit the stale signal, untouched
+        let before = lapsed.generation();
+        match lapsed.decode_dense(&f3.frame).unwrap() {
+            SessionDecode::Stale { cached, required } => {
+                assert_eq!(cached, before);
+                assert_ne!(Some(required), before);
+            }
+            SessionDecode::Data(_) => panic!("lapsed client decoded a frame it cannot hold"),
+        }
+        assert_eq!(lapsed.generation(), before, "stale decode mutated the cache");
+
+        // resync: full frame for the current round, bit-identical data
+        let resync = sess.resync_frame().unwrap();
+        let dr = decode(&mut lapsed, &resync);
+        assert_eq!(lapsed.generation(), on.generation());
+        for (a, b) in dr.data.iter().zip(&d3.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let _ = d2;
+
+        // ... and from here the lapsed client tracks bit-identically
+        let f4 = sess.encode_dense(&q4, rows, cols).unwrap();
+        let a = decode(&mut on, &f4.frame);
+        let b = decode(&mut lapsed, &f4.frame);
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn in_sync_predicate_matches_decoder() {
+        let (rows, cols) = (32usize, 25usize);
+        let q1 = gaussian(rows, cols, 3);
+        let q2 = drifted(&q1, 0.002, 4);
+        let mut sess = VqSession::new(Precision::Vq8, EntropyMode::None, ReuseMode::Auto).unwrap();
+        let f1 = sess.encode_dense(&q1, rows, cols).unwrap();
+        assert!(f1.in_sync(None) && f1.in_sync(Some(9)), "full syncs anyone");
+        let f2 = sess.encode_dense(&q2, rows, cols).unwrap();
+        assert_eq!(f2.mode, SessionMode::Reuse);
+        assert!(f2.in_sync(Some(f2.generation)));
+        assert!(!f2.in_sync(None));
+        assert!(!f2.in_sync(Some(f2.generation + 1)));
+    }
+
+    #[test]
+    fn geometry_change_forces_full() {
+        let cols = 25usize;
+        let q1 = gaussian(64, cols, 21);
+        let q2 = gaussian(32, cols, 22); // different row count -> new c_count
+        let mut sess = VqSession::new(Precision::Vq8, EntropyMode::None, ReuseMode::Auto).unwrap();
+        sess.encode_dense(&q1, 64, cols).unwrap();
+        let f2 = sess.encode_dense(&q2, 32, cols).unwrap();
+        assert_eq!(f2.mode, SessionMode::Full);
+        assert_eq!(f2.generation, 2);
+    }
+
+    #[test]
+    fn empty_frame_roundtrips_without_state() {
+        let mut sess = VqSession::new(Precision::Vq8, EntropyMode::Full, ReuseMode::Auto).unwrap();
+        let f = sess.encode_dense(&[], 0, 25).unwrap();
+        // decodable by anyone, but it ships no codebook — the metadata
+        // must say so, or the coordinator would mark recipients as
+        // holding a generation they never received
+        assert!(f.in_sync(None));
+        assert!(!f.installs_generation);
+        let mut client = VqClientState::new();
+        let d = decode(&mut client, &f.frame);
+        assert_eq!((d.rows, d.cols), (0, 25));
+        assert!(d.data.is_empty());
+        assert_eq!(client.generation(), None);
+        // non-empty frames do install their generation
+        let q = gaussian(8, 25, 40);
+        let f2 = sess.encode_dense(&q, 8, 25).unwrap();
+        assert!(f2.installs_generation);
+    }
+
+    #[test]
+    fn corrupt_session_frames_are_rejected_not_applied() {
+        let (rows, cols) = (40usize, 25usize);
+        let q1 = gaussian(rows, cols, 31);
+        let q2 = gaussian(rows, cols, 32);
+        let mut sess = VqSession::new(Precision::Vq8, EntropyMode::None, ReuseMode::Delta).unwrap();
+        let f1 = sess.encode_dense(&q1, rows, cols).unwrap();
+        let f2 = sess.encode_dense(&q2, rows, cols).unwrap();
+        let mut client = VqClientState::new();
+        decode(&mut client, &f1.frame);
+        // flipped delta-plane byte: checksum rejects, cache untouched
+        let mut bad = f2.frame.clone();
+        bad[frame::SESSION_HEADER_LEN + 12] ^= 0x20;
+        assert!(client.decode_dense(&bad).is_err());
+        assert_eq!(client.generation(), Some(1));
+        // truncation inside the delta plane
+        assert!(client.decode_dense(&f2.frame[..f2.frame.len() - 3]).is_err());
+        assert_eq!(client.generation(), Some(1));
+        // the intact frame still applies afterwards
+        decode(&mut client, &f2.frame);
+        assert_eq!(client.generation(), Some(2));
+    }
+
+    #[test]
+    fn resync_before_encode_errors() {
+        let sess = VqSession::new(Precision::Vq8, EntropyMode::None, ReuseMode::Auto).unwrap();
+        assert!(sess.resync_frame().is_err());
+    }
+}

@@ -207,6 +207,40 @@ fn train_with_vq_codec_and_auto_topk() {
 }
 
 #[test]
+fn train_with_codebook_reuse_flag() {
+    let (ok, text) = run(&[
+        "train",
+        "--dataset",
+        "synthetic-small",
+        "--backend",
+        "reference",
+        "--codec",
+        "vq8",
+        "--entropy",
+        "full",
+        "--codebook-reuse",
+        "auto",
+        "--strategy",
+        "full",
+        "--iterations",
+        "4",
+        "--set",
+        "dataset.users=48",
+        "--set",
+        "dataset.items=96",
+        "--set",
+        "dataset.interactions=600",
+        "--set",
+        "train.theta=12",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("codebook_reuse=auto"), "{text}");
+    assert!(text.contains("codebook session:"), "{text}");
+    let (ok, _) = run(&["train", "--codebook-reuse", "always"]);
+    assert!(!ok, "bad codebook-reuse mode must fail");
+}
+
+#[test]
 fn info_reports_auto_topk() {
     let (ok, text) = run(&["info", "--sparse-topk", "auto", "--codec", "vq4"]);
     assert!(ok, "{text}");

@@ -60,30 +60,37 @@ fn fig3_produces_all_three_curves() {
 }
 
 #[test]
-fn codec_sweep_covers_every_precision_and_entropy_mode() {
+fn codec_sweep_covers_every_precision_entropy_and_reuse_mode() {
     let dir = out_dir("codec");
     experiments::codec_sweep(&dir, "movielens", &Scale::smoke(), backend()).unwrap();
     let text = std::fs::read_to_string(dir.join("codec_movielens.csv")).unwrap();
     let lines: Vec<&str> = text.lines().collect();
-    assert_eq!(
-        lines.len(),
-        1 + experiments::PRECISIONS.len() * experiments::ENTROPY_MODES.len()
-    );
+    let expected_rows: usize = experiments::PRECISIONS
+        .iter()
+        .map(|p| experiments::ENTROPY_MODES.len() * experiments::reuse_modes_for(p).len())
+        .sum();
+    assert_eq!(lines.len(), 1 + expected_rows);
     let mut plain_down = Vec::new();
-    for (i, prec) in experiments::PRECISIONS.iter().enumerate() {
+    let mut row = 1usize;
+    for prec in experiments::PRECISIONS {
         let mut per_mode = Vec::new();
-        for (j, mode) in experiments::ENTROPY_MODES.iter().enumerate() {
-            let fields: Vec<&str> =
-                lines[1 + i * experiments::ENTROPY_MODES.len() + j].split(',').collect();
-            assert_eq!(fields[1], *prec, "row order");
-            assert_eq!(fields[2], *mode, "entropy column");
-            per_mode.push((
-                fields[5].to_string(),              // map
-                fields[7].parse::<u64>().unwrap(),  // down_bytes
-                fields[8].parse::<u64>().unwrap(),  // up_bytes
-            ));
+        for mode in experiments::ENTROPY_MODES {
+            for reuse in experiments::reuse_modes_for(prec) {
+                let fields: Vec<&str> = lines[row].split(',').collect();
+                row += 1;
+                assert_eq!(fields[1], *prec, "row order");
+                assert_eq!(fields[2], *mode, "entropy column");
+                assert_eq!(fields[3], *reuse, "reuse column");
+                if *reuse == "off" {
+                    per_mode.push((
+                        fields[6].to_string(),              // map
+                        fields[8].parse::<u64>().unwrap(),  // down_bytes
+                        fields[9].parse::<u64>().unwrap(),  // up_bytes
+                    ));
+                }
+            }
         }
-        // the entropy layer is lossless: metrics identical across modes
+        // the entropy layer is lossless at reuse=off: metrics identical
         assert_eq!(per_mode[0].0, per_mode[1].0, "{prec}: entropy changed metrics");
         // ... while the measured bytes never grow (uploads strictly
         // shrink: varint indices alone guarantee it)

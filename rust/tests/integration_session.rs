@@ -1,0 +1,177 @@
+//! Cross-round codebook-session e2e: the stateful wire feature must
+//! never change *training*, only *bytes*. Three nets:
+//!
+//! 1. churn — a client that misses rounds (cache invalidated) hits the
+//!    typed stale-generation signal, resyncs via a full-codebook frame,
+//!    and the fleet's trajectory is **bit-identical** to an
+//!    all-clients-present run, with the resync bytes attributed to the
+//!    lagging client in the ledger;
+//! 2. thread invariance — `codebook_reuse = auto|delta` trains
+//!    bit-identically at threads 1 and 4 (the session lives on the
+//!    coordinator lane, so the fleet merge contract is untouched);
+//! 3. payload — on the stable-Q workload the session moves strictly
+//!    fewer download bytes than the stateless per-frame-codebook path.
+
+use fedpayload::config::{RunConfig, Strategy};
+use fedpayload::server::Trainer;
+use fedpayload::wire::{EntropyMode, Precision, ReuseMode};
+
+/// Stable-Q session workload: Strategy::Full selects the same rows
+/// every round and Q drifts only by Adam steps, so `auto` exercises
+/// the reuse path; theta == users keeps every client in every round
+/// (churn is then injected explicitly, not by sampling).
+fn session_cfg() -> RunConfig {
+    let mut cfg = RunConfig::paper_defaults();
+    cfg.apply_dataset_preset("synthetic-small").unwrap();
+    cfg.dataset.users = 48;
+    cfg.dataset.items = 96;
+    cfg.dataset.interactions = 1800;
+    cfg.train.theta = 48;
+    cfg.train.iterations = 8;
+    cfg.train.payload_fraction = 1.0;
+    cfg.bandit.strategy = Strategy::Full;
+    cfg.runtime.backend = "reference".into();
+    cfg.codec.precision = Precision::Vq8;
+    cfg.codec.entropy = EntropyMode::Full;
+    cfg.codec.codebook_reuse = ReuseMode::Auto;
+    cfg
+}
+
+/// The churn e2e: run two identical fleets, invalidating one client's
+/// codebook cache before every round 3..=6 in run B (the client "missed"
+/// whatever shipped its generation). Training must be bit-identical;
+/// only run B's download ledger grows, by exactly the resync deltas.
+#[test]
+fn churned_client_resyncs_without_changing_the_trajectory() {
+    let cfg = session_cfg();
+    let victim = 7usize;
+    let mut a = Trainer::from_config(&cfg).unwrap();
+    let mut b = Trainer::from_config(&cfg).unwrap();
+    for round in 1..=cfg.train.iterations {
+        if (3..=6).contains(&round) {
+            b.invalidate_client_codebook(victim);
+        }
+        let ra = a.round().unwrap();
+        let rb = b.round().unwrap();
+        // bit-identical training at every round, churn or not
+        assert_eq!(
+            ra.raw.map.to_bits(),
+            rb.raw.map.to_bits(),
+            "round {round}: churn changed training"
+        );
+        assert_eq!(ra.smoothed.f1.to_bits(), rb.smoothed.f1.to_bits());
+        assert_eq!(ra.m_s, rb.m_s);
+        // churn can only add download bytes (the resync frame), never
+        // remove or reshape traffic
+        assert!(rb.round_bytes >= ra.round_bytes, "round {round}");
+    }
+    // the session itself is client-independent: same frame modes, same
+    // final generation on both coordinators
+    let (sa, sb) = (a.session_stats(), b.session_stats());
+    assert_eq!(a.session_generation(), b.session_generation());
+    assert_eq!(sa.reuse_frames, sb.reuse_frames);
+    assert_eq!(sa.delta_frames, sb.delta_frames);
+    assert_eq!(sa.full_frames, sb.full_frames);
+    assert!(
+        sa.reuse_frames >= 1,
+        "stable-Q workload never reused — the churn test is not exercising the session: {sa:?}"
+    );
+    // run A: everyone participates every round, nobody ever goes stale
+    assert_eq!(sa.resync_msgs, 0, "{sa:?}");
+    assert_eq!(sa.resync_extra_bytes, 0);
+    // run B: the invalidated client was served at least one resync (the
+    // coordinator state trajectories are identical, so any reuse/delta
+    // round among 3..=6 forces one), and the ledger attributes exactly
+    // the measured resync-minus-broadcast delta — no more, no less
+    assert!(sb.resync_msgs >= 1, "invalidation never forced a resync: {sb:?}");
+    let (la, lb) = (a.ledger().clone(), b.ledger().clone());
+    assert_eq!(la.down_msgs, lb.down_msgs, "churn must not change message counts");
+    assert_eq!(la.up_msgs, lb.up_msgs);
+    assert_eq!(la.up_bytes, lb.up_bytes, "uploads are outside the session");
+    assert_eq!(
+        lb.down_bytes as i64 - la.down_bytes as i64,
+        sb.resync_extra_bytes,
+        "ledger does not attribute the resync bytes: A {} B {} stats {sb:?}",
+        la.down_bytes,
+        lb.down_bytes
+    );
+    assert!(
+        lb.down_bytes > la.down_bytes,
+        "resync frames must cost measurable extra download bytes"
+    );
+}
+
+/// Natural churn: with theta < users, participants rotate, so clients
+/// routinely return after the generation moved on. The run must simply
+/// work — resyncs happen, training stays deterministic.
+#[test]
+fn rotating_participation_resyncs_deterministically() {
+    let mut cfg = session_cfg();
+    cfg.train.theta = 16; // 16 of 48 clients per round
+    let r1 = Trainer::from_config(&cfg).unwrap().run().unwrap();
+    let r2 = Trainer::from_config(&cfg).unwrap().run().unwrap();
+    assert_eq!(r1.final_metrics.map.to_bits(), r2.final_metrics.map.to_bits());
+    assert_eq!(r1.ledger.down_bytes, r2.ledger.down_bytes);
+    let stats = r1.session.unwrap();
+    assert_eq!(
+        stats.reuse_frames + stats.delta_frames + stats.full_frames,
+        cfg.train.iterations as u64
+    );
+    // ledger consistency: extra bytes only ever come from resyncs
+    assert_eq!(r1.session.unwrap(), r2.session.unwrap());
+}
+
+/// The session state machine lives on the coordinator lane only:
+/// threads must stay bit-invariant under auto and delta alike.
+#[test]
+fn session_runs_are_thread_count_invariant() {
+    for reuse in [ReuseMode::Auto, ReuseMode::Delta] {
+        let workload = |threads: usize| {
+            let mut cfg = session_cfg();
+            cfg.dataset.users = 160;
+            cfg.dataset.interactions = 5000;
+            cfg.train.theta = 128; // 2 batches per round: lanes race
+            cfg.train.iterations = 6;
+            cfg.codec.codebook_reuse = reuse;
+            cfg.runtime.threads = threads;
+            Trainer::from_config(&cfg).unwrap().run().unwrap()
+        };
+        let t1 = workload(1);
+        let t4 = workload(4);
+        assert_eq!(
+            t1.final_metrics.map.to_bits(),
+            t4.final_metrics.map.to_bits(),
+            "threads=4 diverged under codebook_reuse={}",
+            reuse.name()
+        );
+        assert_eq!(t1.ledger.down_bytes, t4.ledger.down_bytes);
+        assert_eq!(t1.ledger.up_bytes, t4.ledger.up_bytes);
+        assert_eq!(t1.ledger.sim_secs.to_bits(), t4.ledger.sim_secs.to_bits());
+        assert_eq!(t1.session.unwrap(), t4.session.unwrap());
+    }
+}
+
+/// The acceptance comparison, e2e: at matched stable-Q settings the
+/// auto session moves strictly fewer download bytes than PR 4's
+/// stateless per-frame-codebook vq8 — and stays lossless upstream
+/// (identical message counts, uploads untouched in shape).
+#[test]
+fn auto_session_beats_stateless_vq8_downloads_on_stable_q() {
+    let auto_cfg = session_cfg();
+    let mut off_cfg = session_cfg();
+    off_cfg.codec.codebook_reuse = ReuseMode::Off;
+    let auto_r = Trainer::from_config(&auto_cfg).unwrap().run().unwrap();
+    let off_r = Trainer::from_config(&off_cfg).unwrap().run().unwrap();
+    assert_eq!(auto_r.codebook_reuse, "auto");
+    assert_eq!(off_r.codebook_reuse, "off");
+    assert_eq!(auto_r.ledger.down_msgs, off_r.ledger.down_msgs);
+    assert!(
+        auto_r.ledger.down_bytes < off_r.ledger.down_bytes,
+        "auto session {} !< stateless vq8 {} download bytes",
+        auto_r.ledger.down_bytes,
+        off_r.ledger.down_bytes
+    );
+    // ... while still learning in the vq ballpark: the reuse budget
+    // bounds the extra quantization error well below "derailed"
+    assert!(auto_r.final_metrics.map > 0.0, "auto session stopped learning");
+}

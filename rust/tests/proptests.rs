@@ -15,7 +15,8 @@ use fedpayload::rng::Rng;
 use fedpayload::runtime::{merge_outcomes, plan_chunks, BatchOutcome, RoundAggregate};
 use fedpayload::simnet::TrafficLedger;
 use fedpayload::wire::{
-    self, entropy, make_codec, make_codec_with, EntropyMode, Precision, SparsePolicy,
+    self, entropy, make_codec, make_codec_with, EntropyMode, Precision, ReuseMode,
+    SessionDecode, SessionMode, SparsePolicy, VqClientState, VqSession,
 };
 
 const CASES: u64 = 60;
@@ -594,6 +595,146 @@ fn prop_vq_truncated_codebook_detected() {
     .unwrap();
     let err = make_codec(Precision::Vq8).decode_dense(&frame).unwrap_err();
     assert!(err.to_string().contains("out of range"), "{err}");
+}
+
+/// Property: the session delta identity `apply(delta(a, b), a) == b`
+/// post-int8-requantization — decoding through a delta frame equals the
+/// stateless codec's decode of the same matrix bit for bit, for every
+/// vq precision and random (even unrelated) matrix pairs, with and
+/// without entropy coding.
+#[test]
+fn prop_session_delta_roundtrip_identity() {
+    for seed in 0..CASES / 2 {
+        let mut rng = Rng::seed_from_u64(50_000 + seed);
+        let rows = 2 + rng.below(50);
+        let cols = 1 + rng.below(30);
+        let m1 = random_matrix(&mut rng, rows, cols);
+        let m2 = random_matrix(&mut rng, rows, cols);
+        let p = [Precision::Vq8, Precision::Vq4, Precision::Vq8r][rng.below(3)];
+        let e = [EntropyMode::None, EntropyMode::Full][rng.below(2)];
+        let mut sess = VqSession::new(p, e, ReuseMode::Delta).unwrap();
+        let f1 = sess.encode_dense(&m1, rows, cols).unwrap();
+        let f2 = sess.encode_dense(&m2, rows, cols).unwrap();
+        assert_eq!(f2.mode, SessionMode::Delta, "seed {seed}");
+        let mut client = VqClientState::new();
+        client.decode_dense(&f1.frame).unwrap().into_data().unwrap();
+        let via_delta = client.decode_dense(&f2.frame).unwrap().into_data().unwrap();
+        let codec = make_codec(p);
+        let plain = codec.decode_dense(&codec.encode_dense(&m2, rows, cols).unwrap()).unwrap();
+        for (a, b) in via_delta.data.iter().zip(&plain.data) {
+            assert_eq!(a.to_bits(), b.to_bits(), "seed {seed} {} {}", p.name(), e.name());
+        }
+    }
+}
+
+/// Property: session mode choice (reuse/delta/full under `auto`) is a
+/// pure function of (payload, session state) — two identical sessions
+/// fed the same matrix sequence emit byte-identical frames with
+/// identical modes and generations.
+#[test]
+fn prop_session_mode_choice_is_deterministic() {
+    for seed in 0..CASES / 3 {
+        let mut rng = Rng::seed_from_u64(51_000 + seed);
+        let rows = 2 + rng.below(40);
+        let cols = 1 + rng.below(28);
+        let seq: Vec<Vec<f32>> = (0..3).map(|_| random_matrix(&mut rng, rows, cols)).collect();
+        let e = [EntropyMode::None, EntropyMode::Range][rng.below(2)];
+        let mut s1 = VqSession::new(Precision::Vq8, e, ReuseMode::Auto).unwrap();
+        let mut s2 = s1.clone();
+        for (i, m) in seq.iter().enumerate() {
+            let a = s1.encode_dense(m, rows, cols).unwrap();
+            let b = s2.encode_dense(m, rows, cols).unwrap();
+            assert_eq!(a.frame, b.frame, "seed {seed} frame {i} not deterministic");
+            assert_eq!(a.mode, b.mode, "seed {seed}");
+            assert_eq!(a.generation, b.generation, "seed {seed}");
+        }
+    }
+}
+
+/// Property: malformed session frames are never decoded into garbage —
+/// a wrong-generation frame yields the typed `Stale` signal, flipped
+/// or truncated frames (header, delta plane, rows) are hard errors,
+/// and in every case the client cache is left exactly as it was.
+#[test]
+fn prop_session_bad_frames_are_errors_not_garbage() {
+    for seed in 0..CASES / 2 {
+        let mut rng = Rng::seed_from_u64(52_000 + seed);
+        let rows = 2 + rng.below(40);
+        let cols = 1 + rng.below(28);
+        let m1 = random_matrix(&mut rng, rows, cols);
+        let m2 = random_matrix(&mut rng, rows, cols);
+        let e = [EntropyMode::None, EntropyMode::Full][rng.below(2)];
+        let mut sess = VqSession::new(Precision::Vq8, e, ReuseMode::Delta).unwrap();
+        let f1 = sess.encode_dense(&m1, rows, cols).unwrap();
+        let f2 = sess.encode_dense(&m2, rows, cols).unwrap();
+        // wrong generation: a fresh client answering a delta frame gets
+        // the typed stale signal, not garbage, and stays untouched
+        let mut fresh = VqClientState::new();
+        match fresh.decode_dense(&f2.frame).unwrap() {
+            SessionDecode::Stale { cached, required } => {
+                assert_eq!(cached, None, "seed {seed}");
+                assert_eq!(required, 1, "seed {seed}");
+            }
+            SessionDecode::Data(_) => panic!("seed {seed}: stateless client decoded a delta"),
+        }
+        assert_eq!(fresh.generation(), None);
+        // flipped byte anywhere (header, delta plane, rows): hard error
+        let mut synced = VqClientState::new();
+        synced.decode_dense(&f1.frame).unwrap().into_data().unwrap();
+        let mut bad = f2.frame.clone();
+        let i = rng.below(bad.len());
+        bad[i] ^= 1 << rng.below(8);
+        assert!(synced.decode_dense(&bad).is_err(), "seed {seed} flip at {i}");
+        assert_eq!(synced.generation(), Some(1), "seed {seed}: failed decode touched cache");
+        // truncation: hard error
+        let cut = rng.below(f2.frame.len());
+        assert!(synced.decode_dense(&f2.frame[..cut]).is_err(), "seed {seed} cut at {cut}");
+        assert_eq!(synced.generation(), Some(1));
+        // ... and the intact frame still applies afterwards
+        synced.decode_dense(&f2.frame).unwrap().into_data().unwrap();
+        assert_eq!(synced.generation(), Some(2), "seed {seed}");
+    }
+}
+
+/// Property: entropy coding is bit-transparent to session decodes per
+/// frame mode — delta-mode sequences (whose mode choice is
+/// entropy-independent) and the reuse path (identical data reuses
+/// under any entropy mode) decode to identical f32 bit patterns with
+/// entropy on and off.
+#[test]
+fn prop_session_entropy_is_bit_transparent_per_mode() {
+    for seed in 0..CASES / 3 {
+        let mut rng = Rng::seed_from_u64(53_000 + seed);
+        let rows = 8 + rng.below(40);
+        let cols = 1 + rng.below(28);
+        let m1 = random_matrix(&mut rng, rows, cols);
+        let m2 = random_matrix(&mut rng, rows, cols);
+        let p = [Precision::Vq8, Precision::Vq4, Precision::Vq8r][rng.below(3)];
+        let run = |entropy: EntropyMode, reuse: ReuseMode, second: &[f32]| {
+            let mut sess = VqSession::new(p, entropy, reuse).unwrap();
+            let mut client = VqClientState::new();
+            let f1 = sess.encode_dense(&m1, rows, cols).unwrap();
+            client.decode_dense(&f1.frame).unwrap().into_data().unwrap();
+            let f2 = sess.encode_dense(second, rows, cols).unwrap();
+            let d = client.decode_dense(&f2.frame).unwrap().into_data().unwrap();
+            (f2.mode, d.data)
+        };
+        // delta mode on unrelated data
+        let (ma, da) = run(EntropyMode::None, ReuseMode::Delta, &m2);
+        let (mb, db) = run(EntropyMode::Full, ReuseMode::Delta, &m2);
+        assert_eq!(ma, mb, "seed {seed}");
+        for (a, b) in da.iter().zip(&db) {
+            assert_eq!(a.to_bits(), b.to_bits(), "seed {seed} delta {}", p.name());
+        }
+        // auto on identical data: reuse wins under any entropy mode
+        let (ma, da) = run(EntropyMode::None, ReuseMode::Auto, &m1);
+        let (mb, db) = run(EntropyMode::Full, ReuseMode::Auto, &m1);
+        assert_eq!(ma, SessionMode::Reuse, "seed {seed} {}", p.name());
+        assert_eq!(mb, SessionMode::Reuse, "seed {seed} {}", p.name());
+        for (a, b) in da.iter().zip(&db) {
+            assert_eq!(a.to_bits(), b.to_bits(), "seed {seed} reuse {}", p.name());
+        }
+    }
 }
 
 /// Property: entropy-coded frame corruption (single flipped byte) is
