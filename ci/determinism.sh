@@ -18,7 +18,12 @@
 #      reconstructs the fresh codebook exactly), `codebook_reuse=auto`
 #      is threads-1/4 bit-identical like everything else, and on the
 #      stable-Q strategy-full workload auto moves strictly fewer
-#      download bytes than the per-frame-codebook baseline.
+#      download bytes than the per-frame-codebook baseline,
+#   6. the flight recorder: a full-level `--trace-out` decision trace
+#      digests (`fedpayload trace-digest`: the trailing `"t":{...}`
+#      wall-clock objects stripped) byte-identically at threads 1 and
+#      4, and the `--metrics-out` Prometheus snapshot — decision-side
+#      counters only — is byte-identical across thread counts outright.
 #
 # Usage:  ci/determinism.sh [workdir]
 #   BIN=path/to/fedpayload overrides the binary (default:
@@ -104,6 +109,42 @@ AUTO_DOWN=$(down_bytes rounds_vq8_auto_t1.csv)
 SF_OFF_DOWN=$(down_bytes rounds_vq8_sf_off.csv)
 echo "   down_bytes: vq8+full strategy-full off=$SF_OFF_DOWN auto=$AUTO_DOWN"
 test "$AUTO_DOWN" -lt "$SF_OFF_DOWN"
+echo "   ok"
+
+echo "== 6: flight-recorder trace digests and metrics snapshots =="
+# the stable-Q session codec config exercises every event type:
+# bandit_select, codec_choice, resyncs (rotating participation at
+# theta < users means returning clients hit stale generations), lane
+# spans at full level, reward updates, round roll-ups
+"$BIN" "${ARGS[@]}" --codec vq8 --entropy full --codebook-reuse auto \
+       --strategy full --threads 1 --trace-out trace_t1.jsonl \
+       --trace-level full --metrics-out metrics_t1.prom >/dev/null
+"$BIN" "${ARGS[@]}" --codec vq8 --entropy full --codebook-reuse auto \
+       --strategy full --threads 4 --trace-out trace_t4.jsonl \
+       --trace-level full --metrics-out metrics_t4.prom >/dev/null
+echo "  ran: trace_t1.jsonl trace_t4.jsonl"
+# raw traces carry wall-clock timing objects (they are the point)...
+grep -q ',"t":{' trace_t1.jsonl
+grep -q ',"t":{' trace_t4.jsonl
+# ... the digests strip them and nothing else
+"$BIN" trace-digest trace_t1.jsonl > digest_t1.txt
+"$BIN" trace-digest trace_t4.jsonl > digest_t4.txt
+if grep -q ',"t":{' digest_t1.txt; then
+  echo "timing object leaked into the digest"; exit 1
+fi
+test "$(wc -l < trace_t1.jsonl)" -eq "$(wc -l < digest_t1.txt)"
+# the decision trace is thread-count invariant
+diff digest_t1.txt digest_t4.txt
+# every event layer made it into the trace
+for ev in run_start bandit_select codec_choice resync lane_span \
+          reward_update round_end run_end; do
+  grep -q "^{\"ev\":\"$ev\"" digest_t1.txt || { echo "missing event: $ev"; exit 1; }
+done
+# metrics snapshots hold decision-side series only: byte-identical
+# across thread counts, no digesting needed
+diff metrics_t1.prom metrics_t4.prom
+grep -q '^# TYPE fedpayload_rounds_total counter' metrics_t1.prom
+grep -q '^fedpayload_rounds_total 8$' metrics_t1.prom
 echo "   ok"
 
 echo "determinism: all checks passed"

@@ -15,7 +15,7 @@
 
 use crate::rng::Rng;
 
-use super::{top_m, ItemSelector};
+use super::{top_m, ArmStats, ItemSelector};
 
 /// Reward-model precision τ (paper fixes variance = 1).
 const TAU: f64 = 1.0;
@@ -96,6 +96,15 @@ impl ItemSelector for BtsSelector {
 
     fn name(&self) -> &'static str {
         "bts"
+    }
+
+    fn arm_stats(&self, item: u32) -> Option<ArmStats> {
+        let (mu, tau) = self.posterior(item as usize);
+        Some(ArmStats {
+            mu,
+            sigma: (1.0 / tau).sqrt(),
+            pulls: self.pulls(item as usize),
+        })
     }
 }
 

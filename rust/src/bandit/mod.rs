@@ -22,6 +22,23 @@ mod ucb;
 use crate::config::{BanditConfig, Strategy};
 use crate::rng::Rng;
 
+/// Per-arm posterior/empirical summary, recorded by the flight
+/// recorder alongside each selection ([`ItemSelector::arm_stats`]).
+/// `mu` is the strategy's point estimate of the arm's reward (the BTS
+/// posterior mean μ̂, or a running empirical mean), `sigma` its
+/// uncertainty scale (BTS posterior std `sqrt(1/τ̂)`; the UCB1
+/// exploration bonus; zero where the strategy keeps none), and
+/// `pulls` the selection count n^j.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArmStats {
+    /// Point estimate of the arm's reward.
+    pub mu: f64,
+    /// Uncertainty scale attached to `mu` (0 when the strategy has none).
+    pub sigma: f64,
+    /// Times the arm was selected (n^j).
+    pub pulls: u64,
+}
+
 /// Server-side item selection strategy (one per training run).
 pub trait ItemSelector: Send {
     /// Pick `m_s` distinct item ids for this round's Q*.
@@ -34,6 +51,14 @@ pub trait ItemSelector: Send {
 
     /// Strategy name for logs/CSV.
     fn name(&self) -> &'static str;
+
+    /// Posterior/empirical summary of one arm for the flight recorder.
+    /// `None` (the default) for strategies that keep no per-arm state
+    /// (random, full); the trace then records the selection without a
+    /// posterior block.
+    fn arm_stats(&self, _item: u32) -> Option<ArmStats> {
+        None
+    }
 }
 
 /// Construct the selector for a strategy over an `m`-item catalog.
@@ -98,6 +123,34 @@ mod tests {
             assert_eq!(sorted.len(), expect, "{} returned duplicates", sel.name());
             sel.update(&[(0, 1.0), (3, -0.5)]);
         }
+    }
+
+    #[test]
+    fn arm_stats_cover_the_stateful_strategies() {
+        let cfg = RunConfig::paper_defaults().bandit;
+        for (s, has_stats) in [
+            (Strategy::Bts, true),
+            (Strategy::Ucb1, true),
+            (Strategy::EpsGreedy, true),
+            (Strategy::Random, false),
+            (Strategy::Full, false),
+        ] {
+            let mut sel = make_selector(s, 20, &cfg);
+            sel.update(&[(4, 2.0), (4, 4.0)]);
+            let stats = sel.arm_stats(4);
+            assert_eq!(stats.is_some(), has_stats, "{}", sel.name());
+            if let Some(st) = stats {
+                assert_eq!(st.pulls, 2, "{}", sel.name());
+                assert!(st.mu.is_finite() && st.sigma >= 0.0);
+            }
+        }
+        // BTS sigma is the posterior std and must shrink with pulls
+        let mut bts = BtsSelector::new(4, 0.0, 1.0);
+        let s0 = bts.arm_stats(0).unwrap();
+        bts.update(&[(0, 1.0), (0, 1.0), (0, 1.0)]);
+        let s3 = bts.arm_stats(0).unwrap();
+        assert!(s3.sigma < s0.sigma);
+        assert_eq!(s3.pulls, 3);
     }
 
     #[test]

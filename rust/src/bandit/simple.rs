@@ -3,7 +3,7 @@
 
 use crate::rng::Rng;
 
-use super::{top_m, ItemSelector};
+use super::{top_m, ArmStats, ItemSelector};
 
 /// FCF-Random: a uniformly random item subset each round (paper §6).
 #[derive(Debug, Clone)]
@@ -114,6 +114,17 @@ impl ItemSelector for EpsGreedySelector {
 
     fn name(&self) -> &'static str {
         "eps_greedy"
+    }
+
+    /// Running empirical mean; ε-greedy keeps no uncertainty estimate,
+    /// so `sigma` is 0.
+    fn arm_stats(&self, item: u32) -> Option<ArmStats> {
+        let i = item as usize;
+        Some(ArmStats {
+            mu: self.mean[i],
+            sigma: 0.0,
+            pulls: self.n[i],
+        })
     }
 }
 

@@ -6,7 +6,7 @@
 
 use crate::rng::Rng;
 
-use super::{top_m, ItemSelector};
+use super::{top_m, ArmStats, ItemSelector};
 
 /// UCB1 over items: index = mean + sqrt(2 ln t / n); unplayed items get
 /// +inf (forced exploration).
@@ -54,6 +54,24 @@ impl ItemSelector for Ucb1Selector {
 
     fn name(&self) -> &'static str {
         "ucb1"
+    }
+
+    /// `mu` is the running mean; `sigma` reports the UCB1 exploration
+    /// bonus `sqrt(2 ln t / n)` — the frequentist analogue of a
+    /// posterior width (infinite-index unplayed arms report sigma 0
+    /// with 0 pulls).
+    fn arm_stats(&self, item: u32) -> Option<ArmStats> {
+        let i = item as usize;
+        let sigma = if self.n[i] == 0 || self.t == 0 {
+            0.0
+        } else {
+            (2.0 * (self.t as f64).ln() / self.n[i] as f64).sqrt()
+        };
+        Some(ArmStats {
+            mu: self.mean[i],
+            sigma,
+            pulls: self.n[i],
+        })
     }
 }
 

@@ -48,6 +48,9 @@ const VALUE_KEYS: &[&str] = &[
     "codebook-reuse",
     "sparse-topk",
     "dump-rounds",
+    "trace-out",
+    "metrics-out",
+    "trace-level",
 ];
 
 impl Args {
@@ -150,6 +153,15 @@ mod tests {
         assert_eq!(a.opt("entropy"), Some("full"));
         let a = parse(&["train", "--codebook-reuse", "auto"]);
         assert_eq!(a.opt("codebook-reuse"), Some("auto"));
+    }
+
+    #[test]
+    fn trace_options_take_values() {
+        let a = parse(&["train", "--trace-out", "t.jsonl", "--metrics-out=m.prom"]);
+        assert_eq!(a.opt("trace-out"), Some("t.jsonl"));
+        assert_eq!(a.opt("metrics-out"), Some("m.prom"));
+        let a = parse(&["train", "--trace-level", "full"]);
+        assert_eq!(a.opt("trace-level"), Some("full"));
     }
 
     #[test]

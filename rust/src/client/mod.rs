@@ -160,6 +160,13 @@ impl Fleet {
         self.download_gen[id] = Some(gen);
     }
 
+    /// How many clients currently hold a cached download codebook of any
+    /// generation — the fleet-wide sync level the flight recorder gauges
+    /// each round (`session_synced_clients`).
+    pub fn synced_clients(&self) -> usize {
+        self.download_gen.iter().filter(|g| g.is_some()).count()
+    }
+
     /// Drop a client's cached download codebook — the churn hook: the
     /// device evicted its cache (reinstall, storage pressure) or missed
     /// the rounds that shipped the generation it would need. Its next
@@ -234,6 +241,9 @@ mod tests {
         f.invalidate_download_cache(0);
         assert_eq!(f.download_gen(0), None, "invalidate must clear the tag");
         assert_eq!(f.download_gen(1), Some(3), "other clients untouched");
+        assert_eq!(f.synced_clients(), 1);
+        f.set_download_gen(2, 4);
+        assert_eq!(f.synced_clients(), 2);
     }
 
     #[test]

@@ -235,6 +235,23 @@ pub struct RuntimeConfig {
     pub threads: usize,
 }
 
+/// Flight-recorder knobs (`telemetry::trace`): where structured round
+/// events and metrics snapshots go, and how much detail to record.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// JSONL trace destination (`--trace-out`); `None` disables the
+    /// recorder entirely — the hot path then pays one relaxed atomic
+    /// load per would-be event.
+    pub out: Option<String>,
+    /// Prometheus-text metrics snapshot destination (`--metrics-out`),
+    /// rewritten after every round. Snapshots contain decision-side
+    /// values only, so they are thread-count invariant.
+    pub metrics_out: Option<String>,
+    /// Recording depth: `off | decision | full`. `decision` captures
+    /// the per-round decision events; `full` adds per-batch lane spans.
+    pub level: crate::telemetry::TraceLevel,
+}
+
 /// Complete run configuration.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -254,6 +271,8 @@ pub struct RunConfig {
     pub simnet: SimNetConfig,
     /// Execution backend knobs.
     pub runtime: RuntimeConfig,
+    /// Flight-recorder knobs.
+    pub trace: TraceConfig,
 }
 
 impl RunConfig {
@@ -322,6 +341,11 @@ impl RunConfig {
                 artifacts_dir: "artifacts".into(),
                 backend: "pjrt".into(),
                 threads: 4,
+            },
+            trace: TraceConfig {
+                out: None,
+                metrics_out: None,
+                level: crate::telemetry::TraceLevel::Decision,
             },
         }
     }
@@ -475,6 +499,17 @@ impl RunConfig {
             cfg.runtime.backend = v.as_str()?.to_string();
         }
         take!("runtime.threads", cfg.runtime.threads, as_usize);
+        if let Some(v) = doc.get("trace.out") {
+            cfg.trace.out = Some(v.as_str()?.to_string());
+        }
+        if let Some(v) = doc.get("trace.metrics_out") {
+            cfg.trace.metrics_out = Some(v.as_str()?.to_string());
+        }
+        if let Some(v) = doc.get("trace.level") {
+            let s = v.as_str()?;
+            cfg.trace.level = crate::telemetry::parse_trace_level(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown trace.level `{s}` (off|decision|full)"))?;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -706,6 +741,21 @@ mod tests {
                 RunConfig::from_toml_str(&format!("[codec]\nentropy = \"{mode}\"\n")).unwrap();
             assert_eq!(cfg.codec.entropy.name(), mode);
         }
+    }
+
+    #[test]
+    fn trace_section_parses() {
+        let c = RunConfig::paper_defaults();
+        assert!(c.trace.out.is_none() && c.trace.metrics_out.is_none());
+        assert_eq!(c.trace.level, crate::telemetry::TraceLevel::Decision);
+        let cfg = RunConfig::from_toml_str(
+            "[trace]\nout = \"t.jsonl\"\nmetrics_out = \"m.prom\"\nlevel = \"full\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.trace.out.as_deref(), Some("t.jsonl"));
+        assert_eq!(cfg.trace.metrics_out.as_deref(), Some("m.prom"));
+        assert_eq!(cfg.trace.level, crate::telemetry::TraceLevel::Full);
+        assert!(RunConfig::from_toml_str("[trace]\nlevel = \"verbose\"\n").is_err());
     }
 
     #[test]

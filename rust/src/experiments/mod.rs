@@ -423,6 +423,10 @@ pub fn codec_sweep(out_dir: &Path, dataset: &str, scale: &Scale, backend: &str) 
         "down_bytes",
         "up_bytes",
         "bytes_per_round",
+        "reuse_frames",
+        "delta_frames",
+        "full_frames",
+        "resyncs",
     ];
     let mut csv = CsvWriter::create(out_dir.join(format!("codec_{dataset}.csv")), &header)?;
     let mut cfg = experiment_config(dataset, scale, backend, 2021)?;
@@ -471,6 +475,11 @@ pub fn codec_sweep(out_dir: &Path, dataset: &str, scale: &Scale, backend: &str) 
                     report.ledger.down_bytes.to_string(),
                     report.ledger.up_bytes.to_string(),
                     per_round.to_string(),
+                    // session frame-mode counters (zero for stateless rows)
+                    report.session.map_or(0, |s| s.reuse_frames).to_string(),
+                    report.session.map_or(0, |s| s.delta_frames).to_string(),
+                    report.session.map_or(0, |s| s.full_frames).to_string(),
+                    report.session.map_or(0, |s| s.resync_msgs).to_string(),
                 ])?;
             }
         }
@@ -519,6 +528,10 @@ pub fn threads_sweep(out_dir: &Path, scale: &Scale, backend: &str) -> Result<()>
         "speedup_vs_1t",
         "map_bits",
         "total_bytes",
+        "solve_secs",
+        "grad_secs",
+        "codec_secs",
+        "fleet_secs",
     ];
     let mut csv = CsvWriter::create(out_dir.join("threads.csv"), &header)?;
     let mut cfg = parallel_workload_cfg(backend);
@@ -567,14 +580,27 @@ pub fn threads_sweep(out_dir: &Path, scale: &Scale, backend: &str) -> Result<()>
             "  threads={threads}: {:.2}s wall ({rps:.1} rounds/s, {speedup:.2}x vs 1t), map={:.4}",
             report.wall_secs, report.final_metrics.map
         );
+        // per-phase breakdown: solve/grad/codec absorb worker-lane busy
+        // time (can exceed wall), fleet is the parallel section's wall
+        let phase = |name: &str| -> String {
+            report
+                .phase_times
+                .iter()
+                .find(|(n, _, _)| n == name)
+                .map_or_else(String::new, |(_, secs, _)| format!("{secs:.4}"))
+        };
         csv.row(&[
             threads.to_string(),
             report.iterations.to_string(),
             format!("{:.4}", report.wall_secs),
             format!("{rps:.2}"),
             format!("{speedup:.3}"),
-            format!("{:016x}", report.final_metrics.map.to_bits()),
+            crate::telemetry::trace::f64_bits(report.final_metrics.map),
             report.ledger.total_bytes().to_string(),
+            phase("solve"),
+            phase("grad"),
+            phase("codec"),
+            phase("fleet"),
         ])?;
     }
     csv.flush()

@@ -7,6 +7,8 @@
 //!                   (`all` | `table1` | `table2` | `fig2` | `fig3` | `table4`
 //!                   | `codecs` — the wire-codec payload sweep | `threads` —
 //!                   the parallel-fleet scaling sweep).
+//! * `trace-digest` — strip the timing objects from a `--trace-out` file,
+//!                   leaving the thread-count-invariant decision trace.
 //! * `info`        — print artifact manifest + config resolution.
 //!
 //! Common options: `--config <file.toml>`, repeated `--set path=value`
@@ -39,9 +41,12 @@ USAGE:
                    [--threads N] [--backend pjrt|reference]
                    [--config file.toml] [--set path=value ...]
                    [--dump-rounds file.csv]
+                   [--trace-out trace.jsonl] [--metrics-out metrics.prom]
+                   [--trace-level off|decision|full]
   fedpayload experiments <all|table1|table2|fig2|fig3|table4|codecs|threads>
                    [--out-dir results] [--scale paper|reduced|smoke]
                    [--backend pjrt|reference]
+  fedpayload trace-digest <trace.jsonl>
   fedpayload info  [--config file.toml]
   fedpayload help
 
@@ -65,7 +70,15 @@ USAGE:
    --threads N runs each round's client batches on N parallel lanes —
    bit-identical results for any N; ci/determinism.sh diffs
    --dump-rounds records to enforce it, including int8+full, vq8+full,
-   and codebook-session legs.)
+   and codebook-session legs. --trace-out records the flight recorder's
+   structured round events — bandit arm posteriors, codec/session
+   choices with their measured-bytes rationale, per-client resyncs,
+   ledger deltas — as one JSON object per line; wall-clock timings ride
+   in each event's trailing `\"t\"` object, which `fedpayload
+   trace-digest` strips so decision traces diff byte-identical across
+   --threads values. --metrics-out rewrites a Prometheus-text snapshot
+   of the decision-side counters/gauges/histograms after every round.
+   --trace-level full adds per-batch fleet lane spans.)
 ";
 
 fn main() -> ExitCode {
@@ -84,12 +97,16 @@ fn run(argv: Vec<String>) -> Result<()> {
     if let Some(level) = args.opt("log-level") {
         match telemetry::parse_level(level) {
             Some(l) => telemetry::set_log_level(l),
-            None => bail!("bad --log-level `{level}`"),
+            None => bail!(
+                "bad --log-level `{level}` (expected one of: {})",
+                telemetry::LEVEL_NAMES
+            ),
         }
     }
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
         Some("experiments") => cmd_experiments(&args),
+        Some("trace-digest") => cmd_trace_digest(&args),
         Some("info") => cmd_info(&args),
         Some("help") | None => {
             print!("{USAGE}");
@@ -161,6 +178,16 @@ fn resolve_config(args: &Args) -> Result<RunConfig> {
         }
         None => {}
     }
+    if let Some(p) = args.opt("trace-out") {
+        cfg.trace.out = Some(p.to_string());
+    }
+    if let Some(p) = args.opt("metrics-out") {
+        cfg.trace.metrics_out = Some(p.to_string());
+    }
+    if let Some(l) = args.opt("trace-level") {
+        cfg.trace.level = telemetry::parse_trace_level(l)
+            .ok_or_else(|| anyhow::anyhow!("bad --trace-level `{l}` (off|decision|full)"))?;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -217,6 +244,27 @@ fn cmd_train(args: &Args) -> Result<()> {
         write_round_dump(path, &report)?;
         println!("round records dumped to {path}");
     }
+    if let Some(path) = &cfg.trace.out {
+        println!("flight recorder: {} events traced to {path}", report.trace_events);
+    }
+    if let Some(path) = &cfg.trace.metrics_out {
+        println!("metrics snapshot written to {path}");
+    }
+    Ok(())
+}
+
+/// Print the decision digest of a trace file: every event line with its
+/// trailing timing object stripped. The digest of a `--threads 1` run is
+/// byte-identical to a `--threads N` run of the same config — the
+/// determinism CI leg diffs exactly this output.
+fn cmd_trace_digest(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("trace-digest expects a trace.jsonl path\n{USAGE}"))?;
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading trace {path}"))?;
+    print!("{}", fedpayload::telemetry::trace::trace_digest(&text));
     Ok(())
 }
 

@@ -201,6 +201,26 @@ pub struct BatchOutcome {
     pub metrics: MetricAccumulator,
     /// Busy nanoseconds per phase: solve, grad, codec, eval.
     pub phase_ns: [u128; 4],
+    /// Compute lane that executed the batch (0 = the caller's thread,
+    /// `w + 1` = fleet worker `w`). Pure observability: which lane ran a
+    /// batch is racy by design, so this field must never feed the merge —
+    /// the flight recorder quarantines it in timing-only trace fields.
+    pub lane: usize,
+}
+
+/// Per-batch execution record carried out of the batch-order barrier for
+/// the flight recorder: batch index, client count, the (racy) lane that
+/// ran it, and its busy nanoseconds per phase.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BatchStat {
+    /// Batch index within the round.
+    pub batch: usize,
+    /// Participants in this batch.
+    pub clients: usize,
+    /// Lane that executed it (0 = caller, `w + 1` = worker `w`).
+    pub lane: usize,
+    /// Busy nanoseconds per phase: solve, grad, codec, eval.
+    pub phase_ns: [u128; 4],
 }
 
 /// The deterministic reduction of a round: per-batch outcomes folded in
@@ -218,6 +238,10 @@ pub struct RoundAggregate {
     /// Busy nanoseconds per phase summed over batches (across lanes, so
     /// this can exceed wall-clock): solve, grad, codec, eval.
     pub phase_ns: [u128; 4],
+    /// Per-batch execution records in batch-index order (the lane and
+    /// timings inside are wall-clock facts, not decisions — the tracer
+    /// emits them as timing-only fields the trace digest strips).
+    pub batches: Vec<BatchStat>,
 }
 
 /// Fold per-batch outcomes into the round aggregate **in batch-index
@@ -269,6 +293,12 @@ pub fn merge_outcomes(
         for (total, ns) in agg.phase_ns.iter_mut().zip(&o.phase_ns) {
             *total += ns;
         }
+        agg.batches.push(BatchStat {
+            batch: i,
+            clients: hi - lo,
+            lane: o.lane,
+            phase_ns: o.phase_ns,
+        });
     }
     Ok(agg)
 }
@@ -345,6 +375,7 @@ fn run_batch(
         ledger,
         metrics,
         phase_ns: [solve_ns, grad_ns, codec_ns, eval_ns],
+        lane: 0, // stamped by the draining lane
     })
 }
 
@@ -365,8 +396,11 @@ fn lock_slots(state: &RoundState) -> std::sync::MutexGuard<'_, Vec<Option<Result
     state.slots.lock().unwrap_or_else(|p| p.into_inner())
 }
 
-/// Claim-and-execute batches until the round's queue is empty.
-fn drain_queue(state: &RoundState, rt: &mut FcfRuntime, codec: &dyn PayloadCodec) {
+/// Claim-and-execute batches until the round's queue is empty. `lane`
+/// identifies the draining thread for the flight recorder (0 = caller,
+/// `w + 1` = worker `w`); it is stamped on each outcome but never read
+/// by the deterministic merge.
+fn drain_queue(state: &RoundState, rt: &mut FcfRuntime, codec: &dyn PayloadCodec, lane: usize) {
     loop {
         // Relaxed is enough: the counter only distributes work; outcome
         // visibility is ordered by the slots mutex + the done channel.
@@ -374,7 +408,10 @@ fn drain_queue(state: &RoundState, rt: &mut FcfRuntime, codec: &dyn PayloadCodec
         if i >= state.n_batches {
             break;
         }
-        let out = run_batch(rt, codec, &state.task, i);
+        let mut out = run_batch(rt, codec, &state.task, i);
+        if let Ok(o) = out.as_mut() {
+            o.lane = lane;
+        }
         lock_slots(state)[i] = Some(out);
     }
 }
@@ -434,7 +471,7 @@ fn worker_loop(id: usize, factory: BackendFactory, rx: Receiver<WorkerMsg>, done
                 }
                 if let Some(rt) = runtime.as_mut() {
                     let codec = make_codec_with(state.task.precision, state.task.entropy);
-                    drain_queue(&state, rt, codec.as_ref());
+                    drain_queue(&state, rt, codec.as_ref(), id + 1);
                 }
             }
         }
@@ -584,7 +621,7 @@ impl FleetExecutor {
         });
         let expected = self.dispatch(&state);
         // The caller lane drains the queue alongside the workers.
-        drain_queue(&state, local, codec);
+        drain_queue(&state, local, codec, 0);
         self.wait(expected);
         let mut slots = std::mem::take(&mut *lock_slots(&state));
         // A lane that died mid-batch leaves its claimed slot empty;
@@ -772,6 +809,12 @@ mod tests {
         let ids: Vec<usize> = agg.factors.iter().map(|(c, _)| *c).collect();
         assert_eq!(ids, client_ids);
         assert_eq!(agg.factors[4].1, vec![0.9, 1.0]);
+        // per-batch stats come out in batch-index order with exact sizes
+        assert_eq!(agg.batches.len(), 3);
+        let order: Vec<usize> = agg.batches.iter().map(|b| b.batch).collect();
+        assert_eq!(order, vec![0, 1, 2]);
+        let sizes: Vec<usize> = agg.batches.iter().map(|b| b.clients).collect();
+        assert_eq!(sizes, vec![2, 2, 1]);
         // wrong outcome count is rejected
         assert!(merge_outcomes(m_s, k, &client_ids, batch, &outcomes[..2]).is_err());
     }

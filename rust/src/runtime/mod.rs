@@ -33,7 +33,8 @@ pub mod pjrt;
 pub mod reference;
 
 pub use fleet::{
-    merge_outcomes, BackendFactory, BatchOutcome, FleetExecutor, RoundAggregate, RoundTask,
+    merge_outcomes, BackendFactory, BatchOutcome, BatchStat, FleetExecutor, RoundAggregate,
+    RoundTask,
 };
 pub use manifest::Manifest;
 

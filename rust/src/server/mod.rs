@@ -42,7 +42,10 @@ use crate::rng::Rng;
 use crate::runtime::fleet::{BackendFactory, FleetExecutor, RoundTask};
 use crate::runtime::{make_backend, FcfRuntime, SelRow};
 use crate::simnet::TrafficLedger;
-use crate::telemetry::Stopwatch;
+use crate::telemetry::export::write_metrics_snapshot;
+use crate::telemetry::registry::{BYTE_BUCKETS, REWARD_BUCKETS};
+use crate::telemetry::trace::f64_bits;
+use crate::telemetry::{Registry, Stopwatch, TraceEvent, TraceLevel, Tracer};
 use crate::wire::{
     make_codec_with, PayloadCodec, SessionMode, SparsePolicy, VqClientState, VqSession,
 };
@@ -115,6 +118,9 @@ pub struct TrainReport {
     pub m: usize,
     /// Items transmitted per round M_s.
     pub m_s: usize,
+    /// Structured events the flight recorder emitted (0 with tracing
+    /// off).
+    pub trace_events: u64,
 }
 
 impl TrainReport {
@@ -163,6 +169,15 @@ pub struct Trainer {
     metric_history: VecDeque<MetricSet>,
     ledger: TrafficLedger,
     history: Vec<RoundRecord>,
+    /// Flight recorder (`telemetry::trace`): `None` keeps every
+    /// emission site down to a single `Option` check per round phase.
+    tracer: Option<Tracer>,
+    /// Decision-side metrics registry feeding `--metrics-out`
+    /// snapshots; never holds wall-clock values, so snapshots are
+    /// thread-count invariant like the trace digest.
+    registry: Registry,
+    /// Prometheus snapshot destination, rewritten after every round.
+    metrics_out: Option<std::path::PathBuf>,
     // reused per-round scratch
     sel_pos: Vec<i32>,
     // phase stopwatches; solve/grad/eval/codec absorb the worker lanes'
@@ -274,6 +289,12 @@ impl Trainer {
             "global" => crate::reward::TimeBase::Global,
             _ => crate::reward::TimeBase::PerItem,
         };
+        let tracer = match (&cfg.trace.out, cfg.trace.level) {
+            (Some(path), level) if level != TraceLevel::Off => {
+                Some(Tracer::to_file(std::path::Path::new(path), level)?)
+            }
+            _ => None,
+        };
         Ok(Trainer {
             selector: make_selector(cfg.bandit.strategy, m, &cfg.bandit),
             reward: RewardEngine::new(m, cfg.model.k, cfg.bandit.gamma, cfg.model.beta2 as f64)
@@ -301,6 +322,9 @@ impl Trainer {
             metric_history: VecDeque::new(),
             ledger: TrafficLedger::new(),
             history: Vec::new(),
+            tracer,
+            registry: Registry::new(),
+            metrics_out: cfg.trace.metrics_out.as_ref().map(std::path::PathBuf::from),
             sw_select: Stopwatch::new("select"),
             sw_stage: Stopwatch::new("stage"),
             sw_solve: Stopwatch::new("solve"),
@@ -356,14 +380,84 @@ impl Trainer {
         self.fleet.invalidate_download_cache(client);
     }
 
+    /// Install (or replace) the flight recorder — tests and sweeps hook
+    /// an in-memory tracer here; `--trace-out` installs a file-backed
+    /// one at construction.
+    pub fn install_tracer(&mut self, tracer: Tracer) {
+        self.tracer = Some(tracer);
+    }
+
+    /// The flight recorder, if one is installed (in-memory tracers
+    /// expose their captured lines through this).
+    pub fn tracer(&self) -> Option<&Tracer> {
+        self.tracer.as_ref()
+    }
+
+    /// The decision-side metrics registry (populated while a tracer or
+    /// `--metrics-out` destination is active).
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Is recording at `level` active right now?
+    fn trace_on(&self, level: TraceLevel) -> bool {
+        self.tracer.as_ref().is_some_and(|t| t.enabled(level))
+    }
+
+    /// Emit one structured event (no-op without a tracer at `level`).
+    fn emit(&mut self, level: TraceLevel, event: TraceEvent) {
+        if let Some(t) = self.tracer.as_mut() {
+            t.emit(level, event);
+        }
+    }
+
+    /// Is the metrics registry being maintained this run? True whenever
+    /// either observability output is on — the registry costs a few
+    /// BTreeMap updates per round, so it rides along with tracing too.
+    fn registry_on(&self) -> bool {
+        self.metrics_out.is_some() || self.tracer.is_some()
+    }
+
     /// Run the configured number of FL iterations and report.
     pub fn run(&mut self) -> Result<TrainReport> {
         let t0 = std::time::Instant::now();
         let iterations = self.cfg.train.iterations;
+        if self.trace_on(TraceLevel::Decision) {
+            let ev = TraceEvent::new("run_start")
+                .str("strategy", self.selector.name())
+                .str("codec", self.codec.name())
+                .str("entropy", self.codec.entropy().name())
+                .str(
+                    "codebook_reuse",
+                    self.vq_session.as_ref().map_or("off", |s| s.mode().name()),
+                )
+                .u64("iterations", iterations as u64)
+                .u64("theta", self.cfg.train.theta as u64)
+                .u64("m", self.split.train.num_items() as u64)
+                .u64("seed", self.cfg.seed)
+                // thread count shapes nothing the decision trace records;
+                // it lives with the wall-clock facts so t1/tN digests match
+                .t_u64("threads", self.cfg.runtime.threads as u64);
+            self.emit(TraceLevel::Decision, ev);
+        }
         for _ in 0..iterations {
             self.round()?;
         }
         let wall = t0.elapsed().as_secs_f64();
+        if self.trace_on(TraceLevel::Decision) {
+            let ev = TraceEvent::new("run_end")
+                .u64("iterations", self.t)
+                .u64("down_bytes", self.ledger.down_bytes)
+                .u64("up_bytes", self.ledger.up_bytes)
+                .u64("down_msgs", self.ledger.down_msgs)
+                .u64("up_msgs", self.ledger.up_msgs)
+                .bits("map_bits", self.smoothed_metrics().map)
+                .t_f64("wall_secs", wall);
+            self.emit(TraceLevel::Decision, ev);
+        }
+        if let Some(t) = self.tracer.as_mut() {
+            t.flush().context("flushing trace output")?;
+        }
         let m = self.split.train.num_items();
         Ok(TrainReport {
             strategy: self.selector.name(),
@@ -392,6 +486,7 @@ impl Trainer {
             iterations,
             m,
             m_s: self.cfg.selected_items(m),
+            trace_events: self.tracer.as_ref().map_or(0, |t| t.events()),
         })
     }
 
@@ -420,6 +515,36 @@ impl Trainer {
         let mut selected = self.selector.select(m_s, &mut self.rng);
         selected.sort_unstable();
         self.sw_select.stop();
+        if self.trace_on(TraceLevel::Decision) {
+            let mut ev = TraceEvent::new("bandit_select")
+                .u64("iter", self.t)
+                .str("strategy", self.selector.name())
+                .u64("m_s", selected.len() as u64);
+            // posterior summary over the arms actually selected — the
+            // decision evidence the system computed but never recorded
+            let mut n = 0u64;
+            let (mut mu_min, mut mu_max) = (f64::INFINITY, f64::NEG_INFINITY);
+            let (mut mu_sum, mut sigma_sum, mut pulls) = (0.0f64, 0.0f64, 0u64);
+            for &item in &selected {
+                if let Some(st) = self.selector.arm_stats(item) {
+                    n += 1;
+                    mu_min = mu_min.min(st.mu);
+                    mu_max = mu_max.max(st.mu);
+                    mu_sum += st.mu;
+                    sigma_sum += st.sigma;
+                    pulls += st.pulls;
+                }
+            }
+            if n > 0 {
+                ev = ev
+                    .f64("mu_min", mu_min)
+                    .f64("mu_mean", mu_sum / n as f64)
+                    .f64("mu_max", mu_max)
+                    .f64("sigma_mean", sigma_sum / n as f64)
+                    .u64("pulls_total", pulls);
+            }
+            self.emit(TraceLevel::Decision, ev);
+        }
 
         // (2) assemble Q* (item-major m_s × k) + position lookup.
         self.sw_stage.start();
@@ -474,6 +599,32 @@ impl Trainer {
             }
         };
         self.sw_codec.stop();
+        if self.trace_on(TraceLevel::Decision) {
+            let mut ev = TraceEvent::new("codec_choice")
+                .u64("iter", self.t)
+                .str("codec", self.codec.name())
+                .str("entropy", self.codec.entropy().name())
+                .u64("frame_bytes", down_bytes);
+            match &session_frame {
+                Some(enc) => {
+                    // the mode actually shipped plus the measured-bytes /
+                    // SSE-budget evidence the session weighed to pick it
+                    ev = ev
+                        .str("kind", "session")
+                        .str("mode", enc.mode.name())
+                        .u64("generation", enc.generation as u64)
+                        .bool("installs", enc.installs_generation)
+                        .opt_u64("full_bytes", enc.rationale.full_bytes)
+                        .opt_u64("delta_bytes", enc.rationale.delta_bytes)
+                        .opt_u64("reuse_bytes", enc.rationale.reuse_bytes)
+                        .f64("sse_fresh", enc.rationale.sse_fresh)
+                        .opt_f64("sse_reuse", enc.rationale.sse_reuse)
+                        .opt_bool("reuse_within_budget", enc.rationale.reuse_within_budget);
+                }
+                None => ev = ev.str("kind", "stateless"),
+            }
+            self.emit(TraceLevel::Decision, ev);
+        }
 
         // (3) participants + download accounting. Under a codebook
         // session, a participant whose cached generation cannot decode
@@ -482,6 +633,9 @@ impl Trainer {
         // below), so churn shows up only in the ledger, never in the
         // training trajectory.
         let ledger_bytes_before = self.ledger.total_bytes();
+        let down_before = self.ledger.down_bytes;
+        let up_before = self.ledger.up_bytes;
+        let stats_before = self.session_stats;
         let participants = self
             .fleet
             .sample_participants(self.cfg.train.theta, &mut self.rng);
@@ -494,7 +648,8 @@ impl Trainer {
                 }
                 let mut resync_len: Option<u64> = None;
                 for &cid in &participants {
-                    let bytes = if enc.in_sync(self.fleet.download_gen(cid)) {
+                    let cached = self.fleet.download_gen(cid);
+                    let bytes = if enc.in_sync(cached) {
                         down_bytes
                     } else {
                         let len = match resync_len {
@@ -528,6 +683,16 @@ impl Trainer {
                         };
                         self.session_stats.resync_msgs += 1;
                         self.session_stats.resync_extra_bytes += len as i64 - down_bytes as i64;
+                        if self.trace_on(TraceLevel::Decision) {
+                            let ev = TraceEvent::new("resync")
+                                .u64("iter", self.t)
+                                .u64("client", cid as u64)
+                                .opt_u64("cached", cached.map(u64::from))
+                                .u64("generation", enc.generation as u64)
+                                .u64("frame_bytes", len)
+                                .i64("extra_bytes", len as i64 - down_bytes as i64);
+                            self.emit(TraceLevel::Decision, ev);
+                        }
                         len
                     };
                     self.ledger.record_down(&self.cfg.simnet, bytes);
@@ -595,6 +760,24 @@ impl Trainer {
         self.sw_grad.absorb_ns(agg.phase_ns[1], n_batches);
         self.sw_codec.absorb_ns(agg.phase_ns[2], n_batches);
         self.sw_eval.absorb_ns(agg.phase_ns[3], if evaluate { n_batches } else { 0 });
+        // per-lane spans, absorbed at the batch-order barrier: batch
+        // index and client count are decisions (identical at any thread
+        // count); the lane that ran the batch and its busy nanoseconds
+        // are wall-clock facts and ride in the timing-only object
+        if self.trace_on(TraceLevel::Full) {
+            for bs in &agg.batches {
+                let ev = TraceEvent::new("lane_span")
+                    .u64("iter", self.t)
+                    .u64("batch", bs.batch as u64)
+                    .u64("clients", bs.clients as u64)
+                    .t_u64("lane", bs.lane as u64)
+                    .t_u128("solve_ns", bs.phase_ns[0])
+                    .t_u128("grad_ns", bs.phase_ns[1])
+                    .t_u128("codec_ns", bs.phase_ns[2])
+                    .t_u128("eval_ns", bs.phase_ns[3]);
+                self.emit(TraceLevel::Full, ev);
+            }
+        }
         // barrier merge: upload ledger (per-client frames), local factors
         self.ledger.merge(&agg.ledger);
         for (cid, p) in agg.factors {
@@ -641,6 +824,32 @@ impl Trainer {
         }
         self.selector.update(&rewards);
         self.sw_reward.stop();
+        if self.trace_on(TraceLevel::Decision) {
+            let n = rewards.len();
+            let mut ev = TraceEvent::new("reward_update")
+                .u64("iter", self.t)
+                .u64("n", n as u64)
+                .bool("standardized", self.cfg.bandit.normalize_rewards);
+            if n > 0 {
+                let (mut lo, mut hi, mut sum) = (f64::INFINITY, f64::NEG_INFINITY, 0.0f64);
+                for &(_, r) in &rewards {
+                    lo = lo.min(r);
+                    hi = hi.max(r);
+                    sum += r;
+                }
+                ev = ev
+                    .f64("r_min", lo)
+                    .f64("r_mean", sum / n as f64)
+                    .f64("r_max", hi);
+            }
+            self.emit(TraceLevel::Decision, ev);
+        }
+        if self.registry_on() {
+            for &(_, r) in &rewards {
+                self.registry
+                    .observe("fedpayload_reward_abs", REWARD_BUCKETS, r.abs());
+            }
+        }
 
         // global metric window (§6.2)
         let raw = round_acc.mean();
@@ -664,6 +873,59 @@ impl Trainer {
             record.raw,
             record.smoothed
         );
+        if self.trace_on(TraceLevel::Decision) {
+            let ev = TraceEvent::new("round_end")
+                .u64("iter", self.t)
+                .u64("m_s", record.m_s as u64)
+                .u64("round_bytes", record.round_bytes)
+                .u64("down_bytes", self.ledger.down_bytes - down_before)
+                .u64("up_bytes", self.ledger.up_bytes - up_before)
+                .bool("evaluated", evaluate)
+                .u64("eval_clients", round_acc.count() as u64)
+                .bits("raw_map_bits", record.raw.map)
+                .bits("smoothed_map_bits", record.smoothed.map)
+                .t_u128("solve_ns", agg.phase_ns[0])
+                .t_u128("grad_ns", agg.phase_ns[1])
+                .t_u128("codec_ns", agg.phase_ns[2])
+                .t_u128("eval_ns", agg.phase_ns[3]);
+            self.emit(TraceLevel::Decision, ev);
+        }
+        if self.registry_on() {
+            self.registry.inc("fedpayload_rounds_total", 1);
+            self.registry
+                .inc("fedpayload_down_bytes_total", self.ledger.down_bytes - down_before);
+            self.registry
+                .inc("fedpayload_up_bytes_total", self.ledger.up_bytes - up_before);
+            self.registry
+                .observe("fedpayload_down_frame_bytes", BYTE_BUCKETS, down_bytes as f64);
+            self.registry.set_gauge("fedpayload_smoothed_map", record.smoothed.map);
+            if let Some(enc) = &session_frame {
+                let key = format!(
+                    "fedpayload_session_frames_total{{mode=\"{}\"}}",
+                    enc.mode.name()
+                );
+                self.registry.inc(&key, 1);
+                self.registry
+                    .inc(
+                        "fedpayload_session_resyncs_total",
+                        self.session_stats.resync_msgs - stats_before.resync_msgs,
+                    );
+                self.registry.set_gauge(
+                    "fedpayload_session_resync_extra_bytes",
+                    self.session_stats.resync_extra_bytes as f64,
+                );
+                self.registry
+                    .set_gauge("fedpayload_session_generation", f64::from(enc.generation));
+                self.registry.set_gauge(
+                    "fedpayload_session_synced_clients",
+                    self.fleet.synced_clients() as f64,
+                );
+            }
+            if let Some(path) = self.metrics_out.clone() {
+                write_metrics_snapshot(&path, &self.registry, self.t as usize)
+                    .context("writing metrics snapshot")?;
+            }
+        }
         self.history.push(record.clone());
         Ok(record)
     }
@@ -683,27 +945,27 @@ pub fn round_dump_string(report: &TrainReport) -> String {
     );
     for r in &report.history {
         text.push_str(&format!(
-            "{},{},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x},{:016x},{}\n",
+            "{},{},{},{},{},{},{},{},{},{},{}\n",
             r.iter,
             r.m_s,
-            r.raw.precision.to_bits(),
-            r.raw.recall.to_bits(),
-            r.raw.f1.to_bits(),
-            r.raw.map.to_bits(),
-            r.smoothed.precision.to_bits(),
-            r.smoothed.recall.to_bits(),
-            r.smoothed.f1.to_bits(),
-            r.smoothed.map.to_bits(),
+            f64_bits(r.raw.precision),
+            f64_bits(r.raw.recall),
+            f64_bits(r.raw.f1),
+            f64_bits(r.raw.map),
+            f64_bits(r.smoothed.precision),
+            f64_bits(r.smoothed.recall),
+            f64_bits(r.smoothed.f1),
+            f64_bits(r.smoothed.map),
             r.round_bytes,
         ));
     }
     text.push_str(&format!(
-        "totals,down_bytes={},up_bytes={},down_msgs={},up_msgs={},sim_secs_bits={:016x}\n",
+        "totals,down_bytes={},up_bytes={},down_msgs={},up_msgs={},sim_secs_bits={}\n",
         report.ledger.down_bytes,
         report.ledger.up_bytes,
         report.ledger.down_msgs,
         report.ledger.up_msgs,
-        report.ledger.sim_secs.to_bits(),
+        f64_bits(report.ledger.sim_secs),
     ));
     text
 }
@@ -937,6 +1199,87 @@ mod tests {
             "sim_secs_bits={:016x}",
             r1.ledger.sim_secs.to_bits()
         )));
+    }
+
+    #[test]
+    fn flight_recorder_digest_is_thread_count_invariant() {
+        let run_digest = |threads: usize| {
+            let mut cfg = tiny_cfg();
+            cfg.runtime.threads = threads;
+            let mut tr = Trainer::from_config(&cfg).unwrap();
+            tr.install_tracer(Tracer::in_memory(TraceLevel::Full));
+            tr.run().unwrap();
+            let text = tr.tracer().unwrap().lines().join("\n");
+            crate::telemetry::trace::trace_digest(&text)
+        };
+        let d1 = run_digest(1);
+        let d4 = run_digest(4);
+        assert_eq!(d1, d4, "decision digests must not depend on threads");
+        for ev in ["run_start", "bandit_select", "codec_choice", "reward_update", "round_end", "run_end"]
+        {
+            assert!(d1.contains(&format!("\"ev\":\"{ev}\"")), "missing {ev}");
+        }
+        assert!(
+            !d1.contains(",\"t\":{"),
+            "digest must strip every timing object"
+        );
+    }
+
+    #[test]
+    fn flight_recorder_lines_are_structured_and_counted() {
+        let cfg = tiny_cfg();
+        let mut tr = Trainer::from_config(&cfg).unwrap();
+        tr.install_tracer(Tracer::in_memory(TraceLevel::Decision));
+        let report = tr.run().unwrap();
+        let tracer = tr.tracer().unwrap();
+        assert_eq!(report.trace_events, tracer.events());
+        let lines = tracer.lines();
+        assert!(!lines.is_empty());
+        // 4 rounds × (bandit_select + codec_choice + reward_update +
+        // round_end) + run_start + run_end
+        assert_eq!(lines.len(), 4 * 4 + 2);
+        for line in lines {
+            assert!(line.starts_with("{\"ev\":\""), "{line}");
+            assert!(line.ends_with('}'), "{line}");
+        }
+        // wall-clock facts ride in the raw lines' timing objects...
+        assert!(lines.iter().any(|l| l.contains(",\"t\":{")));
+        // ...and the round_end events carry the exact-bits metric fields
+        assert!(lines.iter().any(|l| l.contains("\"smoothed_map_bits\":\"")));
+    }
+
+    #[test]
+    fn registry_collects_decision_side_metrics() {
+        let cfg = tiny_cfg();
+        let mut tr = Trainer::from_config(&cfg).unwrap();
+        tr.install_tracer(Tracer::in_memory(TraceLevel::Decision));
+        tr.run().unwrap();
+        let reg = tr.registry();
+        assert_eq!(reg.counter("fedpayload_rounds_total"), 4);
+        assert_eq!(
+            reg.counter("fedpayload_down_bytes_total"),
+            tr.ledger().down_bytes
+        );
+        assert_eq!(
+            reg.counter("fedpayload_up_bytes_total"),
+            tr.ledger().up_bytes
+        );
+        let h = reg.histogram("fedpayload_down_frame_bytes").unwrap();
+        assert_eq!(h.count(), 4, "one download frame observed per round");
+        assert!(reg.gauge("fedpayload_smoothed_map").is_some());
+        // rewards flow into the log-bucket histogram every round
+        let r = reg.histogram("fedpayload_reward_abs").unwrap();
+        assert_eq!(r.count(), 4 * 24, "m_s rewards per round");
+    }
+
+    #[test]
+    fn tracing_off_records_nothing() {
+        let cfg = tiny_cfg();
+        let mut tr = Trainer::from_config(&cfg).unwrap();
+        let report = tr.run().unwrap();
+        assert_eq!(report.trace_events, 0);
+        assert!(tr.tracer().is_none());
+        assert!(tr.registry().is_empty());
     }
 
     #[test]

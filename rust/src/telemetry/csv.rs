@@ -21,7 +21,8 @@ impl CsvWriter {
             }
         }
         let mut out = BufWriter::new(File::create(path)?);
-        writeln!(out, "{}", header.join(","))?;
+        let quoted: Vec<String> = header.iter().map(|h| quote_field(h)).collect();
+        writeln!(out, "{}", quoted.join(","))?;
         Ok(CsvWriter {
             out,
             columns: header.len(),
@@ -29,6 +30,8 @@ impl CsvWriter {
     }
 
     /// Write one row of stringified fields (must match header arity).
+    /// Fields containing commas, quotes or line breaks are RFC-4180
+    /// quoted; everything else is written verbatim.
     pub fn row(&mut self, fields: &[String]) -> Result<()> {
         anyhow::ensure!(
             fields.len() == self.columns,
@@ -36,7 +39,8 @@ impl CsvWriter {
             fields.len(),
             self.columns
         );
-        writeln!(self.out, "{}", fields.join(","))?;
+        let quoted: Vec<String> = fields.iter().map(|f| quote_field(f)).collect();
+        writeln!(self.out, "{}", quoted.join(","))?;
         Ok(())
     }
 
@@ -52,6 +56,18 @@ pub fn f(v: f64, prec: usize) -> String {
     format!("{v:.prec$}")
 }
 
+/// RFC-4180 quoting: a field containing a comma, double quote, CR or
+/// LF is wrapped in double quotes with embedded quotes doubled; clean
+/// fields pass through untouched (so the numeric outputs every
+/// existing consumer parses stay byte-identical).
+fn quote_field(field: &str) -> String {
+    if field.contains(&[',', '"', '\n', '\r'][..]) {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -65,6 +81,22 @@ mod tests {
         w.flush().unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text, "a,b\n1,2\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rfc4180_quotes_special_fields() {
+        let dir = std::env::temp_dir().join("fedpayload_csv_test_quoting");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["name", "note"]).unwrap();
+        w.row(&["plain".into(), "a,b".into()]).unwrap();
+        w.row(&["say \"hi\"".into(), "line1\nline2".into()]).unwrap();
+        w.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(
+            text,
+            "name,note\nplain,\"a,b\"\n\"say \"\"hi\"\"\",\"line1\nline2\"\n"
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 

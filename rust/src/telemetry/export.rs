@@ -1,0 +1,133 @@
+//! Prometheus text exposition for the [`Registry`] and the
+//! `--metrics-out` snapshot writer.
+//!
+//! The output is the plain text format every Prometheus scraper and
+//! `promtool` accept: `# TYPE` lines per family, samples sorted by
+//! name (the registry's `BTreeMap` order), histogram `_bucket` series
+//! cumulative with a final `le="+Inf"`. Snapshots are rewritten whole
+//! (truncate + write) each round — node-exporter textfile-collector
+//! style — so the file is always one complete, parseable scrape.
+
+use std::path::Path;
+
+use super::registry::Registry;
+use crate::Result;
+
+/// Render a float the way Prometheus text format expects (shortest
+/// round-trip decimal; non-finite values have spelled-out names).
+fn prom_f64(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Family name of a sample key: everything before the label block.
+fn family(name: &str) -> &str {
+    name.split('{').next().unwrap_or(name)
+}
+
+/// Render the whole registry as Prometheus text. Deterministic for a
+/// deterministic registry: sorted sample order, fixed bucket bounds,
+/// shortest-roundtrip floats.
+pub fn render_prometheus(reg: &Registry) -> String {
+    let mut out = String::with_capacity(1024);
+    let mut last_family = String::new();
+    let mut type_line = |out: &mut String, name: &str, kind: &str| {
+        let fam = family(name);
+        if fam != last_family {
+            out.push_str("# TYPE ");
+            out.push_str(fam);
+            out.push(' ');
+            out.push_str(kind);
+            out.push('\n');
+            last_family = fam.to_string();
+        }
+    };
+    for (name, v) in &reg.counters {
+        type_line(&mut out, name, "counter");
+        out.push_str(&format!("{name} {v}\n"));
+    }
+    for (name, v) in &reg.gauges {
+        type_line(&mut out, name, "gauge");
+        out.push_str(&format!("{name} {}\n", prom_f64(*v)));
+    }
+    for (name, h) in &reg.histograms {
+        type_line(&mut out, name, "histogram");
+        let mut cum = 0u64;
+        for (i, c) in h.counts.iter().enumerate() {
+            cum += c;
+            let le = match h.bounds.get(i) {
+                Some(b) => prom_f64(*b),
+                None => "+Inf".to_string(),
+            };
+            out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cum}\n"));
+        }
+        out.push_str(&format!("{name}_sum {}\n", prom_f64(h.sum)));
+        out.push_str(&format!("{name}_count {}\n", h.count));
+    }
+    out
+}
+
+/// Write one `--metrics-out` snapshot: truncate `path` and emit the
+/// registry preceded by a round-stamp comment. Called once per round;
+/// the last write is the end-of-run state.
+pub fn write_metrics_snapshot(path: &Path, reg: &Registry, iter: usize) -> Result<()> {
+    let mut text = format!("# fedpayload metrics snapshot, round {iter}\n");
+    text.push_str(&render_prometheus(reg));
+    std::fs::write(path, text)
+        .map_err(|e| anyhow::anyhow!("cannot write metrics snapshot {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::registry::{Registry, BYTE_BUCKETS};
+    use super::*;
+
+    #[test]
+    fn renders_families_in_sorted_order_with_types() {
+        let mut r = Registry::new();
+        r.inc("fp_frames_total{mode=\"full\"}", 2);
+        r.inc("fp_frames_total{mode=\"reuse\"}", 1);
+        r.set_gauge("fp_generation", 3.0);
+        r.observe("fp_frame_bytes", BYTE_BUCKETS, 100.0);
+        r.observe("fp_frame_bytes", BYTE_BUCKETS, 5000.0);
+        let text = render_prometheus(&r);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "# TYPE fp_frames_total counter");
+        assert_eq!(lines[1], "fp_frames_total{mode=\"full\"} 2");
+        assert_eq!(lines[2], "fp_frames_total{mode=\"reuse\"} 1");
+        assert!(lines.contains(&"# TYPE fp_generation gauge"));
+        assert!(lines.contains(&"fp_generation 3"));
+        // buckets are cumulative and end at +Inf
+        assert!(text.contains("fp_frame_bytes_bucket{le=\"256\"} 1\n"));
+        assert!(text.contains("fp_frame_bytes_bucket{le=\"16384\"} 2\n"));
+        assert!(text.contains("fp_frame_bytes_bucket{le=\"+Inf\"} 2\n"));
+        assert!(text.contains("fp_frame_bytes_sum 5100\n"));
+        assert!(text.contains("fp_frame_bytes_count 2\n"));
+        // one TYPE line per family, no repeats for the second label
+        assert_eq!(
+            text.matches("# TYPE fp_frames_total").count(),
+            1,
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn snapshot_is_deterministic_for_equal_registries() {
+        let fill = |r: &mut Registry| {
+            r.inc("a_total", 7);
+            r.set_gauge("g", 0.125);
+            r.observe("h", BYTE_BUCKETS, 300.0);
+        };
+        let (mut r1, mut r2) = (Registry::new(), Registry::new());
+        fill(&mut r1);
+        fill(&mut r2);
+        assert_eq!(render_prometheus(&r1), render_prometheus(&r2));
+    }
+}

@@ -3,9 +3,14 @@
 
 mod bench;
 mod csv;
+pub mod export;
+pub mod registry;
+pub mod trace;
 
 pub use bench::{bench, BenchResult, Bencher};
 pub use csv::CsvWriter;
+pub use registry::Registry;
+pub use trace::{parse_trace_level, trace_enabled, TraceEvent, TraceLevel, Tracer};
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::time::Instant;
@@ -30,9 +35,11 @@ pub fn set_log_level(level: Level) {
     LOG_LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
-/// Parse `debug|info|warn|error`.
+/// Parse `debug|info|warn|error`, case-insensitively (`INFO` and
+/// `Info` are as valid as `info` — CLI input shouldn't be shouting-
+/// sensitive). See [`LEVEL_NAMES`] for the accepted set.
 pub fn parse_level(s: &str) -> Option<Level> {
-    match s {
+    match s.to_ascii_lowercase().as_str() {
         "debug" => Some(Level::Debug),
         "info" => Some(Level::Info),
         "warn" => Some(Level::Warn),
@@ -40,6 +47,9 @@ pub fn parse_level(s: &str) -> Option<Level> {
         _ => None,
     }
 }
+
+/// The accepted `--log-level` values, for error messages.
+pub const LEVEL_NAMES: &str = "debug|info|warn|error";
 
 #[doc(hidden)]
 pub fn log_enabled(level: Level) -> bool {
@@ -189,6 +199,14 @@ mod tests {
         assert_eq!(parse_level("debug"), Some(Level::Debug));
         assert_eq!(parse_level("error"), Some(Level::Error));
         assert_eq!(parse_level("loud"), None);
+    }
+
+    #[test]
+    fn levels_parse_case_insensitive() {
+        assert_eq!(parse_level("INFO"), Some(Level::Info));
+        assert_eq!(parse_level("Info"), Some(Level::Info));
+        assert_eq!(parse_level("WaRn"), Some(Level::Warn));
+        assert_eq!(parse_level("DEBUG "), None, "whitespace is not trimmed");
     }
 
     #[test]

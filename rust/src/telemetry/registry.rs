@@ -1,0 +1,175 @@
+//! Named-metric registry: counters, gauges and fixed-bucket histograms.
+//!
+//! The registry is deliberately **decision-side only**: the trainer
+//! feeds it bytes, frame modes, resync counts, rewards and generations
+//! — never wall-clock time — so a snapshot is a pure function of
+//! (config, seed) and `--metrics-out` files diff clean across thread
+//! counts, exactly like the trace digest. Histogram bucket bounds are
+//! hardcoded constants for the same reason: no data-dependent bucket
+//! layout, so two runs disagree only if the *observations* disagree.
+//!
+//! Keys are full Prometheus sample names, labels included (e.g.
+//! `fedpayload_session_frames_total{mode="reuse"}`); a `BTreeMap`
+//! keeps rendering order stable. Text exposition lives in
+//! [`export`](super::export).
+
+use std::collections::BTreeMap;
+
+/// Download/upload frame and round byte sizes: powers of four from
+/// 64 B to 16 MiB (11 buckets + overflow).
+pub const BYTE_BUCKETS: &[f64] = &[
+    64.0,
+    256.0,
+    1024.0,
+    4096.0,
+    16384.0,
+    65536.0,
+    262144.0,
+    1048576.0,
+    4194304.0,
+    16777216.0,
+];
+
+/// Bandit reward magnitudes: decades from 1e-6 to 1e2 (Eq. 13 rewards
+/// are squared-gradient traces, usually far below 1).
+pub const REWARD_BUCKETS: &[f64] = &[
+    1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0, 10.0, 100.0,
+];
+
+/// A fixed-bound histogram: per-bucket counts (`bounds.len() + 1`
+/// entries, the last being overflow), plus sum and count for the
+/// Prometheus `_sum`/`_count` series.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub(super) bounds: &'static [f64],
+    pub(super) counts: Vec<u64>,
+    pub(super) sum: f64,
+    pub(super) count: u64,
+}
+
+impl Histogram {
+    fn new(bounds: &'static [f64]) -> Histogram {
+        Histogram {
+            bounds,
+            counts: vec![0; bounds.len() + 1],
+            sum: 0.0,
+            count: 0,
+        }
+    }
+
+    fn observe(&mut self, v: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum += v;
+        self.count += 1;
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of observations.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+}
+
+/// The registry a trainer owns for the lifetime of a run.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    pub(super) counters: BTreeMap<String, u64>,
+    pub(super) gauges: BTreeMap<String, f64>,
+    pub(super) histograms: BTreeMap<String, Histogram>,
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Nothing recorded yet?
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.histograms.is_empty()
+    }
+
+    /// Increment (and create on first touch) a monotonic counter.
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Current counter value (0 when never incremented).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Set a gauge to its latest value.
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    /// Current gauge value.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Observe `v` into the named histogram, creating it with `bounds`
+    /// on first touch. Bounds are `'static` so every histogram's bucket
+    /// layout is one of the hardcoded constants above — re-observing
+    /// with different bounds is a programming error and panics in
+    /// debug builds (release keeps the original layout).
+    pub fn observe(&mut self, name: &str, bounds: &'static [f64], v: f64) {
+        let h = self
+            .histograms
+            .entry(name.to_string())
+            .or_insert_with(|| Histogram::new(bounds));
+        debug_assert!(
+            std::ptr::eq(h.bounds.as_ptr(), bounds.as_ptr()),
+            "histogram {name} re-registered with different bounds"
+        );
+        h.observe(v);
+    }
+
+    /// Look up a histogram.
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_accumulate() {
+        let mut r = Registry::new();
+        assert!(r.is_empty());
+        r.inc("a_total", 2);
+        r.inc("a_total", 3);
+        r.set_gauge("g", 1.5);
+        r.set_gauge("g", 2.5);
+        assert_eq!(r.counter("a_total"), 5);
+        assert_eq!(r.counter("missing"), 0);
+        assert_eq!(r.gauge("g"), Some(2.5));
+        assert!(!r.is_empty());
+    }
+
+    #[test]
+    fn histogram_buckets_split_at_bounds() {
+        let mut r = Registry::new();
+        for v in [10.0, 64.0, 65.0, 1e9] {
+            r.observe("bytes", BYTE_BUCKETS, v);
+        }
+        let h = r.histogram("bytes").unwrap();
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.counts[0], 2, "10 and 64 land in le=64");
+        assert_eq!(h.counts[1], 1, "65 lands in le=256");
+        assert_eq!(*h.counts.last().unwrap(), 1, "1e9 overflows to +Inf");
+        assert!((h.sum() - (10.0 + 64.0 + 65.0 + 1e9)).abs() < 1e-6);
+    }
+}

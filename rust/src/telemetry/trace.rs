@@ -1,0 +1,497 @@
+//! Structured round-event flight recorder.
+//!
+//! Every decision the round loop already makes — bandit arm selection,
+//! codec/session mode choice, per-client resyncs, ledger movement — is
+//! emitted as one self-describing JSON object per line (JSONL), in
+//! coordinator order (and, for fleet-lane spans, batch-index order), so
+//! a trace is replayable and diffable the same way `--dump-rounds` is.
+//!
+//! **Determinism contract.** A trace line has two parts: decision
+//! fields, which are pure functions of (config, seed) and therefore
+//! bit-identical across `--threads` values, and a trailing `"t":{...}`
+//! object holding everything wall-clock or execution-environment
+//! dependent (nanosecond timings, lane ids, thread counts). The `t`
+//! object is always the **last** top-level key and contains only flat
+//! numeric fields — that invariant is what lets [`trace_digest`] strip
+//! it textually, yielding a decision-only digest that CI diffs across
+//! thread counts (`ci/determinism.sh` §6).
+//!
+//! **Cost when off.** Emission sites are gated the same way as
+//! [`log_enabled`](super::log_enabled): one relaxed atomic load and a
+//! branch ([`trace_enabled`]). No event is formatted, no allocation
+//! happens, unless the global level admits it *and* a [`Tracer`] is
+//! installed.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::Result;
+
+/// Trace verbosity levels, lowest to highest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TraceLevel {
+    /// No events.
+    Off = 0,
+    /// Decision events only (bandit, codec/session, resync, round/run
+    /// boundaries) — everything the determinism digest covers.
+    Decision = 1,
+    /// Decision events plus per-batch fleet-lane spans.
+    Full = 2,
+}
+
+impl TraceLevel {
+    /// Canonical name, as accepted by [`parse_trace_level`].
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceLevel::Off => "off",
+            TraceLevel::Decision => "decision",
+            TraceLevel::Full => "full",
+        }
+    }
+}
+
+/// Parse `off|decision|full` (case-insensitive).
+pub fn parse_trace_level(s: &str) -> Option<TraceLevel> {
+    match s.to_ascii_lowercase().as_str() {
+        "off" => Some(TraceLevel::Off),
+        "decision" => Some(TraceLevel::Decision),
+        "full" => Some(TraceLevel::Full),
+        _ => None,
+    }
+}
+
+static TRACE_LEVEL: AtomicU8 = AtomicU8::new(TraceLevel::Off as u8);
+
+/// Set the process-wide trace threshold (the fast-path gate).
+pub fn set_trace_level(level: TraceLevel) {
+    TRACE_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Raise the process-wide threshold to at least `level` (never lowers
+/// it — installing a tracer in one trainer must not mute another's).
+pub fn raise_trace_level(level: TraceLevel) {
+    TRACE_LEVEL.fetch_max(level as u8, Ordering::Relaxed);
+}
+
+/// One relaxed load + compare: the per-event cost when tracing is off.
+/// Same pattern as [`log_enabled`](super::log_enabled).
+#[inline]
+pub fn trace_enabled(level: TraceLevel) -> bool {
+    level as u8 <= TRACE_LEVEL.load(Ordering::Relaxed) && level != TraceLevel::Off
+}
+
+/// The f64 bit-pattern renderer shared with
+/// [`round_dump_string`](crate::server::round_dump_string): 16 hex
+/// digits of `to_bits`, so exact-value fields survive text round-trips.
+pub fn f64_bits(v: f64) -> String {
+    format!("{:016x}", v.to_bits())
+}
+
+/// Escape a string for a JSON string literal (quotes not included).
+fn json_escape_into(buf: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '"' => buf.push_str("\\\""),
+            '\\' => buf.push_str("\\\\"),
+            '\n' => buf.push_str("\\n"),
+            '\r' => buf.push_str("\\r"),
+            '\t' => buf.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                buf.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => buf.push(c),
+        }
+    }
+}
+
+/// Append a JSON number (finite shortest-roundtrip, else `null` — JSON
+/// has no NaN/Inf). Rust's `Display` for floats never uses exponent
+/// notation and round-trips exactly, so plain numbers are both
+/// jq-friendly and bit-deterministic.
+fn json_f64_into(buf: &mut String, v: f64) {
+    if v.is_finite() {
+        // Integral values would print without a dot and change the
+        // JSON type; keep them numbers either way (jq doesn't care),
+        // but make 1.0 render as "1.0" for schema stability.
+        if v == v.trunc() && v.abs() < 1e15 {
+            buf.push_str(&format!("{v:.1}"));
+        } else {
+            buf.push_str(&format!("{v}"));
+        }
+    } else {
+        buf.push_str("null");
+    }
+}
+
+/// Builder for one trace line. Decision fields accumulate in emission
+/// order; timing fields (`t_*`) accumulate into the trailing `"t"`
+/// object, which [`render`](TraceEvent::render) always emits last.
+/// Timing values are numeric only — the flatness invariant
+/// [`trace_digest`] relies on.
+#[derive(Debug)]
+pub struct TraceEvent {
+    body: String,
+    timing: String,
+}
+
+impl TraceEvent {
+    /// Start an event of kind `ev` (the `"ev"` discriminator field).
+    pub fn new(ev: &str) -> TraceEvent {
+        let mut body = String::with_capacity(160);
+        body.push_str("{\"ev\":\"");
+        json_escape_into(&mut body, ev);
+        body.push('"');
+        TraceEvent {
+            body,
+            timing: String::new(),
+        }
+    }
+
+    fn key(&mut self, key: &str) {
+        self.body.push_str(",\"");
+        json_escape_into(&mut self.body, key);
+        self.body.push_str("\":");
+    }
+
+    /// Unsigned integer decision field.
+    pub fn u64(mut self, key: &str, v: u64) -> TraceEvent {
+        self.key(key);
+        self.body.push_str(&v.to_string());
+        self
+    }
+
+    /// Signed integer decision field.
+    pub fn i64(mut self, key: &str, v: i64) -> TraceEvent {
+        self.key(key);
+        self.body.push_str(&v.to_string());
+        self
+    }
+
+    /// Float decision field (shortest-roundtrip; non-finite → `null`).
+    pub fn f64(mut self, key: &str, v: f64) -> TraceEvent {
+        self.key(key);
+        json_f64_into(&mut self.body, v);
+        self
+    }
+
+    /// Exact-bits float decision field (16-hex-digit string, the
+    /// [`f64_bits`] rendering golden dumps use).
+    pub fn bits(mut self, key: &str, v: f64) -> TraceEvent {
+        self.key(key);
+        self.body.push('"');
+        self.body.push_str(&f64_bits(v));
+        self.body.push('"');
+        self
+    }
+
+    /// String decision field (JSON-escaped).
+    pub fn str(mut self, key: &str, v: &str) -> TraceEvent {
+        self.key(key);
+        self.body.push('"');
+        json_escape_into(&mut self.body, v);
+        self.body.push('"');
+        self
+    }
+
+    /// Boolean decision field.
+    pub fn bool(mut self, key: &str, v: bool) -> TraceEvent {
+        self.key(key);
+        self.body.push_str(if v { "true" } else { "false" });
+        self
+    }
+
+    /// Optional unsigned field (`None` → `null`).
+    pub fn opt_u64(mut self, key: &str, v: Option<u64>) -> TraceEvent {
+        self.key(key);
+        match v {
+            Some(v) => self.body.push_str(&v.to_string()),
+            None => self.body.push_str("null"),
+        }
+        self
+    }
+
+    /// Optional float field (`None` → `null`).
+    pub fn opt_f64(mut self, key: &str, v: Option<f64>) -> TraceEvent {
+        self.key(key);
+        match v {
+            Some(v) => json_f64_into(&mut self.body, v),
+            None => self.body.push_str("null"),
+        }
+        self
+    }
+
+    /// Optional boolean field (`None` → `null`).
+    pub fn opt_bool(mut self, key: &str, v: Option<bool>) -> TraceEvent {
+        self.key(key);
+        match v {
+            Some(v) => self.body.push_str(if v { "true" } else { "false" }),
+            None => self.body.push_str("null"),
+        }
+        self
+    }
+
+    fn t_key(&mut self, key: &str) {
+        if !self.timing.is_empty() {
+            self.timing.push(',');
+        }
+        self.timing.push('"');
+        json_escape_into(&mut self.timing, key);
+        self.timing.push_str("\":");
+    }
+
+    /// Unsigned timing/environment field (lands in the `"t"` object,
+    /// excluded from the digest). Nanosecond totals are `u128`
+    /// upstream; saturate into `u64` (584 years of nanoseconds).
+    pub fn t_u128(mut self, key: &str, v: u128) -> TraceEvent {
+        self.t_key(key);
+        self.timing
+            .push_str(&u64::try_from(v).unwrap_or(u64::MAX).to_string());
+        self
+    }
+
+    /// Unsigned timing/environment field.
+    pub fn t_u64(mut self, key: &str, v: u64) -> TraceEvent {
+        self.t_key(key);
+        self.timing.push_str(&v.to_string());
+        self
+    }
+
+    /// Float timing/environment field.
+    pub fn t_f64(mut self, key: &str, v: f64) -> TraceEvent {
+        self.t_key(key);
+        json_f64_into(&mut self.timing, v);
+        self
+    }
+
+    /// Finish the line: decision fields, then the `"t"` object (when
+    /// any timing field was set) as the final key.
+    pub fn render(self) -> String {
+        let mut line = self.body;
+        if !self.timing.is_empty() {
+            line.push_str(",\"t\":{");
+            line.push_str(&self.timing);
+            line.push('}');
+        }
+        line.push('}');
+        line
+    }
+}
+
+/// Reduce a JSONL trace to its decision-only digest: per line, strip
+/// the trailing `,"t":{...}` object (the timing fields) and keep
+/// everything else byte-for-byte. Lines without a `t` object pass
+/// through unchanged. Two runs that differ only in thread count or
+/// wall-clock must digest identically — `ci/determinism.sh` §6
+/// enforces exactly that via the `trace-digest` subcommand.
+pub fn trace_digest(jsonl: &str) -> String {
+    let mut out = String::with_capacity(jsonl.len());
+    for line in jsonl.lines() {
+        match strip_timing(line) {
+            Some(prefix) => {
+                out.push_str(prefix);
+                out.push('}');
+            }
+            None => out.push_str(line),
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// The per-line digest rule: when the line ends in the emitter-shaped
+/// flat `,"t":{...}}` suffix, return the decision prefix (caller
+/// re-closes the object); otherwise `None` — a line that doesn't match
+/// the invariant is passed through unchanged rather than guessed at.
+/// Flat means no nested braces inside the timing object (its values
+/// are numeric by construction), which keeps the rule purely textual.
+fn strip_timing(line: &str) -> Option<&str> {
+    let pos = line.rfind(",\"t\":{")?;
+    let inner = line.get(pos + 6..line.len().checked_sub(2)?)?;
+    if !line.ends_with("}}") || inner.contains('{') || inner.contains('}') {
+        return None;
+    }
+    Some(&line[..pos])
+}
+
+/// Where trace lines go.
+#[derive(Debug)]
+enum Sink {
+    /// JSONL file (the `--trace-out` path).
+    File(BufWriter<File>),
+    /// In-memory buffer for tests and programmatic inspection.
+    Memory(Vec<String>),
+}
+
+/// A handle that owns the trace sink. The trainer holds at most one;
+/// emission goes through [`Tracer::emit`], which re-checks the
+/// tracer-local level so concurrently running trainers (e.g. the test
+/// suite) never write into each other's sinks.
+#[derive(Debug)]
+pub struct Tracer {
+    level: TraceLevel,
+    sink: Sink,
+    events: u64,
+}
+
+impl Tracer {
+    /// Open (truncate) a JSONL trace file at `path`.
+    pub fn to_file(path: &Path, level: TraceLevel) -> Result<Tracer> {
+        let file = File::create(path)
+            .map_err(|e| anyhow::anyhow!("cannot create trace file {}: {e}", path.display()))?;
+        raise_trace_level(level);
+        Ok(Tracer {
+            level,
+            sink: Sink::File(BufWriter::new(file)),
+            events: 0,
+        })
+    }
+
+    /// Collect lines in memory (tests, tooling).
+    pub fn in_memory(level: TraceLevel) -> Tracer {
+        raise_trace_level(level);
+        Tracer {
+            level,
+            sink: Sink::Memory(Vec::new()),
+            events: 0,
+        }
+    }
+
+    /// This tracer's own threshold.
+    pub fn level(&self) -> TraceLevel {
+        self.level
+    }
+
+    /// Would an event at `level` be recorded by this tracer?
+    #[inline]
+    pub fn enabled(&self, level: TraceLevel) -> bool {
+        level != TraceLevel::Off && level <= self.level
+    }
+
+    /// Record one event (no-op when `level` is above the threshold).
+    pub fn emit(&mut self, level: TraceLevel, event: TraceEvent) {
+        if !self.enabled(level) {
+            return;
+        }
+        let line = event.render();
+        match &mut self.sink {
+            Sink::File(w) => {
+                // ignore I/O errors mid-round; flush() surfaces them
+                let _ = writeln!(w, "{line}");
+            }
+            Sink::Memory(buf) => buf.push(line),
+        }
+        self.events += 1;
+    }
+
+    /// Events recorded so far.
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    /// Recorded lines (empty for file sinks — read the file instead).
+    pub fn lines(&self) -> &[String] {
+        match &self.sink {
+            Sink::Memory(buf) => buf,
+            Sink::File(_) => &[],
+        }
+    }
+
+    /// Flush a file sink (no-op in memory).
+    pub fn flush(&mut self) -> Result<()> {
+        if let Sink::File(w) = &mut self.sink {
+            w.flush()
+                .map_err(|e| anyhow::anyhow!("trace flush failed: {e}"))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_parse_case_insensitive() {
+        assert_eq!(parse_trace_level("off"), Some(TraceLevel::Off));
+        assert_eq!(parse_trace_level("Decision"), Some(TraceLevel::Decision));
+        assert_eq!(parse_trace_level("FULL"), Some(TraceLevel::Full));
+        assert_eq!(parse_trace_level("loud"), None);
+        assert_eq!(TraceLevel::Full.name(), "full");
+    }
+
+    #[test]
+    fn event_renders_timing_last_and_digest_strips_it() {
+        let line = TraceEvent::new("codec_choice")
+            .u64("iter", 7)
+            .str("mode", "delta")
+            .f64("sse_fresh", 0.25)
+            .opt_f64("sse_reuse", None)
+            .bool("within_budget", true)
+            .t_u128("encode_ns", 12345)
+            .t_u64("lane", 2)
+            .render();
+        assert_eq!(
+            line,
+            "{\"ev\":\"codec_choice\",\"iter\":7,\"mode\":\"delta\",\
+             \"sse_fresh\":0.25,\"sse_reuse\":null,\"within_budget\":true,\
+             \"t\":{\"encode_ns\":12345,\"lane\":2}}"
+        );
+        let digest = trace_digest(&format!("{line}\n"));
+        assert_eq!(
+            digest,
+            "{\"ev\":\"codec_choice\",\"iter\":7,\"mode\":\"delta\",\
+             \"sse_fresh\":0.25,\"sse_reuse\":null,\"within_budget\":true}\n"
+        );
+        assert!(!digest.contains("\"t\":{"));
+    }
+
+    #[test]
+    fn digest_passes_through_lines_without_timing() {
+        let line = TraceEvent::new("round_start").u64("iter", 1).render();
+        assert_eq!(trace_digest(&line), format!("{line}\n"));
+        // a string field that merely *mentions* the t-shape is kept:
+        // rfind only matches the genuine trailing flat object
+        let tricky = "{\"ev\":\"x\",\"note\":\"has ,\\\"t\\\":{ inside\"}";
+        assert_eq!(trace_digest(tricky).trim_end(), tricky);
+    }
+
+    #[test]
+    fn float_rendering_is_json_safe() {
+        let line = TraceEvent::new("e")
+            .f64("a", 1.0)
+            .f64("b", 0.1)
+            .f64("c", f64::NAN)
+            .f64("d", -3.5e-7)
+            .render();
+        assert_eq!(
+            line,
+            "{\"ev\":\"e\",\"a\":1.0,\"b\":0.1,\"c\":null,\"d\":-0.00000035}"
+        );
+    }
+
+    #[test]
+    fn strings_are_escaped() {
+        let line = TraceEvent::new("e").str("s", "a\"b\\c\nd").render();
+        assert_eq!(line, "{\"ev\":\"e\",\"s\":\"a\\\"b\\\\c\\nd\"}");
+    }
+
+    #[test]
+    fn memory_tracer_respects_its_own_level() {
+        let mut tr = Tracer::in_memory(TraceLevel::Decision);
+        tr.emit(TraceLevel::Decision, TraceEvent::new("keep"));
+        tr.emit(TraceLevel::Full, TraceEvent::new("drop"));
+        tr.emit(TraceLevel::Off, TraceEvent::new("never"));
+        assert_eq!(tr.events(), 1);
+        assert_eq!(tr.lines().len(), 1);
+        assert!(tr.lines()[0].contains("\"keep\""));
+    }
+
+    #[test]
+    fn bits_field_matches_round_dump_rendering() {
+        let v = 0.123456789f64;
+        let line = TraceEvent::new("e").bits("map", v).render();
+        assert!(line.contains(&format!("\"map\":\"{:016x}\"", v.to_bits())));
+    }
+}

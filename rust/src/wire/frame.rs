@@ -99,6 +99,14 @@ impl PayloadKind {
             other => bail!("unknown payload kind id {other}"),
         }
     }
+
+    /// Kind name for logs and trace events.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PayloadKind::Dense => "dense",
+            PayloadKind::Sparse => "sparse",
+        }
+    }
 }
 
 /// How a session frame relates to the client's cached codebook.

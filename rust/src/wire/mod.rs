@@ -76,7 +76,9 @@ pub use entropy::EntropyMode;
 pub use frame::{FrameHeader, PayloadKind, SessionMode, HEADER_LEN, SESSION_HEADER_LEN};
 pub use quant::{f16_to_f32, f32_to_f16, Precision};
 pub use sparse::SparsePolicy;
-pub use vq::session::{EncodedDownload, ReuseMode, SessionDecode, VqClientState, VqSession};
+pub use vq::session::{
+    EncodedDownload, ReuseMode, SessionDecode, SessionRationale, VqClientState, VqSession,
+};
 
 use anyhow::{ensure, Result};
 

@@ -185,6 +185,51 @@ pub fn session_frame_len(mode: SessionMode, p: Precision, rows: usize, cols: usi
     frame::SESSION_HEADER_LEN + session_payload_len(mode, p, rows, cols)
 }
 
+/// Why [`VqSession::encode_dense`] picked the mode it did: the
+/// measured candidate frame lengths and the SSE budget verdict. The
+/// session always computed these to make its choice — this struct
+/// merely stops discarding them, so the flight recorder can answer
+/// "why did round 37 ship a delta?" from the trace alone. Every field
+/// is a pure function of (payload, session state), i.e. safe inside
+/// the deterministic trace digest.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SessionRationale {
+    /// Sealed full-frame candidate length. `None` only in steady-state
+    /// `delta` mode, where the full candidate is not built (sealing it
+    /// would waste an entropy pass per round).
+    pub full_bytes: Option<u64>,
+    /// Sealed delta-frame candidate length (`None` when the cached
+    /// geometry is incompatible or no state exists).
+    pub delta_bytes: Option<u64>,
+    /// Sealed reuse-frame candidate length (`None` unless `auto` found
+    /// the cached codebook within budget).
+    pub reuse_bytes: Option<u64>,
+    /// Summed squared assignment error against the freshly trained
+    /// codebook.
+    pub sse_fresh: f64,
+    /// Summed squared assignment error against the cached codebook
+    /// (`None` unless `auto` evaluated reuse).
+    pub sse_reuse: Option<f64>,
+    /// The [`REUSE_ERR_BUDGET`] verdict: was `sse_reuse` within budget
+    /// of `sse_fresh`? (`None` when reuse was never evaluated.)
+    pub reuse_within_budget: Option<bool>,
+}
+
+impl SessionRationale {
+    /// Rationale of a frame that had no competing candidates (empty
+    /// payloads): just the one sealed length.
+    fn sole(frame_len: usize) -> SessionRationale {
+        SessionRationale {
+            full_bytes: Some(frame_len as u64),
+            delta_bytes: None,
+            reuse_bytes: None,
+            sse_fresh: 0.0,
+            sse_reuse: None,
+            reuse_within_budget: None,
+        }
+    }
+}
+
 /// One encoded session download: the broadcast frame plus the metadata
 /// the coordinator needs for per-client sync accounting.
 #[derive(Debug, Clone)]
@@ -203,6 +248,8 @@ pub struct EncodedDownload {
     /// the coordinator must not record a generation for the recipients
     /// (mirroring `VqClientState::decode_dense`'s early return).
     pub installs_generation: bool,
+    /// The measured-bytes/SSE evidence behind the mode choice.
+    pub rationale: SessionRationale,
 }
 
 impl EncodedDownload {
@@ -321,12 +368,14 @@ impl VqSession {
                 generation,
                 full_payload: Vec::new(),
             });
+            let rationale = SessionRationale::sole(frame.len());
             return Ok(EncodedDownload {
                 frame,
                 mode: SessionMode::Full,
                 generation,
                 // no codebook travels, so no client gains a generation
                 installs_generation: false,
+                rationale,
             });
         }
 
@@ -377,10 +426,15 @@ impl VqSession {
         // reuse candidate (auto only): assignment against the cached
         // codebook, eligible within the error budget
         let mut reuse_cand = None; // (sealed frame, row records)
+        let mut sse_reuse = None;
+        let mut reuse_within_budget = None;
         if self.mode == ReuseMode::Auto && compatible {
             let s = self.state.as_ref().expect("compatible implies state");
-            let (assign_reuse, sse_reuse) = assign_plane(&prep, &s.books);
-            if sse_reuse <= sse_fresh * (1.0 + REUSE_ERR_BUDGET) {
+            let (assign_reuse, sse_r) = assign_plane(&prep, &s.books);
+            let within = sse_r <= sse_fresh * (1.0 + REUSE_ERR_BUDGET);
+            sse_reuse = Some(sse_r);
+            reuse_within_budget = Some(within);
+            if within {
                 let mut records = Vec::with_capacity(rows * row_bytes(p, cols));
                 emit_rows(&mut records, data, &prep, &s.books, &assign_reuse, p);
                 let frame = self.seal(SessionMode::Reuse, s.generation, rows, cols, &records)?;
@@ -417,6 +471,16 @@ impl VqSession {
             ReuseMode::Off => unreachable!("VqSession::new rejects off"),
         };
 
+        // the evidence the choice was made from, preserved for the trace
+        let rationale = SessionRationale {
+            full_bytes: full_frame.as_ref().map(|f| f.len() as u64),
+            delta_bytes: delta_frame.as_ref().map(|f| f.len() as u64),
+            reuse_bytes: reuse_cand.as_ref().map(|(f, _)| f.len() as u64),
+            sse_fresh,
+            sse_reuse,
+            reuse_within_budget,
+        };
+
         match chosen {
             SessionMode::Reuse => {
                 let (frame, records) = reuse_cand.expect("reuse chosen implies candidate");
@@ -438,6 +502,7 @@ impl VqSession {
                     mode: SessionMode::Reuse,
                     generation,
                     installs_generation: true,
+                    rationale,
                 })
             }
             mode => {
@@ -464,6 +529,7 @@ impl VqSession {
                     mode,
                     generation: next_gen,
                     installs_generation: true,
+                    rationale,
                 })
             }
         }
@@ -917,6 +983,43 @@ mod tests {
         // the intact frame still applies afterwards
         decode(&mut client, &f2.frame);
         assert_eq!(client.generation(), Some(2));
+    }
+
+    #[test]
+    fn rationale_records_the_evidence_behind_the_choice() {
+        let (rows, cols) = (64usize, 25usize);
+        let q1 = gaussian(rows, cols, 2021);
+        let q2 = drifted(&q1, 0.002, 7);
+        let mut sess = VqSession::new(Precision::Vq8, EntropyMode::None, ReuseMode::Auto).unwrap();
+        let f1 = sess.encode_dense(&q1, rows, cols).unwrap();
+        // first frame: full candidate only, no cached state to compare
+        let r1 = f1.rationale;
+        assert_eq!(r1.full_bytes, Some(f1.frame.len() as u64));
+        assert_eq!(r1.delta_bytes, None);
+        assert_eq!(r1.reuse_bytes, None);
+        assert!(r1.sse_fresh >= 0.0);
+        assert_eq!(r1.sse_reuse, None);
+        assert_eq!(r1.reuse_within_budget, None);
+        // stable round: reuse wins, and the rationale shows all three
+        // candidates measured with the budget verdict positive
+        let f2 = sess.encode_dense(&q2, rows, cols).unwrap();
+        assert_eq!(f2.mode, SessionMode::Reuse);
+        let r2 = f2.rationale;
+        assert_eq!(r2.reuse_bytes, Some(f2.frame.len() as u64));
+        assert_eq!(r2.reuse_within_budget, Some(true));
+        let sse_reuse = r2.sse_reuse.unwrap();
+        assert!(sse_reuse <= r2.sse_fresh * (1.0 + REUSE_ERR_BUDGET));
+        assert!(r2.reuse_bytes.unwrap() < r2.full_bytes.unwrap());
+        assert!(r2.delta_bytes.is_some());
+        // steady-state delta mode: no full candidate is sealed
+        let mut dsess = VqSession::new(Precision::Vq8, EntropyMode::None, ReuseMode::Delta).unwrap();
+        let d1 = dsess.encode_dense(&q1, rows, cols).unwrap();
+        assert_eq!(d1.rationale.full_bytes, Some(d1.frame.len() as u64));
+        let d2 = dsess.encode_dense(&q2, rows, cols).unwrap();
+        assert_eq!(d2.mode, SessionMode::Delta);
+        assert_eq!(d2.rationale.full_bytes, None, "delta mode skips the full seal");
+        assert_eq!(d2.rationale.delta_bytes, Some(d2.frame.len() as u64));
+        assert_eq!(d2.rationale.sse_reuse, None, "delta mode never evaluates reuse");
     }
 
     #[test]

@@ -241,6 +241,53 @@ fn train_with_codebook_reuse_flag() {
 }
 
 #[test]
+fn train_with_trace_out_and_trace_digest() {
+    let dir = std::env::temp_dir().join("fedpayload_cli_trace");
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("trace.jsonl");
+    let prom = dir.join("metrics.prom");
+    let (ok, text) = run(&[
+        "train",
+        "--dataset",
+        "synthetic-small",
+        "--backend",
+        "reference",
+        "--iterations",
+        "3",
+        "--trace-out",
+        trace.to_str().unwrap(),
+        "--metrics-out",
+        prom.to_str().unwrap(),
+        "--trace-level",
+        "full",
+        "--set",
+        "dataset.users=48",
+        "--set",
+        "dataset.items=96",
+        "--set",
+        "dataset.interactions=600",
+        "--set",
+        "train.theta=12",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("flight recorder:"), "{text}");
+    assert!(text.contains("metrics snapshot written"), "{text}");
+    let raw = std::fs::read_to_string(&trace).unwrap();
+    assert!(raw.contains(",\"t\":{"), "no timing objects in the trace");
+    let (ok, digest) = run(&["trace-digest", trace.to_str().unwrap()]);
+    assert!(ok, "{digest}");
+    assert!(!digest.contains(",\"t\":{"), "digest kept a timing object");
+    assert_eq!(digest.lines().count(), raw.lines().count());
+    let snapshot = std::fs::read_to_string(&prom).unwrap();
+    assert!(snapshot.contains("fedpayload_rounds_total 3"), "{snapshot}");
+    let (ok, _) = run(&["train", "--trace-level", "verbose"]);
+    assert!(!ok, "bad trace level must fail");
+    let (ok, _) = run(&["trace-digest"]);
+    assert!(!ok, "trace-digest without a path must fail");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn info_reports_auto_topk() {
     let (ok, text) = run(&["info", "--sparse-topk", "auto", "--codec", "vq4"]);
     assert!(ok, "{text}");

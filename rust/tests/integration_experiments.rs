@@ -81,6 +81,18 @@ fn codec_sweep_covers_every_precision_entropy_and_reuse_mode() {
                 assert_eq!(fields[1], *prec, "row order");
                 assert_eq!(fields[2], *mode, "entropy column");
                 assert_eq!(fields[3], *reuse, "reuse column");
+                // session columns: frame-mode counters must be all zero
+                // for stateless rows and sum to the iteration count for
+                // session rows (one session frame per round)
+                let frames: u64 = fields[11..14]
+                    .iter()
+                    .map(|f| f.parse::<u64>().unwrap())
+                    .sum();
+                if *reuse == "off" {
+                    assert_eq!(frames, 0, "{prec} {mode}: stateless row has session frames");
+                } else {
+                    assert!(frames > 0, "{prec} {mode} {reuse}: no session frames recorded");
+                }
                 if *reuse == "off" {
                     per_mode.push((
                         fields[6].to_string(),              // map
@@ -121,6 +133,13 @@ fn threads_sweep_writes_csv_and_is_invariant() {
     for l in &lines[2..] {
         assert_eq!(field(l, 5), map0, "map diverged across thread counts");
         assert_eq!(field(l, 6), bytes0, "traffic diverged across thread counts");
+    }
+    // phase-time columns are present and well-formed on every row
+    assert!(lines[0].ends_with("solve_secs,grad_secs,codec_secs,fleet_secs"));
+    for l in &lines[1..] {
+        for i in 7..=10 {
+            assert!(field(l, i).parse::<f64>().unwrap() >= 0.0);
+        }
     }
     std::fs::remove_dir_all(&dir).ok();
 }

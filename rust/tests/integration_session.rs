@@ -151,6 +151,50 @@ fn session_runs_are_thread_count_invariant() {
     }
 }
 
+/// Multi-threaded accounting under churn (the two counters that merge
+/// across lanes): with multiple batches per round racing over 4 lanes
+/// AND clients whose codebook caches are forcibly invalidated every
+/// round, the batch-order `TrafficLedger::merge` and the
+/// coordinator-side `SessionStats` resync attribution must both be
+/// bit-identical to the single-threaded run.
+#[test]
+fn churn_accounting_is_exact_under_four_threads() {
+    let run = |threads: usize| {
+        let mut cfg = session_cfg();
+        cfg.dataset.users = 160;
+        cfg.dataset.interactions = 5000;
+        cfg.train.theta = 160; // everyone participates; churn is explicit
+        cfg.train.iterations = 6;
+        cfg.runtime.threads = threads;
+        let mut tr = Trainer::from_config(&cfg).unwrap();
+        for round in 1..=cfg.train.iterations {
+            if round >= 2 {
+                tr.invalidate_client_codebook(3); // first batch
+                tr.invalidate_client_codebook(130); // third batch
+            }
+            tr.round().unwrap();
+        }
+        (tr.ledger().clone(), tr.session_stats())
+    };
+    let (l1, s1) = run(1);
+    let (l4, s4) = run(4);
+    // per-client upload frames merge in batch order, so the ledger is
+    // thread invariant down to the simulated transfer time bits
+    assert_eq!(l1.up_bytes, l4.up_bytes);
+    assert_eq!(l1.up_msgs, l4.up_msgs);
+    assert_eq!(l1.down_bytes, l4.down_bytes);
+    assert_eq!(l1.down_msgs, l4.down_msgs);
+    assert_eq!(l1.sim_secs.to_bits(), l4.sim_secs.to_bits());
+    // resync attribution happens on the coordinator lane only, so the
+    // session counters agree exactly as well
+    assert_eq!(s1, s4);
+    assert!(
+        s1.resync_msgs >= 1,
+        "forced churn never produced a resync: {s1:?}"
+    );
+    assert!(s1.resync_extra_bytes > 0);
+}
+
 /// The acceptance comparison, e2e: at matched stable-Q settings the
 /// auto session moves strictly fewer download bytes than PR 4's
 /// stateless per-frame-codebook vq8 — and stays lossless upstream

@@ -1,0 +1,159 @@
+//! Flight-recorder e2e: the decision trace is part of the determinism
+//! contract. Three nets:
+//!
+//! 1. digest invariance — a `full`-level trace of the multi-batch
+//!    churn workload digests byte-identically at threads 1 and 4, even
+//!    though the raw lines carry per-lane wall-clock timings;
+//! 2. level gating — `decision` level suppresses the per-lane
+//!    `lane_span` events but keeps every round decision;
+//! 3. sink equivalence — the `--trace-out` file sink and the in-memory
+//!    sink record the same decisions, and `--metrics-out` leaves a
+//!    parseable Prometheus snapshot behind.
+
+use fedpayload::config::{RunConfig, Strategy};
+use fedpayload::server::Trainer;
+use fedpayload::telemetry::trace::trace_digest;
+use fedpayload::telemetry::{TraceLevel, Tracer};
+use fedpayload::wire::{EntropyMode, Precision, ReuseMode};
+
+/// The session workload from `integration_session.rs`, scaled so every
+/// round spans three fleet batches (160 clients / 64 per batch): lanes
+/// genuinely race at threads=4, which is what the digest must absorb.
+fn trace_cfg(threads: usize) -> RunConfig {
+    let mut cfg = RunConfig::paper_defaults();
+    cfg.apply_dataset_preset("synthetic-small").unwrap();
+    cfg.dataset.users = 160;
+    cfg.dataset.items = 96;
+    cfg.dataset.interactions = 5000;
+    cfg.train.theta = 160;
+    cfg.train.iterations = 5;
+    cfg.train.payload_fraction = 1.0;
+    cfg.bandit.strategy = Strategy::Full;
+    cfg.runtime.backend = "reference".into();
+    cfg.runtime.threads = threads;
+    cfg.codec.precision = Precision::Vq8;
+    cfg.codec.entropy = EntropyMode::Full;
+    cfg.codec.codebook_reuse = ReuseMode::Auto;
+    cfg
+}
+
+/// Run the churn workload with an in-memory tracer and return the raw
+/// JSONL text (one event per line, trailing newline).
+fn traced_run(threads: usize, level: TraceLevel) -> String {
+    let cfg = trace_cfg(threads);
+    let mut tr = Trainer::from_config(&cfg).unwrap();
+    tr.install_tracer(Tracer::in_memory(level));
+    for round in 1..=cfg.train.iterations {
+        if round >= 2 {
+            tr.invalidate_client_codebook(5);
+        }
+        tr.round().unwrap();
+    }
+    let mut text = tr.tracer().unwrap().lines().join("\n");
+    text.push('\n');
+    text
+}
+
+#[test]
+fn full_trace_digest_is_thread_invariant_under_churn() {
+    let raw1 = traced_run(1, TraceLevel::Full);
+    let raw4 = traced_run(4, TraceLevel::Full);
+    // the timing objects exist in the raw stream...
+    assert!(raw1.contains(",\"t\":{"), "no timing objects recorded");
+    assert!(raw4.contains(",\"t\":{"));
+    // ... and are the ONLY thing that may differ across thread counts
+    let (d1, d4) = (trace_digest(&raw1), trace_digest(&raw4));
+    assert_eq!(d1, d4, "decision trace diverged across thread counts");
+    // digest lines are still one JSON object each, now timing-free
+    for line in d1.lines() {
+        assert!(line.starts_with("{\"ev\":\""), "bad digest line: {line}");
+        assert!(line.ends_with('}'), "bad digest line: {line}");
+        assert!(!line.contains(",\"t\":{"), "timing survived: {line}");
+    }
+    // the recorder saw every layer: selection, codec/session choice,
+    // per-batch lane spans, rewards, the round roll-up — and the forced
+    // churn shows up as resync events attributed to the victim
+    for ev in [
+        "{\"ev\":\"bandit_select\"",
+        "{\"ev\":\"codec_choice\"",
+        "{\"ev\":\"lane_span\"",
+        "{\"ev\":\"reward_update\"",
+        "{\"ev\":\"round_end\"",
+    ] {
+        assert!(d1.contains(ev), "missing event {ev}");
+    }
+    assert!(
+        d1.contains("{\"ev\":\"resync\"") && d1.contains("\"client\":5"),
+        "forced churn left no resync event in the trace"
+    );
+    // three batches per round at full level => three lane spans per round
+    let spans = d1.matches("{\"ev\":\"lane_span\"").count();
+    assert_eq!(spans, 3 * 5, "expected 3 lane spans x 5 rounds, got {spans}");
+}
+
+#[test]
+fn decision_level_suppresses_lane_spans_but_keeps_decisions() {
+    let raw = traced_run(4, TraceLevel::Decision);
+    assert!(!raw.contains("\"ev\":\"lane_span\""), "lane_span leaked into decision level");
+    for ev in ["bandit_select", "codec_choice", "reward_update", "round_end"] {
+        let n = raw.matches(&format!("{{\"ev\":\"{ev}\"")).count();
+        assert_eq!(n, 5, "expected one {ev} per round, got {n}");
+    }
+    // the decision-level digest matches the full-level digest with the
+    // extra lane spans removed: decision events render identically
+    let full = trace_digest(&traced_run(4, TraceLevel::Full));
+    let decision = trace_digest(&raw);
+    let full_minus_spans: String = full
+        .lines()
+        .filter(|l| !l.starts_with("{\"ev\":\"lane_span\""))
+        .map(|l| format!("{l}\n"))
+        .collect();
+    assert_eq!(decision, full_minus_spans);
+}
+
+#[test]
+fn file_sink_matches_memory_sink_and_writes_metrics() {
+    let dir = std::env::temp_dir().join("fedpayload_trace_e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace_path = dir.join("trace.jsonl");
+    let prom_path = dir.join("metrics.prom");
+
+    // file-backed run, wired exactly like `--trace-out`/`--metrics-out`
+    let mut cfg = trace_cfg(1);
+    cfg.train.iterations = 4;
+    cfg.trace.out = Some(trace_path.to_string_lossy().into_owned());
+    cfg.trace.metrics_out = Some(prom_path.to_string_lossy().into_owned());
+    let report = Trainer::from_config(&cfg).unwrap().run().unwrap();
+    assert!(report.trace_events > 0, "file tracer recorded nothing");
+    let file_text = std::fs::read_to_string(&trace_path).unwrap();
+    assert_eq!(
+        file_text.lines().count() as u64,
+        report.trace_events,
+        "trace_events does not match the lines on disk"
+    );
+    // run() brackets the rounds with run_start / run_end
+    assert!(file_text.starts_with("{\"ev\":\"run_start\""));
+    assert!(file_text.lines().last().unwrap().starts_with("{\"ev\":\"run_end\""));
+
+    // the same config through the in-memory sink records the same
+    // decisions: the sink is an implementation detail, not a semantic
+    let mut mem_cfg = trace_cfg(1);
+    mem_cfg.train.iterations = 4;
+    let mut tr = Trainer::from_config(&mem_cfg).unwrap();
+    tr.install_tracer(Tracer::in_memory(TraceLevel::Decision));
+    tr.run().unwrap();
+    let mut mem_text = tr.tracer().unwrap().lines().join("\n");
+    mem_text.push('\n');
+    assert_eq!(trace_digest(&file_text), trace_digest(&mem_text));
+
+    // the metrics snapshot is a complete Prometheus text scrape,
+    // round-stamped with the final round
+    let prom = std::fs::read_to_string(&prom_path).unwrap();
+    assert!(prom.starts_with("# fedpayload metrics snapshot, round 4\n"), "{prom}");
+    assert!(prom.contains("# TYPE fedpayload_rounds_total counter"));
+    assert!(prom.contains("fedpayload_rounds_total 4\n"));
+    assert!(prom.contains("fedpayload_down_frame_bytes_bucket{le=\"+Inf\"} 4\n"));
+    assert!(prom.contains("fedpayload_down_frame_bytes_count 4\n"));
+    assert!(prom.contains("# TYPE fedpayload_smoothed_map gauge"));
+    std::fs::remove_dir_all(&dir).ok();
+}
