@@ -23,7 +23,12 @@
 #      digests (`fedpayload trace-digest`: the trailing `"t":{...}`
 #      wall-clock objects stripped) byte-identically at threads 1 and
 #      4, and the `--metrics-out` Prometheus snapshot — decision-side
-#      counters only — is byte-identical across thread counts outright.
+#      counters only — is byte-identical across thread counts outright,
+#   7. the round journal (server::journal): `fedpayload journal-dump`
+#      re-derives the golden round-dump text from the journal alone (no
+#      retraining), a run killed mid-way and `--resume`d converges to
+#      the uninterrupted run's dump AND journal bytes — at threads 1
+#      and 4, and on the stateful codebook-session codec.
 #
 # Usage:  ci/determinism.sh [workdir]
 #   BIN=path/to/fedpayload overrides the binary (default:
@@ -36,7 +41,7 @@ BIN="${BIN:-$REPO_ROOT/target/release/fedpayload}"
 BIN="$(cd "$(dirname "$BIN")" && pwd)/$(basename "$BIN")"
 WORKDIR="${1:-$(mktemp -d)}"
 mkdir -p "$WORKDIR"
-cd "$WORKDIR"
+cd "$WORKDIR" || exit 1
 echo "determinism workdir: $WORKDIR (binary: $BIN)"
 
 ARGS=(train --dataset synthetic-small --backend reference
@@ -145,6 +150,38 @@ done
 diff metrics_t1.prom metrics_t4.prom
 grep -q '^# TYPE fedpayload_rounds_total counter' metrics_t1.prom
 grep -q '^fedpayload_rounds_total 8$' metrics_t1.prom
+echo "   ok"
+
+echo "== 7: the round journal — record, replay, resume =="
+# journaled full run: the journal re-renders the §1 golden dump exactly,
+# with no dataset, no model, no retraining
+run rounds_j_full.csv --threads 1 --journal journal_full.jsonl
+diff rounds_j_full.csv rounds_t1_a.csv
+"$BIN" journal-dump journal_full.jsonl > rounds_from_journal.csv
+diff rounds_from_journal.csv rounds_t1_a.csv
+# kill-and-resume: stop after 5 of 8 rounds (later --iterations wins),
+# resume, and both the dump and the journal bytes converge
+"$BIN" "${ARGS[@]}" --threads 1 --iterations 5 \
+       --journal journal_part.jsonl >/dev/null
+echo "  ran: journal_part.jsonl (killed after 5 rounds)"
+run rounds_j_resumed.csv --threads 1 --resume journal_part.jsonl
+diff rounds_j_resumed.csv rounds_t1_a.csv
+diff journal_part.jsonl journal_full.jsonl
+# the same resume at threads=4 replays and continues bit-identically
+"$BIN" "${ARGS[@]}" --threads 4 --iterations 5 \
+       --journal journal_part_t4.jsonl >/dev/null
+run rounds_j_resumed_t4.csv --threads 4 --resume journal_part_t4.jsonl
+diff rounds_j_resumed_t4.csv rounds_t1_a.csv
+diff journal_part_t4.jsonl journal_full.jsonl
+# the stateful codebook-session codec resumes too: the replay must
+# reconstruct the generation-tagged codebook cache exactly
+"$BIN" "${ARGS[@]}" --codec vq8 --entropy full --codebook-reuse auto \
+       --strategy full --threads 1 --iterations 5 \
+       --journal journal_sess_part.jsonl >/dev/null
+run rounds_j_sess.csv --codec vq8 --entropy full --codebook-reuse auto \
+                      --strategy full --threads 1 \
+                      --resume journal_sess_part.jsonl
+diff rounds_j_sess.csv rounds_vq8_auto_t1.csv
 echo "   ok"
 
 echo "determinism: all checks passed"

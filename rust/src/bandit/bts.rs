@@ -106,6 +106,17 @@ impl ItemSelector for BtsSelector {
             pulls: self.pulls(item as usize),
         })
     }
+
+    fn state_digest(&self) -> u64 {
+        let mut h = crate::telemetry::Fnv64::new();
+        h.write_f64(self.mu0);
+        h.write_f64(self.tau0);
+        for arm in &self.arms {
+            h.write_u64(arm.n);
+            h.write_f64(arm.mean_reward);
+        }
+        h.finish()
+    }
 }
 
 #[cfg(test)]

@@ -59,6 +59,17 @@ pub trait ItemSelector: Send {
     fn arm_stats(&self, _item: u32) -> Option<ArmStats> {
         None
     }
+
+    /// FNV-64 digest of the strategy's mutable state (priors, pull
+    /// counts, running reward means — exact bit patterns, not values),
+    /// recorded per round by the journal so a `--resume` replay can
+    /// verify the reconstructed posteriors at every step. The default
+    /// `0` is for stateless strategies (random, full): their selection
+    /// is a pure function of the RNG stream, which the journal
+    /// fingerprints separately.
+    fn state_digest(&self) -> u64 {
+        0
+    }
 }
 
 /// Construct the selector for a strategy over an `m`-item catalog.
@@ -151,6 +162,34 @@ mod tests {
         let s3 = bts.arm_stats(0).unwrap();
         assert!(s3.sigma < s0.sigma);
         assert_eq!(s3.pulls, 3);
+    }
+
+    #[test]
+    fn state_digest_tracks_updates_on_stateful_strategies() {
+        let cfg = RunConfig::paper_defaults().bandit;
+        for s in [Strategy::Bts, Strategy::EpsGreedy, Strategy::Ucb1] {
+            let mut sel = make_selector(s, 20, &cfg);
+            let fresh = make_selector(s, 20, &cfg);
+            assert_eq!(
+                sel.state_digest(),
+                fresh.state_digest(),
+                "{}: equal initial state must digest equally",
+                sel.name()
+            );
+            let before = sel.state_digest();
+            sel.update(&[(4, 2.0)]);
+            assert_ne!(before, sel.state_digest(), "{}: update must move the digest", sel.name());
+        }
+        // ucb1 also mutates on select (its round counter t)
+        let mut ucb = Ucb1Selector::new(8);
+        let before = ucb.state_digest();
+        let mut rng = Rng::seed_from_u64(1);
+        let _ = ucb.select(3, &mut rng);
+        assert_ne!(before, ucb.state_digest());
+        // stateless strategies digest to the sentinel 0
+        for s in [Strategy::Random, Strategy::Full] {
+            assert_eq!(make_selector(s, 20, &cfg).state_digest(), 0);
+        }
     }
 
     #[test]

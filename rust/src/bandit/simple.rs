@@ -126,6 +126,16 @@ impl ItemSelector for EpsGreedySelector {
             pulls: self.n[i],
         })
     }
+
+    fn state_digest(&self) -> u64 {
+        let mut h = crate::telemetry::Fnv64::new();
+        h.write_f64(self.eps);
+        for (&n, &mean) in self.n.iter().zip(&self.mean) {
+            h.write_u64(n);
+            h.write_f64(mean);
+        }
+        h.finish()
+    }
 }
 
 #[cfg(test)]

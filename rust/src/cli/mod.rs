@@ -51,6 +51,8 @@ const VALUE_KEYS: &[&str] = &[
     "trace-out",
     "metrics-out",
     "trace-level",
+    "journal",
+    "resume",
 ];
 
 impl Args {
@@ -162,6 +164,13 @@ mod tests {
         assert_eq!(a.opt("metrics-out"), Some("m.prom"));
         let a = parse(&["train", "--trace-level", "full"]);
         assert_eq!(a.opt("trace-level"), Some("full"));
+    }
+
+    #[test]
+    fn journal_options_take_values() {
+        let a = parse(&["train", "--journal", "run.jsonl", "--resume=old.jsonl"]);
+        assert_eq!(a.opt("journal"), Some("run.jsonl"));
+        assert_eq!(a.opt("resume"), Some("old.jsonl"));
     }
 
     #[test]

@@ -252,6 +252,22 @@ pub struct TraceConfig {
     pub level: crate::telemetry::TraceLevel,
 }
 
+/// Round-journal knobs (`server::journal`): the append-only event log
+/// that makes the coordinator crash-safe, and the replay entry point.
+#[derive(Debug, Clone, Default)]
+pub struct JournalConfig {
+    /// Append-only JSONL journal destination (`--journal`); `None`
+    /// disables journaling. Every completed round appends one
+    /// checksummed record before the trainer moves on.
+    pub path: Option<String>,
+    /// Journal to replay before training continues (`--resume`). The
+    /// journaled rounds are re-executed with per-round verification
+    /// against the recorded digests; training then continues exactly
+    /// where the journaled run stopped. When `path` is unset, new
+    /// rounds append to this same file.
+    pub resume: Option<String>,
+}
+
 /// Complete run configuration.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -273,6 +289,8 @@ pub struct RunConfig {
     pub runtime: RuntimeConfig,
     /// Flight-recorder knobs.
     pub trace: TraceConfig,
+    /// Round-journal knobs.
+    pub journal: JournalConfig,
 }
 
 impl RunConfig {
@@ -347,6 +365,7 @@ impl RunConfig {
                 metrics_out: None,
                 level: crate::telemetry::TraceLevel::Decision,
             },
+            journal: JournalConfig::default(),
         }
     }
 
@@ -510,6 +529,12 @@ impl RunConfig {
             cfg.trace.level = crate::telemetry::parse_trace_level(s)
                 .ok_or_else(|| anyhow::anyhow!("unknown trace.level `{s}` (off|decision|full)"))?;
         }
+        if let Some(v) = doc.get("journal.path") {
+            cfg.journal.path = Some(v.as_str()?.to_string());
+        }
+        if let Some(v) = doc.get("journal.resume") {
+            cfg.journal.resume = Some(v.as_str()?.to_string());
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -560,7 +585,108 @@ impl RunConfig {
         if self.runtime.threads == 0 {
             bail!("runtime.threads must be >= 1 (the number of parallel fleet compute lanes)");
         }
+        // output files are opened mid-run; a missing parent directory
+        // must fail here, at startup, naming the flag — not panic at
+        // the first write hundreds of rounds in
+        if let Some(p) = &self.trace.out {
+            check_parent_dir(p, "--trace-out", "trace.out")?;
+        }
+        if let Some(p) = &self.trace.metrics_out {
+            check_parent_dir(p, "--metrics-out", "trace.metrics_out")?;
+        }
+        if let Some(p) = &self.journal.path {
+            check_parent_dir(p, "--journal", "journal.path")?;
+        }
+        if let Some(p) = &self.journal.resume {
+            if !std::path::Path::new(p).is_file() {
+                bail!("--resume (journal.resume): journal file `{p}` does not exist");
+            }
+        }
         Ok(())
+    }
+
+    /// Canonical fingerprint of every determinism-relevant config field:
+    /// the `key=value;` list a journal header pins so `--resume` refuses
+    /// to replay a run under a different configuration (f64/f32 values
+    /// render as exact bit patterns — two configs fingerprint equally
+    /// iff they train identically). Deliberately **excluded**: things a
+    /// resume may legitimately change — `train.iterations` (a resume may
+    /// extend the run) and `train.rebuilds`, `runtime.threads` (threads
+    /// are bit-transparent by the fleet contract),
+    /// `runtime.artifacts_dir`, and the trace/journal paths themselves.
+    pub fn determinism_fingerprint(&self) -> String {
+        let f64b = |v: f64| format!("{:016x}", v.to_bits());
+        let f32b = |v: f32| format!("{:08x}", v.to_bits());
+        let mut s = String::with_capacity(1024);
+        let mut kv = |k: &str, v: String| {
+            s.push_str(k);
+            s.push('=');
+            s.push_str(&v);
+            s.push(';');
+        };
+        kv("seed", self.seed.to_string());
+        kv("dataset.name", self.dataset.name.clone());
+        kv("dataset.path", self.dataset.path.clone().unwrap_or_default());
+        kv("dataset.format", self.dataset.format.clone().unwrap_or_default());
+        kv("dataset.users", self.dataset.users.to_string());
+        kv("dataset.items", self.dataset.items.to_string());
+        kv("dataset.interactions", self.dataset.interactions.to_string());
+        kv("dataset.zipf_s", f64b(self.dataset.zipf_s));
+        kv("dataset.planted_rank", self.dataset.planted_rank.to_string());
+        kv("dataset.train_frac", f64b(self.dataset.train_frac));
+        kv(
+            "dataset.min_user_interactions",
+            self.dataset.min_user_interactions.to_string(),
+        );
+        kv("model.k", self.model.k.to_string());
+        kv("model.lam", f32b(self.model.lam));
+        kv("model.alpha", f32b(self.model.alpha));
+        kv("model.eta", f32b(self.model.eta));
+        kv("model.beta1", f32b(self.model.beta1));
+        kv("model.beta2", f32b(self.model.beta2));
+        kv("model.eps", f32b(self.model.eps));
+        kv("model.init_scale", f32b(self.model.init_scale));
+        kv("bandit.strategy", self.bandit.strategy.name().to_string());
+        kv("bandit.mu0", f64b(self.bandit.mu0));
+        kv("bandit.tau0", f64b(self.bandit.tau0));
+        kv("bandit.gamma", f64b(self.bandit.gamma));
+        kv("bandit.eps_greedy", f64b(self.bandit.eps_greedy));
+        kv(
+            "bandit.mean_scaled_rewards",
+            self.bandit.mean_scaled_rewards.to_string(),
+        );
+        kv(
+            "bandit.normalize_rewards",
+            self.bandit.normalize_rewards.to_string(),
+        );
+        kv("bandit.reward_std_scale", f64b(self.bandit.reward_std_scale));
+        kv("bandit.cosine_weight", self.bandit.cosine_weight.to_string());
+        kv("bandit.time_base", self.bandit.time_base.to_string());
+        kv("train.theta", self.train.theta.to_string());
+        kv("train.payload_fraction", f64b(self.train.payload_fraction));
+        kv("train.metric_window", self.train.metric_window.to_string());
+        kv(
+            "train.aggregate",
+            match self.train.aggregate {
+                Aggregate::Sum => "sum".to_string(),
+                Aggregate::Mean => "mean".to_string(),
+            },
+        );
+        kv("train.eval_every", self.train.eval_every.to_string());
+        kv("codec.precision", self.codec.precision.name().to_string());
+        kv("codec.entropy", self.codec.entropy.name().to_string());
+        kv(
+            "codec.codebook_reuse",
+            self.codec.codebook_reuse.name().to_string(),
+        );
+        kv("codec.sparse_topk", self.codec.sparse_topk.to_string());
+        kv("codec.sparse_topk_auto", self.codec.sparse_topk_auto.to_string());
+        kv("codec.sparse_threshold", f64b(self.codec.sparse_threshold));
+        kv("simnet.bits_per_param", self.simnet.bits_per_param.to_string());
+        kv("simnet.bandwidth_mbps", f64b(self.simnet.bandwidth_mbps));
+        kv("simnet.latency_ms", f64b(self.simnet.latency_ms));
+        kv("runtime.backend", self.runtime.backend.clone());
+        s
     }
 
     /// Number of items transmitted per round for a catalog of `m` items
@@ -568,6 +694,22 @@ impl RunConfig {
     pub fn selected_items(&self, m: usize) -> usize {
         ((m as f64 * self.train.payload_fraction).round() as usize).clamp(1, m)
     }
+}
+
+/// Startup check for output destinations: a relative bare filename (no
+/// parent component) always passes; an explicit parent must exist.
+fn check_parent_dir(path: &str, flag: &str, key: &str) -> Result<()> {
+    let parent = std::path::Path::new(path)
+        .parent()
+        .unwrap_or_else(|| std::path::Path::new(""));
+    if !parent.as_os_str().is_empty() && !parent.is_dir() {
+        bail!(
+            "{flag} ({key}): parent directory `{}` of `{path}` does not exist — \
+             create it before starting the run",
+            parent.display()
+        );
+    }
+    Ok(())
 }
 
 /// Extension trait shim so the `take!` macro can read u32 from i64.
@@ -756,6 +898,61 @@ mod tests {
         assert_eq!(cfg.trace.metrics_out.as_deref(), Some("m.prom"));
         assert_eq!(cfg.trace.level, crate::telemetry::TraceLevel::Full);
         assert!(RunConfig::from_toml_str("[trace]\nlevel = \"verbose\"\n").is_err());
+    }
+
+    #[test]
+    fn journal_section_parses() {
+        let c = RunConfig::paper_defaults();
+        assert!(c.journal.path.is_none() && c.journal.resume.is_none());
+        let cfg = RunConfig::from_toml_str("[journal]\npath = \"run.jsonl\"\n").unwrap();
+        assert_eq!(cfg.journal.path.as_deref(), Some("run.jsonl"));
+        // resume must point at an existing file, checked at parse time
+        assert!(RunConfig::from_toml_str("[journal]\nresume = \"no_such.jsonl\"\n").is_err());
+    }
+
+    #[test]
+    fn missing_parent_dirs_fail_at_startup_naming_the_flag() {
+        let cases: [(&str, fn(&mut RunConfig, String)); 3] = [
+            ("--trace-out", |c, p| c.trace.out = Some(p)),
+            ("--metrics-out", |c, p| c.trace.metrics_out = Some(p)),
+            ("--journal", |c, p| c.journal.path = Some(p)),
+        ];
+        for (flag, set) in cases {
+            let mut c = RunConfig::paper_defaults();
+            set(&mut c, "/nonexistent_fedpayload_dir/out.file".into());
+            let err = c.validate().unwrap_err().to_string();
+            assert!(err.contains(flag), "error must name {flag}: {err}");
+            assert!(err.contains("/nonexistent_fedpayload_dir"), "{err}");
+            // bare filenames (empty parent) always pass
+            let mut c = RunConfig::paper_defaults();
+            set(&mut c, "out.file".into());
+            c.validate().unwrap();
+            // existing parents pass
+            let mut c = RunConfig::paper_defaults();
+            set(&mut c, std::env::temp_dir().join("out.file").to_string_lossy().into_owned());
+            c.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn determinism_fingerprint_tracks_training_relevant_fields() {
+        let a = RunConfig::paper_defaults();
+        let mut b = RunConfig::paper_defaults();
+        assert_eq!(a.determinism_fingerprint(), b.determinism_fingerprint());
+        // resume-tolerant fields must not move the fingerprint
+        b.train.iterations += 100;
+        b.runtime.threads = 1;
+        b.runtime.artifacts_dir = "elsewhere".into();
+        b.trace.out = Some("t.jsonl".into());
+        b.journal.path = Some("j.jsonl".into());
+        assert_eq!(a.determinism_fingerprint(), b.determinism_fingerprint());
+        // training-relevant fields must
+        b.seed ^= 1;
+        assert_ne!(a.determinism_fingerprint(), b.determinism_fingerprint());
+        assert!(a.determinism_fingerprint().contains("seed=2021;"));
+        let mut c = RunConfig::paper_defaults();
+        c.model.eta = 0.02;
+        assert_ne!(a.determinism_fingerprint(), c.determinism_fingerprint());
     }
 
     #[test]

@@ -546,11 +546,34 @@ pub fn threads_sweep(out_dir: &Path, scale: &Scale, backend: &str) -> Result<()>
     );
     let mut wall_1t = 0.0f64;
     let mut reference: Option<TrainReport> = None;
+    let mut journal_1t: Option<Vec<u8>> = None;
     for &threads in THREAD_COUNTS {
         let mut cfg_run = cfg.clone();
         cfg_run.runtime.threads = threads;
+        let journal_path = out_dir.join(format!("journal_t{threads}.jsonl"));
+        cfg_run.journal.path = Some(journal_path.to_string_lossy().into_owned());
         let mut trainer = Trainer::with_split(&cfg_run, split.clone())?;
         let report = trainer.run()?;
+        // the round journal must reproduce the run's dump verbatim, and
+        // the journal bytes themselves join the determinism contract:
+        // every thread count writes the identical file
+        let jf = crate::server::journal::read(&journal_path)?;
+        anyhow::ensure!(
+            !jf.torn,
+            "threads={threads}: journal has a torn tail after a clean run"
+        );
+        anyhow::ensure!(
+            crate::server::journal::render_round_dump(&jf.rounds)
+                == crate::server::round_dump_string(&report),
+            "threads={threads}: journal-rendered round dump differs from the live dump"
+        );
+        match &journal_1t {
+            None => journal_1t = Some(std::fs::read(&journal_path)?),
+            Some(bytes) => anyhow::ensure!(
+                *bytes == std::fs::read(&journal_path)?,
+                "threads={threads}: journal bytes differ from the threads=1 journal"
+            ),
+        }
         if threads == 1 {
             wall_1t = report.wall_secs;
         }

@@ -9,6 +9,10 @@
 //!                   the parallel-fleet scaling sweep).
 //! * `trace-digest` — strip the timing objects from a `--trace-out` file,
 //!                   leaving the thread-count-invariant decision trace.
+//! * `journal-dump` — render a `--journal` file as the exact
+//!                   `--dump-rounds` text, no retraining (the CI
+//!                   determinism job re-derives the golden digest from
+//!                   the journal alone with this).
 //! * `info`        — print artifact manifest + config resolution.
 //!
 //! Common options: `--config <file.toml>`, repeated `--set path=value`
@@ -43,10 +47,12 @@ USAGE:
                    [--dump-rounds file.csv]
                    [--trace-out trace.jsonl] [--metrics-out metrics.prom]
                    [--trace-level off|decision|full]
+                   [--journal run.jsonl] [--resume run.jsonl]
   fedpayload experiments <all|table1|table2|fig2|fig3|table4|codecs|threads>
                    [--out-dir results] [--scale paper|reduced|smoke]
                    [--backend pjrt|reference]
   fedpayload trace-digest <trace.jsonl>
+  fedpayload journal-dump <run.jsonl>
   fedpayload info  [--config file.toml]
   fedpayload help
 
@@ -78,7 +84,15 @@ USAGE:
    trace-digest` strips so decision traces diff byte-identical across
    --threads values. --metrics-out rewrites a Prometheus-text snapshot
    of the decision-side counters/gauges/histograms after every round.
-   --trace-level full adds per-batch fleet lane spans.)
+   --trace-level full adds per-batch fleet lane spans. --journal appends
+   one checksummed JSONL record per completed round — the round's RNG
+   stream position, participants, bandit selection, codec/session
+   decision and state digests; --resume replays a journal from the same
+   seed, verifying every recorded field, then continues training
+   bit-identically to an uninterrupted run. `--resume X` alone appends
+   new rounds to X in place; `--resume X --journal Y` rewrites a
+   complete fresh journal at Y. The config must match the journaled
+   run's determinism fingerprint.)
 ";
 
 fn main() -> ExitCode {
@@ -107,6 +121,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         Some("train") => cmd_train(&args),
         Some("experiments") => cmd_experiments(&args),
         Some("trace-digest") => cmd_trace_digest(&args),
+        Some("journal-dump") => cmd_journal_dump(&args),
         Some("info") => cmd_info(&args),
         Some("help") | None => {
             print!("{USAGE}");
@@ -188,6 +203,12 @@ fn resolve_config(args: &Args) -> Result<RunConfig> {
         cfg.trace.level = telemetry::parse_trace_level(l)
             .ok_or_else(|| anyhow::anyhow!("bad --trace-level `{l}` (off|decision|full)"))?;
     }
+    if let Some(p) = args.opt("journal") {
+        cfg.journal.path = Some(p.to_string());
+    }
+    if let Some(p) = args.opt("resume") {
+        cfg.journal.resume = Some(p.to_string());
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -208,6 +229,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     let cfg = resolve_config(args)?;
     let mut trainer = Trainer::from_config(&cfg)?;
     let report = trainer.run()?;
+    if report.replayed_rounds > 0 {
+        println!(
+            "resumed: {} round(s) reconstructed by verified journal replay",
+            report.replayed_rounds
+        );
+    }
     println!(
         "run complete: strategy={} codec={} entropy={} codebook_reuse={} iterations={} \
          M={} M_s={} ({:.0}% payload reduction)",
@@ -250,6 +277,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(path) = &cfg.trace.metrics_out {
         println!("metrics snapshot written to {path}");
     }
+    if let Some(path) = cfg.journal.path.as_ref().or(cfg.journal.resume.as_ref()) {
+        println!("round journal: {path}");
+    }
     Ok(())
 }
 
@@ -265,6 +295,23 @@ fn cmd_trace_digest(args: &Args) -> Result<()> {
     let text =
         std::fs::read_to_string(path).with_context(|| format!("reading trace {path}"))?;
     print!("{}", fedpayload::telemetry::trace::trace_digest(&text));
+    Ok(())
+}
+
+/// Render a round journal as the exact `--dump-rounds` text — the
+/// journal-driven replay mode: no dataset, no model, no retraining.
+/// `ci/determinism.sh` §7 re-derives the golden round-dump digest from
+/// the journal alone through this subcommand.
+fn cmd_journal_dump(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("journal-dump expects a journal.jsonl path\n{USAGE}"))?;
+    let jf = fedpayload::server::journal::read(std::path::Path::new(path))?;
+    if jf.torn {
+        eprintln!("warning: journal `{path}` had a torn final record (dropped)");
+    }
+    print!("{}", fedpayload::server::journal::render_round_dump(&jf.rounds));
     Ok(())
 }
 

@@ -72,6 +72,14 @@ impl Pcg64 {
         let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
         xored.rotate_right(rot)
     }
+
+    /// The raw `(state, increment)` words. Exposed so the round journal
+    /// can fingerprint the exact stream position without widening the
+    /// mutation surface — there is deliberately no setter: recovery is
+    /// replay, never state injection.
+    pub fn state_words(&self) -> (u128, u128) {
+        (self.state, self.incr)
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,1043 @@
+//! The round journal: an append-only, checksummed JSONL event log that
+//! makes the coordinator crash-safe (ROADMAP "event-sourced rounds").
+//!
+//! Every completed FL round appends one [`RoundEntry`] — the round's
+//! *inputs* (RNG stream position at round entry, sampled participants,
+//! bandit arm selection, codec/session decisions) and its *digests*
+//! (bandit posterior state, vq session state, exact-bits metrics and
+//! cumulative ledger totals). Because the whole system is
+//! bit-deterministic (threads=1/N identity, golden trajectories),
+//! **replaying the journal is recovery**: `--resume` re-executes the
+//! journaled rounds from the same seed and verifies every recorded
+//! field as it goes, reconstructing the bandit posteriors, codebook
+//! session caches and ledger byte-for-byte before training continues.
+//! There are no model checkpoints to load and none are needed — the
+//! journal pins the decisions, determinism re-derives the state, and
+//! any divergence is a hard error at the first diverging round rather
+//! than a silent drift discovered at the final dump diff.
+//!
+//! ## Record format
+//!
+//! One flat JSON object per line, hand-serialized in a canonical field
+//! order (the same idiom as `telemetry::trace::TraceEvent`, so the log
+//! is greppable and diffable). All f64 values travel as 16-hex-digit
+//! bit patterns (the `f64_bits` renderer shared with
+//! `round_dump_string`) and all 64-bit digests as 16-hex-digit strings
+//! — never as JSON numbers, which lose u64 precision past 2^53. Every
+//! line ends with `,"crc":"xxxxxxxx"}` where the value is the FNV-1a 32
+//! checksum (`wire::frame::checksum` — the same function that guards
+//! wire frames) of the line bytes before the `,"crc"` suffix.
+//!
+//! ## Torn writes
+//!
+//! Appends are `write_all` + `flush` of one complete line, so a crash
+//! can tear **at most the final line**. [`read`] therefore applies the
+//! classic write-ahead-log rule: a final line that fails to parse,
+//! fails its CRC, or merely lacks its trailing newline (an incomplete
+//! write, even if it happens to parse) is dropped with a warning and
+//! the file is treated as ending at the last valid record — that round
+//! simply re-runs on resume. A corrupt record *before* the tail can
+//! only mean external damage and is a hard error, never skipped.
+
+use std::collections::BTreeMap;
+use std::io::{Seek, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::telemetry::trace::f64_bits;
+use crate::warn_log;
+use crate::wire::frame::checksum;
+
+/// Journal format version; bumped on any breaking record change.
+pub const JOURNAL_VERSION: u64 = 1;
+
+/// The journal's first line: format version plus the config
+/// determinism fingerprint the run was recorded under. `--resume`
+/// refuses to replay a journal whose fingerprint does not match the
+/// resuming config (see [`check_fingerprint`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JournalHeader {
+    /// Format version ([`JOURNAL_VERSION`]).
+    pub version: u64,
+    /// `RunConfig::determinism_fingerprint()` of the recording run.
+    pub fingerprint: String,
+}
+
+/// One journaled FL round: the inputs that drove it and the state
+/// digests that verify its replay. Field semantics mirror the trainer's
+/// round variables one-to-one.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RoundEntry {
+    /// 1-based FL iteration.
+    pub iter: u64,
+    /// `Rng::state_fingerprint()` at round entry, before any draw.
+    pub rng_fp: u64,
+    /// Sampled participant client ids, in sampling order.
+    pub participants: Vec<u64>,
+    /// Bandit-selected item ids (sorted, as staged).
+    pub selected: Vec<u64>,
+    /// Broadcast download frame length in bytes.
+    pub frame_bytes: u64,
+    /// Session frame mode name (`full|delta|reuse`); `None` when the
+    /// codec ran stateless.
+    pub session_mode: Option<String>,
+    /// Session frame generation tag (`None` when stateless).
+    pub generation: Option<u64>,
+    /// Did the session frame install its generation on recipients?
+    pub installs: Option<bool>,
+    /// Resync messages served to stale clients this round.
+    pub resync_msgs: u64,
+    /// Σ extra bytes those resyncs cost over the broadcast frame.
+    pub resync_extra: i64,
+    /// Was this an evaluation round (`train.eval_every`)?
+    pub evaluated: bool,
+    /// Clients that contributed eval metrics this round.
+    pub eval_clients: u64,
+    /// Items transmitted (M_s).
+    pub m_s: u64,
+    /// Raw round metrics as f64 bit patterns:
+    /// `[precision, recall, f1, map]`.
+    pub raw_bits: [u64; 4],
+    /// Smoothed (window-mean) metrics as f64 bit patterns, same order.
+    pub smoothed_bits: [u64; 4],
+    /// Bytes moved this round (both directions).
+    pub round_bytes: u64,
+    /// Cumulative ledger download bytes after this round.
+    pub down_bytes: u64,
+    /// Cumulative ledger upload bytes after this round.
+    pub up_bytes: u64,
+    /// Cumulative download messages after this round.
+    pub down_msgs: u64,
+    /// Cumulative upload messages after this round.
+    pub up_msgs: u64,
+    /// Cumulative simulated transfer seconds, as an f64 bit pattern.
+    pub sim_secs_bits: u64,
+    /// `ItemSelector::state_digest()` after this round's update.
+    pub bandit_digest: u64,
+    /// `VqSession::state_digest()` after this round (`None` when
+    /// sessions are off).
+    pub session_digest: Option<u64>,
+}
+
+/// Everything a journal file held: the header, the valid round prefix,
+/// and what (if anything) was torn off the tail.
+#[derive(Debug, Clone)]
+pub struct JournalFile {
+    /// The validated header line.
+    pub header: JournalHeader,
+    /// All valid round records, in file order.
+    pub rounds: Vec<RoundEntry>,
+    /// Byte offset of the end of the last valid record — the length to
+    /// truncate to before appending (drops the torn tail, if any).
+    pub valid_len: u64,
+    /// Was a torn/corrupt final line dropped?
+    pub torn: bool,
+}
+
+// ---------------------------------------------------------------------
+// serialization (canonical field order; the roundtrip proptest pins
+// parse(serialize(e)) == e and serialize(parse(line)) == line)
+// ---------------------------------------------------------------------
+
+fn push_escaped(out: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+}
+
+fn push_u64_array(out: &mut String, key: &str, vals: &[u64]) {
+    out.push_str(",\"");
+    out.push_str(key);
+    out.push_str("\":[");
+    for (i, v) in vals.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&v.to_string());
+    }
+    out.push(']');
+}
+
+fn push_bits_array(out: &mut String, key: &str, vals: &[u64]) {
+    out.push_str(",\"");
+    out.push_str(key);
+    out.push_str("\":[");
+    for (i, v) in vals.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("\"{v:016x}\""));
+    }
+    out.push(']');
+}
+
+/// Seal a serialized-so-far line (an open JSON object missing its final
+/// `}`) with the CRC field: `<prefix>,"crc":"xxxxxxxx"}`.
+fn seal_line(prefix: String) -> String {
+    let crc = checksum(prefix.as_bytes());
+    format!("{prefix},\"crc\":\"{crc:08x}\"}}")
+}
+
+impl JournalHeader {
+    /// Serialize to one sealed JSONL line (without trailing newline).
+    pub fn serialize(&self) -> String {
+        let mut s = format!("{{\"ev\":\"journal\",\"version\":{}", self.version);
+        s.push_str(",\"fingerprint\":\"");
+        push_escaped(&mut s, &self.fingerprint);
+        s.push('"');
+        seal_line(s)
+    }
+}
+
+impl RoundEntry {
+    /// Serialize to one sealed JSONL line (without trailing newline).
+    pub fn serialize(&self) -> String {
+        let mut s = format!(
+            "{{\"ev\":\"round\",\"iter\":{},\"rng\":\"{:016x}\"",
+            self.iter, self.rng_fp
+        );
+        push_u64_array(&mut s, "participants", &self.participants);
+        push_u64_array(&mut s, "selected", &self.selected);
+        s.push_str(&format!(",\"frame_bytes\":{}", self.frame_bytes));
+        if let Some(mode) = &self.session_mode {
+            s.push_str(",\"session_mode\":\"");
+            push_escaped(&mut s, mode);
+            s.push('"');
+        }
+        if let Some(g) = self.generation {
+            s.push_str(&format!(",\"generation\":{g}"));
+        }
+        if let Some(b) = self.installs {
+            s.push_str(&format!(",\"installs\":{b}"));
+        }
+        s.push_str(&format!(
+            ",\"resync_msgs\":{},\"resync_extra\":{},\"evaluated\":{},\"eval_clients\":{},\"m_s\":{}",
+            self.resync_msgs, self.resync_extra, self.evaluated, self.eval_clients, self.m_s
+        ));
+        push_bits_array(&mut s, "raw", &self.raw_bits);
+        push_bits_array(&mut s, "smoothed", &self.smoothed_bits);
+        s.push_str(&format!(
+            ",\"round_bytes\":{},\"down_bytes\":{},\"up_bytes\":{},\"down_msgs\":{},\"up_msgs\":{}",
+            self.round_bytes, self.down_bytes, self.up_bytes, self.down_msgs, self.up_msgs
+        ));
+        s.push_str(&format!(
+            ",\"sim_secs\":\"{:016x}\",\"bandit\":\"{:016x}\"",
+            self.sim_secs_bits, self.bandit_digest
+        ));
+        if let Some(d) = self.session_digest {
+            s.push_str(&format!(",\"session\":\"{d:016x}\""));
+        }
+        seal_line(s)
+    }
+}
+
+// ---------------------------------------------------------------------
+// parsing: a mini flat-JSON reader for exactly the shapes the journal
+// emits (integers, strings, bools, flat arrays). No dependency — the
+// vendored anyhow shim is the only external crate in the tree.
+// ---------------------------------------------------------------------
+
+/// A parsed journal value. Floats never appear: every f64 travels as a
+/// 16-hex-digit bit-pattern string.
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum JsonVal {
+    U64(u64),
+    I64(i64),
+    Str(String),
+    Bool(bool),
+    ArrU64(Vec<u64>),
+    ArrStr(Vec<String>),
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(b: &'a [u8]) -> Reader<'a> {
+        Reader { b, i: 0 }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        ensure!(
+            self.peek() == Some(c),
+            "journal record: expected `{}` at byte {}",
+            c as char,
+            self.i
+        );
+        self.i += 1;
+        Ok(())
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b'u') => {
+                            ensure!(self.i + 4 < self.b.len(), "journal record: short \\u escape");
+                            let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
+                                .context("journal record: non-utf8 \\u escape")?;
+                            let cp = u32::from_str_radix(hex, 16)
+                                .context("journal record: bad \\u escape")?;
+                            out.push(
+                                char::from_u32(cp)
+                                    .context("journal record: invalid \\u codepoint")?,
+                            );
+                            self.i += 4;
+                        }
+                        other => bail!("journal record: bad escape {other:?}"),
+                    }
+                    self.i += 1;
+                }
+                Some(c) if c < 0x80 => {
+                    out.push(c as char);
+                    self.i += 1;
+                }
+                Some(_) => {
+                    // multi-byte utf8: find the full char
+                    let rest = std::str::from_utf8(&self.b[self.i..])
+                        .context("journal record: invalid utf8")?;
+                    let ch = rest.chars().next().expect("nonempty");
+                    out.push(ch);
+                    self.i += ch.len_utf8();
+                }
+                None => bail!("journal record: unterminated string"),
+            }
+        }
+    }
+
+    fn integer(&mut self) -> Result<JsonVal> {
+        let neg = self.peek() == Some(b'-');
+        if neg {
+            self.i += 1;
+        }
+        let start = self.i;
+        while matches!(self.peek(), Some(b'0'..=b'9')) {
+            self.i += 1;
+        }
+        ensure!(self.i > start, "journal record: expected digits at byte {start}");
+        let digits = std::str::from_utf8(&self.b[start..self.i]).expect("digits are ascii");
+        if neg {
+            let v: i64 = format!("-{digits}")
+                .parse()
+                .with_context(|| format!("journal record: bad integer -{digits}"))?;
+            Ok(JsonVal::I64(v))
+        } else {
+            let v: u64 = digits
+                .parse()
+                .with_context(|| format!("journal record: bad integer {digits}"))?;
+            Ok(JsonVal::U64(v))
+        }
+    }
+
+    fn value(&mut self) -> Result<JsonVal> {
+        match self.peek() {
+            Some(b'"') => Ok(JsonVal::Str(self.string()?)),
+            Some(b't') => {
+                ensure!(
+                    self.b[self.i..].starts_with(b"true"),
+                    "journal record: bad literal at byte {}",
+                    self.i
+                );
+                self.i += 4;
+                Ok(JsonVal::Bool(true))
+            }
+            Some(b'f') => {
+                ensure!(
+                    self.b[self.i..].starts_with(b"false"),
+                    "journal record: bad literal at byte {}",
+                    self.i
+                );
+                self.i += 5;
+                Ok(JsonVal::Bool(false))
+            }
+            Some(b'[') => {
+                self.i += 1;
+                if self.peek() == Some(b']') {
+                    self.i += 1;
+                    return Ok(JsonVal::ArrU64(Vec::new()));
+                }
+                if self.peek() == Some(b'"') {
+                    let mut vals = vec![self.string()?];
+                    while self.peek() == Some(b',') {
+                        self.i += 1;
+                        vals.push(self.string()?);
+                    }
+                    self.eat(b']')?;
+                    Ok(JsonVal::ArrStr(vals))
+                } else {
+                    let mut vals = Vec::new();
+                    loop {
+                        match self.integer()? {
+                            JsonVal::U64(v) => vals.push(v),
+                            _ => bail!("journal record: negative value in u64 array"),
+                        }
+                        match self.peek() {
+                            Some(b',') => self.i += 1,
+                            Some(b']') => {
+                                self.i += 1;
+                                break;
+                            }
+                            other => bail!("journal record: bad array byte {other:?}"),
+                        }
+                    }
+                    Ok(JsonVal::ArrU64(vals))
+                }
+            }
+            Some(b'-') | Some(b'0'..=b'9') => self.integer(),
+            other => bail!("journal record: unexpected value byte {other:?}"),
+        }
+    }
+
+    /// Parse one flat `{"k":v,...}` object.
+    fn object(&mut self) -> Result<BTreeMap<String, JsonVal>> {
+        self.eat(b'{')?;
+        let mut map = BTreeMap::new();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(map);
+        }
+        loop {
+            let key = self.string()?;
+            self.eat(b':')?;
+            let val = self.value()?;
+            ensure!(
+                map.insert(key.clone(), val).is_none(),
+                "journal record: duplicate key `{key}`"
+            );
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    break;
+                }
+                other => bail!("journal record: bad object byte {other:?}"),
+            }
+        }
+        ensure!(self.i == self.b.len(), "journal record: trailing bytes");
+        Ok(map)
+    }
+}
+
+fn parse_hex16(s: &str, key: &str) -> Result<u64> {
+    ensure!(
+        s.len() == 16 && s.bytes().all(|b| b.is_ascii_hexdigit()),
+        "journal record: `{key}` is not a 16-hex-digit bit pattern: `{s}`"
+    );
+    Ok(u64::from_str_radix(s, 16).expect("validated hex"))
+}
+
+fn get<'m>(map: &'m BTreeMap<String, JsonVal>, key: &str) -> Result<&'m JsonVal> {
+    map.get(key)
+        .with_context(|| format!("journal record: missing key `{key}`"))
+}
+
+fn get_u64(map: &BTreeMap<String, JsonVal>, key: &str) -> Result<u64> {
+    match get(map, key)? {
+        JsonVal::U64(v) => Ok(*v),
+        other => bail!("journal record: `{key}` is not a u64: {other:?}"),
+    }
+}
+
+fn get_i64(map: &BTreeMap<String, JsonVal>, key: &str) -> Result<i64> {
+    match get(map, key)? {
+        JsonVal::U64(v) => i64::try_from(*v).with_context(|| format!("`{key}` overflows i64")),
+        JsonVal::I64(v) => Ok(*v),
+        other => bail!("journal record: `{key}` is not an integer: {other:?}"),
+    }
+}
+
+fn get_bool(map: &BTreeMap<String, JsonVal>, key: &str) -> Result<bool> {
+    match get(map, key)? {
+        JsonVal::Bool(v) => Ok(*v),
+        other => bail!("journal record: `{key}` is not a bool: {other:?}"),
+    }
+}
+
+fn get_str<'m>(map: &'m BTreeMap<String, JsonVal>, key: &str) -> Result<&'m str> {
+    match get(map, key)? {
+        JsonVal::Str(v) => Ok(v),
+        other => bail!("journal record: `{key}` is not a string: {other:?}"),
+    }
+}
+
+fn get_hex16(map: &BTreeMap<String, JsonVal>, key: &str) -> Result<u64> {
+    parse_hex16(get_str(map, key)?, key)
+}
+
+fn get_arr_u64(map: &BTreeMap<String, JsonVal>, key: &str) -> Result<Vec<u64>> {
+    match get(map, key)? {
+        JsonVal::ArrU64(v) => Ok(v.clone()),
+        other => bail!("journal record: `{key}` is not a u64 array: {other:?}"),
+    }
+}
+
+fn get_bits4(map: &BTreeMap<String, JsonVal>, key: &str) -> Result<[u64; 4]> {
+    match get(map, key)? {
+        JsonVal::ArrStr(v) if v.len() == 4 => Ok([
+            parse_hex16(&v[0], key)?,
+            parse_hex16(&v[1], key)?,
+            parse_hex16(&v[2], key)?,
+            parse_hex16(&v[3], key)?,
+        ]),
+        other => bail!("journal record: `{key}` is not a 4-entry bits array: {other:?}"),
+    }
+}
+
+/// Verify a line's trailing CRC field and return the parsed flat object.
+fn parse_checked_line(line: &str) -> Result<BTreeMap<String, JsonVal>> {
+    let tail = line
+        .rfind(",\"crc\":\"")
+        .context("journal line: missing crc field")?;
+    let prefix = &line[..tail];
+    let crc_part = &line[tail + 8..];
+    ensure!(
+        crc_part.len() == 10 && crc_part.ends_with("\"}"),
+        "journal line: malformed crc suffix"
+    );
+    let recorded = u32::from_str_radix(&crc_part[..8], 16)
+        .context("journal line: crc is not 8 hex digits")?;
+    let computed = checksum(prefix.as_bytes());
+    ensure!(
+        recorded == computed,
+        "journal line: crc mismatch (recorded {recorded:08x}, computed {computed:08x})"
+    );
+    Reader::new(line.as_bytes()).object()
+}
+
+/// Parse one sealed header line.
+pub fn parse_header(line: &str) -> Result<JournalHeader> {
+    let map = parse_checked_line(line)?;
+    ensure!(
+        get_str(&map, "ev")? == "journal",
+        "journal header: first record is not an `ev:journal` header"
+    );
+    let version = get_u64(&map, "version")?;
+    ensure!(
+        version == JOURNAL_VERSION,
+        "journal header: version {version} is not the supported {JOURNAL_VERSION}"
+    );
+    Ok(JournalHeader {
+        version,
+        fingerprint: get_str(&map, "fingerprint")?.to_string(),
+    })
+}
+
+/// Parse one sealed round line.
+pub fn parse_round(line: &str) -> Result<RoundEntry> {
+    let map = parse_checked_line(line)?;
+    ensure!(
+        get_str(&map, "ev")? == "round",
+        "journal record: not an `ev:round` record"
+    );
+    Ok(RoundEntry {
+        iter: get_u64(&map, "iter")?,
+        rng_fp: get_hex16(&map, "rng")?,
+        participants: get_arr_u64(&map, "participants")?,
+        selected: get_arr_u64(&map, "selected")?,
+        frame_bytes: get_u64(&map, "frame_bytes")?,
+        session_mode: match map.get("session_mode") {
+            Some(JsonVal::Str(s)) => Some(s.clone()),
+            Some(other) => bail!("journal record: `session_mode` is not a string: {other:?}"),
+            None => None,
+        },
+        generation: match map.get("generation") {
+            Some(JsonVal::U64(v)) => Some(*v),
+            Some(other) => bail!("journal record: `generation` is not a u64: {other:?}"),
+            None => None,
+        },
+        installs: match map.get("installs") {
+            Some(JsonVal::Bool(v)) => Some(*v),
+            Some(other) => bail!("journal record: `installs` is not a bool: {other:?}"),
+            None => None,
+        },
+        resync_msgs: get_u64(&map, "resync_msgs")?,
+        resync_extra: get_i64(&map, "resync_extra")?,
+        evaluated: get_bool(&map, "evaluated")?,
+        eval_clients: get_u64(&map, "eval_clients")?,
+        m_s: get_u64(&map, "m_s")?,
+        raw_bits: get_bits4(&map, "raw")?,
+        smoothed_bits: get_bits4(&map, "smoothed")?,
+        round_bytes: get_u64(&map, "round_bytes")?,
+        down_bytes: get_u64(&map, "down_bytes")?,
+        up_bytes: get_u64(&map, "up_bytes")?,
+        down_msgs: get_u64(&map, "down_msgs")?,
+        up_msgs: get_u64(&map, "up_msgs")?,
+        sim_secs_bits: get_hex16(&map, "sim_secs")?,
+        bandit_digest: get_hex16(&map, "bandit")?,
+        session_digest: match map.get("session") {
+            Some(JsonVal::Str(s)) => Some(parse_hex16(s, "session")?),
+            Some(other) => bail!("journal record: `session` is not a string: {other:?}"),
+            None => None,
+        },
+    })
+}
+
+// ---------------------------------------------------------------------
+// file I/O
+// ---------------------------------------------------------------------
+
+/// Read and validate a journal file, applying the torn-tail rule (see
+/// the module docs): at most the final line may be dropped, and only
+/// when it is provably an incomplete write. Any earlier damage is a
+/// hard error.
+pub fn read(path: &Path) -> Result<JournalFile> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading journal `{}`", path.display()))?;
+    // split into newline-terminated lines, remembering each line's
+    // start offset; a trailing chunk without '\n' is by definition an
+    // incomplete write (appends always end in '\n' before the flush)
+    let mut lines: Vec<(usize, &[u8])> = Vec::new();
+    let mut start = 0usize;
+    for (i, &b) in bytes.iter().enumerate() {
+        if b == b'\n' {
+            lines.push((start, &bytes[start..i]));
+            start = i + 1;
+        }
+    }
+    let unterminated = (start < bytes.len()).then_some(start);
+    ensure!(
+        !lines.is_empty(),
+        "journal `{}` has no complete header line",
+        path.display()
+    );
+    let header_text = std::str::from_utf8(lines[0].1)
+        .with_context(|| format!("journal `{}`: header is not utf8", path.display()))?;
+    let header = parse_header(header_text)
+        .with_context(|| format!("journal `{}`: invalid header", path.display()))?;
+
+    let mut rounds = Vec::with_capacity(lines.len() - 1);
+    let mut valid_len = lines[0].0 as u64 + lines[0].1.len() as u64 + 1;
+    let mut torn = false;
+    for (idx, (off, raw)) in lines.iter().enumerate().skip(1) {
+        let parsed = std::str::from_utf8(raw)
+            .map_err(anyhow::Error::from)
+            .and_then(|text| parse_round(text));
+        match parsed {
+            Ok(entry) => {
+                rounds.push(entry);
+                valid_len = *off as u64 + raw.len() as u64 + 1;
+            }
+            Err(e) => {
+                let is_tail = idx == lines.len() - 1 && unterminated.is_none();
+                if is_tail {
+                    warn_log!(
+                        "journal `{}`: dropping torn final record (line {}): {e:#}; \
+                         that round will re-run on resume",
+                        path.display(),
+                        idx + 1
+                    );
+                    torn = true;
+                } else {
+                    return Err(e).with_context(|| {
+                        format!(
+                            "journal `{}`: corrupt record at line {} (not the tail — \
+                             this is file damage, not a torn write)",
+                            path.display(),
+                            idx + 1
+                        )
+                    });
+                }
+            }
+        }
+    }
+    if let Some(off) = unterminated {
+        warn_log!(
+            "journal `{}`: dropping unterminated final line ({} bytes — an incomplete \
+             write); that round will re-run on resume",
+            path.display(),
+            bytes.len() - off
+        );
+        torn = true;
+    }
+    Ok(JournalFile {
+        header,
+        rounds,
+        valid_len,
+        torn,
+    })
+}
+
+/// Append-side handle: owns the open file and flushes one complete
+/// line per record, which is what confines crash damage to the tail.
+#[derive(Debug)]
+pub struct JournalWriter {
+    file: std::fs::File,
+}
+
+impl JournalWriter {
+    /// Create (truncating) a fresh journal and durably write its header.
+    pub fn create(path: &Path, fingerprint: &str) -> Result<JournalWriter> {
+        let mut file = std::fs::File::create(path)
+            .with_context(|| format!("creating journal `{}`", path.display()))?;
+        let header = JournalHeader {
+            version: JOURNAL_VERSION,
+            fingerprint: fingerprint.to_string(),
+        };
+        file.write_all(header.serialize().as_bytes())?;
+        file.write_all(b"\n")?;
+        file.flush()?;
+        Ok(JournalWriter { file })
+    }
+
+    /// Reopen an existing journal for appending, first truncating it to
+    /// `valid_len` (dropping a torn tail identified by [`read`]).
+    pub fn append_to(path: &Path, valid_len: u64) -> Result<JournalWriter> {
+        let mut file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(path)
+            .with_context(|| format!("reopening journal `{}`", path.display()))?;
+        file.set_len(valid_len)
+            .with_context(|| format!("truncating journal `{}` torn tail", path.display()))?;
+        file.seek(std::io::SeekFrom::End(0))?;
+        Ok(JournalWriter { file })
+    }
+
+    /// Append one round record (one complete line + flush).
+    pub fn append(&mut self, entry: &RoundEntry) -> Result<()> {
+        self.file.write_all(entry.serialize().as_bytes())?;
+        self.file.write_all(b"\n")?;
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// replay verification + the journal-driven round dump
+// ---------------------------------------------------------------------
+
+/// Refuse to replay under a different configuration: compare the
+/// journal header's fingerprint against the resuming config's, naming
+/// the first differing key (both are canonical `key=value;` lists from
+/// `RunConfig::determinism_fingerprint`).
+pub fn check_fingerprint(journaled: &str, current: &str) -> Result<()> {
+    if journaled == current {
+        return Ok(());
+    }
+    let parse = |s: &str| -> BTreeMap<String, String> {
+        s.split(';')
+            .filter(|kv| !kv.is_empty())
+            .filter_map(|kv| kv.split_once('='))
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect()
+    };
+    let (j, c) = (parse(journaled), parse(current));
+    for (key, jv) in &j {
+        match c.get(key) {
+            Some(cv) if cv == jv => {}
+            Some(cv) => bail!(
+                "cannot resume: config differs from the journaled run at `{key}` \
+                 (journaled {jv}, current {cv})"
+            ),
+            None => bail!("cannot resume: journaled config key `{key}` is unknown here"),
+        }
+    }
+    for key in c.keys() {
+        if !j.contains_key(key) {
+            bail!("cannot resume: config key `{key}` was not journaled");
+        }
+    }
+    bail!("cannot resume: config fingerprint differs from the journaled run");
+}
+
+/// Verify one replayed round against its journaled record, field by
+/// field — the error names the round and the first diverging field, so
+/// a broken resume is diagnosed at the exact state that drifted.
+pub fn verify_round(journaled: &RoundEntry, live: &RoundEntry) -> Result<()> {
+    macro_rules! check {
+        ($field:ident) => {
+            ensure!(
+                journaled.$field == live.$field,
+                "journal replay diverged at round {}: field `{}` — journaled {:?}, \
+                 recomputed {:?}",
+                journaled.iter,
+                stringify!($field),
+                journaled.$field,
+                live.$field
+            );
+        };
+    }
+    check!(iter);
+    check!(rng_fp);
+    check!(participants);
+    check!(selected);
+    check!(frame_bytes);
+    check!(session_mode);
+    check!(generation);
+    check!(installs);
+    check!(resync_msgs);
+    check!(resync_extra);
+    check!(evaluated);
+    check!(eval_clients);
+    check!(m_s);
+    check!(raw_bits);
+    check!(smoothed_bits);
+    check!(round_bytes);
+    check!(down_bytes);
+    check!(up_bytes);
+    check!(down_msgs);
+    check!(up_msgs);
+    check!(sim_secs_bits);
+    check!(bandit_digest);
+    check!(session_digest);
+    Ok(())
+}
+
+/// Render journaled rounds as the exact `round_dump_string` text — the
+/// journal-driven replay mode behind `fedpayload journal-dump` and the
+/// CI determinism §7 leg: the golden round-dump digest re-derived from
+/// the journal alone, no retraining. Byte-identical to the dump the
+/// recording run wrote (the totals line reads the last record's
+/// cumulative ledger fields).
+pub fn render_round_dump(rounds: &[RoundEntry]) -> String {
+    let mut text = String::from(
+        "iter,m_s,raw_precision,raw_recall,raw_f1,raw_map,\
+         smoothed_precision,smoothed_recall,smoothed_f1,smoothed_map,round_bytes\n",
+    );
+    for r in rounds {
+        text.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{},{},{}\n",
+            r.iter,
+            r.m_s,
+            f64_bits(f64::from_bits(r.raw_bits[0])),
+            f64_bits(f64::from_bits(r.raw_bits[1])),
+            f64_bits(f64::from_bits(r.raw_bits[2])),
+            f64_bits(f64::from_bits(r.raw_bits[3])),
+            f64_bits(f64::from_bits(r.smoothed_bits[0])),
+            f64_bits(f64::from_bits(r.smoothed_bits[1])),
+            f64_bits(f64::from_bits(r.smoothed_bits[2])),
+            f64_bits(f64::from_bits(r.smoothed_bits[3])),
+            r.round_bytes,
+        ));
+    }
+    let (down_bytes, up_bytes, down_msgs, up_msgs, sim_secs_bits) = rounds
+        .last()
+        .map(|r| (r.down_bytes, r.up_bytes, r.down_msgs, r.up_msgs, r.sim_secs_bits))
+        .unwrap_or((0, 0, 0, 0, 0f64.to_bits()));
+    text.push_str(&format!(
+        "totals,down_bytes={down_bytes},up_bytes={up_bytes},down_msgs={down_msgs},\
+         up_msgs={up_msgs},sim_secs_bits={sim_secs_bits:016x}\n",
+    ));
+    text
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_entry(iter: u64, with_session: bool) -> RoundEntry {
+        RoundEntry {
+            iter,
+            rng_fp: 0x0123_4567_89ab_cdef ^ iter,
+            participants: vec![3, 1, 7, 2],
+            selected: vec![0, 4, 9],
+            frame_bytes: 1234,
+            session_mode: with_session.then(|| "reuse".to_string()),
+            generation: with_session.then_some(5),
+            installs: with_session.then_some(true),
+            resync_msgs: 2,
+            resync_extra: -17,
+            evaluated: true,
+            eval_clients: 16,
+            m_s: 3,
+            raw_bits: [0.25f64.to_bits(), 0.5f64.to_bits(), 0.125f64.to_bits(), 0.75f64.to_bits()],
+            smoothed_bits: [1, 2, 3, u64::MAX],
+            round_bytes: 5555,
+            down_bytes: 10_000,
+            up_bytes: 9_999,
+            down_msgs: 64,
+            up_msgs: 64,
+            sim_secs_bits: 1.5f64.to_bits(),
+            bandit_digest: 0xdead_beef_cafe_f00d,
+            session_digest: with_session.then_some(0xffff_0000_ffff_0000),
+        }
+    }
+
+    #[test]
+    fn header_roundtrips_with_escapes() {
+        let h = JournalHeader {
+            version: JOURNAL_VERSION,
+            fingerprint: "seed=7;dataset.path=C:\\data\\\"x\";".to_string(),
+        };
+        let line = h.serialize();
+        let back = parse_header(&line).unwrap();
+        assert_eq!(back, h);
+        assert_eq!(back.serialize(), line, "re-serialization identity");
+    }
+
+    #[test]
+    fn round_entry_roundtrips_bit_exactly() {
+        for with_session in [false, true] {
+            let e = sample_entry(42, with_session);
+            let line = e.serialize();
+            let back = parse_round(&line).unwrap();
+            assert_eq!(back, e);
+            assert_eq!(back.serialize(), line);
+        }
+    }
+
+    #[test]
+    fn crc_rejects_any_flip() {
+        let line = sample_entry(1, true).serialize();
+        assert!(parse_round(&line).is_ok());
+        for pos in [10, line.len() / 2, line.len() - 3] {
+            let mut bad = line.clone().into_bytes();
+            bad[pos] ^= 0x01;
+            let bad = String::from_utf8(bad).unwrap();
+            assert!(parse_round(&bad).is_err(), "flip at {pos} accepted");
+        }
+    }
+
+    #[test]
+    fn wrong_event_kind_rejected() {
+        let h = JournalHeader {
+            version: JOURNAL_VERSION,
+            fingerprint: "x=1;".into(),
+        };
+        assert!(parse_round(&h.serialize()).is_err());
+        assert!(parse_header(&sample_entry(1, false).serialize()).is_err());
+    }
+
+    fn write_journal(path: &Path, entries: &[RoundEntry]) {
+        let mut w = JournalWriter::create(path, "fp=1;").unwrap();
+        for e in entries {
+            w.append(e).unwrap();
+        }
+    }
+
+    #[test]
+    fn read_reports_valid_prefix_and_torn_tail() {
+        let dir = std::env::temp_dir().join("fedpayload_journal_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("torn.jsonl");
+        let entries: Vec<RoundEntry> = (1..=3).map(|i| sample_entry(i, i % 2 == 0)).collect();
+        write_journal(&path, &entries);
+        let clean = read(&path).unwrap();
+        assert!(!clean.torn);
+        assert_eq!(clean.rounds, entries);
+        assert_eq!(
+            clean.valid_len,
+            std::fs::metadata(&path).unwrap().len(),
+            "clean file is valid to the end"
+        );
+        // chop a few bytes off the tail: the final record is torn
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 4]).unwrap();
+        let torn = read(&path).unwrap();
+        assert!(torn.torn);
+        assert_eq!(torn.rounds, entries[..2]);
+        // appending after truncation to valid_len yields a clean journal
+        let mut w = JournalWriter::append_to(&path, torn.valid_len).unwrap();
+        w.append(&entries[2]).unwrap();
+        let healed = read(&path).unwrap();
+        assert!(!healed.torn);
+        assert_eq!(healed.rounds, entries);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn newline_terminated_but_corrupt_tail_is_torn_too() {
+        let dir = std::env::temp_dir().join("fedpayload_journal_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("badtail.jsonl");
+        let entries: Vec<RoundEntry> = (1..=2).map(|i| sample_entry(i, false)).collect();
+        write_journal(&path, &entries);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n = bytes.len();
+        bytes[n - 10] ^= 0x04; // inside the final record, newline intact
+        std::fs::write(&path, &bytes).unwrap();
+        let jf = read(&path).unwrap();
+        assert!(jf.torn);
+        assert_eq!(jf.rounds, entries[..1]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_middle_record_is_a_hard_error() {
+        let dir = std::env::temp_dir().join("fedpayload_journal_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("midcorrupt.jsonl");
+        let entries: Vec<RoundEntry> = (1..=3).map(|i| sample_entry(i, false)).collect();
+        write_journal(&path, &entries);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines: Vec<String> = text.lines().map(str::to_string).collect();
+        lines[2] = lines[2].replace("\"iter\":2", "\"iter\":9"); // breaks the crc
+        std::fs::write(&path, lines.join("\n") + "\n").unwrap();
+        let err = read(&path).unwrap_err().to_string();
+        assert!(err.contains("line 3"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_header_is_an_error() {
+        let dir = std::env::temp_dir().join("fedpayload_journal_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("noheader.jsonl");
+        std::fs::write(&path, "").unwrap();
+        assert!(read(&path).is_err());
+        std::fs::write(&path, sample_entry(1, false).serialize() + "\n").unwrap();
+        assert!(read(&path).is_err(), "round record where the header belongs");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn fingerprint_mismatch_names_the_key() {
+        check_fingerprint("seed=1;model.k=25;", "seed=1;model.k=25;").unwrap();
+        let err = check_fingerprint("seed=1;model.k=25;", "seed=2;model.k=25;")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("`seed`"), "{err}");
+        assert!(err.contains("journaled 1") && err.contains("current 2"), "{err}");
+    }
+
+    #[test]
+    fn verify_round_names_the_diverging_field() {
+        let a = sample_entry(7, true);
+        verify_round(&a, &a.clone()).unwrap();
+        let mut b = a.clone();
+        b.bandit_digest ^= 1;
+        let err = verify_round(&a, &b).unwrap_err().to_string();
+        assert!(err.contains("round 7") && err.contains("`bandit_digest`"), "{err}");
+    }
+
+    #[test]
+    fn render_round_dump_matches_the_trainer_renderer_shape() {
+        let rounds: Vec<RoundEntry> = (1..=2).map(|i| sample_entry(i, false)).collect();
+        let text = render_round_dump(&rounds);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4); // header + 2 rounds + totals
+        assert!(lines[0].starts_with("iter,m_s,raw_precision"));
+        assert!(lines[1].starts_with("1,3,"));
+        assert!(lines[3].starts_with("totals,down_bytes=10000,up_bytes=9999,"));
+        assert!(lines[3].ends_with(&format!("sim_secs_bits={:016x}", 1.5f64.to_bits())));
+        // empty journal: zeroed totals, still well-formed
+        let empty = render_round_dump(&[]);
+        assert_eq!(empty.lines().count(), 2);
+        assert!(empty.contains("totals,down_bytes=0,"));
+        assert!(empty.contains("sim_secs_bits=0000000000000000"));
+    }
+}

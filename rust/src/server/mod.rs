@@ -24,6 +24,8 @@
 //! 6. aggregates the contributing clients' test metrics into the global
 //!    metric window (paper §6.2).
 
+pub mod journal;
+
 use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::rc::Rc;
@@ -121,6 +123,9 @@ pub struct TrainReport {
     /// Structured events the flight recorder emitted (0 with tracing
     /// off).
     pub trace_events: u64,
+    /// Rounds reconstructed by verified journal replay (`--resume`)
+    /// rather than fresh execution — 0 for an uninterrupted run.
+    pub replayed_rounds: u64,
 }
 
 impl TrainReport {
@@ -178,6 +183,20 @@ pub struct Trainer {
     registry: Registry,
     /// Prometheus snapshot destination, rewritten after every round.
     metrics_out: Option<std::path::PathBuf>,
+    /// Round journal appender (`--journal`): one checksummed record per
+    /// completed round. `None` with journaling off; appends are
+    /// suppressed while replaying an existing journal in place (the
+    /// records are already on disk) unless `journal_rewrite` is set.
+    journal: Option<journal::JournalWriter>,
+    /// Journaled rounds awaiting verified replay (`--resume`), front =
+    /// next. Popped at round entry; the round then re-executes and every
+    /// recorded field is checked against the fresh result.
+    replay: VecDeque<journal::RoundEntry>,
+    /// Rounds replayed-and-verified so far.
+    replayed: u64,
+    /// `--resume X --journal Y` with different paths: a complete fresh
+    /// journal is being written at Y, so replayed rounds append too.
+    journal_rewrite: bool,
     // reused per-round scratch
     sel_pos: Vec<i32>,
     // phase stopwatches; solve/grad/eval/codec absorb the worker lanes'
@@ -295,6 +314,56 @@ impl Trainer {
             }
             _ => None,
         };
+        // --journal / --resume: open the round journal and, when
+        // resuming, queue the journaled rounds for verified replay.
+        // Recovery is re-execution — determinism re-derives the model,
+        // bandit and session state; the journal verifies every step
+        // (see `server::journal` module docs).
+        let fingerprint = cfg.determinism_fingerprint();
+        let mut replay: VecDeque<journal::RoundEntry> = VecDeque::new();
+        let mut journal_rewrite = false;
+        let journal_writer = match (&cfg.journal.resume, &cfg.journal.path) {
+            (Some(resume), maybe_out) => {
+                let resume_path = std::path::Path::new(resume);
+                let jf = journal::read(resume_path)?;
+                journal::check_fingerprint(&jf.header.fingerprint, &fingerprint)?;
+                let mut rounds = jf.rounds;
+                if rounds.len() > cfg.train.iterations {
+                    warn_log!(
+                        "journal `{resume}` holds {} rounds but the run is configured \
+                         for {} iterations; replaying only the first {}",
+                        rounds.len(),
+                        cfg.train.iterations,
+                        cfg.train.iterations
+                    );
+                    rounds.truncate(cfg.train.iterations);
+                }
+                info!(
+                    "resume: replaying {} journaled round(s) from `{resume}`",
+                    rounds.len()
+                );
+                replay = rounds.into();
+                match maybe_out {
+                    Some(out) if out != resume => {
+                        // fresh journal at a new path: replayed rounds
+                        // re-append, producing a complete rewrite
+                        journal_rewrite = true;
+                        Some(journal::JournalWriter::create(
+                            std::path::Path::new(out),
+                            &fingerprint,
+                        )?)
+                    }
+                    // same path (or no --journal): append in place past
+                    // the valid prefix, dropping any torn tail
+                    _ => Some(journal::JournalWriter::append_to(resume_path, jf.valid_len)?),
+                }
+            }
+            (None, Some(out)) => Some(journal::JournalWriter::create(
+                std::path::Path::new(out),
+                &fingerprint,
+            )?),
+            (None, None) => None,
+        };
         Ok(Trainer {
             selector: make_selector(cfg.bandit.strategy, m, &cfg.bandit),
             reward: RewardEngine::new(m, cfg.model.k, cfg.bandit.gamma, cfg.model.beta2 as f64)
@@ -325,6 +394,10 @@ impl Trainer {
             tracer,
             registry: Registry::new(),
             metrics_out: cfg.trace.metrics_out.as_ref().map(std::path::PathBuf::from),
+            journal: journal_writer,
+            replay,
+            replayed: 0,
+            journal_rewrite,
             sw_select: Stopwatch::new("select"),
             sw_stage: Stopwatch::new("stage"),
             sw_solve: Stopwatch::new("solve"),
@@ -487,6 +560,7 @@ impl Trainer {
             m,
             m_s: self.cfg.selected_items(m),
             trace_events: self.tracer.as_ref().map_or(0, |t| t.events()),
+            replayed_rounds: self.replayed,
         })
     }
 
@@ -502,7 +576,34 @@ impl Trainer {
     /// One FL iteration (Alg. 1 body). Public so integration tests can
     /// step the trainer manually.
     pub fn round(&mut self) -> Result<RoundRecord> {
+        // journal: fingerprint the RNG stream *before* any draw — the
+        // round's entry state, and the first thing replay verifies: if
+        // the stream position already diverged, every downstream check
+        // would fail anyway, so fail here with the sharpest signal.
+        let journal_active = self.journal.is_some() || !self.replay.is_empty();
+        let rng_fp = if journal_active {
+            self.rng.state_fingerprint()
+        } else {
+            0
+        };
+        let expected = self.replay.pop_front();
         self.t += 1;
+        if let Some(e) = &expected {
+            anyhow::ensure!(
+                e.iter == self.t,
+                "journal replay diverged entering round {}: the journal holds round {} \
+                 at this position",
+                self.t,
+                e.iter
+            );
+            anyhow::ensure!(
+                e.rng_fp == rng_fp,
+                "journal replay diverged entering round {}: RNG stream fingerprint \
+                 {:016x} in the journal vs {rng_fp:016x} recomputed",
+                self.t,
+                e.rng_fp
+            );
+        }
         let m = self.split.train.num_items();
         let k = self.cfg.model.k;
         let m_s = match self.cfg.bandit.strategy {
@@ -924,6 +1025,63 @@ impl Trainer {
             if let Some(path) = self.metrics_out.clone() {
                 write_metrics_snapshot(&path, &self.registry, self.t as usize)
                     .context("writing metrics snapshot")?;
+            }
+        }
+        if journal_active {
+            let entry = journal::RoundEntry {
+                iter: self.t,
+                rng_fp,
+                participants: participants.iter().map(|&c| c as u64).collect(),
+                selected: selected.iter().map(|&i| u64::from(i)).collect(),
+                frame_bytes: down_bytes,
+                session_mode: session_frame.as_ref().map(|e| e.mode.name().to_string()),
+                generation: session_frame.as_ref().map(|e| u64::from(e.generation)),
+                installs: session_frame.as_ref().map(|e| e.installs_generation),
+                resync_msgs: self.session_stats.resync_msgs,
+                resync_extra: self.session_stats.resync_extra_bytes,
+                evaluated: evaluate,
+                eval_clients: round_acc.count() as u64,
+                m_s: record.m_s as u64,
+                raw_bits: [
+                    record.raw.precision.to_bits(),
+                    record.raw.recall.to_bits(),
+                    record.raw.f1.to_bits(),
+                    record.raw.map.to_bits(),
+                ],
+                smoothed_bits: [
+                    record.smoothed.precision.to_bits(),
+                    record.smoothed.recall.to_bits(),
+                    record.smoothed.f1.to_bits(),
+                    record.smoothed.map.to_bits(),
+                ],
+                round_bytes: record.round_bytes,
+                down_bytes: self.ledger.down_bytes,
+                up_bytes: self.ledger.up_bytes,
+                down_msgs: self.ledger.down_msgs,
+                up_msgs: self.ledger.up_msgs,
+                sim_secs_bits: self.ledger.sim_secs.to_bits(),
+                bandit_digest: self.selector.state_digest(),
+                session_digest: self.vq_session.as_ref().map(|s| s.state_digest()),
+            };
+            match expected {
+                // replayed round: verify every recorded field against
+                // the fresh re-execution; append only when rewriting the
+                // journal to a new path (in-place resume already holds
+                // these records)
+                Some(journaled) => {
+                    journal::verify_round(&journaled, &entry)?;
+                    self.replayed += 1;
+                    if self.journal_rewrite {
+                        if let Some(j) = self.journal.as_mut() {
+                            j.append(&entry).context("appending journal record")?;
+                        }
+                    }
+                }
+                None => {
+                    if let Some(j) = self.journal.as_mut() {
+                        j.append(&entry).context("appending journal record")?;
+                    }
+                }
             }
         }
         self.history.push(record.clone());

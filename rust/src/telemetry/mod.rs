@@ -95,6 +95,62 @@ macro_rules! warn_log {
     ($($arg:tt)*) => { $crate::log!($crate::telemetry::Level::Warn, $($arg)*) };
 }
 
+/// Streaming FNV-1a 64 digest builder — the 64-bit sibling of
+/// `wire::frame::checksum`. The round journal (`server::journal`) uses
+/// it to fingerprint mutable coordinator state (RNG stream position,
+/// bandit posteriors, codebook sessions) so a `--resume` replay can
+/// detect divergence at the round where it happens rather than at the
+/// final dump diff. Not cryptographic: a drift detector, not a MAC.
+#[derive(Debug, Clone)]
+pub struct Fnv64(u64);
+
+impl Fnv64 {
+    /// Digest at the FNV-1a 64 offset basis.
+    pub fn new() -> Fnv64 {
+        Fnv64(0xcbf2_9ce4_8422_2325)
+    }
+
+    /// Fold raw bytes in.
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    /// Fold one byte in.
+    pub fn write_u8(&mut self, v: u8) {
+        self.write(&[v]);
+    }
+
+    /// Fold a u64 in (little-endian bytes).
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    /// Fold a u128 in (little-endian bytes).
+    pub fn write_u128(&mut self, v: u128) {
+        self.write(&v.to_le_bytes());
+    }
+
+    /// Fold an f64 in by exact bit pattern (never by value — `-0.0`
+    /// and `0.0` must digest differently for replay verification).
+    pub fn write_f64(&mut self, v: f64) {
+        self.write_u64(v.to_bits());
+    }
+
+    /// The digest so far.
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Fnv64::new()
+    }
+}
+
 /// A named wall-clock stopwatch accumulating across start/stop cycles.
 /// The trainer keeps one per phase (select/transmit/compute/aggregate)
 /// so EXPERIMENTS.md §Perf can attribute time per stage.
@@ -192,6 +248,39 @@ mod tests {
         assert_eq!(sw.count(), 6);
         assert!((sw.total_secs() - 0.003).abs() < 1e-12);
         assert!((sw.mean_ms() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fnv64_matches_reference_vectors() {
+        // Published FNV-1a 64 test vectors (draft-eastlake-fnv).
+        let mut h = Fnv64::new();
+        assert_eq!(h.finish(), 0xcbf2_9ce4_8422_2325, "offset basis");
+        h.write(b"a");
+        assert_eq!(h.finish(), 0xaf63_dc4c_8601_ec8c);
+        let mut h = Fnv64::new();
+        h.write(b"foobar");
+        assert_eq!(h.finish(), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn fnv64_field_writes_are_position_sensitive() {
+        let digest = |f: &dyn Fn(&mut Fnv64)| {
+            let mut h = Fnv64::new();
+            f(&mut h);
+            h.finish()
+        };
+        assert_ne!(
+            digest(&|h| {
+                h.write_u64(1);
+                h.write_u64(2);
+            }),
+            digest(&|h| {
+                h.write_u64(2);
+                h.write_u64(1);
+            })
+        );
+        assert_ne!(digest(&|h| h.write_f64(0.0)), digest(&|h| h.write_f64(-0.0)));
+        assert_ne!(digest(&|h| h.write_u128(7)), digest(&|h| h.write_u64(7)));
     }
 
     #[test]

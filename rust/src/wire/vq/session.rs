@@ -535,6 +535,45 @@ impl VqSession {
         }
     }
 
+    /// FNV-64 digest of the full session state: configuration ids, the
+    /// cached codebook (generation, geometry, scales and entries by
+    /// exact bit pattern) and the retained last-encode artifacts. The
+    /// round journal records this each round so a `--resume` replay
+    /// verifies the reconstructed session — generation counters alone
+    /// would miss a centroid mismatch that only bites at the next
+    /// delta frame.
+    pub fn state_digest(&self) -> u64 {
+        let mut h = crate::telemetry::Fnv64::new();
+        h.write_u8(self.precision.id());
+        h.write_u8(self.entropy.id());
+        match &self.state {
+            Some(s) => {
+                h.write_u8(1);
+                h.write_u64(s.generation as u64);
+                h.write_u64(s.c_count as u64);
+                h.write_u64(s.cols as u64);
+                for book in &s.books {
+                    h.write_u64(book.scale_bits as u64);
+                    for &q in &book.entries {
+                        h.write_u8(q as u8);
+                    }
+                }
+            }
+            None => h.write_u8(0),
+        }
+        match &self.last {
+            Some(l) => {
+                h.write_u8(1);
+                h.write_u64(l.generation as u64);
+                h.write_u64(l.rows as u64);
+                h.write_u64(l.cols as u64);
+                h.write(&l.full_payload);
+            }
+            None => h.write_u8(0),
+        }
+        h.finish()
+    }
+
     /// The resync frame for the last encoded download: a **full** v2
     /// frame carrying the current codebook and the current round's row
     /// records. Decodes to values bit-identical to the broadcast frame
@@ -1020,6 +1059,31 @@ mod tests {
         assert_eq!(d2.rationale.full_bytes, None, "delta mode skips the full seal");
         assert_eq!(d2.rationale.delta_bytes, Some(d2.frame.len() as u64));
         assert_eq!(d2.rationale.sse_reuse, None, "delta mode never evaluates reuse");
+    }
+
+    #[test]
+    fn state_digest_tracks_session_evolution() {
+        let (rows, cols) = (48usize, 25usize);
+        let q1 = gaussian(rows, cols, 71);
+        let q2 = drifted(&q1, 0.002, 72);
+        let mut a = VqSession::new(Precision::Vq8, EntropyMode::Full, ReuseMode::Auto).unwrap();
+        let b = a.clone();
+        assert_eq!(a.state_digest(), b.state_digest(), "clones digest equally");
+        let fresh = a.state_digest();
+        a.encode_dense(&q1, rows, cols).unwrap();
+        let after_full = a.state_digest();
+        assert_ne!(fresh, after_full, "installing a codebook must move the digest");
+        // a reuse round keeps the codebook but refreshes the resync
+        // artifacts — the digest must see that too
+        let f2 = a.encode_dense(&q2, rows, cols).unwrap();
+        assert_eq!(f2.mode, SessionMode::Reuse);
+        assert_ne!(after_full, a.state_digest());
+        // replaying the same inputs on a fresh session reproduces the
+        // digest exactly (what --resume relies on)
+        let mut replay = VqSession::new(Precision::Vq8, EntropyMode::Full, ReuseMode::Auto).unwrap();
+        replay.encode_dense(&q1, rows, cols).unwrap();
+        replay.encode_dense(&q2, rows, cols).unwrap();
+        assert_eq!(replay.state_digest(), a.state_digest());
     }
 
     #[test]

@@ -288,6 +288,108 @@ fn train_with_trace_out_and_trace_digest() {
 }
 
 #[test]
+fn train_with_journal_resume_and_journal_dump() {
+    let dir = std::env::temp_dir().join("fedpayload_cli_journal");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let journal = dir.join("run.jsonl");
+    let full_dump = dir.join("rounds.csv");
+    let common = [
+        "--dataset",
+        "synthetic-small",
+        "--backend",
+        "reference",
+        "--seed",
+        "2029",
+        "--set",
+        "dataset.users=48",
+        "--set",
+        "dataset.items=96",
+        "--set",
+        "dataset.interactions=600",
+        "--set",
+        "train.theta=12",
+    ];
+    // straight 6-round run, journaled + dumped
+    let mut args = vec!["train", "--iterations", "6"];
+    args.extend_from_slice(&common);
+    args.extend_from_slice(&["--journal", journal.to_str().unwrap()]);
+    args.extend_from_slice(&["--dump-rounds", full_dump.to_str().unwrap()]);
+    let (ok, text) = run(&args);
+    assert!(ok, "{text}");
+    assert!(text.contains("round journal:"), "{text}");
+    // journal-dump re-renders the exact --dump-rounds text, no retraining
+    let (ok, rendered) = run(&["journal-dump", journal.to_str().unwrap()]);
+    assert!(ok, "{rendered}");
+    assert_eq!(rendered, std::fs::read_to_string(&full_dump).unwrap());
+    // killed run (4 of 6 rounds) + resume: same trajectory, same journal
+    let part = dir.join("part.jsonl");
+    let mut args = vec!["train", "--iterations", "4"];
+    args.extend_from_slice(&common);
+    args.extend_from_slice(&["--journal", part.to_str().unwrap()]);
+    let (ok, text) = run(&args);
+    assert!(ok, "{text}");
+    let resumed_dump = dir.join("rounds_resumed.csv");
+    let mut args = vec!["train", "--iterations", "6"];
+    args.extend_from_slice(&common);
+    args.extend_from_slice(&["--resume", part.to_str().unwrap()]);
+    args.extend_from_slice(&["--dump-rounds", resumed_dump.to_str().unwrap()]);
+    let (ok, text) = run(&args);
+    assert!(ok, "{text}");
+    assert!(text.contains("resumed: 4 round(s)"), "{text}");
+    assert_eq!(
+        std::fs::read_to_string(&resumed_dump).unwrap(),
+        std::fs::read_to_string(&full_dump).unwrap()
+    );
+    assert_eq!(
+        std::fs::read(&part).unwrap(),
+        std::fs::read(&journal).unwrap(),
+        "resumed journal must converge to the straight run's bytes"
+    );
+    // a mismatched config must refuse to resume, naming the key
+    let mut args = vec!["train", "--iterations", "6"];
+    args.extend_from_slice(&common);
+    args.extend_from_slice(&["--resume", part.to_str().unwrap(), "--seed", "1"]);
+    let (ok, text) = run(&args);
+    assert!(!ok, "resume with a different seed must fail");
+    assert!(text.contains("seed"), "{text}");
+    // misuse fails cleanly
+    let (ok, _) = run(&["journal-dump"]);
+    assert!(!ok, "journal-dump without a path must fail");
+    let (ok, text) = run(&["journal-dump", full_dump.to_str().unwrap()]);
+    assert!(!ok, "journal-dump on a CSV must fail");
+    assert!(text.contains("header"), "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn output_flags_with_missing_parent_dirs_fail_at_startup() {
+    // each flag must fail fast, before any training happens, and the
+    // error must name the flag and the missing directory
+    for flag in ["--journal", "--trace-out", "--metrics-out"] {
+        let (ok, text) = run(&[
+            "train",
+            "--dataset",
+            "synthetic-small",
+            "--backend",
+            "reference",
+            "--iterations",
+            "2",
+            flag,
+            "/nonexistent_fedpayload_dir/out.file",
+        ]);
+        assert!(!ok, "{flag} with a missing parent dir must fail");
+        assert!(text.contains(flag), "error must name {flag}: {text}");
+        assert!(text.contains("/nonexistent_fedpayload_dir"), "{text}");
+        assert!(!text.contains("run complete"), "{flag}: training ran anyway");
+    }
+    // --resume on a nonexistent journal fails the same way
+    let (ok, text) = run(&["train", "--resume", "/nonexistent_fedpayload_dir/j.jsonl"]);
+    assert!(!ok);
+    assert!(text.contains("--resume"), "{text}");
+}
+
+#[test]
 fn info_reports_auto_topk() {
     let (ok, text) = run(&["info", "--sparse-topk", "auto", "--codec", "vq4"]);
     assert!(ok, "{text}");

@@ -1,0 +1,331 @@
+//! Event-sourced coordinator e2e: the round journal makes a killed run
+//! resumable with **bit-identical** results. The nets:
+//!
+//! 1. a straight run's journal re-renders the exact `--dump-rounds`
+//!    text (the journal-driven replay mode — no retraining) and pins
+//!    the config determinism fingerprint;
+//! 2. kill-and-resume at threads 1 AND 4: stop after round r, resume,
+//!    and the round dumps, decision-trace digests and journal bytes all
+//!    match the uninterrupted run — including across thread counts;
+//! 3. a resume-at-every-r sweep (r = 0..=iterations);
+//! 4. torn-tail recovery: a truncated final record is dropped and that
+//!    round re-runs, converging to the same bytes;
+//! 5. damage and misuse are hard errors: corrupt middle records,
+//!    config-fingerprint mismatches;
+//! 6. resume extends past the journaled horizon, rewrites to a fresh
+//!    path, and covers the stateful vq codebook-session codec.
+
+use std::path::{Path, PathBuf};
+
+use fedpayload::config::{RunConfig, Strategy};
+use fedpayload::server::{journal, round_dump_string, TrainReport, Trainer};
+use fedpayload::telemetry::trace::trace_digest;
+use fedpayload::telemetry::{TraceLevel, Tracer};
+use fedpayload::wire::{EntropyMode, Precision, ReuseMode};
+
+const ITERS: usize = 6;
+
+/// Small single-batch workload for the fast single-threaded nets.
+fn small_cfg() -> RunConfig {
+    let mut cfg = RunConfig::paper_defaults();
+    cfg.apply_dataset_preset("synthetic-small").unwrap();
+    cfg.dataset.users = 48;
+    cfg.dataset.items = 96;
+    cfg.dataset.interactions = 900;
+    cfg.train.theta = 16;
+    cfg.train.iterations = ITERS;
+    cfg.train.payload_fraction = 0.25;
+    cfg.runtime.backend = "reference".into();
+    cfg
+}
+
+/// Multi-batch workload (160 clients / 64 per batch = 3 batches) so the
+/// threads=4 leg exercises genuinely racing lanes.
+fn parallel_cfg(threads: usize) -> RunConfig {
+    let mut cfg = small_cfg();
+    cfg.dataset.users = 160;
+    cfg.dataset.interactions = 3000;
+    cfg.train.theta = 160;
+    cfg.train.iterations = 5;
+    cfg.runtime.threads = threads;
+    cfg
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fedpayload_journal_{name}"));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn path_str(p: &Path) -> String {
+    p.to_string_lossy().into_owned()
+}
+
+/// Uninterrupted journaling run; returns the report and the decision
+/// trace digest.
+fn run_straight(cfg: &RunConfig, journal_path: &Path) -> (TrainReport, String) {
+    let mut cfg = cfg.clone();
+    cfg.journal.path = Some(path_str(journal_path));
+    let mut tr = Trainer::from_config(&cfg).unwrap();
+    tr.install_tracer(Tracer::in_memory(TraceLevel::Decision));
+    let report = tr.run().unwrap();
+    let mut trace = tr.tracer().unwrap().lines().join("\n");
+    trace.push('\n');
+    (report, trace_digest(&trace))
+}
+
+/// The "kill": journal `rounds` rounds, then drop the trainer without
+/// finishing the run.
+fn run_killed(cfg: &RunConfig, journal_path: &Path, rounds: usize) {
+    let mut cfg = cfg.clone();
+    cfg.journal.path = Some(path_str(journal_path));
+    let mut tr = Trainer::from_config(&cfg).unwrap();
+    for _ in 0..rounds {
+        tr.round().unwrap();
+    }
+}
+
+/// Resume from `resume` (optionally rewriting to a fresh `journal`
+/// path) and run to the configured horizon.
+fn run_resumed(
+    cfg: &RunConfig,
+    resume: &Path,
+    journal_out: Option<&Path>,
+) -> (TrainReport, String) {
+    let mut cfg = cfg.clone();
+    cfg.journal.resume = Some(path_str(resume));
+    cfg.journal.path = journal_out.map(path_str);
+    let mut tr = Trainer::from_config(&cfg).unwrap();
+    tr.install_tracer(Tracer::in_memory(TraceLevel::Decision));
+    let report = tr.run().unwrap();
+    let mut trace = tr.tracer().unwrap().lines().join("\n");
+    trace.push('\n');
+    (report, trace_digest(&trace))
+}
+
+#[test]
+fn journal_rerenders_the_round_dump_and_pins_the_fingerprint() {
+    let dir = tmpdir("render");
+    let jpath = dir.join("straight.jsonl");
+    let cfg = small_cfg();
+    let (report, _) = run_straight(&cfg, &jpath);
+    let jf = journal::read(&jpath).unwrap();
+    assert!(!jf.torn);
+    assert_eq!(jf.header.fingerprint, cfg.determinism_fingerprint());
+    assert_eq!(jf.rounds.len(), ITERS);
+    // the journal-driven replay mode: the exact --dump-rounds text,
+    // re-derived from the journal alone
+    assert_eq!(journal::render_round_dump(&jf.rounds), round_dump_string(&report));
+    // rounds carry the replay-verification state: a nonzero RNG stream
+    // fingerprint and the BTS posterior digest
+    for r in &jf.rounds {
+        assert_ne!(r.rng_fp, 0);
+        assert_ne!(r.bandit_digest, 0, "bts is stateful; digest must move off 0");
+        assert!(r.session_digest.is_none(), "no session for a scalar codec");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn kill_and_resume_is_bit_identical_at_one_and_four_threads() {
+    let dir = tmpdir("killresume");
+    let mut dump_t1: Option<String> = None;
+    for threads in [1usize, 4] {
+        let cfg = parallel_cfg(threads);
+        let straight_path = dir.join(format!("straight_t{threads}.jsonl"));
+        let (straight, straight_digest) = run_straight(&cfg, &straight_path);
+        let part_path = dir.join(format!("part_t{threads}.jsonl"));
+        run_killed(&cfg, &part_path, 3);
+        assert_eq!(journal::read(&part_path).unwrap().rounds.len(), 3);
+        let (resumed, resumed_digest) = run_resumed(&cfg, &part_path, None);
+        assert_eq!(resumed.replayed_rounds, 3, "threads={threads}");
+        // bit-identical: round dumps, decision-trace digests, and the
+        // journal file itself (in-place resume appends rounds 4..)
+        assert_eq!(
+            round_dump_string(&resumed),
+            round_dump_string(&straight),
+            "threads={threads}: resumed dump diverged"
+        );
+        assert_eq!(
+            resumed_digest, straight_digest,
+            "threads={threads}: resumed trace digest diverged"
+        );
+        assert_eq!(
+            std::fs::read(&part_path).unwrap(),
+            std::fs::read(&straight_path).unwrap(),
+            "threads={threads}: resumed journal bytes diverged"
+        );
+        // and across thread counts: the whole artifact set is invariant
+        match &dump_t1 {
+            None => dump_t1 = Some(round_dump_string(&straight)),
+            Some(d1) => assert_eq!(
+                *d1,
+                round_dump_string(&straight),
+                "threads=4 diverged from threads=1"
+            ),
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resume_at_every_round_reproduces_the_straight_run() {
+    let dir = tmpdir("sweep");
+    let cfg = small_cfg();
+    let straight_path = dir.join("straight.jsonl");
+    let (straight, _) = run_straight(&cfg, &straight_path);
+    let straight_bytes = std::fs::read(&straight_path).unwrap();
+    let dump = round_dump_string(&straight);
+    // r = 0 (header-only journal) through r = ITERS (pure replay)
+    for r in 0..=ITERS {
+        let part = dir.join(format!("part_r{r}.jsonl"));
+        run_killed(&cfg, &part, r);
+        let (resumed, _) = run_resumed(&cfg, &part, None);
+        assert_eq!(resumed.replayed_rounds, r as u64, "resume point r={r}");
+        assert_eq!(round_dump_string(&resumed), dump, "resume point r={r}");
+        assert_eq!(
+            std::fs::read(&part).unwrap(),
+            straight_bytes,
+            "resume point r={r}: journal bytes diverged"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn torn_tail_is_dropped_and_that_round_reruns() {
+    let dir = tmpdir("torn");
+    let cfg = small_cfg();
+    let straight_path = dir.join("straight.jsonl");
+    let (straight, _) = run_straight(&cfg, &straight_path);
+    let part = dir.join("part.jsonl");
+    run_killed(&cfg, &part, 4);
+    // tear the final record mid-line, as a crash during write would
+    let bytes = std::fs::read(&part).unwrap();
+    std::fs::write(&part, &bytes[..bytes.len() - 7]).unwrap();
+    let jf = journal::read(&part).unwrap();
+    assert!(jf.torn);
+    assert_eq!(jf.rounds.len(), 3, "only the torn record is dropped");
+    let (resumed, _) = run_resumed(&cfg, &part, None);
+    // round 4 re-ran instead of replaying; the outcome is identical
+    assert_eq!(resumed.replayed_rounds, 3);
+    assert_eq!(round_dump_string(&resumed), round_dump_string(&straight));
+    assert_eq!(
+        std::fs::read(&part).unwrap(),
+        std::fs::read(&straight_path).unwrap(),
+        "healed journal must converge to the straight run's bytes"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_middle_record_fails_resume_loudly() {
+    let dir = tmpdir("corrupt");
+    let cfg = small_cfg();
+    let part = dir.join("part.jsonl");
+    run_killed(&cfg, &part, 4);
+    let text = std::fs::read_to_string(&part).unwrap();
+    let mut lines: Vec<String> = text.lines().map(str::to_string).collect();
+    lines[2] = lines[2].replace("\"iter\":2", "\"iter\":8");
+    std::fs::write(&part, lines.join("\n") + "\n").unwrap();
+    let mut rcfg = cfg.clone();
+    rcfg.journal.resume = Some(path_str(&part));
+    let err = Trainer::from_config(&rcfg).unwrap_err().to_string();
+    assert!(err.contains("line 3"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn config_mismatch_fails_resume_naming_the_key() {
+    let dir = tmpdir("mismatch");
+    let cfg = small_cfg();
+    let part = dir.join("part.jsonl");
+    run_killed(&cfg, &part, 2);
+    let mut bad = cfg.clone();
+    bad.seed += 1;
+    bad.journal.resume = Some(path_str(&part));
+    let err = Trainer::from_config(&bad).unwrap_err().to_string();
+    assert!(err.contains("cannot resume") && err.contains("`seed`"), "{err}");
+    // iterations are deliberately OUTSIDE the fingerprint: extending the
+    // horizon is the whole point of resume, not a config mismatch
+    let mut longer = cfg.clone();
+    longer.train.iterations = ITERS + 3;
+    longer.journal.resume = Some(path_str(&part));
+    Trainer::from_config(&longer).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resume_extends_past_the_journaled_horizon() {
+    let dir = tmpdir("extend");
+    let cfg = small_cfg();
+    let jpath = dir.join("run.jsonl");
+    run_straight(&cfg, &jpath);
+    let mut longer = cfg.clone();
+    longer.train.iterations = ITERS + 3;
+    let (resumed, _) = run_resumed(&longer, &jpath, None);
+    assert_eq!(resumed.replayed_rounds, ITERS as u64);
+    assert_eq!(resumed.history.len(), ITERS + 3);
+    // the in-place journal grew with the fresh rounds and still
+    // re-renders the extended dump exactly
+    let jf = journal::read(&jpath).unwrap();
+    assert!(!jf.torn);
+    assert_eq!(jf.rounds.len(), ITERS + 3);
+    assert_eq!(journal::render_round_dump(&jf.rounds), round_dump_string(&resumed));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resume_can_rewrite_a_complete_fresh_journal() {
+    let dir = tmpdir("rewrite");
+    let cfg = small_cfg();
+    let straight_path = dir.join("straight.jsonl");
+    run_straight(&cfg, &straight_path);
+    let part = dir.join("part.jsonl");
+    run_killed(&cfg, &part, 3);
+    let fresh = dir.join("fresh.jsonl");
+    let (resumed, _) = run_resumed(&cfg, &part, Some(&fresh));
+    assert_eq!(resumed.replayed_rounds, 3);
+    // the fresh journal is complete (replayed rounds re-appended) and
+    // byte-identical to the uninterrupted run's journal; the partial
+    // journal is left untouched
+    assert_eq!(
+        std::fs::read(&fresh).unwrap(),
+        std::fs::read(&straight_path).unwrap()
+    );
+    assert_eq!(journal::read(&part).unwrap().rounds.len(), 3);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn session_codec_journals_and_resumes_bit_identically() {
+    let dir = tmpdir("session");
+    // the stateful path: vq codebook sessions + entropy coding — resume
+    // must reconstruct the generation-tagged codebook cache exactly
+    let mut cfg = parallel_cfg(1);
+    cfg.train.payload_fraction = 1.0;
+    cfg.bandit.strategy = Strategy::Full;
+    cfg.codec.precision = Precision::Vq8;
+    cfg.codec.entropy = EntropyMode::Full;
+    cfg.codec.codebook_reuse = ReuseMode::Auto;
+    let straight_path = dir.join("straight.jsonl");
+    let (straight, straight_digest) = run_straight(&cfg, &straight_path);
+    let jf = journal::read(&straight_path).unwrap();
+    for r in &jf.rounds {
+        assert!(r.session_mode.is_some(), "session rounds must record their mode");
+        assert!(r.session_digest.is_some(), "session rounds must digest the session");
+    }
+    let part = dir.join("part.jsonl");
+    run_killed(&cfg, &part, 2);
+    let (resumed, resumed_digest) = run_resumed(&cfg, &part, None);
+    assert_eq!(resumed.replayed_rounds, 2);
+    assert_eq!(round_dump_string(&resumed), round_dump_string(&straight));
+    assert_eq!(resumed_digest, straight_digest);
+    assert_eq!(resumed.session, straight.session, "session counters diverged");
+    assert_eq!(
+        std::fs::read(&part).unwrap(),
+        std::fs::read(&straight_path).unwrap()
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

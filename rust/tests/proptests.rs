@@ -13,6 +13,7 @@ use fedpayload::metrics::{
 use fedpayload::reward::RewardEngine;
 use fedpayload::rng::Rng;
 use fedpayload::runtime::{merge_outcomes, plan_chunks, BatchOutcome, RoundAggregate};
+use fedpayload::server::journal;
 use fedpayload::simnet::TrafficLedger;
 use fedpayload::wire::{
     self, entropy, make_codec, make_codec_with, EntropyMode, Precision, ReuseMode,
@@ -980,4 +981,203 @@ fn prop_merge_helpers_match_sequential_folds() {
         let total: u64 = lens.iter().sum();
         assert_eq!(led.up_bytes, total, "seed {seed}");
     }
+}
+
+// ---------------------------------------------------------------------
+// round journal (server::journal)
+// ---------------------------------------------------------------------
+
+/// Random journal round record with every optional field flipped
+/// independently and full-range 64-bit payloads (the hex bit-pattern
+/// encoding must survive values past 2^53, where JSON numbers lose).
+fn random_journal_entry(rng: &mut Rng, iter: u64) -> journal::RoundEntry {
+    let with_session = rng.chance(0.5);
+    journal::RoundEntry {
+        iter,
+        rng_fp: rng.next_u64(),
+        participants: (0..rng.below(20)).map(|_| rng.below(1000) as u64).collect(),
+        selected: (0..rng.below(20)).map(|_| rng.below(1000) as u64).collect(),
+        frame_bytes: rng.next_u64() >> rng.below(64),
+        session_mode: with_session.then(|| {
+            ["full", "delta", "reuse"][rng.below(3)].to_string()
+        }),
+        generation: with_session.then(|| rng.below(100) as u64),
+        installs: with_session.then(|| rng.chance(0.5)),
+        resync_msgs: rng.below(50) as u64,
+        resync_extra: rng.below(100_000) as i64 - 50_000,
+        evaluated: rng.chance(0.5),
+        eval_clients: rng.below(500) as u64,
+        m_s: rng.below(1000) as u64,
+        raw_bits: [rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.f64().to_bits()],
+        smoothed_bits: [rng.next_u64(), 0, u64::MAX, rng.normal().to_bits()],
+        round_bytes: rng.next_u64() >> 20,
+        down_bytes: rng.next_u64() >> 10,
+        up_bytes: rng.next_u64() >> 10,
+        down_msgs: rng.below(100_000) as u64,
+        up_msgs: rng.below(100_000) as u64,
+        sim_secs_bits: rng.range_f64(0.0, 1e6).to_bits(),
+        bandit_digest: rng.next_u64(),
+        session_digest: with_session.then(|| rng.next_u64()),
+    }
+}
+
+/// Property: journal records roundtrip bit-exactly — parse(serialize(e))
+/// == e, and re-serializing the parsed record reproduces the identical
+/// line (so a rewritten journal is byte-identical to the original).
+#[test]
+fn prop_journal_records_roundtrip_identically() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(22_000 + seed);
+        for i in 0..5 {
+            let e = random_journal_entry(&mut rng, 1 + i);
+            let line = e.serialize();
+            let back = journal::parse_round(&line)
+                .unwrap_or_else(|err| panic!("seed {seed}: {err}"));
+            assert_eq!(back, e, "seed {seed}");
+            assert_eq!(back.serialize(), line, "seed {seed}: reserialize");
+        }
+        let header = journal::JournalHeader {
+            version: journal::JOURNAL_VERSION,
+            fingerprint: format!("seed={};odd=\"quoted\\path\";", rng.next_u64()),
+        };
+        let line = header.serialize();
+        let back = journal::parse_header(&line).unwrap();
+        assert_eq!(back, header, "seed {seed}");
+        assert_eq!(back.serialize(), line, "seed {seed}");
+    }
+}
+
+/// Property: truncating a journal at ANY byte position, or flipping any
+/// byte in its final record, never yields garbage state — `read` either
+/// errors (damage before the tail / inside the header) or returns an
+/// exact prefix of the original records with the tail dropped.
+#[test]
+fn prop_journal_truncation_never_yields_garbage() {
+    let dir = std::env::temp_dir().join("fedpayload_prop_journal");
+    std::fs::create_dir_all(&dir).unwrap();
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(23_000 + seed);
+        let path = dir.join(format!("prop_{seed}.jsonl"));
+        let entries: Vec<journal::RoundEntry> = (0..2 + rng.below(6))
+            .map(|i| random_journal_entry(&mut rng, 1 + i as u64))
+            .collect();
+        {
+            let mut w = journal::JournalWriter::create(&path, "fp=prop;").unwrap();
+            for e in &entries {
+                w.append(e).unwrap();
+            }
+        }
+        let bytes = std::fs::read(&path).unwrap();
+        let clean = journal::read(&path).unwrap();
+        assert!(!clean.torn, "seed {seed}");
+        assert_eq!(clean.rounds, entries, "seed {seed}");
+
+        // random truncation point anywhere in the file
+        let cut = rng.below(bytes.len());
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+        match journal::read(&path) {
+            Ok(jf) => {
+                assert!(
+                    jf.rounds.len() <= entries.len(),
+                    "seed {seed}: more rounds than written"
+                );
+                assert_eq!(
+                    jf.rounds,
+                    entries[..jf.rounds.len()],
+                    "seed {seed} cut {cut}: surviving rounds must be an exact prefix"
+                );
+                assert!(
+                    jf.valid_len as usize <= cut,
+                    "seed {seed}: valid_len past the truncation point"
+                );
+            }
+            // an incomplete header is the one unreadable case
+            Err(_) => assert!(cut <= bytes.iter().position(|&b| b == b'\n').unwrap()),
+        }
+
+        // flip one byte inside the final record: it is dropped, never
+        // misparsed into a different record
+        std::fs::write(&path, &bytes).unwrap();
+        let last_line_start = bytes[..bytes.len() - 1]
+            .iter()
+            .rposition(|&b| b == b'\n')
+            .unwrap()
+            + 1;
+        let mut flipped = bytes.clone();
+        let pos = last_line_start + rng.below(bytes.len() - 1 - last_line_start);
+        flipped[pos] ^= 1 << rng.below(8);
+        std::fs::write(&path, &flipped).unwrap();
+        if let Ok(jf) = journal::read(&path) {
+            assert!(
+                jf.rounds.len() < entries.len()
+                    || (jf.rounds == entries && flipped == bytes),
+                "seed {seed}: a corrupted tail record survived as data"
+            );
+            assert_eq!(jf.rounds, entries[..jf.rounds.len()], "seed {seed}: prefix");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Property: resume-point equivalence on random small configs — journal
+/// a straight run, kill a second run at a random round, resume it, and
+/// the round dumps plus journal bytes converge bit-identically.
+#[test]
+fn prop_resume_point_equivalence_on_random_configs() {
+    let dir = std::env::temp_dir().join("fedpayload_prop_resume");
+    std::fs::create_dir_all(&dir).unwrap();
+    // two full training runs plus a partial per case: keep the case
+    // count low and the workloads tiny
+    for seed in 0..5u64 {
+        let mut rng = Rng::seed_from_u64(24_000 + seed);
+        let mut cfg = RunConfig::paper_defaults();
+        cfg.apply_dataset_preset("synthetic-small").unwrap();
+        cfg.seed = 3000 + seed;
+        cfg.dataset.users = 24 + rng.below(25);
+        cfg.dataset.items = 48 + rng.below(49);
+        cfg.dataset.interactions = 500 + rng.below(300);
+        cfg.train.theta = 8 + rng.below(9);
+        cfg.train.iterations = 3 + rng.below(3);
+        cfg.train.payload_fraction = 0.25 + rng.f64() * 0.5;
+        cfg.runtime.backend = "reference".into();
+        cfg.bandit.strategy =
+            [Strategy::Bts, Strategy::Random, Strategy::EpsGreedy][rng.below(3)];
+        let straight_path = dir.join(format!("straight_{seed}.jsonl"));
+        let mut scfg = cfg.clone();
+        scfg.journal.path = Some(straight_path.to_string_lossy().into_owned());
+        let straight = fedpayload::server::Trainer::from_config(&scfg)
+            .unwrap()
+            .run()
+            .unwrap();
+
+        let part_path = dir.join(format!("part_{seed}.jsonl"));
+        let r = rng.below(cfg.train.iterations + 1);
+        let mut pcfg = cfg.clone();
+        pcfg.journal.path = Some(part_path.to_string_lossy().into_owned());
+        let mut partial = fedpayload::server::Trainer::from_config(&pcfg).unwrap();
+        for _ in 0..r {
+            partial.round().unwrap();
+        }
+        drop(partial);
+
+        let mut rcfg = cfg.clone();
+        rcfg.journal.resume = Some(part_path.to_string_lossy().into_owned());
+        let resumed = fedpayload::server::Trainer::from_config(&rcfg)
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(resumed.replayed_rounds, r as u64, "seed {seed} r={r}");
+        assert_eq!(
+            fedpayload::server::round_dump_string(&resumed),
+            fedpayload::server::round_dump_string(&straight),
+            "seed {seed} r={r}: resumed trajectory diverged"
+        );
+        assert_eq!(
+            std::fs::read(&part_path).unwrap(),
+            std::fs::read(&straight_path).unwrap(),
+            "seed {seed} r={r}: journal bytes diverged"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
 }
