@@ -28,7 +28,16 @@
 #      re-derives the golden round-dump text from the journal alone (no
 #      retraining), a run killed mid-way and `--resume`d converges to
 #      the uninterrupted run's dump AND journal bytes — at threads 1
-#      and 4, and on the stateful codebook-session codec.
+#      and 4, and on the stateful codebook-session codec,
+#   8. per-round participant sampling (`--theta-sample`, a dedicated
+#      PCG stream keyed off the master seed): sampled runs are
+#      threads-1/4 bit-identical in dumps, decision-trace digests AND
+#      journal bytes, the sampled trajectory genuinely diverges from
+#      the legacy full-Θ one (the streams are independent), and a
+#      sampled run killed mid-way resumes — at threads 1 and 4 — to
+#      the uninterrupted sampled run's dump and journal bytes, which
+#      requires the resume replay to re-verify the journaled
+#      participant sets against the sampler stream.
 #
 # Usage:  ci/determinism.sh [workdir]
 #   BIN=path/to/fedpayload overrides the binary (default:
@@ -182,6 +191,50 @@ run rounds_j_sess.csv --codec vq8 --entropy full --codebook-reuse auto \
                       --strategy full --threads 1 \
                       --resume journal_sess_part.jsonl
 diff rounds_j_sess.csv rounds_vq8_auto_t1.csv
+echo "   ok"
+
+echo "== 8: theta-sample — sampled runs: invariance, divergence, resume =="
+# sampled full runs (96 of theta=160 participants per round) at both
+# thread counts, with journals and full-level traces
+"$BIN" "${ARGS[@]}" --theta-sample 96 --threads 1 \
+       --journal journal_ts_full.jsonl --trace-out trace_ts_t1.jsonl \
+       --trace-level full --dump-rounds rounds_ts_t1.csv >/dev/null
+"$BIN" "${ARGS[@]}" --theta-sample 96 --threads 4 \
+       --journal journal_ts_full_t4.jsonl --trace-out trace_ts_t4.jsonl \
+       --trace-level full --dump-rounds rounds_ts_t4.csv >/dev/null
+echo "  ran: rounds_ts_t1.csv rounds_ts_t4.csv (sampled, journaled, traced)"
+# sampled runs keep the whole determinism contract: dumps, trace
+# digests and journal bytes all byte-identical at threads 1 vs 4
+diff rounds_ts_t1.csv rounds_ts_t4.csv
+"$BIN" trace-digest trace_ts_t1.jsonl > digest_ts_t1.txt
+"$BIN" trace-digest trace_ts_t4.jsonl > digest_ts_t4.txt
+diff digest_ts_t1.txt digest_ts_t4.txt
+diff journal_ts_full.jsonl journal_ts_full_t4.jsonl
+# the sampler stream is independent of the legacy path: a sampled run
+# must NOT reproduce the full-Θ trajectory
+if diff -q rounds_ts_t1.csv rounds_t1_a.csv >/dev/null; then
+  echo "theta-sample run unexpectedly matched the legacy full-theta run"; exit 1
+fi
+# kill-and-resume on the sampled path: stop after 5 of 8 rounds, then
+# resume — replay re-verifies the journaled participant sets against
+# the dedicated sampler stream before continuing. Dump and journal
+# bytes converge to the uninterrupted sampled run, at both thread
+# counts.
+"$BIN" "${ARGS[@]}" --theta-sample 96 --threads 1 --iterations 5 \
+       --journal journal_ts_part.jsonl >/dev/null
+echo "  ran: journal_ts_part.jsonl (killed after 5 rounds)"
+"$BIN" "${ARGS[@]}" --theta-sample 96 --threads 1 \
+       --resume journal_ts_part.jsonl \
+       --dump-rounds rounds_ts_resumed.csv >/dev/null
+diff rounds_ts_resumed.csv rounds_ts_t1.csv
+diff journal_ts_part.jsonl journal_ts_full.jsonl
+"$BIN" "${ARGS[@]}" --theta-sample 96 --threads 4 --iterations 5 \
+       --journal journal_ts_part_t4.jsonl >/dev/null
+"$BIN" "${ARGS[@]}" --theta-sample 96 --threads 4 \
+       --resume journal_ts_part_t4.jsonl \
+       --dump-rounds rounds_ts_resumed_t4.csv >/dev/null
+diff rounds_ts_resumed_t4.csv rounds_ts_t1.csv
+diff journal_ts_part_t4.jsonl journal_ts_full.jsonl
 echo "   ok"
 
 echo "determinism: all checks passed"

@@ -30,6 +30,7 @@ const VALUE_KEYS: &[&str] = &[
     "strategy",
     "iterations",
     "theta",
+    "theta-sample",
     "payload-fraction",
     "rebuilds",
     "seed",

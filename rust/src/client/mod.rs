@@ -9,18 +9,35 @@
 //! AOT artifacts — batching many clients per execution is the simulator's
 //! throughput trick and does not change the per-client semantics.
 //!
-//! The immutable interaction data lives behind an `Arc` so the sharded
-//! executor (`runtime::fleet`) can hand every worker thread a cheap
-//! [`FleetView`] without copying the dataset; the mutable per-client
-//! state (the local factors) stays coordinator-owned in [`Fleet`] and is
-//! only written after the round barrier.
+//! **Fleet-scale representation.** The immutable interaction data lives
+//! in one shared [`InteractionArena`] (sorted `u32` id slices + offset
+//! tables, see `data::arena`) behind an `Arc`, so the sharded executor
+//! (`runtime::fleet`) hands every worker thread a cheap [`FleetView`]
+//! without copying the dataset and the marginal per-client cost is two
+//! integers instead of two `Vec` headers. The mutable per-client state
+//! is equally flat: local factors go into K-sized slots of one `Vec<f32>`
+//! allocated on first participation (`factor_slot` maps client id →
+//! slot, `u32::MAX` = never participated), and the session
+//! download-generation map is a dense `Vec<u32>` with a sentinel instead
+//! of `Vec<Option<u32>>`. Both stay coordinator-owned in [`Fleet`] and
+//! are only written after the round barrier. The per-client budget table
+//! lives in docs/ARCHITECTURE.md §"Fleet scale".
 
 use std::sync::Arc;
 
-use crate::data::Split;
+use crate::data::{InteractionArena, Split};
 use crate::rng::Rng;
 
-/// One simulated user device's immutable private data.
+/// `download_gen` sentinel: the client holds no cached codebook.
+const NO_GEN: u32 = u32::MAX;
+
+/// `factor_slot` sentinel: the client has never participated.
+const NO_SLOT: u32 = u32::MAX;
+
+/// One simulated user device's interaction rows as owned lists — the
+/// construction/test-scaffolding shape. The running representation is
+/// the shared [`InteractionArena`]; [`FleetView::from_clients`] packs a
+/// `Vec<ClientData>` into one.
 #[derive(Debug, Clone)]
 pub struct ClientData {
     /// Sorted train interactions (item ids).
@@ -29,14 +46,25 @@ pub struct ClientData {
     pub test_items: Vec<u32>,
 }
 
-impl ClientData {
+/// Borrowed view of one client's immutable data — two zero-copy slices
+/// into the fleet arena. Cheap to construct per lookup; holds no
+/// allocation.
+#[derive(Debug, Clone, Copy)]
+pub struct ClientRef<'a> {
+    /// Sorted train interactions (item ids).
+    pub train_items: &'a [u32],
+    /// Sorted held-out test interactions (item ids).
+    pub test_items: &'a [u32],
+}
+
+impl ClientRef<'_> {
     /// Map this client's train items into selected-item positions.
     /// `sel_pos[item] >= 0` gives the position of `item` in the round's
     /// selected list; the result stays sorted because the selected list
     /// is sorted by item id.
     pub fn selected_row(&self, sel_pos: &[i32]) -> Vec<u32> {
         let mut row = Vec::new();
-        for &item in &self.train_items {
+        for &item in self.train_items {
             let p = sel_pos[item as usize];
             if p >= 0 {
                 row.push(p as u32);
@@ -48,33 +76,53 @@ impl ClientData {
 
 /// Cheaply cloneable, thread-shareable view of the fleet's immutable
 /// interaction data — what a worker shard needs to solve (rows) and
-/// evaluate (train/test items) its clients.
+/// evaluate (train/test items) its clients. An `Arc` over the shared
+/// arena: cloning copies one pointer, never the dataset.
 #[derive(Debug, Clone)]
 pub struct FleetView {
-    clients: Arc<Vec<ClientData>>,
+    arena: Arc<InteractionArena>,
 }
 
 impl FleetView {
-    /// Wrap a client list into a shareable view.
+    /// Wrap a shared arena into a view.
+    pub fn from_arena(arena: Arc<InteractionArena>) -> FleetView {
+        FleetView { arena }
+    }
+
+    /// Pack owned per-client lists into an arena-backed view (test
+    /// scaffolding; production construction goes through
+    /// [`Fleet::from_split`]).
     pub fn from_clients(clients: Vec<ClientData>) -> FleetView {
+        let (train, test): (Vec<Vec<u32>>, Vec<Vec<u32>>) = clients
+            .into_iter()
+            .map(|c| (c.train_items, c.test_items))
+            .unzip();
         FleetView {
-            clients: Arc::new(clients),
+            arena: Arc::new(InteractionArena::from_rows(&train, &test)),
         }
     }
 
     /// Number of clients in the fleet.
     pub fn len(&self) -> usize {
-        self.clients.len()
+        self.arena.num_clients()
     }
 
     /// Is the fleet empty?
     pub fn is_empty(&self) -> bool {
-        self.clients.is_empty()
+        self.len() == 0
     }
 
-    /// One client's immutable data.
-    pub fn client(&self, id: usize) -> &ClientData {
-        &self.clients[id]
+    /// One client's immutable data (zero-copy slices into the arena).
+    pub fn client(&self, id: usize) -> ClientRef<'_> {
+        ClientRef {
+            train_items: self.arena.train_items(id),
+            test_items: self.arena.test_items(id),
+        }
+    }
+
+    /// The shared arena itself (memory accounting, direct row access).
+    pub fn arena(&self) -> &InteractionArena {
+        &self.arena
     }
 }
 
@@ -83,35 +131,51 @@ impl FleetView {
 #[derive(Debug, Clone)]
 pub struct Fleet {
     view: FleetView,
-    /// Local user factors p_i (K each), set each time a client
-    /// participates in a round. Empty until first participation; never
-    /// transmitted (FCF privacy boundary).
-    factors: Vec<Vec<f32>>,
+    /// Local user factor dimension K, fixed by the first installed
+    /// factor (0 until then).
+    factor_k: usize,
+    /// Client id → slot index into `factor_data`, or [`NO_SLOT`] before
+    /// first participation. 4 bytes per client instead of a 24-byte
+    /// `Vec` header.
+    factor_slot: Vec<u32>,
+    /// Flat K-sized factor slots, appended on first participation and
+    /// overwritten in place afterwards. Never transmitted (FCF privacy
+    /// boundary) — grows with *participants*, not fleet size.
+    factor_data: Vec<f32>,
     /// Download-codebook generation each client holds
-    /// (`wire::vq::session`): `None` until the client first receives a
-    /// session frame, and again after [`Fleet::invalidate_download_cache`]
-    /// (the churn hook). The codebook *contents* live device-side; the
-    /// coordinator tracks only the generation tag — what a real
-    /// deployment learns from the client's resync request — to decide
-    /// which clients need a full-codebook frame and to attribute its
-    /// bytes in the ledger.
-    download_gen: Vec<Option<u32>>,
+    /// (`wire::vq::session`): [`NO_GEN`] until the client first receives
+    /// a session frame, and again after
+    /// [`Fleet::invalidate_download_cache`] (the churn hook). The
+    /// codebook *contents* live device-side; the coordinator tracks only
+    /// the generation tag — what a real deployment learns from the
+    /// client's resync request — to decide which clients need a
+    /// full-codebook frame and to attribute its bytes in the ledger.
+    download_gen: Vec<u32>,
+    /// Running count of clients whose `download_gen` is set — keeps
+    /// [`Fleet::synced_clients`] O(1) instead of an O(fleet) scan per
+    /// round.
+    synced: usize,
 }
 
 impl Fleet {
-    /// Build one client per user from a train/test split.
+    /// Build one client per user from a train/test split: pack the
+    /// split's CSR rows into the shared arena and size the flat
+    /// per-client state tables.
     pub fn from_split(split: &Split) -> Fleet {
-        let n = split.train.num_users();
-        let clients = (0..n)
-            .map(|u| ClientData {
-                train_items: split.train.user_items(u).to_vec(),
-                test_items: split.test.user_items(u).to_vec(),
-            })
-            .collect();
+        Fleet::from_arena(Arc::new(InteractionArena::from_split(split)))
+    }
+
+    /// Build a fleet over an already-constructed arena (the fleet
+    /// bench's direct 10^6-client path).
+    pub fn from_arena(arena: Arc<InteractionArena>) -> Fleet {
+        let n = arena.num_clients();
         Fleet {
-            view: FleetView::from_clients(clients),
-            factors: vec![Vec::new(); n],
-            download_gen: vec![None; n],
+            view: FleetView::from_arena(arena),
+            factor_k: 0,
+            factor_slot: vec![NO_SLOT; n],
+            factor_data: Vec::new(),
+            download_gen: vec![NO_GEN; n],
+            synced: 0,
         }
     }
 
@@ -132,39 +196,79 @@ impl Fleet {
     }
 
     /// One client's immutable data.
-    pub fn client(&self, id: usize) -> &ClientData {
+    pub fn client(&self, id: usize) -> ClientRef<'_> {
         self.view.client(id)
     }
 
     /// A client's local factor p_i (empty before first participation).
     pub fn factors(&self, id: usize) -> &[f32] {
-        &self.factors[id]
+        match self.factor_slot[id] {
+            NO_SLOT => &[],
+            s => {
+                let lo = s as usize * self.factor_k;
+                &self.factor_data[lo..lo + self.factor_k]
+            }
+        }
     }
 
     /// Install a client's freshly solved local factor (post-barrier).
-    pub fn set_factors(&mut self, id: usize, p: Vec<f32>) {
-        self.factors[id] = p;
+    /// The first install fixes the fleet-wide factor dimension K.
+    pub fn set_factors(&mut self, id: usize, p: &[f32]) {
+        if self.factor_k == 0 {
+            self.factor_k = p.len();
+        }
+        assert_eq!(p.len(), self.factor_k, "factor dimension changed mid-run");
+        match self.factor_slot[id] {
+            NO_SLOT => {
+                let slot = (self.factor_data.len() / self.factor_k) as u32;
+                assert!(slot != NO_SLOT, "factor slot index overflow");
+                self.factor_slot[id] = slot;
+                self.factor_data.extend_from_slice(p);
+            }
+            s => {
+                let lo = s as usize * self.factor_k;
+                self.factor_data[lo..lo + self.factor_k].copy_from_slice(p);
+            }
+        }
+    }
+
+    /// How many clients have participated at least once (hold a factor
+    /// slot).
+    pub fn participated_clients(&self) -> usize {
+        if self.factor_k == 0 {
+            0
+        } else {
+            self.factor_data.len() / self.factor_k
+        }
     }
 
     /// The download-codebook generation a client holds (`None` = no
     /// cached codebook; the next session frame it receives must be a
     /// full-codebook resync).
     pub fn download_gen(&self, id: usize) -> Option<u32> {
-        self.download_gen[id]
+        match self.download_gen[id] {
+            NO_GEN => None,
+            g => Some(g),
+        }
     }
 
     /// Record that a client received (and can decode) generation `gen`
     /// — called by the coordinator after every session download it
     /// serves, shared frame and resync alike.
     pub fn set_download_gen(&mut self, id: usize, gen: u32) {
-        self.download_gen[id] = Some(gen);
+        assert!(gen != NO_GEN, "generation {NO_GEN} is the vacancy sentinel");
+        if self.download_gen[id] == NO_GEN {
+            self.synced += 1;
+        }
+        self.download_gen[id] = gen;
     }
 
     /// How many clients currently hold a cached download codebook of any
     /// generation — the fleet-wide sync level the flight recorder gauges
-    /// each round (`session_synced_clients`).
+    /// each round (`session_synced_clients`). O(1): maintained as a
+    /// running count, not a fleet scan.
     pub fn synced_clients(&self) -> usize {
-        self.download_gen.iter().filter(|g| g.is_some()).count()
+        self.synced
     }
 
     /// Drop a client's cached download codebook — the churn hook: the
@@ -172,15 +276,31 @@ impl Fleet {
     /// the rounds that shipped the generation it would need. Its next
     /// session download resyncs via a full-codebook frame.
     pub fn invalidate_download_cache(&mut self, id: usize) {
-        self.download_gen[id] = None;
+        if self.download_gen[id] != NO_GEN {
+            self.synced -= 1;
+        }
+        self.download_gen[id] = NO_GEN;
     }
 
-    /// Draw Θ distinct participants for a round. The paper's server only
-    /// observes that Θ updates arrived; uniform sampling reproduces the
-    /// asynchronous-arrival semantics (DESIGN.md §Substitutions).
+    /// Draw Θ distinct participants for a round from the trainer's main
+    /// RNG stream — the legacy all-rounds path (`fleet.theta_sample`
+    /// unset). The paper's server only observes that Θ updates arrived;
+    /// uniform sampling reproduces the asynchronous-arrival semantics
+    /// (DESIGN.md §Substitutions). O(fleet) scratch — fine at the
+    /// thousands-of-clients scale this path serves; sampled fleets use
+    /// `rng::ParticipantSampler` instead.
     pub fn sample_participants(&self, theta: usize, rng: &mut Rng) -> Vec<usize> {
         let theta = theta.min(self.len());
         rng.sample_indices(self.len(), theta)
+    }
+
+    /// Heap bytes of the coordinator-owned per-client state (factor
+    /// slots + data, generation map) — the mutable half of the fleet
+    /// budget table; the immutable half is `arena().heap_bytes()`.
+    pub fn state_bytes(&self) -> usize {
+        self.factor_slot.capacity() * std::mem::size_of::<u32>()
+            + self.factor_data.capacity() * std::mem::size_of::<f32>()
+            + self.download_gen.capacity() * std::mem::size_of::<u32>()
     }
 }
 
@@ -247,15 +367,63 @@ mod tests {
     }
 
     #[test]
+    fn synced_count_survives_updates_and_double_invalidation() {
+        let mut f = fleet();
+        f.set_download_gen(0, 1);
+        f.set_download_gen(0, 2); // update, not a new sync
+        assert_eq!(f.synced_clients(), 1);
+        f.invalidate_download_cache(0);
+        f.invalidate_download_cache(0); // idempotent
+        assert_eq!(f.synced_clients(), 0);
+    }
+
+    #[test]
+    fn factor_slots_install_and_overwrite_in_place() {
+        let mut f = fleet();
+        assert_eq!(f.participated_clients(), 0);
+        f.set_factors(2, &[1.0, 2.0]);
+        f.set_factors(0, &[3.0, 4.0]);
+        assert_eq!(f.factors(2), &[1.0, 2.0]);
+        assert_eq!(f.factors(0), &[3.0, 4.0]);
+        assert!(f.factors(1).is_empty());
+        assert_eq!(f.participated_clients(), 2);
+        // overwrite reuses the slot — no growth
+        let bytes = f.state_bytes();
+        f.set_factors(2, &[5.0, 6.0]);
+        assert_eq!(f.factors(2), &[5.0, 6.0]);
+        assert_eq!(f.factors(0), &[3.0, 4.0], "neighbour slot untouched");
+        assert_eq!(f.participated_clients(), 2);
+        assert_eq!(f.state_bytes(), bytes);
+    }
+
+    #[test]
     fn view_shares_data_and_factors_stay_local() {
         let mut f = fleet();
         let view = f.view();
-        f.set_factors(1, vec![0.5, 0.5]);
+        f.set_factors(1, &[0.5, 0.5]);
         // the view sees the same immutable data...
         assert_eq!(view.len(), 3);
         assert_eq!(view.client(0).train_items, f.client(0).train_items);
         // ...while factors live only on the coordinator side
         assert_eq!(f.factors(1), &[0.5, 0.5]);
         assert!(f.factors(0).is_empty());
+    }
+
+    #[test]
+    fn from_clients_packs_an_arena() {
+        let v = FleetView::from_clients(vec![
+            ClientData {
+                train_items: vec![0, 2],
+                test_items: vec![1],
+            },
+            ClientData {
+                train_items: vec![],
+                test_items: vec![],
+            },
+        ]);
+        assert_eq!(v.len(), 2);
+        assert_eq!(v.client(0).train_items, &[0, 2]);
+        assert!(v.client(1).train_items.is_empty());
+        assert_eq!(v.arena().train_nnz(), 2);
     }
 }

@@ -268,6 +268,24 @@ pub struct JournalConfig {
     pub resume: Option<String>,
 }
 
+/// Fleet-scale simulation knobs (`[fleet]`): participant sampling for
+/// runs where the simulated client population is much larger than the
+/// per-round cohort.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FleetConfig {
+    /// Per-round participant sample size (`--theta-sample`). `None`
+    /// (the default) keeps the legacy semantics: every round draws
+    /// `train.theta` participants from the trainer's main RNG stream,
+    /// byte-for-byte unchanged from previous releases. `Some(k)` draws
+    /// `k` distinct participants per round from the **dedicated**
+    /// participant PCG stream ([`crate::rng::ParticipantSampler`]) —
+    /// keyed purely by `(seed, round)`, so the sequence is independent
+    /// of thread count and of every other stream — which is what makes
+    /// million-client fleets affordable (O(k) sampling, not O(fleet))
+    /// and journal replay exact. Must be `>= 1` and `<= train.theta`.
+    pub theta_sample: Option<usize>,
+}
+
 /// Complete run configuration.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -291,6 +309,8 @@ pub struct RunConfig {
     pub trace: TraceConfig,
     /// Round-journal knobs.
     pub journal: JournalConfig,
+    /// Fleet-scale simulation knobs.
+    pub fleet: FleetConfig,
 }
 
 impl RunConfig {
@@ -366,6 +386,7 @@ impl RunConfig {
                 level: crate::telemetry::TraceLevel::Decision,
             },
             journal: JournalConfig::default(),
+            fleet: FleetConfig::default(),
         }
     }
 
@@ -535,6 +556,10 @@ impl RunConfig {
         if let Some(v) = doc.get("journal.resume") {
             cfg.journal.resume = Some(v.as_str()?.to_string());
         }
+        if let Some(v) = doc.get("fleet.theta_sample") {
+            cfg.fleet.theta_sample =
+                Some(v.as_usize().context("config key fleet.theta_sample")?);
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -558,6 +583,21 @@ impl RunConfig {
         }
         if self.train.theta == 0 {
             bail!("train.theta must be > 0");
+        }
+        if let Some(k) = self.fleet.theta_sample {
+            if k == 0 {
+                bail!(
+                    "fleet.theta_sample must be > 0 (it is the per-round participant \
+                     draw; unset it to disable sampling)"
+                );
+            }
+            if k > self.train.theta {
+                bail!(
+                    "fleet.theta_sample ({k}) must not exceed train.theta ({}) — the \
+                     sample is drawn from each round's Θ cohort budget",
+                    self.train.theta
+                );
+            }
         }
         if !(0.0 < self.dataset.train_frac && self.dataset.train_frac < 1.0) {
             bail!("dataset.train_frac must be in (0, 1)");
@@ -686,6 +726,13 @@ impl RunConfig {
         kv("simnet.bandwidth_mbps", f64b(self.simnet.bandwidth_mbps));
         kv("simnet.latency_ms", f64b(self.simnet.latency_ms));
         kv("runtime.backend", self.runtime.backend.clone());
+        kv(
+            "fleet.theta_sample",
+            self.fleet
+                .theta_sample
+                .map(|k| k.to_string())
+                .unwrap_or_default(),
+        );
         s
     }
 
@@ -953,6 +1000,41 @@ mod tests {
         let mut c = RunConfig::paper_defaults();
         c.model.eta = 0.02;
         assert_ne!(a.determinism_fingerprint(), c.determinism_fingerprint());
+        // participant sampling changes which clients train — it must
+        // move the fingerprint so a sampled journal never replays under
+        // the all-Θ path (or a different sample size)
+        let mut d = RunConfig::paper_defaults();
+        d.fleet.theta_sample = Some(50);
+        assert_ne!(a.determinism_fingerprint(), d.determinism_fingerprint());
+        assert!(d.determinism_fingerprint().contains("fleet.theta_sample=50;"));
+    }
+
+    #[test]
+    fn theta_sample_validation_rejects_zero_and_oversize() {
+        let mut c = RunConfig::paper_defaults();
+        c.fleet.theta_sample = Some(0);
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("fleet.theta_sample"), "must name the key: {err}");
+        c.fleet.theta_sample = Some(c.train.theta + 1);
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("fleet.theta_sample"), "must name the key: {err}");
+        assert!(err.contains("train.theta"), "must name the bound: {err}");
+        // the full legal range passes
+        c.fleet.theta_sample = Some(1);
+        c.validate().unwrap();
+        c.fleet.theta_sample = Some(c.train.theta);
+        c.validate().unwrap();
+        c.fleet.theta_sample = None;
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn theta_sample_parses_from_doc() {
+        let cfg = RunConfig::from_toml_str("[fleet]\ntheta_sample = 10\n").unwrap();
+        assert_eq!(cfg.fleet.theta_sample, Some(10));
+        // rejected values fail at parse time through validate()
+        assert!(RunConfig::from_toml_str("[fleet]\ntheta_sample = 0\n").is_err());
+        assert!(RunConfig::from_toml_str("[fleet]\ntheta_sample = 101\n").is_err());
     }
 
     #[test]

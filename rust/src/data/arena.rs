@@ -1,0 +1,207 @@
+//! Flat interaction arena — the fleet-scale client-state substrate.
+//!
+//! At `Theta ≈ 10^6` simulated clients, per-client `Vec<u32>` interaction
+//! state costs 48 bytes of Vec headers plus two heap allocations per
+//! client before a single item id is stored — ~100 MB of pure overhead
+//! and a million-allocation build. The arena stores every client's
+//! sorted train and test item ids in two shared contiguous buffers with
+//! `u32` offset tables, so the marginal per-client cost is exactly two
+//! integers (one train offset, one test offset) and construction is two
+//! passes over the split's CSR rows.
+//!
+//! The arena is immutable after construction and lives behind an `Arc`
+//! in [`crate::client::FleetView`], so the sharded round executor
+//! (`runtime::fleet`) hands worker threads zero-copy borrowed slices.
+//! Layout and the per-client budget table are documented in
+//! docs/ARCHITECTURE.md §"Fleet scale".
+
+use super::{Interactions, Split};
+
+/// Shared flat storage for every client's sorted interaction ids.
+///
+/// Two parallel CSR-style blocks (train, test) over one client index:
+/// `items[off[u] .. off[u + 1]]` is client `u`'s sorted id slice.
+/// Offsets are `u32` — a single simulated fleet is capped at `2^32 - 1`
+/// total interactions per block, far beyond any dataset this simulator
+/// targets (MovieLens-1M is `10^6`, the fleet bench `~1.6 × 10^7`).
+#[derive(Debug, Clone)]
+pub struct InteractionArena {
+    /// All clients' train item ids, concatenated in client order.
+    train_items: Vec<u32>,
+    /// Train offsets, `num_clients + 1` entries.
+    train_off: Vec<u32>,
+    /// All clients' held-out test item ids, concatenated in client order.
+    test_items: Vec<u32>,
+    /// Test offsets, `num_clients + 1` entries.
+    test_off: Vec<u32>,
+}
+
+/// Concatenate one CSR matrix's rows into an (items, offsets) block.
+fn pack(x: &Interactions) -> (Vec<u32>, Vec<u32>) {
+    let n = x.num_users();
+    assert!(
+        x.nnz() <= u32::MAX as usize,
+        "interaction arena block overflows u32 offsets ({} ids)",
+        x.nnz()
+    );
+    let mut items = Vec::with_capacity(x.nnz());
+    let mut off = Vec::with_capacity(n + 1);
+    off.push(0u32);
+    for u in 0..n {
+        items.extend_from_slice(x.user_items(u));
+        off.push(items.len() as u32);
+    }
+    (items, off)
+}
+
+impl InteractionArena {
+    /// Build the arena from a per-user train/test split (the dataset
+    /// loaders' output). Rows are already sorted in the CSR source, so
+    /// this is a straight two-pass concatenation.
+    pub fn from_split(split: &Split) -> InteractionArena {
+        let (train_items, train_off) = pack(&split.train);
+        let (test_items, test_off) = pack(&split.test);
+        assert_eq!(train_off.len(), test_off.len(), "train/test user counts differ");
+        InteractionArena {
+            train_items,
+            train_off,
+            test_items,
+            test_off,
+        }
+    }
+
+    /// Build directly from per-client sorted id lists (test scaffolding
+    /// and the fleet bench's synthetic-free 10^6-client construction,
+    /// which must not pay the planted-factor generator's O(users × items)
+    /// scoring pass).
+    pub fn from_rows(train: &[Vec<u32>], test: &[Vec<u32>]) -> InteractionArena {
+        assert_eq!(train.len(), test.len(), "train/test row counts differ");
+        let pack_rows = |rows: &[Vec<u32>]| {
+            let total: usize = rows.iter().map(Vec::len).sum();
+            assert!(
+                total <= u32::MAX as usize,
+                "interaction arena block overflows u32 offsets ({total} ids)"
+            );
+            let mut items = Vec::with_capacity(total);
+            let mut off = Vec::with_capacity(rows.len() + 1);
+            off.push(0u32);
+            for row in rows {
+                debug_assert!(row.windows(2).all(|w| w[0] < w[1]), "row not sorted-unique");
+                items.extend_from_slice(row);
+                off.push(items.len() as u32);
+            }
+            (items, off)
+        };
+        let (train_items, train_off) = pack_rows(train);
+        let (test_items, test_off) = pack_rows(test);
+        InteractionArena {
+            train_items,
+            train_off,
+            test_items,
+            test_off,
+        }
+    }
+
+    /// Number of clients the arena holds rows for.
+    pub fn num_clients(&self) -> usize {
+        self.train_off.len() - 1
+    }
+
+    /// Client `u`'s sorted train item ids (zero-copy).
+    pub fn train_items(&self, u: usize) -> &[u32] {
+        &self.train_items[self.train_off[u] as usize..self.train_off[u + 1] as usize]
+    }
+
+    /// Client `u`'s sorted held-out test item ids (zero-copy).
+    pub fn test_items(&self, u: usize) -> &[u32] {
+        &self.test_items[self.test_off[u] as usize..self.test_off[u + 1] as usize]
+    }
+
+    /// Total train interactions across the fleet.
+    pub fn train_nnz(&self) -> usize {
+        self.train_items.len()
+    }
+
+    /// Total test interactions across the fleet.
+    pub fn test_nnz(&self) -> usize {
+        self.test_items.len()
+    }
+
+    /// Exact heap footprint of the arena's four buffers in bytes — the
+    /// number the fleet bench reports as `arena_bytes` and the scale
+    /// test holds under its memory ceiling.
+    pub fn heap_bytes(&self) -> usize {
+        std::mem::size_of::<u32>()
+            * (self.train_items.capacity()
+                + self.train_off.capacity()
+                + self.test_items.capacity()
+                + self.test_off.capacity())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn toy_split() -> Split {
+        let x = Interactions::from_pairs(
+            4,
+            8,
+            vec![
+                (0, 1),
+                (0, 4),
+                (0, 7),
+                (1, 2),
+                (2, 0),
+                (2, 3),
+                (2, 5),
+                (2, 6),
+                (3, 1),
+            ],
+        )
+        .unwrap();
+        let mut rng = Rng::seed_from_u64(11);
+        x.split(0.8, &mut rng)
+    }
+
+    #[test]
+    fn arena_rows_match_split_rows() {
+        let s = toy_split();
+        let a = InteractionArena::from_split(&s);
+        assert_eq!(a.num_clients(), 4);
+        assert_eq!(a.train_nnz(), s.train.nnz());
+        assert_eq!(a.test_nnz(), s.test.nnz());
+        for u in 0..4 {
+            assert_eq!(a.train_items(u), s.train.user_items(u), "user {u} train");
+            assert_eq!(a.test_items(u), s.test.user_items(u), "user {u} test");
+        }
+    }
+
+    #[test]
+    fn from_rows_matches_explicit_lists() {
+        let train = vec![vec![1, 4], vec![], vec![0, 3, 5]];
+        let test = vec![vec![2], vec![7], vec![]];
+        let a = InteractionArena::from_rows(&train, &test);
+        assert_eq!(a.num_clients(), 3);
+        assert_eq!(a.train_items(0), &[1, 4]);
+        assert_eq!(a.train_items(1), &[] as &[u32]);
+        assert_eq!(a.train_items(2), &[0, 3, 5]);
+        assert_eq!(a.test_items(1), &[7]);
+        assert_eq!(a.test_items(2), &[] as &[u32]);
+    }
+
+    #[test]
+    fn empty_fleet_is_representable() {
+        let a = InteractionArena::from_rows(&[], &[]);
+        assert_eq!(a.num_clients(), 0);
+        assert_eq!(a.train_nnz(), 0);
+    }
+
+    #[test]
+    fn heap_bytes_counts_all_four_buffers() {
+        let a = InteractionArena::from_rows(&[vec![1, 2, 3]], &[vec![4]]);
+        // at least the ids (4 total) + offsets (2 * 2) at 4 bytes each
+        assert!(a.heap_bytes() >= 4 * (4 + 4));
+    }
+}

@@ -9,8 +9,11 @@
 //! [`loaders`] parses the real file formats so the actual datasets drop in
 //! unchanged. See DESIGN.md §Substitutions.
 
+pub mod arena;
 pub mod loaders;
 pub mod synthetic;
+
+pub use arena::InteractionArena;
 
 use anyhow::{bail, Result};
 

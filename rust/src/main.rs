@@ -37,7 +37,8 @@ fedpayload — payload-optimized federated recommender (FCF-BTS, RecSys'21)
 
 USAGE:
   fedpayload train [--dataset <preset>] [--strategy <s>] [--iterations N]
-                   [--payload-fraction F] [--theta N] [--seed N]
+                   [--payload-fraction F] [--theta N] [--theta-sample N]
+                   [--seed N]
                    [--codec f64|f32|f16|int8|vq8|vq4|vq8r]
                    [--sparse-topk N|auto]
                    [--entropy none|varint|range|full]
@@ -92,7 +93,14 @@ USAGE:
    bit-identically to an uninterrupted run. `--resume X` alone appends
    new rounds to X in place; `--resume X --journal Y` rewrites a
    complete fresh journal at Y. The config must match the journaled
-   run's determinism fingerprint.)
+   run's determinism fingerprint. --theta-sample K draws K distinct
+   participants per round from a dedicated reproducible PCG stream
+   keyed by (seed, round) — the fleet-scale mode: sampling cost is
+   O(K) regardless of fleet size, the draw is independent of
+   --threads and of every other random stream, and the sampled ids
+   are journaled so --resume replay-verifies sampled runs unchanged.
+   Requires 1 <= K <= theta; unset = every round trains the classic
+   theta cohort drawn from the main stream.)
 ";
 
 fn main() -> ExitCode {
@@ -161,6 +169,9 @@ fn resolve_config(args: &Args) -> Result<RunConfig> {
     }
     if let Some(n) = args.opt_parse::<usize>("theta")? {
         cfg.train.theta = n;
+    }
+    if let Some(n) = args.opt_parse::<usize>("theta-sample")? {
+        cfg.fleet.theta_sample = Some(n);
     }
     if let Some(n) = args.opt_parse::<u64>("seed")? {
         cfg.seed = n;
@@ -380,8 +391,12 @@ fn cmd_info(args: &Args) -> Result<()> {
         cfg.bandit.tau0,
         cfg.bandit.gamma
     );
+    let theta_sample = match cfg.fleet.theta_sample {
+        Some(k) => format!(", theta_sample={k}"),
+        None => String::new(),
+    };
     println!(
-        "  train              = {} iters, theta={}, payload_fraction={}",
+        "  train              = {} iters, theta={}{theta_sample}, payload_fraction={}",
         cfg.train.iterations, cfg.train.theta, cfg.train.payload_fraction
     );
     let topk = if cfg.codec.sparse_topk_auto {

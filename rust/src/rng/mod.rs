@@ -13,7 +13,7 @@ mod pcg;
 mod sampler;
 
 pub use pcg::{Pcg64, SplitMix64};
-pub use sampler::CdfSampler;
+pub use sampler::{CdfSampler, ParticipantSampler};
 
 /// Uniform, normal and integer draws on top of a PCG stream.
 #[derive(Debug, Clone)]

@@ -1,10 +1,16 @@
-//! Weighted discrete sampling via an explicit CDF + binary search.
+//! Weighted discrete sampling via an explicit CDF + binary search, and
+//! the fleet's dedicated per-round participant sampler.
 //!
-//! Used by the synthetic dataset generators ([`crate::data::synthetic`])
-//! for Zipf-like item popularity — the skew that makes TopList strong on
-//! news-style data (paper §7, MIND) — and by the TopList baseline tests.
+//! [`CdfSampler`] is used by the synthetic dataset generators
+//! ([`crate::data::synthetic`]) for Zipf-like item popularity — the skew
+//! that makes TopList strong on news-style data (paper §7, MIND) — and
+//! by the TopList baseline tests. [`ParticipantSampler`] draws each
+//! round's participant subset for `fleet.theta_sample` runs from its own
+//! reproducible PCG stream, independent of the trainer's main stream.
 
-use super::Rng;
+use std::collections::HashSet;
+
+use super::{Rng, SplitMix64};
 
 /// Cumulative-distribution sampler over `n` weighted categories.
 #[derive(Debug, Clone)]
@@ -62,6 +68,71 @@ impl CdfSampler {
     }
 }
 
+/// Domain-separation tag mixed into the master seed so the participant
+/// stream never collides with the trainer's main stream (which is
+/// `Rng::seed_from_u64(cfg.seed)`) or any `split()` descendant of it.
+const PARTICIPANT_STREAM_TAG: u64 = 0x5047_4c45_4554_0001; // "PG\x4cEET" + 1
+
+/// Per-round participant sampling from a dedicated reproducible PCG
+/// stream — the `fleet.theta_sample` mechanism.
+///
+/// Design constraints (all load-bearing for determinism and resume):
+///
+/// * **Stream independence.** Each round's draw is keyed purely by
+///   `(master seed, round index)` — never by a shared mutable RNG — so
+///   the participant sequence is identical regardless of thread count,
+///   of how far the trainer's main stream has advanced, and of whether
+///   earlier rounds were replayed from a journal or re-executed.
+/// * **O(sample) memory.** Floyd's algorithm draws `k` distinct ids out
+///   of `n` with `k` set insertions and zero O(n) scratch — the legacy
+///   `Rng::sample_indices` allocates an `n`-entry index table, which at
+///   `Theta = 10^6` would burn 8 MB per round just to pick 1000 ids.
+/// * **Deterministic order.** The returned ids are in Floyd insertion
+///   order (a pure function of the round's PCG draws), so batches form
+///   identically on every replay.
+#[derive(Debug, Clone)]
+pub struct ParticipantSampler {
+    stream_seed: u64,
+}
+
+impl ParticipantSampler {
+    /// Build the sampler for a run: derives the dedicated stream seed
+    /// from the run's master seed via a tagged SplitMix64 step.
+    pub fn new(master_seed: u64) -> Self {
+        let mut sm = SplitMix64::new(master_seed ^ PARTICIPANT_STREAM_TAG);
+        ParticipantSampler {
+            stream_seed: sm.next_u64(),
+        }
+    }
+
+    /// Draw round `round`'s participant set: `k.min(n)` distinct client
+    /// ids in `[0, n)`, a pure function of `(master seed, round)`.
+    pub fn sample_round(&self, round: u64, n: usize, k: usize) -> Vec<usize> {
+        let k = k.min(n);
+        if k == 0 {
+            return Vec::new();
+        }
+        // per-round child stream: one more tagged SplitMix64 mix so
+        // consecutive rounds land in unrelated PCG streams
+        let mut sm = SplitMix64::new(self.stream_seed.wrapping_add(round));
+        let mut rng = Rng::seed_from_u64(sm.next_u64());
+        // Floyd's algorithm: for j in n-k..n pick t in [0, j]; insert t
+        // unless already chosen, else insert j. Exactly k distinct ids,
+        // uniform over k-subsets, O(k) memory.
+        let mut chosen: HashSet<usize> = HashSet::with_capacity(k * 2);
+        let mut order: Vec<usize> = Vec::with_capacity(k);
+        for j in n - k..n {
+            let t = rng.below(j + 1);
+            let pick = if chosen.insert(t) { t } else { j };
+            if pick != t {
+                chosen.insert(pick);
+            }
+            order.push(pick);
+        }
+        order
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,5 +181,73 @@ mod tests {
     #[should_panic]
     fn zero_mass_panics() {
         CdfSampler::new(&[0.0, 0.0]);
+    }
+
+    #[test]
+    fn participants_distinct_in_range_exact_count() {
+        let s = ParticipantSampler::new(2027);
+        for round in [0u64, 1, 7, 1000] {
+            for (n, k) in [(10usize, 3usize), (100, 100), (1000, 1), (5, 9)] {
+                let ids = s.sample_round(round, n, k);
+                assert_eq!(ids.len(), k.min(n), "round {round} n={n} k={k}");
+                let mut sorted = ids.clone();
+                sorted.sort_unstable();
+                sorted.dedup();
+                assert_eq!(sorted.len(), ids.len(), "round {round}: duplicate id");
+                assert!(ids.iter().all(|&i| i < n), "round {round}: out of range");
+            }
+        }
+    }
+
+    #[test]
+    fn participants_pure_function_of_seed_and_round() {
+        let a = ParticipantSampler::new(7);
+        let b = ParticipantSampler::new(7);
+        let c = ParticipantSampler::new(8);
+        assert_eq!(a.sample_round(3, 1000, 50), b.sample_round(3, 1000, 50));
+        assert_ne!(a.sample_round(3, 1000, 50), c.sample_round(3, 1000, 50));
+        assert_ne!(
+            a.sample_round(3, 1000, 50),
+            a.sample_round(4, 1000, 50),
+            "consecutive rounds must draw different subsets"
+        );
+        // repeat calls for the same round are identical (stateless)
+        assert_eq!(a.sample_round(9, 64, 16), a.sample_round(9, 64, 16));
+    }
+
+    #[test]
+    fn participants_independent_of_main_stream() {
+        // advancing an unrelated Rng (the trainer's main stream) must
+        // not perturb the participant draws
+        let s = ParticipantSampler::new(42);
+        let before = s.sample_round(5, 200, 20);
+        let mut other = Rng::seed_from_u64(42);
+        for _ in 0..1234 {
+            other.next_u64();
+        }
+        assert_eq!(s.sample_round(5, 200, 20), before);
+    }
+
+    #[test]
+    fn participants_roughly_uniform() {
+        // every client id should be drawn sometimes across many rounds
+        let s = ParticipantSampler::new(99);
+        let n = 50;
+        let mut counts = vec![0usize; n];
+        for round in 0..400u64 {
+            for id in s.sample_round(round, n, 10) {
+                counts[id] += 1;
+            }
+        }
+        // expectation 80 per id; a zero would mean a dead client
+        assert!(counts.iter().all(|&c| c > 30), "counts {counts:?}");
+    }
+
+    #[test]
+    fn empty_and_oversized_requests() {
+        let s = ParticipantSampler::new(1);
+        assert!(s.sample_round(0, 0, 5).is_empty());
+        assert!(s.sample_round(0, 10, 0).is_empty());
+        assert_eq!(s.sample_round(0, 3, 10).len(), 3);
     }
 }

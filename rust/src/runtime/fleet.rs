@@ -233,8 +233,14 @@ pub struct RoundAggregate {
     pub metrics: MetricAccumulator,
     /// Upload traffic merged across batches in batch order.
     pub ledger: TrafficLedger,
-    /// (client id, solved p_i) in participant order.
-    pub factors: Vec<(usize, Vec<f32>)>,
+    /// Participating client ids in round order, aligned with the flat
+    /// `factors` buffer (slot `i` is `factors[i*k .. (i+1)*k]`). Two flat
+    /// buffers instead of a `Vec<(usize, Vec<f32>)>`: a Θ-participant
+    /// round used to make Θ separate K-sized heap allocations per round
+    /// just to carry solved factors across the merge barrier.
+    pub factor_ids: Vec<usize>,
+    /// Solved p_i factors, flat K-sized slots aligned with `factor_ids`.
+    pub factors: Vec<f32>,
     /// Busy nanoseconds per phase summed over batches (across lanes, so
     /// this can exceed wall-clock): solve, grad, codec, eval.
     pub phase_ns: [u128; 4],
@@ -264,7 +270,8 @@ pub fn merge_outcomes(
     );
     let mut agg = RoundAggregate {
         grad: vec![0.0f32; m_s * k],
-        factors: Vec::with_capacity(client_ids.len()),
+        factor_ids: Vec::with_capacity(client_ids.len()),
+        factors: Vec::with_capacity(client_ids.len() * k),
         ..RoundAggregate::default()
     };
     for (i, o) in outcomes.iter().enumerate() {
@@ -287,9 +294,8 @@ pub fn merge_outcomes(
             o.p.len(),
             (hi - lo) * k
         );
-        for (u, &cid) in client_ids[lo..hi].iter().enumerate() {
-            agg.factors.push((cid, o.p[u * k..(u + 1) * k].to_vec()));
-        }
+        agg.factor_ids.extend_from_slice(&client_ids[lo..hi]);
+        agg.factors.extend_from_slice(&o.p[..(hi - lo) * k]);
         for (total, ns) in agg.phase_ns.iter_mut().zip(&o.phase_ns) {
             *total += ns;
         }
@@ -752,10 +758,10 @@ mod tests {
                     );
                     assert_eq!(b.metrics.count(), agg.metrics.count());
                     assert_eq!(b.metrics.mean().map.to_bits(), agg.metrics.mean().map.to_bits());
+                    assert_eq!(b.factor_ids, agg.factor_ids);
                     assert_eq!(b.factors.len(), agg.factors.len());
-                    for ((ca, pa), (cb, pb)) in b.factors.iter().zip(&agg.factors) {
-                        assert_eq!(ca, cb);
-                        assert_eq!(pa, pb);
+                    for (pa, pb) in b.factors.iter().zip(&agg.factors) {
+                        assert_eq!(pa.to_bits(), pb.to_bits(), "threads={threads}");
                     }
                 }
             }
@@ -806,9 +812,10 @@ mod tests {
         ];
         let agg = merge_outcomes(m_s, k, &client_ids, batch, &outcomes).unwrap();
         assert_eq!(agg.grad, vec![111.0, 222.0, 333.0, 444.0]);
-        let ids: Vec<usize> = agg.factors.iter().map(|(c, _)| *c).collect();
-        assert_eq!(ids, client_ids);
-        assert_eq!(agg.factors[4].1, vec![0.9, 1.0]);
+        assert_eq!(agg.factor_ids, client_ids);
+        // flat buffer: slot i is factors[i*k .. (i+1)*k]
+        assert_eq!(agg.factors.len(), client_ids.len() * k);
+        assert_eq!(&agg.factors[4 * k..5 * k], &[0.9, 1.0]);
         // per-batch stats come out in batch-index order with exact sizes
         assert_eq!(agg.batches.len(), 3);
         let order: Vec<usize> = agg.batches.iter().map(|b| b.batch).collect();
@@ -831,6 +838,7 @@ mod tests {
         let mut ex = FleetExecutor::new(factory, 4);
         let agg = ex.run_round(task, &mut local, codec.as_ref()).unwrap();
         assert_eq!(agg.grad, vec![0.0f32; 16 * 8]);
+        assert!(agg.factor_ids.is_empty());
         assert!(agg.factors.is_empty());
         assert_eq!(agg.ledger.up_msgs, 0);
         assert_eq!(agg.metrics.count(), 0);

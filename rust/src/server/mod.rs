@@ -40,7 +40,7 @@ use crate::linalg::Mat;
 use crate::metrics::{MetricAccumulator, MetricSet};
 use crate::optim::Adam;
 use crate::reward::RewardEngine;
-use crate::rng::Rng;
+use crate::rng::{ParticipantSampler, Rng};
 use crate::runtime::fleet::{BackendFactory, FleetExecutor, RoundTask};
 use crate::runtime::{make_backend, FcfRuntime, SelRow};
 use crate::simnet::TrafficLedger;
@@ -170,6 +170,11 @@ pub struct Trainer {
     /// deterministic batch-order merge.
     executor: FleetExecutor,
     rng: Rng,
+    /// Dedicated per-round participant stream for `fleet.theta_sample`
+    /// runs. Keyed purely by `(cfg.seed, round index)` — never consulted
+    /// on the legacy (unset) path, so legacy rounds stay byte-identical
+    /// and sampled draws are independent of the main stream's position.
+    participant_sampler: ParticipantSampler,
     t: u64,
     metric_history: VecDeque<MetricSet>,
     ledger: TrafficLedger,
@@ -281,6 +286,27 @@ impl Trainer {
                 runtime.borrow().b
             );
         }
+        if let Some(k) = cfg.fleet.theta_sample {
+            info!(
+                "fleet: per-round participant sampling active, theta_sample = {k} \
+                 of theta = {} (dedicated stream)",
+                cfg.train.theta
+            );
+            if cfg.codec.codebook_reuse.is_active() && cfg.codec.precision.is_vq() {
+                // With only K of Θ clients hearing each broadcast, most of
+                // the fleet misses codebook installs and churns back in as
+                // resync traffic — sessions still converge bit-identically,
+                // but the reuse savings the mode exists for are starved.
+                warn_log!(
+                    "fleet.theta_sample = {k} with codec.codebook_reuse = {}: sampled \
+                     rounds reach only {k}/{} clients per broadcast, so cached-codebook \
+                     reuse is starved and stale participants resync often; expect extra \
+                     download bytes",
+                    cfg.codec.codebook_reuse.name(),
+                    cfg.train.theta
+                );
+            }
+        }
         let vq_session = if cfg.codec.codebook_reuse.is_active() {
             if cfg.codec.precision.is_vq() {
                 Some(VqSession::new(
@@ -387,6 +413,7 @@ impl Trainer {
             q,
             runtime,
             rng,
+            participant_sampler: ParticipantSampler::new(cfg.seed),
             t: 0,
             metric_history: VecDeque::new(),
             ledger: TrafficLedger::new(),
@@ -737,9 +764,18 @@ impl Trainer {
         let down_before = self.ledger.down_bytes;
         let up_before = self.ledger.up_bytes;
         let stats_before = self.session_stats;
-        let participants = self
-            .fleet
-            .sample_participants(self.cfg.train.theta, &mut self.rng);
+        // `theta_sample` draws from the dedicated per-round stream and
+        // must never touch `self.rng`; the legacy path must never touch
+        // the sampler — either way the other stream's position is
+        // unaffected, which is what keeps old journals and goldens valid.
+        let participants = match self.cfg.fleet.theta_sample {
+            Some(k) => self
+                .participant_sampler
+                .sample_round(self.t, self.fleet.len(), k),
+            None => self
+                .fleet
+                .sample_participants(self.cfg.train.theta, &mut self.rng),
+        };
         match &session_frame {
             Some(enc) => {
                 match enc.mode {
@@ -880,9 +916,10 @@ impl Trainer {
             }
         }
         // barrier merge: upload ledger (per-client frames), local factors
+        // (flat slot buffer — no per-participant allocation crosses here)
         self.ledger.merge(&agg.ledger);
-        for (cid, p) in agg.factors {
-            self.fleet.set_factors(cid, p);
+        for (i, &cid) in agg.factor_ids.iter().enumerate() {
+            self.fleet.set_factors(cid, &agg.factors[i * k..(i + 1) * k]);
         }
         let round_acc = agg.metrics;
         let mut g_total = agg.grad;
@@ -1262,6 +1299,55 @@ mod tests {
             .filter(|&c| !tr.fleet().factors(c).is_empty())
             .count();
         assert_eq!(with_p, 16); // exactly Θ participants got fresh factors
+    }
+
+    #[test]
+    fn theta_sample_draws_exactly_k_per_round_reproducibly() {
+        let mut cfg = tiny_cfg();
+        cfg.fleet.theta_sample = Some(5);
+        let r1 = Trainer::from_config(&cfg).unwrap().run().unwrap();
+        let r2 = Trainer::from_config(&cfg).unwrap().run().unwrap();
+        // one download message per participant per round: exactly K of them
+        assert_eq!(r1.ledger.down_msgs, 4 * 5);
+        assert_eq!(round_dump_string(&r1), round_dump_string(&r2));
+        // the sampled trajectory is a different run, not a relabeled one
+        let legacy = Trainer::from_config(&tiny_cfg()).unwrap().run().unwrap();
+        assert_ne!(round_dump_string(&r1), round_dump_string(&legacy));
+    }
+
+    #[test]
+    fn theta_sample_is_thread_count_invariant() {
+        let mut c1 = tiny_cfg();
+        c1.fleet.theta_sample = Some(7);
+        c1.runtime.threads = 1;
+        let mut c4 = c1.clone();
+        c4.runtime.threads = 4;
+        let r1 = Trainer::from_config(&c1).unwrap().run().unwrap();
+        let r4 = Trainer::from_config(&c4).unwrap().run().unwrap();
+        assert_eq!(round_dump_string(&r1), round_dump_string(&r4));
+    }
+
+    #[test]
+    fn theta_sample_runs_journal_and_replay_verify() {
+        // the journal's participants field records the sampled ids, so a
+        // --resume replay re-draws them from the dedicated stream and
+        // verifies the match round by round
+        let dir = std::env::temp_dir().join("fedpayload_theta_sample_resume");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let jpath = dir.join("run.jsonl");
+        let mut cfg = tiny_cfg();
+        cfg.fleet.theta_sample = Some(6);
+        cfg.journal.path = Some(jpath.to_string_lossy().into_owned());
+        let full = Trainer::from_config(&cfg).unwrap().run().unwrap();
+        let mut rcfg = cfg.clone();
+        rcfg.journal.resume = cfg.journal.path.clone();
+        rcfg.journal.path = None;
+        let mut tr = Trainer::from_config(&rcfg).unwrap();
+        let resumed = tr.run().unwrap();
+        assert_eq!(resumed.replayed_rounds, 4);
+        assert_eq!(round_dump_string(&full), round_dump_string(&resumed));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -1,0 +1,175 @@
+//! Fleet-scale integration: arena-backed client state under per-round
+//! participant sampling (`fleet.theta_sample`).
+//!
+//! The fast default test runs a Θ = 10^4-client fleet and pins the two
+//! fleet-scale contracts end to end: every round touches *exactly*
+//! `theta_sample` clients (ledger message counts, not approximations),
+//! and the fixed per-client state stays inside the documented budget of
+//! 64 bytes per client — 48 B of arena (interaction ids + offset
+//! tables) plus 8 B of slot maps, with the remainder headroom for the
+//! participant-proportional factor store.
+//!
+//! The `#[ignore]`d test repeats the same checks at Θ = 10^5 clients
+//! (about a second of wall clock and ~7 MB of fleet state; run it with
+//! `cargo test --test integration_fleet -- --ignored`). Its memory
+//! ceiling is exact, not a smoke bound: the arena byte total is a
+//! closed-form function of the synthetic layout, asserted with `==`.
+
+use fedpayload::config::RunConfig;
+use fedpayload::data::{Interactions, Split};
+use fedpayload::server::Trainer;
+
+/// Catalog size for the synthetic fleet (small on purpose — the tests
+/// measure fleet-state scaling, not item-factor math).
+const ITEMS: usize = 256;
+/// Train interactions per client; offsets `j*31` are distinct mod 256.
+const TRAIN_PER_CLIENT: usize = 8;
+/// Held-out interactions per client (offsets 7 and 38 never collide
+/// with the train offsets {0, 31, 62, ..., 217}).
+const TEST_PER_CLIENT: usize = 2;
+
+/// Deterministic fleet: client `c` trains on `(c + j·31) mod 256` and
+/// holds out `(c + 7) mod 256`, `(c + 38) mod 256`. Exact nnz counts
+/// (8n train, 2n test) make every arena byte total closed-form.
+fn synth_split(clients: usize) -> Split {
+    let mut train_pairs = Vec::with_capacity(clients * TRAIN_PER_CLIENT);
+    let mut test_pairs = Vec::with_capacity(clients * TEST_PER_CLIENT);
+    for c in 0..clients {
+        for j in 0..TRAIN_PER_CLIENT {
+            train_pairs.push((c as u32, ((c + j * 31) % ITEMS) as u32));
+        }
+        for j in 0..TEST_PER_CLIENT {
+            test_pairs.push((c as u32, ((c + 7 + j * 31) % ITEMS) as u32));
+        }
+    }
+    Split {
+        train: Interactions::from_pairs(clients, ITEMS, train_pairs).unwrap(),
+        test: Interactions::from_pairs(clients, ITEMS, test_pairs).unwrap(),
+    }
+}
+
+fn fleet_cfg(clients: usize, theta_sample: usize) -> RunConfig {
+    let mut cfg = RunConfig::paper_defaults();
+    cfg.dataset.name = "synthetic".into();
+    cfg.dataset.users = clients;
+    cfg.dataset.items = ITEMS;
+    cfg.dataset.interactions = clients * (TRAIN_PER_CLIENT + TEST_PER_CLIENT);
+    cfg.train.theta = 512;
+    cfg.fleet.theta_sample = Some(theta_sample);
+    cfg.train.payload_fraction = 0.25;
+    cfg.train.iterations = 3;
+    cfg.train.eval_every = 1_000_000; // manual rounds, no eval sweeps
+    cfg.runtime.backend = "reference".into();
+    cfg.runtime.threads = 1;
+    cfg
+}
+
+/// Closed-form arena heap bytes for `synth_split(n)`: four u32 buffers —
+/// 8n train ids, 2n test ids, and two (n+1)-entry offset tables.
+fn expected_arena_bytes(n: usize) -> usize {
+    4 * (TRAIN_PER_CLIENT * n + TEST_PER_CLIENT * n + 2 * (n + 1))
+}
+
+/// Drive `rounds` rounds and assert the exact per-round participation
+/// and per-client memory contracts at fleet size `clients`.
+fn check_fleet_scale(clients: usize, theta_sample: usize, rounds: usize) {
+    let cfg = fleet_cfg(clients, theta_sample);
+    let mut tr = Trainer::with_split(&cfg, synth_split(clients)).unwrap();
+
+    // the arena packs with exact capacities — byte-for-byte closed form
+    assert_eq!(
+        tr.fleet().view().arena().heap_bytes(),
+        expected_arena_bytes(clients),
+        "arena heap bytes diverged from the closed-form layout"
+    );
+
+    // exactly theta_sample participants per round: the ledger counts one
+    // download and one upload message per participant, and the sampler
+    // draws without replacement
+    for r in 0..rounds {
+        let down_before = tr.ledger().down_msgs;
+        let up_before = tr.ledger().up_msgs;
+        tr.round().unwrap();
+        assert_eq!(
+            tr.ledger().down_msgs - down_before,
+            theta_sample as u64,
+            "round {r}: download messages != theta_sample"
+        );
+        assert_eq!(
+            tr.ledger().up_msgs - up_before,
+            theta_sample as u64,
+            "round {r}: upload messages != theta_sample"
+        );
+    }
+
+    // factor storage grows with participants, never with fleet size
+    let participated = tr.fleet().participated_clients();
+    assert!(participated >= theta_sample, "first round must seat its draw");
+    assert!(
+        participated <= rounds * theta_sample,
+        "participant slots ({participated}) exceeded rounds x theta_sample"
+    );
+
+    // the documented per-client budget: 48 B arena + 8 B slot maps fixed,
+    // and the participant-proportional factor store fits the headroom at
+    // these scales — 64 B/client total, fleet-size independent
+    let total = tr.fleet().state_bytes() + tr.fleet().view().arena().heap_bytes();
+    let per_client = total as f64 / clients as f64;
+    assert!(
+        per_client <= 64.0,
+        "fleet state is {per_client:.1} B/client (budget: 64 B) — \
+         total {total} B for {clients} clients"
+    );
+}
+
+/// Fast default leg: Θ = 10^4 clients, 128 sampled per round.
+#[test]
+fn sampled_fleet_10k_exact_participation_and_flat_state() {
+    check_fleet_scale(10_000, 128, 3);
+}
+
+/// Θ = 10^5-client leg. Ignored by default — it allocates the full
+/// 10^5-client arena (4.8 MB) plus slot maps (0.8 MB) and runs three
+/// sampled rounds; the memory ceiling is the same 64 B/client budget,
+/// now dominated by the closed-form 56 B/client fixed state (5.6 MB
+/// total), with the 256-participant factor store amortizing to under
+/// 1 B/client. Run with `cargo test --test integration_fleet -- --ignored`.
+#[test]
+#[ignore]
+fn sampled_fleet_100k_memory_ceiling() {
+    check_fleet_scale(100_000, 256, 3);
+}
+
+/// Two trainers with identical configs walk identical sampled
+/// trajectories — participation, traffic, and installed factors all
+/// reproduce (the sampler is a pure function of (seed, round)).
+#[test]
+fn sampled_fleet_rounds_are_reproducible() {
+    let cfg = fleet_cfg(10_000, 64);
+    let mut a = Trainer::with_split(&cfg, synth_split(10_000)).unwrap();
+    let mut b = Trainer::with_split(&cfg, synth_split(10_000)).unwrap();
+    for _ in 0..3 {
+        a.round().unwrap();
+        b.round().unwrap();
+        assert_eq!(a.ledger().down_msgs, b.ledger().down_msgs);
+        assert_eq!(a.ledger().total_bytes(), b.ledger().total_bytes());
+        assert_eq!(
+            a.fleet().participated_clients(),
+            b.fleet().participated_clients()
+        );
+        assert_eq!(a.fleet().state_bytes(), b.fleet().state_bytes());
+    }
+    // the seated factor vectors themselves are bitwise equal (an empty
+    // slice marks a never-participated client — the sets must match too)
+    for cid in 0..10_000 {
+        let (pa, pb) = (a.fleet().factors(cid), b.fleet().factors(cid));
+        assert_eq!(
+            pa.len(),
+            pb.len(),
+            "participation sets diverged for client {cid}"
+        );
+        for (x, y) in pa.iter().zip(pb) {
+            assert_eq!(x.to_bits(), y.to_bits(), "factors diverged for client {cid}");
+        }
+    }
+}
