@@ -1,0 +1,132 @@
+//! Transport-lane microbench: what the TCP framing layer costs on top
+//! of the payload codec. Four families of rows, all wall-clock facts
+//! (never gated — byte determinism is the tests' job, not this bench's):
+//!
+//! 1. `frame_encode_*` / `frame_decode_*` — assemble/parse one framed
+//!    message (magic + type + length + payload + FNV checksum) at
+//!    device-frame, broadcast-frame, and near-cap payload sizes;
+//! 2. `loopback_rtt_*` — one framed message to a loopback echo peer
+//!    and its echo back: the floor for a download → ack exchange;
+//! 3. `proto_roundtrip_download` — encode + decode of a realistic
+//!    `Download` protocol message (64-item × k=25 f32 frame payload);
+//! 4. `sched_schedule` — the download scheduler's per-transfer cost
+//!    (BTreeMap upsert), which sits on the hot path of every paced
+//!    download.
+//!
+//! Honours `FEDPAYLOAD_BENCH_BUDGET_SECS` (CI sets a small budget) and
+//! `FEDPAYLOAD_BENCH_JSON` for the output path, like every other bench
+//! target.
+
+use std::io::Write as _;
+use std::net::{TcpListener, TcpStream};
+
+use fedpayload::telemetry::bench;
+use fedpayload::transport::framing::{read_msg, write_msg, MSG_HEADER_LEN};
+use fedpayload::transport::proto::Msg;
+use fedpayload::transport::sched::DownloadScheduler;
+
+/// Payload sizes: a 64-item × k=25 f32 device frame (~6.4 KiB), a
+/// 2048-item broadcast frame (~200 KiB), and a 4 MiB stress frame.
+const SIZES: &[(&str, usize)] = &[
+    ("device_6k", 64 * 25 * 4),
+    ("broadcast_200k", 2048 * 25 * 4),
+    ("stress_4m", 4 << 20),
+];
+
+fn main() {
+    let mut rows: Vec<String> = Vec::new();
+    let mut push = |name: &str, bytes: usize, r: &fedpayload::telemetry::BenchResult| {
+        let wire = (MSG_HEADER_LEN + bytes + 4) as f64;
+        rows.push(format!(
+            "    {{\"name\": \"{name}\", \"payload_bytes\": {bytes}, \
+             \"mean_ns\": {:.0}, \"p50_ns\": {:.0}, \"p95_ns\": {:.0}, \
+             \"mib_per_sec\": {:.1}}}",
+            r.mean_ns,
+            r.p50_ns,
+            r.p95_ns,
+            wire / (r.mean_ns / 1e9) / (1024.0 * 1024.0)
+        ));
+    };
+
+    println!("=== transport framing (FPTL: 9 B header + payload + FNV-1a checksum) ===");
+    for &(label, size) in SIZES {
+        let payload = vec![0xA5u8; size];
+        let mut buf = Vec::with_capacity(size + 64);
+        let r = bench(&format!("frame_encode_{label}"), || {
+            buf.clear();
+            write_msg(&mut buf, 7, &payload).unwrap();
+            buf.len()
+        });
+        push(&format!("frame_encode_{label}"), size, &r);
+
+        let mut wire = Vec::new();
+        write_msg(&mut wire, 7, &payload).unwrap();
+        let r = bench(&format!("frame_decode_{label}"), || {
+            read_msg(&mut &wire[..]).unwrap().unwrap().1.len()
+        });
+        push(&format!("frame_decode_{label}"), size, &r);
+    }
+
+    println!("=== loopback echo round-trip (std::net blocking TCP) ===");
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let echo = std::thread::spawn(move || {
+        let (mut conn, _) = listener.accept().unwrap();
+        let _ = conn.set_nodelay(true);
+        while let Ok(Some((ty, payload))) = read_msg(&mut conn) {
+            if write_msg(&mut conn, ty, &payload).is_err() {
+                break;
+            }
+        }
+    });
+    {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+        for &(label, size) in SIZES {
+            let payload = vec![0x5Au8; size];
+            let r = bench(&format!("loopback_rtt_{label}"), || {
+                write_msg(&mut stream, 3, &payload).unwrap();
+                read_msg(&mut stream).unwrap().unwrap().1.len()
+            });
+            push(&format!("loopback_rtt_{label}"), size, &r);
+        }
+        // dropping the stream sends EOF; the echo thread exits cleanly
+    }
+    echo.join().unwrap();
+
+    println!("=== protocol message encode/decode ===");
+    let frame: Vec<u8> = (0..64 * 25 * 4).map(|i| (i % 251) as u8).collect();
+    let msg = Msg::Download {
+        iter: 42,
+        client: 1337,
+        frame: frame.clone(),
+    };
+    let r = bench("proto_roundtrip_download", || {
+        let (ty, payload) = msg.encode();
+        Msg::decode(ty, &payload).unwrap()
+    });
+    push("proto_roundtrip_download", frame.len(), &r);
+
+    println!("=== download scheduler (per-client pacing) ===");
+    let mut sched = DownloadScheduler::new(1_000_000_000);
+    let mut now = 0u64;
+    let mut client = 0u64;
+    let r = bench("sched_schedule", || {
+        client = (client + 1) % 4096;
+        now += 1_000;
+        sched.schedule(client, 8192, now)
+    });
+    rows.push(format!(
+        "    {{\"name\": \"sched_schedule\", \"clients\": 4096, \"mean_ns\": {:.0}, \
+         \"p50_ns\": {:.0}, \"p95_ns\": {:.0}}}",
+        r.mean_ns, r.p50_ns, r.p95_ns
+    ));
+
+    let mut json = String::from("{\n  \"bench\": \"transport\",\n  \"results\": [\n");
+    json.push_str(&rows.join(",\n"));
+    json.push_str("\n  ]\n}\n");
+    let out =
+        std::env::var("FEDPAYLOAD_BENCH_JSON").unwrap_or_else(|_| "BENCH_transport.json".into());
+    std::fs::write(&out, json).unwrap();
+    println!("\nwrote {out}");
+}

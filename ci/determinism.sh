@@ -38,10 +38,18 @@
 #      the uninterrupted sampled run's dump and journal bytes, which
 #      requires the resume replay to re-verify the journaled
 #      participant sets against the sampler stream.
+#   9. the transport lane (rust/src/transport): a real multi-process
+#      loopback session — one `coordinator` + two `client` processes
+#      over 127.0.0.1 TCP — produces round dumps and journal bytes
+#      identical to the in-process lane, on the f32 and stateful
+#      vq8-session codecs at threads 1 and 4 (delegated to
+#      ci/transport_e2e.sh; skipped with a notice when the bin pair
+#      has not been built).
 #
 # Usage:  ci/determinism.sh [workdir]
 #   BIN=path/to/fedpayload overrides the binary (default:
-#   target/release/fedpayload relative to the repo root).
+#   target/release/fedpayload relative to the repo root); §9 also
+#   honours COORD= and CLIENT= for the transport bin pair.
 
 set -euo pipefail
 
@@ -236,5 +244,17 @@ diff journal_ts_part.jsonl journal_ts_full.jsonl
 diff rounds_ts_resumed_t4.csv rounds_ts_t1.csv
 diff journal_ts_part_t4.jsonl journal_ts_full.jsonl
 echo "   ok"
+
+echo "== 9: transport lane — multi-process loopback vs in-process =="
+COORD="${COORD:-$REPO_ROOT/target/release/coordinator}"
+CLIENT="${CLIENT:-$REPO_ROOT/target/release/client}"
+if [ -x "$COORD" ] && [ -x "$CLIENT" ]; then
+  # already cd'd into $WORKDIR — nest the transport leg's evidence here
+  BIN="$BIN" COORD="$COORD" CLIENT="$CLIENT" \
+    "$REPO_ROOT/ci/transport_e2e.sh" transport
+  echo "   ok"
+else
+  echo "   skipped: coordinator/client bins not built (cargo build --release builds them; the transport-e2e CI job runs this leg regardless)"
+fi
 
 echo "determinism: all checks passed"

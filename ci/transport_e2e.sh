@@ -1,0 +1,132 @@
+#!/usr/bin/env bash
+# Transport-lane determinism gate, runnable locally and in CI.
+#
+# Runs a REAL multi-process loopback session — one `coordinator` process
+# plus two `client` processes talking length-prefixed checksummed frames
+# over 127.0.0.1 TCP — and byte-diffs its outputs against the in-process
+# `fedpayload train` lane:
+#
+#   1. the f32 reference leg, at threads 1 and 4: round dumps AND
+#      journal bytes from the socket run must equal the in-process
+#      run's exactly (transport timing lives only in trace `"t":{...}`
+#      fields, which the round dump and journal never carry),
+#   2. the stateful codec leg (vq8 + full entropy + codebook-reuse
+#      auto on the stable-Q strategy-full workload), at threads 1 and
+#      4: the cross-round codebook session state machine survives the
+#      hop onto sockets bit-for-bit,
+#   3. and across the lanes' own thread counts: the TCP dumps at
+#      threads 1 and 4 are diffed against each other, same as the
+#      in-process contract in ci/determinism.sh.
+#
+# Every process's stdout/stderr lands in a *.log file in the workdir so
+# the CI artifact upload ships the evidence even when a leg goes red.
+#
+# Usage:  ci/transport_e2e.sh [workdir]
+#   BIN=...    overrides the in-process binary
+#   COORD=...  overrides the coordinator binary
+#   CLIENT=... overrides the client binary
+#   (defaults: target/release/{fedpayload,coordinator,client})
+
+set -euo pipefail
+
+REPO_ROOT="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
+BIN="${BIN:-$REPO_ROOT/target/release/fedpayload}"
+COORD="${COORD:-$REPO_ROOT/target/release/coordinator}"
+CLIENT="${CLIENT:-$REPO_ROOT/target/release/client}"
+for b in "$BIN" "$COORD" "$CLIENT"; do
+  test -x "$b" || { echo "missing binary: $b (build with: cargo build --release --bin fedpayload --bin coordinator --bin client)"; exit 1; }
+done
+WORKDIR="${1:-$(mktemp -d)}"
+mkdir -p "$WORKDIR"
+cd "$WORKDIR" || exit 1
+echo "transport e2e workdir: $WORKDIR"
+echo "  fedpayload:  $BIN"
+echo "  coordinator: $COORD"
+echo "  client:      $CLIENT"
+
+CLIENTS=2
+
+# Training flags shared verbatim by every process in a leg: the
+# handshake rejects any client whose resolved config fingerprints
+# differently from the coordinator's, naming the first differing key.
+ARGS=(--dataset synthetic-small --backend reference
+      --iterations 6 --payload-fraction 0.25 --seed 2027
+      --set dataset.users=96 --set dataset.items=128
+      --set dataset.interactions=3000 --set train.theta=96
+      --set train.eval_every=2)
+
+run_inproc() { # run_inproc <tag> <threads> [codec flags...]
+  local tag="$1" threads="$2"; shift 2
+  "$BIN" train "${ARGS[@]}" "$@" --threads "$threads" \
+      --dump-rounds "inproc_${tag}.csv" --journal "inproc_${tag}.jsonl" \
+      > "inproc_${tag}.log" 2>&1
+  echo "  ran: inproc_${tag} (threads=$threads $*)"
+}
+
+run_transport() { # run_transport <tag> <threads> [codec flags...]
+  local tag="$1" threads="$2"; shift 2
+  local port_file="port_${tag}"
+  rm -f "$port_file"
+  "$COORD" train "${ARGS[@]}" "$@" --threads "$threads" \
+      --listen 127.0.0.1:0 --port-file "$port_file" \
+      --transport-clients "$CLIENTS" --connect-timeout-secs 60 \
+      --dump-rounds "tcp_${tag}.csv" --journal "tcp_${tag}.jsonl" \
+      > "coordinator_${tag}.log" 2>&1 &
+  local coord_pid=$!
+  local pids=()
+  local i
+  for i in $(seq 1 "$CLIENTS"); do
+    "$CLIENT" run "${ARGS[@]}" "$@" --threads "$threads" \
+        --port-file "$port_file" --connect-timeout-secs 60 \
+        > "client_${tag}_${i}.log" 2>&1 &
+    pids+=("$!")
+  done
+  local failed=0
+  wait "$coord_pid" || { echo "coordinator_${tag} exited non-zero"; failed=1; }
+  local pid
+  for pid in "${pids[@]}"; do
+    wait "$pid" || { echo "a client_${tag} process exited non-zero"; failed=1; }
+  done
+  if [ "$failed" -ne 0 ]; then
+    echo "--- coordinator_${tag}.log (tail) ---"
+    tail -n 20 "coordinator_${tag}.log" || true
+    for i in $(seq 1 "$CLIENTS"); do
+      echo "--- client_${tag}_${i}.log (tail) ---"
+      tail -n 20 "client_${tag}_${i}.log" || true
+    done
+    return 1
+  fi
+  echo "  ran: tcp_${tag} (1 coordinator + $CLIENTS clients, threads=$threads $*)"
+}
+
+check_leg() { # check_leg <tag>
+  local tag="$1"
+  diff "inproc_${tag}.csv" "tcp_${tag}.csv"
+  diff "inproc_${tag}.jsonl" "tcp_${tag}.jsonl"
+  echo "   ok: $tag — dump and journal bytes identical across lanes"
+}
+
+SESSION=(--codec vq8 --entropy full --codebook-reuse auto --strategy full)
+
+echo "== f32 reference leg =="
+for threads in 1 4; do
+  tag="f32_t${threads}"
+  run_inproc "$tag" "$threads"
+  run_transport "$tag" "$threads"
+  check_leg "$tag"
+done
+
+echo "== vq8 codebook-session leg (stateful cross-round codec) =="
+for threads in 1 4; do
+  tag="sess_t${threads}"
+  run_inproc "$tag" "$threads" "${SESSION[@]}"
+  run_transport "$tag" "$threads" "${SESSION[@]}"
+  check_leg "$tag"
+done
+
+echo "== thread-count invariance on the TCP lane itself =="
+diff tcp_f32_t1.csv tcp_f32_t4.csv
+diff tcp_sess_t1.csv tcp_sess_t4.csv
+echo "   ok"
+
+echo "transport e2e: all checks passed"

@@ -1,0 +1,117 @@
+//! `client` — the device side of the TCP transport lane.
+//!
+//! Hosts one process slot's share of the simulated fleet: rebuilds the
+//! dataset from the same config the coordinator resolved, decodes every
+//! broadcast/download frame, computes its assigned client batches with
+//! the same kernels the in-process executor runs, and ships encoded
+//! gradients back. See `rust/src/transport/client_proc.rs`.
+
+use std::process::ExitCode;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use fedpayload::cli::{resolve_config, Args};
+use fedpayload::telemetry;
+use fedpayload::transport::{connect_with_retry, ClientEngine, FaultPlan};
+
+const USAGE: &str = "\
+client — fedpayload client-process engine (TCP transport lane)
+
+USAGE:
+  client run [--connect HOST:PORT | --port-file FILE]
+             [--connect-timeout-secs S]
+             [--exit-after-round N] [--stall-in-round N]
+             [...every `fedpayload train` option...]
+  client help
+
+  Resolves the SAME training config as the coordinator (same flags /
+  config file — the handshake rejects a mismatched determinism
+  fingerprint), dials --connect or the address published in
+  --port-file, and serves rounds until the coordinator shuts the
+  session down. --exit-after-round / --stall-in-round inject the
+  dropout faults the e2e tests drive.
+";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(argv)?;
+    if let Some(level) = args.opt("log-level") {
+        match telemetry::parse_level(level) {
+            Some(l) => telemetry::set_log_level(l),
+            None => bail!(
+                "bad --log-level `{level}` (expected one of: {})",
+                telemetry::LEVEL_NAMES
+            ),
+        }
+    }
+    match args.subcommand.as_deref() {
+        Some("run") | None => cmd_run(&args),
+        Some("help") => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand `{other}`\n{USAGE}"),
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = resolve_config(args)?;
+    let timeout = Duration::from_secs(args.opt_or::<u64>("connect-timeout-secs", 30)?);
+    let addr = match args.opt("port-file") {
+        Some(path) => read_port_file(path, timeout)?,
+        None => cfg.transport.connect.clone(),
+    };
+    let fault = FaultPlan {
+        exit_after_round: args.opt_parse::<u64>("exit-after-round")?,
+        stall_in_round: args.opt_parse::<u64>("stall-in-round")?,
+    };
+    let mut engine = ClientEngine::new(&cfg)?;
+    let stream = connect_with_retry(&addr, timeout)?;
+    let report = engine.run(stream, fault)?;
+    println!(
+        "client: slot {}/{} — {} rounds, {} batches, {} downloads acked, \
+         {} mirror resyncs, {} hosted resyncs{}",
+        report.slot,
+        report.slots,
+        report.rounds,
+        report.batches,
+        report.downloads,
+        report.mirror_resyncs,
+        report.hosted_resyncs,
+        if report.crashed {
+            " (fault-plan exit)"
+        } else {
+            ""
+        }
+    );
+    Ok(())
+}
+
+/// Poll for the coordinator's port file (it is written atomically, so a
+/// readable file is a complete address).
+fn read_port_file(path: &str, timeout: Duration) -> Result<String> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        if let Ok(s) = std::fs::read_to_string(path) {
+            let s = s.trim();
+            if !s.is_empty() {
+                return Ok(s.to_string());
+            }
+        }
+        if Instant::now() >= deadline {
+            bail!("port file {path} did not appear within {timeout:?}");
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}

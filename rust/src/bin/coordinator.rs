@@ -1,0 +1,155 @@
+//! `coordinator` — the trainer with a real TCP round lane.
+//!
+//! Runs the identical training loop as `fedpayload train`, but every
+//! round's downloads, uploads, and batch compute move over sockets to
+//! `client` processes (`rust/src/bin/client.rs`). Fault-free, the
+//! outputs — round dumps, trace digests, journals — are byte-identical
+//! to the in-process bin's; `ci/transport_e2e.sh` diffs them.
+
+use std::process::ExitCode;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use fedpayload::cli::{resolve_config, write_round_dump, Args};
+use fedpayload::server::Trainer;
+use fedpayload::simnet::human_bytes;
+use fedpayload::telemetry;
+use fedpayload::transport::TcpLane;
+
+const USAGE: &str = "\
+coordinator — fedpayload trainer over the TCP transport lane
+
+USAGE:
+  coordinator train [--listen HOST:PORT] [--port-file FILE]
+                    [--transport-clients N] [--connect-timeout-secs S]
+                    [--round-deadline-ms MS] [--bandwidth-cap BPS]
+                    [--wait-rejoin] [--rejoin-wait-ms MS]
+                    [...every `fedpayload train` option...]
+  coordinator help
+
+  Binds --listen (port 0 = ephemeral), writes the bound address to
+  --port-file (atomically; clients poll for it), waits for
+  --transport-clients client processes to handshake, then trains.
+  Client processes must resolve the identical training config — the
+  handshake rejects a mismatched determinism fingerprint, naming the
+  first differing key. --round-deadline-ms bounds each round: what has
+  not arrived by then is dropped and the round aggregates partially.
+  --bandwidth-cap paces each client's downloads (logical schedule;
+  bit-transparent). --wait-rejoin holds round starts until crashed
+  slots reconnect instead of dropping their clients.
+";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(argv)?;
+    if let Some(level) = args.opt("log-level") {
+        match telemetry::parse_level(level) {
+            Some(l) => telemetry::set_log_level(l),
+            None => bail!(
+                "bad --log-level `{level}` (expected one of: {})",
+                telemetry::LEVEL_NAMES
+            ),
+        }
+    }
+    match args.subcommand.as_deref() {
+        Some("train") | None => cmd_train(&args),
+        Some("help") => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand `{other}`\n{USAGE}"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = resolve_config(args)?;
+    let mut trainer = Trainer::from_config(&cfg)?;
+    let mut lane = TcpLane::bind(&cfg.transport, cfg.determinism_fingerprint())?;
+    let addr = lane.local_addr();
+    eprintln!(
+        "coordinator: listening on {addr}, waiting for {} client process(es)",
+        cfg.transport.clients
+    );
+    if let Some(path) = args.opt("port-file") {
+        write_port_file(path, &addr.to_string())?;
+    }
+    let wait = Duration::from_secs(args.opt_or::<u64>("connect-timeout-secs", 60)?);
+    lane.wait_for_fleet(wait)?;
+    eprintln!("coordinator: fleet connected, training starts");
+    trainer.install_lane(Box::new(lane));
+    let report = trainer.run()?;
+    println!(
+        "run complete: strategy={} codec={} entropy={} codebook_reuse={} iterations={} \
+         M={} M_s={} ({:.0}% payload reduction)",
+        report.strategy,
+        report.codec,
+        report.entropy,
+        report.codebook_reuse,
+        report.iterations,
+        report.m,
+        report.m_s,
+        report.payload_reduction_pct()
+    );
+    if let Some(s) = &report.session {
+        println!(
+            "codebook session: {} reuse / {} delta / {} full frames, {} resyncs \
+             ({:+} extra bytes)",
+            s.reuse_frames, s.delta_frames, s.full_frames, s.resync_msgs, s.resync_extra_bytes
+        );
+    }
+    println!("final metrics (window mean): {}", report.final_metrics);
+    println!(
+        "traffic: down={} ({} msgs), up={} ({} msgs), simulated transfer {:.1}s",
+        human_bytes(report.ledger.down_bytes),
+        report.ledger.down_msgs,
+        human_bytes(report.ledger.up_bytes),
+        report.ledger.up_msgs,
+        report.ledger.sim_secs
+    );
+    if let Some(t) = trainer.lane_mut().stats() {
+        println!(
+            "transport: {} rounds, {} msgs sent / {} recv ({} / {} on the wire), \
+             {} resyncs served ({} requested), {} dropouts, {} rejoins, \
+             {} deadline expiries, {:.3}s paced",
+            t.rounds,
+            t.msgs_sent,
+            t.msgs_recv,
+            human_bytes(t.bytes_sent),
+            human_bytes(t.bytes_recv),
+            t.resyncs_served,
+            t.need_resync_reqs,
+            t.dropouts,
+            t.rejoins,
+            t.deadline_expiries,
+            t.paced_wait_ns as f64 / 1e9
+        );
+    }
+    if let Some(path) = args.opt("dump-rounds") {
+        write_round_dump(path, &report)?;
+        println!("round records dumped to {path}");
+    }
+    if let Some(path) = cfg.journal.path.as_ref().or(cfg.journal.resume.as_ref()) {
+        println!("round journal: {path}");
+    }
+    Ok(())
+}
+
+/// Publish the bound address atomically (write + rename) so a client
+/// polling the path can never read a half-written file.
+fn write_port_file(path: &str, addr: &str) -> Result<()> {
+    let tmp = format!("{path}.tmp");
+    std::fs::write(&tmp, addr).with_context(|| format!("writing port file {tmp}"))?;
+    std::fs::rename(&tmp, path).with_context(|| format!("publishing port file {path}"))?;
+    Ok(())
+}

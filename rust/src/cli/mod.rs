@@ -1,12 +1,18 @@
 //! Hand-rolled CLI argument parser (clap unavailable offline).
 //!
 //! Grammar: `fedpayload <subcommand> [positional...] [--flag] [--key value]
-//! [--key=value]`. The launcher (`rust/src/main.rs`) declares subcommands;
-//! this module only does the token wrangling and typed lookups.
+//! [--key=value]`. The launchers (`rust/src/main.rs` and the transport
+//! bins `rust/src/bin/{coordinator,client}.rs`) declare subcommands;
+//! this module does the token wrangling, typed lookups, and the shared
+//! flags→[`RunConfig`] resolution so all three bins accept the same
+//! training options.
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::{Doc, RunConfig, Strategy};
+use crate::telemetry;
 
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
@@ -54,6 +60,17 @@ const VALUE_KEYS: &[&str] = &[
     "trace-level",
     "journal",
     "resume",
+    // transport-lane bins (coordinator / client)
+    "listen",
+    "connect",
+    "transport-clients",
+    "round-deadline-ms",
+    "bandwidth-cap",
+    "rejoin-wait-ms",
+    "port-file",
+    "connect-timeout-secs",
+    "exit-after-round",
+    "stall-in-round",
 ];
 
 impl Args {
@@ -121,6 +138,128 @@ impl Args {
     {
         Ok(self.opt_parse(key)?.unwrap_or(default))
     }
+}
+
+/// Resolve the effective config: file -> --set overrides -> typed flags.
+/// Shared by the `fedpayload`, `coordinator`, and `client` bins so a
+/// transport pair resolves the identical [`RunConfig`] (and therefore
+/// the identical determinism fingerprint) from the identical flags.
+pub fn resolve_config(args: &Args) -> Result<RunConfig> {
+    let mut doc = match args.opt("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading config {path}"))?;
+            Doc::parse(&text)?
+        }
+        None => Doc::default(),
+    };
+    // `--dataset` is a preset: apply it BEFORE --set overrides so that
+    // e.g. `--dataset movielens --set dataset.items=766` keeps the 766.
+    if let Some(ds) = args.opt("dataset") {
+        doc.set("dataset.name", crate::config::Value::Str(ds.to_string()));
+    }
+    for spec in args.opt_all("set") {
+        doc.apply_override(spec)?;
+    }
+    let mut cfg = RunConfig::from_doc(&doc)?;
+    if let Some(s) = args.opt("strategy") {
+        cfg.bandit.strategy = Strategy::parse(s)?;
+    }
+    if let Some(n) = args.opt_parse::<usize>("iterations")? {
+        cfg.train.iterations = n;
+    }
+    if let Some(f) = args.opt_parse::<f64>("payload-fraction")? {
+        cfg.train.payload_fraction = f;
+    }
+    if let Some(n) = args.opt_parse::<usize>("theta")? {
+        cfg.train.theta = n;
+    }
+    if let Some(n) = args.opt_parse::<usize>("theta-sample")? {
+        cfg.fleet.theta_sample = Some(n);
+    }
+    if let Some(n) = args.opt_parse::<u64>("seed")? {
+        cfg.seed = n;
+    }
+    if let Some(b) = args.opt("backend") {
+        cfg.runtime.backend = b.to_string();
+    }
+    if let Some(n) = args.opt_parse::<usize>("threads")? {
+        cfg.runtime.threads = n;
+    }
+    if let Some(p) = args.opt("codec").or_else(|| args.opt("precision")) {
+        cfg.codec.precision = crate::wire::Precision::parse(p)?;
+    }
+    if let Some(e) = args.opt("entropy") {
+        cfg.codec.entropy = crate::wire::EntropyMode::parse(e)?;
+    }
+    if let Some(r) = args.opt("codebook-reuse") {
+        cfg.codec.codebook_reuse = crate::wire::ReuseMode::parse(r)?;
+    }
+    match args.opt("sparse-topk") {
+        Some("auto") => {
+            cfg.codec.sparse_topk_auto = true;
+            cfg.codec.sparse_topk = 0;
+        }
+        Some(k) => {
+            cfg.codec.sparse_topk = k
+                .parse::<usize>()
+                .map_err(|e| anyhow!("--sparse-topk `{k}`: {e} (or `auto`)"))?;
+            cfg.codec.sparse_topk_auto = false;
+        }
+        None => {}
+    }
+    if let Some(p) = args.opt("trace-out") {
+        cfg.trace.out = Some(p.to_string());
+    }
+    if let Some(p) = args.opt("metrics-out") {
+        cfg.trace.metrics_out = Some(p.to_string());
+    }
+    if let Some(l) = args.opt("trace-level") {
+        cfg.trace.level = telemetry::parse_trace_level(l)
+            .ok_or_else(|| anyhow!("bad --trace-level `{l}` (off|decision|full)"))?;
+    }
+    if let Some(p) = args.opt("journal") {
+        cfg.journal.path = Some(p.to_string());
+    }
+    if let Some(p) = args.opt("resume") {
+        cfg.journal.resume = Some(p.to_string());
+    }
+    if let Some(a) = args.opt("listen") {
+        cfg.transport.listen = a.to_string();
+    }
+    if let Some(a) = args.opt("connect") {
+        cfg.transport.connect = a.to_string();
+    }
+    if let Some(n) = args.opt_parse::<usize>("transport-clients")? {
+        cfg.transport.clients = n;
+    }
+    if let Some(n) = args.opt_parse::<u64>("round-deadline-ms")? {
+        cfg.transport.round_deadline_ms = n;
+    }
+    if let Some(n) = args.opt_parse::<u64>("bandwidth-cap")? {
+        cfg.transport.bandwidth_cap_bps = n;
+    }
+    if args.flag("wait-rejoin") {
+        cfg.transport.wait_rejoin = true;
+    }
+    if let Some(n) = args.opt_parse::<u64>("rejoin-wait-ms")? {
+        cfg.transport.rejoin_wait_ms = n;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Dump every round record with full bit precision (f64 payloads as hex
+/// bit patterns) so two runs can be compared byte-for-byte — the
+/// determinism CI job diffs these files across `--threads` values and
+/// across the in-process/TCP lanes, and the golden-trajectory fixtures
+/// pin the same digest in-repo (the digest itself is
+/// `server::round_dump_string`, shared with the tests so the two can
+/// never drift apart).
+pub fn write_round_dump(path: &str, report: &crate::server::TrainReport) -> Result<()> {
+    let text = crate::server::round_dump_string(report);
+    std::fs::write(path, text).with_context(|| format!("writing round dump {path}"))?;
+    Ok(())
 }
 
 #[cfg(test)]

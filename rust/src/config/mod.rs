@@ -286,6 +286,57 @@ pub struct FleetConfig {
     pub theta_sample: Option<usize>,
 }
 
+/// TCP transport lane knobs (`[transport]`): how the `coordinator` and
+/// `client` bins find each other and how the coordinator schedules a
+/// round over real sockets (`transport` module). Every field here is
+/// bit-transparent to training — lane choice and transport timing
+/// never reach a round's decisions — so none of them enter
+/// [`RunConfig::determinism_fingerprint`]: a client process with a
+/// different `connect` address must still fingerprint-match the
+/// coordinator.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TransportConfig {
+    /// Coordinator listen address (`--listen`). Port 0 picks an
+    /// ephemeral port (written via `--port-file` for the clients).
+    pub listen: String,
+    /// Client connect address (`--connect`), unless `--port-file`
+    /// supplies one.
+    pub connect: String,
+    /// Client process slots the coordinator waits for before round 1
+    /// (`--transport-clients`). Hosted fleet clients are sharded
+    /// `cid % clients == slot`.
+    pub clients: usize,
+    /// Per-round deadline in milliseconds (`--round-deadline-ms`).
+    /// A round that cannot finish by then aggregates what arrived and
+    /// drops the stalled clients; `0` disables the deadline.
+    pub round_deadline_ms: u64,
+    /// Per-client download bandwidth cap in bits/second
+    /// (`--bandwidth-cap`). `0` disables pacing. Pacing delays when a
+    /// frame is sent, never what it contains.
+    pub bandwidth_cap_bps: u64,
+    /// Block at each round start until every slot is occupied again
+    /// (`--wait-rejoin`): the reconnect-resync e2e's determinism knob —
+    /// a rejoining process is resynced rather than dropped.
+    pub wait_rejoin: bool,
+    /// How long `wait_rejoin` waits, in milliseconds, before giving up
+    /// and running the round with the slots it has.
+    pub rejoin_wait_ms: u64,
+}
+
+impl Default for TransportConfig {
+    fn default() -> TransportConfig {
+        TransportConfig {
+            listen: "127.0.0.1:0".into(),
+            connect: "127.0.0.1:7465".into(),
+            clients: 1,
+            round_deadline_ms: 30_000,
+            bandwidth_cap_bps: 0,
+            wait_rejoin: false,
+            rejoin_wait_ms: 10_000,
+        }
+    }
+}
+
 /// Complete run configuration.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -311,6 +362,8 @@ pub struct RunConfig {
     pub journal: JournalConfig,
     /// Fleet-scale simulation knobs.
     pub fleet: FleetConfig,
+    /// TCP transport lane knobs (ignored by the in-process bin).
+    pub transport: TransportConfig,
 }
 
 impl RunConfig {
@@ -387,6 +440,7 @@ impl RunConfig {
             },
             journal: JournalConfig::default(),
             fleet: FleetConfig::default(),
+            transport: TransportConfig::default(),
         }
     }
 
@@ -560,6 +614,29 @@ impl RunConfig {
             cfg.fleet.theta_sample =
                 Some(v.as_usize().context("config key fleet.theta_sample")?);
         }
+        if let Some(v) = doc.get("transport.listen") {
+            cfg.transport.listen = v.as_str()?.to_string();
+        }
+        if let Some(v) = doc.get("transport.connect") {
+            cfg.transport.connect = v.as_str()?.to_string();
+        }
+        take!("transport.clients", cfg.transport.clients, as_usize);
+        take!(
+            "transport.round_deadline_ms",
+            cfg.transport.round_deadline_ms,
+            as_u64
+        );
+        take!(
+            "transport.bandwidth_cap_bps",
+            cfg.transport.bandwidth_cap_bps,
+            as_u64
+        );
+        take!("transport.wait_rejoin", cfg.transport.wait_rejoin, as_bool);
+        take!(
+            "transport.rejoin_wait_ms",
+            cfg.transport.rejoin_wait_ms,
+            as_u64
+        );
         cfg.validate()?;
         Ok(cfg)
     }
@@ -625,6 +702,9 @@ impl RunConfig {
         if self.runtime.threads == 0 {
             bail!("runtime.threads must be >= 1 (the number of parallel fleet compute lanes)");
         }
+        if self.transport.clients == 0 {
+            bail!("transport.clients must be >= 1 (the number of client process slots)");
+        }
         // output files are opened mid-run; a missing parent directory
         // must fail here, at startup, naming the flag — not panic at
         // the first write hundreds of rounds in
@@ -653,7 +733,11 @@ impl RunConfig {
     /// resume may legitimately change — `train.iterations` (a resume may
     /// extend the run) and `train.rebuilds`, `runtime.threads` (threads
     /// are bit-transparent by the fleet contract),
-    /// `runtime.artifacts_dir`, and the trace/journal paths themselves.
+    /// `runtime.artifacts_dir`, the trace/journal paths themselves, and
+    /// the whole `[transport]` section (lane choice and transport
+    /// timing are bit-transparent — the TCP handshake *relies* on a
+    /// client and coordinator with different addresses fingerprinting
+    /// equally).
     pub fn determinism_fingerprint(&self) -> String {
         let f64b = |v: f64| format!("{:016x}", v.to_bits());
         let f32b = |v: f32| format!("{:08x}", v.to_bits());

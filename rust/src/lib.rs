@@ -77,6 +77,7 @@ pub mod runtime;
 pub mod server;
 pub mod simnet;
 pub mod telemetry;
+pub mod transport;
 pub mod wire;
 
 /// Crate-wide result alias (anyhow is the only error substrate available

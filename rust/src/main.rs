@@ -25,8 +25,7 @@ use std::process::ExitCode;
 
 use anyhow::{bail, Context, Result};
 
-use fedpayload::cli::Args;
-use fedpayload::config::{Doc, RunConfig, Strategy};
+use fedpayload::cli::{resolve_config, write_round_dump, Args};
 use fedpayload::experiments::{self, Scale};
 use fedpayload::server::Trainer;
 use fedpayload::simnet::human_bytes;
@@ -56,6 +55,15 @@ USAGE:
   fedpayload journal-dump <run.jsonl>
   fedpayload info  [--config file.toml]
   fedpayload help
+
+  The TCP transport lane ships as two sibling bins that accept the same
+  training options: `coordinator train --listen 127.0.0.1:0 --port-file
+  addr.txt --transport-clients N ...` runs the trainer with downloads,
+  uploads, and batch compute moving over real sockets, and `client
+  --port-file addr.txt ...` hosts one process slot's share of the fleet
+  (see docs/ARCHITECTURE.md, "Transport lane"). Fault-free, the pair's
+  round dumps / trace digests / journals are byte-identical to this
+  bin's — ci/transport_e2e.sh enforces it.
 
   (--precision is an alias for --codec; `--set codec.sparse_threshold=X`
    tunes the upload sparsifier. The vq8|vq4|vq8r codecs product-quantize
@@ -137,103 +145,6 @@ fn run(argv: Vec<String>) -> Result<()> {
         }
         Some(other) => bail!("unknown subcommand `{other}`\n{USAGE}"),
     }
-}
-
-/// Resolve the effective config: file -> --set overrides -> typed flags.
-fn resolve_config(args: &Args) -> Result<RunConfig> {
-    let mut doc = match args.opt("config") {
-        Some(path) => {
-            let text = std::fs::read_to_string(path)
-                .with_context(|| format!("reading config {path}"))?;
-            Doc::parse(&text)?
-        }
-        None => Doc::default(),
-    };
-    // `--dataset` is a preset: apply it BEFORE --set overrides so that
-    // e.g. `--dataset movielens --set dataset.items=766` keeps the 766.
-    if let Some(ds) = args.opt("dataset") {
-        doc.set("dataset.name", fedpayload::config::Value::Str(ds.to_string()));
-    }
-    for spec in args.opt_all("set") {
-        doc.apply_override(spec)?;
-    }
-    let mut cfg = RunConfig::from_doc(&doc)?;
-    if let Some(s) = args.opt("strategy") {
-        cfg.bandit.strategy = Strategy::parse(s)?;
-    }
-    if let Some(n) = args.opt_parse::<usize>("iterations")? {
-        cfg.train.iterations = n;
-    }
-    if let Some(f) = args.opt_parse::<f64>("payload-fraction")? {
-        cfg.train.payload_fraction = f;
-    }
-    if let Some(n) = args.opt_parse::<usize>("theta")? {
-        cfg.train.theta = n;
-    }
-    if let Some(n) = args.opt_parse::<usize>("theta-sample")? {
-        cfg.fleet.theta_sample = Some(n);
-    }
-    if let Some(n) = args.opt_parse::<u64>("seed")? {
-        cfg.seed = n;
-    }
-    if let Some(b) = args.opt("backend") {
-        cfg.runtime.backend = b.to_string();
-    }
-    if let Some(n) = args.opt_parse::<usize>("threads")? {
-        cfg.runtime.threads = n;
-    }
-    if let Some(p) = args.opt("codec").or_else(|| args.opt("precision")) {
-        cfg.codec.precision = fedpayload::wire::Precision::parse(p)?;
-    }
-    if let Some(e) = args.opt("entropy") {
-        cfg.codec.entropy = fedpayload::wire::EntropyMode::parse(e)?;
-    }
-    if let Some(r) = args.opt("codebook-reuse") {
-        cfg.codec.codebook_reuse = fedpayload::wire::ReuseMode::parse(r)?;
-    }
-    match args.opt("sparse-topk") {
-        Some("auto") => {
-            cfg.codec.sparse_topk_auto = true;
-            cfg.codec.sparse_topk = 0;
-        }
-        Some(k) => {
-            cfg.codec.sparse_topk = k
-                .parse::<usize>()
-                .map_err(|e| anyhow::anyhow!("--sparse-topk `{k}`: {e} (or `auto`)"))?;
-            cfg.codec.sparse_topk_auto = false;
-        }
-        None => {}
-    }
-    if let Some(p) = args.opt("trace-out") {
-        cfg.trace.out = Some(p.to_string());
-    }
-    if let Some(p) = args.opt("metrics-out") {
-        cfg.trace.metrics_out = Some(p.to_string());
-    }
-    if let Some(l) = args.opt("trace-level") {
-        cfg.trace.level = telemetry::parse_trace_level(l)
-            .ok_or_else(|| anyhow::anyhow!("bad --trace-level `{l}` (off|decision|full)"))?;
-    }
-    if let Some(p) = args.opt("journal") {
-        cfg.journal.path = Some(p.to_string());
-    }
-    if let Some(p) = args.opt("resume") {
-        cfg.journal.resume = Some(p.to_string());
-    }
-    cfg.validate()?;
-    Ok(cfg)
-}
-
-/// Dump every round record with full bit precision (f64 payloads as hex
-/// bit patterns) so two runs can be compared byte-for-byte — the
-/// determinism CI job diffs these files across `--threads` values, and
-/// the golden-trajectory fixtures pin the same digest in-repo (the
-/// digest itself is `server::round_dump_string`, shared with the tests
-/// so the two can never drift apart).
-fn write_round_dump(path: &str, report: &fedpayload::server::TrainReport) -> Result<()> {
-    let text = fedpayload::server::round_dump_string(report);
-    std::fs::write(path, text).with_context(|| format!("writing round dump {path}"))?;
-    Ok(())
 }
 
 fn cmd_train(args: &Args) -> Result<()> {

@@ -197,6 +197,19 @@ impl MetricAccumulator {
         }
         m
     }
+
+    /// The accumulator's exact state: (sum of pushed sets, push count).
+    /// The TCP lane ships these as raw f64 bits so a batch's metrics
+    /// survive the socket bit-exactly.
+    pub fn parts(&self) -> (MetricSet, usize) {
+        (self.sum, self.count)
+    }
+
+    /// Rebuild an accumulator from [`MetricAccumulator::parts`] output.
+    /// `merge`/`mean` over the result behave exactly as on the original.
+    pub fn from_parts(sum: MetricSet, count: usize) -> MetricAccumulator {
+        MetricAccumulator { sum, count }
+    }
 }
 
 /// Mean ± standard deviation across model rebuilds (Table 4 rows).

@@ -309,14 +309,37 @@ pub fn merge_outcomes(
     Ok(agg)
 }
 
+/// Decode one batch's sparse ∇Q* upload frame exactly as every round
+/// lane must: the server trains on the *decoded* gradient, so this is
+/// the single decode path shared by the in-process executor and the TCP
+/// coordinator (which receives the frame over a socket).
+pub fn decode_upload(
+    codec: &dyn PayloadCodec,
+    up_frame: &[u8],
+    m_s: usize,
+    k: usize,
+) -> Result<Vec<f32>> {
+    let up = codec.decode_sparse(up_frame)?;
+    ensure!(
+        up.rows == m_s && up.cols == k,
+        "upload frame decoded to {}x{}, expected {m_s}x{k}",
+        up.rows,
+        up.cols
+    );
+    Ok(up.data)
+}
+
 /// Execute one batch: solve → grad → sparse wire round-trip (+ per-client
 /// upload accounting) → optional eval. Pure w.r.t. the task inputs.
-fn run_batch(
+/// Returns the outcome together with the encoded ∇Q* upload frame — the
+/// TCP lane's client side ships that frame over the socket so the
+/// coordinator decodes the identical bytes.
+pub fn run_batch_framed(
     rt: &mut FcfRuntime,
     codec: &dyn PayloadCodec,
     task: &RoundTask,
     index: usize,
-) -> Result<BatchOutcome> {
+) -> Result<(BatchOutcome, Vec<u8>)> {
     let (lo, hi) = task.batch_range(index);
     let k = task.k;
     let m_s = task.m_s();
@@ -336,13 +359,7 @@ fn run_batch(
     // value quantization stay part of the training dynamics.
     let t0 = Instant::now();
     let up_frame = codec.encode_sparse(&g_raw, m_s, k, &task.sparse)?;
-    let up = codec.decode_sparse(&up_frame)?;
-    ensure!(
-        up.rows == m_s && up.cols == k,
-        "upload frame decoded to {}x{}, expected {m_s}x{k}",
-        up.rows,
-        up.cols
-    );
+    let grad = decode_upload(codec, &up_frame, m_s, k)?;
     // Per-client upload accounting: one message per participant at the
     // batch frame's length — each client's own frame length when entropy
     // is off (the implicit-feedback ∇Q* is dense over the selected set),
@@ -375,14 +392,28 @@ fn run_batch(
         eval_ns = t0.elapsed().as_nanos();
     }
 
-    Ok(BatchOutcome {
-        grad: up.data,
-        p,
-        ledger,
-        metrics,
-        phase_ns: [solve_ns, grad_ns, codec_ns, eval_ns],
-        lane: 0, // stamped by the draining lane
-    })
+    Ok((
+        BatchOutcome {
+            grad,
+            p,
+            ledger,
+            metrics,
+            phase_ns: [solve_ns, grad_ns, codec_ns, eval_ns],
+            lane: 0, // stamped by the draining lane
+        },
+        up_frame,
+    ))
+}
+
+/// [`run_batch_framed`] for callers that don't need the upload frame
+/// (the in-process executor's workers).
+fn run_batch(
+    rt: &mut FcfRuntime,
+    codec: &dyn PayloadCodec,
+    task: &RoundTask,
+    index: usize,
+) -> Result<BatchOutcome> {
+    run_batch_framed(rt, codec, task, index).map(|(outcome, _)| outcome)
 }
 
 type BatchSlots = Mutex<Vec<Option<Result<BatchOutcome>>>>;

@@ -48,6 +48,7 @@ use crate::telemetry::export::write_metrics_snapshot;
 use crate::telemetry::registry::{BYTE_BUCKETS, REWARD_BUCKETS};
 use crate::telemetry::trace::f64_bits;
 use crate::telemetry::{Registry, Stopwatch, TraceEvent, TraceLevel, Tracer};
+use crate::transport::lane::{ExchangeRequest, InProcessLane, RoundLane};
 use crate::wire::{
     make_codec_with, PayloadCodec, SessionMode, SparsePolicy, VqClientState, VqSession,
 };
@@ -166,9 +167,11 @@ pub struct Trainer {
     /// This is the caller-lane runtime; worker lanes build their own
     /// backends through the executor's `BackendFactory`.
     runtime: Rc<RefCell<FcfRuntime>>,
-    /// Sharded round executor: `runtime.threads` compute lanes with a
-    /// deterministic batch-order merge.
-    executor: FleetExecutor,
+    /// The round exchange lane: downloads + client compute behind the
+    /// [`RoundLane`] trait. Defaults to the in-process deterministic
+    /// reference (the sharded fleet executor); the `coordinator` bin
+    /// installs a TCP lane that moves the same frames over sockets.
+    lane: Box<dyn RoundLane>,
     rng: Rng,
     /// Dedicated per-round participant stream for `fleet.theta_sample`
     /// runs. Keyed purely by `(cfg.seed, round index)` — never consulted
@@ -406,7 +409,10 @@ impl Trainer {
             },
             adam: Adam::new(m, &cfg.model),
             sel_pos: vec![-1; m],
-            executor: FleetExecutor::new(BackendFactory::from_config(cfg), cfg.runtime.threads),
+            lane: Box::new(InProcessLane::new(FleetExecutor::new(
+                BackendFactory::from_config(cfg),
+                cfg.runtime.threads,
+            ))),
             cfg: cfg.clone(),
             split,
             fleet,
@@ -480,6 +486,20 @@ impl Trainer {
         self.fleet.invalidate_download_cache(client);
     }
 
+    /// Replace the round lane. The default is the deterministic
+    /// in-process reference ([`InProcessLane`]); the `coordinator` bin
+    /// installs a `transport::TcpLane` here, after which every round's
+    /// downloads and client compute move over real sockets.
+    pub fn install_lane(&mut self, lane: Box<dyn RoundLane>) {
+        self.lane = lane;
+    }
+
+    /// The installed round lane (bins read transport stats and drive
+    /// shutdown through this).
+    pub fn lane_mut(&mut self) -> &mut dyn RoundLane {
+        &mut *self.lane
+    }
+
     /// Install (or replace) the flight recorder — tests and sweeps hook
     /// an in-memory tracer here; `--trace-out` installs a file-backed
     /// one at construction.
@@ -543,6 +563,7 @@ impl Trainer {
         for _ in 0..iterations {
             self.round()?;
         }
+        self.lane.finish().context("closing the round lane")?;
         let wall = t0.elapsed().as_secs_f64();
         if self.trace_on(TraceLevel::Decision) {
             let ev = TraceEvent::new("run_end")
@@ -695,7 +716,7 @@ impl Trainer {
         // the coordinator's mirror decoder — an always-in-sync client —
         // supplies the decoded factors.
         self.sw_codec.start();
-        let (q_sel, down_bytes, session_frame) = match self.vq_session.as_mut() {
+        let (q_sel, down_bytes, session_frame, stateless_frame) = match self.vq_session.as_mut() {
             Some(sess) => {
                 let enc = sess.encode_dense(&q_sel, selected.len(), k)?;
                 let down = self
@@ -711,7 +732,7 @@ impl Trainer {
                     selected.len()
                 );
                 let len = enc.frame.len() as u64;
-                (down.data, len, Some(enc))
+                (down.data, len, Some(enc), None)
             }
             None => {
                 let down_frame = self.codec.encode_dense(&q_sel, selected.len(), k)?;
@@ -723,7 +744,7 @@ impl Trainer {
                     down.cols,
                     selected.len()
                 );
-                (down.data, down_frame.len() as u64, None)
+                (down.data, down_frame.len() as u64, None, Some(down_frame))
             }
         };
         self.sw_codec.stop();
@@ -776,74 +797,11 @@ impl Trainer {
                 .fleet
                 .sample_participants(self.cfg.train.theta, &mut self.rng),
         };
-        match &session_frame {
-            Some(enc) => {
-                match enc.mode {
-                    SessionMode::Reuse => self.session_stats.reuse_frames += 1,
-                    SessionMode::Delta => self.session_stats.delta_frames += 1,
-                    SessionMode::Full => self.session_stats.full_frames += 1,
-                }
-                let mut resync_len: Option<u64> = None;
-                for &cid in &participants {
-                    let cached = self.fleet.download_gen(cid);
-                    let bytes = if enc.in_sync(cached) {
-                        down_bytes
-                    } else {
-                        let len = match resync_len {
-                            Some(len) => len,
-                            None => {
-                                // built + verified at most once per round
-                                let sess = self
-                                    .vq_session
-                                    .as_ref()
-                                    .expect("session frame implies session");
-                                let rf = sess.resync_frame()?;
-                                let dec = VqClientState::new()
-                                    .decode_dense(&rf)?
-                                    .into_data()
-                                    .context("resync frame must decode statelessly")?;
-                                anyhow::ensure!(
-                                    dec.data.len() == q_sel.len()
-                                        && dec
-                                            .data
-                                            .iter()
-                                            .zip(&q_sel)
-                                            .all(|(a, b)| a.to_bits() == b.to_bits()),
-                                    "resync frame decoded differently from the broadcast \
-                                     frame (generation {})",
-                                    enc.generation
-                                );
-                                let len = rf.len() as u64;
-                                resync_len = Some(len);
-                                len
-                            }
-                        };
-                        self.session_stats.resync_msgs += 1;
-                        self.session_stats.resync_extra_bytes += len as i64 - down_bytes as i64;
-                        if self.trace_on(TraceLevel::Decision) {
-                            let ev = TraceEvent::new("resync")
-                                .u64("iter", self.t)
-                                .u64("client", cid as u64)
-                                .opt_u64("cached", cached.map(u64::from))
-                                .u64("generation", enc.generation as u64)
-                                .u64("frame_bytes", len)
-                                .i64("extra_bytes", len as i64 - down_bytes as i64);
-                            self.emit(TraceLevel::Decision, ev);
-                        }
-                        len
-                    };
-                    self.ledger.record_down(&self.cfg.simnet, bytes);
-                    // empty frames install no codebook on the device, so
-                    // they must not be recorded as a held generation
-                    if enc.installs_generation {
-                        self.fleet.set_download_gen(cid, enc.generation);
-                    }
-                }
-            }
-            None => {
-                for _ in &participants {
-                    self.ledger.record_down(&self.cfg.simnet, down_bytes);
-                }
+        if let Some(enc) = &session_frame {
+            match enc.mode {
+                SessionMode::Reuse => self.session_stats.reuse_frames += 1,
+                SessionMode::Delta => self.session_stats.delta_frames += 1,
+                SessionMode::Full => self.session_stats.full_frames += 1,
             }
         }
 
@@ -859,7 +817,6 @@ impl Trainer {
         // DESIGN.md §1).
         let evaluate = self.t as usize % self.cfg.train.eval_every.max(1) == 0;
         let b = self.runtime.borrow().b;
-        let n_batches = participants.len().div_ceil(b) as u64;
         self.sw_stage.start();
         let rows: Vec<SelRow> = participants
             .iter()
@@ -867,7 +824,7 @@ impl Trainer {
             .collect();
         self.sw_stage.stop();
         let task = RoundTask {
-            q_sel,
+            q_sel: q_sel.clone(),
             k,
             m,
             q_full: if evaluate {
@@ -885,13 +842,104 @@ impl Trainer {
             simnet: self.cfg.simnet.clone(),
             fleet: self.fleet.view(),
         };
-        self.sw_fleet.start();
-        let agg = self.executor.run_round(
+        // The exchange moves the round through the installed lane:
+        // in-process, downloads are generation-table lookups and compute
+        // runs on the sharded executor; over TCP, the same frames travel
+        // as real messages to client processes. Either way the lane only
+        // reports *what moved* — every piece of bookkeeping is applied
+        // below, from the records, in participant/batch order, so the
+        // two lanes cannot drift in accounting.
+        let req = ExchangeRequest {
+            iter: self.t,
+            participants: &participants,
+            selected: &selected,
+            frame: match (&session_frame, &stateless_frame) {
+                (Some(enc), _) => &enc.frame,
+                (None, Some(f)) => f,
+                (None, None) => unreachable!("one of the frame arms always binds"),
+            },
+            down_bytes,
+            session: match (&self.vq_session, &session_frame) {
+                (Some(s), Some(e)) => Some((s, e)),
+                _ => None,
+            },
+            q_sel: &q_sel,
+            fleet: &self.fleet,
             task,
-            &mut self.runtime.borrow_mut(),
-            self.codec.as_ref(),
-        )?;
+        };
+        self.sw_fleet.start();
+        let ex = self
+            .lane
+            .exchange(req, &mut self.runtime.borrow_mut(), self.codec.as_ref())?;
         self.sw_fleet.stop();
+
+        // Session bookkeeping from the outcome records. Rejoin-driven
+        // invalidations first (the lane already treated those clients as
+        // cache-less this round), then per-download accounting exactly as
+        // the pre-transport loop did: resync stats + trace, ledger,
+        // generation installs — in participant order.
+        for &cid in &ex.invalidated {
+            self.fleet.invalidate_download_cache(cid);
+        }
+        match &session_frame {
+            Some(enc) => {
+                for rec in &ex.downloads {
+                    if rec.resync {
+                        self.session_stats.resync_msgs += 1;
+                        self.session_stats.resync_extra_bytes +=
+                            rec.bytes as i64 - down_bytes as i64;
+                        if self.trace_on(TraceLevel::Decision) {
+                            let ev = TraceEvent::new("resync")
+                                .u64("iter", self.t)
+                                .u64("client", rec.client as u64)
+                                .opt_u64("cached", rec.cached.map(u64::from))
+                                .u64("generation", enc.generation as u64)
+                                .u64("frame_bytes", rec.bytes)
+                                .i64("extra_bytes", rec.bytes as i64 - down_bytes as i64);
+                            self.emit(TraceLevel::Decision, ev);
+                        }
+                    }
+                    self.ledger.record_down(&self.cfg.simnet, rec.bytes);
+                    // empty frames install no codebook on the device, so
+                    // they must not be recorded as a held generation
+                    if enc.installs_generation {
+                        self.fleet.set_download_gen(rec.client, enc.generation);
+                    }
+                }
+            }
+            None => {
+                for rec in &ex.downloads {
+                    self.ledger.record_down(&self.cfg.simnet, rec.bytes);
+                }
+            }
+        }
+        // Dropout is a transport fact: the event and counter exist only
+        // when clients actually dropped, so fault-free trace digests stay
+        // byte-identical across lanes.
+        if !ex.dropped.is_empty() {
+            if self.trace_on(TraceLevel::Decision) {
+                let ids = ex
+                    .dropped
+                    .iter()
+                    .map(|c| c.to_string())
+                    .collect::<Vec<_>>()
+                    .join(",");
+                let ev = TraceEvent::new("transport_dropout")
+                    .u64("iter", self.t)
+                    .u64("n", ex.dropped.len() as u64)
+                    .u64("contributed", ex.contributed as u64)
+                    .str("clients", &ids);
+                self.emit(TraceLevel::Decision, ev);
+            }
+            if self.registry_on() {
+                self.registry.inc(
+                    "fedpayload_transport_dropped_clients_total",
+                    ex.dropped.len() as u64,
+                );
+            }
+        }
+        let agg = ex.agg;
+        let n_batches = agg.batches.len() as u64;
         // absorb the lanes' per-shard busy time into the phase stopwatches
         self.sw_solve.absorb_ns(agg.phase_ns[0], n_batches);
         self.sw_grad.absorb_ns(agg.phase_ns[1], n_batches);
@@ -926,8 +974,11 @@ impl Trainer {
 
         // (5) aggregate + server-side Adam (Eq. 4).
         self.sw_update.start();
-        if self.cfg.train.aggregate == Aggregate::Mean && !participants.is_empty() {
-            let inv = 1.0 / participants.len() as f32;
+        // The divisor is the clients whose uploads actually reached the
+        // aggregate — identical to the participant count fault-free, and
+        // the honest mean under deadline-based partial aggregation.
+        if self.cfg.train.aggregate == Aggregate::Mean && ex.contributed > 0 {
+            let inv = 1.0 / ex.contributed as f32;
             for v in g_total.iter_mut() {
                 *v *= inv;
             }
@@ -942,9 +993,9 @@ impl Trainer {
         self.sw_reward.start();
         let reward_scale = if self.cfg.bandit.mean_scaled_rewards
             && self.cfg.train.aggregate == Aggregate::Sum
-            && !participants.is_empty()
+            && ex.contributed > 0
         {
-            1.0 / participants.len() as f32
+            1.0 / ex.contributed as f32
         } else {
             1.0
         };
@@ -1025,7 +1076,10 @@ impl Trainer {
                 .t_u128("solve_ns", agg.phase_ns[0])
                 .t_u128("grad_ns", agg.phase_ns[1])
                 .t_u128("codec_ns", agg.phase_ns[2])
-                .t_u128("eval_ns", agg.phase_ns[3]);
+                .t_u128("eval_ns", agg.phase_ns[3])
+                // exchange wall-clock: 0 in-process, socket time over TCP
+                // — a timing fact, quarantined with the other `"t"` fields
+                .t_u64("exchange_ns", ex.transport_ns);
             self.emit(TraceLevel::Decision, ev);
         }
         if self.registry_on() {

@@ -1,0 +1,573 @@
+//! Client-process engine: the device side of the TCP transport lane.
+//!
+//! One process connects to the coordinator, occupies one hosting
+//! *slot*, and simulates every fleet client `cid` with
+//! `cid % slots == slot`. The engine rebuilds the exact dataset and
+//! fleet the coordinator holds — same seed, same [`load_dataset`] call,
+//! same split — so the compute plane needs no bulk data transfer: a
+//! round travels as the selected ids, the participant list, and the
+//! encoded frames, and any process can compute any batch.
+//!
+//! ## Two decode planes
+//!
+//! * **Process mirror** — one [`VqClientState`] that decodes every
+//!   broadcast frame so the engine can stage the round's
+//!   [`RoundTask`]. A mirror that missed rounds (a restarted process)
+//!   answers a delta/reuse frame with [`SessionDecode::Stale`] and
+//!   requests a [`Msg::Resync`] with `client = `[`MIRROR`] — the
+//!   stale-session path driven by a real network event rather than a
+//!   test hook.
+//! * **Hosted devices** — one [`VqClientState`] per hosted client id,
+//!   fed by the per-participant [`Msg::Download`] frames. Each decode
+//!   is bit-verified against the mirror's broadcast decode before the
+//!   [`Msg::DownloadAck`] goes back, so a divergent decoder can never
+//!   silently contribute.
+//!
+//! ## Determinism
+//!
+//! Batch outcomes come from [`run_batch_framed`] — the same function
+//! the in-process executor runs — and gradients travel *encoded* (the
+//! `up_frame` bytes), so quantization stays part of the training
+//! dynamics on both lanes. With the `parallel` feature the engine
+//! computes its assigned batches on scoped worker threads; outcomes
+//! are pure per batch and [`Msg::BatchDone`] is sent in assignment
+//! order, so thread count never reaches the wire.
+//!
+//! ## Fault injection
+//!
+//! [`FaultPlan`] drives the dropout e2e tests: `exit_after_round`
+//! drops the socket after a round completes (a crash the coordinator
+//! detects at the next round's start), `stall_in_round` goes silent at
+//! the `Assign` phase until the coordinator's round deadline cuts the
+//! connection (mid-round dropout with partial aggregation).
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::net::TcpStream;
+#[cfg(feature = "parallel")]
+use std::sync::atomic::{AtomicUsize, Ordering};
+#[cfg(feature = "parallel")]
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::client::Fleet;
+use crate::config::{RunConfig, SimNetConfig};
+use crate::rng::Rng;
+use crate::runtime::fleet::{run_batch_framed, BackendFactory, BatchOutcome, RoundTask};
+use crate::runtime::{FcfRuntime, SelRow};
+use crate::server::load_dataset;
+use crate::transport::framing;
+use crate::transport::proto::{Msg, MIRROR, NO_GENERATION, PROTO_VERSION};
+use crate::wire::frame;
+use crate::wire::{make_codec_with, PayloadCodec, SessionDecode, SparsePolicy, VqClientState};
+
+/// Failure injection for the dropout/reconnect e2e tests. Default is
+/// fault-free.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FaultPlan {
+    /// Drop the connection (no [`Msg::Bye`]) after this round's
+    /// [`Msg::RoundEnd`] — a crash between rounds.
+    pub exit_after_round: Option<u64>,
+    /// Go silent at this round's [`Msg::Assign`] (never send a
+    /// [`Msg::BatchDone`]) until the coordinator's deadline cuts the
+    /// socket — a mid-round stall.
+    pub stall_in_round: Option<u64>,
+}
+
+/// What one engine run did, for the `client` bin's summary line and
+/// the e2e assertions.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineReport {
+    /// Slot this process occupied.
+    pub slot: u32,
+    /// Total process slots in the session.
+    pub slots: u32,
+    /// Rounds this process saw through [`Msg::RoundEnd`].
+    pub rounds: u64,
+    /// Batches computed and reported.
+    pub batches: u64,
+    /// Hosted-client downloads acknowledged.
+    pub downloads: u64,
+    /// Mirror resyncs requested (stale process mirror at round start).
+    pub mirror_resyncs: u64,
+    /// Hosted-device resyncs requested (stale per-client cache).
+    pub hosted_resyncs: u64,
+    /// The run ended through a [`FaultPlan`] exit, not a clean
+    /// [`Msg::Shutdown`]/[`Msg::Bye`].
+    pub crashed: bool,
+}
+
+/// Dial `addr`, retrying until `timeout` elapses — the coordinator may
+/// still be binding when a client process launches.
+pub fn connect_with_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    bail!("connecting to {addr}: {e} (gave up after {timeout:?})");
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// The device side of the transport lane: dataset + fleet rebuilt from
+/// config, a compute runtime, and the mirror/hosted decode state.
+pub struct ClientEngine {
+    cfg: RunConfig,
+    fleet: Fleet,
+    m: usize,
+    k: usize,
+    rt: FcfRuntime,
+    #[cfg(feature = "parallel")]
+    workers: Vec<FcfRuntime>,
+    codec: Box<dyn PayloadCodec>,
+    sparse: SparsePolicy,
+    simnet: SimNetConfig,
+    threads: usize,
+    mirror: VqClientState,
+    hosted: BTreeMap<u64, VqClientState>,
+    sel_pos: Vec<i32>,
+}
+
+impl ClientEngine {
+    /// Rebuild the dataset, split, and fleet exactly as the
+    /// coordinator's trainer does (same seed, same calls, same RNG
+    /// stream), and stand up a compute runtime.
+    pub fn new(cfg: &RunConfig) -> Result<ClientEngine> {
+        cfg.validate()?;
+        let mut rng = Rng::seed_from_u64(cfg.seed);
+        let data = load_dataset(cfg, &mut rng)?;
+        let split = data.split(cfg.dataset.train_frac, &mut rng);
+        let m = split.train.num_items();
+        let fleet = Fleet::from_split(&split);
+        let rt = BackendFactory::from_config(cfg)
+            .build_runtime()
+            .context("building the client compute runtime")?;
+        Ok(ClientEngine {
+            cfg: cfg.clone(),
+            fleet,
+            m,
+            k: cfg.model.k,
+            rt,
+            #[cfg(feature = "parallel")]
+            workers: Vec::new(),
+            codec: make_codec_with(cfg.codec.precision, cfg.codec.entropy),
+            sparse: SparsePolicy {
+                top_k: cfg.codec.sparse_topk,
+                threshold: cfg.codec.sparse_threshold as f32,
+                auto_topk: cfg.codec.sparse_topk_auto,
+            },
+            simnet: cfg.simnet.clone(),
+            threads: cfg.runtime.threads.max(1),
+            mirror: VqClientState::new(),
+            hosted: BTreeMap::new(),
+            sel_pos: vec![-1; m],
+        })
+    }
+
+    /// Run the session protocol on `stream` until the coordinator's
+    /// [`Msg::Shutdown`] (or a [`FaultPlan`] exit).
+    pub fn run(&mut self, mut stream: TcpStream, fault: FaultPlan) -> Result<EngineReport> {
+        let _ = stream.set_nodelay(true);
+        send(
+            &mut stream,
+            &Msg::Hello {
+                proto: PROTO_VERSION,
+                fingerprint: self.cfg.determinism_fingerprint(),
+            },
+        )?;
+        let (slot, slots) = match recv_required(&mut stream)? {
+            Msg::HelloAck { slot, slots } => (slot, slots),
+            Msg::HelloReject { reason } => bail!("coordinator refused the session: {reason}"),
+            other => bail!("expected HelloAck, got {}", other.name()),
+        };
+        let mut report = EngineReport {
+            slot,
+            slots,
+            ..EngineReport::default()
+        };
+        // The round staged by the last RoundBegin, owned here so every
+        // later phase of the same iteration reuses one decoded task.
+        let mut round: Option<(u64, RoundTask)> = None;
+        loop {
+            let msg = match recv(&mut stream)? {
+                Some(m) => m,
+                None => bail!("coordinator closed the connection mid-session"),
+            };
+            match msg {
+                Msg::RoundBegin {
+                    iter,
+                    evaluate,
+                    selected,
+                    participants,
+                    frame,
+                    q_full,
+                } => {
+                    let task = self.stage_round(
+                        &mut stream,
+                        iter,
+                        evaluate,
+                        &selected,
+                        &participants,
+                        &frame,
+                        q_full,
+                        &mut report,
+                    )?;
+                    round = Some((iter, task));
+                    send(&mut stream, &Msg::MirrorSync { iter })?;
+                }
+                Msg::Download {
+                    iter,
+                    client,
+                    frame,
+                } => {
+                    let (cur, task) = round.as_ref().context("Download outside a round")?;
+                    ensure!(
+                        *cur == iter,
+                        "Download for iteration {iter} during round {cur}"
+                    );
+                    self.handle_download(&mut stream, iter, client, &frame, &task.q_sel, &mut report)?;
+                }
+                Msg::Assign { iter, batches } => {
+                    let (cur, task) = round.as_ref().context("Assign outside a round")?;
+                    ensure!(
+                        *cur == iter,
+                        "Assign for iteration {iter} during round {cur}"
+                    );
+                    if fault.stall_in_round == Some(iter) {
+                        stall_until_closed(&mut stream);
+                        report.crashed = true;
+                        return Ok(report);
+                    }
+                    let outs = self.compute(task, &batches)?;
+                    for (index, out, up_frame) in outs {
+                        let (sum, count) = out.metrics.parts();
+                        send(
+                            &mut stream,
+                            &Msg::BatchDone {
+                                iter,
+                                index,
+                                up_frame,
+                                p: out.p,
+                                metric_count: count as u64,
+                                metric_bits: [
+                                    sum.precision.to_bits(),
+                                    sum.recall.to_bits(),
+                                    sum.f1.to_bits(),
+                                    sum.map.to_bits(),
+                                ],
+                                phase_ns: [
+                                    out.phase_ns[0] as u64,
+                                    out.phase_ns[1] as u64,
+                                    out.phase_ns[2] as u64,
+                                    out.phase_ns[3] as u64,
+                                ],
+                            },
+                        )?;
+                        report.batches += 1;
+                    }
+                }
+                Msg::RoundEnd { iter } => {
+                    round = None;
+                    report.rounds += 1;
+                    if fault.exit_after_round == Some(iter) {
+                        // Simulated crash: drop the socket with no Bye;
+                        // the coordinator notices at the next round.
+                        report.crashed = true;
+                        return Ok(report);
+                    }
+                }
+                Msg::Shutdown => {
+                    send(&mut stream, &Msg::Bye { slot })?;
+                    return Ok(report);
+                }
+                other => bail!("unexpected {} message from the coordinator", other.name()),
+            }
+        }
+    }
+
+    /// Decode the broadcast through the process mirror (requesting a
+    /// mirror resync if it is stale) and stage the round's compute
+    /// task, bit-identical to the trainer's own staging.
+    #[allow(clippy::too_many_arguments)]
+    fn stage_round(
+        &mut self,
+        stream: &mut TcpStream,
+        iter: u64,
+        evaluate: bool,
+        selected: &[u32],
+        participants: &[u64],
+        frame_bytes: &[u8],
+        q_full: Vec<f32>,
+        report: &mut EngineReport,
+    ) -> Result<RoundTask> {
+        let hint = frame::total_len_hint(frame_bytes)
+            .context("inspecting the broadcast frame header")?;
+        ensure!(
+            hint == Some(frame_bytes.len()),
+            "broadcast frame is {} bytes but its header says {hint:?}",
+            frame_bytes.len()
+        );
+        let dense = if is_session_frame(frame_bytes) {
+            match self
+                .mirror
+                .decode_dense(frame_bytes)
+                .context("decoding the broadcast frame against the process mirror")?
+            {
+                SessionDecode::Data(d) => d,
+                SessionDecode::Stale { cached, .. } => {
+                    report.mirror_resyncs += 1;
+                    send(
+                        stream,
+                        &Msg::NeedResync {
+                            iter,
+                            client: MIRROR,
+                            cached: cached.map_or(NO_GENERATION, u64::from),
+                        },
+                    )?;
+                    let rf = expect_resync(stream, iter, MIRROR)?;
+                    self.mirror
+                        .decode_dense(&rf)
+                        .context("decoding the mirror resync frame")?
+                        .into_data()?
+                }
+            }
+        } else {
+            self.codec
+                .decode_dense(frame_bytes)
+                .context("decoding the stateless broadcast frame")?
+        };
+        ensure!(
+            dense.rows == selected.len() && dense.cols == self.k,
+            "broadcast decoded to {}x{}, expected {}x{}",
+            dense.rows,
+            dense.cols,
+            selected.len(),
+            self.k
+        );
+        ensure!(
+            q_full.is_empty() || q_full.len() == self.m * self.k,
+            "eval snapshot has {} values, expected {}x{}",
+            q_full.len(),
+            self.m,
+            self.k
+        );
+        for p in self.sel_pos.iter_mut() {
+            *p = -1;
+        }
+        for (pos, &item) in selected.iter().enumerate() {
+            ensure!(
+                (item as usize) < self.m,
+                "selected item {item} out of range (M = {})",
+                self.m
+            );
+            self.sel_pos[item as usize] = pos as i32;
+        }
+        let rows: Vec<SelRow> = participants
+            .iter()
+            .map(|&cid| {
+                ensure!(
+                    (cid as usize) < self.fleet.len(),
+                    "participant {cid} out of range (fleet has {} clients)",
+                    self.fleet.len()
+                );
+                Ok(self.fleet.client(cid as usize).selected_row(&self.sel_pos))
+            })
+            .collect::<Result<_>>()?;
+        Ok(RoundTask {
+            q_sel: dense.data,
+            k: self.k,
+            m: self.m,
+            q_full,
+            evaluate,
+            rows,
+            client_ids: participants.iter().map(|&c| c as usize).collect(),
+            batch: self.rt.b,
+            precision: self.codec.precision(),
+            entropy: self.codec.entropy(),
+            sparse: self.sparse,
+            simnet: self.simnet.clone(),
+            fleet: self.fleet.view(),
+        })
+    }
+
+    /// Decode one hosted client's download (requesting a per-device
+    /// resync if its cache is stale), bit-verify it against the
+    /// broadcast decode, and acknowledge.
+    fn handle_download(
+        &mut self,
+        stream: &mut TcpStream,
+        iter: u64,
+        client: u64,
+        frame_bytes: &[u8],
+        q_sel: &[f32],
+        report: &mut EngineReport,
+    ) -> Result<()> {
+        let data = if is_session_frame(frame_bytes) {
+            let state = self.hosted.entry(client).or_default();
+            match state
+                .decode_dense(frame_bytes)
+                .with_context(|| format!("decoding client {client}'s download"))?
+            {
+                SessionDecode::Data(d) => d.data,
+                SessionDecode::Stale { cached, .. } => {
+                    report.hosted_resyncs += 1;
+                    send(
+                        stream,
+                        &Msg::NeedResync {
+                            iter,
+                            client,
+                            cached: cached.map_or(NO_GENERATION, u64::from),
+                        },
+                    )?;
+                    let rf = expect_resync(stream, iter, client)?;
+                    state
+                        .decode_dense(&rf)
+                        .with_context(|| format!("decoding client {client}'s resync frame"))?
+                        .into_data()?
+                        .data
+                }
+            }
+        } else {
+            self.codec
+                .decode_dense(frame_bytes)
+                .with_context(|| format!("decoding client {client}'s download"))?
+                .data
+        };
+        ensure!(
+            data.len() == q_sel.len()
+                && data.iter().zip(q_sel).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "client {client}'s download decoded differently from the broadcast"
+        );
+        send(stream, &Msg::DownloadAck { iter, client })?;
+        report.downloads += 1;
+        Ok(())
+    }
+
+    /// Compute the assigned batches, in assignment order.
+    fn compute(
+        &mut self,
+        task: &RoundTask,
+        batches: &[u64],
+    ) -> Result<Vec<(u64, BatchOutcome, Vec<u8>)>> {
+        #[cfg(feature = "parallel")]
+        if self.threads > 1 && batches.len() > 1 {
+            return self.compute_parallel(task, batches);
+        }
+        let mut out = Vec::with_capacity(batches.len());
+        for &bi in batches {
+            let (o, f) = run_batch_framed(&mut self.rt, self.codec.as_ref(), task, bi as usize)
+                .with_context(|| format!("computing batch {bi}"))?;
+            out.push((bi, o, f));
+        }
+        Ok(out)
+    }
+
+    /// Scoped-thread batch compute: workers claim indices from a shared
+    /// counter, results land in per-index slots, and the caller emits
+    /// them in assignment order — outcomes are pure per batch, so the
+    /// thread count never reaches the wire.
+    #[cfg(feature = "parallel")]
+    fn compute_parallel(
+        &mut self,
+        task: &RoundTask,
+        batches: &[u64],
+    ) -> Result<Vec<(u64, BatchOutcome, Vec<u8>)>> {
+        let n = self.threads.min(batches.len());
+        while self.workers.len() < n - 1 {
+            self.workers
+                .push(BackendFactory::from_config(&self.cfg).build_runtime()?);
+        }
+        let next = AtomicUsize::new(0);
+        type BatchSlot = Mutex<Option<Result<(BatchOutcome, Vec<u8>)>>>;
+        let slots: Vec<BatchSlot> = batches.iter().map(|_| Mutex::new(None)).collect();
+        let run = |rt: &mut FcfRuntime| {
+            // Codecs are stateless; each worker builds its own.
+            let codec = make_codec_with(task.precision, task.entropy);
+            loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                let Some(&bi) = batches.get(i) else { break };
+                let r = run_batch_framed(rt, codec.as_ref(), task, bi as usize);
+                *slots[i].lock().expect("batch slot lock") = Some(r);
+            }
+        };
+        std::thread::scope(|s| {
+            for rt in self.workers.iter_mut().take(n - 1) {
+                s.spawn(|| run(rt));
+            }
+            run(&mut self.rt);
+        });
+        let mut out = Vec::with_capacity(batches.len());
+        for (i, slot) in slots.into_iter().enumerate() {
+            let r = slot
+                .into_inner()
+                .expect("batch slot lock")
+                .unwrap_or_else(|| Err(anyhow::anyhow!("batch {} was never computed", batches[i])));
+            let (o, f) = r.with_context(|| format!("computing batch {}", batches[i]))?;
+            out.push((batches[i], o, f));
+        }
+        Ok(out)
+    }
+}
+
+/// Both frame layouts carry the format version at byte 4; session
+/// frames decode through per-client state, v1 frames through the
+/// stateless codec.
+fn is_session_frame(frame_bytes: &[u8]) -> bool {
+    frame_bytes.len() > 4 && frame_bytes[4] == frame::SESSION_VERSION
+}
+
+fn send(stream: &mut TcpStream, msg: &Msg) -> Result<()> {
+    let (ty, payload) = msg.encode();
+    framing::write_msg(stream, ty, &payload).with_context(|| format!("sending {}", msg.name()))
+}
+
+fn recv(stream: &mut TcpStream) -> Result<Option<Msg>> {
+    match framing::read_msg(stream)? {
+        None => Ok(None),
+        Some((ty, payload)) => Ok(Some(Msg::decode(ty, &payload)?)),
+    }
+}
+
+fn recv_required(stream: &mut TcpStream) -> Result<Msg> {
+    recv(stream)?.context("coordinator closed the connection")
+}
+
+/// Block until the resync frame for `client` arrives (the coordinator
+/// sends nothing else to this slot between a NeedResync and its
+/// Resync).
+fn expect_resync(stream: &mut TcpStream, iter: u64, client: u64) -> Result<Vec<u8>> {
+    match recv_required(stream)? {
+        Msg::Resync {
+            iter: ri,
+            client: rc,
+            frame,
+        } => {
+            ensure!(
+                ri == iter && rc == client,
+                "resync addressed to client {rc} (iteration {ri}), expected client {client} \
+                 (iteration {iter})"
+            );
+            Ok(frame)
+        }
+        other => bail!("expected a Resync frame, got {}", other.name()),
+    }
+}
+
+/// The mid-round stall fault: consume and discard until the
+/// coordinator's deadline cuts the socket.
+fn stall_until_closed(stream: &mut TcpStream) {
+    let mut sink = [0u8; 1024];
+    loop {
+        match stream.read(&mut sink) {
+            Ok(0) | Err(_) => return,
+            Ok(_) => {}
+        }
+    }
+}

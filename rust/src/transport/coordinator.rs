@@ -1,0 +1,868 @@
+//! The coordinator side of the TCP lane.
+//!
+//! [`TcpLane`] implements [`RoundLane`] over real sockets: it accepts
+//! `client` processes into hosting slots, drives the phase-ordered
+//! round protocol from `transport::proto`, paces downloads through the
+//! [`DownloadScheduler`], detects mid-round dropout (EOF or round
+//! deadline), and serves reconnect-triggered session resyncs. All
+//! training bookkeeping stays in the trainer; this type only reports
+//! what moved as an [`ExchangeOutcome`].
+//!
+//! ## Threads
+//!
+//! One accept thread (new connections → events) and one reader thread
+//! per live connection (decoded messages → events) feed a single mpsc
+//! channel; the lane's own methods run single-threaded on the trainer's
+//! thread and do all the writes. Reader threads are tagged with the
+//! slot's connection *epoch*: after a dropout + rejoin, events from the
+//! replaced connection's reader carry a stale epoch and are ignored —
+//! a slow zombie can never corrupt the successor's round.
+//!
+//! ## Determinism
+//!
+//! Everything order-sensitive is keyed, never arrival-ordered: download
+//! records sit in participant order and are compacted at phase end,
+//! batch outcomes land in an index-addressed table and merge through
+//! the same fold as the in-process lane ([`merge_partial`]). Arrival
+//! order, pacing sleeps and deadlines therefore shift *when* things
+//! happen, never what the round computes — the `transport-e2e` CI job
+//! holds a fault-free run to byte-identical dumps/digests/journals
+//! against the in-process lane.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::Write as _;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::config::TransportConfig;
+use crate::metrics::{MetricAccumulator, MetricSet};
+use crate::runtime::fleet::{decode_upload, BatchOutcome};
+use crate::runtime::FcfRuntime;
+use crate::server::journal::check_fingerprint;
+use crate::simnet::TrafficLedger;
+use crate::transport::framing::{read_msg, write_msg, MSG_HEADER_LEN};
+use crate::transport::lane::{
+    merge_partial, plan_downloads, verified_resync_frame, DownloadRecord, ExchangeOutcome,
+    ExchangeRequest, RoundLane, TransportStats,
+};
+use crate::transport::proto::{Msg, MIRROR, NO_GENERATION, PROTO_VERSION};
+use crate::transport::sched::DownloadScheduler;
+use crate::wire::PayloadCodec;
+
+/// How long a handshaking connection may dawdle over its `Hello`.
+const HELLO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Round-start settling window in `wait_rejoin` mode: long enough for a
+/// loopback peer's end-of-round disconnect to surface as an EOF event,
+/// short enough to be invisible next to a round's compute.
+const DROPOUT_GRACE: Duration = Duration::from_millis(50);
+
+/// One hosting slot's connection state.
+struct Slot {
+    /// Write half (a `try_clone` of the reader thread's stream).
+    writer: Option<TcpStream>,
+    /// Connection epoch; bumped on every (re)admission so events from a
+    /// replaced connection's reader are recognizably stale.
+    epoch: u64,
+    /// Has any process ever held this slot? (First joins are not
+    /// rejoins and must not invalidate anything.)
+    ever_joined: bool,
+    /// A process rejoined this slot and its hosted clients' cached
+    /// download state is gone; consumed at the next round start.
+    needs_invalidate: bool,
+}
+
+impl Slot {
+    fn alive(&self) -> bool {
+        self.writer.is_some()
+    }
+}
+
+/// An event from the accept thread or a reader thread.
+enum Event {
+    /// A fresh TCP connection awaiting its `Hello`.
+    Conn(TcpStream),
+    /// A message (or EOF/error as `None`) from slot `slot`'s reader at
+    /// connection epoch `epoch`; `wire_bytes` is the framed size.
+    From {
+        slot: usize,
+        epoch: u64,
+        msg: Option<Msg>,
+        wire_bytes: u64,
+    },
+}
+
+/// The TCP round lane: coordinator side.
+pub struct TcpLane {
+    addr: SocketAddr,
+    slots: Vec<Slot>,
+    events: mpsc::Receiver<Event>,
+    tx: mpsc::Sender<Event>,
+    fingerprint: String,
+    cfg: TransportConfig,
+    sched: DownloadScheduler,
+    stats: TransportStats,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    readers: Vec<JoinHandle<()>>,
+    finished: bool,
+}
+
+impl TcpLane {
+    /// Bind the listener and start accepting client processes into
+    /// `cfg.clients` hosting slots. `fingerprint` is the run's
+    /// `determinism_fingerprint()`; processes presenting a different
+    /// one are rejected at handshake.
+    pub fn bind(cfg: &TransportConfig, fingerprint: String) -> Result<TcpLane> {
+        ensure!(cfg.clients >= 1, "transport.clients must be >= 1");
+        let listener = TcpListener::bind(&cfg.listen)
+            .with_context(|| format!("binding transport listener on {}", cfg.listen))?;
+        let addr = listener.local_addr()?;
+        let (tx, events) = mpsc::channel();
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let tx = tx.clone();
+            let stop = Arc::clone(&stop);
+            std::thread::Builder::new()
+                .name("transport-accept".into())
+                .spawn(move || {
+                    for conn in listener.incoming() {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        if let Ok(stream) = conn {
+                            if tx.send(Event::Conn(stream)).is_err() {
+                                break;
+                            }
+                        }
+                    }
+                })?
+        };
+        Ok(TcpLane {
+            addr,
+            slots: (0..cfg.clients)
+                .map(|_| Slot {
+                    writer: None,
+                    epoch: 0,
+                    ever_joined: false,
+                    needs_invalidate: false,
+                })
+                .collect(),
+            events,
+            tx,
+            fingerprint,
+            cfg: cfg.clone(),
+            sched: DownloadScheduler::new(cfg.bandwidth_cap_bps),
+            stats: TransportStats::default(),
+            stop,
+            accept: Some(accept),
+            readers: Vec::new(),
+            finished: false,
+        })
+    }
+
+    /// The address the listener actually bound (port 0 resolved).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block until every hosting slot has a live client process, or
+    /// `timeout` elapses (error). Run this before training so round 1
+    /// starts with a full fleet.
+    pub fn wait_for_fleet(&mut self, timeout: Duration) -> Result<()> {
+        let deadline = Instant::now() + timeout;
+        while self.slots.iter().any(|s| !s.alive()) {
+            match self.recv_until(Some(deadline)) {
+                Some(ev) => self.handle_idle_event(ev),
+                None => bail!(
+                    "only {}/{} client processes connected within {timeout:?}",
+                    self.slots.iter().filter(|s| s.alive()).count(),
+                    self.slots.len()
+                ),
+            }
+        }
+        Ok(())
+    }
+
+    /// Live slots right now (for operator output).
+    pub fn live_slots(&self) -> usize {
+        self.slots.iter().filter(|s| s.alive()).count()
+    }
+
+    fn recv_until(&self, deadline: Option<Instant>) -> Option<Event> {
+        match deadline {
+            None => self.events.recv().ok(),
+            Some(d) => {
+                let now = Instant::now();
+                if now >= d {
+                    return None;
+                }
+                self.events.recv_timeout(d - now).ok()
+            }
+        }
+    }
+
+    /// Handle an event while no round phase is in flight: admit
+    /// connections, retire dead slots, ignore stale messages.
+    fn handle_idle_event(&mut self, ev: Event) {
+        match ev {
+            Event::Conn(stream) => {
+                if let Err(e) = self.admit(stream) {
+                    eprintln!("transport: rejected connection: {e:#}");
+                }
+            }
+            Event::From {
+                slot,
+                epoch,
+                msg,
+                wire_bytes,
+            } => {
+                self.stats.msgs_recv += u64::from(msg.is_some());
+                self.stats.bytes_recv += wire_bytes;
+                if self.slots[slot].epoch == epoch && msg.is_none() {
+                    self.kill_slot(slot);
+                }
+            }
+        }
+    }
+
+    /// Handshake a fresh connection into a vacant slot.
+    fn admit(&mut self, mut stream: TcpStream) -> Result<()> {
+        let _ = stream.set_nodelay(true);
+        stream.set_read_timeout(Some(HELLO_TIMEOUT))?;
+        let (ty, payload) = read_msg(&mut stream)?.context("peer closed before Hello")?;
+        let hello = Msg::decode(ty, &payload)?;
+        let Msg::Hello { proto, fingerprint } = hello else {
+            bail!("expected Hello, got {}", hello.name());
+        };
+        let reject = if proto != PROTO_VERSION {
+            Some(format!(
+                "protocol version mismatch (coordinator {PROTO_VERSION}, client {proto})"
+            ))
+        } else if let Err(e) = check_fingerprint(&self.fingerprint, &fingerprint) {
+            Some(format!("config fingerprint mismatch: {e}"))
+        } else {
+            None
+        };
+        let slot = self.slots.iter().position(|s| !s.alive());
+        let reject = reject.or_else(|| {
+            slot.is_none()
+                .then(|| format!("session is full ({} slots)", self.slots.len()))
+        });
+        if let Some(reason) = reject {
+            let (ty, payload) = Msg::HelloReject {
+                reason: reason.clone(),
+            }
+            .encode();
+            let _ = write_msg(&mut stream, ty, &payload);
+            let _ = stream.shutdown(Shutdown::Both);
+            bail!("{reason}");
+        }
+        let slot = slot.unwrap();
+        stream.set_read_timeout(None)?;
+        let (ty, payload) = Msg::HelloAck {
+            slot: slot as u32,
+            slots: self.slots.len() as u32,
+        }
+        .encode();
+        write_msg(&mut stream, ty, &payload)?;
+        self.stats.msgs_sent += 1;
+        self.stats.bytes_sent += (MSG_HEADER_LEN + payload.len() + 4) as u64;
+
+        let s = &mut self.slots[slot];
+        s.epoch += 1;
+        if s.ever_joined {
+            s.needs_invalidate = true;
+            self.stats.rejoins += 1;
+        }
+        s.ever_joined = true;
+        s.writer = Some(stream.try_clone()?);
+
+        let epoch = self.slots[slot].epoch;
+        let tx = self.tx.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("transport-read-{slot}"))
+            .spawn(move || reader_loop(stream, slot, epoch, tx))?;
+        self.readers.push(handle);
+        Ok(())
+    }
+
+    /// Tear a slot's socket down so its reader thread unblocks (no
+    /// dropout accounting — used for orderly shutdown too).
+    fn close_slot(&mut self, slot: usize) {
+        if let Some(w) = self.slots[slot].writer.take() {
+            let _ = w.shutdown(Shutdown::Both);
+        }
+    }
+
+    /// Mark a slot's connection dead mid-session: a dropout.
+    fn kill_slot(&mut self, slot: usize) {
+        if self.slots[slot].alive() {
+            self.stats.dropouts += 1;
+        }
+        self.close_slot(slot);
+    }
+
+    /// Send one message to a slot; a write failure is a dropout.
+    fn send(&mut self, slot: usize, msg: &Msg) {
+        let (ty, payload) = msg.encode();
+        let ok = match self.slots[slot].writer.as_mut() {
+            Some(w) => write_msg(w, ty, &payload).is_ok(),
+            None => return,
+        };
+        if ok {
+            self.stats.msgs_sent += 1;
+            self.stats.bytes_sent += (MSG_HEADER_LEN + payload.len() + 4) as u64;
+        } else {
+            self.kill_slot(slot);
+        }
+    }
+
+    /// Build (or reuse) this round's verified resync frame.
+    fn resync_frame(
+        req: &ExchangeRequest<'_>,
+        cache: &mut Option<Vec<u8>>,
+    ) -> Result<Vec<u8>> {
+        if let Some(f) = cache {
+            return Ok(f.clone());
+        }
+        let (sess, enc) = req
+            .session
+            .ok_or_else(|| anyhow!("client requested a resync but no session is active"))?;
+        let f = verified_resync_frame(sess, req.q_sel, enc.generation)?;
+        *cache = Some(f.clone());
+        Ok(f)
+    }
+}
+
+/// Per-connection reader: decoded messages (or one final `None`) into
+/// the event channel, tagged with the connection epoch.
+fn reader_loop(mut stream: TcpStream, slot: usize, epoch: u64, tx: mpsc::Sender<Event>) {
+    loop {
+        let (msg, wire_bytes) = match read_msg(&mut stream) {
+            Ok(Some((ty, payload))) => {
+                let wire = (MSG_HEADER_LEN + payload.len() + 4) as u64;
+                match Msg::decode(ty, &payload) {
+                    Ok(m) => (Some(m), wire),
+                    Err(_) => (None, wire),
+                }
+            }
+            Ok(None) | Err(_) => (None, 0),
+        };
+        let last = msg.is_none();
+        if tx
+            .send(Event::From {
+                slot,
+                epoch,
+                msg,
+                wire_bytes,
+            })
+            .is_err()
+            || last
+        {
+            let _ = stream.shutdown(Shutdown::Both);
+            return;
+        }
+    }
+}
+
+impl RoundLane for TcpLane {
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn exchange(
+        &mut self,
+        req: ExchangeRequest<'_>,
+        _rt: &mut FcfRuntime,
+        codec: &dyn PayloadCodec,
+    ) -> Result<ExchangeOutcome> {
+        let start = Instant::now();
+        let n_slots = self.slots.len();
+        let m_s = req.selected.len();
+        let k = req.task.k;
+        let b = req.task.batch;
+        let evaluate = req.task.evaluate;
+        let deadline = (self.cfg.round_deadline_ms > 0)
+            .then(|| start + Duration::from_millis(self.cfg.round_deadline_ms));
+        let mut resync_cache: Option<Vec<u8>> = None;
+
+        // ---- round start: drain pending events, optionally wait out
+        // vacant slots (deterministic reconnect), consume rejoins ----
+        while let Ok(ev) = self.events.try_recv() {
+            self.handle_idle_event(ev);
+        }
+        if self.cfg.wait_rejoin {
+            // A peer that died at the previous round's edge races this
+            // round's start: its reader thread may not have posted the
+            // EOF yet, and a dropout we fail to observe here would make
+            // the round run partial instead of waiting for the rejoin.
+            // Deterministic-reconnect mode buys reliable detection with
+            // a short, timing-only grace window (quarantined to the
+            // trace `"t"` field like all transport timing).
+            let grace = Instant::now() + DROPOUT_GRACE;
+            while let Some(ev) = self.recv_until(Some(grace)) {
+                self.handle_idle_event(ev);
+            }
+        }
+        if self.cfg.wait_rejoin && self.slots.iter().any(|s| !s.alive()) {
+            let until = Instant::now() + Duration::from_millis(self.cfg.rejoin_wait_ms);
+            while self.slots.iter().any(|s| !s.alive()) {
+                match self.recv_until(Some(until)) {
+                    Some(ev) => self.handle_idle_event(ev),
+                    None => break,
+                }
+            }
+        }
+        let mut fresh = BTreeSet::new();
+        for slot in 0..n_slots {
+            if self.slots[slot].alive() && self.slots[slot].needs_invalidate {
+                self.slots[slot].needs_invalidate = false;
+                fresh.extend((0..req.fleet.len()).filter(|cid| cid % n_slots == slot));
+            }
+        }
+        let invalidated: Vec<usize> = fresh.iter().copied().collect();
+        for &cid in &fresh {
+            // a rejoined process's hosted devices start with a free link
+            self.sched.forget(cid as u64);
+        }
+
+        // ---- participants with a live hosting slot actually run ----
+        let active: Vec<usize> = req
+            .participants
+            .iter()
+            .copied()
+            .filter(|cid| self.slots[cid % n_slots].alive())
+            .collect();
+        let mut dropped: BTreeSet<usize> = req
+            .participants
+            .iter()
+            .copied()
+            .filter(|cid| !self.slots[cid % n_slots].alive())
+            .collect();
+        let n_batches = if active.is_empty() {
+            0
+        } else {
+            active.len().div_ceil(b)
+        };
+
+        // ---- phase 1: RoundBegin to every live slot ----
+        let begin = Msg::RoundBegin {
+            iter: req.iter,
+            evaluate,
+            selected: req.selected.to_vec(),
+            participants: active.iter().map(|&c| c as u64).collect(),
+            frame: req.frame.to_vec(),
+            q_full: if evaluate {
+                req.task.q_full.clone()
+            } else {
+                Vec::new()
+            },
+        };
+        for slot in 0..n_slots {
+            if self.slots[slot].alive() {
+                self.send(slot, &begin);
+            }
+        }
+
+        // ---- phase 2: mirror sync (serves the network-driven
+        // SessionDecode::Stale path for rejoined processes) ----
+        let mut pending: BTreeSet<usize> =
+            (0..n_slots).filter(|&s| self.slots[s].alive()).collect();
+        while !pending.is_empty() {
+            let Some(ev) = self.recv_until(deadline) else {
+                self.stats.deadline_expiries += 1;
+                for slot in std::mem::take(&mut pending) {
+                    self.kill_slot(slot);
+                }
+                break;
+            };
+            match ev {
+                Event::Conn(stream) => {
+                    // joins mid-round; participates from the next round
+                    if let Err(e) = self.admit(stream) {
+                        eprintln!("transport: rejected connection: {e:#}");
+                    }
+                }
+                Event::From {
+                    slot,
+                    epoch,
+                    msg,
+                    wire_bytes,
+                } => {
+                    self.stats.bytes_recv += wire_bytes;
+                    if self.slots[slot].epoch != epoch {
+                        continue;
+                    }
+                    let Some(msg) = msg else {
+                        self.kill_slot(slot);
+                        pending.remove(&slot);
+                        continue;
+                    };
+                    self.stats.msgs_recv += 1;
+                    match msg {
+                        Msg::MirrorSync { iter } if iter == req.iter => {
+                            pending.remove(&slot);
+                        }
+                        Msg::NeedResync {
+                            iter,
+                            client: MIRROR,
+                            ..
+                        } if iter == req.iter => {
+                            self.stats.need_resync_reqs += 1;
+                            let frame = Self::resync_frame(&req, &mut resync_cache)?;
+                            self.stats.resyncs_served += 1;
+                            self.send(
+                                slot,
+                                &Msg::Resync {
+                                    iter: req.iter,
+                                    client: MIRROR,
+                                    frame,
+                                },
+                            );
+                            // mirror resyncs keep the process decoder
+                            // current; they are not a device download and
+                            // are not ledger-recorded (the in-process
+                            // mirror costs nothing either)
+                        }
+                        other => eprintln!(
+                            "transport: slot {slot} sent {} during mirror sync",
+                            other.name()
+                        ),
+                    }
+                }
+            }
+        }
+
+        // ---- phase 3: paced downloads, recorded on ack ----
+        let (template, planned_resync) = plan_downloads(&req, &active, |cid| {
+            if fresh.contains(&cid) {
+                None
+            } else {
+                req.fleet.download_gen(cid)
+            }
+        })?;
+        if resync_cache.is_none() {
+            resync_cache = planned_resync;
+        }
+        let pos_of: BTreeMap<usize, usize> =
+            active.iter().enumerate().map(|(i, &c)| (c, i)).collect();
+        let mut acked = vec![false; active.len()];
+        let mut extras: Vec<(usize, DownloadRecord)> = Vec::new();
+        let mut await_ack: BTreeSet<usize> = BTreeSet::new();
+        for (i, rec) in template.iter().enumerate() {
+            let cid = rec.client;
+            let slot = cid % n_slots;
+            if !self.slots[slot].alive() {
+                continue;
+            }
+            let now_ns = start.elapsed().as_nanos() as u64;
+            let wait = self.sched.schedule(cid as u64, rec.bytes, now_ns);
+            if wait > 0 {
+                self.stats.paced_wait_ns += wait;
+                std::thread::sleep(Duration::from_nanos(wait));
+            }
+            let frame = if rec.resync {
+                self.stats.resyncs_served += 1;
+                Self::resync_frame(&req, &mut resync_cache)?
+            } else {
+                req.frame.to_vec()
+            };
+            self.send(
+                slot,
+                &Msg::Download {
+                    iter: req.iter,
+                    client: cid as u64,
+                    frame,
+                },
+            );
+            if self.slots[slot].alive() {
+                await_ack.insert(i);
+            }
+        }
+        while !await_ack.is_empty() {
+            let Some(ev) = self.recv_until(deadline) else {
+                self.stats.deadline_expiries += 1;
+                let stalled: BTreeSet<usize> =
+                    await_ack.iter().map(|&i| active[i] % n_slots).collect();
+                for slot in stalled {
+                    self.kill_slot(slot);
+                }
+                await_ack.clear();
+                break;
+            };
+            match ev {
+                Event::Conn(stream) => {
+                    if let Err(e) = self.admit(stream) {
+                        eprintln!("transport: rejected connection: {e:#}");
+                    }
+                }
+                Event::From {
+                    slot,
+                    epoch,
+                    msg,
+                    wire_bytes,
+                } => {
+                    self.stats.bytes_recv += wire_bytes;
+                    if self.slots[slot].epoch != epoch {
+                        continue;
+                    }
+                    let Some(msg) = msg else {
+                        self.kill_slot(slot);
+                        await_ack.retain(|&i| active[i] % n_slots != slot);
+                        continue;
+                    };
+                    self.stats.msgs_recv += 1;
+                    match msg {
+                        Msg::DownloadAck { iter, client } if iter == req.iter => {
+                            if let Some(&i) = pos_of.get(&(client as usize)) {
+                                acked[i] = true;
+                                await_ack.remove(&i);
+                            }
+                        }
+                        Msg::NeedResync {
+                            iter,
+                            client,
+                            cached,
+                        } if iter == req.iter && client != MIRROR => {
+                            // safety net: the device cache disagreed with
+                            // the coordinator's generation table
+                            self.stats.need_resync_reqs += 1;
+                            let frame = Self::resync_frame(&req, &mut resync_cache)?;
+                            self.stats.resyncs_served += 1;
+                            if let Some(&i) = pos_of.get(&(client as usize)) {
+                                extras.push((
+                                    i,
+                                    DownloadRecord {
+                                        client: client as usize,
+                                        bytes: frame.len() as u64,
+                                        resync: true,
+                                        cached: (cached != NO_GENERATION)
+                                            .then_some(cached as u32),
+                                    },
+                                ));
+                            }
+                            self.send(
+                                slot,
+                                &Msg::Resync {
+                                    iter: req.iter,
+                                    client,
+                                    frame,
+                                },
+                            );
+                        }
+                        other => eprintln!(
+                            "transport: slot {slot} sent {} during downloads",
+                            other.name()
+                        ),
+                    }
+                }
+            }
+        }
+
+        // ---- phase 4: assign batches round-robin over live slots ----
+        let live: Vec<usize> = (0..n_slots).filter(|&s| self.slots[s].alive()).collect();
+        let mut owner: Vec<Option<usize>> = vec![None; n_batches];
+        if !live.is_empty() {
+            let mut per_slot: BTreeMap<usize, Vec<u64>> =
+                live.iter().map(|&s| (s, Vec::new())).collect();
+            for i in 0..n_batches {
+                let slot = live[i % live.len()];
+                owner[i] = Some(slot);
+                per_slot.get_mut(&slot).unwrap().push(i as u64);
+            }
+            for (&slot, batches) in &per_slot {
+                self.send(
+                    slot,
+                    &Msg::Assign {
+                        iter: req.iter,
+                        batches: batches.clone(),
+                    },
+                );
+            }
+        }
+
+        // ---- phase 5: collect batch outcomes (partial on deadline) ----
+        let mut outcomes: Vec<Option<BatchOutcome>> = (0..n_batches).map(|_| None).collect();
+        let mut missing: BTreeSet<usize> = (0..n_batches)
+            .filter(|&i| owner[i].is_some_and(|s| self.slots[s].alive()))
+            .collect();
+        while !missing.is_empty() {
+            let Some(ev) = self.recv_until(deadline) else {
+                self.stats.deadline_expiries += 1;
+                let stalled: BTreeSet<usize> =
+                    missing.iter().filter_map(|&i| owner[i]).collect();
+                for slot in stalled {
+                    self.kill_slot(slot);
+                }
+                missing.clear();
+                break;
+            };
+            match ev {
+                Event::Conn(stream) => {
+                    if let Err(e) = self.admit(stream) {
+                        eprintln!("transport: rejected connection: {e:#}");
+                    }
+                }
+                Event::From {
+                    slot,
+                    epoch,
+                    msg,
+                    wire_bytes,
+                } => {
+                    self.stats.bytes_recv += wire_bytes;
+                    if self.slots[slot].epoch != epoch {
+                        continue;
+                    }
+                    let Some(msg) = msg else {
+                        self.kill_slot(slot);
+                        missing.retain(|&i| owner[i] != Some(slot));
+                        continue;
+                    };
+                    self.stats.msgs_recv += 1;
+                    match msg {
+                        Msg::BatchDone {
+                            iter,
+                            index,
+                            up_frame,
+                            p,
+                            metric_count,
+                            metric_bits,
+                            phase_ns,
+                        } if iter == req.iter && (index as usize) < n_batches => {
+                            let index = index as usize;
+                            let grad = decode_upload(codec, &up_frame, m_s, k)?;
+                            let lo = index * b;
+                            let hi = (lo + b).min(active.len());
+                            let mut ledger = TrafficLedger::new();
+                            for _ in lo..hi {
+                                ledger.record_up(&req.task.simnet, up_frame.len() as u64);
+                            }
+                            let metrics = MetricAccumulator::from_parts(
+                                MetricSet {
+                                    precision: f64::from_bits(metric_bits[0]),
+                                    recall: f64::from_bits(metric_bits[1]),
+                                    f1: f64::from_bits(metric_bits[2]),
+                                    map: f64::from_bits(metric_bits[3]),
+                                },
+                                metric_count as usize,
+                            );
+                            outcomes[index] = Some(BatchOutcome {
+                                grad,
+                                p,
+                                ledger,
+                                metrics,
+                                phase_ns: phase_ns.map(u128::from),
+                                lane: slot + 1,
+                            });
+                            missing.remove(&index);
+                        }
+                        other => eprintln!(
+                            "transport: slot {slot} sent {} during compute",
+                            other.name()
+                        ),
+                    }
+                }
+            }
+        }
+
+        // ---- phase 6: round end + deterministic fold ----
+        let end = Msg::RoundEnd { iter: req.iter };
+        for slot in 0..n_slots {
+            if self.slots[slot].alive() {
+                self.send(slot, &end);
+            }
+        }
+        let (agg, batch_dropped) = merge_partial(m_s, k, &active, b, outcomes)?;
+        let contributed = active.len() - batch_dropped.len();
+        dropped.extend(batch_dropped);
+
+        // compact download records: participant order, acked only, with
+        // any safety-net resyncs spliced in after their broadcast slot
+        let mut downloads = Vec::with_capacity(active.len());
+        for (i, rec) in template.into_iter().enumerate() {
+            if acked[i] {
+                downloads.push(rec);
+            }
+            for (_, extra) in extras.iter().filter(|(pos, _)| *pos == i) {
+                downloads.push(*extra);
+            }
+        }
+
+        self.stats.rounds += 1;
+        Ok(ExchangeOutcome {
+            downloads,
+            agg,
+            contributed,
+            dropped: dropped.into_iter().collect(),
+            invalidated,
+            transport_ns: start.elapsed().as_nanos() as u64,
+        })
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        if self.finished {
+            return Ok(());
+        }
+        self.finished = true;
+        for slot in 0..self.slots.len() {
+            self.send(slot, &Msg::Shutdown);
+        }
+        // give clients a moment to say goodbye, then tear down
+        let grace = Instant::now() + Duration::from_millis(2000);
+        while self.slots.iter().any(|s| s.alive()) {
+            match self.recv_until(Some(grace)) {
+                Some(Event::From {
+                    slot,
+                    epoch,
+                    msg,
+                    wire_bytes,
+                }) => {
+                    self.stats.bytes_recv += wire_bytes;
+                    if self.slots[slot].epoch != epoch {
+                        continue;
+                    }
+                    match msg {
+                        Some(Msg::Bye { .. }) | None => self.close_slot(slot),
+                        Some(_) => {}
+                    }
+                }
+                Some(Event::Conn(stream)) => {
+                    let _ = stream.shutdown(Shutdown::Both);
+                }
+                None => break,
+            }
+        }
+        for slot in 0..self.slots.len() {
+            self.close_slot(slot);
+        }
+        self.stop.store(true, Ordering::SeqCst);
+        // wake the accept thread out of its blocking accept()
+        if let Ok(mut s) = TcpStream::connect(self.addr) {
+            let _ = s.write_all(&[0]);
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+
+    fn stats(&self) -> Option<TransportStats> {
+        Some(self.stats)
+    }
+}
+
+impl Drop for TcpLane {
+    fn drop(&mut self) {
+        let _ = self.finish();
+    }
+}

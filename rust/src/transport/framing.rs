@@ -1,0 +1,267 @@
+//! Length-prefixed message framing for the TCP lane.
+//!
+//! Every transport message travels as one frame:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic "FPTL"
+//! 4       1     message type (transport::proto tag)
+//! 5       4     payload length in bytes (u32, little-endian)
+//! 9       ...   payload
+//! 9+len   4     FNV-1a checksum of bytes 4..9+len (type, length, payload)
+//! ```
+//!
+//! The checksum reuses `wire::frame`'s FNV-1a (chained, so no payload
+//! copy is needed on either side). The payload itself is usually a
+//! `transport::proto` message, which may in turn *contain* a complete
+//! `wire::frame` download frame — the wire frame keeps its own header
+//! checksum, so payload corruption is detected twice, once per envelope.
+//!
+//! ## Torn reads are typed, not mysterious
+//!
+//! [`read_msg`] distinguishes every way a stream can end:
+//!
+//! * clean EOF **at a frame boundary** → `Ok(None)` (the peer closed
+//!   between messages — an orderly goodbye),
+//! * EOF **inside the 9-byte prefix** → [`FrameError::TornPrefix`],
+//! * EOF **inside payload or checksum** → [`FrameError::TornPayload`],
+//! * wrong magic → [`FrameError::BadMagic`] (desynchronized stream),
+//! * a length field beyond [`MAX_PAYLOAD`] → [`FrameError::Oversize`]
+//!   (a desynced or hostile peer must not make us allocate gigabytes),
+//! * checksum mismatch → [`FrameError::Checksum`].
+//!
+//! The coordinator maps `TornPrefix`/`TornPayload` on a live connection
+//! to mid-round dropout; the fault-injection e2e pins each variant.
+
+use std::io::{Read, Write};
+
+use anyhow::Result;
+
+use crate::wire::frame::{checksum_chained, CHECKSUM_SEED};
+
+/// Transport frame magic: "FPTL" (FedPayload Transport Lane).
+pub const MSG_MAGIC: [u8; 4] = *b"FPTL";
+
+/// Fixed prefix size: magic + type byte + u32 payload length.
+pub const MSG_HEADER_LEN: usize = 9;
+
+/// Hard cap on a single message payload (256 MiB). Far above any real
+/// frame (a 10^6 × 32 f32 download is 128 MiB) but small enough that a
+/// desynchronized length field cannot trigger an absurd allocation.
+pub const MAX_PAYLOAD: u32 = 256 * 1024 * 1024;
+
+/// Typed framing failures — every way a transport stream can be torn,
+/// truncated, or corrupted. Carried inside `anyhow::Error`; callers
+/// downcast with `err.downcast_ref::<FrameError>()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameError {
+    /// The stream ended inside the 9-byte message prefix (after at
+    /// least one byte): a torn length-prefix.
+    TornPrefix {
+        /// Prefix bytes actually received before EOF.
+        got: usize,
+    },
+    /// The stream ended inside the payload or trailing checksum.
+    TornPayload {
+        /// Payload + checksum bytes the prefix promised.
+        expected: usize,
+        /// Bytes actually received before EOF.
+        got: usize,
+    },
+    /// The prefix did not start with [`MSG_MAGIC`] — the stream is
+    /// desynchronized or the peer is not a transport endpoint.
+    BadMagic(
+        /// The four bytes read where the magic should be.
+        [u8; 4],
+    ),
+    /// The declared payload length exceeds [`MAX_PAYLOAD`].
+    Oversize(
+        /// The declared payload length.
+        u32,
+    ),
+    /// The trailing FNV-1a checksum did not match.
+    Checksum {
+        /// Checksum stored on the wire.
+        stored: u32,
+        /// Checksum recomputed from the received bytes.
+        computed: u32,
+    },
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::TornPrefix { got } => write!(
+                f,
+                "torn message prefix: stream ended after {got} of {MSG_HEADER_LEN} header bytes"
+            ),
+            FrameError::TornPayload { expected, got } => write!(
+                f,
+                "torn message payload: stream ended after {got} of {expected} body bytes"
+            ),
+            FrameError::BadMagic(m) => {
+                write!(f, "bad transport magic {m:02x?} (stream desynchronized?)")
+            }
+            FrameError::Oversize(len) => write!(
+                f,
+                "message declares {len} payload bytes, above the {MAX_PAYLOAD}-byte cap"
+            ),
+            FrameError::Checksum { stored, computed } => write!(
+                f,
+                "message checksum mismatch (stored {stored:#010x}, computed {computed:#010x})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// Write one framed message. The whole frame is assembled and written
+/// with a single `write_all`, so a crash mid-call leaves at worst one
+/// torn frame on the wire — which the peer's [`read_msg`] reports as a
+/// typed [`FrameError`] instead of garbage.
+pub fn write_msg(w: &mut impl Write, msg_type: u8, payload: &[u8]) -> std::io::Result<()> {
+    debug_assert!(payload.len() <= MAX_PAYLOAD as usize);
+    let mut frame = Vec::with_capacity(MSG_HEADER_LEN + payload.len() + 4);
+    frame.extend_from_slice(&MSG_MAGIC);
+    frame.push(msg_type);
+    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    frame.extend_from_slice(payload);
+    let sum = checksum_chained(CHECKSUM_SEED, &frame[4..]);
+    frame.extend_from_slice(&sum.to_le_bytes());
+    w.write_all(&frame)?;
+    w.flush()
+}
+
+/// Fill `buf` from the reader. Returns the number of bytes read before
+/// EOF (== `buf.len()` unless the stream ended early).
+fn read_exact_or_eof(r: &mut impl Read, buf: &mut [u8]) -> std::io::Result<usize> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => break,
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(filled)
+}
+
+/// Read one framed message. `Ok(None)` is a clean EOF at a frame
+/// boundary; every torn/corrupt variant is a typed [`FrameError`]
+/// inside the `anyhow::Error`.
+pub fn read_msg(r: &mut impl Read) -> Result<Option<(u8, Vec<u8>)>> {
+    let mut header = [0u8; MSG_HEADER_LEN];
+    let got = read_exact_or_eof(r, &mut header)?;
+    if got == 0 {
+        return Ok(None);
+    }
+    if got < MSG_HEADER_LEN {
+        return Err(FrameError::TornPrefix { got }.into());
+    }
+    if header[0..4] != MSG_MAGIC {
+        return Err(FrameError::BadMagic([header[0], header[1], header[2], header[3]]).into());
+    }
+    let msg_type = header[4];
+    let len = u32::from_le_bytes(header[5..9].try_into().unwrap());
+    if len > MAX_PAYLOAD {
+        return Err(FrameError::Oversize(len).into());
+    }
+    // payload + 4 trailing checksum bytes
+    let body_len = len as usize + 4;
+    let mut body = vec![0u8; body_len];
+    let got = read_exact_or_eof(r, &mut body)?;
+    if got < body_len {
+        return Err(FrameError::TornPayload {
+            expected: body_len,
+            got,
+        }
+        .into());
+    }
+    let stored = u32::from_le_bytes(body[len as usize..].try_into().unwrap());
+    let computed = checksum_chained(checksum_chained(CHECKSUM_SEED, &header[4..]), &body[..len as usize]);
+    if stored != computed {
+        return Err(FrameError::Checksum { stored, computed }.into());
+    }
+    body.truncate(len as usize);
+    Ok(Some((msg_type, body)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame_bytes(ty: u8, payload: &[u8]) -> Vec<u8> {
+        let mut out = Vec::new();
+        write_msg(&mut out, ty, payload).unwrap();
+        out
+    }
+
+    fn err_of(bytes: &[u8]) -> FrameError {
+        let e = read_msg(&mut &bytes[..]).unwrap_err();
+        *e.downcast_ref::<FrameError>().expect("typed FrameError")
+    }
+
+    #[test]
+    fn roundtrip_and_clean_eof() {
+        let payload = b"hello transport".to_vec();
+        let mut wire = frame_bytes(7, &payload);
+        wire.extend_from_slice(&frame_bytes(9, &[]));
+        let mut r = &wire[..];
+        assert_eq!(read_msg(&mut r).unwrap(), Some((7, payload)));
+        assert_eq!(read_msg(&mut r).unwrap(), Some((9, Vec::new())));
+        // boundary EOF is a clean goodbye, not an error
+        assert_eq!(read_msg(&mut r).unwrap(), None);
+    }
+
+    #[test]
+    fn torn_prefix_is_typed() {
+        let wire = frame_bytes(1, b"abc");
+        for cut in 1..MSG_HEADER_LEN {
+            assert_eq!(err_of(&wire[..cut]), FrameError::TornPrefix { got: cut });
+        }
+    }
+
+    #[test]
+    fn torn_payload_is_typed() {
+        let wire = frame_bytes(1, b"abcdef");
+        // cut anywhere in payload or trailing checksum
+        for cut in MSG_HEADER_LEN..wire.len() {
+            assert_eq!(
+                err_of(&wire[..cut]),
+                FrameError::TornPayload {
+                    expected: 6 + 4,
+                    got: cut - MSG_HEADER_LEN
+                }
+            );
+        }
+    }
+
+    #[test]
+    fn bad_magic_oversize_and_checksum_are_typed() {
+        let mut wire = frame_bytes(1, b"abc");
+        wire[0] = b'X';
+        assert!(matches!(err_of(&wire), FrameError::BadMagic(_)));
+
+        let mut wire = frame_bytes(1, b"abc");
+        wire[5..9].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        assert_eq!(err_of(&wire), FrameError::Oversize(MAX_PAYLOAD + 1));
+
+        let mut wire = frame_bytes(1, b"abc");
+        let n = wire.len();
+        wire[n - 6] ^= 0x20; // payload byte under the checksum
+        assert!(matches!(err_of(&wire), FrameError::Checksum { .. }));
+        // type byte and length are covered too
+        let mut wire = frame_bytes(1, b"abc");
+        wire[4] ^= 0x01;
+        assert!(matches!(err_of(&wire), FrameError::Checksum { .. }));
+    }
+
+    #[test]
+    fn empty_payload_roundtrips() {
+        let wire = frame_bytes(42, &[]);
+        assert_eq!(wire.len(), MSG_HEADER_LEN + 4);
+        assert_eq!(read_msg(&mut &wire[..]).unwrap(), Some((42, Vec::new())));
+    }
+}

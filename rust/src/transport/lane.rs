@@ -1,0 +1,442 @@
+//! The round exchange abstraction: one trait, two lanes.
+//!
+//! A [`RoundLane`] performs the network half of one FL round — deliver
+//! the broadcast/resync download to every participant, run the client
+//! compute, collect the encoded uploads — and reports *what moved* as
+//! plain data ([`ExchangeOutcome`]). The [`Trainer`] keeps every piece
+//! of bookkeeping (ledger, session stats, resync trace events,
+//! download-generation table, journal fields) on its own side, applied
+//! from the outcome records in deterministic participant/batch order.
+//! Single-sourcing the bookkeeping is the whole determinism story: two
+//! lanes cannot drift in accounting they do not own.
+//!
+//! * [`InProcessLane`] — the deterministic reference. Downloads are
+//!   table-lookups, compute runs on the sharded [`FleetExecutor`].
+//!   This is bit-for-bit the pre-transport behavior.
+//! * [`TcpLane`](super::coordinator::TcpLane) — the same exchange over
+//!   real sockets against `client` processes. Fault-free it must
+//!   produce an [`ExchangeOutcome`] that leads to byte-identical round
+//!   dumps, trace digests, and journal records (the `transport-e2e` CI
+//!   job diffs all three); under faults it reports partial aggregation
+//!   honestly via `dropped`/`contributed`.
+//!
+//! [`Trainer`]: crate::server::Trainer
+
+use anyhow::{ensure, Context, Result};
+
+use crate::client::Fleet;
+use crate::runtime::fleet::{
+    merge_outcomes, BatchOutcome, BatchStat, FleetExecutor, RoundAggregate, RoundTask,
+};
+use crate::runtime::FcfRuntime;
+use crate::wire::{EncodedDownload, PayloadCodec, VqClientState, VqSession};
+
+/// Everything the trainer hands a lane for one round's exchange.
+pub struct ExchangeRequest<'a> {
+    /// 1-based FL iteration.
+    pub iter: u64,
+    /// Participating client ids in round order.
+    pub participants: &'a [usize],
+    /// Sorted selected item ids (M_s of M) — client processes rebuild
+    /// their interaction rows from these.
+    pub selected: &'a [u32],
+    /// The broadcast download frame bytes (stateless v1 or session v2).
+    pub frame: &'a [u8],
+    /// `frame.len()`, pre-cast for ledger math.
+    pub down_bytes: u64,
+    /// Active codebook session + this round's encoded download, when
+    /// sessions are on (the lane decides per-participant broadcast vs
+    /// resync from `EncodedDownload::in_sync` against the fleet table).
+    pub session: Option<(&'a VqSession, &'a EncodedDownload)>,
+    /// Decoded broadcast factors (what a synced client decodes) — the
+    /// bit-reference every resync frame is verified against.
+    pub q_sel: &'a [f32],
+    /// The coordinator-side fleet: download-generation table reads.
+    pub fleet: &'a Fleet,
+    /// The round's compute task (already staged by the trainer).
+    pub task: RoundTask,
+}
+
+/// One served download, in participant order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DownloadRecord {
+    /// Client id served.
+    pub client: usize,
+    /// Encoded frame bytes that moved to it.
+    pub bytes: u64,
+    /// Was this a full-codebook resync frame instead of the broadcast?
+    pub resync: bool,
+    /// The cached generation the decision was made against.
+    pub cached: Option<u32>,
+}
+
+/// What one round's exchange moved and computed.
+pub struct ExchangeOutcome {
+    /// Served downloads in participant order. Fault-free this covers
+    /// every participant; under faults only the downloads that were
+    /// actually delivered (and acknowledged) appear — exact ledger
+    /// attribution, nothing phantom.
+    pub downloads: Vec<DownloadRecord>,
+    /// The round's deterministic aggregate (partial under faults).
+    pub agg: RoundAggregate,
+    /// Clients whose uploads made it into `agg` — the divisor for mean
+    /// aggregation and reward scaling. Equals `participants.len()`
+    /// fault-free.
+    pub contributed: usize,
+    /// Client ids dropped this round (undelivered download, dead
+    /// hosting process, or missing batch at the deadline), sorted.
+    pub dropped: Vec<usize>,
+    /// Hosted client ids whose cached download state was lost to a
+    /// process restart — the trainer invalidates their generation-table
+    /// entries, which is what turns a reconnect into real resync
+    /// frames next round.
+    pub invalidated: Vec<usize>,
+    /// Wall-clock nanoseconds the exchange spent (timing fact: rides in
+    /// `"t":{...}` trace fields only, 0 for the in-process lane).
+    pub transport_ns: u64,
+}
+
+/// Cumulative transport-side counters (zero for the in-process lane).
+/// Wall-clock/network facts for operator output — never journaled,
+/// never traced outside `"t":{...}` fields.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TransportStats {
+    /// Rounds exchanged.
+    pub rounds: u64,
+    /// Messages sent / received by the coordinator.
+    pub msgs_sent: u64,
+    /// Messages received by the coordinator.
+    pub msgs_recv: u64,
+    /// Bytes sent (framed messages, headers included).
+    pub bytes_sent: u64,
+    /// Bytes received (framed messages, headers included).
+    pub bytes_recv: u64,
+    /// Resync frames served (per-client downloads + mirror resyncs).
+    pub resyncs_served: u64,
+    /// `NeedResync` requests received from clients — each one is the
+    /// `SessionDecode::Stale` path fired by a real network peer.
+    pub need_resync_reqs: u64,
+    /// Client processes detected dead (EOF or deadline).
+    pub dropouts: u64,
+    /// Processes (re)joined after the session started.
+    pub rejoins: u64,
+    /// Round phases cut short by the deadline.
+    pub deadline_expiries: u64,
+    /// Nanoseconds spent sleeping for the bandwidth scheduler.
+    pub paced_wait_ns: u64,
+}
+
+/// The network half of one FL round, behind a trait so the trainer is
+/// lane-agnostic. Implementations must construct `downloads` in
+/// participant order and `agg` by batch-index-ordered merge — the two
+/// invariants that make the outcome independent of delivery/completion
+/// order.
+pub trait RoundLane {
+    /// Lane name for logs and reports.
+    fn name(&self) -> &'static str;
+
+    /// Execute one round's exchange.
+    fn exchange(
+        &mut self,
+        req: ExchangeRequest<'_>,
+        rt: &mut FcfRuntime,
+        codec: &dyn PayloadCodec,
+    ) -> Result<ExchangeOutcome>;
+
+    /// Orderly teardown (close sockets, say goodbye). No-op by default.
+    fn finish(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    /// Transport counters, when the lane has any.
+    fn stats(&self) -> Option<TransportStats> {
+        None
+    }
+}
+
+/// Build this round's full-codebook resync frame and verify it decodes
+/// — statelessly, as a fresh client would — to bit-identical factors as
+/// the broadcast. Shared by both lanes so a resync is *proven*
+/// trajectory-neutral no matter which wire it rides.
+pub fn verified_resync_frame(sess: &VqSession, q_sel: &[f32], generation: u32) -> Result<Vec<u8>> {
+    let rf = sess.resync_frame()?;
+    let dec = VqClientState::new()
+        .decode_dense(&rf)?
+        .into_data()
+        .context("resync frame must decode statelessly")?;
+    ensure!(
+        dec.data.len() == q_sel.len()
+            && dec
+                .data
+                .iter()
+                .zip(q_sel)
+                .all(|(a, b)| a.to_bits() == b.to_bits()),
+        "resync frame decoded differently from the broadcast frame (generation {generation})"
+    );
+    Ok(rf)
+}
+
+/// Fold whatever batches completed into a round aggregate, in
+/// batch-index order, and report the clients of missing batches. With
+/// full coverage this delegates to [`merge_outcomes`] — the transport
+/// lane's fault-free path runs the *same code* as the in-process lane,
+/// so bit-identity is shared, not re-implemented. With gaps it performs
+/// the identical fold over the present batches only (deadline-based
+/// partial aggregation).
+pub fn merge_partial(
+    m_s: usize,
+    k: usize,
+    client_ids: &[usize],
+    batch: usize,
+    outcomes: Vec<Option<BatchOutcome>>,
+) -> Result<(RoundAggregate, Vec<usize>)> {
+    ensure!(batch > 0, "batch width must be > 0");
+    let expected = client_ids.len().div_ceil(batch);
+    ensure!(
+        outcomes.len() == expected,
+        "merge_partial: {} outcome slots for {expected} batches",
+        outcomes.len()
+    );
+    if outcomes.iter().all(|o| o.is_some()) {
+        let full: Vec<BatchOutcome> = outcomes.into_iter().map(|o| o.unwrap()).collect();
+        return Ok((merge_outcomes(m_s, k, client_ids, batch, &full)?, Vec::new()));
+    }
+    let mut agg = RoundAggregate {
+        grad: vec![0.0f32; m_s * k],
+        ..RoundAggregate::default()
+    };
+    let mut dropped = Vec::new();
+    for (i, slot) in outcomes.iter().enumerate() {
+        let lo = i * batch;
+        let hi = (lo + batch).min(client_ids.len());
+        let Some(o) = slot else {
+            dropped.extend_from_slice(&client_ids[lo..hi]);
+            continue;
+        };
+        ensure!(
+            o.grad.len() == m_s * k,
+            "merge_partial: batch {i} gradient has {} values, expected {}",
+            o.grad.len(),
+            m_s * k
+        );
+        for (acc, v) in agg.grad.iter_mut().zip(&o.grad) {
+            *acc += v;
+        }
+        agg.metrics.merge(&o.metrics);
+        agg.ledger.merge(&o.ledger);
+        ensure!(
+            o.p.len() == (hi - lo) * k,
+            "merge_partial: batch {i} has {} factor values, expected {}",
+            o.p.len(),
+            (hi - lo) * k
+        );
+        agg.factor_ids.extend_from_slice(&client_ids[lo..hi]);
+        agg.factors.extend_from_slice(&o.p[..(hi - lo) * k]);
+        for (total, ns) in agg.phase_ns.iter_mut().zip(&o.phase_ns) {
+            *total += ns;
+        }
+        agg.batches.push(BatchStat {
+            batch: i,
+            clients: hi - lo,
+            lane: o.lane,
+            phase_ns: o.phase_ns,
+        });
+    }
+    dropped.sort_unstable();
+    Ok((agg, dropped))
+}
+
+/// Serve one round's downloads as records, in participant order, using
+/// the shared stale-or-broadcast decision. `cached_of` abstracts the
+/// generation lookup so the TCP lane can overlay "this process just
+/// rejoined, treat its clients as fresh" on top of the fleet table.
+pub fn plan_downloads(
+    req: &ExchangeRequest<'_>,
+    participants: &[usize],
+    mut cached_of: impl FnMut(usize) -> Option<u32>,
+) -> Result<(Vec<DownloadRecord>, Option<Vec<u8>>)> {
+    let mut records = Vec::with_capacity(participants.len());
+    let mut resync: Option<Vec<u8>> = None;
+    match req.session {
+        Some((sess, enc)) => {
+            for &cid in participants {
+                let cached = cached_of(cid);
+                if enc.in_sync(cached) {
+                    records.push(DownloadRecord {
+                        client: cid,
+                        bytes: req.down_bytes,
+                        resync: false,
+                        cached,
+                    });
+                } else {
+                    // built + verified at most once per round
+                    if resync.is_none() {
+                        resync = Some(verified_resync_frame(sess, req.q_sel, enc.generation)?);
+                    }
+                    let len = resync.as_ref().map(|f| f.len() as u64).unwrap();
+                    records.push(DownloadRecord {
+                        client: cid,
+                        bytes: len,
+                        resync: true,
+                        cached,
+                    });
+                }
+            }
+        }
+        None => {
+            for &cid in participants {
+                records.push(DownloadRecord {
+                    client: cid,
+                    bytes: req.down_bytes,
+                    resync: false,
+                    cached: None,
+                });
+            }
+        }
+    }
+    Ok((records, resync))
+}
+
+/// The deterministic reference lane: downloads are generation-table
+/// lookups, compute runs on the in-process sharded executor. Behavior
+/// is bit-for-bit the pre-transport round loop.
+pub struct InProcessLane {
+    executor: FleetExecutor,
+}
+
+impl InProcessLane {
+    /// Wrap the sharded executor as a lane.
+    pub fn new(executor: FleetExecutor) -> InProcessLane {
+        InProcessLane { executor }
+    }
+}
+
+impl RoundLane for InProcessLane {
+    fn name(&self) -> &'static str {
+        "in-process"
+    }
+
+    fn exchange(
+        &mut self,
+        req: ExchangeRequest<'_>,
+        rt: &mut FcfRuntime,
+        codec: &dyn PayloadCodec,
+    ) -> Result<ExchangeOutcome> {
+        let fleet = req.fleet;
+        let (downloads, _resync) =
+            plan_downloads(&req, req.participants, |cid| fleet.download_gen(cid))?;
+        let contributed = req.task.client_ids.len();
+        let agg = self.executor.run_round(req.task, rt, codec)?;
+        Ok(ExchangeOutcome {
+            downloads,
+            agg,
+            contributed,
+            dropped: Vec::new(),
+            invalidated: Vec::new(),
+            transport_ns: 0,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{MetricAccumulator, MetricSet};
+    use crate::simnet::TrafficLedger;
+
+    fn outcome(m_s: usize, k: usize, n: usize, seed: f32) -> BatchOutcome {
+        let mut ledger = TrafficLedger::new();
+        let sim = crate::config::RunConfig::paper_defaults().simnet;
+        for _ in 0..n {
+            ledger.record_up(&sim, 100 + seed as u64);
+        }
+        let mut metrics = MetricAccumulator::new();
+        metrics.push(&MetricSet {
+            precision: seed as f64,
+            recall: 0.5,
+            f1: 0.25,
+            map: seed as f64 * 0.1,
+        });
+        BatchOutcome {
+            grad: (0..m_s * k).map(|i| seed + i as f32 * 0.25).collect(),
+            p: (0..n * k).map(|i| seed - i as f32).collect(),
+            ledger,
+            metrics,
+            phase_ns: [10, 20, 30, 40],
+            lane: 1,
+        }
+    }
+
+    #[test]
+    fn full_coverage_matches_merge_outcomes_bitwise() {
+        let (m_s, k, batch) = (3, 2, 2);
+        let client_ids = vec![10, 11, 12, 13, 14];
+        let outcomes = vec![
+            outcome(m_s, k, 2, 1.0),
+            outcome(m_s, k, 2, 2.0),
+            outcome(m_s, k, 1, 3.0),
+        ];
+        let reference = merge_outcomes(m_s, k, &client_ids, batch, &outcomes).unwrap();
+        let (partial, dropped) = merge_partial(
+            m_s,
+            k,
+            &client_ids,
+            batch,
+            outcomes.into_iter().map(Some).collect(),
+        )
+        .unwrap();
+        assert!(dropped.is_empty());
+        assert_eq!(
+            partial.grad.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            reference.grad.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(partial.factor_ids, reference.factor_ids);
+        assert_eq!(partial.ledger.up_bytes, reference.ledger.up_bytes);
+        assert_eq!(partial.metrics.count(), reference.metrics.count());
+        assert_eq!(partial.batches, reference.batches);
+    }
+
+    #[test]
+    fn missing_batches_drop_their_clients_and_fold_in_index_order() {
+        let (m_s, k, batch) = (2, 2, 2);
+        let client_ids = vec![0, 1, 2, 3, 4, 5];
+        let o0 = outcome(m_s, k, 2, 1.0);
+        let o2 = outcome(m_s, k, 2, 5.0);
+        let (agg, dropped) = merge_partial(
+            m_s,
+            k,
+            &client_ids,
+            batch,
+            vec![Some(o0.clone()), None, Some(o2.clone())],
+        )
+        .unwrap();
+        // batch 1's clients are the dropped ones
+        assert_eq!(dropped, vec![2, 3]);
+        // grad = o0 + o2 summed in index order
+        let expected: Vec<u32> = o0
+            .grad
+            .iter()
+            .zip(&o2.grad)
+            .map(|(a, b)| (a + b).to_bits())
+            .collect();
+        assert_eq!(
+            agg.grad.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            expected
+        );
+        // factors cover batches 0 and 2 only, in order
+        assert_eq!(agg.factor_ids, vec![0, 1, 4, 5]);
+        assert_eq!(agg.batches.len(), 2);
+        assert_eq!((agg.batches[0].batch, agg.batches[1].batch), (0, 2));
+        // uploads of the missing batch never entered the ledger
+        assert_eq!(agg.ledger.up_msgs, 4);
+    }
+
+    #[test]
+    fn all_batches_missing_yields_zero_grad_and_all_dropped() {
+        let (agg, dropped) = merge_partial(2, 2, &[7, 8], 2, vec![None]).unwrap();
+        assert_eq!(dropped, vec![7, 8]);
+        assert_eq!(agg.grad, vec![0.0; 4]);
+        assert!(agg.factor_ids.is_empty());
+        assert_eq!(agg.metrics.count(), 0);
+    }
+}

@@ -1,0 +1,50 @@
+//! Real network transport lane: the coordinator/client process pair.
+//!
+//! Everything below `server` so far ran in one process. This module
+//! moves the same versioned, checksummed `wire` frames over TCP as
+//! length-prefixed messages between a `coordinator` bin and one or
+//! more `client` bins (each hosting many fleet clients), without
+//! touching a single training decision:
+//!
+//! * [`framing`] — the byte layer: `FPTL` magic, type byte, `u32`
+//!   length prefix, trailing FNV checksum; torn reads surface as
+//!   typed [`framing::FrameError`]s, never as garbage frames.
+//! * [`proto`] — the message layer: the phase-ordered round protocol
+//!   (`Hello` → `RoundBegin` → downloads → `Assign`/`BatchDone` →
+//!   `RoundEnd`) with hand-rolled little-endian encoding.
+//! * [`sched`] — the download scheduler: per-client bandwidth caps as
+//!   pure logical-nanosecond arithmetic, so pacing shifts *when*
+//!   frames leave, never *what* they contain.
+//! * [`lane`] — the seam: [`lane::RoundLane`] abstracts one round's
+//!   exchange (downloads out, aggregated batches back) and
+//!   [`lane::InProcessLane`] keeps the deterministic single-process
+//!   reference; the trainer applies the returned records identically
+//!   whichever lane produced them.
+//! * [`coordinator`] — the server side: [`coordinator::TcpLane`]
+//!   accepts client processes into hosting slots, paces downloads,
+//!   enforces round deadlines with partial aggregation, detects
+//!   mid-round dropouts, and resyncs rejoining processes.
+//! * [`client_proc`] — the device side: [`client_proc::ClientEngine`]
+//!   rebuilds the dataset from config, mirrors broadcast decodes,
+//!   hosts per-client session caches, computes assigned batches with
+//!   the same `run_batch_framed` the in-process executor uses, and
+//!   injects faults for the dropout e2e tests.
+//!
+//! ## Determinism contract
+//!
+//! Under a fault-free schedule a transport run must produce
+//! **byte-identical** round dumps, trace digests, and journal records
+//! to the in-process lane at any thread count — transport timing is
+//! quarantined to `"t":{...}` trace fields, which the digest strips.
+//! `ci/transport_e2e.sh` diffs the two lanes end to end.
+
+pub mod client_proc;
+pub mod coordinator;
+pub mod framing;
+pub mod lane;
+pub mod proto;
+pub mod sched;
+
+pub use client_proc::{connect_with_retry, ClientEngine, EngineReport, FaultPlan};
+pub use coordinator::TcpLane;
+pub use lane::{InProcessLane, RoundLane, TransportStats};

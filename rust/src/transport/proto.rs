@@ -1,0 +1,669 @@
+//! The coordinator ⇄ client message set and its byte codec.
+//!
+//! Hand-rolled little-endian serialization (the crate's only dependency
+//! is `anyhow`, so no serde): each message encodes to a `(type tag,
+//! payload)` pair that `transport::framing` envelopes with magic,
+//! length prefix and checksum. Decoding is bounds-checked through a
+//! cursor — a truncated payload is a typed error naming the field that
+//! fell off the end, never a panic.
+//!
+//! ## Round protocol
+//!
+//! A session is strictly phase-ordered per round, which is what lets
+//! both endpoints run synchronous single-reader loops:
+//!
+//! ```text
+//! client → Hello{proto, fingerprint}      coordinator → HelloAck{slot, slots}
+//!                                                     | HelloReject{reason}
+//! per round:
+//!   coord → RoundBegin{...broadcast frame...}  (all live slots)
+//!   client → MirrorSync | NeedResync(MIRROR)   (stale process mirror —
+//!   coord → Resync(MIRROR, frame)               the real-network
+//!   client → MirrorSync                         SessionDecode::Stale path)
+//!   coord → Download{client, frame}            (per hosted participant,
+//!   client → DownloadAck{client}                paced by the scheduler)
+//!          | NeedResync{client, cached}        (device cache disagrees)
+//!   coord → Resync{client, frame} → DownloadAck
+//!   coord → Assign{batch indices}
+//!   client → BatchDone{index, up_frame, p, metrics, phase_ns}  (per batch)
+//!   coord → RoundEnd
+//! shutdown:
+//!   coord → Shutdown                           client → Bye
+//! ```
+//!
+//! `NeedResync`/`Resync` address a *hosted client id*, or the
+//! [`MIRROR`] sentinel for the process-level mirror decoder that every
+//! client process keeps for the compute plane.
+
+use anyhow::{bail, ensure, Result};
+
+/// Protocol version; bumped on any wire-visible change. Checked in the
+/// Hello handshake before anything else moves.
+pub const PROTO_VERSION: u32 = 1;
+
+/// Client-id sentinel addressing the process-level mirror decoder
+/// instead of a hosted client.
+pub const MIRROR: u64 = u64::MAX;
+
+/// A `cached` generation sentinel meaning "no cached codebook".
+pub const NO_GENERATION: u64 = u64::MAX;
+
+/// One coordinator ⇄ client message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Client → coordinator: join the session.
+    Hello {
+        /// [`PROTO_VERSION`] of the sender.
+        proto: u32,
+        /// `RunConfig::determinism_fingerprint()` of the client's
+        /// config — both processes must run the identical
+        /// training-relevant configuration.
+        fingerprint: String,
+    },
+    /// Coordinator → client: admitted.
+    HelloAck {
+        /// Slot this process occupies (hosting clients `cid` with
+        /// `cid % slots == slot`).
+        slot: u32,
+        /// Total process slots in the session.
+        slots: u32,
+    },
+    /// Coordinator → client: refused (version/fingerprint mismatch).
+    HelloReject {
+        /// Human-readable refusal, naming the first differing config
+        /// key on a fingerprint mismatch.
+        reason: String,
+    },
+    /// Coordinator → all live slots: a round starts. Carries everything
+    /// a client process needs to rebuild the round's compute task
+    /// bit-identically: the sorted selected item ids, the participant
+    /// list (batch `i` covers `participants[i*B..(i+1)*B]`), the
+    /// broadcast download frame, and — on eval rounds — the full model
+    /// snapshot for recommendation scoring.
+    RoundBegin {
+        /// 1-based FL iteration.
+        iter: u64,
+        /// Compute contributing clients' test metrics this round?
+        evaluate: bool,
+        /// Sorted selected item ids (M_s of M).
+        selected: Vec<u32>,
+        /// Participating client ids in round order.
+        participants: Vec<u64>,
+        /// The broadcast download frame (complete `wire` frame bytes).
+        frame: Vec<u8>,
+        /// Full model snapshot, row-major m × k (empty when
+        /// `!evaluate`).
+        q_full: Vec<f32>,
+    },
+    /// Client → coordinator: the process mirror decoded the broadcast
+    /// (possibly after a mirror resync); the compute plane is staged.
+    MirrorSync {
+        /// Iteration being acknowledged.
+        iter: u64,
+    },
+    /// Client → coordinator: a decoder is stale and needs a resync
+    /// frame — the `SessionDecode::Stale` path driven by a real
+    /// network event.
+    NeedResync {
+        /// Iteration this happened in.
+        iter: u64,
+        /// Hosted client id, or [`MIRROR`] for the process mirror.
+        client: u64,
+        /// Cached codebook generation, [`NO_GENERATION`] if none.
+        cached: u64,
+    },
+    /// Coordinator → client: full-codebook resync frame for one stale
+    /// decoder.
+    Resync {
+        /// Iteration.
+        iter: u64,
+        /// Hosted client id, or [`MIRROR`].
+        client: u64,
+        /// Complete statelessly-decodable resync frame bytes.
+        frame: Vec<u8>,
+    },
+    /// Coordinator → hosting slot: one participant's download (the
+    /// broadcast frame, or a resync frame for a stale/rejoined client).
+    Download {
+        /// Iteration.
+        iter: u64,
+        /// Hosted client id this download is addressed to.
+        client: u64,
+        /// Complete `wire` frame bytes.
+        frame: Vec<u8>,
+    },
+    /// Client → coordinator: the hosted client decoded its download.
+    DownloadAck {
+        /// Iteration.
+        iter: u64,
+        /// Hosted client id acknowledging.
+        client: u64,
+    },
+    /// Coordinator → client: compute these batch indices of the round's
+    /// participant list.
+    Assign {
+        /// Iteration.
+        iter: u64,
+        /// Batch indices assigned to this slot.
+        batches: Vec<u64>,
+    },
+    /// Client → coordinator: one batch finished. The gradient travels
+    /// *encoded* — the coordinator decodes `up_frame` exactly as the
+    /// in-process lane decodes its local round-trip, so quantization
+    /// stays part of the training dynamics on both lanes.
+    BatchDone {
+        /// Iteration.
+        iter: u64,
+        /// Batch index within the round.
+        index: u64,
+        /// Sparse ∇Q* upload frame (complete `wire` frame bytes).
+        up_frame: Vec<u8>,
+        /// Solved user factors, n × k in batch order (f32 bits).
+        p: Vec<f32>,
+        /// Eval metric sets pushed (0 on non-eval rounds).
+        metric_count: u64,
+        /// Metric sums as f64 bits: precision, recall, f1, map.
+        metric_bits: [u64; 4],
+        /// Busy nanoseconds per phase: solve, grad, codec, eval
+        /// (wall-clock facts; never feed the deterministic merge).
+        phase_ns: [u64; 4],
+    },
+    /// Coordinator → all live slots: the round is fully aggregated.
+    RoundEnd {
+        /// Iteration that ended.
+        iter: u64,
+    },
+    /// Coordinator → client: the run is over, disconnect cleanly.
+    Shutdown,
+    /// Client → coordinator: goodbye (sent before a clean disconnect).
+    Bye {
+        /// Slot saying goodbye.
+        slot: u32,
+    },
+}
+
+// type tags (framing header byte 4)
+const T_HELLO: u8 = 1;
+const T_HELLO_ACK: u8 = 2;
+const T_HELLO_REJECT: u8 = 3;
+const T_ROUND_BEGIN: u8 = 4;
+const T_MIRROR_SYNC: u8 = 5;
+const T_NEED_RESYNC: u8 = 6;
+const T_RESYNC: u8 = 7;
+const T_DOWNLOAD: u8 = 8;
+const T_DOWNLOAD_ACK: u8 = 9;
+const T_ASSIGN: u8 = 10;
+const T_BATCH_DONE: u8 = 11;
+const T_ROUND_END: u8 = 12;
+const T_SHUTDOWN: u8 = 13;
+const T_BYE: u8 = 14;
+
+struct Writer(Vec<u8>);
+
+impl Writer {
+    fn new() -> Writer {
+        Writer(Vec::new())
+    }
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn bytes(&mut self, v: &[u8]) {
+        self.u32(v.len() as u32);
+        self.0.extend_from_slice(v);
+    }
+    fn str(&mut self, v: &str) {
+        self.bytes(v.as_bytes());
+    }
+    fn u32s(&mut self, v: &[u32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.u32(x);
+        }
+    }
+    fn u64s(&mut self, v: &[u64]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.u64(x);
+        }
+    }
+    fn f32s(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.u32(x.to_bits());
+        }
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        ensure!(
+            self.pos + n <= self.buf.len(),
+            "truncated message: `{what}` needs {n} bytes at offset {}, payload is {} bytes",
+            self.pos,
+            self.buf.len()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+    fn len(&mut self, what: &str) -> Result<usize> {
+        let n = self.u32(what)? as usize;
+        // a corrupt count cannot promise more elements than the payload
+        // has bytes left — rejects absurd counts before any `take`
+        ensure!(
+            n <= self.buf.len().saturating_sub(self.pos),
+            "truncated message: `{what}` count {n} exceeds the {} remaining payload bytes",
+            self.buf.len().saturating_sub(self.pos)
+        );
+        Ok(n)
+    }
+    fn bytes(&mut self, what: &str) -> Result<Vec<u8>> {
+        let n = self.len(what)?;
+        Ok(self.take(n, what)?.to_vec())
+    }
+    fn str(&mut self, what: &str) -> Result<String> {
+        let b = self.bytes(what)?;
+        String::from_utf8(b).map_err(|_| anyhow::anyhow!("`{what}` is not valid UTF-8"))
+    }
+    fn u32s(&mut self, what: &str) -> Result<Vec<u32>> {
+        let n = self.len(what)?;
+        let raw = self.take(n * 4, what)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+    fn u64s(&mut self, what: &str) -> Result<Vec<u64>> {
+        let n = self.len(what)?;
+        let raw = self.take(n * 8, what)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+    fn f32s(&mut self, what: &str) -> Result<Vec<f32>> {
+        let n = self.len(what)?;
+        let raw = self.take(n * 4, what)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+    fn done(&self, what: &str) -> Result<()> {
+        ensure!(
+            self.pos == self.buf.len(),
+            "{what}: {} trailing bytes after the last field",
+            self.buf.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+impl Msg {
+    /// Serialize to a `(framing type tag, payload)` pair.
+    pub fn encode(&self) -> (u8, Vec<u8>) {
+        let mut w = Writer::new();
+        let ty = match self {
+            Msg::Hello { proto, fingerprint } => {
+                w.u32(*proto);
+                w.str(fingerprint);
+                T_HELLO
+            }
+            Msg::HelloAck { slot, slots } => {
+                w.u32(*slot);
+                w.u32(*slots);
+                T_HELLO_ACK
+            }
+            Msg::HelloReject { reason } => {
+                w.str(reason);
+                T_HELLO_REJECT
+            }
+            Msg::RoundBegin {
+                iter,
+                evaluate,
+                selected,
+                participants,
+                frame,
+                q_full,
+            } => {
+                w.u64(*iter);
+                w.u8(u8::from(*evaluate));
+                w.u32s(selected);
+                w.u64s(participants);
+                w.bytes(frame);
+                w.f32s(q_full);
+                T_ROUND_BEGIN
+            }
+            Msg::MirrorSync { iter } => {
+                w.u64(*iter);
+                T_MIRROR_SYNC
+            }
+            Msg::NeedResync {
+                iter,
+                client,
+                cached,
+            } => {
+                w.u64(*iter);
+                w.u64(*client);
+                w.u64(*cached);
+                T_NEED_RESYNC
+            }
+            Msg::Resync {
+                iter,
+                client,
+                frame,
+            } => {
+                w.u64(*iter);
+                w.u64(*client);
+                w.bytes(frame);
+                T_RESYNC
+            }
+            Msg::Download {
+                iter,
+                client,
+                frame,
+            } => {
+                w.u64(*iter);
+                w.u64(*client);
+                w.bytes(frame);
+                T_DOWNLOAD
+            }
+            Msg::DownloadAck { iter, client } => {
+                w.u64(*iter);
+                w.u64(*client);
+                T_DOWNLOAD_ACK
+            }
+            Msg::Assign { iter, batches } => {
+                w.u64(*iter);
+                w.u64s(batches);
+                T_ASSIGN
+            }
+            Msg::BatchDone {
+                iter,
+                index,
+                up_frame,
+                p,
+                metric_count,
+                metric_bits,
+                phase_ns,
+            } => {
+                w.u64(*iter);
+                w.u64(*index);
+                w.bytes(up_frame);
+                w.f32s(p);
+                w.u64(*metric_count);
+                for &b in metric_bits {
+                    w.u64(b);
+                }
+                for &ns in phase_ns {
+                    w.u64(ns);
+                }
+                T_BATCH_DONE
+            }
+            Msg::RoundEnd { iter } => {
+                w.u64(*iter);
+                T_ROUND_END
+            }
+            Msg::Shutdown => T_SHUTDOWN,
+            Msg::Bye { slot } => {
+                w.u32(*slot);
+                T_BYE
+            }
+        };
+        (ty, w.0)
+    }
+
+    /// Deserialize from a `(framing type tag, payload)` pair. Unknown
+    /// tags and truncated payloads are typed errors.
+    pub fn decode(ty: u8, payload: &[u8]) -> Result<Msg> {
+        let mut r = Reader::new(payload);
+        let msg = match ty {
+            T_HELLO => Msg::Hello {
+                proto: r.u32("proto")?,
+                fingerprint: r.str("fingerprint")?,
+            },
+            T_HELLO_ACK => Msg::HelloAck {
+                slot: r.u32("slot")?,
+                slots: r.u32("slots")?,
+            },
+            T_HELLO_REJECT => Msg::HelloReject {
+                reason: r.str("reason")?,
+            },
+            T_ROUND_BEGIN => Msg::RoundBegin {
+                iter: r.u64("iter")?,
+                evaluate: r.u8("evaluate")? != 0,
+                selected: r.u32s("selected")?,
+                participants: r.u64s("participants")?,
+                frame: r.bytes("frame")?,
+                q_full: r.f32s("q_full")?,
+            },
+            T_MIRROR_SYNC => Msg::MirrorSync {
+                iter: r.u64("iter")?,
+            },
+            T_NEED_RESYNC => Msg::NeedResync {
+                iter: r.u64("iter")?,
+                client: r.u64("client")?,
+                cached: r.u64("cached")?,
+            },
+            T_RESYNC => Msg::Resync {
+                iter: r.u64("iter")?,
+                client: r.u64("client")?,
+                frame: r.bytes("frame")?,
+            },
+            T_DOWNLOAD => Msg::Download {
+                iter: r.u64("iter")?,
+                client: r.u64("client")?,
+                frame: r.bytes("frame")?,
+            },
+            T_DOWNLOAD_ACK => Msg::DownloadAck {
+                iter: r.u64("iter")?,
+                client: r.u64("client")?,
+            },
+            T_ASSIGN => Msg::Assign {
+                iter: r.u64("iter")?,
+                batches: r.u64s("batches")?,
+            },
+            T_BATCH_DONE => {
+                let iter = r.u64("iter")?;
+                let index = r.u64("index")?;
+                let up_frame = r.bytes("up_frame")?;
+                let p = r.f32s("p")?;
+                let metric_count = r.u64("metric_count")?;
+                let mut metric_bits = [0u64; 4];
+                for b in metric_bits.iter_mut() {
+                    *b = r.u64("metric_bits")?;
+                }
+                let mut phase_ns = [0u64; 4];
+                for ns in phase_ns.iter_mut() {
+                    *ns = r.u64("phase_ns")?;
+                }
+                Msg::BatchDone {
+                    iter,
+                    index,
+                    up_frame,
+                    p,
+                    metric_count,
+                    metric_bits,
+                    phase_ns,
+                }
+            }
+            T_ROUND_END => Msg::RoundEnd {
+                iter: r.u64("iter")?,
+            },
+            T_SHUTDOWN => Msg::Shutdown,
+            T_BYE => Msg::Bye { slot: r.u32("slot")? },
+            other => bail!("unknown transport message type {other}"),
+        };
+        r.done("transport message")?;
+        Ok(msg)
+    }
+
+    /// Short name for logs and errors.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Msg::Hello { .. } => "Hello",
+            Msg::HelloAck { .. } => "HelloAck",
+            Msg::HelloReject { .. } => "HelloReject",
+            Msg::RoundBegin { .. } => "RoundBegin",
+            Msg::MirrorSync { .. } => "MirrorSync",
+            Msg::NeedResync { .. } => "NeedResync",
+            Msg::Resync { .. } => "Resync",
+            Msg::Download { .. } => "Download",
+            Msg::DownloadAck { .. } => "DownloadAck",
+            Msg::Assign { .. } => "Assign",
+            Msg::BatchDone { .. } => "BatchDone",
+            Msg::RoundEnd { .. } => "RoundEnd",
+            Msg::Shutdown => "Shutdown",
+            Msg::Bye { .. } => "Bye",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: Msg) {
+        let (ty, payload) = msg.encode();
+        let back = Msg::decode(ty, &payload).unwrap();
+        assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn every_variant_roundtrips() {
+        roundtrip(Msg::Hello {
+            proto: PROTO_VERSION,
+            fingerprint: "seed=1;dataset.users=42".into(),
+        });
+        roundtrip(Msg::HelloAck { slot: 1, slots: 2 });
+        roundtrip(Msg::HelloReject {
+            reason: "fingerprint differs at `seed`".into(),
+        });
+        roundtrip(Msg::RoundBegin {
+            iter: 3,
+            evaluate: true,
+            selected: vec![1, 5, 9],
+            participants: vec![0, 1, 2, 3],
+            frame: vec![0xAB; 40],
+            q_full: vec![1.5, -2.25, f32::MIN_POSITIVE],
+        });
+        roundtrip(Msg::RoundBegin {
+            iter: 4,
+            evaluate: false,
+            selected: vec![],
+            participants: vec![],
+            frame: vec![],
+            q_full: vec![],
+        });
+        roundtrip(Msg::MirrorSync { iter: 3 });
+        roundtrip(Msg::NeedResync {
+            iter: 3,
+            client: MIRROR,
+            cached: NO_GENERATION,
+        });
+        roundtrip(Msg::Resync {
+            iter: 3,
+            client: 17,
+            frame: vec![1, 2, 3],
+        });
+        roundtrip(Msg::Download {
+            iter: 3,
+            client: 8,
+            frame: vec![9; 64],
+        });
+        roundtrip(Msg::DownloadAck { iter: 3, client: 8 });
+        roundtrip(Msg::Assign {
+            iter: 3,
+            batches: vec![0, 2],
+        });
+        roundtrip(Msg::BatchDone {
+            iter: 3,
+            index: 2,
+            up_frame: vec![4; 33],
+            p: vec![0.5; 8],
+            metric_count: 5,
+            metric_bits: [1, 2, 3, u64::MAX],
+            phase_ns: [10, 20, 30, 0],
+        });
+        roundtrip(Msg::RoundEnd { iter: 3 });
+        roundtrip(Msg::Shutdown);
+        roundtrip(Msg::Bye { slot: 1 });
+    }
+
+    #[test]
+    fn float_bits_are_exact() {
+        // f32 payloads travel as raw bits — NaN payloads and signed
+        // zeros survive exactly
+        let vals = vec![-0.0f32, f32::NAN, f32::INFINITY, 1.0e-40];
+        let (ty, payload) = Msg::RoundBegin {
+            iter: 1,
+            evaluate: true,
+            selected: vec![],
+            participants: vec![],
+            frame: vec![],
+            q_full: vals.clone(),
+        }
+        .encode();
+        match Msg::decode(ty, &payload).unwrap() {
+            Msg::RoundBegin { q_full, .. } => {
+                assert_eq!(
+                    q_full.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    vals.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+                );
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn truncation_is_a_typed_field_error() {
+        let (ty, payload) = Msg::Download {
+            iter: 9,
+            client: 3,
+            frame: vec![7; 32],
+        }
+        .encode();
+        for cut in 0..payload.len() {
+            let e = Msg::decode(ty, &payload[..cut]).unwrap_err().to_string();
+            assert!(
+                e.contains("truncated") || e.contains("count"),
+                "cut at {cut}: unexpected error `{e}`"
+            );
+        }
+        // trailing garbage is rejected too
+        let mut long = payload.clone();
+        long.push(0);
+        assert!(Msg::decode(ty, &long)
+            .unwrap_err()
+            .to_string()
+            .contains("trailing"));
+    }
+
+    #[test]
+    fn unknown_tag_is_rejected() {
+        assert!(Msg::decode(200, &[]).unwrap_err().to_string().contains("unknown"));
+    }
+}

@@ -1,0 +1,118 @@
+//! Download scheduler: per-client bandwidth pacing for the TCP lane.
+//!
+//! The coordinator serves every participant's download through this
+//! scheduler. Each client has an independent simulated downlink of
+//! `cap_bps` bytes/second (0 = uncapped): a frame of `n` bytes occupies
+//! the client's link for `n / cap_bps` seconds, so back-to-back frames
+//! to the *same* client are spaced while different clients proceed
+//! independently — heterogeneous delivery times without any effect on
+//! *what* is delivered.
+//!
+//! The math is pure (logical nanosecond clock in, delay out), so the
+//! determinism contract is visible by construction: pacing shifts
+//! *when* bytes move, never which bytes move, which is why a capped
+//! fault-free transport run still produces byte-identical round dumps.
+//! The unit tests below and the Python prototype exercise exactly this
+//! arithmetic; the coordinator maps it onto `Instant`/`sleep`.
+
+use std::collections::BTreeMap;
+
+/// Per-client pacing state over a logical nanosecond clock.
+#[derive(Debug, Clone)]
+pub struct DownloadScheduler {
+    cap_bps: u64,
+    /// Earliest ns at which each client's link is free again.
+    next_free_ns: BTreeMap<u64, u64>,
+}
+
+impl DownloadScheduler {
+    /// A scheduler enforcing `cap_bps` bytes/second per client
+    /// (0 = uncapped: every delay is zero).
+    pub fn new(cap_bps: u64) -> DownloadScheduler {
+        DownloadScheduler {
+            cap_bps,
+            next_free_ns: BTreeMap::new(),
+        }
+    }
+
+    /// Is pacing active at all?
+    pub fn capped(&self) -> bool {
+        self.cap_bps > 0
+    }
+
+    /// Schedule `bytes` to `client` at logical time `now_ns`: returns
+    /// the nanoseconds the send must wait for the client's link, and
+    /// books the transfer onto it.
+    pub fn schedule(&mut self, client: u64, bytes: u64, now_ns: u64) -> u64 {
+        if self.cap_bps == 0 {
+            return 0;
+        }
+        let free = self.next_free_ns.get(&client).copied().unwrap_or(0);
+        let start = free.max(now_ns);
+        let busy_ns = bytes.saturating_mul(1_000_000_000) / self.cap_bps;
+        self.next_free_ns.insert(client, start.saturating_add(busy_ns));
+        start - now_ns
+    }
+
+    /// Forget a client's link state (its process dropped; a rejoined
+    /// process starts with a free link).
+    pub fn forget(&mut self, client: u64) {
+        self.next_free_ns.remove(&client);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uncapped_never_waits() {
+        let mut s = DownloadScheduler::new(0);
+        assert!(!s.capped());
+        for i in 0..10 {
+            assert_eq!(s.schedule(i, 1 << 30, 0), 0);
+        }
+    }
+
+    #[test]
+    fn back_to_back_frames_are_spaced_by_bytes_over_cap() {
+        // 1000 B/s → a 500-byte frame busies the link for 0.5e9 ns
+        let mut s = DownloadScheduler::new(1000);
+        assert_eq!(s.schedule(7, 500, 0), 0);
+        // second frame at t=0 must wait out the first transfer
+        assert_eq!(s.schedule(7, 500, 0), 500_000_000);
+        // third waits for both
+        assert_eq!(s.schedule(7, 100, 0), 1_000_000_000);
+    }
+
+    #[test]
+    fn clients_pace_independently() {
+        let mut s = DownloadScheduler::new(1000);
+        assert_eq!(s.schedule(1, 1000, 0), 0);
+        // a different client's link is untouched
+        assert_eq!(s.schedule(2, 1000, 0), 0);
+        // ...but each is busy for itself
+        assert_eq!(s.schedule(1, 10, 0), 1_000_000_000);
+        assert_eq!(s.schedule(2, 10, 0), 1_000_000_000);
+    }
+
+    #[test]
+    fn elapsed_time_drains_the_backlog() {
+        let mut s = DownloadScheduler::new(1000);
+        s.schedule(3, 1000, 0); // busy until 1e9
+        // arriving at 0.4e9 waits the remaining 0.6e9
+        assert_eq!(s.schedule(3, 0, 400_000_000), 600_000_000);
+        // arriving after the link freed waits nothing
+        let mut s = DownloadScheduler::new(1000);
+        s.schedule(3, 1000, 0);
+        assert_eq!(s.schedule(3, 10, 2_000_000_000), 0);
+    }
+
+    #[test]
+    fn forget_resets_a_client_link() {
+        let mut s = DownloadScheduler::new(1000);
+        s.schedule(5, 10_000, 0);
+        s.forget(5);
+        assert_eq!(s.schedule(5, 10, 0), 0);
+    }
+}

@@ -169,6 +169,10 @@ pub struct FrameHeader {
 
 const FNV_OFFSET: u32 = 0x811c_9dc5;
 
+/// The FNV-1a initial state, for callers chaining
+/// [`checksum_chained`] over discontiguous byte runs.
+pub const CHECKSUM_SEED: u32 = FNV_OFFSET;
+
 fn fnv1a(mut h: u32, bytes: &[u8]) -> u32 {
     for &b in bytes {
         h ^= b as u32;
@@ -180,6 +184,14 @@ fn fnv1a(mut h: u32, bytes: &[u8]) -> u32 {
 /// 32-bit FNV-1a over a byte slice.
 pub fn checksum(bytes: &[u8]) -> u32 {
     fnv1a(FNV_OFFSET, bytes)
+}
+
+/// Continue an FNV-1a checksum over another byte run. Start from
+/// [`CHECKSUM_SEED`]; `checksum_chained(checksum_chained(SEED, a), b)`
+/// equals `checksum(a ++ b)` without concatenating — the transport
+/// framing layer checksums header + payload this way, copy-free.
+pub fn checksum_chained(state: u32, bytes: &[u8]) -> u32 {
+    fnv1a(state, bytes)
 }
 
 /// The frame checksum: FNV-1a chained over the first 20 header bytes and
@@ -325,6 +337,38 @@ pub fn open_session(frame: &[u8]) -> Result<(SessionHeader, &[u8])> {
         "session frame checksum mismatch (stored {sum:#010x}, computed {computed:#010x})"
     );
     Ok((header, payload))
+}
+
+/// Streaming length hint: given the first bytes of an incoming frame,
+/// return the **total** frame length (header + payload) it declares, or
+/// `Ok(None)` when more prefix bytes are needed to tell. Handles both
+/// the v1 stateless and v2 session layouts (the version byte and the
+/// payload-length field sit at the same offsets in both). Typed errors
+/// for bad magic / unknown version, so a receiver can reject a
+/// desynchronized stream before buffering a bogus length.
+///
+/// The transport lane uses this to validate that a download frame
+/// enveloped inside a transport message is exactly as long as it
+/// declares — a truncated enveloped frame is rejected *before* any
+/// decode runs.
+pub fn total_len_hint(prefix: &[u8]) -> Result<Option<usize>> {
+    if prefix.len() < 5 {
+        return Ok(None);
+    }
+    ensure!(
+        prefix[0..4] == MAGIC,
+        "bad frame magic {:02x?}",
+        &prefix[0..4]
+    );
+    let header_len = match prefix[4] {
+        VERSION => HEADER_LEN,
+        SESSION_VERSION => SESSION_HEADER_LEN,
+        other => bail!("unsupported frame version {other} (expected {VERSION} or {SESSION_VERSION})"),
+    };
+    if prefix.len() < 20 {
+        return Ok(None);
+    }
+    Ok(Some(header_len + read_u32(prefix, 16) as usize))
 }
 
 /// Validate a frame and return its header + payload slice.
@@ -475,6 +519,38 @@ mod tests {
         assert!(open_session(&bad).unwrap_err().to_string().contains("checksum"));
         assert!(open_session(&frame[..frame.len() - 1]).is_err());
         assert!(open_session(&frame[..SESSION_HEADER_LEN - 2]).is_err());
+    }
+
+    #[test]
+    fn chained_checksum_equals_contiguous() {
+        let a = b"header bytes";
+        let b = b"payload bytes that follow";
+        let contiguous = checksum(&[&a[..], &b[..]].concat());
+        let chained = checksum_chained(checksum_chained(CHECKSUM_SEED, a), b);
+        assert_eq!(contiguous, chained);
+    }
+
+    #[test]
+    fn total_len_hint_covers_both_versions() {
+        let v1 = seal(2, 0, PayloadKind::Dense, 4, 4, &[9u8; 16]).unwrap();
+        let v2 =
+            seal_session(5, 0, PayloadKind::Dense, 4, 4, 1, SessionMode::Full, &[7u8; 10]).unwrap();
+        assert_eq!(total_len_hint(&v1).unwrap(), Some(v1.len()));
+        assert_eq!(total_len_hint(&v2).unwrap(), Some(v2.len()));
+        // not enough prefix yet: needs magic+version (5) and the length
+        // field (bytes 16..20)
+        assert_eq!(total_len_hint(&v1[..4]).unwrap(), None);
+        assert_eq!(total_len_hint(&v1[..19]).unwrap(), None);
+        // a truncated frame still *declares* its full length — the
+        // receiver compares the hint against what actually arrived
+        assert_eq!(total_len_hint(&v1[..20]).unwrap(), Some(v1.len()));
+        // typed rejections
+        let mut bad = v1.clone();
+        bad[0] = b'X';
+        assert!(total_len_hint(&bad).unwrap_err().to_string().contains("magic"));
+        let mut bad = v1.clone();
+        bad[4] = 9;
+        assert!(total_len_hint(&bad).unwrap_err().to_string().contains("version"));
     }
 
     #[test]

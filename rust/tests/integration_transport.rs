@@ -1,0 +1,573 @@
+//! Transport-lane e2e: the TCP coordinator/client pair must be a
+//! *bit-transparent* replacement for the in-process reference lane, and
+//! its failure handling must be exact, not approximate. The nets:
+//!
+//! 1. torn/corrupt frames over a real socket fail with the typed
+//!    `FrameError` (clean close at a frame boundary is `Ok(None)`);
+//! 2. fault-free f32 loopback (2 client processes) produces the same
+//!    round dumps, decision-trace digests, and journal bytes as the
+//!    in-process lane at threads 1 AND 4;
+//! 3. the same byte-identity for the stateful vq codebook-session
+//!    codec (reuse/delta frames, generation tracking);
+//! 4. a per-client bandwidth cap changes pacing only — identical bytes,
+//!    nonzero paced-wait in the transport stats;
+//! 5. a mid-round stall trips the round deadline: the stalled host is
+//!    dropped, the round aggregates partially, and the journal ledger
+//!    attributes the loss to exactly the stalled batch's clients;
+//! 6. a crash-and-rejoin drives the `SessionDecode::Stale` resync path
+//!    from a real network event, with a bit-identical training
+//!    trajectory and the ledger growing by exactly the resync deltas;
+//! 7. the compiled `coordinator`/`client` bins reproduce the compiled
+//!    `fedpayload train` bin's dump and journal byte-for-byte over a
+//!    multi-process loopback session (what `ci/transport_e2e.sh` runs).
+
+use std::io::Write as _;
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::thread;
+use std::time::Duration;
+
+use fedpayload::config::{RunConfig, Strategy};
+use fedpayload::server::{journal, round_dump_string, TrainReport, Trainer};
+use fedpayload::telemetry::trace::trace_digest;
+use fedpayload::telemetry::{TraceLevel, Tracer};
+use fedpayload::transport::framing::{read_msg, write_msg, FrameError, MSG_HEADER_LEN};
+use fedpayload::transport::{
+    connect_with_retry, ClientEngine, EngineReport, FaultPlan, TcpLane, TransportStats,
+};
+use fedpayload::wire::{EntropyMode, Precision, ReuseMode};
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fedpayload_transport_{name}"));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn path_str(p: &Path) -> String {
+    p.to_string_lossy().into_owned()
+}
+
+/// Multi-batch f32 workload (160 clients / 64 per batch = 3 batches per
+/// round) so both client processes genuinely compute every round.
+fn f32_cfg() -> RunConfig {
+    let mut cfg = RunConfig::paper_defaults();
+    cfg.apply_dataset_preset("synthetic-small").unwrap();
+    cfg.dataset.users = 160;
+    cfg.dataset.items = 96;
+    cfg.dataset.interactions = 3000;
+    cfg.train.theta = 160;
+    cfg.train.iterations = 5;
+    cfg.train.payload_fraction = 0.25;
+    cfg.runtime.backend = "reference".into();
+    cfg
+}
+
+/// Stable-Q codebook-session workload (mirrors the session e2e): theta
+/// == users keeps every client present, `Strategy::Full` + auto reuse
+/// makes rounds 2+ ship reuse/delta frames — the state a rejoining
+/// process cannot decode without a resync.
+fn session_cfg() -> RunConfig {
+    let mut cfg = RunConfig::paper_defaults();
+    cfg.apply_dataset_preset("synthetic-small").unwrap();
+    cfg.dataset.users = 48;
+    cfg.dataset.items = 96;
+    cfg.dataset.interactions = 1800;
+    cfg.train.theta = 48;
+    cfg.train.iterations = 8;
+    cfg.train.payload_fraction = 1.0;
+    cfg.bandit.strategy = Strategy::Full;
+    cfg.runtime.backend = "reference".into();
+    cfg.codec.precision = Precision::Vq8;
+    cfg.codec.entropy = EntropyMode::Full;
+    cfg.codec.codebook_reuse = ReuseMode::Auto;
+    cfg
+}
+
+/// In-process reference run; returns the report and trace digest.
+fn in_process_run(cfg: &RunConfig) -> (TrainReport, String) {
+    let mut tr = Trainer::from_config(cfg).unwrap();
+    tr.install_tracer(Tracer::in_memory(TraceLevel::Decision));
+    let report = tr.run().unwrap();
+    let mut trace = tr.tracer().unwrap().lines().join("\n");
+    trace.push('\n');
+    (report, trace_digest(&trace))
+}
+
+struct TransportRun {
+    report: TrainReport,
+    digest: String,
+    stats: TransportStats,
+    engines: Vec<EngineReport>,
+}
+
+/// Full loopback session: bind the lane on an ephemeral port, run
+/// `procs` client engines on threads (each rebuilding the dataset from
+/// the same config, exactly like a separate process would), train, and
+/// join everything. `faults` maps by engine index; missing entries are
+/// fault-free.
+fn transport_run(base: &RunConfig, procs: usize, faults: &[FaultPlan]) -> TransportRun {
+    let mut cfg = base.clone();
+    cfg.transport.listen = "127.0.0.1:0".into();
+    cfg.transport.clients = procs;
+    let mut trainer = Trainer::from_config(&cfg).unwrap();
+    trainer.install_tracer(Tracer::in_memory(TraceLevel::Decision));
+    let mut lane = TcpLane::bind(&cfg.transport, cfg.determinism_fingerprint()).unwrap();
+    let addr = lane.local_addr().to_string();
+    let mut handles = Vec::new();
+    for i in 0..procs {
+        let cfg = cfg.clone();
+        let addr = addr.clone();
+        let fault = faults.get(i).copied().unwrap_or_default();
+        handles.push(thread::spawn(move || -> anyhow::Result<EngineReport> {
+            let mut engine = ClientEngine::new(&cfg)?;
+            let stream = connect_with_retry(&addr, Duration::from_secs(30))?;
+            engine.run(stream, fault)
+        }));
+    }
+    lane.wait_for_fleet(Duration::from_secs(30)).unwrap();
+    trainer.install_lane(Box::new(lane));
+    let report = trainer.run().unwrap();
+    let stats = trainer.lane_mut().stats().expect("tcp lane reports stats");
+    let mut trace = trainer.tracer().unwrap().lines().join("\n");
+    trace.push('\n');
+    let engines: Vec<EngineReport> = handles
+        .into_iter()
+        .map(|h| h.join().unwrap().expect("engine failed"))
+        .collect();
+    TransportRun {
+        report,
+        digest: trace_digest(&trace),
+        stats,
+        engines,
+    }
+}
+
+/// Ship `bytes` to a freshly accepted connection, close, and return what
+/// one `read_msg` on the receiving end saw.
+fn read_over_socket(bytes: &[u8]) -> anyhow::Result<Option<(u8, Vec<u8>)>> {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let bytes = bytes.to_vec();
+    let writer = thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&bytes).unwrap();
+        // dropping the stream closes it — the torn tail is now on the wire
+    });
+    let (mut conn, _) = listener.accept().unwrap();
+    let result = read_msg(&mut conn);
+    writer.join().unwrap();
+    result
+}
+
+#[test]
+fn torn_frames_over_a_real_socket_fail_typed() {
+    let mut frame = Vec::new();
+    write_msg(&mut frame, 7, b"payload bytes").unwrap();
+
+    // the intact frame arrives whole; the close after it is a clean EOF
+    let got = read_over_socket(&frame).unwrap();
+    assert_eq!(got, Some((7, b"payload bytes".to_vec())));
+    let eof = read_over_socket(&[]).unwrap();
+    assert_eq!(eof, None, "close at a frame boundary must be Ok(None)");
+
+    // torn length-prefix: connection dies inside the 9-byte header
+    let err = read_over_socket(&frame[..4]).unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<FrameError>(),
+        Some(&FrameError::TornPrefix { got: 4 }),
+        "{err:#}"
+    );
+    assert!(format!("{err:#}").contains("torn message prefix"), "{err:#}");
+
+    // torn payload: header promised more bytes than ever arrived
+    let cut = MSG_HEADER_LEN + 3;
+    let err = read_over_socket(&frame[..cut]).unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<FrameError>(),
+        Some(&FrameError::TornPayload {
+            expected: frame.len() - MSG_HEADER_LEN,
+            got: 3
+        }),
+        "{err:#}"
+    );
+    assert!(format!("{err:#}").contains("torn message payload"), "{err:#}");
+
+    // a flipped payload bit fails the trailing checksum
+    let mut corrupt = frame.clone();
+    corrupt[MSG_HEADER_LEN] ^= 0x40;
+    let err = read_over_socket(&corrupt).unwrap_err();
+    assert!(
+        matches!(
+            err.downcast_ref::<FrameError>(),
+            Some(FrameError::Checksum { .. })
+        ),
+        "{err:#}"
+    );
+}
+
+/// Shared assertion body for the fault-free byte-identity nets.
+fn assert_transport_matches_in_process(base: &RunConfig, name: &str, engine_threads: usize) {
+    let dir = tmpdir(name);
+    let journal_of = |leg: &str| path_str(&dir.join(format!("{leg}.jsonl")));
+
+    let mut c1 = base.clone();
+    c1.runtime.threads = 1;
+    c1.journal.path = Some(journal_of("inproc_t1"));
+    let (r1, d1) = in_process_run(&c1);
+
+    let mut c4 = base.clone();
+    c4.runtime.threads = 4;
+    c4.journal.path = Some(journal_of("inproc_t4"));
+    let (r4, d4) = in_process_run(&c4);
+
+    let mut ct = base.clone();
+    ct.runtime.threads = engine_threads;
+    ct.journal.path = Some(journal_of("tcp"));
+    let t = transport_run(&ct, 2, &[]);
+
+    // the three determinism artifacts, byte for byte
+    let dump = round_dump_string(&t.report);
+    assert_eq!(dump, round_dump_string(&r1), "dump vs in-process t1");
+    assert_eq!(dump, round_dump_string(&r4), "dump vs in-process t4");
+    assert_eq!(t.digest, d1, "trace digest vs in-process t1");
+    assert_eq!(t.digest, d4, "trace digest vs in-process t4");
+    let jt = std::fs::read(journal_of("tcp")).unwrap();
+    assert!(!jt.is_empty());
+    assert_eq!(jt, std::fs::read(journal_of("inproc_t1")).unwrap());
+    assert_eq!(jt, std::fs::read(journal_of("inproc_t4")).unwrap());
+
+    // a fault-free session is quiet: no resyncs, drops, or expiries
+    assert_eq!(t.stats.rounds, base.train.iterations as u64);
+    assert_eq!(t.stats.dropouts, 0, "{:?}", t.stats);
+    assert_eq!(t.stats.rejoins, 0, "{:?}", t.stats);
+    assert_eq!(t.stats.deadline_expiries, 0, "{:?}", t.stats);
+    assert_eq!(t.stats.need_resync_reqs, 0, "{:?}", t.stats);
+
+    // every engine served the whole run, and their ledgers close:
+    // downloads acked == coordinator download messages, batches cover
+    // every round's work
+    assert_eq!(t.engines.len(), 2);
+    for e in &t.engines {
+        assert!(!e.crashed);
+        assert_eq!(e.slots, 2);
+        assert_eq!(e.rounds, base.train.iterations as u64, "{e:?}");
+    }
+    let downloads: u64 = t.engines.iter().map(|e| e.downloads).sum();
+    assert_eq!(downloads, t.report.ledger.down_msgs, "download acks");
+    let batches: u64 = t.engines.iter().map(|e| e.batches).sum();
+    let per_round = (base.train.theta as u64).div_ceil(64); // reference backend B = 64
+    assert_eq!(batches, base.train.iterations as u64 * per_round, "batches");
+}
+
+#[test]
+fn fault_free_f32_loopback_is_bit_identical_to_in_process() {
+    assert_transport_matches_in_process(&f32_cfg(), "f32", 4);
+}
+
+#[test]
+fn fault_free_session_loopback_is_bit_identical_to_in_process() {
+    let base = session_cfg();
+    assert_transport_matches_in_process(&base, "session", 1);
+}
+
+#[test]
+fn bandwidth_cap_paces_without_changing_a_byte() {
+    let mut base = f32_cfg();
+    // tiny fleet, tiny frames: pacing sleeps real wall-clock time
+    base.dataset.users = 8;
+    base.dataset.interactions = 400;
+    base.train.theta = 8;
+    base.train.iterations = 3;
+
+    let free = transport_run(&base, 2, &[]);
+    let mut capped_cfg = base.clone();
+    capped_cfg.transport.bandwidth_cap_bps = 50_000;
+    let capped = transport_run(&capped_cfg, 2, &[]);
+
+    assert_eq!(
+        round_dump_string(&capped.report),
+        round_dump_string(&free.report),
+        "a bandwidth cap must be bit-transparent"
+    );
+    assert_eq!(capped.digest, free.digest);
+    assert_eq!(free.stats.paced_wait_ns, 0, "{:?}", free.stats);
+    assert!(
+        capped.stats.paced_wait_ns > 0,
+        "cap never paced: {:?}",
+        capped.stats
+    );
+}
+
+#[test]
+fn mid_round_stall_expires_the_deadline_and_drops_exactly_one_batch() {
+    let dir = tmpdir("stall");
+    let mut cfg = f32_cfg();
+    // 128 clients, theta == users, B = 64: every round is exactly two
+    // 64-client batches, one per process — so the ledger arithmetic
+    // below is exact regardless of which slot the faulted engine lands
+    // in.
+    cfg.dataset.users = 128;
+    cfg.dataset.interactions = 2600;
+    cfg.train.theta = 128;
+    cfg.train.iterations = 4;
+    cfg.journal.path = Some(path_str(&dir.join("stall.jsonl")));
+    cfg.transport.round_deadline_ms = 4000;
+
+    let faults = [
+        FaultPlan::default(),
+        FaultPlan {
+            stall_in_round: Some(2),
+            exit_after_round: None,
+        },
+    ];
+    let t = transport_run(&cfg, 2, &faults);
+
+    // the coordinator observed the stall as a deadline expiry + dropout
+    assert!(t.stats.deadline_expiries >= 1, "{:?}", t.stats);
+    assert_eq!(t.stats.dropouts, 1, "{:?}", t.stats);
+    assert_eq!(
+        t.engines.iter().filter(|e| e.crashed).count(),
+        1,
+        "{:?}",
+        t.engines
+    );
+    let survivor = t.engines.iter().find(|e| !e.crashed).unwrap();
+    assert_eq!(survivor.rounds, 4, "survivor must finish the run: {survivor:?}");
+
+    // exact attribution, from the journal's cumulative ledger counters:
+    // round 1 is whole (128 downloads, 128 uploads); in round 2 all 128
+    // downloads land before the stall but only the surviving batch's 64
+    // clients upload; rounds 3+ run with the dead host's 64 clients
+    // dropped at round start.
+    let j = journal::read(Path::new(cfg.journal.path.as_ref().unwrap())).unwrap();
+    assert_eq!(j.rounds.len(), 4);
+    let delta = |f: fn(&journal::RoundEntry) -> u64| -> Vec<u64> {
+        let mut prev = 0;
+        j.rounds
+            .iter()
+            .map(|r| {
+                let d = f(r) - prev;
+                prev = f(r);
+                d
+            })
+            .collect()
+    };
+    assert_eq!(delta(|r| r.down_msgs), vec![128, 128, 64, 64]);
+    assert_eq!(delta(|r| r.up_msgs), vec![128, 64, 64, 64]);
+}
+
+#[test]
+fn crash_and_rejoin_resyncs_over_the_wire_bit_identically() {
+    let dir = tmpdir("rejoin");
+    let journal_of = |leg: &str| path_str(&dir.join(format!("{leg}.jsonl")));
+
+    // leg A: fault-free transport baseline
+    let mut cfg_a = session_cfg();
+    cfg_a.journal.path = Some(journal_of("steady"));
+    let a = transport_run(&cfg_a, 2, &[]);
+    assert_eq!(a.stats.rejoins, 0);
+
+    // leg B: one process exits after round 2 and a *fresh* engine (all
+    // decoder state lost, like a restarted process) takes its slot
+    let mut cfg_b = session_cfg();
+    cfg_b.journal.path = Some(journal_of("churn"));
+    cfg_b.transport.listen = "127.0.0.1:0".into();
+    cfg_b.transport.clients = 2;
+    cfg_b.transport.wait_rejoin = true;
+    cfg_b.transport.rejoin_wait_ms = 20_000;
+    let mut trainer = Trainer::from_config(&cfg_b).unwrap();
+    trainer.install_tracer(Tracer::in_memory(TraceLevel::Decision));
+    let mut lane = TcpLane::bind(&cfg_b.transport, cfg_b.determinism_fingerprint()).unwrap();
+    let addr = lane.local_addr().to_string();
+    let steady = {
+        let cfg = cfg_b.clone();
+        let addr = addr.clone();
+        thread::spawn(move || -> anyhow::Result<EngineReport> {
+            let mut engine = ClientEngine::new(&cfg)?;
+            let stream = connect_with_retry(&addr, Duration::from_secs(30))?;
+            engine.run(stream, FaultPlan::default())
+        })
+    };
+    let churn = {
+        let cfg = cfg_b.clone();
+        thread::spawn(move || -> anyhow::Result<(EngineReport, EngineReport)> {
+            let mut engine = ClientEngine::new(&cfg)?;
+            let stream = connect_with_retry(&addr, Duration::from_secs(30))?;
+            let crash = engine.run(
+                stream,
+                FaultPlan {
+                    exit_after_round: Some(2),
+                    stall_in_round: None,
+                },
+            )?;
+            // the replacement process: brand-new engine, empty caches
+            let mut fresh = ClientEngine::new(&cfg)?;
+            let stream = connect_with_retry(&addr, Duration::from_secs(30))?;
+            let rejoin = fresh.run(stream, FaultPlan::default())?;
+            Ok((crash, rejoin))
+        })
+    };
+    lane.wait_for_fleet(Duration::from_secs(30)).unwrap();
+    trainer.install_lane(Box::new(lane));
+    let report_b = trainer.run().unwrap();
+    let stats_b = trainer.lane_mut().stats().unwrap();
+    let steady_rep = steady.join().unwrap().expect("steady engine");
+    let (crash_rep, rejoin_rep) = churn.join().unwrap().expect("churn engine");
+
+    // the coordinator saw one dropout and one rejoin; the crashed
+    // engine reports its fault, its replacement serves out the run
+    assert_eq!(stats_b.dropouts, 1, "{stats_b:?}");
+    assert_eq!(stats_b.rejoins, 1, "{stats_b:?}");
+    assert!(crash_rep.crashed);
+    assert_eq!(crash_rep.rounds, 2, "{crash_rep:?}");
+    assert!(!rejoin_rep.crashed);
+    assert_eq!(
+        rejoin_rep.rounds,
+        cfg_b.train.iterations as u64 - 2,
+        "{rejoin_rep:?}"
+    );
+    assert_eq!(steady_rep.rounds, cfg_b.train.iterations as u64);
+
+    // the rejoin actually drove the stale path over the wire: the
+    // stable-Q workload ships reuse/delta frames after round 1, which a
+    // fresh process cannot decode — it must NeedResync and be served a
+    // verified full-codebook frame (SessionDecode::Stale from a real
+    // network event, not an injected cache invalidation)
+    assert!(
+        stats_b.resyncs_served >= 1,
+        "rejoin never forced a resync — the workload no longer exercises \
+         the session reuse path at the rejoin round: {stats_b:?}"
+    );
+    assert!(
+        rejoin_rep.mirror_resyncs >= 1,
+        "the replacement's broadcast mirror never went stale: {rejoin_rep:?}"
+    );
+
+    // bit-identical trajectory: every training-visible journal field
+    // matches the fault-free leg, round by round
+    let ja = journal::read(Path::new(cfg_a.journal.path.as_ref().unwrap())).unwrap();
+    let jb = journal::read(Path::new(cfg_b.journal.path.as_ref().unwrap())).unwrap();
+    assert_eq!(ja.rounds.len(), jb.rounds.len());
+    for (ra, rb) in ja.rounds.iter().zip(&jb.rounds) {
+        let iter = ra.iter;
+        assert_eq!(ra.raw_bits, rb.raw_bits, "round {iter} raw metrics");
+        assert_eq!(ra.smoothed_bits, rb.smoothed_bits, "round {iter}");
+        assert_eq!(ra.m_s, rb.m_s, "round {iter}");
+        assert_eq!(ra.selected, rb.selected, "round {iter}");
+        assert_eq!(ra.participants, rb.participants, "round {iter}");
+        assert_eq!(ra.bandit_digest, rb.bandit_digest, "round {iter}");
+        assert_eq!(ra.session_digest, rb.session_digest, "round {iter}");
+        assert_eq!(ra.frame_bytes, rb.frame_bytes, "round {iter}");
+        assert_eq!(ra.session_mode, rb.session_mode, "round {iter}");
+        assert_eq!(ra.generation, rb.generation, "round {iter}");
+        assert_eq!(ra.installs, rb.installs, "round {iter}");
+        // uploads and message counts are untouched by churn; download
+        // BYTES may grow, by exactly the resync attribution below
+        assert_eq!(ra.up_bytes, rb.up_bytes, "round {iter}");
+        assert_eq!(ra.up_msgs, rb.up_msgs, "round {iter}");
+        assert_eq!(ra.down_msgs, rb.down_msgs, "round {iter}");
+        assert_eq!(
+            rb.down_bytes - ra.down_bytes,
+            (rb.resync_extra - ra.resync_extra) as u64,
+            "round {iter}: download overhead must equal the resync deltas"
+        );
+    }
+    // and the run-level ledger shows the same exact attribution
+    let (sa, sb) = (
+        a.report.session.as_ref().unwrap(),
+        report_b.session.as_ref().unwrap(),
+    );
+    assert_eq!(sa.resync_msgs, 0, "{sa:?}");
+    assert!(sb.resync_msgs >= 1, "{sb:?}");
+    assert_eq!(
+        report_b.ledger.down_bytes - a.report.ledger.down_bytes,
+        (sb.resync_extra_bytes - sa.resync_extra_bytes) as u64,
+    );
+}
+
+#[test]
+fn bin_pair_loopback_matches_the_in_process_bin() {
+    use std::process::Command;
+
+    let dir = tmpdir("bins");
+    let p = |name: &str| path_str(&dir.join(name));
+    let train_flags = [
+        "--dataset",
+        "synthetic-small",
+        "--backend",
+        "reference",
+        "--iterations",
+        "3",
+        "--theta",
+        "12",
+        "--payload-fraction",
+        "0.5",
+        "--seed",
+        "11",
+        "--set",
+        "dataset.users=32",
+        "--set",
+        "dataset.items=64",
+        "--set",
+        "dataset.interactions=600",
+    ];
+
+    // leg 1: the in-process bin
+    let out = Command::new(env!("CARGO_BIN_EXE_fedpayload"))
+        .arg("train")
+        .args(train_flags)
+        .args(["--dump-rounds", &p("inproc.dump")])
+        .args(["--journal", &p("inproc.jsonl")])
+        .output()
+        .expect("spawn fedpayload");
+    assert!(
+        out.status.success(),
+        "fedpayload train failed:\n{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    // leg 2: coordinator + two client processes over loopback TCP
+    let mut coordinator = Command::new(env!("CARGO_BIN_EXE_coordinator"))
+        .arg("train")
+        .args(train_flags)
+        .args(["--listen", "127.0.0.1:0"])
+        .args(["--port-file", &p("port")])
+        .args(["--transport-clients", "2"])
+        .args(["--connect-timeout-secs", "60"])
+        .args(["--dump-rounds", &p("tcp.dump")])
+        .args(["--journal", &p("tcp.jsonl")])
+        .spawn()
+        .expect("spawn coordinator");
+    let clients: Vec<_> = (0..2)
+        .map(|_| {
+            Command::new(env!("CARGO_BIN_EXE_client"))
+                .arg("run")
+                .args(train_flags)
+                .args(["--port-file", &p("port")])
+                .args(["--connect-timeout-secs", "60"])
+                .spawn()
+                .expect("spawn client")
+        })
+        .collect();
+    let status = coordinator.wait().expect("wait coordinator");
+    assert!(status.success(), "coordinator exited with {status}");
+    for mut c in clients {
+        let status = c.wait().expect("wait client");
+        assert!(status.success(), "client exited with {status}");
+    }
+
+    // byte-for-byte: dump and journal
+    let dump_a = std::fs::read(p("inproc.dump")).unwrap();
+    let dump_b = std::fs::read(p("tcp.dump")).unwrap();
+    assert!(!dump_a.is_empty());
+    assert_eq!(
+        dump_a, dump_b,
+        "bin-pair round dump diverged from the in-process bin"
+    );
+    let ja = std::fs::read(p("inproc.jsonl")).unwrap();
+    let jb = std::fs::read(p("tcp.jsonl")).unwrap();
+    assert!(!ja.is_empty());
+    assert_eq!(ja, jb, "bin-pair journal diverged from the in-process bin");
+}

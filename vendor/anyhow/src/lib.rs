@@ -8,7 +8,10 @@
 //! * [`Result`] — `Result<T, Error>` alias with a defaulted error type,
 //! * [`anyhow!`], [`bail!`], [`ensure!`] — construction macros,
 //! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
-//!   `Option`.
+//!   `Option`,
+//! * [`Error::downcast_ref`] — recover the typed root error a value was
+//!   converted from (the transport framing layer matches on its typed
+//!   `FrameError` this way).
 //!
 //! Semantics mirror the real crate where it matters to callers:
 //! `Display` shows the outermost message, alternate `{:#}` joins the whole
@@ -20,9 +23,11 @@
 use std::fmt;
 
 /// Opaque error: an outermost message plus the chain of underlying causes
-/// (outermost first).
+/// (outermost first), and — when the value was converted from a typed
+/// `std::error::Error` — the boxed original for [`Error::downcast_ref`].
 pub struct Error {
     chain: Vec<String>,
+    root: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
 }
 
 impl Error {
@@ -30,6 +35,7 @@ impl Error {
     pub fn msg<M: fmt::Display>(msg: M) -> Error {
         Error {
             chain: vec![msg.to_string()],
+            root: None,
         }
     }
 
@@ -47,6 +53,14 @@ impl Error {
     /// The innermost (root) message.
     pub fn root_cause(&self) -> &str {
         self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+
+    /// Borrow the typed root error this value was converted from, if it
+    /// is a `T`. Mirrors `anyhow::Error::downcast_ref`: context layers
+    /// added on top do not hide the root, but errors built from plain
+    /// messages ([`Error::msg`], [`anyhow!`]) have no typed root.
+    pub fn downcast_ref<T: std::error::Error + 'static>(&self) -> Option<&T> {
+        self.root.as_deref()?.downcast_ref::<T>()
     }
 }
 
@@ -88,7 +102,10 @@ where
             chain.push(s.to_string());
             source = s.source();
         }
-        Error { chain }
+        Error {
+            chain,
+            root: Some(Box::new(e)),
+        }
     }
 }
 
@@ -203,6 +220,19 @@ mod tests {
         assert_eq!(f(11).unwrap_err().to_string(), "x too big: 11");
         let e = anyhow!("plain {}", 7);
         assert_eq!(e.to_string(), "plain 7");
+    }
+
+    #[test]
+    fn downcast_ref_recovers_the_typed_root() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        let io = e.downcast_ref::<std::io::Error>().expect("typed root");
+        assert_eq!(io.kind(), std::io::ErrorKind::NotFound);
+        // context layers do not hide the root
+        let e = e.context("outer");
+        assert!(e.downcast_ref::<std::io::Error>().is_some());
+        // a wrong type or a plain message yields None
+        assert!(e.downcast_ref::<std::fmt::Error>().is_none());
+        assert!(anyhow!("plain").downcast_ref::<std::io::Error>().is_none());
     }
 
     #[test]
