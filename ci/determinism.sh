@@ -45,6 +45,16 @@
 #      vq8-session codecs at threads 1 and 4 (delegated to
 #      ci/transport_e2e.sh; skipped with a notice when the bin pair
 #      has not been built).
+#  10. per-client payload policies (server::policy) and upload-delta
+#      sessions (wire::upload): `--policy budget` and `--policy bandit`
+#      trajectories are bit-identical across repeat runs and thread
+#      counts while genuinely diverging from the uniform path (the
+#      decisions come from a dedicated tagged PCG stream, not the
+#      training RNG); `--upload-delta` re-frames the exact plane the
+#      batch carried, so the metric columns match the non-delta run
+#      and only the byte columns may move; and on the stable-Q
+#      strategy-full workload the session actually ships delta frames
+#      with zero resyncs (first contact is a Full frame, not a fault).
 #
 # Usage:  ci/determinism.sh [workdir]
 #   BIN=path/to/fedpayload overrides the binary (default:
@@ -256,5 +266,58 @@ if [ -x "$COORD" ] && [ -x "$CLIENT" ]; then
 else
   echo "   skipped: coordinator/client bins not built (cargo build --release builds them; the transport-e2e CI job runs this leg regardless)"
 fi
+
+echo "== 10: payload policies and upload-delta sessions =="
+# per-client policies: budget and bandit trajectories are bit-identical
+# across repeat runs and thread counts — the cohort exchange folds in
+# fixed (arm, top_k) key order, so the merge is batch-order stable like
+# everything else — and they genuinely diverge from the uniform path
+run rounds_pol_budget_t1.csv --policy budget --threads 1
+run rounds_pol_budget_t4.csv --policy budget --threads 4
+run rounds_pol_bandit_b.csv  --policy bandit --threads 1
+"$BIN" "${ARGS[@]}" --policy bandit --threads 1 \
+       --journal journal_pol_t1.jsonl --trace-out trace_pol_t1.jsonl \
+       --trace-level full --dump-rounds rounds_pol_bandit_t1.csv >/dev/null
+"$BIN" "${ARGS[@]}" --policy bandit --threads 4 \
+       --journal journal_pol_t4.jsonl --trace-out trace_pol_t4.jsonl \
+       --trace-level full --dump-rounds rounds_pol_bandit_t4.csv >/dev/null
+echo "  ran: rounds_pol_bandit_t1.csv rounds_pol_bandit_t4.csv (journaled, traced)"
+diff rounds_pol_budget_t1.csv rounds_pol_budget_t4.csv
+diff rounds_pol_bandit_t1.csv rounds_pol_bandit_t4.csv
+diff rounds_pol_bandit_t1.csv rounds_pol_bandit_b.csv
+# the whole evidence chain is thread-invariant: journal bytes (incl.
+# the per-round policy/upload state digests) and decision-trace digests
+diff journal_pol_t1.jsonl journal_pol_t4.jsonl
+"$BIN" trace-digest trace_pol_t1.jsonl > digest_pol_t1.txt
+"$BIN" trace-digest trace_pol_t4.jsonl > digest_pol_t4.txt
+diff digest_pol_t1.txt digest_pol_t4.txt
+grep -q '"ev":"policy_decide"' digest_pol_t1.txt
+grep -q '"policy_mode":"bandit"' journal_pol_t1.jsonl
+if diff -q rounds_pol_bandit_t1.csv rounds_t1_a.csv >/dev/null; then
+  echo "bandit policy run unexpectedly matched the uniform run"; exit 1
+fi
+# upload-delta sessions re-frame the exact value plane the batch frame
+# carried: turning them on must not change one bit of training — only
+# the upload ledger — and the delta run is threads-1/4 bit-identical
+# outright (the attribution walks participants in batch order)
+run rounds_up_delta_t1.csv --codec int8 --entropy full --upload-delta --threads 1
+run rounds_up_delta_t4.csv --codec int8 --entropy full --upload-delta --threads 4
+diff rounds_up_delta_t1.csv rounds_up_delta_t4.csv
+diff <(metrics_cols rounds_int8_full_t1.csv) <(metrics_cols rounds_up_delta_t1.csv)
+# stable-Q strategy-full workload: consecutive uploads resemble each
+# other, so the session genuinely ships delta frames (a delta only
+# ships when it range-codes strictly smaller than the full frame), and
+# a fault-free run counts zero resyncs — first contact is a Full frame
+# by design, not a recovery
+"$BIN" "${ARGS[@]}" --codec int8 --entropy full --upload-delta \
+       --strategy full --threads 1 \
+       --dump-rounds rounds_up_delta_sf.csv > up_delta_sf.out
+echo "  ran: rounds_up_delta_sf.csv (strategy full, upload-delta)"
+grep '^upload session:' up_delta_sf.out
+UP_DELTA_FRAMES=$(sed -n 's|^upload session: [0-9]* full / \([0-9]*\) delta frames.*|\1|p' up_delta_sf.out)
+UP_RESYNCS=$(sed -n 's|^upload session: .* \([0-9]*\) resyncs.*|\1|p' up_delta_sf.out)
+test "$UP_DELTA_FRAMES" -ge 1
+test "$UP_RESYNCS" -eq 0
+echo "   ok"
 
 echo "determinism: all checks passed"

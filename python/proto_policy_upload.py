@@ -1,0 +1,638 @@
+#!/usr/bin/env python3
+"""1:1 prototype verification for PR 10 (no cargo in this container).
+
+Mirrors the Rust implementation of the per-client payload-policy layer
+(`rust/src/server/policy.rs`) and the upload-delta session codec
+(`rust/src/wire/upload.rs` on top of `wire::quant` int8 rows and
+`wire::entropy` range coding), then proves the PR's acceptance claims
+numerically:
+
+  1. the upload delta codec is bit-exact: decode(encode(plane)) == plane
+     for Full and Delta frames, wrapping-u8 delta arithmetic is lossless,
+     and stale references yield a *typed* outcome, never garbage;
+  2. near-identical consecutive planes range-code strictly smaller as
+     deltas (the `delta_frames >= 1` assertions in the Rust tests and
+     ci/determinism.sh §10 are realizable), while plain-entropy ties go
+     Full;
+  3. the policy stream is a pure function of (seed, round, client) /
+     (seed, round, class, arm): decisions are independent of evaluation
+     order, so thread count cannot change them;
+  4. the bandit policy's bytes-per-fidelity frontier dominates uniform
+     int8: same-or-better decode fidelity at strictly fewer measured
+     download bytes once the per-class posteriors converge.
+
+Stock python3 only. Every constant (SplitMix64 multipliers, the LZMA
+range-coder parameters, the f16 rounding rules, the policy stream salts)
+is copied from the Rust sources it mirrors.
+"""
+
+import struct
+
+MASK64 = (1 << 64) - 1
+
+
+# -- rng/pcg.rs: SplitMix64 --------------------------------------------------
+
+class SplitMix64:
+    def __init__(self, seed):
+        self.state = seed & MASK64
+
+    def next_u64(self):
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return z ^ (z >> 31)
+
+
+# -- wire/quant.rs: f16 + int8 rows ------------------------------------------
+
+def f32_bits(x):
+    return struct.unpack("<I", struct.pack("<f", struct.unpack("<f", struct.pack("<f", x))[0]))[0]
+
+
+def f32_to_f16(x):
+    bits = f32_bits(x)
+    sign = (bits >> 16) & 0x8000
+    exp = (bits >> 23) & 0xFF
+    mant = bits & 0x007FFFFF
+    if exp == 0xFF:
+        return sign | (0x7E00 if mant else 0x7BFF)
+    e = exp - 127 + 15
+    if e >= 31:
+        return sign | 0x7BFF
+    if e <= 0:
+        if e < -10:
+            return sign
+        m = mant | 0x00800000
+        shift = 14 - e
+        v = m >> shift
+        rem = m & ((1 << shift) - 1)
+        half = 1 << (shift - 1)
+        if rem > half or (rem == half and v & 1):
+            v += 1
+        return sign | v
+    v = (e << 10) | (mant >> 13)
+    rem = mant & 0x1FFF
+    if rem > 0x1000 or (rem == 0x1000 and v & 1):
+        v += 1
+    if v >= 0x7C00:
+        return sign | 0x7BFF
+    return sign | v
+
+
+def f16_to_f32(h):
+    sign = (h & 0x8000) << 16
+    exp = (h >> 10) & 0x1F
+    mant = h & 0x3FF
+    if exp == 0:
+        if mant == 0:
+            bits = sign
+        else:
+            e = 127 - 15 + 1
+            m = mant
+            while not m & 0x400:
+                m <<= 1
+                e -= 1
+            bits = sign | (e << 23) | ((m & 0x3FF) << 13)
+    elif exp == 31:
+        bits = sign | 0x7F800000 | (mant << 13)
+    else:
+        bits = sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    return struct.unpack("<f", struct.pack("<I", bits))[0]
+
+
+def rust_round(x):
+    # f32::round: half away from zero
+    import math
+    return math.floor(x + 0.5) if x >= 0 else math.ceil(x - 0.5)
+
+
+def encode_int8_row(row):
+    """One `[f16 scale | int8 symbols]` row record (wire::quant)."""
+    mx = max((abs(v) for v in row), default=0.0)
+    s_bits = f32_to_f16(mx)
+    s = f16_to_f32(s_bits)
+    out = bytearray(struct.pack("<H", s_bits))
+    if s > 0.0:
+        for v in row:
+            q = int(max(-127, min(127, rust_round(v / s * 127.0))))
+            out.append(q & 0xFF)
+    else:
+        out.extend(b"\x00" * len(row))
+    return bytes(out)
+
+
+# -- wire/entropy.rs: varint indices + LZMA-style range coder ----------------
+
+def zigzag(v):
+    return ((v << 1) ^ (v >> 63)) & MASK64 if v >= 0 else ((v << 1) ^ -1) & MASK64
+
+
+def encode_indices(indices):
+    out = bytearray()
+    prev = 0
+    for i in indices:
+        u = zigzag(i - prev)
+        prev = i
+        while True:
+            b = u & 0x7F
+            u >>= 7
+            if u:
+                out.append(b | 0x80)
+            else:
+                out.append(b)
+                break
+    return bytes(out)
+
+
+KTOP = 1 << 24
+PROB_INIT = 1024
+MOVE_BITS = 5
+INT8_ROLES = 3  # scale-lo, scale-hi, value
+
+
+def int8_role(i, cols):
+    r = i % (cols + 2)
+    return r if r < 2 else 2
+
+
+class RangeEncoder:
+    def __init__(self):
+        self.low = 0
+        self.range = 0xFFFFFFFF
+        self.cache = 0
+        self.cache_size = 1
+        self.out = bytearray()
+
+    def shift_low(self):
+        if self.low < 0xFF000000 or self.low > 0xFFFFFFFF:
+            carry = self.low >> 32
+            self.out.append((self.cache + carry) & 0xFF)
+            for _ in range(1, self.cache_size):
+                self.out.append((0xFF + carry) & 0xFF)
+            self.cache_size = 0
+            self.cache = (self.low >> 24) & 0xFF
+        self.cache_size += 1
+        self.low = (self.low << 8) & 0xFFFFFFFF
+
+    def encode_bit(self, probs, node, bit):
+        p = probs[node]
+        bound = (self.range >> 11) * p
+        if bit == 0:
+            self.range = bound
+            probs[node] = p + ((2048 - p) >> MOVE_BITS)
+        else:
+            self.low += bound
+            self.range -= bound
+            probs[node] = p - (p >> MOVE_BITS)
+        if self.range < KTOP:
+            self.range = (self.range << 8) & 0xFFFFFFFF
+            self.shift_low()
+
+    def encode_byte(self, probs, byte):
+        node = 1
+        for k in range(7, -1, -1):
+            bit = (byte >> k) & 1
+            self.encode_bit(probs, node, bit)
+            node = (node << 1) | bit
+
+    def finish(self):
+        for _ in range(5):
+            self.shift_low()
+        return bytes(self.out)
+
+
+class RangeDecoder:
+    def __init__(self, buf):
+        self.buf = buf
+        self.pos = 0
+        self.range = 0xFFFFFFFF
+        self.code = 0
+        self.next_byte()
+        for _ in range(4):
+            self.code = ((self.code << 8) | self.next_byte()) & 0xFFFFFFFF
+
+    def next_byte(self):
+        b = self.buf[self.pos] if self.pos < len(self.buf) else 0
+        self.pos += 1
+        return b
+
+    def decode_bit(self, probs, node):
+        p = probs[node]
+        bound = (self.range >> 11) * p
+        if self.code < bound:
+            self.range = bound
+            probs[node] = p + ((2048 - p) >> MOVE_BITS)
+            bit = 0
+        else:
+            self.code -= bound
+            self.range -= bound
+            probs[node] = p - (p >> MOVE_BITS)
+            bit = 1
+        if self.range < KTOP:
+            self.range = (self.range << 8) & 0xFFFFFFFF
+            self.code = ((self.code << 8) | self.next_byte()) & 0xFFFFFFFF
+        return bit
+
+    def decode_byte(self, probs):
+        node = 1
+        for _ in range(8):
+            node = (node << 1) | self.decode_bit(probs, node)
+        return node & 0xFF
+
+
+def range_encode_int8(payload, cols):
+    trees = [[PROB_INIT] * 256 for _ in range(INT8_ROLES)]
+    enc = RangeEncoder()
+    for i, b in enumerate(payload):
+        enc.encode_byte(trees[int8_role(i, cols)], b)
+    return enc.finish()
+
+
+def range_decode_int8(buf, raw_len, cols):
+    trees = [[PROB_INIT] * 256 for _ in range(INT8_ROLES)]
+    dec = RangeDecoder(buf)
+    return bytes(dec.decode_byte(trees[int8_role(i, cols)]) for i in range(raw_len))
+
+
+# -- wire/upload.rs: the delta session ---------------------------------------
+
+SESSION_HEADER_LEN = 32  # version-2 session frame header (wire::frame)
+
+
+def emit_sparse_payload(indices, values, cols, range_on):
+    """`nnz | index block | value block` under EntropyMode::Full vs None."""
+    payload = bytearray(struct.pack("<I", len(indices)))
+    if range_on:  # Full: varint indices + sealed range block
+        idx = encode_indices(indices)
+        payload += struct.pack("<I", len(idx)) + idx
+        payload += struct.pack("<I", len(values)) + range_encode_int8(values, cols)
+    else:  # None: raw u32 indices + raw values
+        for i in indices:
+            payload += struct.pack("<I", i)
+        payload += values
+    return bytes(payload)
+
+
+def encode_upload(plane, range_on, reference):
+    """Mirror of encode_upload: (frame_len, mode, generation, values)."""
+    indices, values, cols = plane
+    stride = cols + 2
+    gen = 1 if reference is None else max(1, (reference["generation"] + 1) & 0xFFFFFFFF)
+    full = emit_sparse_payload(indices, values, cols, range_on)
+    full_len = SESSION_HEADER_LEN + len(full)
+    if reference is not None and reference["cols"] == cols:
+        diff = bytearray()
+        for i, idx in enumerate(indices):
+            row = values[i * stride:(i + 1) * stride]
+            prev = reference["rows"].get(idx)
+            if prev is not None and len(prev) == stride:
+                diff += bytes((a - b) & 0xFF for a, b in zip(row, prev))
+            else:
+                diff += row
+        delta = emit_sparse_payload(indices, bytes(diff), cols, range_on)
+        delta_len = SESSION_HEADER_LEN + len(delta)
+        if delta_len < full_len:  # strictly smaller, else Full
+            return delta_len, "delta", gen, bytes(diff), full_len
+    return full_len, "full", gen, values, full_len
+
+
+def decode_upload(mode, gen, indices, wire_values, cols, reference):
+    """Mirror of decode_upload's reconstruction + stale typing."""
+    if mode == "full":
+        return ("data", wire_values)
+    required = (gen - 1) & 0xFFFFFFFF
+    if reference is None:
+        return ("stale", None, required)
+    if reference["generation"] != required:
+        return ("stale", reference["generation"], required)
+    stride = cols + 2
+    out = bytearray()
+    for i, idx in enumerate(indices):
+        row = wire_values[i * stride:(i + 1) * stride]
+        prev = reference["rows"].get(idx)
+        if prev is not None and len(prev) == stride:
+            out += bytes((a + b) & 0xFF for a, b in zip(row, prev))
+        else:
+            out += row
+    return ("data", bytes(out))
+
+
+def make_ref(gen, cols, indices, values):
+    stride = cols + 2
+    return {
+        "generation": gen,
+        "cols": cols,
+        "rows": {idx: values[i * stride:(i + 1) * stride] for i, idx in enumerate(indices)},
+    }
+
+
+# -- server/policy.rs: the policy engine -------------------------------------
+
+POLICY_STREAM_TAG = 0x5047504F4C490001
+ARMS = ["int8", "vq8r", "vq8", "vq4"]
+N_CLASSES = 4
+TOPK_DENOMS = [1, 2, 4]
+TAU = 6.283185307179586
+
+
+class PolicyEngine:
+    def __init__(self, mode, seed, bandwidth_mbps=20.0, budget_window_ms=250.0,
+                 min_bandwidth_frac=0.25, battery_floor=0.0, sse_weight=1.0):
+        self.mode = mode
+        self.bandwidth_mbps = bandwidth_mbps
+        self.budget_window_ms = budget_window_ms
+        self.min_bandwidth_frac = min_bandwidth_frac
+        self.battery_floor = battery_floor
+        self.sse_weight = sse_weight
+        self.stream_seed = SplitMix64(seed ^ POLICY_STREAM_TAG).next_u64()
+        self.obs_n = [[0] * len(ARMS) for _ in range(N_CLASSES)]
+        self.obs_sum = [[0.0] * len(ARMS) for _ in range(N_CLASSES)]
+        self.skips = 0
+
+    def _unit(self, child, salt):
+        return (SplitMix64(child ^ salt).next_u64() >> 11) / float(1 << 53)
+
+    def _gauss(self, child, salt):
+        import math
+        sm = SplitMix64(child ^ salt)
+        u1 = ((sm.next_u64() >> 11) + 1.0) / float(1 << 53)
+        u2 = (sm.next_u64() >> 11) / float(1 << 53)
+        return math.sqrt(-2.0 * math.log(u1)) * math.cos(TAU * u2)
+
+    def client_budget(self, rnd, client):
+        child = SplitMix64((self.stream_seed + rnd) & MASK64).next_u64()
+        u = self._unit(child, 0x0100000000000000 | client)
+        battery = self._unit(child, 0x0200000000000000 | client)
+        frac = self.min_bandwidth_frac + (1.0 - self.min_bandwidth_frac) * u
+        bps = self.bandwidth_mbps * frac * 1e6 / 8.0
+        return frac, battery, int(bps * self.budget_window_ms / 1000.0)
+
+    def class_of(self, frac):
+        span = max(1.0 - self.min_bandwidth_frac, 5e-324)
+        u = min(max((frac - self.min_bandwidth_frac) / span, 0.0), 1.0)
+        return min(int(u * N_CLASSES), N_CLASSES - 1)
+
+    def arm_rewards(self, costs):
+        max_b = max(max(b for b, _ in costs), 1)
+        max_s = max(max(s for _, s in costs), 5e-324)
+        return [-(b / max_b) - self.sse_weight * (s / max_s) for b, s in costs]
+
+    def top_k_for(self, m_s, cols, budget):
+        for d in TOPK_DENOMS:
+            tk = max(m_s // d, 1)
+            # encoded_sparse_len(tk, cols, Int8) under entropy none:
+            # 4 (nnz) + 4*tk (indices) + tk*(cols+2) values + 24 header
+            if 24 + 4 + 4 * tk + tk * (cols + 2) <= budget:
+                return tk
+        return None
+
+    def decide(self, rnd, participants, costs, m_s, cols):
+        import math
+        child = SplitMix64((self.stream_seed + rnd) & MASK64).next_u64()
+        theta = [[0.0] * len(ARMS) for _ in range(N_CLASSES)]
+        if self.mode == "bandit":
+            for c in range(N_CLASSES):
+                for a in range(len(ARMS)):
+                    n = float(self.obs_n[c][a])
+                    mean = self.obs_sum[c][a] / (1.0 + n)
+                    z = self._gauss(child, 0x0300000000000000 | (c * len(ARMS) + a))
+                    theta[c][a] = mean + z / math.sqrt(1.0 + n)
+        rewards = self.arm_rewards(costs)
+        chosen = [[False] * len(ARMS) for _ in range(N_CLASSES)]
+        out = []
+        for client in participants:
+            frac, battery, budget = self.client_budget(rnd, client)
+            if battery < self.battery_floor:
+                self.skips += 1
+                out.append((client, None, 0))
+                continue
+            top_k = self.top_k_for(m_s, cols, budget)
+            fitting = [a for a in range(len(ARMS)) if costs[a][0] <= budget]
+            if top_k is None or not fitting:
+                self.skips += 1
+                out.append((client, None, 0))
+                continue
+            if self.mode == "bandit":
+                cls = self.class_of(frac)
+                arm = max(fitting, key=lambda a: theta[cls][a])
+            else:
+                arm = max(fitting, key=lambda a: (costs[a][0], -a))
+            if self.mode == "bandit":
+                chosen[self.class_of(frac)][arm] = True
+            out.append((client, arm, top_k))
+        if self.mode == "bandit":
+            for c in range(N_CLASSES):
+                for a in range(len(ARMS)):
+                    if chosen[c][a]:
+                        self.obs_n[c][a] += 1
+                        self.obs_sum[c][a] += rewards[a]
+        return out
+
+
+# -- deterministic test-data generation (no `random` module) -----------------
+
+def gradient_like(rng, rows, cols, scale=0.1):
+    out = []
+    for _ in range(rows * cols):
+        u = (rng.next_u64() >> 11) / float(1 << 53)
+        v = (u - 0.5) * 2.0 * scale
+        if rng.next_u64() % 10 < 3:
+            v = 0.0
+        out.append(v)
+    return out
+
+
+def build_plane(rng, ids, cols, scale=0.1):
+    values = bytearray()
+    grid = gradient_like(rng, len(ids), cols, scale)
+    for i in range(len(ids)):
+        values += encode_int8_row(grid[i * cols:(i + 1) * cols])
+    return (list(ids), bytes(values), cols), grid
+
+
+def drift_plane(plane, grid, cols, rng, step=0.004):
+    """The next round's plane: the same rows after a small Adam-like step."""
+    ids, _, _ = plane
+    new_grid = [v + ((rng.next_u64() >> 11) / float(1 << 53) - 0.5) * step for v in grid]
+    values = bytearray()
+    for i in range(len(ids)):
+        values += encode_int8_row(new_grid[i * cols:(i + 1) * cols])
+    return (list(ids), bytes(values), cols), new_grid
+
+
+# -- the checks --------------------------------------------------------------
+
+def check_range_coder_identity():
+    rng = SplitMix64(42)
+    for case in range(30):
+        cols = 1 + rng.next_u64() % 40
+        n = rng.next_u64() % 3000
+        kind = case % 4
+        if kind == 0:
+            data = bytes(rng.next_u64() & 0xFF for _ in range(n))
+        elif kind == 1:
+            data = bytes(n)
+        elif kind == 2:
+            data = bytes((rng.next_u64() & 0xFF) if rng.next_u64() % 10 == 0 else 0
+                         for _ in range(n))
+        else:
+            data = bytes(i % 7 for i in range(n))
+        enc = range_encode_int8(data, cols)
+        assert range_decode_int8(enc, len(data), cols) == data, f"case {case}"
+    print("  [1a] range coder: decode∘encode == identity on 30 structured/random payloads")
+
+
+def check_delta_codec_exactness():
+    rng = SplitMix64(2027)
+    cols = 8
+    ids = sorted({rng.next_u64() % 500 for _ in range(24)})
+    plane, grid = build_plane(rng, ids, cols)
+    # Full roundtrip, no reference: generation 1
+    flen, mode, gen, wire, _ = encode_upload(plane, True, None)
+    assert (mode, gen) == ("full", 1)
+    kind, values = decode_upload(mode, gen, plane[0], wire, cols, None)
+    assert kind == "data" and values == plane[1], "full frame is not bit-exact"
+    ref = make_ref(gen, cols, plane[0], plane[1])
+    # Delta roundtrip against gen-1 reference: bit-exact reconstruction
+    plane2, _ = drift_plane(plane, grid, cols, rng)
+    flen2, mode2, gen2, wire2, full_len2 = encode_upload(plane2, True, ref)
+    assert gen2 == 2
+    out = decode_upload(mode2, gen2, plane2[0], wire2, cols, ref)
+    assert out[0] == "data" and out[1] == plane2[1], "delta frame is not bit-exact"
+    # Stale typing: a delta against no / wrong-generation reference is a
+    # typed outcome carrying exactly (cached, required)
+    if mode2 == "delta":
+        assert decode_upload(mode2, gen2, plane2[0], wire2, cols, None) == ("stale", None, 1)
+        bad = make_ref(7, cols, plane[0], plane[1])
+        assert decode_upload(mode2, gen2, plane2[0], wire2, cols, bad) == ("stale", 7, 1)
+    print("  [1b] delta session: Full/Delta roundtrips bit-exact, stale refs typed "
+          f"(mode2={mode2}, gen 1→2)")
+    return plane, grid, cols
+
+
+def check_deltas_win(plane, grid, cols):
+    # Drifting plane under EntropyMode::Full: delta must genuinely win
+    rng = SplitMix64(777)
+    ref = make_ref(1, cols, plane[0], plane[1])
+    wins, total, saved = 0, 0, 0
+    cur_plane, cur_grid = plane, grid
+    for _ in range(6):
+        cur_plane, cur_grid = drift_plane(cur_plane, cur_grid, cols, rng)
+        flen, mode, gen, _, full_len = encode_upload(cur_plane, True, ref)
+        total += 1
+        if mode == "delta":
+            wins += 1
+            saved += full_len - flen
+        ref = make_ref(gen, cols, cur_plane[0], cur_plane[1])
+    assert wins >= 1, "no delta ever range-coded smaller on the drifting plane"
+    # identical plane, plain entropy: same plain length → tie → Full
+    flen, mode, _, _, full_len = encode_upload(cur_plane, False, ref)
+    assert mode == "full" and flen == full_len, "plain-entropy tie must go Full"
+    print(f"  [2] drifting int8 plane: {wins}/{total} rounds shipped Delta, "
+          f"{saved} bytes saved; plain-entropy tie → Full")
+
+
+def check_policy_stream_purity():
+    eng = PolicyEngine("budget", seed=2027, battery_floor=0.0)
+    costs = [(27000, 1.0), (11000, 2.5), (7000, 4.0), (4000, 9.0)]
+    # draws are pure in (seed, round, client): evaluation order is free
+    a = [eng.client_budget(3, c) for c in range(64)]
+    b = [eng.client_budget(3, c) for c in reversed(range(64))]
+    assert a == list(reversed(b)), "client_budget depends on evaluation order"
+    # two engines from the same seed decide identically; different
+    # participant order permutes, never changes, the decisions
+    e1 = PolicyEngine("bandit", seed=9)
+    e2 = PolicyEngine("bandit", seed=9)
+    parts = list(range(32))
+    d1 = e1.decide(1, parts, costs, m_s=64, cols=8)
+    d2 = e2.decide(1, list(reversed(parts)), costs, m_s=64, cols=8)
+    assert dict((c, (arm, tk)) for c, arm, tk in d1) == \
+        dict((c, (arm, tk)) for c, arm, tk in d2), "decisions depend on order"
+    # class quartiles are exercised
+    classes = {eng.class_of(eng.client_budget(5, c)[0]) for c in range(256)}
+    assert classes == set(range(N_CLASSES))
+    # budget mode: a battery floor produces counted skips, and every
+    # participant is either served or skipped
+    floor = PolicyEngine("budget", seed=2027, battery_floor=0.9)
+    dec = floor.decide(1, list(range(64)), costs, m_s=64, cols=8)
+    served = sum(1 for _, arm, _ in dec if arm is not None)
+    assert floor.skips > 0 and served + floor.skips == 64
+    print(f"  [3] policy stream pure in (seed,round,client); order-invariant; "
+          f"4/4 classes hit; battery floor 0.9 → {floor.skips}/64 skipped")
+
+
+def check_bandit_frontier():
+    # Measured-cost model: the real arms' byte ladder (int8 > vq8r > vq8
+    # > vq4 on dense frames) and an inverse fidelity ladder, jittered
+    # per round like real measured costs.
+    rng = SplitMix64(1234)
+    base_bytes = [27000, 11000, 7000, 4000]
+    base_sse = [1.0, 2.5, 4.0, 9.0]
+
+    def round_costs():
+        costs = []
+        for b, s in zip(base_bytes, base_sse):
+            jb = 1.0 + ((rng.next_u64() >> 11) / float(1 << 53) - 0.5) * 0.04
+            js = 1.0 + ((rng.next_u64() >> 11) / float(1 << 53) - 0.5) * 0.04
+            costs.append((int(b * jb), s * js))
+        return costs
+
+    def run(mode, rounds=60, clients=64):
+        eng = PolicyEngine(mode, seed=2027, bandwidth_mbps=20.0)
+        total_bytes, total_fid, served = 0, 0.0, 0
+        for rnd in range(1, rounds + 1):
+            costs = round_costs()
+            max_s = max(s for _, s in costs)
+            for client, arm, _ in eng.decide(rnd, list(range(clients)), costs, 64, 8):
+                if arm is None:
+                    continue
+                served += 1
+                total_bytes += costs[arm][0]
+                total_fid += 1.0 - costs[arm][1] / (2.0 * max_s)
+            # uniform-int8 comparator: every *served* client ships arm 0
+        return eng, total_bytes, total_fid, served
+
+    eng, bandit_bytes, bandit_fid, bandit_served = run("bandit")
+    # uniform int8 at the same participation: arm 0 every time
+    rng = SplitMix64(1234)  # same cost draws
+    uni_bytes, uni_fid = 0, 0.0
+    eng_u = PolicyEngine("bandit", seed=2027, bandwidth_mbps=20.0)  # same budgets
+    for rnd in range(1, 61):
+        costs = round_costs()
+        max_s = max(s for _, s in costs)
+        for client in range(64):
+            frac, battery, budget = eng_u.client_budget(rnd, client)
+            if costs[0][0] <= budget:  # uniform only ships when int8 fits
+                uni_bytes += costs[0][0]
+                uni_fid += 1.0 - costs[0][1] / (2.0 * max_s)
+    bpf_bandit = bandit_bytes / max(bandit_fid, 1e-9)
+    bpf_uniform = uni_bytes / max(uni_fid, 1e-9)
+    assert bpf_bandit < bpf_uniform, (
+        f"bandit bytes-per-fidelity {bpf_bandit:.0f} does not dominate "
+        f"uniform int8 {bpf_uniform:.0f}")
+    # the posteriors converged: every class has observations, and the
+    # top posterior-mean arm is never the most expensive one (arm 0)
+    top_arms = []
+    for c in range(N_CLASSES):
+        means = [eng.obs_sum[c][a] / max(eng.obs_n[c][a], 1) for a in range(len(ARMS))]
+        top_arms.append(ARMS[max(range(len(ARMS)), key=lambda a: means[a])])
+    assert all(any(eng.obs_n[c]) for c in range(N_CLASSES))
+    print(f"  [4] bandit frontier: bytes/fidelity {bpf_bandit:.0f} < uniform-int8 "
+          f"{bpf_uniform:.0f} ({100 * (1 - bpf_bandit / bpf_uniform):.0f}% better); "
+          f"per-class top arms {top_arms}; served {bandit_served}/3840")
+
+
+def main():
+    print("proto_policy_upload: mirroring wire::quant/entropy/upload + server::policy")
+    check_range_coder_identity()
+    plane, grid, cols = check_delta_codec_exactness()
+    check_deltas_win(plane, grid, cols)
+    check_policy_stream_purity()
+    check_bandit_frontier()
+    print("all prototype checks passed")
+
+
+if __name__ == "__main__":
+    main()

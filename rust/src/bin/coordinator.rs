@@ -9,7 +9,7 @@
 use std::process::ExitCode;
 use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use fedpayload::cli::{resolve_config, write_round_dump, Args};
 use fedpayload::server::Trainer;
@@ -74,6 +74,22 @@ fn run(argv: Vec<String>) -> Result<()> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = resolve_config(args)?;
+    // The TCP lane carries one uniform codec per round and records
+    // uploads at the batch barrier: per-client policy cohorts and
+    // upload-delta attribution are in-process-lane features for now.
+    // Refuse at startup, naming the keys, rather than training a round
+    // whose accounting silently diverges from the in-process lane.
+    ensure!(
+        cfg.policy.mode == fedpayload::server::policy::PolicyMode::Uniform,
+        "the TCP transport lane does not support per-client payload policies yet \
+         (policy.mode = {}); run with policy.mode = \"uniform\" or use the in-process bin",
+        cfg.policy.mode.name()
+    );
+    ensure!(
+        !cfg.codec.upload_delta,
+        "the TCP transport lane does not support upload-delta sessions yet \
+         (codec.upload_delta = true); disable it or use the in-process bin"
+    );
     let mut trainer = Trainer::from_config(&cfg)?;
     let mut lane = TcpLane::bind(&cfg.transport, cfg.determinism_fingerprint())?;
     let addr = lane.local_addr();

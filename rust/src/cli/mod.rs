@@ -54,6 +54,7 @@ const VALUE_KEYS: &[&str] = &[
     "entropy",
     "codebook-reuse",
     "sparse-topk",
+    "policy",
     "dump-rounds",
     "trace-out",
     "metrics-out",
@@ -195,6 +196,12 @@ pub fn resolve_config(args: &Args) -> Result<RunConfig> {
     if let Some(r) = args.opt("codebook-reuse") {
         cfg.codec.codebook_reuse = crate::wire::ReuseMode::parse(r)?;
     }
+    if let Some(p) = args.opt("policy") {
+        cfg.policy.mode = crate::server::policy::PolicyMode::parse(p)?;
+    }
+    if args.flag("upload-delta") {
+        cfg.codec.upload_delta = true;
+    }
     match args.opt("sparse-topk") {
         Some("auto") => {
             cfg.codec.sparse_topk_auto = true;
@@ -295,6 +302,16 @@ mod tests {
         assert_eq!(a.opt("entropy"), Some("full"));
         let a = parse(&["train", "--codebook-reuse", "auto"]);
         assert_eq!(a.opt("codebook-reuse"), Some("auto"));
+    }
+
+    #[test]
+    fn policy_takes_a_value_and_upload_delta_is_a_flag() {
+        let a = parse(&["train", "--policy", "bandit", "--upload-delta"]);
+        assert_eq!(a.opt("policy"), Some("bandit"));
+        assert!(a.flag("upload-delta"));
+        let a = parse(&["train", "--policy=budget"]);
+        assert_eq!(a.opt("policy"), Some("budget"));
+        assert!(!a.flag("upload-delta"));
     }
 
     #[test]

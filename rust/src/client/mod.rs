@@ -155,6 +155,15 @@ pub struct Fleet {
     /// [`Fleet::synced_clients`] O(1) instead of an O(fleet) scan per
     /// round.
     synced: usize,
+    /// Upload-delta generation each client's device holds
+    /// (`wire::upload`): [`NO_GEN`] until the client first ships a
+    /// session upload, and again after
+    /// [`Fleet::invalidate_upload_cache`] (the churn hook). The cached
+    /// symbol plane itself lives device-side; the coordinator mirrors it
+    /// in `wire::upload::UploadStore` — this table is what a real
+    /// deployment's device would report, and a mismatch against the
+    /// store forces a full-frame resync.
+    upload_gen: Vec<u32>,
 }
 
 impl Fleet {
@@ -176,6 +185,7 @@ impl Fleet {
             factor_data: Vec::new(),
             download_gen: vec![NO_GEN; n],
             synced: 0,
+            upload_gen: vec![NO_GEN; n],
         }
     }
 
@@ -282,6 +292,29 @@ impl Fleet {
         self.download_gen[id] = NO_GEN;
     }
 
+    /// The upload-delta generation a client's device holds (`None` = no
+    /// cached upload plane; its next upload must be a full frame).
+    pub fn upload_gen(&self, id: usize) -> Option<u32> {
+        match self.upload_gen[id] {
+            NO_GEN => None,
+            g => Some(g),
+        }
+    }
+
+    /// Record that a client shipped (and cached) upload generation
+    /// `gen` — called by the coordinator after it accepts the upload.
+    pub fn set_upload_gen(&mut self, id: usize, gen: u32) {
+        assert!(gen != NO_GEN, "generation {NO_GEN} is the vacancy sentinel");
+        self.upload_gen[id] = gen;
+    }
+
+    /// Drop a client's cached upload plane — the churn hook mirroring
+    /// [`Fleet::invalidate_download_cache`]: its next upload is forced
+    /// back to a full frame.
+    pub fn invalidate_upload_cache(&mut self, id: usize) {
+        self.upload_gen[id] = NO_GEN;
+    }
+
     /// Draw Θ distinct participants for a round from the trainer's main
     /// RNG stream — the legacy all-rounds path (`fleet.theta_sample`
     /// unset). The paper's server only observes that Θ updates arrived;
@@ -301,6 +334,7 @@ impl Fleet {
         self.factor_slot.capacity() * std::mem::size_of::<u32>()
             + self.factor_data.capacity() * std::mem::size_of::<f32>()
             + self.download_gen.capacity() * std::mem::size_of::<u32>()
+            + self.upload_gen.capacity() * std::mem::size_of::<u32>()
     }
 }
 
@@ -375,6 +409,23 @@ mod tests {
         f.invalidate_download_cache(0);
         f.invalidate_download_cache(0); // idempotent
         assert_eq!(f.synced_clients(), 0);
+    }
+
+    #[test]
+    fn upload_gen_tracks_and_invalidates_independently() {
+        let mut f = fleet();
+        assert_eq!(f.upload_gen(0), None);
+        f.set_upload_gen(0, 1);
+        f.set_upload_gen(1, 2);
+        assert_eq!(f.upload_gen(0), Some(1));
+        f.invalidate_upload_cache(0);
+        f.invalidate_upload_cache(0); // idempotent
+        assert_eq!(f.upload_gen(0), None);
+        assert_eq!(f.upload_gen(1), Some(2), "other clients untouched");
+        // independent of the download-side table
+        f.set_download_gen(0, 7);
+        assert_eq!(f.upload_gen(0), None);
+        assert_eq!(f.download_gen(0), Some(7));
     }
 
     #[test]

@@ -203,6 +203,47 @@ pub struct CodecConfig {
     /// Drop upload rows with L2 norm ≤ this threshold (0.0 = drop only
     /// exactly-zero rows, which is lossless).
     pub sparse_threshold: f64,
+    /// SecEmb-style upload deltas (`wire::upload`): ship each client's
+    /// sparse gradient as int8 symbol-plane deltas against its
+    /// previous-round upload under generation-tagged session frames,
+    /// with typed stale-reference resync. Bit-transparent to training —
+    /// only the measured upload byte ledger changes. Requires an
+    /// int8-class upload plane (precision `int8` or any `vq*`).
+    pub upload_delta: bool,
+}
+
+/// Per-client payload policy knobs (`[policy]`, `server::policy`): how
+/// each round's participants get their download precision / top-k /
+/// participation decided under simulated per-client budgets.
+#[derive(Debug, Clone)]
+pub struct PolicyConfig {
+    /// `uniform` (legacy single-codec path, the default), `budget`
+    /// (deterministic greedy under the drawn budget), or `bandit`
+    /// (per-budget-class Thompson sampling over the precision arms).
+    pub mode: crate::server::policy::PolicyMode,
+    /// Transfer window the per-client byte budget covers, in ms.
+    pub budget_window_ms: f64,
+    /// Floor of the per-client drawn bandwidth fraction: effective
+    /// bandwidth is `simnet.bandwidth_mbps × U[min_frac, 1)`.
+    pub min_bandwidth_frac: f64,
+    /// Clients whose drawn battery level (U[0,1)) is below this floor
+    /// sit the round out (0.0 = battery never skips).
+    pub battery_floor: f64,
+    /// Weight of the normalized decode-SSE term against the normalized
+    /// bytes term in the bandit's arm reward.
+    pub sse_weight: f64,
+}
+
+impl Default for PolicyConfig {
+    fn default() -> PolicyConfig {
+        PolicyConfig {
+            mode: crate::server::policy::PolicyMode::Uniform,
+            budget_window_ms: 250.0,
+            min_bandwidth_frac: 0.25,
+            battery_floor: 0.0,
+            sse_weight: 1.0,
+        }
+    }
 }
 
 /// Payload / network model (Table 1).
@@ -352,6 +393,8 @@ pub struct RunConfig {
     pub train: TrainConfig,
     /// Wire codec for the round-trip payloads.
     pub codec: CodecConfig,
+    /// Per-client payload policy knobs.
+    pub policy: PolicyConfig,
     /// Payload / network model parameters.
     pub simnet: SimNetConfig,
     /// Execution backend knobs.
@@ -422,7 +465,9 @@ impl RunConfig {
                 sparse_topk: 0,
                 sparse_topk_auto: false,
                 sparse_threshold: 0.0,
+                upload_delta: false,
             },
+            policy: PolicyConfig::default(),
             simnet: SimNetConfig {
                 bits_per_param: 64,
                 bandwidth_mbps: 20.0,
@@ -583,6 +628,22 @@ impl RunConfig {
             cfg.codec.sparse_threshold,
             as_f64
         );
+        take!("codec.upload_delta", cfg.codec.upload_delta, as_bool);
+        if let Some(v) = doc.get("policy.mode") {
+            cfg.policy.mode = crate::server::policy::PolicyMode::parse(v.as_str()?)?;
+        }
+        take!(
+            "policy.budget_window_ms",
+            cfg.policy.budget_window_ms,
+            as_f64
+        );
+        take!(
+            "policy.min_bandwidth_frac",
+            cfg.policy.min_bandwidth_frac,
+            as_f64
+        );
+        take!("policy.battery_floor", cfg.policy.battery_floor, as_f64);
+        take!("policy.sse_weight", cfg.policy.sse_weight, as_f64);
         take!("simnet.bits_per_param", cfg.simnet.bits_per_param, as_u64_u32);
         take!("simnet.bandwidth_mbps", cfg.simnet.bandwidth_mbps, as_f64);
         take!("simnet.latency_ms", cfg.simnet.latency_ms, as_f64);
@@ -693,6 +754,104 @@ impl RunConfig {
                 "codec.sparse_topk_auto and a fixed codec.sparse_topk ({}) are mutually \
                  exclusive — pick one",
                 self.codec.sparse_topk
+            );
+        }
+        // the simulated network model feeds analytic round-time division
+        // and the byte ledger — a zero or NaN here poisons every
+        // sim-seconds figure rounds later, so reject it by name up front
+        if !(self.simnet.bandwidth_mbps.is_finite() && self.simnet.bandwidth_mbps > 0.0) {
+            bail!(
+                "simnet.bandwidth_mbps must be a finite value > 0, got {}",
+                self.simnet.bandwidth_mbps
+            );
+        }
+        if !(self.simnet.latency_ms.is_finite() && self.simnet.latency_ms >= 0.0) {
+            bail!(
+                "simnet.latency_ms must be a finite value >= 0, got {}",
+                self.simnet.latency_ms
+            );
+        }
+        // a non-finite prior or reward weight corrupts every posterior
+        // update silently and only surfaces as a baffling journal-replay
+        // divergence — fail at startup instead
+        if !(self.bandit.gamma.is_finite() && 0.0 < self.bandit.gamma && self.bandit.gamma <= 1.0) {
+            bail!(
+                "bandit.gamma must be a finite value in (0, 1], got {}",
+                self.bandit.gamma
+            );
+        }
+        if !self.bandit.mu0.is_finite() {
+            bail!("bandit.mu0 must be finite, got {}", self.bandit.mu0);
+        }
+        if !self.bandit.tau0.is_finite() {
+            bail!("bandit.tau0 must be finite, got {}", self.bandit.tau0);
+        }
+        if !(self.model.lam.is_finite() && self.model.lam > 0.0) {
+            bail!("model.lam must be a finite value > 0, got {}", self.model.lam);
+        }
+        if !self.model.alpha.is_finite() {
+            bail!("model.alpha must be finite, got {}", self.model.alpha);
+        }
+        if !self.model.eta.is_finite() {
+            bail!("model.eta must be finite, got {}", self.model.eta);
+        }
+        {
+            use crate::server::policy::PolicyMode;
+            if !(self.policy.budget_window_ms.is_finite() && self.policy.budget_window_ms > 0.0) {
+                bail!(
+                    "policy.budget_window_ms must be a finite value > 0, got {}",
+                    self.policy.budget_window_ms
+                );
+            }
+            if !(self.policy.min_bandwidth_frac.is_finite()
+                && 0.0 < self.policy.min_bandwidth_frac
+                && self.policy.min_bandwidth_frac <= 1.0)
+            {
+                bail!(
+                    "policy.min_bandwidth_frac must be a finite value in (0, 1], got {}",
+                    self.policy.min_bandwidth_frac
+                );
+            }
+            if !(self.policy.battery_floor.is_finite()
+                && (0.0..=1.0).contains(&self.policy.battery_floor))
+            {
+                bail!(
+                    "policy.battery_floor must be a finite value in [0, 1], got {}",
+                    self.policy.battery_floor
+                );
+            }
+            if !(self.policy.sse_weight.is_finite() && self.policy.sse_weight >= 0.0) {
+                bail!(
+                    "policy.sse_weight must be a finite value >= 0, got {}",
+                    self.policy.sse_weight
+                );
+            }
+            if self.policy.mode != PolicyMode::Uniform {
+                if self.codec.codebook_reuse != crate::wire::ReuseMode::Off {
+                    bail!(
+                        "policy.mode = {} is incompatible with codec.codebook_reuse = {} — \
+                         per-client arms re-encode each round, so cross-round codebook \
+                         sessions cannot apply (set codec.codebook_reuse = \"off\")",
+                        self.policy.mode.name(),
+                        self.codec.codebook_reuse.name()
+                    );
+                }
+                if self.codec.sparse_topk_auto {
+                    bail!(
+                        "policy.mode = {} is incompatible with codec.sparse_topk_auto — \
+                         the policy layer owns the per-client top-k decision",
+                        self.policy.mode.name()
+                    );
+                }
+            }
+        }
+        if self.codec.upload_delta
+            && self.codec.precision.for_uploads() != crate::wire::Precision::Int8
+        {
+            bail!(
+                "codec.upload_delta requires an int8-class upload plane (codec.precision \
+                 int8 or vq8/vq4/vq8r), got codec.precision = {}",
+                self.codec.precision.name()
             );
         }
         match self.runtime.backend.as_str() {
@@ -806,6 +965,21 @@ impl RunConfig {
         kv("codec.sparse_topk", self.codec.sparse_topk.to_string());
         kv("codec.sparse_topk_auto", self.codec.sparse_topk_auto.to_string());
         kv("codec.sparse_threshold", f64b(self.codec.sparse_threshold));
+        // emitted only when enabled so legacy journals (whose headers
+        // predate these keys) still fingerprint-match and resume
+        if self.codec.upload_delta {
+            kv("codec.upload_delta", "true".to_string());
+        }
+        if self.policy.mode != crate::server::policy::PolicyMode::Uniform {
+            kv("policy.mode", self.policy.mode.name().to_string());
+            kv("policy.budget_window_ms", f64b(self.policy.budget_window_ms));
+            kv(
+                "policy.min_bandwidth_frac",
+                f64b(self.policy.min_bandwidth_frac),
+            );
+            kv("policy.battery_floor", f64b(self.policy.battery_floor));
+            kv("policy.sse_weight", f64b(self.policy.sse_weight));
+        }
         kv("simnet.bits_per_param", self.simnet.bits_per_param.to_string());
         kv("simnet.bandwidth_mbps", f64b(self.simnet.bandwidth_mbps));
         kv("simnet.latency_ms", f64b(self.simnet.latency_ms));
@@ -929,6 +1103,134 @@ mod tests {
         assert!(c.validate().is_err());
         c.runtime.threads = 4;
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn validation_rejects_bad_simnet_values_naming_the_key() {
+        for bad in [0.0, -3.0, f64::NAN, f64::INFINITY] {
+            let mut c = RunConfig::paper_defaults();
+            c.simnet.bandwidth_mbps = bad;
+            let err = c.validate().unwrap_err().to_string();
+            assert!(
+                err.contains("simnet.bandwidth_mbps"),
+                "must name the key for {bad}: {err}"
+            );
+        }
+        for bad in [-1.0, f64::NAN, f64::NEG_INFINITY] {
+            let mut c = RunConfig::paper_defaults();
+            c.simnet.latency_ms = bad;
+            let err = c.validate().unwrap_err().to_string();
+            assert!(
+                err.contains("simnet.latency_ms"),
+                "must name the key for {bad}: {err}"
+            );
+        }
+        // zero latency is legal; zero bandwidth is not
+        let mut c = RunConfig::paper_defaults();
+        c.simnet.latency_ms = 0.0;
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_nonfinite_bandit_and_model_values() {
+        let cases: [(&str, fn(&mut RunConfig)); 8] = [
+            ("bandit.gamma", |c| c.bandit.gamma = f64::NAN),
+            ("bandit.gamma", |c| c.bandit.gamma = 0.0),
+            ("bandit.gamma", |c| c.bandit.gamma = 1.5),
+            ("bandit.mu0", |c| c.bandit.mu0 = f64::INFINITY),
+            ("bandit.tau0", |c| c.bandit.tau0 = f64::NAN),
+            ("model.lam", |c| c.model.lam = 0.0),
+            ("model.alpha", |c| c.model.alpha = f32::NAN),
+            ("model.eta", |c| c.model.eta = f32::INFINITY),
+        ];
+        for (key, poison) in cases {
+            let mut c = RunConfig::paper_defaults();
+            poison(&mut c);
+            let err = c.validate().unwrap_err().to_string();
+            assert!(err.contains(key), "error must name {key}: {err}");
+        }
+        // the boundary gamma = 1.0 is legal
+        let mut c = RunConfig::paper_defaults();
+        c.bandit.gamma = 1.0;
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn policy_section_parses_and_validates() {
+        let c = RunConfig::paper_defaults();
+        assert_eq!(c.policy.mode, crate::server::policy::PolicyMode::Uniform);
+        let cfg = RunConfig::from_toml_str(
+            "[policy]\nmode = \"bandit\"\nbudget_window_ms = 100.0\n\
+             min_bandwidth_frac = 0.5\nbattery_floor = 0.1\nsse_weight = 2.0\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.policy.mode, crate::server::policy::PolicyMode::Bandit);
+        assert_eq!(cfg.policy.budget_window_ms, 100.0);
+        assert_eq!(cfg.policy.min_bandwidth_frac, 0.5);
+        assert_eq!(cfg.policy.battery_floor, 0.1);
+        assert_eq!(cfg.policy.sse_weight, 2.0);
+        assert!(RunConfig::from_toml_str("[policy]\nmode = \"greedy\"\n").is_err());
+        for (key, toml) in [
+            ("policy.budget_window_ms", "[policy]\nbudget_window_ms = 0.0\n"),
+            ("policy.min_bandwidth_frac", "[policy]\nmin_bandwidth_frac = 0.0\n"),
+            ("policy.battery_floor", "[policy]\nbattery_floor = 1.5\n"),
+            ("policy.sse_weight", "[policy]\nsse_weight = -1.0\n"),
+        ] {
+            let err = RunConfig::from_toml_str(toml).unwrap_err().to_string();
+            assert!(err.contains(key), "error must name {key}: {err}");
+        }
+        // policy modes exclude cross-round codebook sessions and auto top-k
+        let err = RunConfig::from_toml_str(
+            "[policy]\nmode = \"budget\"\n[codec]\nprecision = \"vq8\"\ncodebook_reuse = \"auto\"\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("codec.codebook_reuse"), "{err}");
+        let err =
+            RunConfig::from_toml_str("[policy]\nmode = \"budget\"\n[codec]\nsparse_topk_auto = true\n")
+                .unwrap_err()
+                .to_string();
+        assert!(err.contains("codec.sparse_topk_auto"), "{err}");
+    }
+
+    #[test]
+    fn upload_delta_parses_and_requires_int8_class_uploads() {
+        let cfg =
+            RunConfig::from_toml_str("[codec]\nprecision = \"int8\"\nupload_delta = true\n")
+                .unwrap();
+        assert!(cfg.codec.upload_delta);
+        for ok in ["vq8", "vq4", "vq8r"] {
+            RunConfig::from_toml_str(&format!(
+                "[codec]\nprecision = \"{ok}\"\nupload_delta = true\n"
+            ))
+            .unwrap();
+        }
+        for bad in ["f64", "f32", "f16"] {
+            let err = RunConfig::from_toml_str(&format!(
+                "[codec]\nprecision = \"{bad}\"\nupload_delta = true\n"
+            ))
+            .unwrap_err()
+            .to_string();
+            assert!(err.contains("codec.upload_delta"), "{err}");
+        }
+    }
+
+    #[test]
+    fn policy_and_upload_delta_fingerprint_keys_are_conditional() {
+        // legacy configs must fingerprint identically to pre-policy
+        // releases so old journals still resume
+        let base = RunConfig::paper_defaults();
+        assert!(!base.determinism_fingerprint().contains("policy."));
+        assert!(!base.determinism_fingerprint().contains("upload_delta"));
+        let mut p = RunConfig::paper_defaults();
+        p.policy.mode = crate::server::policy::PolicyMode::Bandit;
+        let fp = p.determinism_fingerprint();
+        assert!(fp.contains("policy.mode=bandit;"), "{fp}");
+        assert_ne!(base.determinism_fingerprint(), fp);
+        let mut u = RunConfig::paper_defaults();
+        u.codec.precision = crate::wire::Precision::Int8;
+        u.codec.upload_delta = true;
+        assert!(u.determinism_fingerprint().contains("codec.upload_delta=true;"));
     }
 
     #[test]

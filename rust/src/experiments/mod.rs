@@ -416,6 +416,7 @@ pub fn codec_sweep(out_dir: &Path, dataset: &str, scale: &Scale, backend: &str) 
         "precision",
         "entropy",
         "reuse",
+        "policy",
         "strategy",
         "reduction_pct",
         "map",
@@ -427,6 +428,7 @@ pub fn codec_sweep(out_dir: &Path, dataset: &str, scale: &Scale, backend: &str) 
         "delta_frames",
         "full_frames",
         "resyncs",
+        "policy_skips",
     ];
     let mut csv = CsvWriter::create(out_dir.join(format!("codec_{dataset}.csv")), &header)?;
     let mut cfg = experiment_config(dataset, scale, backend, 2021)?;
@@ -468,6 +470,7 @@ pub fn codec_sweep(out_dir: &Path, dataset: &str, scale: &Scale, backend: &str) 
                     precision.to_string(),
                     entropy.to_string(),
                     reuse.to_string(),
+                    "uniform".to_string(),
                     "fcf-bts".to_string(),
                     REDUCTION_PCT.to_string(),
                     format!("{:.4}", report.final_metrics.map),
@@ -480,10 +483,54 @@ pub fn codec_sweep(out_dir: &Path, dataset: &str, scale: &Scale, backend: &str) 
                     report.session.map_or(0, |s| s.delta_frames).to_string(),
                     report.session.map_or(0, |s| s.full_frames).to_string(),
                     report.session.map_or(0, |s| s.resync_msgs).to_string(),
+                    "0".to_string(),
                 ])?;
             }
         }
     }
+    // Per-client policy rows: the engine measures every arm each round
+    // and serves each participant what its budget affords (`budget`) or
+    // what the byte-scored Thompson bandit picks (`bandit`), so the
+    // precision column reads "adaptive" — there is no single wire codec
+    // to name. Entropy/reuse pin the stateless grid corner the policy
+    // layer requires.
+    cfg.codec.precision = crate::wire::Precision::Int8;
+    cfg.codec.entropy = crate::wire::EntropyMode::None;
+    cfg.codec.codebook_reuse = crate::wire::ReuseMode::Off;
+    for policy in ["budget", "bandit"] {
+        cfg.policy.mode = crate::server::policy::PolicyMode::parse(policy)?;
+        let reports = run_strategies_on_split(&cfg, &split, &[Strategy::Bts], fraction)?;
+        let report = &reports["bts"];
+        let total = report.ledger.total_bytes();
+        let per_round = total / report.iterations.max(1) as u64;
+        println!(
+            "  adaptive policy={policy:<6} map={:.4} f1={:.4} traffic/round={} skips={}",
+            report.final_metrics.map,
+            report.final_metrics.f1,
+            human_bytes(per_round),
+            report.policy_skips
+        );
+        csv.row(&[
+            dataset.to_string(),
+            "adaptive".to_string(),
+            "none".to_string(),
+            "off".to_string(),
+            policy.to_string(),
+            "fcf-bts".to_string(),
+            REDUCTION_PCT.to_string(),
+            format!("{:.4}", report.final_metrics.map),
+            format!("{:.4}", report.final_metrics.f1),
+            report.ledger.down_bytes.to_string(),
+            report.ledger.up_bytes.to_string(),
+            per_round.to_string(),
+            "0".to_string(),
+            "0".to_string(),
+            "0".to_string(),
+            "0".to_string(),
+            report.policy_skips.to_string(),
+        ])?;
+    }
+    cfg.policy.mode = crate::server::policy::PolicyMode::Uniform;
     csv.flush()
 }
 

@@ -42,6 +42,7 @@ USAGE:
                    [--sparse-topk N|auto]
                    [--entropy none|varint|range|full]
                    [--codebook-reuse off|delta|auto]
+                   [--policy uniform|budget|bandit] [--upload-delta]
                    [--threads N] [--backend pjrt|reference]
                    [--config file.toml] [--set path=value ...]
                    [--dump-rounds file.csv]
@@ -108,7 +109,18 @@ USAGE:
    --threads and of every other random stream, and the sampled ids
    are journaled so --resume replay-verifies sampled runs unchanged.
    Requires 1 <= K <= theta; unset = every round trains the classic
-   theta cohort drawn from the main stream.)
+   theta cohort drawn from the main stream. --policy budget|bandit turns
+   on per-client payload policies: every round the coordinator measures
+   all four download arms (int8|vq8r|vq8|vq4), draws each participant's
+   simulated bandwidth/battery budget from a dedicated reproducible
+   stream, and serves each client the arm + upload top-k its budget
+   affords (`budget`) or the arm a per-class Thompson bandit scored on
+   measured bytes picks (`bandit`); clients whose budget fits nothing
+   sit the round out. --upload-delta turns ∇Q* uploads into a SecEmb-
+   style session: each client's sparse int8 rows ship as byte deltas
+   against its previous upload when that measures smaller, with
+   generation tags and forced full-frame resyncs on state mismatch —
+   bit-transparent to training, only measured upload bytes change.)
 ";
 
 fn main() -> ExitCode {
@@ -174,6 +186,21 @@ fn cmd_train(args: &Args) -> Result<()> {
             "codebook session: {} reuse / {} delta / {} full frames, {} resyncs \
              ({:+} extra bytes)",
             s.reuse_frames, s.delta_frames, s.full_frames, s.resync_msgs, s.resync_extra_bytes
+        );
+    }
+    if report.policy != "uniform" {
+        println!(
+            "payload policy: mode={} skipped_participants={}",
+            report.policy, report.policy_skips
+        );
+    }
+    if let Some(u) = &report.upload {
+        println!(
+            "upload session: {} full / {} delta frames, {} resyncs, {} saved",
+            u.full_frames,
+            u.delta_frames,
+            u.resyncs,
+            human_bytes(u.delta_saved_bytes)
         );
     }
     println!("final metrics (window mean): {}", report.final_metrics);

@@ -163,6 +163,14 @@ pub struct RoundTask {
     pub simnet: SimNetConfig,
     /// Shared immutable per-client data (eval needs train/test items).
     pub fleet: FleetView,
+    /// Upload-delta mode (`codec.upload_delta`): carry each batch's
+    /// encoded ∇Q* frame through the merge instead of recording one
+    /// ledger message per client here — the coordinator re-frames each
+    /// client's upload against its cached reference plane and attributes
+    /// the **exact** per-client session-frame bytes after the barrier
+    /// (`wire::upload`). Workers stay stateless; the frames come out of
+    /// [`RoundAggregate::up_frames`] in batch order.
+    pub collect_up_frames: bool,
 }
 
 impl RoundTask {
@@ -206,6 +214,10 @@ pub struct BatchOutcome {
     /// batch is racy by design, so this field must never feed the merge —
     /// the flight recorder quarantines it in timing-only trace fields.
     pub lane: usize,
+    /// The batch's encoded ∇Q* frame, carried only when
+    /// [`RoundTask::collect_up_frames`] is set (the coordinator's
+    /// upload-delta loop consumes it after the barrier).
+    pub up_frame: Option<Vec<u8>>,
 }
 
 /// Per-batch execution record carried out of the batch-order barrier for
@@ -248,6 +260,9 @@ pub struct RoundAggregate {
     /// timings inside are wall-clock facts, not decisions — the tracer
     /// emits them as timing-only fields the trace digest strips).
     pub batches: Vec<BatchStat>,
+    /// Encoded ∇Q* batch frames in batch-index order — populated only
+    /// under [`RoundTask::collect_up_frames`], empty otherwise.
+    pub up_frames: Vec<Vec<u8>>,
 }
 
 /// Fold per-batch outcomes into the round aggregate **in batch-index
@@ -305,6 +320,9 @@ pub fn merge_outcomes(
             lane: o.lane,
             phase_ns: o.phase_ns,
         });
+        if let Some(f) = &o.up_frame {
+            agg.up_frames.push(f.clone());
+        }
     }
     Ok(agg)
 }
@@ -365,11 +383,15 @@ pub fn run_batch_framed(
     // is off (the implicit-feedback ∇Q* is dense over the selected set),
     // and the structural approximation of it under range coding (see
     // module docs; an interaction-indexed frame would undercount and
-    // leak the client's private interaction rows).
+    // leak the client's private interaction rows). Under upload-delta
+    // mode the coordinator attributes the exact session-frame bytes per
+    // client after the barrier instead, so nothing is recorded here.
     let up_bytes = up_frame.len() as u64;
     let mut ledger = TrafficLedger::new();
-    for _ in lo..hi {
-        ledger.record_up(&task.simnet, up_bytes);
+    if !task.collect_up_frames {
+        for _ in lo..hi {
+            ledger.record_up(&task.simnet, up_bytes);
+        }
     }
     let codec_ns = t0.elapsed().as_nanos();
 
@@ -400,6 +422,7 @@ pub fn run_batch_framed(
             metrics,
             phase_ns: [solve_ns, grad_ns, codec_ns, eval_ns],
             lane: 0, // stamped by the draining lane
+            up_frame: task.collect_up_frames.then(|| up_frame.clone()),
         },
         up_frame,
     ))
@@ -751,6 +774,7 @@ mod tests {
             sparse: SparsePolicy::default(),
             simnet: cfg.simnet.clone(),
             fleet: FleetView::from_clients(clients),
+            collect_up_frames: false,
         }
     }
 
@@ -818,6 +842,33 @@ mod tests {
         let empty_frame = crate::wire::encoded_sparse_len(0, k, Precision::F32) as u64;
         assert!(agg.ledger.up_bytes <= n * max_frame);
         assert!(agg.ledger.up_bytes > n * empty_frame);
+    }
+
+    #[test]
+    fn collect_mode_passes_frames_through_and_defers_attribution() {
+        let cfg = small_cfg();
+        let factory = BackendFactory::from_config(&cfg);
+        let mut task = tiny_task(&cfg, 150, 40, false);
+        task.collect_up_frames = true;
+        let n_batches = task.num_batches();
+        let mut local = factory.build_runtime().unwrap();
+        let codec = make_codec(Precision::F32);
+        let mut ex = FleetExecutor::new(factory, 2);
+        let agg = ex.run_round(task.clone(), &mut local, codec.as_ref()).unwrap();
+        // no upload messages recorded at batch level — the coordinator
+        // attributes exact per-client session bytes after the barrier
+        assert_eq!(agg.ledger.up_msgs, 0);
+        assert_eq!(agg.ledger.up_bytes, 0);
+        // one frame per batch, batch order, each a decodable sparse frame
+        assert_eq!(agg.up_frames.len(), n_batches);
+        for f in &agg.up_frames {
+            decode_upload(codec.as_ref(), f, task.m_s(), task.k).unwrap();
+        }
+        // the non-collect run keeps the legacy attribution
+        task.collect_up_frames = false;
+        let legacy = ex.run_round(task, &mut local, codec.as_ref()).unwrap();
+        assert_eq!(legacy.ledger.up_msgs, 150);
+        assert!(legacy.up_frames.is_empty());
     }
 
     #[test]

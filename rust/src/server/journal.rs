@@ -118,6 +118,24 @@ pub struct RoundEntry {
     /// `VqSession::state_digest()` after this round (`None` when
     /// sessions are off).
     pub session_digest: Option<u64>,
+    /// Payload policy mode name (`budget|bandit`); `None` when the
+    /// policy layer is inert (uniform runs journal the legacy key set).
+    pub policy_mode: Option<String>,
+    /// Cumulative participants the policy sat out (`None` = no policy).
+    pub policy_skips: Option<u64>,
+    /// `PolicyEngine::state_digest()` after this round (`None` = no
+    /// policy).
+    pub policy_digest: Option<u64>,
+    /// Cumulative upload-session full frames (`None` when
+    /// `codec.upload_delta` is off).
+    pub up_full: Option<u64>,
+    /// Cumulative upload-session delta frames (`None` = deltas off).
+    pub up_delta: Option<u64>,
+    /// Cumulative upload-session forced resyncs (`None` = deltas off).
+    pub up_resyncs: Option<u64>,
+    /// `UploadStore::state_digest()` after this round (`None` = deltas
+    /// off).
+    pub upload_digest: Option<u64>,
 }
 
 /// Everything a journal file held: the header, the valid round prefix,
@@ -233,6 +251,29 @@ impl RoundEntry {
         ));
         if let Some(d) = self.session_digest {
             s.push_str(&format!(",\"session\":\"{d:016x}\""));
+        }
+        if let Some(mode) = &self.policy_mode {
+            s.push_str(",\"policy_mode\":\"");
+            push_escaped(&mut s, mode);
+            s.push('"');
+        }
+        if let Some(v) = self.policy_skips {
+            s.push_str(&format!(",\"policy_skips\":{v}"));
+        }
+        if let Some(d) = self.policy_digest {
+            s.push_str(&format!(",\"policy\":\"{d:016x}\""));
+        }
+        if let Some(v) = self.up_full {
+            s.push_str(&format!(",\"up_full\":{v}"));
+        }
+        if let Some(v) = self.up_delta {
+            s.push_str(&format!(",\"up_delta\":{v}"));
+        }
+        if let Some(v) = self.up_resyncs {
+            s.push_str(&format!(",\"up_resyncs\":{v}"));
+        }
+        if let Some(d) = self.upload_digest {
+            s.push_str(&format!(",\"upload\":\"{d:016x}\""));
         }
         seal_line(s)
     }
@@ -593,6 +634,41 @@ pub fn parse_round(line: &str) -> Result<RoundEntry> {
             Some(other) => bail!("journal record: `session` is not a string: {other:?}"),
             None => None,
         },
+        policy_mode: match map.get("policy_mode") {
+            Some(JsonVal::Str(s)) => Some(s.clone()),
+            Some(other) => bail!("journal record: `policy_mode` is not a string: {other:?}"),
+            None => None,
+        },
+        policy_skips: match map.get("policy_skips") {
+            Some(JsonVal::U64(v)) => Some(*v),
+            Some(other) => bail!("journal record: `policy_skips` is not a u64: {other:?}"),
+            None => None,
+        },
+        policy_digest: match map.get("policy") {
+            Some(JsonVal::Str(s)) => Some(parse_hex16(s, "policy")?),
+            Some(other) => bail!("journal record: `policy` is not a string: {other:?}"),
+            None => None,
+        },
+        up_full: match map.get("up_full") {
+            Some(JsonVal::U64(v)) => Some(*v),
+            Some(other) => bail!("journal record: `up_full` is not a u64: {other:?}"),
+            None => None,
+        },
+        up_delta: match map.get("up_delta") {
+            Some(JsonVal::U64(v)) => Some(*v),
+            Some(other) => bail!("journal record: `up_delta` is not a u64: {other:?}"),
+            None => None,
+        },
+        up_resyncs: match map.get("up_resyncs") {
+            Some(JsonVal::U64(v)) => Some(*v),
+            Some(other) => bail!("journal record: `up_resyncs` is not a u64: {other:?}"),
+            None => None,
+        },
+        upload_digest: match map.get("upload") {
+            Some(JsonVal::Str(s)) => Some(parse_hex16(s, "upload")?),
+            Some(other) => bail!("journal record: `upload` is not a string: {other:?}"),
+            None => None,
+        },
     })
 }
 
@@ -804,6 +880,13 @@ pub fn verify_round(journaled: &RoundEntry, live: &RoundEntry) -> Result<()> {
     check!(sim_secs_bits);
     check!(bandit_digest);
     check!(session_digest);
+    check!(policy_mode);
+    check!(policy_skips);
+    check!(policy_digest);
+    check!(up_full);
+    check!(up_delta);
+    check!(up_resyncs);
+    check!(upload_digest);
     Ok(())
 }
 
@@ -874,6 +957,15 @@ mod tests {
             sim_secs_bits: 1.5f64.to_bits(),
             bandit_digest: 0xdead_beef_cafe_f00d,
             session_digest: with_session.then_some(0xffff_0000_ffff_0000),
+            // exercise the policy/upload keys on the same flag so both
+            // the legacy (all-None) and extended key sets roundtrip
+            policy_mode: with_session.then(|| "bandit".to_string()),
+            policy_skips: with_session.then_some(3),
+            policy_digest: with_session.then_some(0x1111_2222_3333_4444),
+            up_full: with_session.then_some(12),
+            up_delta: with_session.then_some(34),
+            up_resyncs: with_session.then_some(1),
+            upload_digest: with_session.then_some(0x5555_6666_7777_8888),
         }
     }
 

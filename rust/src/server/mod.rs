@@ -25,9 +25,10 @@
 //!    metric window (paper §6.2).
 
 pub mod journal;
+pub mod policy;
 
 use std::cell::RefCell;
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::rc::Rc;
 
 use anyhow::{Context, Result};
@@ -50,9 +51,12 @@ use crate::telemetry::trace::f64_bits;
 use crate::telemetry::{Registry, Stopwatch, TraceEvent, TraceLevel, Tracer};
 use crate::transport::lane::{ExchangeRequest, InProcessLane, RoundLane};
 use crate::wire::{
-    make_codec_with, PayloadCodec, SessionMode, SparsePolicy, VqClientState, VqSession,
+    make_codec_with, EncodedDownload, PayloadCodec, SessionMode, SparsePolicy, UploadStats,
+    UploadStore, VqClientState, VqSession,
 };
 use crate::{debug_log, info, warn_log};
+
+use self::policy::{ArmCost, PolicyEngine, PolicyMode, ARMS};
 
 /// Per-round record for convergence analysis (paper Figure 3).
 #[derive(Debug, Clone)]
@@ -104,6 +108,14 @@ pub struct TrainReport {
     pub codebook_reuse: &'static str,
     /// Session frame/resync counters (`None` when sessions are off).
     pub session: Option<SessionStats>,
+    /// Per-client payload policy in effect (`server::policy` mode name;
+    /// `uniform` = the legacy single-codec path).
+    pub policy: &'static str,
+    /// Participants the policy sat out across the run (0 when uniform).
+    pub policy_skips: u64,
+    /// Upload-session counters (`None` when `codec.upload_delta` is
+    /// off).
+    pub upload: Option<UploadStats>,
     /// Smoothed metrics at the final iteration (the paper's headline
     /// number for a run).
     pub final_metrics: MetricSet,
@@ -160,6 +172,17 @@ pub struct Trainer {
     vq_mirror: VqClientState,
     /// Session frame/resync counters for the report.
     session_stats: SessionStats,
+    /// Per-client payload policy engine (`[policy] mode != uniform`):
+    /// decides each participant's download arm, upload top-k and
+    /// participation from simulated per-client budgets, scored by the
+    /// measured per-arm frame bytes. `None` keeps the uniform path
+    /// byte-identical to previous releases.
+    policy: Option<PolicyEngine>,
+    /// Coordinator half of the upload session (`codec.upload_delta`):
+    /// per-client ∇Q* reference planes this round's uploads are
+    /// delta-encoded against, generation-tagged against the device-side
+    /// table in `client::Fleet`. `None` = stateless uploads.
+    upload_store: Option<UploadStore>,
     sparse: SparsePolicy,
     /// Shared across trainers: PJRT executable compilation is expensive
     /// and xla_extension 0.5.1 does not fully release compiled programs,
@@ -219,6 +242,32 @@ pub struct Trainer {
     sw_reward: Stopwatch,
     sw_codec: Stopwatch,
     sw_fleet: Stopwatch,
+}
+
+/// What a round's mid-section (codec → exchange → barrier bookkeeping)
+/// hands the common tail (Adam → rewards → metric window → journal),
+/// produced by exactly one of [`Trainer::uniform_mid`] /
+/// [`Trainer::policy_mid`].
+struct RoundMid {
+    /// This round's participant ids, in draw order.
+    participants: Vec<usize>,
+    /// Broadcast-bytes evidence: the single frame length on the uniform
+    /// path, the summed served download bytes on the policy path.
+    down_bytes: u64,
+    /// The session frame shipped, when a codebook session is active
+    /// (always `None` on the policy path — sessions and policies are
+    /// mutually exclusive by config validation).
+    session_frame: Option<EncodedDownload>,
+    /// Σ decoded batch gradients over every cohort, m_s × k.
+    g_total: Vec<f32>,
+    /// Contributing clients' local test metrics.
+    round_acc: MetricAccumulator,
+    /// Clients whose uploads reached the aggregate.
+    contributed: usize,
+    /// Busy nanoseconds per phase summed over batches and cohorts.
+    phase_ns: [u128; 4],
+    /// Exchange wall-clock (0 in-process).
+    transport_ns: u64,
 }
 
 impl Trainer {
@@ -402,6 +451,9 @@ impl Trainer {
             vq_session,
             vq_mirror: VqClientState::new(),
             session_stats: SessionStats::default(),
+            policy: (cfg.policy.mode != PolicyMode::Uniform)
+                .then(|| PolicyEngine::new(&cfg.policy, &cfg.simnet, cfg.seed)),
+            upload_store: cfg.codec.upload_delta.then(UploadStore::new),
             sparse: SparsePolicy {
                 top_k: cfg.codec.sparse_topk,
                 threshold: cfg.codec.sparse_threshold as f32,
@@ -465,6 +517,12 @@ impl Trainer {
         &self.ledger
     }
 
+    /// Per-round records completed so far (manual-stepping tests read
+    /// the trajectory between rounds).
+    pub fn history(&self) -> &[RoundRecord] {
+        &self.history
+    }
+
     /// Codebook-session frame/resync counters so far (all zero while
     /// sessions are off).
     pub fn session_stats(&self) -> SessionStats {
@@ -477,6 +535,24 @@ impl Trainer {
         self.vq_session.as_ref().map(|s| s.generation())
     }
 
+    /// Upload-session counters so far (`None` when `codec.upload_delta`
+    /// is off).
+    pub fn upload_stats(&self) -> Option<UploadStats> {
+        self.upload_store.as_ref().map(|s| s.stats)
+    }
+
+    /// The coordinator's upload-reference generation for one client
+    /// (`None` when upload deltas are off or the client never uploaded).
+    pub fn upload_generation(&self, client: usize) -> Option<u32> {
+        self.upload_store.as_ref().and_then(|s| s.generation(client))
+    }
+
+    /// Participants the payload policy sat out so far (0 when the
+    /// policy layer is inert).
+    pub fn policy_skips(&self) -> u64 {
+        self.policy.as_ref().map_or(0, |p| p.skips())
+    }
+
     /// Churn hook: drop one client's cached download codebook, as if
     /// the device evicted it or missed the rounds that shipped it. Its
     /// next session download arrives as a full-codebook resync frame —
@@ -484,6 +560,15 @@ impl Trainer {
     /// test drives this).
     pub fn invalidate_client_codebook(&mut self, client: usize) {
         self.fleet.invalidate_download_cache(client);
+    }
+
+    /// Churn hook, upload side: drop one client's device-held upload
+    /// reference, as if the device evicted it. The coordinator notices
+    /// the generation mismatch on the client's next upload and forces a
+    /// full-frame resync — bit-identical training, extra ledger bytes
+    /// (the upload-churn e2e test drives this).
+    pub fn invalidate_client_upload(&mut self, client: usize) {
+        self.fleet.invalidate_upload_cache(client);
     }
 
     /// Replace the round lane. The default is the deterministic
@@ -586,6 +671,9 @@ impl Trainer {
             entropy: self.codec.entropy().name(),
             codebook_reuse: self.vq_session.as_ref().map_or("off", |s| s.mode().name()),
             session: self.vq_session.as_ref().map(|_| self.session_stats),
+            policy: self.policy.as_ref().map_or("uniform", |p| p.mode().name()),
+            policy_skips: self.policy_skips(),
+            upload: self.upload_stats(),
             final_metrics: self.smoothed_metrics(),
             history: self.history.clone(),
             ledger: self.ledger.clone(),
@@ -707,6 +795,293 @@ impl Trainer {
         }
         self.sw_stage.stop();
 
+        // Pre-exchange snapshots: everything the common tail reports as
+        // per-round deltas, captured before either mid-section moves a
+        // byte.
+        let ledger_bytes_before = self.ledger.total_bytes();
+        let down_before = self.ledger.down_bytes;
+        let up_before = self.ledger.up_bytes;
+        let stats_before = self.session_stats;
+        let upload_before = self.upload_stats();
+        let evaluate = self.t as usize % self.cfg.train.eval_every.max(1) == 0;
+
+        // (2b–4) the mid-section forks: with a per-client policy active
+        // every arm is measured once, the engine decides per participant
+        // and cohorts exchange separately (`policy_mid`); otherwise the
+        // uniform path runs exactly as previous releases did — policy
+        // off stays byte-identical.
+        let RoundMid {
+            participants,
+            down_bytes,
+            session_frame,
+            mut g_total,
+            round_acc,
+            contributed,
+            phase_ns,
+            transport_ns,
+        } = if self.policy.is_some() {
+            self.policy_mid(m, k, evaluate, &selected, &q_sel)?
+        } else {
+            self.uniform_mid(m, k, evaluate, &selected, q_sel)?
+        };
+
+        // (5) aggregate + server-side Adam (Eq. 4).
+        self.sw_update.start();
+        // The divisor is the clients whose uploads actually reached the
+        // aggregate — identical to the participant count fault-free, and
+        // the honest mean under deadline-based partial aggregation.
+        if self.cfg.train.aggregate == Aggregate::Mean && contributed > 0 {
+            let inv = 1.0 / contributed as f32;
+            for v in g_total.iter_mut() {
+                *v *= inv;
+            }
+        }
+        self.adam.step_selected(&mut self.q, &selected, &g_total);
+        self.sw_update.stop();
+
+        // Eq. 13–14 rewards + bandit posterior update. The gradient fed
+        // to the reward engine is optionally 1/Θ-scaled so reward
+        // magnitudes stay commensurate with the N(0, 1/τ_θ) prior (see
+        // BanditConfig::mean_scaled_rewards).
+        self.sw_reward.start();
+        let reward_scale = if self.cfg.bandit.mean_scaled_rewards
+            && self.cfg.train.aggregate == Aggregate::Sum
+            && contributed > 0
+        {
+            1.0 / contributed as f32
+        } else {
+            1.0
+        };
+        let mut rewards = Vec::with_capacity(selected.len());
+        let mut g_row = vec![0.0f32; k];
+        for (pos, &item) in selected.iter().enumerate() {
+            for (dst, src) in g_row.iter_mut().zip(&g_total[pos * k..(pos + 1) * k]) {
+                *dst = src * reward_scale;
+            }
+            let r = self.reward.observe(item, self.t, &g_row);
+            rewards.push((item, r));
+        }
+        if self.cfg.bandit.normalize_rewards {
+            standardize_rewards(&mut rewards, self.cfg.bandit.reward_std_scale);
+        }
+        self.selector.update(&rewards);
+        self.sw_reward.stop();
+        if self.trace_on(TraceLevel::Decision) {
+            let n = rewards.len();
+            let mut ev = TraceEvent::new("reward_update")
+                .u64("iter", self.t)
+                .u64("n", n as u64)
+                .bool("standardized", self.cfg.bandit.normalize_rewards);
+            if n > 0 {
+                let (mut lo, mut hi, mut sum) = (f64::INFINITY, f64::NEG_INFINITY, 0.0f64);
+                for &(_, r) in &rewards {
+                    lo = lo.min(r);
+                    hi = hi.max(r);
+                    sum += r;
+                }
+                ev = ev
+                    .f64("r_min", lo)
+                    .f64("r_mean", sum / n as f64)
+                    .f64("r_max", hi);
+            }
+            self.emit(TraceLevel::Decision, ev);
+        }
+        if self.registry_on() {
+            for &(_, r) in &rewards {
+                self.registry
+                    .observe("fedpayload_reward_abs", REWARD_BUCKETS, r.abs());
+            }
+        }
+
+        // global metric window (§6.2)
+        let raw = round_acc.mean();
+        if evaluate && round_acc.count() > 0 {
+            if self.metric_history.len() == self.cfg.train.metric_window {
+                self.metric_history.pop_front();
+            }
+            self.metric_history.push_back(raw);
+        }
+        let record = RoundRecord {
+            iter: self.t as usize,
+            m_s: selected.len(),
+            raw,
+            smoothed: self.smoothed_metrics(),
+            round_bytes: self.ledger.total_bytes() - ledger_bytes_before,
+        };
+        debug_log!(
+            "iter {} m_s={} raw={} smoothed={}",
+            record.iter,
+            record.m_s,
+            record.raw,
+            record.smoothed
+        );
+        // Upload-session evidence, delta runs only (uniform non-delta
+        // rounds must emit the exact legacy event set — the trace-count
+        // tests pin it).
+        if let (Some(before), Some(stats)) = (upload_before, self.upload_stats()) {
+            if self.trace_on(TraceLevel::Decision) {
+                let ev = TraceEvent::new("upload_plan")
+                    .u64("iter", self.t)
+                    .u64("full_frames", stats.full_frames - before.full_frames)
+                    .u64("delta_frames", stats.delta_frames - before.delta_frames)
+                    .u64("resyncs", stats.resyncs - before.resyncs)
+                    .u64(
+                        "saved_bytes",
+                        stats.delta_saved_bytes - before.delta_saved_bytes,
+                    );
+                self.emit(TraceLevel::Decision, ev);
+            }
+            if self.registry_on() {
+                self.registry.inc(
+                    "fedpayload_upload_delta_frames_total",
+                    stats.delta_frames - before.delta_frames,
+                );
+                self.registry.inc(
+                    "fedpayload_upload_resyncs_total",
+                    stats.resyncs - before.resyncs,
+                );
+                self.registry.set_gauge(
+                    "fedpayload_upload_delta_saved_bytes",
+                    stats.delta_saved_bytes as f64,
+                );
+            }
+        }
+        if self.trace_on(TraceLevel::Decision) {
+            let ev = TraceEvent::new("round_end")
+                .u64("iter", self.t)
+                .u64("m_s", record.m_s as u64)
+                .u64("round_bytes", record.round_bytes)
+                .u64("down_bytes", self.ledger.down_bytes - down_before)
+                .u64("up_bytes", self.ledger.up_bytes - up_before)
+                .bool("evaluated", evaluate)
+                .u64("eval_clients", round_acc.count() as u64)
+                .bits("raw_map_bits", record.raw.map)
+                .bits("smoothed_map_bits", record.smoothed.map)
+                .t_u128("solve_ns", phase_ns[0])
+                .t_u128("grad_ns", phase_ns[1])
+                .t_u128("codec_ns", phase_ns[2])
+                .t_u128("eval_ns", phase_ns[3])
+                // exchange wall-clock: 0 in-process, socket time over TCP
+                // — a timing fact, quarantined with the other `"t"` fields
+                .t_u64("exchange_ns", transport_ns);
+            self.emit(TraceLevel::Decision, ev);
+        }
+        if self.registry_on() {
+            self.registry.inc("fedpayload_rounds_total", 1);
+            self.registry
+                .inc("fedpayload_down_bytes_total", self.ledger.down_bytes - down_before);
+            self.registry
+                .inc("fedpayload_up_bytes_total", self.ledger.up_bytes - up_before);
+            self.registry
+                .observe("fedpayload_down_frame_bytes", BYTE_BUCKETS, down_bytes as f64);
+            self.registry.set_gauge("fedpayload_smoothed_map", record.smoothed.map);
+            if let Some(enc) = &session_frame {
+                let key = format!(
+                    "fedpayload_session_frames_total{{mode=\"{}\"}}",
+                    enc.mode.name()
+                );
+                self.registry.inc(&key, 1);
+                self.registry
+                    .inc(
+                        "fedpayload_session_resyncs_total",
+                        self.session_stats.resync_msgs - stats_before.resync_msgs,
+                    );
+                self.registry.set_gauge(
+                    "fedpayload_session_resync_extra_bytes",
+                    self.session_stats.resync_extra_bytes as f64,
+                );
+                self.registry
+                    .set_gauge("fedpayload_session_generation", f64::from(enc.generation));
+                self.registry.set_gauge(
+                    "fedpayload_session_synced_clients",
+                    self.fleet.synced_clients() as f64,
+                );
+            }
+            if let Some(path) = self.metrics_out.clone() {
+                write_metrics_snapshot(&path, &self.registry, self.t as usize)
+                    .context("writing metrics snapshot")?;
+            }
+        }
+        if journal_active {
+            let entry = journal::RoundEntry {
+                iter: self.t,
+                rng_fp,
+                participants: participants.iter().map(|&c| c as u64).collect(),
+                selected: selected.iter().map(|&i| u64::from(i)).collect(),
+                frame_bytes: down_bytes,
+                session_mode: session_frame.as_ref().map(|e| e.mode.name().to_string()),
+                generation: session_frame.as_ref().map(|e| u64::from(e.generation)),
+                installs: session_frame.as_ref().map(|e| e.installs_generation),
+                resync_msgs: self.session_stats.resync_msgs,
+                resync_extra: self.session_stats.resync_extra_bytes,
+                evaluated: evaluate,
+                eval_clients: round_acc.count() as u64,
+                m_s: record.m_s as u64,
+                raw_bits: [
+                    record.raw.precision.to_bits(),
+                    record.raw.recall.to_bits(),
+                    record.raw.f1.to_bits(),
+                    record.raw.map.to_bits(),
+                ],
+                smoothed_bits: [
+                    record.smoothed.precision.to_bits(),
+                    record.smoothed.recall.to_bits(),
+                    record.smoothed.f1.to_bits(),
+                    record.smoothed.map.to_bits(),
+                ],
+                round_bytes: record.round_bytes,
+                down_bytes: self.ledger.down_bytes,
+                up_bytes: self.ledger.up_bytes,
+                down_msgs: self.ledger.down_msgs,
+                up_msgs: self.ledger.up_msgs,
+                sim_secs_bits: self.ledger.sim_secs.to_bits(),
+                bandit_digest: self.selector.state_digest(),
+                session_digest: self.vq_session.as_ref().map(|s| s.state_digest()),
+                policy_mode: self.policy.as_ref().map(|p| p.mode().name().to_string()),
+                policy_skips: self.policy.as_ref().map(|p| p.skips()),
+                policy_digest: self.policy.as_ref().map(|p| p.state_digest()),
+                up_full: self.upload_store.as_ref().map(|s| s.stats.full_frames),
+                up_delta: self.upload_store.as_ref().map(|s| s.stats.delta_frames),
+                up_resyncs: self.upload_store.as_ref().map(|s| s.stats.resyncs),
+                upload_digest: self.upload_store.as_ref().map(|s| s.state_digest()),
+            };
+            match expected {
+                // replayed round: verify every recorded field against
+                // the fresh re-execution; append only when rewriting the
+                // journal to a new path (in-place resume already holds
+                // these records)
+                Some(journaled) => {
+                    journal::verify_round(&journaled, &entry)?;
+                    self.replayed += 1;
+                    if self.journal_rewrite {
+                        if let Some(j) = self.journal.as_mut() {
+                            j.append(&entry).context("appending journal record")?;
+                        }
+                    }
+                }
+                None => {
+                    if let Some(j) = self.journal.as_mut() {
+                        j.append(&entry).context("appending journal record")?;
+                    }
+                }
+            }
+        }
+        self.history.push(record.clone());
+        Ok(record)
+    }
+
+    /// The uniform arm of the round mid-section — the legacy single-codec
+    /// path, moved verbatim out of [`Trainer::round`] when the policy
+    /// layer landed. Policy-off runs MUST stay byte-identical to previous
+    /// releases, so nothing here may reorder RNG draws or ledger records.
+    fn uniform_mid(
+        &mut self,
+        m: usize,
+        k: usize,
+        evaluate: bool,
+        selected: &[u32],
+        q_sel: Vec<f32>,
+    ) -> Result<RoundMid> {
         // (2b) put Q* on the wire: encode the download frame, then train
         // the clients against the *decoded* factors, so a lossy codec's
         // quantization error flows into the round exactly as it would on
@@ -781,10 +1156,6 @@ impl Trainer {
         // frame instead — decoding to bit-identical factors (verified
         // below), so churn shows up only in the ledger, never in the
         // training trajectory.
-        let ledger_bytes_before = self.ledger.total_bytes();
-        let down_before = self.ledger.down_bytes;
-        let up_before = self.ledger.up_bytes;
-        let stats_before = self.session_stats;
         // `theta_sample` draws from the dedicated per-round stream and
         // must never touch `self.rng`; the legacy path must never touch
         // the sampler — either way the other stream's position is
@@ -815,7 +1186,6 @@ impl Trainer {
         // computed in the lanes — the recommendation x* = p_i^T Q uses
         // the full current global model (inference-time download; see
         // DESIGN.md §1).
-        let evaluate = self.t as usize % self.cfg.train.eval_every.max(1) == 0;
         let b = self.runtime.borrow().b;
         self.sw_stage.start();
         let rows: Vec<SelRow> = participants
@@ -841,6 +1211,7 @@ impl Trainer {
             sparse: self.sparse,
             simnet: self.cfg.simnet.clone(),
             fleet: self.fleet.view(),
+            collect_up_frames: self.upload_store.is_some(),
         };
         // The exchange moves the round through the installed lane:
         // in-process, downloads are generation-table lookups and compute
@@ -852,7 +1223,7 @@ impl Trainer {
         let req = ExchangeRequest {
             iter: self.t,
             participants: &participants,
-            selected: &selected,
+            selected,
             frame: match (&session_frame, &stateless_frame) {
                 (Some(enc), _) => &enc.frame,
                 (None, Some(f)) => f,
@@ -966,217 +1337,289 @@ impl Trainer {
         // barrier merge: upload ledger (per-client frames), local factors
         // (flat slot buffer — no per-participant allocation crosses here)
         self.ledger.merge(&agg.ledger);
+        // upload-delta runs carried the batch frames through the barrier
+        // instead of batch-level ledger records: attribute the exact
+        // per-client session-frame bytes now, in participant order
+        if self.upload_store.is_some() {
+            self.attribute_uploads(selected, &participants, b, &agg.up_frames)?;
+        }
         for (i, &cid) in agg.factor_ids.iter().enumerate() {
             self.fleet.set_factors(cid, &agg.factors[i * k..(i + 1) * k]);
         }
-        let round_acc = agg.metrics;
-        let mut g_total = agg.grad;
+        Ok(RoundMid {
+            participants,
+            down_bytes,
+            session_frame,
+            g_total: agg.grad,
+            round_acc: agg.metrics,
+            contributed: ex.contributed,
+            phase_ns: agg.phase_ns,
+            transport_ns: ex.transport_ns,
+        })
+    }
 
-        // (5) aggregate + server-side Adam (Eq. 4).
-        self.sw_update.start();
-        // The divisor is the clients whose uploads actually reached the
-        // aggregate — identical to the participant count fault-free, and
-        // the honest mean under deadline-based partial aggregation.
-        if self.cfg.train.aggregate == Aggregate::Mean && ex.contributed > 0 {
-            let inv = 1.0 / ex.contributed as f32;
-            for v in g_total.iter_mut() {
-                *v *= inv;
-            }
-        }
-        self.adam.step_selected(&mut self.q, &selected, &g_total);
-        self.sw_update.stop();
-
-        // Eq. 13–14 rewards + bandit posterior update. The gradient fed
-        // to the reward engine is optionally 1/Θ-scaled so reward
-        // magnitudes stay commensurate with the N(0, 1/τ_θ) prior (see
-        // BanditConfig::mean_scaled_rewards).
-        self.sw_reward.start();
-        let reward_scale = if self.cfg.bandit.mean_scaled_rewards
-            && self.cfg.train.aggregate == Aggregate::Sum
-            && ex.contributed > 0
-        {
-            1.0 / ex.contributed as f32
-        } else {
-            1.0
+    /// The policy arm of the round mid-section (`[policy] mode !=
+    /// uniform`): encode and measure every precision arm once, let the
+    /// engine decide each participant's arm / top-k / participation,
+    /// then run one exchange per (arm, top-k) cohort and fold the
+    /// outcomes in fixed cohort order — participant order inside a
+    /// cohort and cohort order across the round are both deterministic,
+    /// so policy rounds stay thread- and lane-invariant. Skipped
+    /// participants move no bytes and contribute no gradient: the round
+    /// simply trains on fewer clients.
+    fn policy_mid(
+        &mut self,
+        m: usize,
+        k: usize,
+        evaluate: bool,
+        selected: &[u32],
+        q_raw: &[f32],
+    ) -> Result<RoundMid> {
+        let m_s = selected.len();
+        // participants come off the exact same streams as the uniform
+        // path (see the stream-discipline note there)
+        let participants = match self.cfg.fleet.theta_sample {
+            Some(n) => self
+                .participant_sampler
+                .sample_round(self.t, self.fleet.len(), n),
+            None => self
+                .fleet
+                .sample_participants(self.cfg.train.theta, &mut self.rng),
         };
-        let mut rewards = Vec::with_capacity(selected.len());
-        let mut g_row = vec![0.0f32; k];
-        for (pos, &item) in selected.iter().enumerate() {
-            for (dst, src) in g_row.iter_mut().zip(&g_total[pos * k..(pos + 1) * k]) {
-                *dst = src * reward_scale;
-            }
-            let r = self.reward.observe(item, self.t, &g_row);
-            rewards.push((item, r));
-        }
-        if self.cfg.bandit.normalize_rewards {
-            standardize_rewards(&mut rewards, self.cfg.bandit.reward_std_scale);
-        }
-        self.selector.update(&rewards);
-        self.sw_reward.stop();
-        if self.trace_on(TraceLevel::Decision) {
-            let n = rewards.len();
-            let mut ev = TraceEvent::new("reward_update")
-                .u64("iter", self.t)
-                .u64("n", n as u64)
-                .bool("standardized", self.cfg.bandit.normalize_rewards);
-            if n > 0 {
-                let (mut lo, mut hi, mut sum) = (f64::INFINITY, f64::NEG_INFINITY, 0.0f64);
-                for &(_, r) in &rewards {
-                    lo = lo.min(r);
-                    hi = hi.max(r);
-                    sum += r;
-                }
-                ev = ev
-                    .f64("r_min", lo)
-                    .f64("r_mean", sum / n as f64)
-                    .f64("r_max", hi);
-            }
-            self.emit(TraceLevel::Decision, ev);
-        }
-        if self.registry_on() {
-            for &(_, r) in &rewards {
-                self.registry
-                    .observe("fedpayload_reward_abs", REWARD_BUCKETS, r.abs());
-            }
-        }
 
-        // global metric window (§6.2)
-        let raw = round_acc.mean();
-        if evaluate && round_acc.count() > 0 {
-            if self.metric_history.len() == self.cfg.train.metric_window {
-                self.metric_history.pop_front();
-            }
-            self.metric_history.push_back(raw);
-        }
-        let record = RoundRecord {
-            iter: self.t as usize,
-            m_s: selected.len(),
-            raw,
-            smoothed: self.smoothed_metrics(),
-            round_bytes: self.ledger.total_bytes() - ledger_bytes_before,
-        };
-        debug_log!(
-            "iter {} m_s={} raw={} smoothed={}",
-            record.iter,
-            record.m_s,
-            record.raw,
-            record.smoothed
-        );
-        if self.trace_on(TraceLevel::Decision) {
-            let ev = TraceEvent::new("round_end")
-                .u64("iter", self.t)
-                .u64("m_s", record.m_s as u64)
-                .u64("round_bytes", record.round_bytes)
-                .u64("down_bytes", self.ledger.down_bytes - down_before)
-                .u64("up_bytes", self.ledger.up_bytes - up_before)
-                .bool("evaluated", evaluate)
-                .u64("eval_clients", round_acc.count() as u64)
-                .bits("raw_map_bits", record.raw.map)
-                .bits("smoothed_map_bits", record.smoothed.map)
-                .t_u128("solve_ns", agg.phase_ns[0])
-                .t_u128("grad_ns", agg.phase_ns[1])
-                .t_u128("codec_ns", agg.phase_ns[2])
-                .t_u128("eval_ns", agg.phase_ns[3])
-                // exchange wall-clock: 0 in-process, socket time over TCP
-                // — a timing fact, quarantined with the other `"t"` fields
-                .t_u64("exchange_ns", ex.transport_ns);
-            self.emit(TraceLevel::Decision, ev);
-        }
-        if self.registry_on() {
-            self.registry.inc("fedpayload_rounds_total", 1);
-            self.registry
-                .inc("fedpayload_down_bytes_total", self.ledger.down_bytes - down_before);
-            self.registry
-                .inc("fedpayload_up_bytes_total", self.ledger.up_bytes - up_before);
-            self.registry
-                .observe("fedpayload_down_frame_bytes", BYTE_BUCKETS, down_bytes as f64);
-            self.registry.set_gauge("fedpayload_smoothed_map", record.smoothed.map);
-            if let Some(enc) = &session_frame {
-                let key = format!(
-                    "fedpayload_session_frames_total{{mode=\"{}\"}}",
-                    enc.mode.name()
-                );
-                self.registry.inc(&key, 1);
-                self.registry
-                    .inc(
-                        "fedpayload_session_resyncs_total",
-                        self.session_stats.resync_msgs - stats_before.resync_msgs,
-                    );
-                self.registry.set_gauge(
-                    "fedpayload_session_resync_extra_bytes",
-                    self.session_stats.resync_extra_bytes as f64,
-                );
-                self.registry
-                    .set_gauge("fedpayload_session_generation", f64::from(enc.generation));
-                self.registry.set_gauge(
-                    "fedpayload_session_synced_clients",
-                    self.fleet.synced_clients() as f64,
-                );
-            }
-            if let Some(path) = self.metrics_out.clone() {
-                write_metrics_snapshot(&path, &self.registry, self.t as usize)
-                    .context("writing metrics snapshot")?;
-            }
-        }
-        if journal_active {
-            let entry = journal::RoundEntry {
-                iter: self.t,
-                rng_fp,
-                participants: participants.iter().map(|&c| c as u64).collect(),
-                selected: selected.iter().map(|&i| u64::from(i)).collect(),
-                frame_bytes: down_bytes,
-                session_mode: session_frame.as_ref().map(|e| e.mode.name().to_string()),
-                generation: session_frame.as_ref().map(|e| u64::from(e.generation)),
-                installs: session_frame.as_ref().map(|e| e.installs_generation),
-                resync_msgs: self.session_stats.resync_msgs,
-                resync_extra: self.session_stats.resync_extra_bytes,
-                evaluated: evaluate,
-                eval_clients: round_acc.count() as u64,
-                m_s: record.m_s as u64,
-                raw_bits: [
-                    record.raw.precision.to_bits(),
-                    record.raw.recall.to_bits(),
-                    record.raw.f1.to_bits(),
-                    record.raw.map.to_bits(),
-                ],
-                smoothed_bits: [
-                    record.smoothed.precision.to_bits(),
-                    record.smoothed.recall.to_bits(),
-                    record.smoothed.f1.to_bits(),
-                    record.smoothed.map.to_bits(),
-                ],
-                round_bytes: record.round_bytes,
-                down_bytes: self.ledger.down_bytes,
-                up_bytes: self.ledger.up_bytes,
-                down_msgs: self.ledger.down_msgs,
-                up_msgs: self.ledger.up_msgs,
-                sim_secs_bits: self.ledger.sim_secs.to_bits(),
-                bandit_digest: self.selector.state_digest(),
-                session_digest: self.vq_session.as_ref().map(|s| s.state_digest()),
+        // measure every arm once — encoded dense frame length + decode
+        // SSE against the staged f32 Q*: the evidence both policy modes
+        // (and the trace) decide from, and the decoded factors each
+        // cohort trains against
+        self.sw_codec.start();
+        let mut arm_frames: Vec<Vec<u8>> = Vec::with_capacity(ARMS.len());
+        let mut arm_decoded: Vec<Vec<f32>> = Vec::with_capacity(ARMS.len());
+        let mut costs = [ArmCost::default(); ARMS.len()];
+        for (a, &prec) in ARMS.iter().enumerate() {
+            let codec = make_codec_with(prec, self.cfg.codec.entropy);
+            let frame = codec.encode_dense(q_raw, m_s, k)?;
+            let dec = codec.decode_dense(&frame)?;
+            anyhow::ensure!(
+                dec.rows == m_s && dec.cols == k,
+                "arm {} frame decoded to {}x{}, expected {m_s}x{k}",
+                prec.name(),
+                dec.rows,
+                dec.cols
+            );
+            let sse = q_raw
+                .iter()
+                .zip(&dec.data)
+                .map(|(&x, &y)| (f64::from(x) - f64::from(y)).powi(2))
+                .sum::<f64>();
+            costs[a] = ArmCost {
+                frame_bytes: frame.len() as u64,
+                sse,
             };
-            match expected {
-                // replayed round: verify every recorded field against
-                // the fresh re-execution; append only when rewriting the
-                // journal to a new path (in-place resume already holds
-                // these records)
-                Some(journaled) => {
-                    journal::verify_round(&journaled, &entry)?;
-                    self.replayed += 1;
-                    if self.journal_rewrite {
-                        if let Some(j) = self.journal.as_mut() {
-                            j.append(&entry).context("appending journal record")?;
-                        }
-                    }
-                }
-                None => {
-                    if let Some(j) = self.journal.as_mut() {
-                        j.append(&entry).context("appending journal record")?;
-                    }
-                }
+            arm_frames.push(frame);
+            arm_decoded.push(dec.data);
+        }
+        self.sw_codec.stop();
+
+        let engine = self
+            .policy
+            .as_mut()
+            .expect("policy_mid requires an engine");
+        let decisions = engine.decide(self.t, &participants, &costs, m_s, k);
+        let policy_mode = engine.mode();
+        // cohorts keyed (arm, top-k) in BTreeMap order: the fold below
+        // must not depend on participant order across cohorts
+        let mut cohorts: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+        let mut skipped = 0u64;
+        for d in &decisions {
+            match d.arm {
+                Some(a) => cohorts.entry((a, d.top_k)).or_default().push(d.client),
+                None => skipped += 1,
             }
         }
-        self.history.push(record.clone());
-        Ok(record)
+        if self.trace_on(TraceLevel::Decision) {
+            let mut ev = TraceEvent::new("policy_decide")
+                .u64("iter", self.t)
+                .str("mode", policy_mode.name())
+                .u64("participants", participants.len() as u64)
+                .u64("skipped", skipped)
+                .u64("cohorts", cohorts.len() as u64);
+            // per-arm bytes rationale: who ships what, and what each arm
+            // measured this round
+            for (a, c) in costs.iter().enumerate() {
+                let n: u64 = cohorts
+                    .iter()
+                    .filter(|((arm, _), _)| *arm == a)
+                    .map(|(_, v)| v.len() as u64)
+                    .sum();
+                ev = ev
+                    .u64(&format!("n_{}", ARMS[a].name()), n)
+                    .u64(&format!("bytes_{}", ARMS[a].name()), c.frame_bytes)
+                    .bits(&format!("sse_{}_bits", ARMS[a].name()), c.sse);
+            }
+            self.emit(TraceLevel::Decision, ev);
+        }
+        if self.registry_on() {
+            self.registry.inc("fedpayload_policy_skipped_total", skipped);
+        }
+
+        // one exchange per cohort, folded in cohort order
+        let b = self.runtime.borrow().b;
+        let mut g_total = vec![0.0f32; m_s * k];
+        let mut round_acc = MetricAccumulator::new();
+        let mut contributed = 0usize;
+        let mut phase_ns = [0u128; 4];
+        let mut transport_ns = 0u64;
+        let mut down_bytes = 0u64;
+        for (&(arm, top_k), clients) in &cohorts {
+            self.sw_stage.start();
+            let rows: Vec<SelRow> = clients
+                .iter()
+                .map(|&cid| self.fleet.client(cid).selected_row(&self.sel_pos))
+                .collect();
+            self.sw_stage.stop();
+            let task = RoundTask {
+                q_sel: arm_decoded[arm].clone(),
+                k,
+                m,
+                q_full: if evaluate {
+                    self.q.data().to_vec()
+                } else {
+                    Vec::new()
+                },
+                evaluate,
+                rows,
+                client_ids: clients.clone(),
+                batch: b,
+                precision: ARMS[arm],
+                entropy: self.cfg.codec.entropy,
+                sparse: SparsePolicy {
+                    top_k,
+                    threshold: self.cfg.codec.sparse_threshold as f32,
+                    auto_topk: false,
+                },
+                simnet: self.cfg.simnet.clone(),
+                fleet: self.fleet.view(),
+                collect_up_frames: self.upload_store.is_some(),
+            };
+            let req = ExchangeRequest {
+                iter: self.t,
+                participants: clients,
+                selected,
+                frame: &arm_frames[arm],
+                down_bytes: costs[arm].frame_bytes,
+                session: None,
+                q_sel: &arm_decoded[arm],
+                fleet: &self.fleet,
+                task,
+            };
+            let cohort_codec = make_codec_with(ARMS[arm], self.cfg.codec.entropy);
+            self.sw_fleet.start();
+            let ex = self
+                .lane
+                .exchange(req, &mut self.runtime.borrow_mut(), cohort_codec.as_ref())?;
+            self.sw_fleet.stop();
+            for &cid in &ex.invalidated {
+                self.fleet.invalidate_download_cache(cid);
+            }
+            for rec in &ex.downloads {
+                self.ledger.record_down(&self.cfg.simnet, rec.bytes);
+                down_bytes += rec.bytes;
+            }
+            let agg = ex.agg;
+            let n_batches = agg.batches.len() as u64;
+            self.sw_solve.absorb_ns(agg.phase_ns[0], n_batches);
+            self.sw_grad.absorb_ns(agg.phase_ns[1], n_batches);
+            self.sw_codec.absorb_ns(agg.phase_ns[2], n_batches);
+            self.sw_eval.absorb_ns(agg.phase_ns[3], if evaluate { n_batches } else { 0 });
+            for (dst, &ns) in phase_ns.iter_mut().zip(&agg.phase_ns) {
+                *dst += ns;
+            }
+            self.ledger.merge(&agg.ledger);
+            if self.upload_store.is_some() {
+                self.attribute_uploads(selected, clients, b, &agg.up_frames)?;
+            }
+            for (i, &cid) in agg.factor_ids.iter().enumerate() {
+                self.fleet.set_factors(cid, &agg.factors[i * k..(i + 1) * k]);
+            }
+            round_acc.merge(&agg.metrics);
+            for (dst, &src) in g_total.iter_mut().zip(&agg.grad) {
+                *dst += src;
+            }
+            contributed += ex.contributed;
+            transport_ns += ex.transport_ns;
+        }
+        Ok(RoundMid {
+            participants,
+            down_bytes,
+            session_frame: None,
+            g_total,
+            round_acc,
+            contributed,
+            phase_ns,
+            transport_ns,
+        })
+    }
+
+    /// Upload-delta attribution for one exchange's carried batch frames:
+    /// parse each batch's raw ∇Q* value plane once (byte-lossless — no
+    /// re-quantization), then re-frame it per client against that
+    /// client's reference — forced full on device/server generation
+    /// mismatch (a **resync**), otherwise whichever of full/delta
+    /// measures smaller — and record the exact session-frame length. The
+    /// mirror decode re-proves byte-exact reconstruction every time, so
+    /// delta mode can never change training, only ledger bytes.
+    fn attribute_uploads(
+        &mut self,
+        selected: &[u32],
+        clients: &[usize],
+        batch: usize,
+        up_frames: &[Vec<u8>],
+    ) -> Result<()> {
+        let entropy = self.cfg.codec.entropy;
+        anyhow::ensure!(batch > 0, "attribute_uploads: batch width must be > 0");
+        anyhow::ensure!(
+            up_frames.len() == clients.len().div_ceil(batch),
+            "upload-delta: {} batch frames carried for {} clients at batch width {batch}",
+            up_frames.len(),
+            clients.len()
+        );
+        let store = self
+            .upload_store
+            .as_mut()
+            .expect("attribute_uploads requires the store");
+        for (i, frame) in up_frames.iter().enumerate() {
+            let plane = crate::wire::upload::plane_of_batch_frame(frame, selected)?;
+            let lo = i * batch;
+            let hi = ((i + 1) * batch).min(clients.len());
+            for &cid in &clients[lo..hi] {
+                let device = self.fleet.upload_gen(cid);
+                let server = store.generation(cid);
+                let resync = device != server;
+                let reference = if resync { None } else { store.reference(cid) };
+                let enc = crate::wire::upload::encode_upload(&plane, entropy, reference)?;
+                match crate::wire::upload::decode_upload(&enc.frame, reference)? {
+                    crate::wire::upload::UploadDecode::Data(ref p) if *p == plane => {}
+                    other => anyhow::bail!(
+                        "upload session frame for client {cid} failed to reconstruct \
+                         its plane (bug): {other:?}"
+                    ),
+                }
+                self.ledger.record_up(&self.cfg.simnet, enc.frame.len() as u64);
+                if resync {
+                    store.stats.resyncs += 1;
+                }
+                match enc.mode {
+                    SessionMode::Delta => {
+                        store.stats.delta_frames += 1;
+                        store.stats.delta_saved_bytes += enc.full_bytes - enc.frame.len() as u64;
+                    }
+                    _ => store.stats.full_frames += 1,
+                }
+                store.install(cid, &plane, enc.generation);
+                self.fleet.set_upload_gen(cid, enc.generation);
+            }
+        }
+        Ok(())
     }
 }
 
@@ -1482,6 +1925,145 @@ mod tests {
             assert_eq!(a.m_s, b.m_s);
         }
         assert_eq!(off.ledger.up_bytes, delta.ledger.up_bytes);
+    }
+
+    #[test]
+    fn policy_modes_train_reproducibly_and_thread_invariant() {
+        for mode in ["budget", "bandit"] {
+            let mut c1 = tiny_cfg();
+            c1.policy.mode = crate::server::policy::PolicyMode::parse(mode).unwrap();
+            c1.runtime.threads = 1;
+            let mut c4 = c1.clone();
+            c4.runtime.threads = 4;
+            let r1 = Trainer::from_config(&c1).unwrap().run().unwrap();
+            let r4 = Trainer::from_config(&c4).unwrap().run().unwrap();
+            assert_eq!(r1.policy, mode);
+            assert_eq!(
+                round_dump_string(&r1),
+                round_dump_string(&r4),
+                "{mode} rounds depend on the thread count"
+            );
+            let again = Trainer::from_config(&c1).unwrap().run().unwrap();
+            assert_eq!(round_dump_string(&r1), round_dump_string(&again));
+        }
+    }
+
+    #[test]
+    fn policy_budget_skips_low_battery_clients_and_accounts_them() {
+        let mut cfg = tiny_cfg();
+        cfg.policy.mode = crate::server::policy::PolicyMode::Budget;
+        cfg.policy.battery_floor = 0.9; // battery ~ U[0,1): most clients sit out
+        let report = Trainer::from_config(&cfg).unwrap().run().unwrap();
+        assert!(
+            report.policy_skips > 0,
+            "a 0.9 battery floor skipped nobody across 4 rounds x 16 participants"
+        );
+        // skipped clients move no bytes: fewer download messages than
+        // the uniform 4 x 16
+        assert!(
+            report.ledger.down_msgs < 64,
+            "{} download msgs despite {} skips",
+            report.ledger.down_msgs,
+            report.policy_skips
+        );
+        assert_eq!(
+            report.ledger.down_msgs + report.policy_skips,
+            64,
+            "every participant either downloaded or was skipped"
+        );
+    }
+
+    #[test]
+    fn upload_delta_trains_bit_identically_to_stateless_uploads() {
+        // The delta encoder re-frames the exact raw value plane the
+        // batch frame carried, so turning it on must not change one bit
+        // of the training trajectory — only the upload ledger moves.
+        // Stable workload (same rows every round, everyone participates)
+        // so consecutive uploads resemble each other and the range coder
+        // actually ships deltas.
+        let mut base = tiny_cfg();
+        base.dataset.users = 32;
+        base.dataset.items = 64;
+        base.dataset.interactions = 1200;
+        base.train.iterations = 5;
+        base.train.theta = 32;
+        base.train.payload_fraction = 1.0;
+        base.bandit.strategy = Strategy::Full;
+        base.codec.precision = crate::wire::Precision::Int8;
+        base.codec.entropy = crate::wire::EntropyMode::Full;
+        let mut delta_cfg = base.clone();
+        delta_cfg.codec.upload_delta = true;
+        let off = Trainer::from_config(&base).unwrap().run().unwrap();
+        let on = Trainer::from_config(&delta_cfg).unwrap().run().unwrap();
+        assert!(off.upload.is_none());
+        let stats = on.upload.unwrap();
+        for (a, b) in off.history.iter().zip(&on.history) {
+            assert_eq!(a.raw.map.to_bits(), b.raw.map.to_bits(), "iter {}", a.iter);
+            assert_eq!(a.m_s, b.m_s);
+        }
+        assert_eq!(off.ledger.up_msgs, on.ledger.up_msgs);
+        assert_eq!(off.ledger.down_bytes, on.ledger.down_bytes);
+        // one session frame per participant per round, no churn => no
+        // resyncs; the stable plane must win at least one delta
+        assert_eq!(
+            stats.full_frames + stats.delta_frames,
+            on.ledger.up_msgs,
+            "{stats:?}"
+        );
+        assert_eq!(stats.resyncs, 0, "{stats:?}");
+        assert!(stats.delta_frames >= 1, "no deltas on a stable plane: {stats:?}");
+        assert!(
+            on.ledger.up_bytes < off.ledger.up_bytes + stats.delta_saved_bytes,
+            "delta savings not reflected in the ledger"
+        );
+    }
+
+    #[test]
+    fn upload_delta_forced_resync_is_counted_and_attribution_is_exact() {
+        // Invalidate one device's upload-session cache mid-run: the next
+        // round must serve a counted full-frame resync for that client,
+        // training must not notice, and the per-client up_bytes
+        // attribution must stay bit-identical across thread counts.
+        let run = |threads: usize, churn: bool| {
+            let mut cfg = tiny_cfg();
+            cfg.train.theta = 48; // everyone uploads every round
+            cfg.codec.precision = crate::wire::Precision::Int8;
+            cfg.codec.entropy = crate::wire::EntropyMode::Full;
+            cfg.codec.upload_delta = true;
+            cfg.runtime.threads = threads;
+            let mut tr = Trainer::from_config(&cfg).unwrap();
+            tr.round().unwrap();
+            tr.round().unwrap();
+            let before = tr.upload_stats().unwrap();
+            assert_eq!(before.resyncs, 0);
+            if churn {
+                tr.invalidate_client_upload(0);
+            }
+            tr.round().unwrap();
+            let after = tr.upload_stats().unwrap();
+            let up_bytes = tr.ledger().up_bytes;
+            let maps: Vec<u64> =
+                tr.history().iter().map(|r| r.raw.map.to_bits()).collect();
+            (before, after, up_bytes, maps, tr.upload_generation(0))
+        };
+        let (_, clean_after, clean_bytes, clean_maps, clean_gen) = run(1, false);
+        assert_eq!(clean_after.resyncs, 0);
+        let (_, churn_after, churn_bytes, churn_maps, churn_gen) = run(1, true);
+        assert_eq!(churn_after.resyncs, 1, "{churn_after:?}");
+        assert_eq!(clean_maps, churn_maps, "a resync changed training");
+        // generations realign after the forced full frame
+        assert_eq!(clean_gen, churn_gen);
+        // exact attribution is thread-invariant, churn or not
+        let (_, t4_after, t4_bytes, t4_maps, _) = run(4, true);
+        assert_eq!(t4_after, churn_after);
+        assert_eq!(t4_bytes, churn_bytes);
+        assert_eq!(t4_maps, churn_maps);
+        // the resync round re-shipped client 0's rows as a full frame:
+        // its bytes can only match or exceed the clean run's
+        assert!(
+            churn_bytes >= clean_bytes,
+            "churn {churn_bytes} < clean {clean_bytes}"
+        );
     }
 
     #[test]

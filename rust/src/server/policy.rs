@@ -1,0 +1,474 @@
+//! Per-client payload policies: each round, for every participant, a
+//! policy decides *how* the round ships — which download precision arm
+//! (int8 / vq8r / vq8 / vq4), how many upload rows survive (top-k), and
+//! whether the client participates at all — under a simulated per-client
+//! bandwidth/battery budget, scored by the **measured** encoded-bytes
+//! ledger (never the analytic formula).
+//!
+//! ## Modes (`[policy] mode = uniform|budget|bandit`)
+//!
+//! * `uniform` — the legacy path: every client gets the configured codec
+//!   (`Trainer::round` does not consult this module at all; uniform runs
+//!   stay byte-identical to previous releases).
+//! * `budget` — deterministic greedy: the most expensive (highest
+//!   fidelity) arm whose measured frame fits the client's drawn downlink
+//!   budget; the largest top-k class whose analytic upload length fits
+//!   the uplink budget; skip when nothing fits or battery is below the
+//!   floor.
+//! * `bandit` — per-budget-class Gaussian Thompson sampling over the
+//!   arms, mirroring the paper's item bandit one level up: the reward is
+//!   a pure function of the arms' measured frame bytes and decode SSE
+//!   this round, so posteriors learn the cheapest arm that still tracks
+//!   Q* per class (the bytes-per-MAP frontier the ROADMAP targets).
+//!
+//! ## Determinism contract
+//!
+//! All randomness comes from a dedicated tagged PCG stream (same
+//! pattern as [`crate::rng::ParticipantSampler`]): every draw is a pure
+//! function of `(master seed, round, client)` or `(master seed, round,
+//! class, arm)` — never of a shared mutable stream position, thread
+//! count, or iteration order. Replaying a journaled policy run re-derives
+//! identical decisions, and `state_digest` journals the posterior
+//! evolution as evidence.
+
+use crate::config::{PolicyConfig, SimNetConfig};
+use crate::rng::SplitMix64;
+use crate::wire::{encoded_sparse_len, Precision};
+
+/// Domain-separation tag for the policy stream (cf.
+/// `PARTICIPANT_STREAM_TAG` — different constant, same construction).
+const POLICY_STREAM_TAG: u64 = 0x5047_504f_4c49_0001; // "PG\x50OLI" + 1
+
+/// The download precision arms a policy chooses between, ordered by
+/// decreasing fidelity (and, for dense frames at matched entropy, by
+/// decreasing measured bytes — the budget policy exploits that order).
+pub const ARMS: [Precision; 4] = [
+    Precision::Int8,
+    Precision::Vq8r,
+    Precision::Vq8,
+    Precision::Vq4,
+];
+
+/// Budget classes the bandit maintains separate posteriors for (drawn
+/// bandwidth quartiles).
+pub const N_CLASSES: usize = 4;
+
+/// Top-k classes as fractions of m_s (denominators): full, half,
+/// quarter. Quantized so clients group into a bounded number of cohorts.
+const TOPK_DENOMS: [usize; 3] = [1, 2, 4];
+
+/// Policy mode (`[policy] mode`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PolicyMode {
+    /// Legacy single-codec path; the policy layer is inert.
+    #[default]
+    Uniform,
+    /// Deterministic budget-greedy arm/top-k/participation choice.
+    Budget,
+    /// Per-class Thompson sampling over the arms.
+    Bandit,
+}
+
+impl PolicyMode {
+    /// Parse a config/CLI value.
+    pub fn parse(s: &str) -> anyhow::Result<PolicyMode> {
+        match s {
+            "uniform" => Ok(PolicyMode::Uniform),
+            "budget" => Ok(PolicyMode::Budget),
+            "bandit" => Ok(PolicyMode::Bandit),
+            other => anyhow::bail!("unknown policy.mode `{other}` (uniform|budget|bandit)"),
+        }
+    }
+
+    /// Canonical name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyMode::Uniform => "uniform",
+            PolicyMode::Budget => "budget",
+            PolicyMode::Bandit => "bandit",
+        }
+    }
+}
+
+/// Measured per-arm evidence for one round: the encoded dense frame
+/// length and the decode SSE against the staged f32 Q*.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ArmCost {
+    /// Measured encoded dense-frame length for this arm.
+    pub frame_bytes: u64,
+    /// Σ (decoded − staged)² over the frame.
+    pub sse: f64,
+}
+
+/// One participant's decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PolicyDecision {
+    /// Client id.
+    pub client: usize,
+    /// Index into [`ARMS`] (`None` = the client sits this round out).
+    pub arm: Option<usize>,
+    /// Upload top-k rows this client's cohort keeps (0 when skipped;
+    /// `m_s` = unconstrained).
+    pub top_k: usize,
+}
+
+/// Per-client draws for one round: the budget the decision was made
+/// under (traced as the decision's rationale).
+#[derive(Debug, Clone, Copy)]
+pub struct ClientBudget {
+    /// Drawn effective bandwidth fraction in `[min_bandwidth_frac, 1)`.
+    pub bandwidth_frac: f64,
+    /// Drawn battery level in `[0, 1)`.
+    pub battery: f64,
+    /// Downlink/uplink byte budget for the window.
+    pub budget_bytes: u64,
+}
+
+/// The per-client payload policy engine. Owns the dedicated stream seed
+/// and (for `bandit`) the per-class arm posteriors.
+#[derive(Debug, Clone)]
+pub struct PolicyEngine {
+    mode: PolicyMode,
+    cfg: PolicyConfig,
+    bandwidth_mbps: f64,
+    stream_seed: u64,
+    /// Reward observations per (class, arm): count and running sum.
+    obs_n: [[u64; ARMS.len()]; N_CLASSES],
+    obs_sum: [[f64; ARMS.len()]; N_CLASSES],
+    /// Cumulative participants the policy sat out.
+    skips: u64,
+}
+
+impl PolicyEngine {
+    /// Build the engine for a run. `seed` is the run's master seed; the
+    /// policy stream is derived through its own tag so it never collides
+    /// with the trainer's main stream or the participant sampler.
+    pub fn new(cfg: &PolicyConfig, simnet: &SimNetConfig, seed: u64) -> PolicyEngine {
+        let mut sm = SplitMix64::new(seed ^ POLICY_STREAM_TAG);
+        PolicyEngine {
+            mode: cfg.mode,
+            cfg: cfg.clone(),
+            bandwidth_mbps: simnet.bandwidth_mbps,
+            stream_seed: sm.next_u64(),
+            obs_n: [[0; ARMS.len()]; N_CLASSES],
+            obs_sum: [[0.0; ARMS.len()]; N_CLASSES],
+            skips: 0,
+        }
+    }
+
+    /// Active mode.
+    pub fn mode(&self) -> PolicyMode {
+        self.mode
+    }
+
+    /// Cumulative skipped participants.
+    pub fn skips(&self) -> u64 {
+        self.skips
+    }
+
+    /// A unit-interval draw, pure in `(stream, round, salt)`.
+    fn unit(&self, round_child: u64, salt: u64) -> f64 {
+        let mut sm = SplitMix64::new(round_child ^ salt);
+        (sm.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Standard normal draw, pure in `(stream, round, salt)` (Box–Muller).
+    fn gauss(&self, round_child: u64, salt: u64) -> f64 {
+        let mut sm = SplitMix64::new(round_child ^ salt);
+        let u1 = ((sm.next_u64() >> 11) as f64 + 1.0) / (1u64 << 53) as f64; // (0, 1]
+        let u2 = (sm.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// This round's drawn budget for one client — a pure function of
+    /// `(master seed, round, client)`, independent of participant order.
+    pub fn client_budget(&self, round: u64, client: usize) -> ClientBudget {
+        let child = SplitMix64::new(self.stream_seed.wrapping_add(round)).next_u64();
+        let u = self.unit(child, 0x0100_0000_0000_0000 | client as u64);
+        let battery = self.unit(child, 0x0200_0000_0000_0000 | client as u64);
+        let frac = self.cfg.min_bandwidth_frac + (1.0 - self.cfg.min_bandwidth_frac) * u;
+        let bytes_per_sec = self.bandwidth_mbps * frac * 1e6 / 8.0;
+        ClientBudget {
+            bandwidth_frac: frac,
+            battery,
+            budget_bytes: (bytes_per_sec * self.cfg.budget_window_ms / 1000.0) as u64,
+        }
+    }
+
+    /// Budget class (bandwidth quartile) of a drawn budget.
+    fn class_of(&self, b: &ClientBudget) -> usize {
+        let span = (1.0 - self.cfg.min_bandwidth_frac).max(f64::MIN_POSITIVE);
+        let u = ((b.bandwidth_frac - self.cfg.min_bandwidth_frac) / span).clamp(0.0, 1.0);
+        ((u * N_CLASSES as f64) as usize).min(N_CLASSES - 1)
+    }
+
+    /// Normalized arm rewards for this round's measured costs: cheaper
+    /// and more faithful is better, both terms scaled to `[−1, 0]` so
+    /// `sse_weight` trades them off directly.
+    fn arm_rewards(&self, costs: &[ArmCost; ARMS.len()]) -> [f64; ARMS.len()] {
+        let max_b = costs.iter().map(|c| c.frame_bytes).max().unwrap_or(1).max(1) as f64;
+        let max_s = costs.iter().map(|c| c.sse).fold(0.0f64, f64::max).max(f64::MIN_POSITIVE);
+        let mut r = [0.0; ARMS.len()];
+        for (i, c) in costs.iter().enumerate() {
+            r[i] = -(c.frame_bytes as f64 / max_b) - self.cfg.sse_weight * (c.sse / max_s);
+        }
+        r
+    }
+
+    /// Largest quantized top-k whose analytic int8 upload frame fits
+    /// `budget` (`None` = not even the quarter frame fits).
+    fn top_k_for(&self, m_s: usize, cols: usize, budget: u64) -> Option<usize> {
+        for &d in &TOPK_DENOMS {
+            let tk = (m_s / d).max(1);
+            if encoded_sparse_len(tk, cols, Precision::Int8) as u64 <= budget {
+                return Some(tk);
+            }
+        }
+        None
+    }
+
+    /// Decide the round: one [`PolicyDecision`] per participant, in
+    /// participant order. For `bandit`, the per-class posteriors are
+    /// updated with the measured rewards of every arm that was actually
+    /// chosen this round (the observation step — rewards here are known
+    /// at decision time because they are functions of the round's
+    /// measured arm costs).
+    pub fn decide(
+        &mut self,
+        round: u64,
+        participants: &[usize],
+        costs: &[ArmCost; ARMS.len()],
+        m_s: usize,
+        cols: usize,
+    ) -> Vec<PolicyDecision> {
+        let child = SplitMix64::new(self.stream_seed.wrapping_add(round)).next_u64();
+        // Thompson samples per (class, arm), shared by every client of
+        // the class this round — pure in (seed, round, class, arm).
+        let mut theta = [[0.0f64; ARMS.len()]; N_CLASSES];
+        if self.mode == PolicyMode::Bandit {
+            for (c, row) in theta.iter_mut().enumerate() {
+                for (a, t) in row.iter_mut().enumerate() {
+                    let n = self.obs_n[c][a] as f64;
+                    let mean = self.obs_sum[c][a] / (1.0 + n); // mu0 = 0, tau0 = 1
+                    let z = self.gauss(child, 0x0300_0000_0000_0000 | (c * ARMS.len() + a) as u64);
+                    *t = mean + z / (1.0 + n).sqrt();
+                }
+            }
+        }
+        let rewards = self.arm_rewards(costs);
+        let mut chosen = [[false; ARMS.len()]; N_CLASSES];
+        let mut out = Vec::with_capacity(participants.len());
+        for &client in participants {
+            let budget = self.client_budget(round, client);
+            if budget.battery < self.cfg.battery_floor {
+                self.skips += 1;
+                out.push(PolicyDecision {
+                    client,
+                    arm: None,
+                    top_k: 0,
+                });
+                continue;
+            }
+            let top_k = self.top_k_for(m_s, cols, budget.budget_bytes);
+            let fitting: Vec<usize> = (0..ARMS.len())
+                .filter(|&a| costs[a].frame_bytes <= budget.budget_bytes)
+                .collect();
+            let arm = match (top_k, fitting.is_empty()) {
+                (None, _) | (_, true) => None,
+                (Some(_), false) => match self.mode {
+                    // greedy: the highest-fidelity (most expensive) arm
+                    // that fits — ARMS is fidelity-ordered and frame
+                    // bytes are measured, so pick by measured bytes
+                    PolicyMode::Budget | PolicyMode::Uniform => fitting
+                        .iter()
+                        .copied()
+                        .max_by_key(|&a| (costs[a].frame_bytes, usize::MAX - a)),
+                    PolicyMode::Bandit => {
+                        let class = self.class_of(&budget);
+                        fitting.iter().copied().max_by(|&a, &b| {
+                            theta[class][a]
+                                .partial_cmp(&theta[class][b])
+                                .unwrap_or(std::cmp::Ordering::Equal)
+                        })
+                    }
+                },
+            };
+            match arm {
+                Some(a) => {
+                    if self.mode == PolicyMode::Bandit {
+                        chosen[self.class_of(&budget)][a] = true;
+                    }
+                    out.push(PolicyDecision {
+                        client,
+                        arm: Some(a),
+                        top_k: top_k.unwrap_or(m_s),
+                    });
+                }
+                None => {
+                    self.skips += 1;
+                    out.push(PolicyDecision {
+                        client,
+                        arm: None,
+                        top_k: 0,
+                    });
+                }
+            }
+        }
+        // observation step: fold this round's measured reward into every
+        // (class, arm) pair that shipped, in fixed (class, arm) order
+        if self.mode == PolicyMode::Bandit {
+            for c in 0..N_CLASSES {
+                for a in 0..ARMS.len() {
+                    if chosen[c][a] {
+                        self.obs_n[c][a] += 1;
+                        self.obs_sum[c][a] += rewards[a];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Order-stable digest of the policy state (journal evidence: a
+    /// replayed policy round must re-derive the identical posteriors).
+    pub fn state_digest(&self) -> u64 {
+        let mut h = crate::telemetry::Fnv64::new();
+        h.write_u8(match self.mode {
+            PolicyMode::Uniform => 0,
+            PolicyMode::Budget => 1,
+            PolicyMode::Bandit => 2,
+        });
+        h.write_u64(self.stream_seed);
+        h.write_u64(self.skips);
+        for c in 0..N_CLASSES {
+            for a in 0..ARMS.len() {
+                h.write_u64(self.obs_n[c][a]);
+                h.write_u64(self.obs_sum[c][a].to_bits());
+            }
+        }
+        h.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+
+    fn engine(mode: PolicyMode) -> PolicyEngine {
+        let mut cfg = RunConfig::paper_defaults();
+        cfg.policy.mode = mode;
+        PolicyEngine::new(&cfg.policy, &cfg.simnet, 2027)
+    }
+
+    fn flat_costs() -> [ArmCost; ARMS.len()] {
+        [
+            ArmCost { frame_bytes: 1000, sse: 0.1 },
+            ArmCost { frame_bytes: 700, sse: 0.3 },
+            ArmCost { frame_bytes: 400, sse: 0.8 },
+            ArmCost { frame_bytes: 200, sse: 2.0 },
+        ]
+    }
+
+    #[test]
+    fn draws_are_pure_and_order_independent() {
+        let e = engine(PolicyMode::Budget);
+        let a = e.client_budget(3, 17);
+        let b = e.client_budget(3, 17);
+        assert_eq!(a.budget_bytes, b.budget_bytes);
+        assert_eq!(a.bandwidth_frac.to_bits(), b.bandwidth_frac.to_bits());
+        // different round or client → different draw
+        assert_ne!(
+            e.client_budget(4, 17).bandwidth_frac.to_bits(),
+            a.bandwidth_frac.to_bits()
+        );
+        assert_ne!(
+            e.client_budget(3, 18).bandwidth_frac.to_bits(),
+            a.bandwidth_frac.to_bits()
+        );
+        // fraction respects the configured floor
+        assert!(a.bandwidth_frac >= 0.25 && a.bandwidth_frac < 1.0);
+    }
+
+    #[test]
+    fn decisions_are_deterministic_and_digest_tracks_posteriors() {
+        let participants: Vec<usize> = (0..40).collect();
+        let costs = flat_costs();
+        let mut e1 = engine(PolicyMode::Bandit);
+        let mut e2 = engine(PolicyMode::Bandit);
+        for round in 1..=5u64 {
+            let d1 = e1.decide(round, &participants, &costs, 24, 25);
+            let d2 = e2.decide(round, &participants, &costs, 24, 25);
+            assert_eq!(d1, d2, "round {round}");
+        }
+        assert_eq!(e1.state_digest(), e2.state_digest());
+        let before = e1.state_digest();
+        e1.decide(6, &participants, &costs, 24, 25);
+        assert_ne!(before, e1.state_digest(), "posteriors must evolve");
+    }
+
+    #[test]
+    fn budget_mode_picks_best_fitting_arm_and_skips_over_budget() {
+        let mut cfg = RunConfig::paper_defaults();
+        cfg.policy.mode = PolicyMode::Budget;
+        // shrink the window so budgets land between the arm costs
+        cfg.policy.budget_window_ms = 0.005; // 1 Mbps · frac → 0.625·frac bytes/ms
+        let mut e = PolicyEngine::new(&cfg.policy, &cfg.simnet, 7);
+        let costs = flat_costs();
+        let decisions = e.decide(1, &(0..200).collect::<Vec<_>>(), &costs, 24, 25);
+        let mut seen_arms = std::collections::BTreeSet::new();
+        for d in &decisions {
+            if let Some(a) = d.arm {
+                let budget = e.client_budget(1, d.client).budget_bytes;
+                assert!(costs[a].frame_bytes <= budget, "chosen arm must fit");
+                // greedy: no more expensive arm also fits
+                for b in 0..ARMS.len() {
+                    if costs[b].frame_bytes > costs[a].frame_bytes {
+                        assert!(costs[b].frame_bytes > budget);
+                    }
+                }
+                seen_arms.insert(a);
+            }
+        }
+        assert!(seen_arms.len() > 1, "budget spread must exercise several arms");
+        assert!(e.skips() > 0, "tight budgets must skip some clients");
+        assert!(decisions.iter().any(|d| d.arm.is_none()));
+    }
+
+    #[test]
+    fn battery_floor_skips_participation() {
+        let mut cfg = RunConfig::paper_defaults();
+        cfg.policy.mode = PolicyMode::Budget;
+        cfg.policy.battery_floor = 1.0; // nobody qualifies
+        let mut e = PolicyEngine::new(&cfg.policy, &cfg.simnet, 9);
+        let d = e.decide(1, &[0, 1, 2], &flat_costs(), 24, 25);
+        assert!(d.iter().all(|x| x.arm.is_none()));
+        assert_eq!(e.skips(), 3);
+    }
+
+    #[test]
+    fn bandit_learns_toward_higher_reward_arms() {
+        // arm 3 is 5× cheaper at equal SSE: rewards should pull the
+        // posterior means apart and the bandit should prefer it
+        let costs = [
+            ArmCost { frame_bytes: 1000, sse: 0.1 },
+            ArmCost { frame_bytes: 900, sse: 0.1 },
+            ArmCost { frame_bytes: 800, sse: 0.1 },
+            ArmCost { frame_bytes: 200, sse: 0.1 },
+        ];
+        let mut e = engine(PolicyMode::Bandit);
+        let participants: Vec<usize> = (0..64).collect();
+        let mut last_round_cheap = 0usize;
+        for round in 1..=30u64 {
+            let d = e.decide(round, &participants, &costs, 24, 25);
+            if round == 30 {
+                last_round_cheap = d.iter().filter(|x| x.arm == Some(3)).count();
+            }
+        }
+        let participated = 64 - 0; // battery floor 0: nobody skips on battery
+        assert!(
+            last_round_cheap * 2 > participated,
+            "bandit should mostly pick the dominating cheap arm, got {last_round_cheap}/64"
+        );
+    }
+}

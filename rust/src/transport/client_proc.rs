@@ -394,6 +394,9 @@ impl ClientEngine {
             sparse: self.sparse,
             simnet: self.simnet.clone(),
             fleet: self.fleet.view(),
+            // the TCP lane rejects upload-delta runs at startup; hosted
+            // clients always attribute uploads at batch level
+            collect_up_frames: false,
         })
     }
 

@@ -759,6 +759,7 @@ impl RoundLane for TcpLane {
                                 metrics,
                                 phase_ns: phase_ns.map(u128::from),
                                 lane: slot + 1,
+                                up_frame: None,
                             });
                             missing.remove(&index);
                         }

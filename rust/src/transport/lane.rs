@@ -364,6 +364,7 @@ mod tests {
             metrics,
             phase_ns: [10, 20, 30, 40],
             lane: 1,
+            up_frame: None,
         }
     }
 

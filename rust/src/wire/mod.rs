@@ -70,12 +70,17 @@ pub mod entropy;
 pub mod frame;
 pub mod quant;
 pub mod sparse;
+pub mod upload;
 pub mod vq;
 
 pub use entropy::EntropyMode;
 pub use frame::{FrameHeader, PayloadKind, SessionMode, HEADER_LEN, SESSION_HEADER_LEN};
 pub use quant::{f16_to_f32, f32_to_f16, Precision};
 pub use sparse::SparsePolicy;
+pub use upload::{
+    plane_of_batch_frame, EncodedUpload, UploadDecode, UploadPlane, UploadRef, UploadStats,
+    UploadStore,
+};
 pub use vq::session::{
     EncodedDownload, ReuseMode, SessionDecode, SessionRationale, VqClientState, VqSession,
 };

@@ -1,0 +1,665 @@
+//! SecEmb-style per-client **upload delta sessions**: ship each client's
+//! sparse ∇Q* as byte deltas against that client's previous upload.
+//!
+//! The fleet executor already round-trips one sparse frame per *batch*
+//! (the server trains on its decoded gradient — see `runtime::fleet`).
+//! This module operates strictly downstream of that decode, on the raw
+//! quantized **symbol plane** of the batch frame: the per-row
+//! `[f16 scale | int8 symbols]` bytes the quantizer produced, keyed by
+//! global item id. Because the plane is carried as raw bytes, a delta
+//! frame reconstructs the full plane **bit-exactly** (wrapping u8
+//! arithmetic is lossless), so delta uploads can never change training —
+//! only the ledger's measured per-client frame lengths.
+//!
+//! Frame format: version-2 session frames (`frame::seal_session`,
+//! `PayloadKind::Sparse`) with the sparse payload layout of
+//! `wire::sparse` — `nnz | index block | value block` — where indices
+//! are **item ids** (not selected positions) and the value block holds
+//! either the raw plane rows (`SessionMode::Full`) or, for rows whose
+//! item the reference also holds, the wrapping byte difference against
+//! the reference row (`SessionMode::Delta`). A delta row and a full row
+//! are the same length in plain bytes — int8 symbols are already one
+//! byte — so deltas only *win* under a range-coding entropy mode, where
+//! the near-zero difference bytes compress hard; the encoder measures
+//! both candidates and ships the smaller, mirroring the download-side
+//! codebook session's measured-bytes rationale (PR 5).
+//!
+//! Staleness mirrors `wire::vq::session::SessionDecode::Stale`: a delta
+//! frame is decodable only against reference generation `g − 1`; any
+//! other state yields the typed [`UploadDecode::Stale`] (never garbage),
+//! and the caller re-encodes as `Full` — the upload-side resync.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, ensure, Result};
+
+use super::entropy::{self, EntropyMode};
+use super::frame::{self, PayloadKind, SessionMode};
+use super::quant::{self, Precision};
+
+/// The raw quantized symbol plane of one sparse upload, keyed by global
+/// item id: `indices[i]` owns `values[i*stride .. (i+1)*stride]` where
+/// the stride is `precision.row_bytes(cols)`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct UploadPlane {
+    /// Latent dimension K.
+    pub cols: usize,
+    /// Value-plane precision (the *upload* precision — int8 under every
+    /// vq download codec, see `Precision::for_uploads`).
+    pub precision: Precision,
+    /// Surviving rows' item ids, ascending.
+    pub indices: Vec<u32>,
+    /// Raw quantized row bytes, `indices.len() * precision.row_bytes(cols)`.
+    pub values: Vec<u8>,
+}
+
+impl UploadPlane {
+    /// Bytes per row in the value plane.
+    pub fn stride(&self) -> usize {
+        self.precision.row_bytes(self.cols)
+    }
+
+    /// One row's raw bytes.
+    fn row(&self, i: usize) -> &[u8] {
+        let s = self.stride();
+        &self.values[i * s..(i + 1) * s]
+    }
+
+    /// Order/content digest of the plane (test + journal evidence).
+    pub fn digest(&self) -> u64 {
+        let mut h = crate::telemetry::Fnv64::new();
+        h.write_u8(self.precision.id());
+        h.write_u64(self.cols as u64);
+        h.write_u64(self.indices.len() as u64);
+        for &id in &self.indices {
+            h.write_u64(u64::from(id));
+        }
+        h.write(&self.values);
+        h.finish()
+    }
+}
+
+/// Parse a version-1 sparse batch frame (`wire::sparse::encode_with`
+/// output) into its raw symbol plane, mapping the frame's
+/// selected-position indices to global item ids via `selected` (the
+/// round's sorted selection). This is the coordinator-side entry point:
+/// the batch frame the executor already produced carries every byte the
+/// per-client delta encoder needs.
+pub fn plane_of_batch_frame(buf: &[u8], selected: &[u32]) -> Result<UploadPlane> {
+    let (header, payload) = frame::open(buf)?;
+    ensure!(
+        header.kind == PayloadKind::Sparse,
+        "upload plane: expected a sparse frame, got {:?}",
+        header.kind
+    );
+    let precision = Precision::from_id(header.codec_id)?;
+    let entropy = EntropyMode::from_id(header.entropy_id)?;
+    let (rows, cols) = (header.rows as usize, header.cols as usize);
+    ensure!(
+        rows == selected.len(),
+        "upload plane: frame covers {rows} selected rows but {} items were selected",
+        selected.len()
+    );
+    let (positions, values) = parse_sparse_payload(payload, rows, cols, precision, entropy)?;
+    let indices = positions
+        .iter()
+        .map(|&p| {
+            ensure!(
+                (p as usize) < selected.len(),
+                "upload plane: row position {p} out of range ({} selected)",
+                selected.len()
+            );
+            Ok(selected[p as usize])
+        })
+        .collect::<Result<Vec<u32>>>()?;
+    Ok(UploadPlane {
+        cols,
+        precision,
+        indices,
+        values,
+    })
+}
+
+/// Shared payload walk of the sparse layout: `nnz | index block | value
+/// block`, returning the indices and the **raw** (entropy-opened) value
+/// bytes.
+fn parse_sparse_payload(
+    payload: &[u8],
+    rows: usize,
+    cols: usize,
+    precision: Precision,
+    entropy: EntropyMode,
+) -> Result<(Vec<u32>, Vec<u8>)> {
+    ensure!(payload.len() >= 4, "sparse payload missing row count");
+    let nnz = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
+    ensure!(nnz <= rows, "sparse payload claims {nnz} rows of {rows}");
+    let mut pos = 4usize;
+    let indices: Vec<u32> = if entropy.varint_indices() {
+        ensure!(payload.len() >= pos + 4, "index block length missing");
+        let idx_len = u32::from_le_bytes(payload[pos..pos + 4].try_into().unwrap()) as usize;
+        pos += 4;
+        ensure!(payload.len() >= pos + idx_len, "varint index block truncated");
+        let idx = entropy::decode_indices(&payload[pos..pos + idx_len], nnz)?;
+        pos += idx_len;
+        idx
+    } else {
+        ensure!(payload.len() >= pos + nnz * 4, "index block truncated");
+        let idx = (0..nnz)
+            .map(|i| u32::from_le_bytes(payload[pos + i * 4..pos + (i + 1) * 4].try_into().unwrap()))
+            .collect();
+        pos += nnz * 4;
+        idx
+    };
+    let raw_len = quant::encoded_len(nnz, cols, precision);
+    let values = if entropy.range_values() {
+        entropy::open_block(&payload[pos..], raw_len, precision, cols, nnz)?
+    } else {
+        ensure!(
+            payload.len() == pos + raw_len,
+            "sparse value block length mismatch (nnz={nnz})"
+        );
+        payload[pos..].to_vec()
+    };
+    Ok((indices, values))
+}
+
+/// Emit the sparse payload (`nnz | index block | value block`) for a set
+/// of indices and raw value bytes under `entropy`.
+fn emit_sparse_payload(
+    indices: &[u32],
+    values: &[u8],
+    cols: usize,
+    precision: Precision,
+    entropy: EntropyMode,
+) -> Result<Vec<u8>> {
+    let mut payload = Vec::with_capacity(4 + indices.len() * 4 + values.len());
+    payload.extend_from_slice(&(indices.len() as u32).to_le_bytes());
+    if entropy.varint_indices() {
+        let idx = entropy::encode_indices(indices);
+        ensure!(idx.len() <= u32::MAX as usize, "index block exceeds u32");
+        payload.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+        payload.extend_from_slice(&idx);
+    } else {
+        for &r in indices {
+            payload.extend_from_slice(&r.to_le_bytes());
+        }
+    }
+    if entropy.range_values() {
+        payload.extend_from_slice(&entropy::seal_block(values, precision, cols, indices.len())?);
+    } else {
+        payload.extend_from_slice(values);
+    }
+    Ok(payload)
+}
+
+/// One client's upload reference: the plane its previous session frame
+/// established, upserted item by item (SecEmb deltas are against the
+/// *last upload of that embedding row*, however many rounds ago).
+#[derive(Debug, Clone, Default)]
+pub struct UploadRef {
+    /// Generation of the client's last accepted upload frame.
+    pub generation: u32,
+    /// Latent dimension of the stored rows.
+    pub cols: usize,
+    /// Value-plane precision of the stored rows.
+    pub precision: Option<Precision>,
+    /// item id → raw row bytes of that item's last upload.
+    pub rows: BTreeMap<u32, Vec<u8>>,
+}
+
+/// What the encoder produced for one client, with the measured-bytes
+/// rationale for the mode it picked.
+#[derive(Debug, Clone)]
+pub struct EncodedUpload {
+    /// The sealed version-2 session frame to account for.
+    pub frame: Vec<u8>,
+    /// `Full` or `Delta` (uploads never `Reuse` — a gradient is never
+    /// verbatim-identical across rounds).
+    pub mode: SessionMode,
+    /// Generation this frame establishes on both ends.
+    pub generation: u32,
+    /// Measured length of the full-frame candidate.
+    pub full_bytes: u64,
+    /// Measured length of the delta candidate (`None` without a usable
+    /// reference).
+    pub delta_bytes: Option<u64>,
+}
+
+/// Typed decode outcome, mirroring the download session's
+/// `SessionDecode`: either the bit-exact reconstructed plane or a
+/// `Stale` describing exactly which reference generation is required.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum UploadDecode {
+    /// The reconstructed absolute plane.
+    Data(UploadPlane),
+    /// A delta frame arrived against reference state we do not hold.
+    Stale {
+        /// Generation of the reference we do hold (`None` = none).
+        cached: Option<u32>,
+        /// Generation the delta requires.
+        required: u32,
+    },
+}
+
+impl UploadDecode {
+    /// The plane, if the decode succeeded.
+    pub fn into_data(self) -> Option<UploadPlane> {
+        match self {
+            UploadDecode::Data(p) => Some(p),
+            UploadDecode::Stale { .. } => None,
+        }
+    }
+}
+
+/// Can a delta against `reference` encode `plane`? Requires matching
+/// generation discipline to be enforced by the caller; here we check
+/// shape compatibility only.
+fn ref_compatible(reference: &UploadRef, plane: &UploadPlane) -> bool {
+    reference.cols == plane.cols && reference.precision == Some(plane.precision)
+}
+
+/// Encode one client's upload plane: always builds the `Full` candidate,
+/// additionally builds the `Delta` candidate when a compatible reference
+/// exists, and ships whichever measures smaller (ties go to `Full` —
+/// without range coding the two are the same length and `Full` needs no
+/// reference to decode).
+pub fn encode_upload(
+    plane: &UploadPlane,
+    entropy: EntropyMode,
+    reference: Option<&UploadRef>,
+) -> Result<EncodedUpload> {
+    let generation = reference.map_or(1, |r| r.generation.wrapping_add(1).max(1));
+    let seal = |mode: SessionMode, payload: &[u8]| {
+        frame::seal_session(
+            plane.precision.id(),
+            entropy.id(),
+            PayloadKind::Sparse,
+            plane.indices.len(),
+            plane.cols,
+            generation,
+            mode,
+            payload,
+        )
+    };
+    let full_payload =
+        emit_sparse_payload(&plane.indices, &plane.values, plane.cols, plane.precision, entropy)?;
+    let full_frame = seal(SessionMode::Full, &full_payload)?;
+    let full_bytes = full_frame.len() as u64;
+    let delta = match reference {
+        Some(r) if ref_compatible(r, plane) => {
+            let stride = plane.stride();
+            let mut diff = Vec::with_capacity(plane.values.len());
+            for (i, &id) in plane.indices.iter().enumerate() {
+                let row = plane.row(i);
+                match r.rows.get(&id) {
+                    Some(prev) if prev.len() == stride => {
+                        diff.extend(row.iter().zip(prev).map(|(&a, &b)| a.wrapping_sub(b)));
+                    }
+                    _ => diff.extend_from_slice(row),
+                }
+            }
+            let payload =
+                emit_sparse_payload(&plane.indices, &diff, plane.cols, plane.precision, entropy)?;
+            Some(seal(SessionMode::Delta, &payload)?)
+        }
+        _ => None,
+    };
+    let delta_bytes = delta.as_ref().map(|f| f.len() as u64);
+    match delta {
+        Some(frame) if (frame.len() as u64) < full_bytes => Ok(EncodedUpload {
+            frame,
+            mode: SessionMode::Delta,
+            generation,
+            full_bytes,
+            delta_bytes,
+        }),
+        _ => Ok(EncodedUpload {
+            frame: full_frame,
+            mode: SessionMode::Full,
+            generation,
+            full_bytes,
+            delta_bytes,
+        }),
+    }
+}
+
+/// Decode one upload session frame against the reference we hold for its
+/// client. `Full` frames need no reference; `Delta` frames require the
+/// reference at exactly `generation − 1` and otherwise return the typed
+/// [`UploadDecode::Stale`] — never a silently wrong plane.
+pub fn decode_upload(buf: &[u8], reference: Option<&UploadRef>) -> Result<UploadDecode> {
+    let (header, payload) = frame::open_session(buf)?;
+    ensure!(
+        header.kind == PayloadKind::Sparse,
+        "upload session frame: expected sparse, got {:?}",
+        header.kind
+    );
+    let precision = Precision::from_id(header.codec_id)?;
+    let entropy = EntropyMode::from_id(header.entropy_id)?;
+    let (rows, cols) = (header.rows as usize, header.cols as usize);
+    let (indices, raw) = parse_sparse_payload(payload, rows, cols, precision, entropy)?;
+    let plane = UploadPlane {
+        cols,
+        precision,
+        indices,
+        values: raw,
+    };
+    match header.mode {
+        SessionMode::Full => Ok(UploadDecode::Data(plane)),
+        SessionMode::Reuse => bail!("upload session frames never use Reuse mode"),
+        SessionMode::Delta => {
+            let required = header.generation.wrapping_sub(1);
+            let r = match reference {
+                None => {
+                    return Ok(UploadDecode::Stale {
+                        cached: None,
+                        required,
+                    })
+                }
+                Some(r) if r.generation != required => {
+                    return Ok(UploadDecode::Stale {
+                        cached: Some(r.generation),
+                        required,
+                    })
+                }
+                Some(r) => r,
+            };
+            ensure!(
+                ref_compatible(r, &plane),
+                "upload delta frame shape mismatch: reference is {}x{:?}, frame is {}x{}",
+                r.cols,
+                r.precision,
+                plane.cols,
+                precision.name()
+            );
+            let stride = plane.stride();
+            let mut values = Vec::with_capacity(plane.values.len());
+            for (i, &id) in plane.indices.iter().enumerate() {
+                let row = plane.row(i);
+                match r.rows.get(&id) {
+                    Some(prev) if prev.len() == stride => {
+                        values.extend(row.iter().zip(prev).map(|(&a, &b)| a.wrapping_add(b)));
+                    }
+                    _ => values.extend_from_slice(row),
+                }
+            }
+            Ok(UploadDecode::Data(UploadPlane { values, ..plane }))
+        }
+    }
+}
+
+/// Per-run counters of the upload session (reported next to the
+/// download-side [`crate::server::SessionStats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct UploadStats {
+    /// Per-client frames shipped as full planes.
+    pub full_frames: u64,
+    /// Per-client frames shipped as deltas.
+    pub delta_frames: u64,
+    /// Forced full frames for clients whose device/server reference
+    /// state diverged (eviction, first contact after invalidation).
+    pub resyncs: u64,
+    /// Σ (full candidate − shipped frame) over delta frames: the
+    /// measured upload bytes the deltas saved.
+    pub delta_saved_bytes: u64,
+}
+
+/// The coordinator's per-client upload reference store: the server half
+/// of the upload session (the device half is the `client::Fleet`
+/// upload-generation table). Owns one [`UploadRef`] per client that has
+/// ever uploaded, upserted after every accepted frame.
+#[derive(Debug, Clone, Default)]
+pub struct UploadStore {
+    refs: BTreeMap<usize, UploadRef>,
+    /// Running counters for reports/traces.
+    pub stats: UploadStats,
+}
+
+impl UploadStore {
+    /// Empty store.
+    pub fn new() -> UploadStore {
+        UploadStore::default()
+    }
+
+    /// The reference we hold for `client`, if any.
+    pub fn reference(&self, client: usize) -> Option<&UploadRef> {
+        self.refs.get(&client)
+    }
+
+    /// The generation `client`'s reference is at.
+    pub fn generation(&self, client: usize) -> Option<u32> {
+        self.refs.get(&client).map(|r| r.generation)
+    }
+
+    /// Drop a client's server-side reference (e.g. storage reclaim).
+    /// Its next upload is forced `Full`.
+    pub fn invalidate(&mut self, client: usize) {
+        self.refs.remove(&client);
+    }
+
+    /// Install an accepted plane as `client`'s new reference at
+    /// `generation`: rows upsert item by item; a shape change rebases
+    /// the reference wholesale.
+    pub fn install(&mut self, client: usize, plane: &UploadPlane, generation: u32) {
+        let r = self.refs.entry(client).or_default();
+        if r.cols != plane.cols || r.precision != Some(plane.precision) {
+            r.rows.clear();
+            r.cols = plane.cols;
+            r.precision = Some(plane.precision);
+        }
+        r.generation = generation;
+        let stride = plane.stride();
+        for (i, &id) in plane.indices.iter().enumerate() {
+            r.rows
+                .insert(id, plane.values[i * stride..(i + 1) * stride].to_vec());
+        }
+    }
+
+    /// Order-stable digest over every client's reference state — the
+    /// journal/replay evidence for the upload session.
+    pub fn state_digest(&self) -> u64 {
+        let mut h = crate::telemetry::Fnv64::new();
+        h.write_u64(self.refs.len() as u64);
+        for (client, r) in &self.refs {
+            h.write_u64(*client as u64);
+            h.write_u64(u64::from(r.generation));
+            h.write_u64(r.cols as u64);
+            h.write_u8(r.precision.map_or(0xff, |p| p.id()));
+            h.write_u64(r.rows.len() as u64);
+            for (id, row) in &r.rows {
+                h.write_u64(u64::from(*id));
+                h.write(row);
+            }
+        }
+        h.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::wire::sparse::{self, SparsePolicy};
+
+    fn gradient_like(rows: usize, cols: usize, zero_frac: f64, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut data = vec![0.0f32; rows * cols];
+        for r in 0..rows {
+            if rng.chance(zero_frac) {
+                continue;
+            }
+            for c in 0..cols {
+                data[r * cols + c] = rng.normal() as f32 * 0.3;
+            }
+        }
+        data
+    }
+
+    fn plane_for(seed: u64, entropy: EntropyMode) -> UploadPlane {
+        let (rows, cols) = (12usize, 8usize);
+        let data = gradient_like(rows, cols, 0.3, seed);
+        let frame = sparse::encode_with(
+            &data,
+            rows,
+            cols,
+            Precision::Int8,
+            entropy,
+            &SparsePolicy::default(),
+        )
+        .unwrap();
+        let selected: Vec<u32> = (0..rows as u32).map(|i| i * 7).collect();
+        plane_of_batch_frame(&frame, &selected).unwrap()
+    }
+
+    #[test]
+    fn batch_frame_plane_maps_positions_to_item_ids() {
+        let plane = plane_for(1, EntropyMode::None);
+        assert_eq!(plane.cols, 8);
+        assert_eq!(plane.precision, Precision::Int8);
+        assert!(!plane.indices.is_empty());
+        for &id in &plane.indices {
+            assert_eq!(id % 7, 0, "item ids come from the selected list");
+        }
+        assert_eq!(plane.values.len(), plane.indices.len() * plane.stride());
+        // every entropy layout parses to the identical plane
+        for mode in [EntropyMode::Varint, EntropyMode::Range, EntropyMode::Full] {
+            assert_eq!(plane_for(1, mode), plane, "{}", mode.name());
+        }
+    }
+
+    #[test]
+    fn full_roundtrip_is_identity_per_entropy_mode() {
+        for mode in [
+            EntropyMode::None,
+            EntropyMode::Varint,
+            EntropyMode::Range,
+            EntropyMode::Full,
+        ] {
+            let plane = plane_for(2, EntropyMode::None);
+            let enc = encode_upload(&plane, mode, None).unwrap();
+            assert_eq!(enc.mode, SessionMode::Full);
+            assert_eq!(enc.generation, 1);
+            assert_eq!(enc.delta_bytes, None);
+            let dec = decode_upload(&enc.frame, None).unwrap().into_data().unwrap();
+            assert_eq!(dec, plane, "{}", mode.name());
+        }
+    }
+
+    #[test]
+    fn delta_roundtrip_reconstructs_exactly_and_saves_under_range_coding() {
+        let mut store = UploadStore::new();
+        let p1 = plane_for(3, EntropyMode::None);
+        let e1 = encode_upload(&p1, EntropyMode::Full, None).unwrap();
+        store.install(0, &p1, e1.generation);
+        // round 2: a nearby plane (same items, slightly moved values)
+        let mut p2 = plane_for(4, EntropyMode::None);
+        p2.indices = p1.indices.clone();
+        p2.values = p1
+            .values
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| if i % 9 == 0 { b.wrapping_add(1) } else { b })
+            .collect();
+        let e2 = encode_upload(&p2, EntropyMode::Full, store.reference(0)).unwrap();
+        assert_eq!(e2.mode, SessionMode::Delta, "near-identical plane must delta");
+        assert_eq!(e2.generation, 2);
+        assert!(e2.delta_bytes.unwrap() < e2.full_bytes);
+        let dec = decode_upload(&e2.frame, store.reference(0))
+            .unwrap()
+            .into_data()
+            .unwrap();
+        assert_eq!(dec, p2, "delta decode must be bit-exact");
+    }
+
+    #[test]
+    fn plain_entropy_ties_go_to_full() {
+        let mut store = UploadStore::new();
+        let p1 = plane_for(5, EntropyMode::None);
+        store.install(0, &p1, 1);
+        let e2 = encode_upload(&p1, EntropyMode::None, store.reference(0)).unwrap();
+        // identical plain lengths: Full wins the tie (reference-free decode)
+        assert_eq!(e2.delta_bytes, Some(e2.full_bytes));
+        assert_eq!(e2.mode, SessionMode::Full);
+    }
+
+    #[test]
+    fn stale_references_are_typed_not_garbage() {
+        let mut store = UploadStore::new();
+        let p1 = plane_for(6, EntropyMode::None);
+        store.install(0, &p1, 7);
+        let e = encode_upload(&p1, EntropyMode::Full, store.reference(0)).unwrap();
+        // force the delta candidate frame regardless of measured choice
+        let stride = p1.stride();
+        let diff: Vec<u8> = p1
+            .indices
+            .iter()
+            .enumerate()
+            .flat_map(|(i, &id)| {
+                let row = &p1.values[i * stride..(i + 1) * stride];
+                match store.reference(0).unwrap().rows.get(&id) {
+                    Some(prev) => row.iter().zip(prev).map(|(&a, &b)| a.wrapping_sub(b)).collect(),
+                    None => row.to_vec(),
+                }
+            })
+            .collect();
+        let payload =
+            emit_sparse_payload(&p1.indices, &diff, p1.cols, p1.precision, EntropyMode::Full)
+                .unwrap();
+        let delta_frame = frame::seal_session(
+            p1.precision.id(),
+            EntropyMode::Full.id(),
+            PayloadKind::Sparse,
+            p1.indices.len(),
+            p1.cols,
+            e.generation,
+            SessionMode::Delta,
+            &payload,
+        )
+        .unwrap();
+        // no reference at all
+        assert_eq!(
+            decode_upload(&delta_frame, None).unwrap(),
+            UploadDecode::Stale {
+                cached: None,
+                required: 7
+            }
+        );
+        // wrong generation
+        let mut wrong = store.reference(0).unwrap().clone();
+        wrong.generation = 3;
+        assert_eq!(
+            decode_upload(&delta_frame, Some(&wrong)).unwrap(),
+            UploadDecode::Stale {
+                cached: Some(3),
+                required: 7
+            }
+        );
+        // right generation decodes
+        assert!(matches!(
+            decode_upload(&delta_frame, store.reference(0)).unwrap(),
+            UploadDecode::Data(_)
+        ));
+    }
+
+    #[test]
+    fn store_upserts_and_digest_tracks_state() {
+        let mut store = UploadStore::new();
+        let d0 = store.state_digest();
+        let p1 = plane_for(8, EntropyMode::None);
+        store.install(3, &p1, 1);
+        let d1 = store.state_digest();
+        assert_ne!(d0, d1);
+        assert_eq!(store.generation(3), Some(1));
+        // upsert: rows accumulate across rounds, generation advances
+        let mut p2 = p1.clone();
+        for id in p2.indices.iter_mut() {
+            *id += 1; // disjoint item set
+        }
+        store.install(3, &p2, 2);
+        assert_eq!(store.generation(3), Some(2));
+        let r = store.reference(3).unwrap();
+        assert_eq!(r.rows.len(), p1.indices.len() + p2.indices.len());
+        store.invalidate(3);
+        assert_eq!(store.generation(3), None);
+    }
+}

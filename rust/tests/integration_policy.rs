@@ -1,0 +1,185 @@
+//! Per-client payload-policy + upload-delta e2e. The two features share
+//! one invariant: they reshape *bytes*, never *training* (upload deltas)
+//! or reshape training *deterministically* (policies). Nets:
+//!
+//! 1. policy determinism — `budget` and `bandit` trajectories are
+//!    bit-identical across repeat runs and thread counts, journal and
+//!    replay-verify under `--resume`, and their traces carry the
+//!    `policy_decide` evidence with per-arm measured bytes;
+//! 2. upload-delta churn — a device that loses its upload-session state
+//!    forces a counted full-frame resync; training is bit-identical to
+//!    the unchurned run and the per-client `up_bytes` attribution is
+//!    exact and thread-invariant;
+//! 3. composition — policy + upload-delta run together, each cohort's
+//!    uploads attributed through the same store.
+
+use fedpayload::config::RunConfig;
+use fedpayload::server::policy::PolicyMode;
+use fedpayload::server::{round_dump_string, Trainer};
+use fedpayload::telemetry::{TraceLevel, Tracer};
+use fedpayload::wire::{EntropyMode, Precision};
+
+fn policy_cfg(mode: PolicyMode) -> RunConfig {
+    let mut cfg = RunConfig::paper_defaults();
+    cfg.apply_dataset_preset("synthetic-small").unwrap();
+    cfg.dataset.users = 48;
+    cfg.dataset.items = 96;
+    cfg.dataset.interactions = 1200;
+    cfg.train.theta = 16;
+    cfg.train.iterations = 5;
+    cfg.train.payload_fraction = 0.25;
+    cfg.runtime.backend = "reference".into();
+    cfg.policy.mode = mode;
+    cfg
+}
+
+#[test]
+fn policy_runs_are_reproducible_and_thread_invariant() {
+    for mode in [PolicyMode::Budget, PolicyMode::Bandit] {
+        let mut c1 = policy_cfg(mode);
+        c1.runtime.threads = 1;
+        let mut c4 = c1.clone();
+        c4.runtime.threads = 4;
+        let r1 = Trainer::from_config(&c1).unwrap().run().unwrap();
+        let r4 = Trainer::from_config(&c4).unwrap().run().unwrap();
+        let again = Trainer::from_config(&c1).unwrap().run().unwrap();
+        assert_eq!(r1.policy, mode.name());
+        assert_eq!(
+            round_dump_string(&r1),
+            round_dump_string(&r4),
+            "{} trajectory depends on threads",
+            mode.name()
+        );
+        assert_eq!(round_dump_string(&r1), round_dump_string(&again));
+        // the two modes are different policies, not relabelings of the
+        // uniform path
+        let uniform = Trainer::from_config(&policy_cfg(PolicyMode::Uniform))
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(uniform.policy, "uniform");
+        assert_ne!(round_dump_string(&r1), round_dump_string(&uniform));
+    }
+}
+
+#[test]
+fn policy_traces_carry_the_decision_evidence() {
+    let cfg = policy_cfg(PolicyMode::Bandit);
+    let mut tr = Trainer::from_config(&cfg).unwrap();
+    tr.install_tracer(Tracer::in_memory(TraceLevel::Decision));
+    tr.run().unwrap();
+    let lines = tr.tracer().unwrap().lines();
+    let decides: Vec<&String> =
+        lines.iter().filter(|l| l.contains("\"ev\":\"policy_decide\"")).collect();
+    assert_eq!(decides.len(), 5, "one policy_decide per round");
+    for line in &decides {
+        assert!(line.contains("\"mode\":\"bandit\""), "{line}");
+        // per-arm measured-bytes rationale, all four arms
+        for arm in ["int8", "vq8r", "vq8", "vq4"] {
+            assert!(line.contains(&format!("\"bytes_{arm}\"")), "{line}");
+            assert!(line.contains(&format!("\"n_{arm}\"")), "{line}");
+        }
+    }
+    // the uniform-only codec_choice event must NOT appear in policy runs
+    assert!(
+        !lines.iter().any(|l| l.contains("\"ev\":\"codec_choice\"")),
+        "policy rounds emitted the uniform codec_choice event"
+    );
+}
+
+#[test]
+fn policy_runs_journal_and_replay_verify() {
+    let dir = std::env::temp_dir().join("fedpayload_policy_resume");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let jpath = dir.join("run.jsonl");
+    let mut cfg = policy_cfg(PolicyMode::Bandit);
+    cfg.codec.precision = Precision::Int8;
+    cfg.codec.upload_delta = true;
+    cfg.journal.path = Some(jpath.to_string_lossy().into_owned());
+    let full = Trainer::from_config(&cfg).unwrap().run().unwrap();
+    let mut rcfg = cfg.clone();
+    rcfg.journal.resume = cfg.journal.path.clone();
+    rcfg.journal.path = None;
+    let resumed = Trainer::from_config(&rcfg).unwrap().run().unwrap();
+    assert_eq!(resumed.replayed_rounds, 5);
+    assert_eq!(round_dump_string(&full), round_dump_string(&resumed));
+    // the journal records the policy and upload digests per round
+    let text = std::fs::read_to_string(&jpath).unwrap();
+    let round_lines: Vec<&str> =
+        text.lines().filter(|l| l.contains("\"ev\":\"round\"")).collect();
+    assert_eq!(round_lines.len(), 5);
+    for line in round_lines {
+        assert!(line.contains("\"policy_mode\":\"bandit\""), "{line}");
+        assert!(line.contains("\"policy\":\""), "{line}");
+        assert!(line.contains("\"upload\":\""), "{line}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The upload-churn e2e: two identical fleets; run B's client 5 loses
+/// its device-side upload-session state before rounds 3 and 4. Every
+/// recovery must be a counted resync, training must be bit-identical,
+/// and the exact `up_bytes` attribution must match across thread counts.
+#[test]
+fn upload_churn_resyncs_exactly_and_attribution_is_thread_invariant() {
+    let base = {
+        let mut cfg = policy_cfg(PolicyMode::Uniform);
+        cfg.train.theta = 48; // everyone uploads every round
+        cfg.codec.precision = Precision::Int8;
+        cfg.codec.entropy = EntropyMode::Full;
+        cfg.codec.upload_delta = true;
+        cfg
+    };
+    let run = |threads: usize, churn: bool| {
+        let mut cfg = base.clone();
+        cfg.runtime.threads = threads;
+        let mut tr = Trainer::from_config(&cfg).unwrap();
+        let mut maps = Vec::new();
+        for round in 1..=cfg.train.iterations {
+            if churn && (3..=4).contains(&round) {
+                tr.invalidate_client_upload(5);
+            }
+            maps.push(tr.round().unwrap().raw.map.to_bits());
+        }
+        (tr.upload_stats().unwrap(), tr.ledger().up_bytes, maps)
+    };
+    let (clean_stats, clean_bytes, clean_maps) = run(1, false);
+    assert_eq!(clean_stats.resyncs, 0);
+    let (churn_stats, churn_bytes, churn_maps) = run(1, true);
+    assert_eq!(churn_stats.resyncs, 2, "{churn_stats:?}");
+    assert_eq!(clean_maps, churn_maps, "upload churn changed training");
+    assert_eq!(
+        clean_stats.full_frames + clean_stats.delta_frames,
+        churn_stats.full_frames + churn_stats.delta_frames,
+        "churn changed the frame count, not just the modes"
+    );
+    assert!(
+        churn_bytes >= clean_bytes,
+        "forced full frames cannot shrink the upload ledger: {churn_bytes} < {clean_bytes}"
+    );
+    let (t4_stats, t4_bytes, t4_maps) = run(4, true);
+    assert_eq!(t4_stats, churn_stats, "stats depend on threads");
+    assert_eq!(t4_bytes, churn_bytes, "up_bytes attribution depends on threads");
+    assert_eq!(t4_maps, churn_maps);
+}
+
+#[test]
+fn policy_and_upload_delta_compose() {
+    let mut cfg = policy_cfg(PolicyMode::Budget);
+    cfg.codec.precision = Precision::Int8;
+    cfg.codec.entropy = EntropyMode::Full;
+    cfg.codec.upload_delta = true;
+    let r1 = Trainer::from_config(&cfg).unwrap().run().unwrap();
+    let r2 = Trainer::from_config(&cfg).unwrap().run().unwrap();
+    assert_eq!(round_dump_string(&r1), round_dump_string(&r2));
+    let stats = r1.upload.expect("upload stats under upload_delta");
+    // every upload that happened went through the session store: frames
+    // equal ledger upload messages (skipped clients upload nothing)
+    assert_eq!(stats.full_frames + stats.delta_frames, r1.ledger.up_msgs);
+    assert_eq!(
+        r1.ledger.up_msgs + r1.policy_skips,
+        5 * 16,
+        "every participant either uploaded or was skipped"
+    );
+}

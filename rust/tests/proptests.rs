@@ -997,6 +997,8 @@ fn prop_merge_helpers_match_sequential_folds() {
 /// encoding must survive values past 2^53, where JSON numbers lose).
 fn random_journal_entry(rng: &mut Rng, iter: u64) -> journal::RoundEntry {
     let with_session = rng.chance(0.5);
+    let with_policy = rng.chance(0.5);
+    let with_delta = rng.chance(0.5);
     journal::RoundEntry {
         iter,
         rng_fp: rng.next_u64(),
@@ -1023,6 +1025,13 @@ fn random_journal_entry(rng: &mut Rng, iter: u64) -> journal::RoundEntry {
         sim_secs_bits: rng.range_f64(0.0, 1e6).to_bits(),
         bandit_digest: rng.next_u64(),
         session_digest: with_session.then(|| rng.next_u64()),
+        policy_mode: with_policy.then(|| ["budget", "bandit"][rng.below(2)].to_string()),
+        policy_skips: with_policy.then(|| rng.below(1000) as u64),
+        policy_digest: with_policy.then(|| rng.next_u64()),
+        up_full: with_delta.then(|| rng.below(100_000) as u64),
+        up_delta: with_delta.then(|| rng.below(100_000) as u64),
+        up_resyncs: with_delta.then(|| rng.below(1000) as u64),
+        upload_digest: with_delta.then(|| rng.next_u64()),
     }
 }
 
@@ -1310,6 +1319,146 @@ fn prop_participant_sampler_pure_and_stream_independent() {
             assert_ne!(
                 forward, other_seq,
                 "seed {seed}: different master seeds produced identical sequences"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// upload-delta session codec (wire::upload)
+// ---------------------------------------------------------------------
+
+/// Random sparse int8 upload plane: sorted distinct item ids, arbitrary
+/// raw row bytes (the plane carries quantized bytes verbatim, so any
+/// byte pattern is a legal row).
+fn random_upload_plane(rng: &mut Rng) -> wire::UploadPlane {
+    let cols = 1 + rng.below(12);
+    let stride = Precision::Int8.row_bytes(cols);
+    let n_rows = 1 + rng.below(20);
+    let mut ids: Vec<u32> = (0..n_rows).map(|_| rng.below(500) as u32).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    let values: Vec<u8> = (0..ids.len() * stride).map(|_| rng.below(256) as u8).collect();
+    wire::UploadPlane {
+        cols,
+        precision: Precision::Int8,
+        indices: ids,
+        values,
+    }
+}
+
+/// A nearby plane over the same items: most row bytes unchanged, a few
+/// perturbed — the workload shape deltas exist for.
+fn perturbed_plane(rng: &mut Rng, base: &wire::UploadPlane) -> wire::UploadPlane {
+    let mut p = base.clone();
+    for b in p.values.iter_mut() {
+        if rng.chance(0.1) {
+            *b = b.wrapping_add(1 + rng.below(3) as u8);
+        }
+    }
+    p
+}
+
+const UPLOAD_ENTROPIES: [EntropyMode; 4] = [
+    EntropyMode::None,
+    EntropyMode::Varint,
+    EntropyMode::Range,
+    EntropyMode::Full,
+];
+
+/// Property: upload session frames reconstruct the plane bit-exactly
+/// under every entropy mode — reference-free (Full at generation 1) and
+/// against an installed reference (whatever mode the encoder measured
+/// cheaper), and the shipped mode's measured length is minimal among
+/// the candidates the encoder weighed.
+#[test]
+fn prop_upload_session_roundtrip_is_identity() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(31_000 + seed);
+        let entropy = UPLOAD_ENTROPIES[rng.below(4)];
+        let p1 = random_upload_plane(&mut rng);
+        let e1 = wire::encode_upload(&p1, entropy, None).unwrap();
+        assert_eq!(e1.mode, SessionMode::Full, "seed {seed}: no reference, no delta");
+        assert_eq!(e1.generation, 1);
+        let d1 = wire::decode_upload(&e1.frame, None).unwrap();
+        assert_eq!(d1, wire::UploadDecode::Data(p1.clone()), "seed {seed}");
+        let mut store = wire::UploadStore::new();
+        store.install(3, &p1, e1.generation);
+        let p2 = perturbed_plane(&mut rng, &p1);
+        let e2 = wire::encode_upload(&p2, entropy, store.reference(3)).unwrap();
+        assert_eq!(e2.generation, 2, "seed {seed}");
+        if e2.mode == SessionMode::Delta {
+            assert!(
+                e2.delta_bytes.unwrap() < e2.full_bytes,
+                "seed {seed}: delta shipped without measuring smaller"
+            );
+        }
+        let d2 = wire::decode_upload(&e2.frame, store.reference(3)).unwrap();
+        assert_eq!(d2, wire::UploadDecode::Data(p2.clone()), "seed {seed} {}", entropy.name());
+        // installing the decoded plane keeps both ends' references equal
+        store.install(3, &p2, e2.generation);
+        assert_eq!(store.generation(3), Some(2), "seed {seed}");
+    }
+}
+
+/// Property: a delta frame decoded against the wrong reference state —
+/// none at all, or one whose generation is not exactly `required` — is
+/// a *typed* [`wire::UploadDecode::Stale`] naming both generations,
+/// never garbage data and never an error.
+#[test]
+fn prop_upload_stale_references_are_typed() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(32_000 + seed);
+        let p1 = random_upload_plane(&mut rng);
+        let gen = 1 + rng.below(1000) as u32;
+        let mut store = wire::UploadStore::new();
+        store.install(0, &p1, gen);
+        // identical plane + range coding => the delta candidate is all
+        // zeros and always measures smaller: the encoder must pick Delta
+        let e = wire::encode_upload(&p1, EntropyMode::Full, store.reference(0)).unwrap();
+        assert_eq!(e.mode, SessionMode::Delta, "seed {seed}");
+        assert_eq!(e.generation, gen + 1);
+        match wire::decode_upload(&e.frame, None).unwrap() {
+            wire::UploadDecode::Stale { cached: None, required } => {
+                assert_eq!(required, gen, "seed {seed}")
+            }
+            other => panic!("seed {seed}: no-reference delta decoded to {other:?}"),
+        }
+        let mut wrong = wire::UploadStore::new();
+        wrong.install(0, &p1, gen + 5);
+        match wire::decode_upload(&e.frame, wrong.reference(0)).unwrap() {
+            wire::UploadDecode::Stale { cached: Some(c), required } => {
+                assert_eq!((c, required), (gen + 5, gen), "seed {seed}");
+            }
+            other => panic!("seed {seed}: wrong-generation delta decoded to {other:?}"),
+        }
+        // the right reference still reconstructs exactly
+        let ok = wire::decode_upload(&e.frame, store.reference(0)).unwrap();
+        assert_eq!(ok, wire::UploadDecode::Data(p1.clone()), "seed {seed}");
+    }
+}
+
+/// Property: the entropy layer is transparent to the upload session —
+/// every entropy mode's frame decodes to the identical plane, and the
+/// encoder's measured candidate lengths match the shipped frames.
+#[test]
+fn prop_upload_entropy_modes_are_transparent() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(33_000 + seed);
+        let p1 = random_upload_plane(&mut rng);
+        let p2 = perturbed_plane(&mut rng, &p1);
+        let mut store = wire::UploadStore::new();
+        store.install(0, &p1, 1);
+        for entropy in UPLOAD_ENTROPIES {
+            let e = wire::encode_upload(&p2, entropy, store.reference(0)).unwrap();
+            assert_eq!(e.frame.len() as u64, e.delta_bytes.unwrap_or(e.full_bytes).min(e.full_bytes),
+                "seed {seed} {}: shipped frame is not the measured minimum", entropy.name());
+            let dec = wire::decode_upload(&e.frame, store.reference(0)).unwrap();
+            assert_eq!(
+                dec,
+                wire::UploadDecode::Data(p2.clone()),
+                "seed {seed} {}: decode is not entropy-invariant",
+                entropy.name()
             );
         }
     }
